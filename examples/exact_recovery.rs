@@ -1,0 +1,57 @@
+//! Figure 5 reproduction: exact recovery of a rank-3 Gram matrix.
+//!
+//! A 2-D Gaussian cloud at (0,0) plus a 3-D Gaussian cloud at (0,0,1)
+//! give a Gram matrix G = ZᵀZ of rank 3. oASIS selects a linearly
+//! independent column each step (Lemma 1) and recovers G exactly in
+//! 3 columns (Theorem 1); uniform random sampling picks redundant columns
+//! and stalls at a rank-deficient approximation.
+//!
+//!     cargo run --release --example exact_recovery
+
+use oasis::data::generators::gauss_2d_plus_3d;
+use oasis::kernels::{kernel_matrix, Linear};
+use oasis::linalg::eig::psd_rank;
+use oasis::sampling::{
+    assemble_from_indices, oasis::Oasis, uniform::Uniform, ExplicitOracle,
+};
+
+fn main() -> oasis::Result<()> {
+    let ds = gauss_2d_plus_3d(100, 100, 5);
+    let g = kernel_matrix(&ds, &Linear);
+    let oracle = ExplicitOracle::new(&g);
+    let gnorm = g.fro_norm();
+
+    println!("rank(G) = {}", psd_rank(&g, 1e-9));
+    println!("\n{:28} {:>3} {:>12} {:>6}", "method", "k", "error", "rank");
+
+    // oASIS with a generous budget: terminates by tolerance at rank
+    let (_, trace) = Oasis::new(8, 1, 1e-9, 1).sample_traced(&oracle)?;
+    for k in 1..=trace.order.len() {
+        let approx = assemble_from_indices(&oracle, trace.order[..k].to_vec(), 0.0);
+        let err = approx.reconstruct().fro_dist(&g) / gnorm;
+        let rank = psd_rank(&approx.reconstruct(), 1e-9);
+        println!("{:28} {:>3} {:>12.3e} {:>6}", "oASIS", k, err, rank);
+    }
+
+    // five random trials (paper shows their redundant selections)
+    for trial in 0..5 {
+        let (_, tr) = Uniform::new(8, 100 + trial).sample_traced(&oracle)?;
+        for k in [1usize, 2, 3, 5, 8] {
+            let approx = assemble_from_indices(&oracle, tr.order[..k].to_vec(), 0.0);
+            let err = approx.reconstruct().fro_dist(&g) / gnorm;
+            let rank = psd_rank(&approx.reconstruct(), 1e-9);
+            println!(
+                "{:28} {:>3} {:>12.3e} {:>6}",
+                format!("Random (trial {})", trial + 1),
+                k,
+                err,
+                rank
+            );
+        }
+    }
+    println!(
+        "\noASIS terminates at exact recovery after 3 columns; random \
+         sampling keeps choosing columns inside the span it already has."
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Sparse-kernel workflow (paper §V-E): k-NN-truncated similarity
+//! matrices. oASIS only ever touches the sampled columns, so sparsity is
+//! preserved end to end, whereas residual-based greedy methods (Farahat)
+//! densify an n×n residual.
+//!
+//!     cargo run --release --example sparse_kernel
+
+use oasis::data::generators::two_moons;
+use oasis::kernels::Gaussian;
+use oasis::nystrom::relative_frobenius_error;
+use oasis::sampling::{
+    farahat::Farahat, oasis::Oasis, uniform::Uniform, ColumnSampler,
+    ImplicitOracle, SparseKnnOracle,
+};
+use oasis::util::timing::fmt_bytes;
+
+fn main() -> oasis::Result<()> {
+    let n = 3_000;
+    let knn = 48;
+    let ds = two_moons(n, 0.05, 17);
+    let kern = Gaussian::with_sigma_fraction(&ds, 0.08);
+
+    println!("building {n}-point {knn}-NN sparse kernel oracle...");
+    let sparse = SparseKnnOracle::build(&ds, &kern, knn);
+    println!(
+        "density {:.2}% — sparse storage ≈ {}, dense would be {}",
+        100.0 * sparse.density(),
+        fmt_bytes((sparse.density() * (n * n) as f64 * 12.0) as u64),
+        fmt_bytes((n * n * 8) as u64),
+    );
+
+    let l = 250;
+    let approx = Oasis::new(l, 10, 1e-12, 5).sample(&sparse)?;
+    let err = relative_frobenius_error(&sparse, &approx);
+    println!(
+        "\noASIS on sparse oracle : k={} error={:.3e} time={:.2}s  \
+         (state: ℓ×n = {})",
+        approx.k(),
+        err,
+        approx.selection_secs,
+        fmt_bytes((l * n * 8) as u64),
+    );
+
+    // uniform random at the same budget, for context (k-NN-truncated
+    // kernels are intrinsically high-rank, so absolute errors are large
+    // for every method; the adaptive selection still wins)
+    let rand = Uniform::new(l, 5).sample(&sparse)?;
+    let err_r = relative_frobenius_error(&sparse, &rand);
+    println!(
+        "Random                 : k={} error={:.3e} time={:.2}s",
+        rand.k(),
+        err_r,
+        rand.selection_secs,
+    );
+
+    // contrast: Farahat must materialize the dense n×n residual. NOTE:
+    // k-NN truncation breaks positive semidefiniteness, which greedy
+    // residual deflation is sensitive to — its error can even diverge —
+    // while oASIS only ever evaluates Schur complements of sampled
+    // columns. We report Farahat's cost; treat its error as illustrative.
+    let far = Farahat::new(l).sample(&sparse)?;
+    let err_f = relative_frobenius_error(&sparse, &far);
+    println!(
+        "Farahat (dense resid.) : k={} error={:.3e} time={:.2}s  \
+         (state: n×n = {})",
+        far.k(),
+        err_f,
+        far.selection_secs,
+        fmt_bytes((n * n * 8) as u64),
+    );
+
+    // the dense-kernel error for context
+    let dense = ImplicitOracle::new(&ds, &kern);
+    let err_dense = relative_frobenius_error(&dense, &approx);
+    println!(
+        "\n(the same Λ applied to the un-truncated kernel: error {err_dense:.3e})"
+    );
+    Ok(())
+}

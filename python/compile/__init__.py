@@ -1,0 +1,1 @@
+"""Build-time compile path: JAX/Pallas -> AOT HLO artifacts for Rust/PJRT."""

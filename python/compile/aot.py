@@ -1,0 +1,165 @@
+"""AOT lowering: JAX/Pallas (L2+L1) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the vendored xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a fixed-shape lowering of a function in ``model.py``. The
+manifest (artifacts/manifest.json) tells the Rust runtime which shapes exist;
+off-manifest shapes fall back to the native Rust path.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_set():
+    """The fixed-shape artifact registry.
+
+    Keep this list in sync with rust/src/runtime/artifacts.rs expectations:
+    every entry becomes ``<name>.hlo.txt`` plus a manifest row.
+    """
+    arts = []
+
+    # Delta scoring: the per-iteration hot spot. l (max columns) = 512,
+    # zero-padded; n swept over the bucket sizes the Rust side pads to.
+    for n in (1024, 2048, 4096, 8192):
+        l = 512
+        arts.append(
+            dict(
+                name=f"delta_n{n}_l{l}",
+                op="delta_scores",
+                fn=lambda c, r, d: (model.delta_scores(c, r, d),),
+                args=[spec(n, l), spec(l, n), spec(n)],
+                dims=dict(n=n, l=l),
+                inputs=["c", "r", "d"],
+                outputs=["delta"],
+            )
+        )
+
+    # Fused score+select (returns delta, argmax index, best |delta|).
+    for n in (2048, 4096):
+        l = 512
+        arts.append(
+            dict(
+                name=f"score_select_n{n}_l{l}",
+                op="score_and_select",
+                fn=model.score_and_select,
+                args=[spec(n, l), spec(l, n), spec(n), spec(n)],
+                dims=dict(n=n, l=l),
+                inputs=["c", "r", "d", "mask"],
+                outputs=["delta", "idx", "best"],
+            )
+        )
+
+    # Gaussian kernel-column blocks: k (selected budget) = 512, m = 16
+    # (data dims are zero-padded up to 16; larger m uses native fallback).
+    for n in (1024, 4096):
+        k, m = 512, 16
+        arts.append(
+            dict(
+                name=f"gauss_n{n}_k{k}_m{m}",
+                op="gaussian_columns",
+                fn=lambda z, s, g: (model.gaussian_columns(z, s, g),),
+                args=[spec(n, m), spec(k, m), spec()],
+                dims=dict(n=n, k=k, m=m),
+                inputs=["z_blk", "z_sel", "inv_sigma_sq"],
+                outputs=["cols"],
+            )
+        )
+
+    # Rank-1 R update (Eq. 6) at the common bucket.
+    n, l = 4096, 512
+    arts.append(
+        dict(
+            name=f"update_r_n{n}_l{l}",
+            op="update_r",
+            fn=model.update_r,
+            args=[spec(l, n), spec(l), spec(n), spec(n), spec()],
+            dims=dict(n=n, l=l),
+            inputs=["r", "q", "c_row", "c_new", "s"],
+            outputs=["r_top", "r_new"],
+        )
+    )
+
+    # Fully fused iteration (L2-fusion ablation).
+    n, l, m = 4096, 512, 16
+    arts.append(
+        dict(
+            name=f"iteration_n{n}_l{l}_m{m}",
+            op="oasis_iteration",
+            fn=model.oasis_iteration,
+            args=[spec(n, l), spec(l, n), spec(n), spec(n), spec(n, m), spec()],
+            dims=dict(n=n, l=l, m=m),
+            inputs=["c", "r", "d", "mask", "z", "inv_sigma_sq"],
+            outputs=["delta", "idx", "col"],
+        )
+    )
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower only this artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for art in artifact_set():
+        if args.only and art["name"] != args.only:
+            continue
+        lowered = jax.jit(art["fn"]).lower(*art["args"])
+        text = to_hlo_text(lowered)
+        fname = f"{art['name']}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            dict(
+                name=art["name"],
+                file=fname,
+                op=art["op"],
+                dims=art["dims"],
+                inputs=[
+                    dict(name=nm, shape=list(a.shape), dtype=str(a.dtype))
+                    for nm, a in zip(art["inputs"], art["args"])
+                ],
+                outputs=art["outputs"],
+            )
+        )
+        print(f"lowered {art['name']:28s} -> {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(dict(version=1, artifacts=manifest), f, indent=1)
+    print(f"wrote {mpath} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the oASIS hot spots (build-time only)."""
+
+from .delta import delta_scores, rank1_r_update
+from .gaussian import gaussian_block, linear_block
+
+__all__ = [
+    "delta_scores",
+    "rank1_r_update",
+    "gaussian_block",
+    "linear_block",
+]

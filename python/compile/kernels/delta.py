@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: oASIS Delta-score computation.
+
+The per-iteration scoring step of oASIS (Alg. 1 of the paper):
+
+    Delta = d - colsum(C o R)      i.e.  Delta_i = d_i - sum_k C(i,k) R(k,i)
+
+C is (n, l) and R is (l, n) where l is the *maximum* number of sampled
+columns; rows/columns beyond the current k are zero-padded, which leaves
+Delta unchanged (zero contributions). This padding trick is what lets the
+Rust runtime reuse one fixed-shape AOT artifact for every iteration.
+
+TPU mapping: pure VPU reduction, tiled along n; each grid step holds a
+(block_n, l) tile of C and the matching (l, block_n) tile of R in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _delta_kernel(c_ref, r_ref, d_ref, o_ref):
+    """One grid step: Delta tile = d tile - row-dot(C tile, R tile^T)."""
+    c = c_ref[...]                       # (block_n, l)
+    r = r_ref[...]                       # (l, block_n)
+    d = d_ref[...]                       # (block_n,)
+    o_ref[...] = d - jnp.sum(c * r.T, axis=1)
+
+
+def _pick_block(n: int, target: int = 512) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def delta_scores(c, r, d, *, block_n: int = 512):
+    """oASIS selection scores via the Pallas kernel.
+
+    Args:
+      c: (n, l) float32 sampled columns, zero-padded beyond current k.
+      r: (l, n) float32 R = W^{-1} C^T, zero-padded beyond current k.
+      d: (n,) float32 diagonal of G.
+
+    Returns:
+      (n,) float32 vector of Schur complements.
+    """
+    n, l = c.shape
+    bn = _pick_block(n, block_n)
+    return pl.pallas_call(
+        _delta_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, l), lambda i: (i, 0)),
+            pl.BlockSpec((l, bn), lambda i: (0, i)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(c, r, d)
+
+
+def _rank1_kernel(r_ref, q_ref, diff_ref, s_ref, o_ref):
+    """One grid step of the Eq. 6 rank-1 update: R += s * q diff^T."""
+    r = r_ref[...]                       # (l, block_n)
+    q = q_ref[...]                       # (l, 1)
+    diff = diff_ref[...]                 # (1, block_n)
+    s = s_ref[0, 0]
+    o_ref[...] = r + s * (q * diff)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def rank1_r_update(r, q, diff, s, *, block_n: int = 512):
+    """Rank-1 update of the live block of R (Eq. 6): R + s * outer(q, diff).
+
+    Args:
+      r: (l, n) float32 R matrix (live rows in the top-k block).
+      q: (l,) float32 q = R[:, i] zero-padded to l.
+      diff: (n,) float32 q^T C^T - c_new^T.
+      s: scalar 1/Delta(i).
+
+    Returns:
+      (l, n) float32 updated R. The appended row, s * (-diff), is formed by
+      the caller (it is a cheap scale).
+    """
+    l, n = r.shape
+    bn = _pick_block(n, block_n)
+    q2 = q.reshape(l, 1)
+    diff2 = diff.reshape(1, n)
+    s2 = jnp.asarray(s, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _rank1_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((l, bn), lambda i: (0, i)),
+            pl.BlockSpec((l, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((l, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.float32),
+        interpret=True,
+    )(r, q2, diff2, s2)

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: Gaussian kernel-column block generator.
+
+This is the compute hot spot of oASIS when run over a raw dataset: given a
+block of data points Z_blk (n, m) and the currently selected points
+Z_sel (k, m), emit the (n, k) block of kernel columns
+
+    C[i, j] = exp(-||z_i - s_j||^2 / sigma^2).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks the n axis;
+each grid step holds a (block_n, m) slab of Z and the full (k, m) selected
+set in VMEM and performs an MXU-shaped contraction Z_blk @ Z_sel^T followed
+by VPU elementwise exp. On this image Pallas runs interpret=True (CPU PJRT
+cannot execute Mosaic custom-calls); the lowered HLO is what the Rust
+runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gaussian_kernel(z_ref, s_ref, g_ref, o_ref):
+    """One grid step: (block_n, m) x (k, m) -> (block_n, k)."""
+    z = z_ref[...]                       # (block_n, m)
+    s = s_ref[...]                       # (k, m)
+    inv_sigma_sq = g_ref[0, 0]
+    x2 = jnp.sum(z * z, axis=1, keepdims=True)                  # (block_n, 1)
+    y2 = jnp.sum(s * s, axis=1, keepdims=True).T                # (1, k)
+    xy = jnp.dot(z, s.T, preferred_element_type=jnp.float32)    # (block_n, k)
+    sq = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+    o_ref[...] = jnp.exp(-sq * inv_sigma_sq)
+
+
+def _linear_kernel(z_ref, s_ref, o_ref):
+    """One grid step of the Gram-matrix variant: plain inner products."""
+    o_ref[...] = jnp.dot(
+        z_ref[...], s_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(n: int, target: int = 256) -> int:
+    """Largest divisor of n that is <= target (grid must tile n exactly)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gaussian_block(z_blk, z_sel, inv_sigma_sq, *, block_n: int = 256):
+    """Gaussian kernel columns via the Pallas kernel.
+
+    Args:
+      z_blk: (n, m) float32 data block.
+      z_sel: (k, m) float32 selected points.
+      inv_sigma_sq: scalar 1/sigma^2 (traced; passed as a (1, 1) operand).
+      block_n: tile size along n; must divide n (adjusted by caller).
+
+    Returns:
+      (n, k) float32 kernel-column block.
+    """
+    n, m = z_blk.shape
+    k, _ = z_sel.shape
+    bn = _pick_block(n, block_n)
+    gamma = jnp.asarray(inv_sigma_sq, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _gaussian_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(z_blk, z_sel, gamma)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def linear_block(z_blk, z_sel, *, block_n: int = 256):
+    """Linear (Gram) kernel columns via the Pallas kernel: Z_blk @ Z_sel^T."""
+    n, m = z_blk.shape
+    k, _ = z_sel.shape
+    bn = _pick_block(n, block_n)
+    return pl.pallas_call(
+        _linear_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(z_blk, z_sel)

@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match the corresponding function here to float32 tolerance. The pytest
+suite (python/tests/) sweeps shapes and dtypes with hypothesis and asserts
+allclose against these implementations.
+"""
+
+import jax.numpy as jnp
+
+
+def gaussian_block_ref(z_blk, z_sel, inv_sigma_sq):
+    """Gaussian kernel columns, reference implementation.
+
+    Args:
+      z_blk: (n, m) block of data points (row-major points).
+      z_sel: (k, m) selected data points.
+      inv_sigma_sq: scalar, 1/sigma^2.
+
+    Returns:
+      (n, k) block of the kernel matrix: exp(-||z_i - z_j||^2 / sigma^2).
+    """
+    x2 = jnp.sum(z_blk * z_blk, axis=1, keepdims=True)          # (n, 1)
+    y2 = jnp.sum(z_sel * z_sel, axis=1, keepdims=True).T        # (1, k)
+    xy = z_blk @ z_sel.T                                        # (n, k)
+    sq = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+    return jnp.exp(-sq * inv_sigma_sq)
+
+
+def linear_block_ref(z_blk, z_sel):
+    """Linear (Gram) kernel columns: G(i, j) = z_i^T z_j."""
+    return z_blk @ z_sel.T
+
+
+def delta_scores_ref(c, r, d):
+    """oASIS selection scores, reference implementation.
+
+    Delta_i = d_i - sum_k C(i, k) * R(k, i)   (= d - colsum(C o R) in the
+    paper's notation, where R = W^{-1} C^T).
+
+    Args:
+      c: (n, l) sampled columns (zero-padded beyond the current k).
+      r: (l, n) R matrix (zero-padded beyond the current k).
+      d: (n,) diagonal of G.
+
+    Returns:
+      (n,) vector of Schur complements Delta.
+    """
+    return d - jnp.sum(c * r.T, axis=1)
+
+
+def rank1_r_update_ref(r, q, c_row, c_new, s):
+    """Rank-1 update of R (Eq. 6 of the paper), reference implementation.
+
+    Given R_k (l, n) with the first k rows live, q = R[:, i] (zero-padded
+    to l), the projected row ``c_row = q^T C^T`` (n,), the new column
+    c_new (n,) and the inverse Schur complement s, produce
+
+        R_top = R + s * q (q^T C^T - c_new^T)        # updated live rows
+        r_new = s * (c_new^T - q^T C^T)              # the appended row
+
+    Returns (R_top, r_new).
+    """
+    diff = c_row - c_new                                        # (n,)
+    r_top = r + s * jnp.outer(q, diff)
+    r_new = -s * diff
+    return r_top, r_new

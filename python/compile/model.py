@@ -1,0 +1,93 @@
+"""L2: the oASIS per-iteration compute graph in JAX, calling L1 kernels.
+
+Each public function here is a jit-able graph that composes the Pallas
+kernels in ``kernels/``. ``aot.py`` lowers fixed-shape instances of these
+functions to HLO text, which the Rust runtime (rust/src/runtime/) loads and
+executes via PJRT. Python never runs on the request path.
+
+Padding convention (shared with the Rust side): all artifacts are lowered at
+a maximum column budget ``l``; C is (n, l), R is (l, n) and entries at
+indices >= current k are zero, which leaves every result below unchanged.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import delta_scores, gaussian_block, linear_block, rank1_r_update
+
+
+def score_columns(c, r, d, mask):
+    """Masked oASIS scores: Delta with already-selected entries suppressed.
+
+    Args:
+      c: (n, l) sampled columns, zero-padded.
+      r: (l, n) R = W^{-1} C^T, zero-padded.
+      d: (n,) diag(G).
+      mask: (n,) float32, 0.0 at already-selected indices, 1.0 elsewhere.
+
+    Returns:
+      (delta, masked_abs): the raw Schur complements (n,) and |Delta| with
+      selected entries forced to -1 so argmax never picks them.
+    """
+    delta = delta_scores(c, r, d)
+    masked = jnp.where(mask > 0.5, jnp.abs(delta), -1.0)
+    return delta, masked
+
+
+def score_and_select(c, r, d, mask):
+    """Fused scoring + argmax: returns (delta, best_index, best_abs_delta)."""
+    delta, masked = score_columns(c, r, d, mask)
+    idx = jnp.argmax(masked)
+    return delta, idx.astype(jnp.int32), masked[idx]
+
+
+def gaussian_columns(z_blk, z_sel, inv_sigma_sq):
+    """Kernel-column block for the Gaussian kernel (L1 kernel pass-through)."""
+    return gaussian_block(z_blk, z_sel, inv_sigma_sq)
+
+
+def gram_columns(z_blk, z_sel):
+    """Kernel-column block for the linear/Gram kernel."""
+    return linear_block(z_blk, z_sel)
+
+
+def update_r(r, q, c_row, c_new, s):
+    """Eq. 6: rank-1 update of R's live block plus the appended row.
+
+    Args:
+      r: (l, n) R matrix.
+      q: (l,) q = R[:, i] (zero-padded).
+      c_row: (n,) q^T C^T.
+      c_new: (n,) the newly sampled column of G.
+      s: scalar 1/Delta(i).
+
+    Returns:
+      (r_top, r_new): updated (l, n) live block and the (n,) appended row.
+      The caller writes ``r_new`` into row k of the padded R buffer.
+    """
+    diff = c_row - c_new
+    r_top = rank1_r_update(r, q, diff, s)
+    r_new = -s * diff
+    return r_top, r_new
+
+
+def oasis_iteration(c, r, d, mask, z, inv_sigma_sq):
+    """A fully fused oASIS iteration body (score -> select -> new column).
+
+    Used for the L2-fusion ablation: selects the next index and computes its
+    kernel column in one lowered module, avoiding a host round-trip between
+    scoring and column generation.
+
+    Args:
+      c, r, d, mask: as in ``score_and_select``.
+      z: (n, m) the full (or shard-local) dataset block.
+      inv_sigma_sq: Gaussian kernel scale.
+
+    Returns:
+      (delta, idx, col): scores, selected index, and the selected point's
+      kernel column against the entire block z (n,).
+    """
+    delta, idx, _ = score_and_select(c, r, d, mask)
+    zi = jax.lax.dynamic_slice_in_dim(z, idx, 1, axis=0)        # (1, m)
+    col = gaussian_block(z, zi, inv_sigma_sq)[:, 0]             # (n,)
+    return delta, idx, col

@@ -1,0 +1,88 @@
+"""L1 Delta-score and rank-1 R-update Pallas kernels vs the pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import delta_scores, rank1_r_update
+from compile.kernels.ref import delta_scores_ref, rank1_r_update_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _crd(seed, n, l):
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(n, l)).astype(np.float32)
+    r = rng.normal(size=(l, n)).astype(np.float32)
+    d = rng.normal(size=(n,)).astype(np.float32)
+    return c, r, d
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 128),
+    l=st.integers(1, 64),
+)
+def test_delta_matches_ref(seed, n, l):
+    c, r, d = _crd(seed, n, l)
+    got = np.array(delta_scores(c, r, d))
+    want = np.array(delta_scores_ref(c, r, d))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_delta_zero_pad_invariance():
+    """Zero-padded (inactive) columns of C / rows of R leave Delta unchanged
+
+    — the padding contract the fixed-shape AOT artifacts depend on."""
+    c, r, d = _crd(5, 48, 12)
+    base = np.array(delta_scores(c, r, d))
+    cp = np.zeros((48, 32), np.float32)
+    cp[:, :12] = c
+    rp = np.zeros((32, 48), np.float32)
+    rp[:12, :] = r
+    padded = np.array(delta_scores(cp, rp, d))
+    np.testing.assert_allclose(base, padded, rtol=1e-5, atol=1e-5)
+
+
+def test_delta_exact_on_psd():
+    """For G = X^T X with Lambda = all columns, Delta must vanish.
+
+    R = W^{-1} C^T with C = G, W = G (full sampling) gives
+    Delta_i = d_i - (C R)_ii = d_i - G_ii = 0.
+    """
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(6, 20)).astype(np.float64)
+    g = (x.T @ x).astype(np.float64)
+    w_inv = np.linalg.pinv(g)
+    r = (w_inv @ g.T).astype(np.float32)
+    c = g.astype(np.float32)
+    d = np.diag(g).astype(np.float32)
+    delta = np.array(delta_scores(c, r, d))
+    assert np.max(np.abs(delta)) < 1e-2 * np.max(d)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 96),
+    l=st.integers(1, 48),
+    s=st.floats(-3.0, 3.0),
+)
+def test_rank1_update_matches_ref(seed, n, l, s):
+    rng = np.random.default_rng(seed)
+    r = rng.normal(size=(l, n)).astype(np.float32)
+    q = rng.normal(size=(l,)).astype(np.float32)
+    c_row = rng.normal(size=(n,)).astype(np.float32)
+    c_new = rng.normal(size=(n,)).astype(np.float32)
+    got = np.array(rank1_r_update(r, q, c_row - c_new, np.float32(s)))
+    want, _ = rank1_r_update_ref(r, q, c_row, c_new, np.float32(s))
+    np.testing.assert_allclose(got, np.array(want), rtol=1e-4, atol=1e-4)
+
+
+def test_rank1_update_zero_s_identity():
+    """s = 0 must leave R untouched."""
+    rng = np.random.default_rng(2)
+    r = rng.normal(size=(8, 24)).astype(np.float32)
+    q = rng.normal(size=(8,)).astype(np.float32)
+    diff = rng.normal(size=(24,)).astype(np.float32)
+    out = np.array(rank1_r_update(r, q, diff, np.float32(0.0)))
+    np.testing.assert_array_equal(out, r)

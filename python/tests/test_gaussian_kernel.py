@@ -1,0 +1,104 @@
+"""L1 Gaussian / linear kernel-column Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (n, k, m), block sizes, and data scales; every case
+asserts allclose against ref.py. This is the core correctness signal for the
+kernel-column hot path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gaussian_block, linear_block
+from compile.kernels.ref import gaussian_block_ref, linear_block_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _data(seed, n, k, m, scale=1.0):
+    rng = np.random.default_rng(seed)
+    z = (rng.normal(size=(n, m)) * scale).astype(np.float32)
+    s = (rng.normal(size=(k, m)) * scale).astype(np.float32)
+    return z, s
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 96),
+    k=st.integers(1, 48),
+    m=st.integers(1, 24),
+    gamma=st.floats(1e-3, 10.0),
+)
+def test_gaussian_matches_ref(seed, n, k, m, gamma):
+    z, s = _data(seed, n, k, m)
+    got = gaussian_block(z, s, np.float32(gamma))
+    want = gaussian_block_ref(jnp.array(z), jnp.array(s), np.float32(gamma))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 96),
+    k=st.integers(1, 48),
+    m=st.integers(1, 24),
+)
+def test_linear_matches_ref(seed, n, k, m):
+    z, s = _data(seed, n, k, m)
+    got = linear_block(z, s)
+    want = linear_block_ref(jnp.array(z), jnp.array(s))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_n", [1, 2, 8, 32, 64])
+def test_gaussian_block_size_invariance(block_n):
+    """Result must not depend on the grid tiling."""
+    z, s = _data(7, 64, 9, 4)
+    base = gaussian_block(z, s, np.float32(0.5), block_n=64)
+    tiled = gaussian_block(z, s, np.float32(0.5), block_n=block_n)
+    np.testing.assert_allclose(np.array(base), np.array(tiled), rtol=1e-6)
+
+
+def test_gaussian_diagonal_is_one():
+    """k(z, z) = exp(0) = 1 for the Gaussian kernel."""
+    z, _ = _data(3, 17, 1, 6)
+    out = np.array(gaussian_block(z, z, np.float32(2.0)))
+    np.testing.assert_allclose(np.diag(out), 1.0, atol=1e-5)
+
+
+def test_gaussian_symmetry():
+    """K(A, B) == K(B, A)^T."""
+    z, s = _data(11, 20, 20, 5)
+    ab = np.array(gaussian_block(z, s, np.float32(1.3)))
+    ba = np.array(gaussian_block(s, z, np.float32(1.3)))
+    np.testing.assert_allclose(ab, ba.T, rtol=1e-6)
+
+
+def test_gaussian_range():
+    """Gaussian kernel values always lie in [0, 1] (0 via f32 underflow)."""
+    z, s = _data(13, 40, 13, 3, scale=5.0)
+    out = np.array(gaussian_block(z, s, np.float32(0.7)))
+    assert np.all(out >= 0.0) and np.all(out <= 1.0 + 1e-5)
+
+
+def test_gaussian_zero_pad_m_invariance():
+    """Zero-padding the feature dim must not change the kernel values
+
+    (the padding trick the Rust runtime relies on for the m=16 artifacts)."""
+    z, s = _data(17, 32, 8, 5)
+    base = np.array(gaussian_block(z, s, np.float32(0.9)))
+    zp = np.zeros((32, 16), np.float32)
+    zp[:, :5] = z
+    sp = np.zeros((8, 16), np.float32)
+    sp[:, :5] = s
+    padded = np.array(gaussian_block(zp, sp, np.float32(0.9)))
+    np.testing.assert_allclose(base, padded, rtol=1e-4, atol=1e-7)
+
+
+def test_gaussian_large_distance_underflow_safe():
+    """Far-apart points give ~0, never NaN/Inf."""
+    z = np.full((4, 3), 1e3, np.float32)
+    s = np.full((2, 3), -1e3, np.float32)
+    out = np.array(gaussian_block(z, s, np.float32(1.0)))
+    assert np.all(np.isfinite(out)) and np.all(out == 0.0)

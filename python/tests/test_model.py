@@ -1,0 +1,102 @@
+"""L2 model graph tests: masking, selection, fused iteration, update algebra."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import gaussian_block_ref
+
+
+def _state(seed=0, n=48, l=16, m=6):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(n, m)).astype(np.float32)
+    c = rng.normal(size=(n, l)).astype(np.float32)
+    r = rng.normal(size=(l, n)).astype(np.float32)
+    d = rng.normal(size=(n,)).astype(np.float32)
+    return z, c, r, d
+
+
+def test_score_columns_masks_selected():
+    z, c, r, d = _state()
+    mask = np.ones(48, np.float32)
+    mask[[3, 7, 11]] = 0.0
+    delta, masked = model.score_columns(c, r, d, mask)
+    masked = np.array(masked)
+    assert np.all(masked[[3, 7, 11]] == -1.0)
+    live = np.delete(np.arange(48), [3, 7, 11])
+    np.testing.assert_allclose(
+        masked[live], np.abs(np.array(delta))[live], rtol=1e-6
+    )
+
+
+def test_score_and_select_argmax_consistent():
+    z, c, r, d = _state(seed=4)
+    mask = np.ones(48, np.float32)
+    mask[:10] = 0.0
+    delta, idx, best = model.score_and_select(c, r, d, mask)
+    delta = np.array(delta)
+    idx = int(idx)
+    assert idx >= 10
+    expected = 10 + int(np.argmax(np.abs(delta[10:])))
+    assert idx == expected
+    np.testing.assert_allclose(float(best), abs(delta[idx]), rtol=1e-6)
+
+
+def test_score_and_select_never_picks_masked_even_if_larger():
+    """A huge |Delta| at a masked index must be ignored."""
+    z, c, r, d = _state(seed=5)
+    d = d.copy()
+    d[0] = 1e6  # makes Delta_0 enormous
+    mask = np.ones(48, np.float32)
+    mask[0] = 0.0
+    _, idx, _ = model.score_and_select(c, r, d, mask)
+    assert int(idx) != 0
+
+
+def test_oasis_iteration_column_matches_ref():
+    """The fused iteration's kernel column equals the oracle column."""
+    z, c, r, d = _state(seed=8)
+    mask = np.ones(48, np.float32)
+    gamma = np.float32(0.4)
+    delta, idx, col = model.oasis_iteration(c, r, d, mask, z, gamma)
+    idx = int(idx)
+    want = gaussian_block_ref(jnp.array(z), jnp.array(z[idx : idx + 1]), gamma)
+    np.testing.assert_allclose(
+        np.array(col), np.array(want)[:, 0], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_update_r_reproduces_direct_inverse():
+    """Iterating Eq. 5/6 from k columns to k+1 must equal recomputing
+    R = W^{-1} C^T from scratch (the paper's central algebraic identity)."""
+    rng = np.random.default_rng(12)
+    x = rng.normal(size=(8, 30))
+    g = x.T @ x + 1e-6 * np.eye(30)
+    lam = [4, 9, 17]  # already selected
+    new = 22          # next selection
+    c_k = g[:, lam]                                     # (30, 3)
+    w_k = g[np.ix_(lam, lam)]
+    w_inv = np.linalg.inv(w_k)
+    r_k = w_inv @ c_k.T                                 # (3, 30)
+
+    b = g[lam, new]
+    dd = g[new, new]
+    delta = dd - b @ w_inv @ b
+    s = 1.0 / delta
+    q = w_inv @ b                                       # = R[:, new] indeed
+    np.testing.assert_allclose(q, r_k[:, new], rtol=1e-8)
+
+    c_new = g[:, new]
+    c_row = q @ c_k.T                                   # q^T C^T
+    r_top, r_new = model.update_r(
+        r_k.astype(np.float32),
+        q.astype(np.float32),
+        c_row.astype(np.float32),
+        c_new.astype(np.float32),
+        np.float32(s),
+    )
+    lam2 = lam + [new]
+    w2_inv = np.linalg.inv(g[np.ix_(lam2, lam2)])
+    r2 = w2_inv @ g[:, lam2].T                          # (4, 30)
+    np.testing.assert_allclose(np.array(r_top), r2[:3], rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.array(r_new), r2[3], rtol=1e-3, atol=1e-4)

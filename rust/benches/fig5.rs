@@ -1,0 +1,58 @@
+//! Figure 5 regeneration: exact recovery on the rank-3 Gram matrix.
+//!
+//! Panels: (b) approximation error vs columns sampled, oASIS vs 5 uniform
+//! random trials; (c) rank of G̃ vs columns sampled.
+//!
+//!     cargo bench --bench fig5
+
+use oasis::data::generators::gauss_2d_plus_3d;
+use oasis::kernels::{kernel_matrix, Linear};
+use oasis::linalg::eig::psd_rank;
+use oasis::sampling::{
+    assemble_from_indices, oasis::Oasis, uniform::Uniform, ExplicitOracle,
+};
+use oasis::util::table::{sci, Table};
+
+fn main() {
+    let ds = gauss_2d_plus_3d(150, 150, 5);
+    let g = kernel_matrix(&ds, &Linear);
+    let oracle = ExplicitOracle::new(&g);
+    let gnorm = g.fro_norm();
+    println!("Fig. 5 — dataset: 2-D Gaussian at (0,0) + 3-D Gaussian at (0,0,1)");
+    println!("rank(G) = {} (n = {})\n", psd_rank(&g, 1e-9), g.rows);
+
+    let eval = |order: &[usize], k: usize| -> (f64, usize) {
+        let approx = assemble_from_indices(&oracle, order[..k.min(order.len())].to_vec(), 0.0);
+        let recon = approx.reconstruct();
+        (recon.fro_dist(&g) / gnorm, psd_rank(&recon, 1e-9))
+    };
+
+    let mut table = Table::new(&["method", "k", "error", "rank(G̃)"])
+        .with_title("Fig. 5(b)+(c): error and rank vs columns sampled");
+    let (_, oasis_trace) = Oasis::new(8, 1, 1e-9, 1)
+        .sample_traced(&oracle)
+        .expect("oasis");
+    for k in 1..=oasis_trace.order.len() {
+        let (err, rank) = eval(&oasis_trace.order, k);
+        table.row(vec!["oASIS".into(), k.to_string(), sci(err), rank.to_string()]);
+    }
+    for trial in 0..5u64 {
+        let (_, tr) = Uniform::new(8, 100 + trial)
+            .sample_traced(&oracle)
+            .expect("uniform");
+        for k in 1..=8usize {
+            let (err, rank) = eval(&tr.order, k);
+            table.row(vec![
+                format!("Random trial {}", trial + 1),
+                k.to_string(),
+                sci(err),
+                rank.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\npaper shape check: oASIS hits machine-precision error at k = rank = 3;\n\
+         random trials select redundant columns (rank plateaus below k)."
+    );
+}

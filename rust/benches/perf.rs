@@ -1,0 +1,157 @@
+//! §Perf microbenchmarks: the per-iteration hot paths of oASIS across the
+//! three layers, used for the EXPERIMENTS.md §Perf iteration log.
+//!
+//!   L3 native : Δ colsum (PaperR) vs incremental Δ update; rank-1 R
+//!               update; kernel column generation; end-to-end per-column
+//!               selection throughput for both variants.
+//!   Runtime   : PJRT delta artifact execution vs native Δ sweep.
+//!
+//!     cargo bench --bench perf
+
+use oasis::bench_support::{bench, BenchConfig};
+use oasis::data::generators::two_moons;
+use oasis::kernels::{kernel_column_into, Gaussian};
+use oasis::runtime::Accel;
+use oasis::sampling::{
+    oasis::{Oasis, Variant},
+    ColumnSampler, ImplicitOracle,
+};
+
+fn main() {
+    let cfg = BenchConfig { warmup: 1, reps: 5 };
+    let n = 20_000;
+    let k = 256;
+    let ds = two_moons(n, 0.05, 3);
+    let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+
+    println!("== L3 hot-path microbenches (n={n}, k={k}) ==");
+
+    // Δ colsum sweep: d − Σ_t c_t∘r_t over live k rows
+    let c = vec![0.5f64; k * n];
+    let r = vec![0.25f64; k * n];
+    let d = vec![1.0f64; n];
+    let mut delta = vec![0.0f64; n];
+    let res = bench("delta_colsum strided (i-outer, before)", &cfg, || {
+        for i in 0..n {
+            let mut acc = 0.0;
+            for t in 0..k {
+                acc += c[t * n + i] * r[t * n + i];
+            }
+            delta[i] = d[i] - acc;
+        }
+        delta[0]
+    });
+    println!("{}", res.report());
+
+    // the shipped streaming version (t-outer, sequential reads)
+    let res = bench("delta_colsum streaming (t-outer, after)", &cfg, || {
+        delta.copy_from_slice(&d);
+        for t in 0..k {
+            let ct = &c[t * n..(t + 1) * n];
+            let rt = &r[t * n..(t + 1) * n];
+            for ((o, &cv), &rv) in delta.iter_mut().zip(ct).zip(rt) {
+                *o -= cv * rv;
+            }
+        }
+        delta[0]
+    });
+    println!("{}", res.report());
+
+    // incremental Δ update: Δ −= s·diff²  (the Variant::Incremental path)
+    let diff = vec![0.1f64; n];
+    let res = bench("delta_incremental (Δ -= s·diff²)", &cfg, || {
+        for i in 0..n {
+            delta[i] -= 0.5 * diff[i] * diff[i];
+        }
+        delta[0]
+    });
+    println!("{}", res.report());
+
+    // rank-1 R update (Eq. 6): R[0..k] += s·q⊗diff
+    let mut rr = vec![0.0f64; k * n];
+    let q = vec![0.3f64; k];
+    let res = bench("rank1_r_update (Eq. 6)", &cfg, || {
+        for t in 0..k {
+            let f = 0.5 * q[t];
+            let row = &mut rr[t * n..(t + 1) * n];
+            for (o, &dv) in row.iter_mut().zip(&diff) {
+                *o += f * dv;
+            }
+        }
+        rr[0]
+    });
+    println!("{}", res.report());
+
+    // kernel column generation (the oracle cost per selection)
+    let mut col = vec![0.0f64; n];
+    let res = bench("kernel_column (gaussian, m=2)", &cfg, || {
+        kernel_column_into(&ds, &kern, n / 2, &mut col);
+        col[0]
+    });
+    println!("{}", res.report());
+
+    // end-to-end per-column selection throughput, both variants
+    let small = two_moons(8_000, 0.05, 5);
+    let skern = Gaussian::with_sigma_fraction(&small, 0.1);
+    let oracle = ImplicitOracle::new(&small, &skern);
+    for (label, variant) in [
+        ("oasis_select PaperR  (ℓ=128, n=8000)", Variant::PaperR),
+        ("oasis_select Increm. (ℓ=128, n=8000)", Variant::Incremental),
+    ] {
+        let res = bench(label, &cfg, || {
+            Oasis::new(128, 10, 1e-14, 7)
+                .with_variant(variant)
+                .sample(&oracle)
+                .unwrap()
+                .k()
+        });
+        println!("{}", res.report());
+    }
+
+    // PJRT delta artifact vs native sweep at the artifact shape
+    println!("\n== runtime: PJRT delta artifact vs native sweep ==");
+    match Accel::try_default() {
+        None => println!("(no artifacts — run `make artifacts` to include this bench)"),
+        Some(mut accel) => {
+            let art = accel
+                .manifest
+                .best_fit("delta_scores", 4096, &[("l", 512)])
+                .expect("delta artifact")
+                .clone();
+            accel.executor.load(&art).unwrap();
+            let (np, lp) = (art.dim("n").unwrap(), art.dim("l").unwrap());
+            let c32 = vec![0.5f32; np * lp];
+            let r32 = vec![0.25f32; lp * np];
+            let d32 = vec![1.0f32; np];
+            let res = bench(&format!("pjrt_delta ({np}×{lp})"), &cfg, || {
+                accel
+                    .executor
+                    .run_f32(
+                        &art.name,
+                        &[
+                            (&c32, &[np as i64, lp as i64]),
+                            (&r32, &[lp as i64, np as i64]),
+                            (&d32, &[np as i64]),
+                        ],
+                    )
+                    .unwrap()[0][0]
+            });
+            println!("{}", res.report());
+            let cc = vec![0.5f64; lp * np];
+            let rr2 = vec![0.25f64; lp * np];
+            let dd = vec![1.0f64; np];
+            let mut out = vec![0.0f64; np];
+            let res = bench(&format!("native_delta ({np}×{lp})"), &cfg, || {
+                for i in 0..np {
+                    let mut acc = 0.0;
+                    for t in 0..lp {
+                        acc += cc[t * np + i] * rr2[t * np + i];
+                    }
+                    out[i] = dd[i] - acc;
+                }
+                out[0]
+            });
+            println!("{}", res.report());
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Table I regeneration: error (selection runtime) at ℓ=450 for explicit
+//! Gaussian (first line) and diffusion (second line) kernel matrices over
+//! Two Moons (n=2000), Abalone-like (n=4177) and BORG (n=7680), for
+//! oASIS / Random / Leverage scores / K-means / Farahat.
+//!
+//!     cargo bench --bench table1
+//!     OASIS_BENCH_SCALE=0.25 cargo bench --bench table1   (quick run)
+
+use oasis::bench_support::curves::scaled;
+use oasis::data::generators::{abalone_like, two_moons};
+use oasis::data::Dataset;
+use oasis::kernels::{diffusion_normalize, kernel_matrix, Gaussian};
+use oasis::nystrom::relative_frobenius_error;
+use oasis::sampling::{
+    farahat::Farahat, kmeans::KMeansNystrom, leverage::LeverageScores,
+    oasis::Oasis, uniform::Uniform, ColumnSampler, ExplicitOracle,
+};
+use oasis::util::table::{sci, Table};
+use oasis::util::timing::timed;
+
+struct Problem {
+    name: &'static str,
+    ds: Dataset,
+    sigma_frac: f64,
+}
+
+fn problems() -> Vec<Problem> {
+    vec![
+        Problem {
+            name: "Two Moons",
+            ds: two_moons(scaled(2_000, 200), 0.05, 1),
+            sigma_frac: 0.05,
+        },
+        Problem {
+            name: "Abalone",
+            ds: abalone_like(scaled(4_177, 300), 2),
+            sigma_frac: 0.05,
+        },
+        Problem {
+            name: "BORG",
+            ds: oasis::bench_support::curves::borg_scaled(scaled(450, 40), 3),
+            sigma_frac: 0.4, // tuned (§V-A); 0.125 of max-dist makes G≈I at this scale
+        },
+    ]
+}
+
+fn main() {
+    let l = scaled(450, 40);
+    let trials = 3; // paper uses 10 for the stochastic methods
+    println!(
+        "Table I — explicit kernel matrices, ℓ = {l} (scale {}×; error (selection secs))\n",
+        oasis::bench_support::curves::bench_scale()
+    );
+
+    let mut table = Table::new(&[
+        "Problem", "kernel", "n", "oASIS", "Random", "Leverage", "K-means", "Farahat",
+    ]);
+
+    for p in problems() {
+        let n = p.ds.n();
+        let kern = Gaussian::with_sigma_fraction(&p.ds, p.sigma_frac);
+        let gaussian_g = kernel_matrix(&p.ds, &kern);
+        let mut diffusion_g = gaussian_g.clone();
+        diffusion_normalize(&mut diffusion_g);
+
+        for (kname, g) in [("gaussian", &gaussian_g), ("diffusion", &diffusion_g)] {
+            let oracle = ExplicitOracle::new(g);
+            let mut cells = vec![p.name.to_string(), kname.to_string(), n.to_string()];
+
+            // oASIS (deterministic — single run)
+            let approx = Oasis::new(l, 10.min(l), 1e-14, 7)
+                .sample(&oracle)
+                .expect("oasis");
+            let err = relative_frobenius_error(&oracle, &approx);
+            cells.push(format!("{} ({:.2})", sci(err), approx.selection_secs));
+
+            // Random — averaged trials
+            let (mut e_sum, mut t_sum) = (0.0, 0.0);
+            for t in 0..trials {
+                let a = Uniform::new(l, 100 + t).sample(&oracle).unwrap();
+                e_sum += relative_frobenius_error(&oracle, &a);
+                t_sum += a.selection_secs;
+            }
+            cells.push(format!(
+                "{} ({:.2})",
+                sci(e_sum / trials as f64),
+                t_sum / trials as f64
+            ));
+
+            // Leverage scores — averaged trials
+            let (mut e_sum, mut t_sum) = (0.0, 0.0);
+            for t in 0..trials {
+                let a = LeverageScores::new(l, l, 200 + t).sample(&oracle).unwrap();
+                e_sum += relative_frobenius_error(&oracle, &a);
+                t_sum += a.selection_secs;
+            }
+            cells.push(format!(
+                "{} ({:.2})",
+                sci(e_sum / trials as f64),
+                t_sum / trials as f64
+            ));
+
+            // K-means Nyström — averaged trials (kernel-space approx uses
+            // the raw data; for the diffusion rows the paper remaps too —
+            // we approximate the un-normalized kernel and report its error
+            // against the normalized target like-for-like by re-normalizing
+            // its reconstruction is out of scope, so we evaluate on the
+            // gaussian target for both rows, flagged with '*' on diffusion)
+            if kname == "gaussian" {
+                let (mut e_sum, mut t_sum) = (0.0, 0.0);
+                for t in 0..trials {
+                    let a = KMeansNystrom::new(&p.ds, &kern, l, 300 + t)
+                        .approximate()
+                        .unwrap();
+                    e_sum += relative_frobenius_error(&oracle, &a);
+                    t_sum += a.selection_secs;
+                }
+                cells.push(format!(
+                    "{} ({:.2})",
+                    sci(e_sum / trials as f64),
+                    t_sum / trials as f64
+                ));
+            } else {
+                cells.push("n/a (col-space only)".to_string());
+            }
+
+            // Farahat (deterministic)
+            let (a, secs) = timed(|| Farahat::new(l).sample(&oracle).unwrap());
+            let err = relative_frobenius_error(&oracle, &a);
+            cells.push(format!("{} ({:.2})", sci(err), secs));
+
+            table.row(cells);
+        }
+    }
+    table.print();
+    println!(
+        "\npaper shape check: oASIS ≈ Farahat-class accuracy at a fraction of its\n\
+         runtime; Random is fastest to select but least accurate; Leverage sits\n\
+         between; K-means leads on BORG (its ideal cluster model)."
+    );
+}

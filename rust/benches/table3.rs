@@ -1,0 +1,132 @@
+//! Table III regeneration: oASIS-P vs distributed uniform random on data
+//! too large for a single node — Two Moons (paper: 10⁶ points) and
+//! Tiny-Images-like (paper: 10⁶ and 4·10⁶ one-channel 32×32 images),
+//! sharded over worker threads standing in for the paper's 16 MPI nodes.
+//!
+//! Reported per method: sampled-entry error, end-to-end select+form wall
+//! time, and (for oASIS-P) communication volume. The random baseline pays
+//! the ℓ×ℓ pseudo-inverse the paper calls out (no iterative W⁻¹), which is
+//! what makes it *slower* end-to-end at large ℓ despite O(1) selection.
+//!
+//! Default scale runs at ~5–10% of paper size; OASIS_BENCH_SCALE raises it.
+//!
+//!     cargo bench --bench table3
+
+use oasis::bench_support::curves::scaled;
+use oasis::coordinator::{run_oasis_p, OasisPConfig};
+use oasis::data::generators::{tiny_images_like, two_moons};
+use oasis::data::Dataset;
+use oasis::kernels::{Gaussian, Kernel};
+use oasis::linalg::pinv_psd;
+use oasis::nystrom::{sampled_relative_error, NystromApprox};
+use oasis::sampling::ImplicitOracle;
+use oasis::util::rng::Pcg64;
+use oasis::util::table::{sci, Table};
+use oasis::util::timing::{fmt_bytes, Stopwatch};
+use std::sync::Arc;
+
+struct Problem {
+    name: &'static str,
+    ds: Dataset,
+    l: usize,
+    sigma: f64,
+}
+
+fn problems() -> Vec<Problem> {
+    vec![
+        Problem {
+            // paper: 1,000,000 × 2, ℓ = 1,000, σ = 0.5·√3
+            name: "Two Moons",
+            ds: two_moons(scaled(1_000_000, 5_000) / 10, 0.05, 1),
+            l: scaled(1_000, 50) / 2,
+            sigma: 0.5 * 3f64.sqrt(),
+        },
+        Problem {
+            // paper: 1,000,000 × 1024, ℓ = 4,500, σ = 20; scaled to 16×16
+            // images to keep the kernel evaluations tractable here
+            name: "Tiny Images",
+            ds: tiny_images_like(scaled(1_000_000, 2_000) / 25, 16, 2),
+            l: scaled(4_500, 50) / 15,
+            sigma: 20.0 * (256.0 / 1024.0f64).sqrt(), // rescale σ for dim
+        },
+    ]
+}
+
+fn main() {
+    let workers = 8; // stand-in for the paper's 16 nodes / 192 cores
+    let samples = 100_000;
+    println!(
+        "Table III — distributed implicit kernels, {workers} workers (scale {}×)\n",
+        oasis::bench_support::curves::bench_scale()
+    );
+    let mut table = Table::new(&[
+        "Problem", "n", "ℓ", "oASIS-P err (s)", "Random err (s)", "oASIS-P comm",
+    ]);
+    for p in problems() {
+        let n = p.ds.n();
+        let l = p.l.min(n);
+        let gk = Gaussian::new(p.sigma);
+        let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(p.sigma));
+        let oracle = ImplicitOracle::new(&p.ds, &gk);
+
+        // --- oASIS-P (tolerance 1e-4 like the paper's Two Moons run) ---
+        let cfg = OasisPConfig::new(l, 10.min(l), workers)
+            .with_seed(7)
+            .with_tol(1e-4);
+        let (approx, report) = run_oasis_p(&p.ds, kernel, &cfg).expect("oasis-p");
+        let e_oasis = sampled_relative_error(&oracle, &approx, samples, 11);
+        let oasis_cell = format!("{} ({:.1})", sci(e_oasis), report.wall_secs);
+        let comm = format!(
+            "{}↓ {}↑",
+            fmt_bytes(report.metrics.broadcast_bytes()),
+            fmt_bytes(report.metrics.gather_bytes())
+        );
+
+        // --- distributed uniform random: same ℓ as oASIS-P actually used;
+        //     forming columns threaded over "nodes", then the W⁺ cost ---
+        let k = approx.k();
+        let sw = Stopwatch::start();
+        let order = Pcg64::new(7).sample_without_replacement(n, k);
+        let mut c = oasis::linalg::Mat::zeros(n, k);
+        oasis::util::parallel::for_each_chunk_mut(
+            &mut c.data,
+            k,
+            workers,
+            |range, chunk| {
+                for (local, i) in range.clone().enumerate() {
+                    let zi = p.ds.point(i);
+                    for (t, &j) in order.iter().enumerate() {
+                        chunk[local * k + t] = gk.eval(zi, p.ds.point(j));
+                    }
+                }
+            },
+        );
+        let w = c.select_rows(&order);
+        let winv = pinv_psd(&w, 1e-12); // W⁺: the step with no iterative form
+        let secs_rand = sw.secs();
+        let rand = NystromApprox {
+            indices: order,
+            c,
+            winv,
+            selection_secs: secs_rand,
+        };
+        let e_rand = sampled_relative_error(&oracle, &rand, samples, 11);
+        let rand_cell = format!("{} ({:.1})", sci(e_rand), secs_rand);
+
+        table.row(vec![
+            p.name.to_string(),
+            n.to_string(),
+            k.to_string(),
+            oasis_cell,
+            rand_cell,
+            comm,
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper shape check: on clustered data oASIS-P reaches ~1% of random's\n\
+         error at equal ℓ; its per-step communication is a single data point\n\
+         (volume independent of n); random's end-to-end time is dominated by\n\
+         forming columns plus the ℓ×ℓ pseudo-inverse that cannot use Eq. 5."
+    );
+}

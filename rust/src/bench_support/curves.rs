@@ -1,0 +1,148 @@
+//! Shared machinery for the figure benches: evaluate error-vs-columns and
+//! error-vs-time curves from a sequential sampler's trace by rebuilding
+//! the approximation at prefix index sets.
+
+use crate::nystrom::{relative_frobenius_error, sampled_relative_error};
+use crate::sampling::{assemble_from_indices, ColumnOracle, SelectionTrace};
+
+/// How the error is measured for a curve point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorMode {
+    /// exact ‖G−G̃‖_F/‖G‖_F (explicit class)
+    Full,
+    /// sampled-entry estimator with this many samples (implicit class)
+    Sampled(usize),
+}
+
+/// One point of a convergence curve.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub k: usize,
+    pub error: f64,
+    /// cumulative selection seconds when the k-th column was chosen
+    pub secs: f64,
+}
+
+/// Evaluate `error(k)` at each k in `ks` from a selection trace, by
+/// assembling the Nyström approximation over the first k selected indices.
+/// (Valid for the sequential methods — oASIS/SIS/Farahat/random/leverage —
+/// whose prefix is exactly the state after k selections; not for K-means,
+/// which must be rerun per k, as the paper notes in §V-E.)
+pub fn error_curve(
+    oracle: &dyn ColumnOracle,
+    trace: &SelectionTrace,
+    ks: &[usize],
+    mode: ErrorMode,
+    seed: u64,
+) -> Vec<CurvePoint> {
+    let mut out = Vec::with_capacity(ks.len());
+    for &k in ks {
+        let k = k.min(trace.order.len());
+        if k == 0 {
+            continue;
+        }
+        let prefix: Vec<usize> = trace.order[..k].to_vec();
+        let approx = assemble_from_indices(oracle, prefix, 0.0);
+        let error = match mode {
+            ErrorMode::Full => relative_frobenius_error(oracle, &approx),
+            ErrorMode::Sampled(s) => {
+                sampled_relative_error(oracle, &approx, s, seed)
+            }
+        };
+        out.push(CurvePoint { k, error, secs: trace.cum_secs[k - 1] });
+    }
+    out
+}
+
+/// A log-spaced grid of column counts in [k_min, k_max].
+pub fn k_grid(k_min: usize, k_max: usize, points: usize) -> Vec<usize> {
+    assert!(k_min >= 1 && k_max >= k_min && points >= 1);
+    let mut ks: Vec<usize> = (0..points)
+        .map(|i| {
+            let t = i as f64 / (points - 1).max(1) as f64;
+            let v = (k_min as f64).ln() + t * ((k_max as f64).ln() - (k_min as f64).ln());
+            v.exp().round() as usize
+        })
+        .collect();
+    ks.dedup();
+    ks
+}
+
+/// Render a curve as aligned rows for the bench output.
+pub fn print_curve(method: &str, curve: &[CurvePoint]) {
+    for p in curve {
+        println!(
+            "{:18} k={:5}  error={:10.3e}  t={:8.3}s",
+            method, p.k, p.error, p.secs
+        );
+    }
+}
+
+/// Benchmark scale factor from `$OASIS_BENCH_SCALE`: scales dataset sizes.
+/// `OASIS_BENCH_SCALE=1` regenerates the paper-size tables (Table I takes
+/// ~20 min, most of it in the baselines' O(n²·ℓ)/O(n³) work — oASIS itself
+/// is seconds); the default 0.25 keeps the full `cargo bench` sweep to
+/// minutes while preserving every qualitative shape.
+pub fn bench_scale() -> f64 {
+    std::env::var("OASIS_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25)
+}
+
+/// Scale a size, keeping a floor.
+pub fn scaled(n: usize, floor: usize) -> usize {
+    ((n as f64 * bench_scale()) as usize).max(floor)
+}
+
+/// BORG dataset scaled coherently with the column budget ℓ: the paper uses
+/// an 8-cube (256 clusters) with ℓ=450 ≈ 1.8× the cluster count. At
+/// reduced scale a fixed 8-cube would leave ℓ < #clusters and *every*
+/// method floors at ~1 error, destroying the figure's shape — so the cube
+/// dimension shrinks to keep ℓ ≳ 1.75 × 2^dim, and points-per-vertex keeps
+/// n near `scaled(7680)`.
+pub fn borg_scaled(l: usize, seed: u64) -> crate::data::Dataset {
+    let dim = ((l as f64 / 1.75).log2().floor() as usize).clamp(4, 8);
+    let n_target = scaled(7_680, 192);
+    let per_vertex = (n_target >> dim).max(2);
+    crate::data::generators::borg(dim, per_vertex, 0.1, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::Gaussian;
+    use crate::sampling::{oasis::Oasis, ColumnSampler, ImplicitOracle};
+
+    #[test]
+    fn grid_is_monotone_and_bounded() {
+        let ks = k_grid(5, 450, 12);
+        assert_eq!(*ks.first().unwrap(), 5);
+        assert_eq!(*ks.last().unwrap(), 450);
+        for w in ks.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn curve_is_consistent_with_direct_run() {
+        let ds = two_moons(120, 0.05, 3);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.15);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let sampler = Oasis::new(30, 5, 1e-14, 9);
+        let (_, trace) = sampler.sample_traced(&oracle).unwrap();
+        let curve = error_curve(&oracle, &trace, &[10, 20, 30], ErrorMode::Full, 1);
+        assert_eq!(curve.len(), 3);
+        // error decreasing along the curve
+        assert!(curve[0].error >= curve[1].error - 1e-9);
+        assert!(curve[1].error >= curve[2].error - 1e-9);
+        // last point matches a direct run at ℓ=30
+        let direct = Oasis::new(30, 5, 1e-14, 9)
+            .sample(&oracle)
+            .unwrap();
+        let e =
+            crate::nystrom::relative_frobenius_error(&oracle, &direct);
+        assert!((curve[2].error - e).abs() < 1e-9);
+    }
+}

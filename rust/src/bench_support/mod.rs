@@ -1,0 +1,81 @@
+//! Micro-bench harness (criterion substitute): warmup + timed repetitions
+//! with median/min/max reporting, and helpers shared by the table/figure
+//! benches under `rust/benches/`.
+
+pub mod curves;
+
+use crate::util::timing::{fmt_secs, Stopwatch, Summary};
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 1, reps: 5 }
+    }
+}
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} median {:>10}  min {:>10}  max {:>10}  (n={})",
+            self.name,
+            fmt_secs(self.summary.median),
+            fmt_secs(self.summary.min),
+            fmt_secs(self.summary.max),
+            self.summary.n,
+        )
+    }
+}
+
+/// Run a closure `cfg.reps` times (after warmup) and summarize wall time.
+/// The closure's return value is passed through a black box to prevent
+/// dead-code elimination.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(cfg.reps);
+    for _ in 0..cfg.reps {
+        let sw = Stopwatch::start();
+        black_box(f());
+        times.push(sw.secs());
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&times) }
+}
+
+/// Opaque value sink (std::hint::black_box passthrough).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_summarizes() {
+        let mut count = 0usize;
+        let cfg = BenchConfig { warmup: 2, reps: 3 };
+        let r = bench("noop", &cfg, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 5);
+        assert_eq!(r.summary.n, 3);
+        assert!(r.summary.min <= r.summary.median);
+        assert!(r.report().contains("noop"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Message types and metered channels — the crate's stand-in for MPI
+//! `Broadcast(data)` / `Gather(variable)` (paper Fig. 4).
+
+use super::metrics::Metrics;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Leader → worker messages.
+#[derive(Debug, Clone)]
+pub enum ToWorker {
+    /// Seed state: the initial selected points (Z_Λ₀), their global
+    /// indices, and W₀⁻¹ (k₀×k₀ row-major).
+    Init {
+        seed_indices: Vec<usize>,
+        seed_points: Vec<Vec<f64>>,
+        winv0: Vec<f64>,
+    },
+    /// Request the raw data point at a global index this worker owns.
+    FetchPoint { global_idx: usize },
+    /// The broadcast selected point (paper: `Broadcast(Z(:,i))`): every
+    /// worker updates its shard state and replies with its next local
+    /// argmax.
+    Selected {
+        global_idx: usize,
+        point: Vec<f64>,
+        delta: f64,
+    },
+    /// Finish: send back the local C block (and worker 0 its W⁻¹).
+    Finish,
+}
+
+/// Worker → leader messages.
+#[derive(Debug)]
+pub enum FromWorker {
+    /// Local Δ argmax over this shard (paper: `Gather(Δ_(i))`, reduced).
+    Argmax {
+        worker: usize,
+        /// global index of the best unselected local candidate; None if
+        /// the shard is exhausted.
+        best: Option<(usize, f64)>, // (global index, signed Δ)
+        /// max |diag| over this shard (for the leader's relative
+        /// tolerance floor — see `sampling::effective_tol`).
+        d_max: f64,
+    },
+    /// Reply to `FetchPoint`.
+    Point { global_idx: usize, point: Vec<f64> },
+    /// Final local C block: rows are this shard's points (local_n × k,
+    /// row-major), plus the shard's global start.
+    Columns {
+        worker: usize,
+        start: usize,
+        local_n: usize,
+        c_block: Vec<f64>,
+        /// worker 0 also returns the replicated W⁻¹ (k×k row-major)
+        winv: Option<Vec<f64>>,
+    },
+    /// A worker failed (injected fault or internal error).
+    Failed { worker: usize, message: String },
+}
+
+impl ToWorker {
+    /// Approximate serialized payload size in bytes (for the
+    /// communication-volume metrics; 8 bytes per f64, 8 per index).
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            ToWorker::Init { seed_indices, seed_points, winv0 } => {
+                (seed_indices.len() * 8
+                    + seed_points.iter().map(|p| p.len() * 8).sum::<usize>()
+                    + winv0.len() * 8) as u64
+            }
+            ToWorker::FetchPoint { .. } => 8,
+            ToWorker::Selected { point, .. } => (point.len() * 8 + 16) as u64,
+            ToWorker::Finish => 1,
+        }
+    }
+}
+
+impl FromWorker {
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            FromWorker::Argmax { .. } => 32,
+            FromWorker::Point { point, .. } => (point.len() * 8 + 8) as u64,
+            FromWorker::Columns { c_block, winv, .. } => {
+                (c_block.len() * 8 + winv.as_ref().map_or(0, |w| w.len() * 8) + 24)
+                    as u64
+            }
+            FromWorker::Failed { message, .. } => message.len() as u64,
+        }
+    }
+}
+
+/// Leader-side handle to one worker's inbox, metering broadcast bytes.
+pub struct WorkerHandle {
+    pub worker: usize,
+    tx: Sender<ToWorker>,
+    metrics: Arc<Metrics>,
+}
+
+impl WorkerHandle {
+    pub fn new(worker: usize, tx: Sender<ToWorker>, metrics: Arc<Metrics>) -> Self {
+        WorkerHandle { worker, tx, metrics }
+    }
+
+    /// Send (records payload bytes). Returns false if the worker is gone.
+    pub fn send(&self, msg: ToWorker) -> bool {
+        self.metrics.add_broadcast(msg.payload_bytes());
+        self.tx.send(msg).is_ok()
+    }
+}
+
+/// Worker-side handle to the leader's shared inbox, metering gather bytes.
+#[derive(Clone)]
+pub struct LeaderHandle {
+    tx: Sender<FromWorker>,
+    metrics: Arc<Metrics>,
+}
+
+impl LeaderHandle {
+    pub fn new(tx: Sender<FromWorker>, metrics: Arc<Metrics>) -> Self {
+        LeaderHandle { tx, metrics }
+    }
+
+    pub fn send(&self, msg: FromWorker) -> bool {
+        self.metrics.add_gather(msg.payload_bytes());
+        self.tx.send(msg).is_ok()
+    }
+}
+
+/// The leader's receiving end.
+pub type LeaderInbox = Receiver<FromWorker>;
+/// A worker's receiving end.
+pub type WorkerInbox = Receiver<ToWorker>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_accounting() {
+        let m = ToWorker::Selected {
+            global_idx: 3,
+            point: vec![0.0; 10],
+            delta: 0.5,
+        };
+        assert_eq!(m.payload_bytes(), 96);
+        let g = FromWorker::Point { global_idx: 1, point: vec![0.0; 4] };
+        assert_eq!(g.payload_bytes(), 40);
+    }
+
+    #[test]
+    fn handles_meter_traffic() {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = WorkerHandle::new(0, tx, metrics.clone());
+        assert!(h.send(ToWorker::FetchPoint { global_idx: 5 }));
+        assert_eq!(metrics.broadcast_bytes(), 8);
+        drop(rx);
+        assert!(!h.send(ToWorker::Finish));
+    }
+}

@@ -1,0 +1,87 @@
+//! oASIS-P configuration.
+
+use std::time::Duration;
+
+/// Fault-injection spec for resilience tests: worker `worker` dies right
+/// before processing its `at_iteration`-th `Selected` message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailureSpec {
+    pub worker: usize,
+    pub at_iteration: usize,
+}
+
+/// Configuration for a distributed oASIS-P run.
+#[derive(Debug, Clone)]
+pub struct OasisPConfig {
+    /// ℓ — maximum number of sampled columns.
+    pub max_cols: usize,
+    /// k₀ — random seed columns.
+    pub init_cols: usize,
+    /// ε — stopping tolerance on |Δ|.
+    pub tol: f64,
+    /// RNG seed (must match the sequential sampler's for equivalence).
+    pub seed: u64,
+    /// p — number of worker nodes (threads).
+    pub workers: usize,
+    /// leader-side timeout waiting for worker messages.
+    pub timeout: Duration,
+    /// optional injected fault (tests).
+    pub failure: Option<FailureSpec>,
+}
+
+impl OasisPConfig {
+    pub fn new(max_cols: usize, init_cols: usize, workers: usize) -> Self {
+        OasisPConfig {
+            max_cols,
+            init_cols,
+            tol: 1e-12,
+            seed: 7,
+            workers,
+            timeout: Duration::from_secs(60),
+            failure: None,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn validate(&self, n: usize) -> crate::Result<()> {
+        use anyhow::bail;
+        if self.workers == 0 {
+            bail!("workers must be ≥ 1");
+        }
+        if self.max_cols == 0 || self.init_cols == 0 {
+            bail!("max_cols and init_cols must be ≥ 1");
+        }
+        if self.init_cols > self.max_cols {
+            bail!("init_cols > max_cols");
+        }
+        if self.max_cols > n {
+            bail!("max_cols {} > n {}", self.max_cols, n);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation() {
+        let ok = OasisPConfig::new(10, 2, 4);
+        assert!(ok.validate(100).is_ok());
+        assert!(ok.validate(5).is_err());
+        assert!(OasisPConfig::new(10, 2, 0).validate(100).is_err());
+        let mut bad = OasisPConfig::new(10, 2, 4);
+        bad.init_cols = 20;
+        assert!(bad.validate(100).is_err());
+    }
+}

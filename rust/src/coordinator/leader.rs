@@ -1,0 +1,330 @@
+//! The oASIS-P leader: seeds the run, reduces gathered shard argmaxes,
+//! broadcasts selected points, detects worker failure, and assembles the
+//! final Nyström approximation from the gathered column blocks.
+
+use super::comm::{FromWorker, LeaderHandle, ToWorker, WorkerHandle};
+use super::config::OasisPConfig;
+use super::metrics::Metrics;
+use super::worker::Worker;
+use crate::data::{shard, Dataset};
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::nystrom::NystromApprox;
+use crate::sampling::SelectionTrace;
+use crate::util::{rng::Pcg64, timing::Stopwatch};
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Outcome report of a distributed run.
+#[derive(Debug)]
+pub struct OasisPReport {
+    pub trace: SelectionTrace,
+    pub metrics: Arc<Metrics>,
+    pub workers: usize,
+    pub wall_secs: f64,
+}
+
+/// Run oASIS-P over `cfg.workers` threads. The selection sequence is
+/// identical to the sequential [`crate::sampling::oasis::Oasis`] sampler
+/// with the same seed/tolerance (PaperR variant semantics).
+pub fn run_oasis_p(
+    ds: &Dataset,
+    kernel: Arc<dyn Kernel + Send + Sync>,
+    cfg: &OasisPConfig,
+) -> Result<(NystromApprox, OasisPReport)> {
+    let sw = Stopwatch::start();
+    let n = ds.n();
+    cfg.validate(n)?;
+    let p = cfg.workers.min(n);
+    let metrics = Arc::new(Metrics::default());
+
+    // --- spawn workers ---
+    let (to_leader_tx, leader_inbox) = mpsc::channel::<FromWorker>();
+    let mut handles = Vec::with_capacity(p);
+    let mut joins = Vec::with_capacity(p);
+    for s in shard::split(ds, p) {
+        let (tx, rx) = mpsc::channel::<ToWorker>();
+        handles.push(WorkerHandle::new(s.worker, tx, metrics.clone()));
+        let worker = Worker::new(
+            s.worker,
+            s,
+            kernel.clone(),
+            LeaderHandle::new(to_leader_tx.clone(), metrics.clone()),
+            metrics.clone(),
+            cfg.max_cols,
+            cfg.failure,
+        );
+        joins.push(std::thread::spawn(move || worker.run(rx)));
+    }
+    drop(to_leader_tx);
+
+    let run = leader_loop(ds, &kernel, cfg, p, &metrics, &handles, &leader_inbox, &sw);
+
+    // tear down: on error paths make sure workers exit
+    if run.is_err() {
+        for h in &handles {
+            h.send(ToWorker::Finish);
+        }
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+    let (approx, trace) = run?;
+    let report = OasisPReport {
+        trace,
+        metrics,
+        workers: p,
+        wall_secs: sw.secs(),
+    };
+    Ok((approx, report))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn leader_loop(
+    ds: &Dataset,
+    kernel: &Arc<dyn Kernel + Send + Sync>,
+    cfg: &OasisPConfig,
+    p: usize,
+    metrics: &Arc<Metrics>,
+    handles: &[WorkerHandle],
+    inbox: &mpsc::Receiver<FromWorker>,
+    sw: &Stopwatch,
+) -> Result<(NystromApprox, SelectionTrace)> {
+    let n = ds.n();
+    let l = cfg.max_cols.min(n);
+    let k0 = cfg.init_cols.min(l);
+    let owner_of = |g: usize| -> usize {
+        shard::shard_ranges(n, p)
+            .iter()
+            .position(|r| r.contains(&g))
+            .expect("index in range")
+    };
+
+    // --- seed selection (replicates the sequential sampler exactly) ---
+    let mut rng = Pcg64::new(cfg.seed);
+    let seed_indices: Vec<usize>;
+    let seed_points: Vec<Vec<f64>>;
+    let winv0: Mat;
+    loop {
+        let cand = rng.sample_without_replacement(n, k0);
+        // fetch candidate points from their owners
+        let mut pts: Vec<Option<Vec<f64>>> = vec![None; k0];
+        for (slot, &g) in cand.iter().enumerate() {
+            let w = owner_of(g);
+            if !handles[w].send(ToWorker::FetchPoint { global_idx: g }) {
+                bail!("worker {w} unavailable during seeding");
+            }
+            let msg = recv(inbox, cfg)?;
+            match msg {
+                FromWorker::Point { global_idx, point } => {
+                    debug_assert_eq!(global_idx, g);
+                    pts[slot] = Some(point);
+                }
+                FromWorker::Failed { worker, message } => {
+                    bail!("worker {worker} failed during seeding: {message}")
+                }
+                other => bail!("unexpected message during seeding: {other:?}"),
+            }
+        }
+        let pts: Vec<Vec<f64>> = pts.into_iter().map(Option::unwrap).collect();
+        // W₀ from kernel evaluations on the gathered points — identical
+        // values to the sequential sampler's fetched-column entries.
+        let mut w = Mat::zeros(k0, k0);
+        for i in 0..k0 {
+            for j in 0..k0 {
+                *w.at_mut(i, j) = kernel.eval(&pts[i], &pts[j]);
+            }
+        }
+        if let Some(inv) = crate::linalg::inverse(&w) {
+            let cond = inv.max_abs() * w.max_abs();
+            if cond.is_finite() && cond <= 1e12 {
+                seed_indices = cand;
+                seed_points = pts;
+                winv0 = inv;
+                break;
+            }
+        }
+    }
+
+    // broadcast Init
+    let init = ToWorker::Init {
+        seed_indices: seed_indices.clone(),
+        seed_points: seed_points.clone(),
+        winv0: winv0.data.clone(),
+    };
+    for h in handles {
+        if !h.send(init.clone()) {
+            bail!("worker {} unavailable at init", h.worker);
+        }
+    }
+
+    let mut trace = SelectionTrace::default();
+    let mut lambda = seed_indices.clone();
+    let mut z_sel = seed_points;
+    for &g in &lambda {
+        trace.order.push(g);
+        trace.cum_secs.push(sw.secs());
+        trace.deltas.push(f64::NAN);
+    }
+
+    // --- main selection loop ---
+    let mut d_scale = 0.0f64;
+    while lambda.len() < l {
+        // gather shard argmaxes
+        let mut best: Option<(usize, f64)> = None; // (global idx, signed Δ)
+        for _ in 0..p {
+            match recv(inbox, cfg)? {
+                FromWorker::Argmax { best: wb, d_max, .. } => {
+                    d_scale = d_scale.max(d_max);
+                    if let Some((gi, dv)) = wb {
+                        let replace = match best {
+                            None => true,
+                            Some((bg, bd)) => {
+                                let (a, b) = (dv.abs(), bd.abs());
+                                a > b || (a == b && gi < bg)
+                            }
+                        };
+                        if replace {
+                            best = Some((gi, dv));
+                        }
+                    }
+                }
+                FromWorker::Failed { worker, message } => {
+                    bail!("worker {worker} failed: {message}")
+                }
+                other => bail!("unexpected message in main loop: {other:?}"),
+            }
+        }
+        metrics.add_iteration();
+        let tol = crate::sampling::effective_tol(cfg.tol, &[d_scale]);
+        let (gidx, dval) = match best {
+            Some(b) if b.1.abs() >= tol => b,
+            _ => break, // tolerance reached or all shards exhausted
+        };
+        // fetch the winning point from its owner
+        let w = owner_of(gidx);
+        if !handles[w].send(ToWorker::FetchPoint { global_idx: gidx }) {
+            bail!("worker {w} unavailable (fetch)");
+        }
+        let point = loop {
+            match recv(inbox, cfg)? {
+                FromWorker::Point { global_idx, point } => {
+                    debug_assert_eq!(global_idx, gidx);
+                    break point;
+                }
+                FromWorker::Failed { worker, message } => {
+                    bail!("worker {worker} failed: {message}")
+                }
+                other => bail!("unexpected message awaiting point: {other:?}"),
+            }
+        };
+        // broadcast the selected point — the paper's one-vector-per-step
+        // communication pattern
+        let msg = ToWorker::Selected {
+            global_idx: gidx,
+            point: point.clone(),
+            delta: dval,
+        };
+        for h in handles {
+            if !h.send(msg.clone()) {
+                bail!("worker {} unavailable (broadcast)", h.worker);
+            }
+        }
+        lambda.push(gidx);
+        z_sel.push(point);
+        trace.order.push(gidx);
+        trace.cum_secs.push(sw.secs());
+        trace.deltas.push(dval.abs());
+    }
+
+    // --- finish: gather C blocks and the W⁻¹ replica ---
+    for h in handles {
+        if !h.send(ToWorker::Finish) {
+            bail!("worker {} unavailable (finish)", h.worker);
+        }
+    }
+    let k = lambda.len();
+    let mut c = Mat::zeros(n, k);
+    let mut winv: Option<Mat> = None;
+    let mut got = 0;
+    // drain remaining Argmax replies interleaved with Columns
+    while got < p {
+        match recv(inbox, cfg)? {
+            FromWorker::Columns { start, local_n, c_block, winv: w, .. } => {
+                for i in 0..local_n {
+                    let dst = &mut c.data[(start + i) * k..(start + i + 1) * k];
+                    dst.copy_from_slice(&c_block[i * k..(i + 1) * k]);
+                }
+                if let Some(wd) = w {
+                    winv = Some(Mat::from_vec(k, k, wd));
+                }
+                got += 1;
+            }
+            FromWorker::Argmax { .. } => {} // stale replies from last round
+            FromWorker::Failed { worker, message } => {
+                bail!("worker {worker} failed at finish: {message}")
+            }
+            other => bail!("unexpected message at finish: {other:?}"),
+        }
+    }
+    let winv = winv.ok_or_else(|| anyhow!("no W⁻¹ returned by worker 0"))?;
+    Ok((
+        NystromApprox {
+            indices: lambda,
+            c,
+            winv,
+            selection_secs: sw.secs(),
+        },
+        trace,
+    ))
+}
+
+fn recv(
+    inbox: &mpsc::Receiver<FromWorker>,
+    cfg: &OasisPConfig,
+) -> Result<FromWorker> {
+    inbox
+        .recv_timeout(cfg.timeout)
+        .map_err(|e| anyhow!("leader recv: {e} (worker died or deadlock)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::Gaussian;
+
+    #[test]
+    fn single_worker_runs() {
+        let ds = two_moons(60, 0.05, 1);
+        let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+        let cfg = OasisPConfig::new(12, 3, 1).with_seed(5);
+        let (approx, report) = run_oasis_p(&ds, kernel, &cfg).unwrap();
+        assert_eq!(approx.k(), 12);
+        assert_eq!(report.trace.order.len(), 12);
+        assert!(report.metrics.iterations() >= 9);
+    }
+
+    #[test]
+    fn communication_is_one_point_per_step() {
+        // Broadcast volume per iteration ≈ p × (dim×8 + 16) bytes: the
+        // paper's "size of the communicated vector is the dimensionality
+        // of the data point".
+        let ds = two_moons(100, 0.05, 2);
+        let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+        let p = 4;
+        let cfg = OasisPConfig::new(20, 4, p).with_seed(3);
+        let (_, report) = run_oasis_p(&ds, kernel, &cfg).unwrap();
+        let adaptive_steps = 16; // 20 − 4 seeds
+        let per_step = (2 * 8 + 16) * p; // dim=2 point + header, per worker
+        let bound = (per_step * adaptive_steps * 4) as u64; // generous ×4
+        assert!(
+            report.metrics.broadcast_bytes() < bound,
+            "broadcast {} ≥ bound {}",
+            report.metrics.broadcast_bytes(),
+            bound
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! Runtime metrics for the oASIS-P coordinator: communication volume,
+//! iteration counts, and phase timings. Lock-free (atomics) so workers can
+//! record without contention on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    broadcast_bytes: AtomicU64,
+    gather_bytes: AtomicU64,
+    broadcast_msgs: AtomicU64,
+    gather_msgs: AtomicU64,
+    iterations: AtomicU64,
+    /// nanoseconds workers spent in local compute
+    worker_compute_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn add_broadcast(&self, bytes: u64) {
+        self.broadcast_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.broadcast_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_gather(&self, bytes: u64) {
+        self.gather_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.gather_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_iteration(&self) {
+        self.iterations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_worker_compute(&self, dur: std::time::Duration) {
+        self.worker_compute_ns
+            .fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn broadcast_bytes(&self) -> u64 {
+        self.broadcast_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn gather_bytes(&self) -> u64 {
+        self.gather_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn broadcast_msgs(&self) -> u64 {
+        self.broadcast_msgs.load(Ordering::Relaxed)
+    }
+
+    pub fn gather_msgs(&self) -> u64 {
+        self.gather_msgs.load(Ordering::Relaxed)
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.iterations.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_compute_secs(&self) -> f64 {
+        self.worker_compute_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "iters={} bcast={} ({} msgs) gather={} ({} msgs) worker_compute={:.2}s",
+            self.iterations(),
+            crate::util::timing::fmt_bytes(self.broadcast_bytes()),
+            self.broadcast_msgs(),
+            crate::util::timing::fmt_bytes(self.gather_bytes()),
+            self.gather_msgs(),
+            self.worker_compute_secs(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let m = Metrics::default();
+        m.add_broadcast(100);
+        m.add_broadcast(50);
+        m.add_gather(8);
+        m.add_iteration();
+        assert_eq!(m.broadcast_bytes(), 150);
+        assert_eq!(m.broadcast_msgs(), 2);
+        assert_eq!(m.gather_bytes(), 8);
+        assert_eq!(m.iterations(), 1);
+        assert!(m.summary().contains("iters=1"));
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::default());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.add_gather(3);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.gather_bytes(), 24_000);
+        assert_eq!(m.gather_msgs(), 8_000);
+    }
+}

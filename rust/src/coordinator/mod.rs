@@ -1,0 +1,24 @@
+//! oASIS-P — the distributed leader/worker runtime (paper Alg. 2, §III-C).
+//!
+//! The paper runs oASIS over p MPI nodes: the dataset is sharded
+//! column-wise, every node keeps its slice of C and R plus a replica of
+//! W⁻¹ and Z_Λ, and each iteration exchanges exactly one gathered Δ-argmax
+//! and one broadcast data point — the low-communication property that makes
+//! the method practical at millions of points.
+//!
+//! Here each "node" is an OS thread with private state; MPI's
+//! `Broadcast`/`Gather` become explicit message channels ([`comm`]) whose
+//! payload bytes are metered ([`metrics`]), so Table III's
+//! communication-bound behaviour is preserved and measurable. The selection
+//! sequence is bit-identical to the sequential sampler for every worker
+//! count (tested in rust/tests/coordinator_dist.rs).
+
+pub mod comm;
+pub mod config;
+pub mod leader;
+pub mod metrics;
+pub mod worker;
+
+pub use config::{FailureSpec, OasisPConfig};
+pub use leader::{run_oasis_p, OasisPReport};
+pub use metrics::Metrics;

@@ -1,0 +1,296 @@
+//! The oASIS-P worker node (paper Alg. 2, "On each node (i)" blocks).
+//!
+//! Each worker owns a contiguous shard Z_(i) of the dataset and maintains:
+//! * `d_(i)`  — local kernel diagonal,
+//! * `C_(i)`  — local rows of the sampled columns (stored column-major),
+//! * `R_(i)`  — local columns of R = W⁻¹Cᵀ,
+//! * a replica of `W⁻¹` and of the selected points Z_Λ.
+//!
+//! Per `Selected` broadcast the worker performs the paper's node-local
+//! updates: kernel column over its shard, Eq. 5 on the W⁻¹ replica, Eq. 6
+//! on R_(i), then computes its local Δ block and replies with the shard
+//! argmax — exactly one small message each way per iteration.
+
+use super::comm::{FromWorker, LeaderHandle, ToWorker, WorkerInbox};
+use super::config::FailureSpec;
+use super::metrics::Metrics;
+use crate::data::Shard;
+use crate::kernels::Kernel;
+use std::sync::Arc;
+
+/// Long-lived state of one worker thread.
+pub struct Worker {
+    pub id: usize,
+    shard: Shard,
+    kernel: Arc<dyn Kernel + Send + Sync>,
+    leader: LeaderHandle,
+    metrics: Arc<Metrics>,
+    max_cols: usize,
+    failure: Option<FailureSpec>,
+
+    // --- algorithm state ---
+    d: Vec<f64>,
+    /// local C, column-major: column t at c[t*ln .. (t+1)*ln]
+    c: Vec<f64>,
+    /// local R, row-major rows of length ln
+    r: Vec<f64>,
+    /// W⁻¹ replica, strided by max_cols
+    winv: Vec<f64>,
+    /// replica of the selected points (in selection order)
+    z_sel: Vec<Vec<f64>>,
+    k: usize,
+    /// which local indices are already selected
+    selected_local: Vec<bool>,
+    /// iteration counter for fault injection
+    iteration: usize,
+    /// scratch
+    diff: Vec<f64>,
+    delta: Vec<f64>,
+}
+
+impl Worker {
+    pub fn new(
+        id: usize,
+        shard: Shard,
+        kernel: Arc<dyn Kernel + Send + Sync>,
+        leader: LeaderHandle,
+        metrics: Arc<Metrics>,
+        max_cols: usize,
+        failure: Option<FailureSpec>,
+    ) -> Worker {
+        let ln = shard.len();
+        let d = (0..ln)
+            .map(|i| kernel.diag_value(shard.points.point(i)))
+            .collect();
+        Worker {
+            id,
+            shard,
+            kernel,
+            leader,
+            metrics,
+            max_cols,
+            failure,
+            d,
+            c: Vec::new(),
+            r: Vec::new(),
+            winv: vec![0.0; max_cols * max_cols],
+            z_sel: Vec::new(),
+            k: 0,
+            selected_local: vec![false; ln],
+            iteration: 0,
+            diff: vec![0.0; ln],
+            delta: vec![0.0; ln],
+        }
+    }
+
+    /// The worker thread body: process leader messages until Finish.
+    pub fn run(mut self, inbox: WorkerInbox) {
+        while let Ok(msg) = inbox.recv() {
+            let t0 = std::time::Instant::now();
+            match msg {
+                ToWorker::FetchPoint { global_idx } => {
+                    let local = self.shard.local(global_idx);
+                    let point = self.shard.points.point(local).to_vec();
+                    self.leader.send(FromWorker::Point { global_idx, point });
+                }
+                ToWorker::Init { seed_indices, seed_points, winv0 } => {
+                    self.handle_init(&seed_indices, &seed_points, &winv0);
+                    self.send_argmax();
+                }
+                ToWorker::Selected { global_idx, point, delta } => {
+                    self.iteration += 1;
+                    if let Some(f) = self.failure {
+                        if f.worker == self.id && self.iteration >= f.at_iteration {
+                            self.leader.send(FromWorker::Failed {
+                                worker: self.id,
+                                message: "injected fault".into(),
+                            });
+                            return; // simulate a crashed node
+                        }
+                    }
+                    self.handle_selected(global_idx, &point, delta);
+                    self.send_argmax();
+                }
+                ToWorker::Finish => {
+                    self.send_columns();
+                    return;
+                }
+            }
+            self.metrics.add_worker_compute(t0.elapsed());
+        }
+    }
+
+    /// Paper Alg. 2 init block: local C, R from the seed state.
+    fn handle_init(
+        &mut self,
+        seed_indices: &[usize],
+        seed_points: &[Vec<f64>],
+        winv0: &[f64],
+    ) {
+        let ln = self.shard.len();
+        let k0 = seed_indices.len();
+        self.k = k0;
+        self.z_sel = seed_points.to_vec();
+        // C_(i): kernel of each local point against each seed point
+        self.c.resize(k0 * ln, 0.0);
+        for (t, sp) in seed_points.iter().enumerate() {
+            for i in 0..ln {
+                self.c[t * ln + i] = self.kernel.eval(self.shard.points.point(i), sp);
+            }
+        }
+        // W⁻¹ replica
+        let l = self.max_cols;
+        for i in 0..k0 {
+            for j in 0..k0 {
+                self.winv[i * l + j] = winv0[i * k0 + j];
+            }
+        }
+        // R_(i) = W⁻¹ C_(i)ᵀ
+        self.r.resize(k0 * ln, 0.0);
+        for t in 0..k0 {
+            for i in 0..ln {
+                let mut acc = 0.0;
+                for u in 0..k0 {
+                    acc += self.winv[t * l + u] * self.c[u * ln + i];
+                }
+                self.r[t * ln + i] = acc;
+            }
+        }
+        // mark locally-owned seed columns
+        for &g in seed_indices {
+            if self.shard.owns(g) {
+                let li = self.shard.local(g);
+                self.selected_local[li] = true;
+            }
+        }
+    }
+
+    /// Paper Alg. 2 per-iteration block: incorporate the broadcast point.
+    fn handle_selected(&mut self, global_idx: usize, point: &[f64], delta: f64) {
+        let ln = self.shard.len();
+        let k = self.k;
+        let l = self.max_cols;
+        let s = 1.0 / delta;
+        // b = g(Z_Λ, z_new) — computable from the replica, no comms
+        let b: Vec<f64> = self.z_sel.iter().map(|zp| self.kernel.eval(zp, point)).collect();
+        // q = W⁻¹ b — uses the same unrolled dot kernel as the sequential
+        // sampler so rounding (and thus near-threshold selections) agree
+        // bit-for-bit
+        let mut q = vec![0.0; k];
+        for t in 0..k {
+            let row = &self.winv[t * l..t * l + k];
+            q[t] = crate::linalg::matrix::dot(row, &b);
+        }
+        // local new column c_new = g(Z_(i), z_new)
+        let mut c_new = vec![0.0; ln];
+        for (i, cv) in c_new.iter_mut().enumerate() {
+            *cv = self.kernel.eval(self.shard.points.point(i), point);
+        }
+        // diff = C_(i) q − c_new  (local slice of Cq − c_new; t-outer
+        // streaming, see EXPERIMENTS.md §Perf)
+        for (o, &cv) in self.diff.iter_mut().zip(&c_new) {
+            *o = -cv;
+        }
+        for (t, &qt) in q.iter().enumerate() {
+            if qt == 0.0 {
+                continue;
+            }
+            let ct = &self.c[t * ln..(t + 1) * ln];
+            for (o, &cv) in self.diff.iter_mut().zip(ct) {
+                *o += qt * cv;
+            }
+        }
+        // Eq. 5 on the W⁻¹ replica
+        for i in 0..k {
+            for j in 0..k {
+                self.winv[i * l + j] += s * q[i] * q[j];
+            }
+            self.winv[i * l + k] = -s * q[i];
+            self.winv[k * l + i] = -s * q[i];
+        }
+        self.winv[k * l + k] = s;
+        // Eq. 6 on R_(i)
+        for t in 0..k {
+            let f = s * q[t];
+            let row = &mut self.r[t * ln..(t + 1) * ln];
+            for (o, &dv) in row.iter_mut().zip(&self.diff) {
+                *o += f * dv;
+            }
+        }
+        self.r.resize((k + 1) * ln, 0.0);
+        for i in 0..ln {
+            self.r[k * ln + i] = -s * self.diff[i];
+        }
+        // append column, replica bookkeeping
+        self.c.extend_from_slice(&c_new);
+        self.z_sel.push(point.to_vec());
+        self.k = k + 1;
+        if self.shard.owns(global_idx) {
+            self.selected_local[self.shard.local(global_idx)] = true;
+        }
+    }
+
+    /// Local Δ = d − colsum(C∘R) and shard argmax → leader.
+    fn send_argmax(&mut self) {
+        let ln = self.shard.len();
+        let k = self.k;
+        // t-outer streaming sweep (EXPERIMENTS.md §Perf)
+        self.delta.copy_from_slice(&self.d);
+        for t in 0..k {
+            let ct = &self.c[t * ln..(t + 1) * ln];
+            let rt = &self.r[t * ln..(t + 1) * ln];
+            for ((o, &cv), &rv) in self.delta.iter_mut().zip(ct).zip(rt) {
+                *o -= cv * rv;
+            }
+        }
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..ln {
+            if self.selected_local[i] {
+                continue;
+            }
+            let a = self.delta[i].abs();
+            match best {
+                Some((_, bd)) if self.delta_abs(bd) >= a => {}
+                _ => best = Some((self.shard.start + i, self.delta[i])),
+            }
+        }
+        let d_max = self.d.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        self.leader.send(FromWorker::Argmax { worker: self.id, best, d_max });
+    }
+
+    #[inline]
+    fn delta_abs(&self, d: f64) -> f64 {
+        d.abs()
+    }
+
+    /// Final gather: the local C block (row-major local_n × k).
+    fn send_columns(&mut self) {
+        let ln = self.shard.len();
+        let k = self.k;
+        let mut block = vec![0.0; ln * k];
+        for i in 0..ln {
+            for t in 0..k {
+                block[i * k + t] = self.c[t * ln + i];
+            }
+        }
+        let winv = if self.id == 0 {
+            let l = self.max_cols;
+            let mut w = vec![0.0; k * k];
+            for i in 0..k {
+                for j in 0..k {
+                    w[i * k + j] = self.winv[i * l + j];
+                }
+            }
+            Some(w)
+        } else {
+            None
+        };
+        self.leader.send(FromWorker::Columns {
+            worker: self.id,
+            start: self.shard.start,
+            local_n: ln,
+            c_block: block,
+            winv,
+        });
+    }
+}

@@ -1,0 +1,124 @@
+//! The point container: n points of dimension m, stored point-major so a
+//! point is one contiguous slice (cache-friendly for kernel evaluation).
+//! The paper arranges data columnwise as Z ∈ R^{m×n}; `Dataset` is Zᵀ.
+
+/// A dataset of `n` points in `R^dim`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dataset {
+    dim: usize,
+    data: Vec<f64>,
+}
+
+impl Dataset {
+    /// Create from a flat point-major buffer (`data.len() == n*dim`).
+    pub fn from_flat(dim: usize, data: Vec<f64>) -> Dataset {
+        assert!(dim > 0 && data.len() % dim == 0);
+        Dataset { dim, data }
+    }
+
+    /// Create from per-point rows.
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Dataset {
+        assert!(!rows.is_empty());
+        let dim = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * dim);
+        for r in rows {
+            assert_eq!(r.len(), dim, "ragged rows");
+            data.extend_from_slice(&r);
+        }
+        Dataset { dim, data }
+    }
+
+    /// Pre-sized zero dataset (filled by generators).
+    pub fn zeros(n: usize, dim: usize) -> Dataset {
+        Dataset { dim, data: vec![0.0; n * dim] }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn point_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn flat(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// A new dataset containing the selected points (e.g. Z_Λ).
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        let mut out = Dataset::zeros(idx.len(), self.dim);
+        for (r, &i) in idx.iter().enumerate() {
+            out.point_mut(r).copy_from_slice(self.point(i));
+        }
+        out
+    }
+
+    /// Contiguous sub-range of points [start, end) as an owned dataset.
+    pub fn slice(&self, start: usize, end: usize) -> Dataset {
+        assert!(start <= end && end <= self.n());
+        Dataset {
+            dim: self.dim,
+            data: self.data[start * self.dim..end * self.dim].to_vec(),
+        }
+    }
+
+    /// Append one point.
+    pub fn push(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.dim);
+        self.data.extend_from_slice(p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing() {
+        let ds = Dataset::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.point(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn select_and_slice() {
+        let ds = Dataset::from_rows(vec![
+            vec![0.0],
+            vec![1.0],
+            vec![2.0],
+            vec![3.0],
+        ]);
+        assert_eq!(ds.select(&[3, 0]).point(0), &[3.0]);
+        let s = ds.slice(1, 3);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.point(0), &[1.0]);
+    }
+
+    #[test]
+    fn push_grows() {
+        let mut ds = Dataset::zeros(0, 3);
+        ds.push(&[1.0, 2.0, 3.0]);
+        assert_eq!(ds.n(), 1);
+        assert_eq!(ds.point(0), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_rejected() {
+        Dataset::from_rows(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+}

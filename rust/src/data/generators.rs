@@ -1,0 +1,471 @@
+//! Synthetic dataset generators matching the paper's evaluation workloads.
+//!
+//! Where the paper used downloadable datasets that are unavailable offline
+//! (Abalone, MNIST, Salinas, Light Field, Tiny Images) the generators below
+//! reproduce the *structural* properties Nyström approximation is sensitive
+//! to — size, dimensionality, cluster count, and intrinsic rank / spectral
+//! decay — per the substitution table in DESIGN.md §6.
+
+use super::Dataset;
+use crate::util::rng::Pcg64;
+
+/// Two interlocking moons in 2-D (paper §V-B-a and §V-D-g).
+///
+/// `noise` is the Gaussian jitter std as a fraction of the unit radius.
+pub fn two_moons(n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let mut ds = Dataset::zeros(n, 2);
+    for i in 0..n {
+        let upper = i % 2 == 0;
+        let t = std::f64::consts::PI * rng.f64();
+        let (x, y) = if upper {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        let p = ds.point_mut(i);
+        p[0] = x + noise * rng.normal();
+        p[1] = y + noise * rng.normal();
+    }
+    ds
+}
+
+/// BORG: Binary Organization of Random Gaussians (paper §V-B-c).
+///
+/// Points clustered tightly around each vertex of a `dim`-dimensional unit
+/// cube: around each vertex v, `per_vertex` points ~ N(v, σ²I). The paper
+/// uses dim=8, per_vertex=30, σ²=0.1 → 7,680 points.
+pub fn borg(dim: usize, per_vertex: usize, sigma_sq: f64, seed: u64) -> Dataset {
+    assert!(dim <= 20, "borg: 2^dim vertices explode past dim 20");
+    let mut rng = Pcg64::new(seed);
+    let vertices = 1usize << dim;
+    let n = vertices * per_vertex;
+    let sigma = sigma_sq.sqrt();
+    let mut ds = Dataset::zeros(n, dim);
+    let mut i = 0;
+    for v in 0..vertices {
+        for _ in 0..per_vertex {
+            let p = ds.point_mut(i);
+            for (d, x) in p.iter_mut().enumerate() {
+                let vert = ((v >> d) & 1) as f64;
+                *x = vert + sigma * rng.normal();
+            }
+            i += 1;
+        }
+    }
+    ds
+}
+
+/// The Fig. 5 synthetic: a 2-D Gaussian centered at (0,0) plus a 3-D
+/// Gaussian centered at (0,0,1), embedded together in R³. The resulting
+/// Gram matrix G = ZᵀZ has rank exactly 3 (generically), which oASIS must
+/// recover in 3 steps (Theorem 1).
+pub fn gauss_2d_plus_3d(n_2d: usize, n_3d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let mut ds = Dataset::zeros(n_2d + n_3d, 3);
+    for i in 0..n_2d {
+        let p = ds.point_mut(i);
+        p[0] = rng.normal();
+        p[1] = rng.normal();
+        p[2] = 0.0;
+    }
+    for i in 0..n_3d {
+        let p = ds.point_mut(n_2d + i);
+        p[0] = rng.normal();
+        p[1] = rng.normal();
+        p[2] = 1.0 + rng.normal();
+    }
+    ds
+}
+
+/// Abalone-like (paper §V-B-b: 4,177 points, 8 physical measurements).
+///
+/// Three overlapping "sex" classes (infant/female/male) whose 8 features
+/// are strongly correlated with a latent size variable — matching the real
+/// dataset's structure of correlated morphometrics with mild clustering.
+pub fn abalone_like(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let mut ds = Dataset::zeros(n, 8);
+    // per-class latent size distribution (infants smaller)
+    let class_mu = [0.35, 0.55, 0.60];
+    let class_sd = [0.08, 0.10, 0.10];
+    // feature = a * size + b + noise  (a, b per feature, roughly matching
+    // length/diameter/height/4 weights/rings of the UCI set)
+    let coef = [
+        (1.00, 0.00, 0.02),
+        (0.80, 0.01, 0.02),
+        (0.28, 0.00, 0.01),
+        (2.20, -0.30, 0.10),
+        (0.95, -0.12, 0.05),
+        (0.49, -0.07, 0.03),
+        (0.65, -0.09, 0.04),
+        (14.0, 2.00, 2.00),
+    ];
+    for i in 0..n {
+        let c = rng.below(3);
+        let size = (class_mu[c] + class_sd[c] * rng.normal()).max(0.05);
+        let p = ds.point_mut(i);
+        for (f, &(a, b, s)) in coef.iter().enumerate() {
+            p[f] = (a * size + b + s * rng.normal()).max(0.0);
+        }
+    }
+    ds
+}
+
+/// A mixture of isotropic Gaussian clouds (general-purpose cluster data).
+pub fn gaussian_clusters(
+    n: usize,
+    dim: usize,
+    k: usize,
+    spread: f64,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    // cluster centers uniform in [0, 10]^dim
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..dim).map(|_| rng.range(0.0, 10.0)).collect())
+        .collect();
+    let mut ds = Dataset::zeros(n, dim);
+    for i in 0..n {
+        let c = &centers[i % k];
+        let p = ds.point_mut(i);
+        for (d, x) in p.iter_mut().enumerate() {
+            *x = c[d] + spread * rng.normal();
+        }
+    }
+    ds
+}
+
+/// MNIST-like (paper §V-C-d: 50,000 points, 784 dims, intrinsic rank ~10).
+///
+/// Ten smooth random "digit prototypes" in `dim` dimensions; each point is
+/// a prototype plus small within-class deformation along a low-dimensional
+/// class subspace plus pixel noise — giving the strong 10-cluster low-rank
+/// structure that makes MNIST similarity matrices low-rank.
+pub fn mnist_like(n: usize, dim: usize, seed: u64) -> Dataset {
+    low_rank_classes(n, dim, 10, 6, 0.35, 0.04, seed)
+}
+
+/// Salinas-like hyperspectral (paper §V-C-e: 54,129 pixels, 204 bands,
+/// 16 crop classes). Spectra are smooth over the band axis: each class
+/// endmember is a random smooth curve, each pixel a noisy scaled endmember
+/// (linear mixing with a small second component).
+pub fn salinas_like(n: usize, bands: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let classes = 16;
+    // smooth endmembers: random walk smoothed by a 9-tap moving average
+    let mut endmembers = vec![vec![0.0; bands]; classes];
+    for e in endmembers.iter_mut() {
+        let mut walk = vec![0.0; bands];
+        let mut acc: f64 = rng.range(0.3, 0.7);
+        for w in walk.iter_mut() {
+            acc += 0.05 * rng.normal();
+            *w = acc;
+        }
+        for b in 0..bands {
+            let lo = b.saturating_sub(4);
+            let hi = (b + 5).min(bands);
+            e[b] = walk[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
+        }
+    }
+    let mut ds = Dataset::zeros(n, bands);
+    for i in 0..n {
+        let c = rng.below(classes);
+        let c2 = rng.below(classes);
+        let alpha = rng.range(0.85, 1.15); // illumination scaling
+        let mix = rng.range(0.0, 0.1); // small second endmember
+        let p = ds.point_mut(i);
+        for b in 0..bands {
+            p[b] = alpha * endmembers[c][b]
+                + mix * endmembers[c2][b]
+                + 0.01 * rng.normal();
+        }
+    }
+    ds
+}
+
+/// Light-field-like patches (paper §V-C-f: 85,265 patches of dim 400 from
+/// a 4-D light field). Patches live near a low-dimensional manifold:
+/// each patch is a shifted/oriented smooth edge sampled on a 4×4 spatial ×
+/// 5×5 angular grid, parameterized by (orientation, offset, parallax).
+pub fn lightfield_like(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let dim = 4 * 4 * 5 * 5; // 400
+    let mut ds = Dataset::zeros(n, dim);
+    for i in 0..n {
+        let theta = rng.range(0.0, std::f64::consts::PI);
+        let offset = rng.range(-2.0, 2.0);
+        let parallax = rng.range(-0.5, 0.5);
+        let contrast = rng.range(0.5, 1.5);
+        let (ct, st) = (theta.cos(), theta.sin());
+        let p = ds.point_mut(i);
+        let mut idx = 0;
+        for u in 0..5 {
+            for v in 0..5 {
+                // angular coordinates shift the edge by parallax
+                let du = (u as f64 - 2.0) * parallax;
+                let dv = (v as f64 - 2.0) * parallax;
+                for x in 0..4 {
+                    for y in 0..4 {
+                        let xx = x as f64 - 1.5 + du;
+                        let yy = y as f64 - 1.5 + dv;
+                        let d = ct * xx + st * yy - offset;
+                        // smooth edge profile
+                        p[idx] = contrast * (d / 0.75).tanh() + 0.02 * rng.normal();
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    ds
+}
+
+/// Tiny-Images-like (paper §V-D-h: up to 4M one-channel 32×32 images).
+/// Images are random smooth textures: a few low-frequency 2-D cosines with
+/// random phase/amplitude plus noise — giving the heavy low-frequency
+/// spectral concentration of natural tiny images. `dim` defaults to 1024
+/// in the callers; smaller dims keep scaled runs cheap.
+pub fn tiny_images_like(n: usize, side: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let dim = side * side;
+    let modes = 6;
+    let mut ds = Dataset::zeros(n, dim);
+    for i in 0..n {
+        // random low-frequency mixture
+        let mut freqs = Vec::with_capacity(modes);
+        for _ in 0..modes {
+            freqs.push((
+                rng.below(3) as f64 + 1.0,
+                rng.below(3) as f64 + 1.0,
+                rng.range(0.0, 2.0 * std::f64::consts::PI),
+                rng.range(0.2, 1.0),
+            ));
+        }
+        let base = rng.range(0.2, 0.8);
+        let p = ds.point_mut(i);
+        for x in 0..side {
+            for y in 0..side {
+                let mut v = base;
+                for &(fx, fy, phase, amp) in &freqs {
+                    v += amp
+                        * ((fx * x as f64 + fy * y as f64)
+                            * std::f64::consts::PI
+                            / side as f64
+                            + phase)
+                            .cos()
+                        / modes as f64;
+                }
+                p[x * side + y] = v + 0.02 * rng.normal();
+            }
+        }
+    }
+    ds
+}
+
+/// Union of k random low-dimensional subspaces in R^dim — the canonical
+/// sparse-subspace-clustering workload ([30], SEED §II-E): point i lies on
+/// subspace i mod k, with small ambient noise. Self-expressive methods
+/// separate these clusters because each point is sparsely representable by
+/// points from its own subspace only.
+pub fn union_of_subspaces(
+    n: usize,
+    dim: usize,
+    k: usize,
+    sub_dim: usize,
+    noise: f64,
+    seed: u64,
+) -> Dataset {
+    assert!(sub_dim <= dim);
+    let mut rng = Pcg64::new(seed);
+    // random orthonormal-ish bases (Gaussian — near-orthogonal in high dim)
+    let mut bases = vec![vec![0.0; sub_dim * dim]; k];
+    for b in bases.iter_mut() {
+        rng.fill_normal(b);
+        let norm = (dim as f64).sqrt();
+        for x in b.iter_mut() {
+            *x /= norm;
+        }
+    }
+    let mut ds = Dataset::zeros(n, dim);
+    for i in 0..n {
+        let b = &bases[i % k];
+        let p = ds.point_mut(i);
+        for r in 0..sub_dim {
+            let w = rng.normal();
+            let row = &b[r * dim..(r + 1) * dim];
+            for (x, &bv) in p.iter_mut().zip(row) {
+                *x += w * bv;
+            }
+        }
+        for x in p.iter_mut() {
+            *x += noise * rng.normal();
+        }
+    }
+    ds
+}
+
+/// Shared machinery: k classes, each with a prototype and an r-dimensional
+/// within-class subspace; points = prototype + subspace deformation + noise.
+fn low_rank_classes(
+    n: usize,
+    dim: usize,
+    classes: usize,
+    class_rank: usize,
+    within_scale: f64,
+    noise: f64,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let mut prototypes = vec![vec![0.0; dim]; classes];
+    for p in prototypes.iter_mut() {
+        rng.fill_normal(p);
+        // smooth the prototype a little (images are smooth)
+        for d in 1..dim {
+            p[d] = 0.6 * p[d] + 0.4 * p[d - 1];
+        }
+    }
+    let mut bases = vec![vec![0.0; class_rank * dim]; classes];
+    for b in bases.iter_mut() {
+        rng.fill_normal(b);
+    }
+    let mut ds = Dataset::zeros(n, dim);
+    for i in 0..n {
+        let c = i % classes;
+        let p = ds.point_mut(i);
+        p.copy_from_slice(&prototypes[c]);
+        for r in 0..class_rank {
+            let w = within_scale * rng.normal() / (class_rank as f64).sqrt();
+            let row = &bases[c][r * dim..(r + 1) * dim];
+            for (x, &b) in p.iter_mut().zip(row) {
+                *x += w * b;
+            }
+        }
+        for x in p.iter_mut() {
+            *x += noise * rng.normal();
+        }
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_moons_shape_and_determinism() {
+        let a = two_moons(100, 0.05, 42);
+        let b = two_moons(100, 0.05, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.n(), 100);
+        assert_eq!(a.dim(), 2);
+        // points near the two unit circles: radius from either center ≈ 1
+        for i in 0..100 {
+            let p = a.point(i);
+            let r1 = (p[0].powi(2) + p[1].powi(2)).sqrt();
+            let r2 = ((p[0] - 1.0).powi(2) + (p[1] - 0.5).powi(2)).sqrt();
+            assert!(
+                (r1 - 1.0).abs() < 0.3 || (r2 - 1.0).abs() < 0.3,
+                "point {i} off-moon"
+            );
+        }
+    }
+
+    #[test]
+    fn borg_counts_and_vertices() {
+        let ds = borg(3, 5, 0.01, 1);
+        assert_eq!(ds.n(), 8 * 5);
+        assert_eq!(ds.dim(), 3);
+        // every point close to a binary vertex
+        for i in 0..ds.n() {
+            for &x in ds.point(i) {
+                assert!((x - 0.0).abs() < 0.5 || (x - 1.0).abs() < 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn gauss_2d_plus_3d_gram_rank_3() {
+        let ds = gauss_2d_plus_3d(30, 30, 2);
+        let g = crate::kernels::kernel_matrix(&ds, &crate::kernels::Linear);
+        assert_eq!(crate::linalg::eig::psd_rank(&g, 1e-9), 3);
+    }
+
+    #[test]
+    fn abalone_like_positive_correlated() {
+        let ds = abalone_like(500, 3);
+        assert_eq!(ds.dim(), 8);
+        // feature 0 (length) and 3 (whole weight) strongly correlated
+        let (mut sx, mut sy, mut sxx, mut syy, mut sxy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        let n = ds.n() as f64;
+        for i in 0..ds.n() {
+            let p = ds.point(i);
+            sx += p[0];
+            sy += p[3];
+            sxx += p[0] * p[0];
+            syy += p[3] * p[3];
+            sxy += p[0] * p[3];
+        }
+        let corr = (n * sxy - sx * sy)
+            / ((n * sxx - sx * sx).sqrt() * (n * syy - sy * sy).sqrt());
+        assert!(corr > 0.8, "corr {corr}");
+    }
+
+    #[test]
+    fn mnist_like_is_low_rank() {
+        // 10 classes × rank-6 subspaces + prototype ⇒ Gram spectrum decays
+        let ds = mnist_like(200, 64, 4);
+        let g = crate::kernels::kernel_matrix(&ds, &crate::kernels::Linear);
+        let eig = crate::linalg::sym_eig(&g);
+        let total: f64 = eig.vals.iter().filter(|&&v| v > 0.0).sum();
+        let top: f64 = eig.vals.iter().take(80).filter(|&&v| v > 0.0).sum();
+        assert!(top / total > 0.95, "top-80 mass {}", top / total);
+    }
+
+    #[test]
+    fn salinas_like_smooth_spectra() {
+        let ds = salinas_like(50, 64, 5);
+        // adjacent-band differences much smaller than the value scale
+        for i in 0..50 {
+            let p = ds.point(i);
+            let scale: f64 =
+                p.iter().map(|x| x.abs()).sum::<f64>() / p.len() as f64;
+            let rough: f64 = p.windows(2).map(|w| (w[1] - w[0]).abs()).sum::<f64>()
+                / (p.len() - 1) as f64;
+            assert!(rough < 0.3 * scale.max(0.1), "rough {rough} scale {scale}");
+        }
+    }
+
+    #[test]
+    fn lightfield_dim_400() {
+        let ds = lightfield_like(10, 6);
+        assert_eq!(ds.dim(), 400);
+    }
+
+    #[test]
+    fn tiny_images_shape() {
+        let ds = tiny_images_like(10, 8, 7);
+        assert_eq!(ds.dim(), 64);
+        // values roughly in a bounded intensity range
+        for i in 0..10 {
+            for &x in ds.point(i) {
+                assert!((-2.0..3.0).contains(&x));
+            }
+        }
+    }
+
+    #[test]
+    fn union_of_subspaces_rank_structure() {
+        // k subspaces of dim r ⇒ Gram rank ≤ k·r (plus noise floor)
+        let ds = union_of_subspaces(120, 24, 4, 3, 0.0, 8);
+        let g = crate::kernels::kernel_matrix(&ds, &crate::kernels::Linear);
+        assert_eq!(crate::linalg::eig::psd_rank(&g, 1e-9), 12);
+    }
+
+    #[test]
+    fn gaussian_clusters_deterministic() {
+        let a = gaussian_clusters(60, 4, 5, 0.3, 9);
+        let b = gaussian_clusters(60, 4, 5, 0.3, 9);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,9 @@
+//! Datasets: the point container, the synthetic generators matching the
+//! paper's evaluation workloads, and sharding for oASIS-P.
+
+pub mod dataset;
+pub mod generators;
+pub mod shard;
+
+pub use dataset::Dataset;
+pub use shard::{shard_ranges, Shard};

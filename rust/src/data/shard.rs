@@ -1,0 +1,108 @@
+//! Dataset sharding for oASIS-P: contiguous column blocks of Z per node,
+//! exactly as the paper's Algorithm 2 loads "separate n/p column blocks of
+//! Z into each node".
+
+use super::Dataset;
+
+/// One worker's shard: the points it owns and their global index range.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub worker: usize,
+    /// global index of the first point in this shard
+    pub start: usize,
+    pub points: Dataset,
+}
+
+impl Shard {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.points.n()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Does this shard own global index `g`?
+    #[inline]
+    pub fn owns(&self, g: usize) -> bool {
+        g >= self.start && g < self.start + self.len()
+    }
+
+    /// Global → local index.
+    #[inline]
+    pub fn local(&self, g: usize) -> usize {
+        debug_assert!(self.owns(g));
+        g - self.start
+    }
+}
+
+/// The contiguous [start, end) global ranges for `p` shards of `n` points.
+pub fn shard_ranges(n: usize, p: usize) -> Vec<std::ops::Range<usize>> {
+    crate::util::parallel::chunk_ranges(n, p)
+}
+
+/// Split a dataset into `p` shards (cloning the point data — each "node"
+/// owns its block, as in the distributed setting being simulated).
+pub fn split(ds: &Dataset, p: usize) -> Vec<Shard> {
+    shard_ranges(ds.n(), p)
+        .into_iter()
+        .enumerate()
+        .map(|(worker, r)| Shard {
+            worker,
+            start: r.start,
+            points: ds.slice(r.start, r.end),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+
+    #[test]
+    fn shards_partition_exactly() {
+        let ds = two_moons(103, 0.05, 1);
+        let shards = split(&ds, 4);
+        assert_eq!(shards.len(), 4);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 103);
+        // ownership is a partition
+        for g in 0..103 {
+            let owners = shards.iter().filter(|s| s.owns(g)).count();
+            assert_eq!(owners, 1, "index {g}");
+        }
+    }
+
+    #[test]
+    fn shard_points_match_source() {
+        let ds = two_moons(50, 0.05, 2);
+        for s in split(&ds, 3) {
+            for l in 0..s.len() {
+                assert_eq!(s.points.point(l), ds.point(s.start + l));
+            }
+        }
+    }
+
+    #[test]
+    fn local_index_roundtrip() {
+        let ds = two_moons(20, 0.05, 3);
+        let shards = split(&ds, 6);
+        for s in &shards {
+            for g in s.start..s.start + s.len() {
+                assert_eq!(s.start + s.local(g), g);
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_points() {
+        let ds = two_moons(3, 0.05, 4);
+        let shards = split(&ds, 8);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 3);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+    }
+}

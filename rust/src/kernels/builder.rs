@@ -1,0 +1,101 @@
+//! Kernel matrix / column construction (threaded).
+
+use super::functions::Kernel;
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::util::parallel;
+
+/// Full n×n kernel matrix (only for datasets small enough to hold it —
+/// the Table I / Fig. 6–7 "explicit" experiment class).
+pub fn kernel_matrix(ds: &Dataset, k: &dyn Kernel) -> Mat {
+    let n = ds.n();
+    let mut g = Mat::zeros(n, n);
+    let threads = parallel::default_threads();
+    parallel::for_each_chunk_mut(&mut g.data, n, threads, |range, chunk| {
+        for (local, i) in range.clone().enumerate() {
+            let row = &mut chunk[local * n..(local + 1) * n];
+            let zi = ds.point(i);
+            for (j, out) in row.iter_mut().enumerate() {
+                *out = k.eval(zi, ds.point(j));
+            }
+        }
+    });
+    // enforce exact symmetry (eval order can differ in the last ulp)
+    for i in 0..n {
+        for j in i + 1..n {
+            let v = g.data[i * n + j];
+            g.data[j * n + i] = v;
+        }
+    }
+    g
+}
+
+/// Column j of the kernel matrix, written into `out` (length n).
+pub fn kernel_column_into(ds: &Dataset, k: &dyn Kernel, j: usize, out: &mut [f64]) {
+    let n = ds.n();
+    assert_eq!(out.len(), n);
+    let zj = ds.point(j);
+    let threads = if n >= 4096 { parallel::default_threads() } else { 1 };
+    parallel::for_each_chunk_mut(out, 1, threads, |range, chunk| {
+        for (local, i) in range.clone().enumerate() {
+            chunk[local] = k.eval(ds.point(i), zj);
+        }
+    });
+}
+
+/// The diagonal of the kernel matrix.
+pub fn kernel_diag(ds: &Dataset, k: &dyn Kernel) -> Vec<f64> {
+    (0..ds.n()).map(|i| k.diag_value(ds.point(i))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::functions::{Gaussian, Linear};
+
+    #[test]
+    fn matrix_is_symmetric_with_unit_diag() {
+        let ds = two_moons(60, 0.05, 1);
+        let g = kernel_matrix(&ds, &Gaussian::new(1.0));
+        for i in 0..60 {
+            assert_eq!(g.at(i, i), 1.0);
+            for j in 0..60 {
+                assert_eq!(g.at(i, j), g.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn column_matches_matrix() {
+        let ds = two_moons(40, 0.05, 2);
+        let k = Gaussian::new(0.7);
+        let g = kernel_matrix(&ds, &k);
+        let mut col = vec![0.0; 40];
+        for j in [0usize, 17, 39] {
+            kernel_column_into(&ds, &k, j, &mut col);
+            for i in 0..40 {
+                assert_eq!(col[i], g.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn diag_matches_matrix() {
+        let ds = two_moons(25, 0.05, 3);
+        let k = Linear;
+        let g = kernel_matrix(&ds, &k);
+        let d = kernel_diag(&ds, &k);
+        for i in 0..25 {
+            assert!((d[i] - g.at(i, i)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn gram_matrix_is_psd() {
+        let ds = two_moons(30, 0.05, 4);
+        let g = kernel_matrix(&ds, &Linear);
+        let eig = crate::linalg::sym_eig(&g);
+        assert!(eig.vals.iter().all(|&l| l > -1e-9));
+    }
+}

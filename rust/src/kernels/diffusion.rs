@@ -1,0 +1,76 @@
+//! Diffusion-distance normalization (Coifman–Lafon diffusion maps).
+//!
+//! The paper's Table I "second line" experiments approximate
+//! `M = D^{-1/2} N D^{-1/2}` where N is a Gaussian kernel matrix and D is
+//! the diagonal of N's row sums. M is symmetric PSD-like (its spectrum lies
+//! in [-1, 1] with λmax = 1) and its eigenvectors give the diffusion-map
+//! embedding (examples/diffusion_maps.rs).
+
+use crate::linalg::Mat;
+
+/// Normalize a (symmetric, non-negative) kernel matrix in place:
+/// `M(i,j) = N(i,j) / sqrt(rowsum_i * rowsum_j)`. Returns the row sums.
+pub fn diffusion_normalize(n_mat: &mut Mat) -> Vec<f64> {
+    assert_eq!(n_mat.rows, n_mat.cols);
+    let n = n_mat.rows;
+    let mut rowsum = vec![0.0; n];
+    for i in 0..n {
+        rowsum[i] = n_mat.row(i).iter().sum();
+        assert!(
+            rowsum[i] > 0.0,
+            "diffusion_normalize: zero row sum at {i} (disconnected point)"
+        );
+    }
+    let inv_sqrt: Vec<f64> = rowsum.iter().map(|&s| 1.0 / s.sqrt()).collect();
+    for i in 0..n {
+        let si = inv_sqrt[i];
+        let row = n_mat.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v *= si * inv_sqrt[j];
+        }
+    }
+    rowsum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::{functions::Gaussian, kernel_matrix};
+
+    #[test]
+    fn normalized_matrix_symmetric_and_bounded() {
+        let ds = two_moons(50, 0.05, 7);
+        let mut m = kernel_matrix(&ds, &Gaussian::new(0.8));
+        diffusion_normalize(&mut m);
+        for i in 0..50 {
+            for j in 0..50 {
+                assert!((m.at(i, j) - m.at(j, i)).abs() < 1e-12);
+                assert!(m.at(i, j) >= 0.0 && m.at(i, j) <= 1.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn top_eigenvalue_is_one() {
+        let ds = two_moons(40, 0.05, 8);
+        let mut m = kernel_matrix(&ds, &Gaussian::new(1.0));
+        diffusion_normalize(&mut m);
+        let eig = crate::linalg::sym_eig(&m);
+        assert!((eig.vals[0] - 1.0).abs() < 1e-8, "λmax = {}", eig.vals[0]);
+        assert!(eig.vals.iter().all(|&l| l > -1.0 - 1e-8));
+    }
+
+    #[test]
+    fn d_half_vector_is_top_eigenvector() {
+        // M (D^{1/2} 1) = D^{-1/2} N 1 = D^{-1/2} d = D^{1/2} 1
+        let ds = two_moons(30, 0.05, 9);
+        let mut m = kernel_matrix(&ds, &Gaussian::new(1.2));
+        let rowsum = diffusion_normalize(&mut m);
+        let v: Vec<f64> = rowsum.iter().map(|&s| s.sqrt()).collect();
+        let mv = m.matvec(&v);
+        for (a, b) in mv.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+}

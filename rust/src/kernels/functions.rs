@@ -1,0 +1,204 @@
+//! The kernel functions themselves.
+
+use crate::data::Dataset;
+use crate::util::rng::Pcg64;
+
+/// A positive-semidefinite kernel function over data points.
+pub trait Kernel: Sync {
+    /// k(a, b).
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64;
+
+    /// k(a, a) — overridden where it is constant.
+    fn diag_value(&self, a: &[f64]) -> f64 {
+        self.eval(a, a)
+    }
+
+    /// Human-readable name for logs/tables.
+    fn name(&self) -> &'static str;
+}
+
+#[inline]
+pub(crate) fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Gaussian (RBF) kernel `exp(-‖a-b‖²/σ²)` — the paper's main kernel.
+/// Note the paper's convention divides by σ² (not 2σ²).
+#[derive(Debug, Clone)]
+pub struct Gaussian {
+    pub inv_sigma_sq: f64,
+}
+
+impl Gaussian {
+    pub fn new(sigma: f64) -> Gaussian {
+        assert!(sigma > 0.0);
+        Gaussian { inv_sigma_sq: 1.0 / (sigma * sigma) }
+    }
+
+    /// The paper sets σ to a fraction of the maximum pairwise Euclidean
+    /// distance. Computing the exact maximum is O(n²); for n > 2000 we
+    /// estimate it from a deterministic 2000-point subsample (the paper
+    /// itself falls back to small-trial estimates at large n, §V-D).
+    pub fn with_sigma_fraction(ds: &Dataset, fraction: f64) -> Gaussian {
+        let max_d = max_pairwise_distance(ds, 2000, 0xD15C0);
+        Gaussian::new((fraction * max_d).max(1e-12))
+    }
+}
+
+/// Maximum pairwise distance over a subsample of at most `cap` points.
+pub fn max_pairwise_distance(ds: &Dataset, cap: usize, seed: u64) -> f64 {
+    let idx: Vec<usize> = if ds.n() <= cap {
+        (0..ds.n()).collect()
+    } else {
+        Pcg64::new(seed).sample_without_replacement(ds.n(), cap)
+    };
+    let mut best: f64 = 0.0;
+    for (a, &i) in idx.iter().enumerate() {
+        for &j in idx.iter().skip(a + 1) {
+            best = best.max(sq_dist(ds.point(i), ds.point(j)));
+        }
+    }
+    best.sqrt()
+}
+
+impl Kernel for Gaussian {
+    #[inline]
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        (-sq_dist(a, b) * self.inv_sigma_sq).exp()
+    }
+
+    #[inline]
+    fn diag_value(&self, _a: &[f64]) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+}
+
+/// Linear kernel `aᵀb` — yields the Gram matrix `G = ZᵀZ` of the theory
+/// sections (Lemma 1 / Theorem 1 / Fig. 5).
+#[derive(Debug, Clone, Default)]
+pub struct Linear;
+
+impl Kernel for Linear {
+    #[inline]
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        crate::linalg::matrix::dot(a, b)
+    }
+
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+}
+
+/// Laplacian kernel `exp(-‖a-b‖₁/σ)`.
+#[derive(Debug, Clone)]
+pub struct Laplacian {
+    pub inv_sigma: f64,
+}
+
+impl Laplacian {
+    pub fn new(sigma: f64) -> Laplacian {
+        assert!(sigma > 0.0);
+        Laplacian { inv_sigma: 1.0 / sigma }
+    }
+}
+
+impl Kernel for Laplacian {
+    #[inline]
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        let l1: f64 = a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum();
+        (-l1 * self.inv_sigma).exp()
+    }
+
+    #[inline]
+    fn diag_value(&self, _a: &[f64]) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "laplacian"
+    }
+}
+
+/// Polynomial kernel `(aᵀb + c)^d`.
+#[derive(Debug, Clone)]
+pub struct Polynomial {
+    pub degree: u32,
+    pub offset: f64,
+}
+
+impl Kernel for Polynomial {
+    #[inline]
+    fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        (crate::linalg::matrix::dot(a, b) + self.offset).powi(self.degree as i32)
+    }
+
+    fn name(&self) -> &'static str {
+        "polynomial"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    #[test]
+    fn gaussian_identity_and_symmetry() {
+        let g = Gaussian::new(2.0);
+        let a = [1.0, 2.0];
+        let b = [3.0, -1.0];
+        assert_eq!(g.eval(&a, &a), 1.0);
+        assert_eq!(g.diag_value(&a), 1.0);
+        assert_eq!(g.eval(&a, &b), g.eval(&b, &a));
+        // exp(-13/4)
+        assert!((g.eval(&a, &b) - (-13.0f64 / 4.0).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn linear_is_dot() {
+        let k = Linear;
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(k.diag_value(&[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn laplacian_range() {
+        let k = Laplacian::new(1.0);
+        assert_eq!(k.eval(&[0.0], &[0.0]), 1.0);
+        assert!((k.eval(&[0.0], &[2.0]) - (-2.0f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn polynomial_known() {
+        let k = Polynomial { degree: 2, offset: 1.0 };
+        assert_eq!(k.eval(&[1.0, 1.0], &[2.0, 3.0]), 36.0);
+    }
+
+    #[test]
+    fn sigma_fraction_scales_with_data() {
+        // two points distance 10 apart; fraction 0.5 → σ=5
+        let ds = Dataset::from_rows(vec![vec![0.0, 0.0], vec![10.0, 0.0]]);
+        let g = Gaussian::with_sigma_fraction(&ds, 0.5);
+        assert!((g.inv_sigma_sq - 1.0 / 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_pairwise_distance_exact_small() {
+        let ds = Dataset::from_rows(vec![
+            vec![0.0, 0.0],
+            vec![3.0, 4.0],
+            vec![1.0, 1.0],
+        ]);
+        assert!((max_pairwise_distance(&ds, 100, 1) - 5.0).abs() < 1e-12);
+    }
+}

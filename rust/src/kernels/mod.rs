@@ -1,0 +1,15 @@
+//! Kernel functions and kernel-matrix/column builders.
+//!
+//! The paper's experiments use Gaussian kernel matrices
+//! `G(i,j) = exp(-‖zᵢ-zⱼ‖²/σ²)`, linear Gram matrices `G = ZᵀZ` (theory,
+//! Fig. 5), and diffusion-normalized matrices `M = D^{-1/2} N D^{-1/2}`
+//! (Table I second rows). All three are implemented here, plus Laplacian
+//! and polynomial kernels for completeness.
+
+pub mod builder;
+pub mod diffusion;
+pub mod functions;
+
+pub use builder::{kernel_column_into, kernel_diag, kernel_matrix};
+pub use diffusion::diffusion_normalize;
+pub use functions::{Gaussian, Kernel, Laplacian, Linear, Polynomial};

@@ -1,0 +1,48 @@
+//! # oASIS — Adaptive Column Sampling for Kernel Matrix Approximation
+//!
+//! A production-quality reproduction of *oASIS: Adaptive Column Sampling for
+//! Kernel Matrix Approximation* (Patel, Goldstein, Dyer, Mirhoseini,
+//! Baraniuk; stat.ML 2015) as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination layer: the sequential oASIS
+//!   selector, the distributed oASIS-P leader/worker runtime
+//!   ([`coordinator`]), every baseline sampler the paper compares against
+//!   ([`sampling`]), Nyström assembly and error estimation ([`nystrom`]),
+//!   dataset generators ([`data`]) and dense linear algebra ([`linalg`]).
+//! * **L2/L1 (python/, build time only)** — the per-iteration compute graph
+//!   (Δ-scoring, Gaussian kernel columns, Eq. 5/6 rank-1 updates) written in
+//!   JAX calling Pallas kernels, AOT-lowered to HLO text artifacts.
+//! * **Runtime bridge** ([`runtime`]) — loads those artifacts through the
+//!   PJRT CPU client (`xla` crate) and serves them on the Rust hot path;
+//!   every op also has a native Rust fallback so the library is fully
+//!   functional without artifacts.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use oasis::data::generators::two_moons;
+//! use oasis::kernels::Gaussian;
+//! use oasis::sampling::{oasis::Oasis, ColumnSampler};
+//! use oasis::nystrom::error::relative_frobenius_error;
+//!
+//! let ds = two_moons(2_000, 0.05, 42);
+//! let kernel = Gaussian::with_sigma_fraction(&ds, 0.05);
+//! let oracle = oasis::sampling::ImplicitOracle::new(&ds, &kernel);
+//! let approx = Oasis::new(450, 10, 1e-12, 7).sample(&oracle).unwrap();
+//! let err = relative_frobenius_error(&oracle, &approx);
+//! println!("relative Frobenius error: {err:.3e}");
+//! ```
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod data;
+pub mod kernels;
+pub mod linalg;
+pub mod nystrom;
+pub mod runtime;
+pub mod sampling;
+pub mod seed;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

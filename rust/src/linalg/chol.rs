@@ -1,0 +1,142 @@
+//! Cholesky factorization of symmetric positive-definite matrices, with
+//! solve/inverse. Used to bootstrap `W₀⁻¹` and in tests as an independent
+//! check of the iterated Eq. 5 inverse.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor: `A = L Lᵀ`.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    pub l: Mat,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix. Returns `None` if a
+    /// non-positive pivot is met (matrix not PD to working precision).
+    pub fn new(a: &Mat) -> Option<Cholesky> {
+        assert_eq!(a.rows, a.cols, "cholesky: square required");
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a.at(i, j);
+                for k in 0..j {
+                    s -= l.at(i, k) * l.at(j, k);
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    *l.at_mut(i, j) = s.sqrt();
+                } else {
+                    *l.at_mut(i, j) = s / l.at(j, j);
+                }
+            }
+        }
+        Some(Cholesky { l })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l.at(i, k) * y[k];
+            }
+            y[i] = s / self.l.at(i, i);
+        }
+        // backward: Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l.at(k, i) * x[k];
+            }
+            x[i] = s / self.l.at(i, i);
+        }
+        x
+    }
+
+    /// Inverse via n solves.
+    pub fn inverse(&self) -> Mat {
+        let n = self.l.rows;
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let x = self.solve(&e);
+            for i in 0..n {
+                *inv.at_mut(i, j) = x[i];
+            }
+            e[j] = 0.0;
+        }
+        inv
+    }
+
+    /// log-determinant of A.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l.at(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut x = Mat::zeros(n, n);
+        rng.fill_normal(&mut x.data);
+        let mut a = x.t_matmul(&x);
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f64; // well conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(8, 1);
+        let ch = Cholesky::new(&a).unwrap();
+        let recon = ch.l.matmul(&ch.l.transpose());
+        assert!(recon.fro_dist(&a) < 1e-9 * a.fro_norm());
+    }
+
+    #[test]
+    fn solve_is_correct() {
+        let a = random_spd(10, 2);
+        let ch = Cholesky::new(&a).unwrap();
+        let b: Vec<f64> = (0..10).map(|i| i as f64 - 4.0).collect();
+        let x = ch.solve(&b);
+        let ax = a.matvec(&x);
+        for (u, v) in ax.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-8, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(6, 3);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        let eye = a.matmul(&inv);
+        assert!(eye.fro_dist(&Mat::eye(6)) < 1e-8);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn log_det_matches_2x2() {
+        let a = Mat::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]); // det = 11
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.log_det() - 11f64.ln()).abs() < 1e-10);
+    }
+}

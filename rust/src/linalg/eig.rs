@@ -1,0 +1,386 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) and PSD pseudo-inverse.
+//!
+//! Jacobi is O(n³) with a healthy constant but is simple, branch-light and
+//! extremely accurate for the small/medium symmetric matrices we feed it:
+//! `W` (ℓ×ℓ, ℓ ≤ a few thousand), subspace-iteration projections
+//! ((k+p)×(k+p)), and test matrices. For the n×n leverage-score path we use
+//! randomized subspace iteration (see sampling/leverage.rs) so Jacobi only
+//! ever sees small matrices there.
+
+use super::Mat;
+
+/// Eigendecomposition `A = V diag(vals) Vᵀ`, eigenvalues descending.
+#[derive(Debug, Clone)]
+pub struct SymEig {
+    pub vals: Vec<f64>,
+    /// column j of `vecs` is the eigenvector for `vals[j]`
+    pub vecs: Mat,
+}
+
+/// Symmetric eigendecomposition. Dispatches on size: cyclic Jacobi for
+/// small matrices (n ≤ 48; simplest and extremely accurate), Householder
+/// tridiagonalization + implicit QL for larger ones (~30× faster at
+/// n = 450 — see EXPERIMENTS.md §Perf).
+pub fn sym_eig(a: &Mat) -> SymEig {
+    if a.rows <= 48 {
+        sym_eig_jacobi(a)
+    } else {
+        sym_eig_tridiag(a)
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+pub fn sym_eig_jacobi(a: &Mat) -> SymEig {
+    assert_eq!(a.rows, a.cols, "sym_eig: square required");
+    let n = a.rows;
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + m.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m.at(p, q);
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, q);
+                    *m.at_mut(k, p) = c * mkp - s * mkq;
+                    *m.at_mut(k, q) = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(q, k);
+                    *m.at_mut(p, k) = c * mpk - s * mqk;
+                    *m.at_mut(q, k) = s * mpk + c * mqk;
+                }
+                // accumulate rotations
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    *v.at_mut(k, p) = c * vkp - s * vkq;
+                    *v.at_mut(k, q) = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // sort descending
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m.at(j, j).partial_cmp(&m.at(i, i)).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| m.at(i, i)).collect();
+    let vecs = v.select_cols(&order);
+    SymEig { vals, vecs }
+}
+
+/// Householder tridiagonalization + implicit-shift QL eigendecomposition
+/// (tred2/tqli, Numerical Recipes style). O(n³) with a far smaller
+/// constant than Jacobi; the default for n > 48.
+pub fn sym_eig_tridiag(a: &Mat) -> SymEig {
+    let n = a.rows;
+    assert_eq!(n, a.cols, "sym_eig: square required");
+    // z starts as (symmetrized) A and accumulates the orthogonal transform
+    let mut z = a.clone();
+    z.symmetrize();
+    let mut d = vec![0.0f64; n]; // diagonal
+    let mut e = vec![0.0f64; n]; // off-diagonal
+
+    // --- tred2: reduce to tridiagonal, accumulating transforms in z ---
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z.at(i, k).abs();
+            }
+            if scale == 0.0 {
+                e[i] = z.at(i, l);
+            } else {
+                for k in 0..=l {
+                    *z.at_mut(i, k) /= scale;
+                    h += z.at(i, k) * z.at(i, k);
+                }
+                let mut f = z.at(i, l);
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                *z.at_mut(i, l) = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    *z.at_mut(j, i) = z.at(i, j) / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z.at(j, k) * z.at(i, k);
+                    }
+                    for k in j + 1..=l {
+                        g += z.at(k, j) * z.at(i, k);
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z.at(i, j);
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z.at(i, j);
+                    e[j] -= hh * f;
+                    let g = e[j];
+                    for k in 0..=j {
+                        *z.at_mut(j, k) -= f * e[k] + g * z.at(i, k);
+                    }
+                }
+            }
+        } else {
+            e[i] = z.at(i, l);
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z.at(i, k) * z.at(k, j);
+                }
+                for k in 0..i {
+                    *z.at_mut(k, j) -= g * z.at(k, i);
+                }
+            }
+        }
+        d[i] = z.at(i, i);
+        *z.at_mut(i, i) = 1.0;
+        for j in 0..i {
+            *z.at_mut(j, i) = 0.0;
+            *z.at_mut(i, j) = 0.0;
+        }
+    }
+
+    // --- tqli: implicit-shift QL on the tridiagonal, rotating z ---
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find a small subdiagonal element to split
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tqli: no convergence at l={l}");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate rotation into eigenvector matrix
+                for k in 0..n {
+                    f = z.at(k, i + 1);
+                    *z.at_mut(k, i + 1) = s * z.at(k, i) + c * f;
+                    *z.at_mut(k, i) = c * z.at(k, i) - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // sort descending
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let vecs = z.select_cols(&order);
+    SymEig { vals, vecs }
+}
+
+impl SymEig {
+    /// Reconstruct `V diag(f(vals)) Vᵀ`.
+    pub fn apply_spectral(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let n = self.vals.len();
+        let mut scaled = self.vecs.clone(); // V
+        for j in 0..n {
+            let fv = f(self.vals[j]);
+            for i in 0..n {
+                *scaled.at_mut(i, j) *= fv;
+            }
+        }
+        // scaled * Vᵀ
+        scaled.matmul(&self.vecs.transpose())
+    }
+}
+
+/// Moore–Penrose pseudo-inverse of a symmetric PSD matrix, with relative
+/// eigenvalue cutoff `rcond` (eigenvalues ≤ rcond·λmax are treated as zero).
+pub fn pinv_psd(a: &Mat, rcond: f64) -> Mat {
+    let eig = sym_eig(a);
+    let lmax = eig.vals.first().copied().unwrap_or(0.0).max(0.0);
+    let cut = rcond * lmax;
+    eig.apply_spectral(|l| if l > cut && l > 0.0 { 1.0 / l } else { 0.0 })
+}
+
+/// Effective rank at relative tolerance `rtol`.
+pub fn psd_rank(a: &Mat, rtol: f64) -> usize {
+    let eig = sym_eig(a);
+    let lmax = eig.vals.first().copied().unwrap_or(0.0).max(0.0);
+    if lmax == 0.0 {
+        return 0;
+    }
+    eig.vals.iter().filter(|&&l| l > rtol * lmax).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_sym(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut a = Mat::zeros(n, n);
+        rng.fill_normal(&mut a.data);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn eig_reconstructs() {
+        for n in [1usize, 2, 3, 8, 25] {
+            let a = random_sym(n, n as u64);
+            let e = sym_eig(&a);
+            let recon = e.apply_spectral(|l| l);
+            assert!(recon.fro_dist(&a) < 1e-9 * (1.0 + a.fro_norm()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn eig_orthonormal_vectors() {
+        let a = random_sym(12, 5);
+        let e = sym_eig(&a);
+        let vtv = e.vecs.t_matmul(&e.vecs);
+        assert!(vtv.fro_dist(&Mat::eye(12)) < 1e-10);
+    }
+
+    #[test]
+    fn eig_values_sorted_descending() {
+        let a = random_sym(10, 6);
+        let e = sym_eig(&a);
+        for w in e.vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn eig_known_2x2() {
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = sym_eig(&a);
+        assert!((e.vals[0] - 3.0).abs() < 1e-12);
+        assert!((e.vals[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pinv_of_rank_deficient() {
+        // G = x xᵀ rank 1
+        let x = [1.0, 2.0, 3.0];
+        let a = Mat::from_fn(3, 3, |i, j| x[i] * x[j]);
+        let p = pinv_psd(&a, 1e-12);
+        // A P A = A (Moore–Penrose)
+        let apa = a.matmul(&p).matmul(&a);
+        assert!(apa.fro_dist(&a) < 1e-9);
+        assert_eq!(psd_rank(&a, 1e-9), 1);
+    }
+
+    #[test]
+    fn pinv_of_invertible_is_inverse() {
+        let mut a = random_sym(6, 9);
+        for i in 0..6 {
+            *a.at_mut(i, i) += 10.0;
+        }
+        let p = pinv_psd(&a, 1e-14);
+        assert!(a.matmul(&p).fro_dist(&Mat::eye(6)) < 1e-8);
+    }
+
+    #[test]
+    fn tridiag_matches_jacobi() {
+        for n in [3usize, 10, 30, 80, 150] {
+            let a = random_sym(n, 100 + n as u64);
+            let ej = sym_eig_jacobi(&a);
+            let et = sym_eig_tridiag(&a);
+            for (x, y) in ej.vals.iter().zip(&et.vals) {
+                assert!(
+                    (x - y).abs() < 1e-8 * (1.0 + x.abs()),
+                    "n={n}: {x} vs {y}"
+                );
+            }
+            // both reconstruct A
+            let recon = et.apply_spectral(|l| l);
+            assert!(recon.fro_dist(&a) < 1e-8 * (1.0 + a.fro_norm()), "n={n}");
+            // orthonormal vectors
+            let vtv = et.vecs.t_matmul(&et.vecs);
+            assert!(vtv.fro_dist(&Mat::eye(n)) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn tridiag_handles_degenerate_matrices() {
+        // identity: all eigenvalues 1
+        let et = sym_eig_tridiag(&Mat::eye(60));
+        assert!(et.vals.iter().all(|&l| (l - 1.0).abs() < 1e-12));
+        // zero matrix
+        let et = sym_eig_tridiag(&Mat::zeros(50, 50));
+        assert!(et.vals.iter().all(|&l| l.abs() < 1e-12));
+        // rank-1 PSD at scale
+        let x: Vec<f64> = (0..70).map(|i| (i as f64 * 0.1).sin()).collect();
+        let a = Mat::from_fn(70, 70, |i, j| x[i] * x[j]);
+        let et = sym_eig_tridiag(&a);
+        let expected: f64 = x.iter().map(|v| v * v).sum();
+        assert!((et.vals[0] - expected).abs() < 1e-8 * expected);
+        assert!(et.vals[1].abs() < 1e-8 * expected);
+    }
+}

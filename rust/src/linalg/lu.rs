@@ -1,0 +1,165 @@
+//! LU factorization with partial pivoting: general solve and inverse.
+//! Used to bootstrap `W₀⁻¹` from the random seed columns (W₀ is symmetric
+//! but may be near-singular if the seed drew near-duplicate points, so we
+//! prefer pivoted LU over Cholesky here).
+
+use super::Mat;
+
+/// LU decomposition with row pivoting (Doolittle).
+#[derive(Debug, Clone)]
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    /// number of row swaps mod 2 (for determinant sign)
+    swaps: usize,
+}
+
+impl Lu {
+    /// Factor. Returns `None` on exact singularity.
+    pub fn new(a: &Mat) -> Option<Lu> {
+        assert_eq!(a.rows, a.cols, "lu: square required");
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut swaps = 0;
+        for col in 0..n {
+            // pivot
+            let mut pi = col;
+            let mut pmax = lu.at(col, col).abs();
+            for r in col + 1..n {
+                let v = lu.at(r, col).abs();
+                if v > pmax {
+                    pmax = v;
+                    pi = r;
+                }
+            }
+            if pmax == 0.0 {
+                return None;
+            }
+            if pi != col {
+                for j in 0..n {
+                    let tmp = lu.at(col, j);
+                    *lu.at_mut(col, j) = lu.at(pi, j);
+                    *lu.at_mut(pi, j) = tmp;
+                }
+                piv.swap(col, pi);
+                swaps += 1;
+            }
+            let d = lu.at(col, col);
+            for r in col + 1..n {
+                let f = lu.at(r, col) / d;
+                *lu.at_mut(r, col) = f;
+                if f != 0.0 {
+                    for j in col + 1..n {
+                        *lu.at_mut(r, j) -= f * lu.at(col, j);
+                    }
+                }
+            }
+        }
+        Some(Lu { lu, piv, swaps })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // forward
+        for i in 1..n {
+            let mut s = x[i];
+            for k in 0..i {
+                s -= self.lu.at(i, k) * x[k];
+            }
+            x[i] = s;
+        }
+        // backward
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in i + 1..n {
+                s -= self.lu.at(i, k) * x[k];
+            }
+            x[i] = s / self.lu.at(i, i);
+        }
+        x
+    }
+
+    /// Determinant.
+    pub fn det(&self) -> f64 {
+        let mut d = if self.swaps % 2 == 0 { 1.0 } else { -1.0 };
+        for i in 0..self.lu.rows {
+            d *= self.lu.at(i, i);
+        }
+        d
+    }
+}
+
+/// Solve `A x = b` (convenience).
+pub fn solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    Lu::new(a).map(|lu| lu.solve(b))
+}
+
+/// Matrix inverse via pivoted LU. Returns `None` if singular.
+pub fn inverse(a: &Mat) -> Option<Mat> {
+    let n = a.rows;
+    let lu = Lu::new(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let x = lu.solve(&e);
+        for i in 0..n {
+            *inv.at_mut(i, j) = x[i];
+        }
+        e[j] = 0.0;
+    }
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn solve_known_system() {
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 3.0]);
+        let x = solve(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip_random() {
+        let mut rng = Pcg64::new(11);
+        for n in [1usize, 2, 5, 20] {
+            let mut a = Mat::zeros(n, n);
+            rng.fill_normal(&mut a.data);
+            for i in 0..n {
+                *a.at_mut(i, i) += 3.0;
+            }
+            let inv = inverse(&a).expect("invertible");
+            let eye = a.matmul(&inv);
+            assert!(eye.fro_dist(&Mat::eye(n)) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn detects_singular() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(inverse(&a).is_none());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let x = solve(&a, &[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn det_sign_with_swaps() {
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let lu = Lu::new(&a).unwrap();
+        assert!((lu.det() + 1.0).abs() < 1e-12);
+    }
+}

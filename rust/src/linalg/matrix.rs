@@ -1,0 +1,325 @@
+//! Row-major dense matrix with the product kernels the library needs.
+
+use crate::util::parallel;
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure.
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Select rows by index.
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Select columns by index.
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            for (c, &j) in idx.iter().enumerate() {
+                out.data[i * idx.len() + c] = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * other` (blocked over rows, threaded when big).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dims");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        let threads = if m * k * n > 1 << 18 { parallel::default_threads() } else { 1 };
+        let a = &self.data;
+        let b = &other.data;
+        parallel::for_each_chunk_mut(&mut out.data, n, threads, |range, chunk| {
+            for (local, i) in range.clone().enumerate() {
+                let orow = &mut chunk[local * n..(local + 1) * n];
+                let arow = &a[i * k..(i + 1) * k];
+                // ikj loop order: stream through b rows
+                for (kk, &aik) in arow.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ * other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul dims");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let arow = &self.data[kk * m..(kk + 1) * m];
+            let brow = &other.data[kk * n..(kk + 1) * n];
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec dims");
+        (0..self.rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    /// `selfᵀ x` without transposing.
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len(), "t_matvec dims");
+        let mut out = vec![0.0; self.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                *o += xi * a;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |entry|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    /// `self - other` Frobenius norm without allocating the difference.
+    pub fn fro_dist(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// In-place scaled add: `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Symmetrize in place: `self = (self + selfᵀ)/2`.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        for i in 0..n {
+            for j in i + 1..n {
+                let avg = 0.5 * (self.data[i * n + j] + self.data[j * n + i]);
+                self.data[i * n + j] = avg;
+                self.data[j * n + i] = avg;
+            }
+        }
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled for the hot paths (Δ scoring uses this shape)
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(5, 5, |i, j| (i * 5 + j) as f64);
+        let c = a.matmul(&Mat::eye(5));
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let a = Mat::from_fn(4, 3, |i, j| (i + 2 * j) as f64);
+        let b = Mat::from_fn(4, 5, |i, j| (i as f64 - j as f64) * 0.5);
+        let got = a.t_matmul(&b);
+        let want = a.transpose().matmul(&b);
+        assert!(got.fro_dist(&want) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_and_t_matvec() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.matvec(&[1., 1., 1.]), vec![6., 15.]);
+        assert_eq!(a.t_matvec(&[1., 1.]), vec![5., 7., 9.]);
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let a = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let r = a.select_rows(&[2, 0]);
+        assert_eq!(r.row(0), &[8., 9., 10., 11.]);
+        assert_eq!(r.row(1), &[0., 1., 2., 3.]);
+        let c = a.select_cols(&[3, 1]);
+        assert_eq!(c.row(0), &[3., 1.]);
+        assert_eq!(c.row(2), &[11., 9.]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Mat::from_vec(1, 2, vec![3., 4.]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        // big enough to trigger the threaded path
+        let a = Mat::from_fn(128, 64, |i, j| ((i * 7 + j * 13) % 11) as f64 - 5.0);
+        let b = Mat::from_fn(64, 96, |i, j| ((i * 3 + j * 5) % 7) as f64 - 3.0);
+        let big = a.matmul(&b);
+        // serial reference
+        let mut want = Mat::zeros(128, 96);
+        for i in 0..128 {
+            for j in 0..96 {
+                let mut s = 0.0;
+                for k in 0..64 {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                want.data[i * 96 + j] = s;
+            }
+        }
+        assert!(big.fro_dist(&want) < 1e-9);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        for n in [0usize, 1, 3, 4, 7, 16, 33] {
+            let a: Vec<f64> = (0..n).map(|i| i as f64 * 0.3 - 1.0).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i * i) as f64 * 0.01).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn symmetrize() {
+        let mut a = Mat::from_vec(2, 2, vec![1., 2., 4., 3.]);
+        a.symmetrize();
+        assert_eq!(a.data, vec![1., 3., 3., 3.]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense linear algebra substrate, written from scratch (no BLAS/LAPACK in
+//! this environment): row-major [`Mat`], blocked matrix products, Cholesky,
+//! LU inverse, symmetric Jacobi eigendecomposition, QR, and pseudo-inverse.
+//!
+//! Everything the samplers need: `W⁻¹` bootstrap (LU), leverage scores
+//! (subspace iteration = matmul + QR + small eig), K-means Nyström pinv,
+//! Nyström SVD (eig of W), and exact Frobenius error evaluation.
+
+pub mod chol;
+pub mod eig;
+pub mod lu;
+pub mod matrix;
+pub mod qr;
+
+pub use chol::Cholesky;
+pub use eig::{pinv_psd, sym_eig, SymEig};
+pub use lu::{inverse, solve as lu_solve};
+pub use matrix::Mat;
+pub use qr::thin_qr;

@@ -1,0 +1,106 @@
+//! Thin QR via modified Gram–Schmidt with one reorthogonalization pass.
+//! Used by the randomized subspace iteration behind leverage scores.
+
+use super::matrix::{dot, Mat};
+
+/// Thin QR of an m×n matrix (m ≥ n): returns Q (m×n with orthonormal
+/// columns) and R (n×n upper triangular). Rank-deficient columns are
+/// replaced by zero columns in Q (their R diagonal is 0).
+pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "thin_qr expects tall matrix");
+    // work with columns
+    let mut q_cols: Vec<Vec<f64>> = (0..n).map(|j| a.col(j)).collect();
+    let mut r = Mat::zeros(n, n);
+    for j in 0..n {
+        // two-pass MGS for numerical robustness
+        for _pass in 0..2 {
+            for i in 0..j {
+                let rij = dot(&q_cols[i], &q_cols[j]);
+                *r.at_mut(i, j) += rij;
+                let (qi, qj) = split_two(&mut q_cols, i, j);
+                for (x, y) in qj.iter_mut().zip(qi.iter()) {
+                    *x -= rij * y;
+                }
+            }
+        }
+        let norm = dot(&q_cols[j], &q_cols[j]).sqrt();
+        *r.at_mut(j, j) = norm;
+        if norm > 1e-300 {
+            for x in q_cols[j].iter_mut() {
+                *x /= norm;
+            }
+        } else {
+            for x in q_cols[j].iter_mut() {
+                *x = 0.0;
+            }
+        }
+    }
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        for i in 0..m {
+            *q.at_mut(i, j) = q_cols[j][i];
+        }
+    }
+    (q, r)
+}
+
+/// Borrow two distinct elements of a Vec mutably.
+fn split_two<'a, T>(v: &'a mut [T], i: usize, j: usize) -> (&'a T, &'a mut T) {
+    assert!(i < j);
+    let (head, tail) = v.split_at_mut(j);
+    (&head[i], &mut tail[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::new(21);
+        let mut a = Mat::zeros(20, 6);
+        rng.fill_normal(&mut a.data);
+        let (q, r) = thin_qr(&a);
+        let qr = q.matmul(&r);
+        assert!(qr.fro_dist(&a) < 1e-10 * (1.0 + a.fro_norm()));
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Pcg64::new(22);
+        let mut a = Mat::zeros(30, 8);
+        rng.fill_normal(&mut a.data);
+        let (q, _) = thin_qr(&a);
+        let qtq = q.t_matmul(&q);
+        assert!(qtq.fro_dist(&Mat::eye(8)) < 1e-10);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg64::new(23);
+        let mut a = Mat::zeros(10, 5);
+        rng.fill_normal(&mut a.data);
+        let (_, r) = thin_qr(&a);
+        for i in 1..5 {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        // column 1 = 2 * column 0
+        let a = Mat::from_fn(6, 3, |i, j| match j {
+            0 => i as f64 + 1.0,
+            1 => 2.0 * (i as f64 + 1.0),
+            _ => (i * i) as f64,
+        });
+        let (q, r) = thin_qr(&a);
+        assert!(r.at(1, 1).abs() < 1e-9);
+        // reconstruction still holds
+        assert!(q.matmul(&r).fro_dist(&a) < 1e-9 * a.fro_norm());
+    }
+}

@@ -1,0 +1,264 @@
+//! `oasis` — CLI for the oASIS kernel-matrix approximation library.
+//!
+//! Subcommands:
+//!   approximate  run one sampler on one dataset, report error + runtime
+//!   parallel     run the distributed oASIS-P coordinator
+//!   info         show the artifact manifest and PJRT platform
+//!
+//! Examples:
+//!   oasis approximate --dataset two-moons --n 2000 --cols 450 --method oasis
+//!   oasis parallel --dataset two-moons --n 100000 --cols 500 --workers 8
+//!   oasis info
+
+use oasis::coordinator::{run_oasis_p, OasisPConfig};
+use oasis::data::{generators, Dataset};
+use oasis::kernels::{Gaussian, Kernel, Linear};
+use oasis::nystrom::{relative_frobenius_error, sampled_relative_error};
+use oasis::runtime::{Accel, Manifest};
+use oasis::sampling::{
+    farahat::Farahat, kmeans::KMeansNystrom, leverage::LeverageScores,
+    oasis::Oasis, uniform::Uniform, ColumnSampler, ImplicitOracle,
+};
+use oasis::util::args::Args;
+use oasis::util::timing::fmt_secs;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "approximate" => cmd_approximate(&args),
+        "parallel" => cmd_parallel(&args),
+        "seed" => cmd_seed(&args),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "oasis — adaptive column sampling for kernel matrix approximation\n\
+         \n\
+         USAGE: oasis <approximate|parallel|info> [options]\n\
+         \n\
+         approximate options:\n\
+           --dataset   two-moons|abalone|borg|mnist|salinas|lightfield (default two-moons)\n\
+           --n         dataset size (default 2000)\n\
+           --cols      columns to sample ℓ (default 450)\n\
+           --method    oasis|random|leverage|farahat|kmeans (default oasis)\n\
+           --kernel    gaussian|linear (default gaussian)\n\
+           --sigma-frac  σ as fraction of max pairwise distance (default 0.05)\n\
+           --error     full|sampled (default full for n ≤ 8000)\n\
+           --seed      RNG seed (default 7)\n\
+           --accel     use the PJRT artifact path for oASIS scoring\n\
+         \n\
+         parallel options:\n\
+           --dataset/--n/--cols/--sigma-frac/--seed as above\n\
+           --workers   node count p (default 8)\n\
+           --tol       stopping tolerance (default 1e-12)\n\
+         \n\
+         seed options (SEED decomposition, §II-E):\n\
+           --dataset/--n/--seed as above\n\
+           --dict      dictionary size L (default 50)\n\
+           --sparsity  per-point OMP budget (default 5)\n\
+           --clusters  if set, spectral-cluster the codes into this many groups\n"
+    );
+}
+
+fn make_dataset(args: &Args) -> Dataset {
+    let name = args.get_or("dataset", "two-moons");
+    let n = args.usize_or("n", 2000);
+    let seed = args.u64_or("seed", 7) ^ 0xDA7A;
+    match name.as_str() {
+        "two-moons" => generators::two_moons(n, 0.05, seed),
+        "abalone" => generators::abalone_like(n, seed),
+        "borg" => {
+            let per = (n / 256).max(1);
+            generators::borg(8, per, 0.1, seed)
+        }
+        "mnist" => generators::mnist_like(n, 784, seed),
+        "salinas" => generators::salinas_like(n, 204, seed),
+        "lightfield" => generators::lightfield_like(n, seed),
+        "tiny-images" => generators::tiny_images_like(n, 32, seed),
+        other => {
+            eprintln!("unknown dataset '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_approximate(args: &Args) -> i32 {
+    let ds = make_dataset(args);
+    let cols = args.usize_or("cols", 450).min(ds.n());
+    let seed = args.u64_or("seed", 7);
+    let kernel_name = args.get_or("kernel", "gaussian");
+    let sigma_frac = args.f64_or("sigma-frac", 0.05);
+    let gaussian;
+    let linear;
+    let kernel: &dyn Kernel = if kernel_name == "linear" {
+        linear = Linear;
+        &linear
+    } else {
+        gaussian = Gaussian::with_sigma_fraction(&ds, sigma_frac);
+        &gaussian
+    };
+    let oracle = ImplicitOracle::new(&ds, kernel);
+    let method = args.get_or("method", "oasis");
+
+    let approx = if args.flag("accel") && method == "oasis" {
+        match Accel::try_default() {
+            Some(mut accel) => {
+                let sampler =
+                    oasis::runtime::accel::PjrtOasis::new(cols, 10.min(cols), 1e-12, seed);
+                match sampler.sample_with(&mut accel, &oracle) {
+                    Ok((a, _)) => a,
+                    Err(e) => {
+                        eprintln!("accel path failed ({e}); falling back to native");
+                        Oasis::new(cols, 10.min(cols), 1e-12, seed)
+                            .sample(&oracle)
+                            .expect("native oasis")
+                    }
+                }
+            }
+            None => {
+                eprintln!("no artifacts found (run `make artifacts`); using native");
+                Oasis::new(cols, 10.min(cols), 1e-12, seed)
+                    .sample(&oracle)
+                    .expect("native oasis")
+            }
+        }
+    } else {
+        let sampler: Box<dyn ColumnSampler> = match method.as_str() {
+            "oasis" => Box::new(Oasis::new(cols, 10.min(cols), 1e-12, seed)),
+            "random" => Box::new(Uniform::new(cols, seed)),
+            "leverage" => Box::new(LeverageScores::new(cols, cols, seed)),
+            "farahat" => Box::new(Farahat::new(cols)),
+            "kmeans" => Box::new(KMeansNystrom::new(&ds, kernel, cols, seed)),
+            other => {
+                eprintln!("unknown method '{other}'");
+                return 2;
+            }
+        };
+        match sampler.sample(&oracle) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("sampling failed: {e}");
+                return 1;
+            }
+        }
+    };
+
+    let mode = args.get_or("error", if ds.n() <= 8000 { "full" } else { "sampled" });
+    let err = if mode == "full" {
+        relative_frobenius_error(&oracle, &approx)
+    } else {
+        sampled_relative_error(&oracle, &approx, 100_000, seed ^ 0xE44)
+    };
+    println!(
+        "dataset={} n={} dim={} method={} cols={} error={:.3e} select_time={}",
+        args.get_or("dataset", "two-moons"),
+        ds.n(),
+        ds.dim(),
+        method,
+        approx.k(),
+        err,
+        fmt_secs(approx.selection_secs),
+    );
+    0
+}
+
+fn cmd_parallel(args: &Args) -> i32 {
+    let ds = make_dataset(args);
+    let cols = args.usize_or("cols", 500).min(ds.n());
+    let workers = args.usize_or("workers", 8);
+    let seed = args.u64_or("seed", 7);
+    let sigma_frac = args.f64_or("sigma-frac", 0.05);
+    let kernel: Arc<dyn Kernel + Send + Sync> =
+        Arc::new(Gaussian::with_sigma_fraction(&ds, sigma_frac));
+    let cfg = OasisPConfig::new(cols, 10.min(cols), workers)
+        .with_seed(seed)
+        .with_tol(args.f64_or("tol", 1e-12));
+    match run_oasis_p(&ds, kernel.clone(), &cfg) {
+        Ok((approx, report)) => {
+            let gaussian = Gaussian::with_sigma_fraction(&ds, sigma_frac);
+            let oracle = ImplicitOracle::new(&ds, &gaussian);
+            let err = sampled_relative_error(&oracle, &approx, 100_000, seed ^ 0xE44);
+            println!(
+                "oASIS-P n={} workers={} cols={} error={:.3e} wall={} [{}]",
+                ds.n(),
+                report.workers,
+                approx.k(),
+                err,
+                fmt_secs(report.wall_secs),
+                report.metrics.summary(),
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("oASIS-P failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_seed(args: &Args) -> i32 {
+    use oasis::seed::{css_projection_error, Seed, SeedConfig};
+    let ds = make_dataset(args);
+    let cfg = SeedConfig {
+        dict_size: args.usize_or("dict", 50).min(ds.n()),
+        sparsity: args.usize_or("sparsity", 5),
+        tol_sq: 1e-12,
+        seed: args.u64_or("seed", 7),
+    };
+    match Seed::decompose(&ds, &cfg) {
+        Ok(seed) => {
+            println!(
+                "SEED: n={} dict={} sparsity≤{} reconstruction={:.3e} eq7={:.3e}",
+                ds.n(),
+                seed.dictionary.len(),
+                cfg.sparsity,
+                seed.relative_error,
+                css_projection_error(&ds, &seed.dictionary),
+            );
+            if let Some(kc) = args.get("clusters") {
+                let k: usize = kc.parse().unwrap_or(2);
+                let labels =
+                    oasis::seed::spectral_cluster(&seed.affinity(), k, cfg.seed);
+                let mut counts = vec![0usize; k];
+                for &l in &labels {
+                    counts[l] += 1;
+                }
+                println!("cluster sizes: {counts:?}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("SEED failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    match Manifest::load(&Manifest::default_dir()) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.artifacts.len());
+            for a in &m.artifacts {
+                println!(
+                    "  {:30} op={:18} dims={:?}",
+                    a.name, a.op, a.dims
+                );
+            }
+        }
+        Err(e) => println!("no artifact manifest: {e}"),
+    }
+    match oasis::runtime::Executor::cpu() {
+        Ok(ex) => println!("PJRT platform: {}", ex.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    0
+}

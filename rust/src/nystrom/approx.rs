@@ -1,0 +1,140 @@
+//! `G ≈ G̃ = C W⁺ Cᵀ` — the Nyström approximation (Eq. 2 of the paper).
+
+use crate::linalg::Mat;
+
+/// A Nyström approximation: the sampled columns `C` (n×k), the inverse (or
+/// pseudo-inverse) of the sampled rows `W` (k×k), and the selected index
+/// set Λ. For K-means Nyström, `indices` is empty (its "columns" are
+/// kernel evaluations against centroids, not columns of G — §II-D4).
+#[derive(Clone, Debug)]
+pub struct NystromApprox {
+    /// Λ — the selected column indices, in selection order.
+    pub indices: Vec<usize>,
+    /// C — n×k matrix of sampled columns.
+    pub c: Mat,
+    /// W⁻¹ (or W⁺) — k×k.
+    pub winv: Mat,
+    /// wall-clock seconds spent selecting columns (and forming C, W⁻¹) —
+    /// the quantity the paper's runtime columns report.
+    pub selection_secs: f64,
+}
+
+impl NystromApprox {
+    /// Number of sampled columns k.
+    pub fn k(&self) -> usize {
+        self.c.cols
+    }
+
+    /// Number of data points n.
+    pub fn n(&self) -> usize {
+        self.c.rows
+    }
+
+    /// The projector factor `P = C W⁻¹` (n×k); `G̃ = P Cᵀ`.
+    /// Precompute once for repeated entry evaluation.
+    pub fn projector(&self) -> Mat {
+        self.c.matmul(&self.winv)
+    }
+
+    /// A single entry `G̃(i, j)` given a precomputed projector.
+    #[inline]
+    pub fn entry_with(&self, p: &Mat, i: usize, j: usize) -> f64 {
+        crate::linalg::matrix::dot(p.row(i), self.c.row(j))
+    }
+
+    /// Materialize the full n×n `G̃` (small problems / tests only).
+    pub fn reconstruct(&self) -> Mat {
+        let p = self.projector();
+        p.matmul(&self.c.transpose())
+    }
+
+    /// Numerical rank of the approximation (rank of W's retained part).
+    pub fn rank(&self, rtol: f64) -> usize {
+        crate::linalg::eig::psd_rank(&self.winv, rtol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{inverse, Mat};
+
+    /// Tiny rank-2 PSD matrix: sampling 2 independent columns reconstructs.
+    #[test]
+    fn exact_on_full_rank_sample() {
+        let x = Mat::from_vec(2, 4, vec![1., 0., 1., 2., 0., 1., 1., -1.]);
+        let g = x.t_matmul(&x); // 4×4 rank 2
+        let idx = vec![0usize, 1];
+        let c = g.select_cols(&idx);
+        let w = c.select_rows(&idx);
+        let approx = NystromApprox {
+            indices: idx,
+            winv: inverse(&w).unwrap(),
+            c,
+            selection_secs: 0.0,
+        };
+        let recon = approx.reconstruct();
+        assert!(recon.fro_dist(&g) < 1e-10, "dist {}", recon.fro_dist(&g));
+        assert_eq!(approx.k(), 2);
+        assert_eq!(approx.n(), 4);
+    }
+
+    #[test]
+    fn entry_matches_reconstruct() {
+        let x = Mat::from_vec(3, 5, {
+            let mut v = vec![0.0; 15];
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = ((i * 7 + 3) % 5) as f64 - 2.0;
+            }
+            v
+        });
+        let g = x.t_matmul(&x);
+        let idx = vec![0usize, 2, 4];
+        let c = g.select_cols(&idx);
+        let w = c.select_rows(&idx);
+        let approx = NystromApprox {
+            indices: idx,
+            winv: crate::linalg::pinv_psd(&w, 1e-12),
+            c,
+            selection_secs: 0.0,
+        };
+        let full = approx.reconstruct();
+        let p = approx.projector();
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!((approx.entry_with(&p, i, j) - full.at(i, j)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn nystrom_exact_on_lambda_block() {
+        // G̃ restricted to (·, Λ) must equal G there when W is invertible
+        // (DESIGN.md invariant 6).
+        let mut rng = crate::util::rng::Pcg64::new(42);
+        let mut x = Mat::zeros(3, 6);
+        rng.fill_normal(&mut x.data);
+        let g = x.t_matmul(&x);
+        let idx = vec![1usize, 3, 5];
+        let c = g.select_cols(&idx);
+        let w = c.select_rows(&idx);
+        let approx = NystromApprox {
+            indices: idx.clone(),
+            winv: inverse(&w).unwrap(),
+            c,
+            selection_secs: 0.0,
+        };
+        let recon = approx.reconstruct();
+        let scale = g.max_abs();
+        for i in 0..6 {
+            for &j in &idx {
+                assert!(
+                    (recon.at(i, j) - g.at(i, j)).abs() < 1e-8 * scale,
+                    "({i},{j}): {} vs {}",
+                    recon.at(i, j),
+                    g.at(i, j)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Diffusion-map embedding through the Nyström approximation — the
+//! downstream manifold-learning application the paper motivates (§II-B,
+//! [2] Coifman & Lafon).
+//!
+//! For the explicit class we normalize the Gaussian kernel matrix to
+//! `M = D^{-1/2} N D^{-1/2}`, approximate M with a sampler, take the
+//! Nyström eigenpairs, and map each point to
+//! `(λ₂ᵗ φ₂(i), …, λ_{d+1}ᵗ φ_{d+1}(i))` (the first eigenpair is the
+//! trivial stationary direction).
+
+use super::{nystrom_eig, NystromApprox};
+use crate::linalg::Mat;
+
+/// Diffusion-map coordinates from a Nyström approximation of the
+/// normalized kernel matrix. Returns an n×dims matrix of coordinates.
+///
+/// `t` is the diffusion time (eigenvalue power).
+pub fn diffusion_coordinates(
+    approx: &NystromApprox,
+    dims: usize,
+    t: f64,
+) -> Mat {
+    let (vals, u) = nystrom_eig(approx, 1e-12);
+    let n = u.rows;
+    let avail = vals.len().saturating_sub(1).min(dims);
+    let mut coords = Mat::zeros(n, dims);
+    for d in 0..avail {
+        let lam = vals[d + 1].max(0.0).powf(t);
+        for i in 0..n {
+            *coords.at_mut(i, d) = lam * u.at(i, d + 1);
+        }
+    }
+    coords
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::{diffusion_normalize, kernel_matrix, Gaussian};
+    use crate::sampling::{assemble_from_indices, ExplicitOracle};
+
+    #[test]
+    fn moons_separate_in_diffusion_space() {
+        // With a small kernel width the two moons are two diffusion
+        // clusters: the second eigenvector separates them.
+        let n = 120;
+        let ds = two_moons(n, 0.03, 11);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.05);
+        let mut m = kernel_matrix(&ds, &kern);
+        diffusion_normalize(&mut m);
+        let oracle = ExplicitOracle::new(&m);
+        // generous sampling so the embedding is accurate
+        let idx: Vec<usize> = (0..n).step_by(2).collect();
+        let approx = assemble_from_indices(&oracle, idx, 0.0);
+        let coords = diffusion_coordinates(&approx, 2, 1.0);
+        // moon label alternates with index (see generator)
+        let (mut lo_a, mut hi_a, mut lo_b, mut hi_b) =
+            (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+        for i in 0..n {
+            let v = coords.at(i, 0);
+            if i % 2 == 0 {
+                lo_a = lo_a.min(v);
+                hi_a = hi_a.max(v);
+            } else {
+                lo_b = lo_b.min(v);
+                hi_b = hi_b.max(v);
+            }
+        }
+        // the two classes occupy (mostly) disjoint intervals
+        let overlap = (hi_a.min(hi_b) - lo_a.max(lo_b)).max(0.0);
+        let span = (hi_a.max(hi_b) - lo_a.min(lo_b)).max(1e-12);
+        assert!(
+            overlap / span < 0.35,
+            "diffusion coordinate overlap {:.2}",
+            overlap / span
+        );
+    }
+
+    #[test]
+    fn requesting_more_dims_than_rank_pads_zero() {
+        let ds = two_moons(30, 0.05, 3);
+        let kern = Gaussian::new(1.0);
+        let m = kernel_matrix(&ds, &kern);
+        let oracle = ExplicitOracle::new(&m);
+        let approx = assemble_from_indices(&oracle, vec![0, 10, 20], 0.0);
+        let coords = diffusion_coordinates(&approx, 10, 1.0);
+        assert_eq!(coords.cols, 10);
+        // columns beyond rank-1 (3 cols ⇒ ≤2 nontrivial dims) are zero
+        for d in 2..10 {
+            for i in 0..30 {
+                assert_eq!(coords.at(i, d), 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Approximation-error metrics.
+//!
+//! * Exact `‖G−G̃‖_F/‖G‖_F` for the explicit class (Table I, Fig. 6/7),
+//!   computed blockwise without materializing G̃.
+//! * The paper's sampled-entry estimator for the implicit classes
+//!   (Tables II/III): Frobenius discrepancy over 100,000 random entries.
+
+use super::NystromApprox;
+use crate::sampling::ColumnOracle;
+use crate::util::{parallel, rng::Pcg64};
+
+/// Exact relative Frobenius error `‖G−G̃‖_F / ‖G‖_F`, evaluated row-block
+/// by row-block (O(n²k) work, O(n) extra memory per thread).
+pub fn relative_frobenius_error(
+    oracle: &dyn ColumnOracle,
+    approx: &NystromApprox,
+) -> f64 {
+    let n = oracle.n();
+    assert_eq!(n, approx.n());
+    let p = approx.projector(); // n×k
+    let c = &approx.c;
+    let k = approx.k();
+    let parts = parallel::map_ranges(n, parallel::default_threads(), |range| {
+        let mut col = vec![0.0; n];
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for j in range {
+            // column j of G (= row j by symmetry)
+            oracle.column_into(j, &mut col);
+            let cj = c.row(j);
+            for i in 0..n {
+                // G̃(i,j) = P(i,:)·C(j,:)
+                let mut acc = 0.0;
+                let pi = &p.data[i * k..(i + 1) * k];
+                for t in 0..k {
+                    acc += pi[t] * cj[t];
+                }
+                let d = col[i] - acc;
+                num += d * d;
+                den += col[i] * col[i];
+            }
+        }
+        (num, den)
+    });
+    let (num, den): (f64, f64) = parts
+        .into_iter()
+        .fold((0.0, 0.0), |(a, b), (x, y)| (a + x, b + y));
+    if den == 0.0 {
+        return 0.0;
+    }
+    (num / den).sqrt()
+}
+
+/// Sampled-entry relative error: Frobenius discrepancy between `samples`
+/// random entries of G and G̃ (paper §V-C). Deterministic given `seed`.
+pub fn sampled_relative_error(
+    oracle: &dyn ColumnOracle,
+    approx: &NystromApprox,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    let n = oracle.n();
+    let p = approx.projector();
+    let pairs: Vec<(usize, usize)> = {
+        let mut rng = Pcg64::new(seed);
+        (0..samples)
+            .map(|_| (rng.below(n), rng.below(n)))
+            .collect()
+    };
+    let parts = parallel::map_ranges(
+        pairs.len(),
+        parallel::default_threads(),
+        |range| {
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for idx in range {
+                let (i, j) = pairs[idx];
+                let g = oracle.entry(i, j);
+                let gt = approx.entry_with(&p, i, j);
+                num += (g - gt) * (g - gt);
+                den += g * g;
+            }
+            (num, den)
+        },
+    );
+    let (num, den): (f64, f64) = parts
+        .into_iter()
+        .fold((0.0, 0.0), |(a, b), (x, y)| (a + x, b + y));
+    if den == 0.0 {
+        return 0.0;
+    }
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::{kernel_matrix, Gaussian};
+    use crate::sampling::{assemble_from_indices, ExplicitOracle, ImplicitOracle};
+
+    #[test]
+    fn exact_error_matches_dense_computation() {
+        let ds = two_moons(45, 0.05, 1);
+        let kern = Gaussian::new(0.8);
+        let g = kernel_matrix(&ds, &kern);
+        let oracle = ExplicitOracle::new(&g);
+        let approx = assemble_from_indices(&oracle, vec![0, 9, 21, 33, 44], 0.0);
+        let fast = relative_frobenius_error(&oracle, &approx);
+        let dense = approx.reconstruct().fro_dist(&g) / g.fro_norm();
+        assert!((fast - dense).abs() < 1e-10, "{fast} vs {dense}");
+    }
+
+    #[test]
+    fn error_zero_when_exact() {
+        // full sampling ⇒ exact reconstruction ⇒ zero error
+        let ds = two_moons(20, 0.05, 2);
+        let kern = Gaussian::new(1.0);
+        let g = kernel_matrix(&ds, &kern);
+        let oracle = ExplicitOracle::new(&g);
+        let approx = assemble_from_indices(&oracle, (0..20).collect(), 0.0);
+        let e = relative_frobenius_error(&oracle, &approx);
+        assert!(e < 1e-7, "error {e}");
+    }
+
+    #[test]
+    fn sampled_error_tracks_exact() {
+        let ds = two_moons(80, 0.05, 3);
+        let kern = Gaussian::new(0.7);
+        let g = kernel_matrix(&ds, &kern);
+        let oracle = ExplicitOracle::new(&g);
+        let approx =
+            assemble_from_indices(&oracle, vec![0, 10, 20, 30, 40, 50, 60, 70], 0.0);
+        let exact = relative_frobenius_error(&oracle, &approx);
+        let est = sampled_relative_error(&oracle, &approx, 20_000, 7);
+        assert!(
+            (est - exact).abs() < 0.25 * exact.max(1e-6),
+            "est {est} exact {exact}"
+        );
+    }
+
+    #[test]
+    fn implicit_and_explicit_errors_agree() {
+        let ds = two_moons(35, 0.05, 4);
+        let kern = Gaussian::new(0.9);
+        let g = kernel_matrix(&ds, &kern);
+        let expo = ExplicitOracle::new(&g);
+        let impo = ImplicitOracle::new(&ds, &kern);
+        let approx = assemble_from_indices(&expo, vec![1, 8, 15, 29], 0.0);
+        let a = relative_frobenius_error(&expo, &approx);
+        let b = relative_frobenius_error(&impo, &approx);
+        assert!((a - b).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,11 @@
+//! The Nyström approximation object, error metrics, and the approximate
+//! SVD / diffusion-map embedding built from it (paper §II-C).
+
+pub mod approx;
+pub mod embedding;
+pub mod error;
+pub mod svd;
+
+pub use approx::NystromApprox;
+pub use error::{relative_frobenius_error, sampled_relative_error};
+pub use svd::nystrom_eig;

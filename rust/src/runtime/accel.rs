@@ -1,0 +1,345 @@
+//! Artifact-accelerated oASIS: the L3 hot path backed by the AOT-lowered
+//! L2/L1 modules (Δ-scoring, Gaussian kernel columns) with zero-padding to
+//! the fixed artifact shapes, and a native fallback when no artifact fits.
+//!
+//! The padding contract (tested in python/tests and here): C is padded to
+//! (n_pad × l_pad) row-major f32 with zeros beyond (n, k), R to
+//! (l_pad × n_pad); zero padding leaves Δ = d − colsum(C∘R) unchanged, so
+//! one artifact serves every iteration k ≤ l_pad.
+
+use super::{Executor, Manifest};
+use crate::sampling::{ColumnOracle, ColumnSampler, SelectionTrace};
+use crate::linalg::Mat;
+use crate::nystrom::NystromApprox;
+use crate::util::{rng::Pcg64, timing::Stopwatch};
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::path::Path;
+
+/// Loaded manifest + executor, shared by accelerated ops.
+pub struct Accel {
+    pub manifest: Manifest,
+    pub executor: Executor,
+}
+
+impl Accel {
+    /// Load from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Accel> {
+        let manifest = Manifest::load(dir)?;
+        let executor = Executor::cpu()?;
+        Ok(Accel { manifest, executor })
+    }
+
+    /// Load from `$OASIS_ARTIFACTS` / `./artifacts`; `None` if unavailable
+    /// (missing artifacts are not an error — native fallback).
+    pub fn try_default() -> Option<Accel> {
+        Accel::load(&Manifest::default_dir()).ok()
+    }
+
+    /// Gaussian kernel columns through the `gaussian_columns` artifact:
+    /// (n × m) block against (k × m) selected points. Falls back to an
+    /// error if no artifact bucket fits; callers dispatch natively then.
+    pub fn gaussian_columns(
+        &mut self,
+        z_blk: &[f64],
+        n: usize,
+        z_sel: &[f64],
+        k: usize,
+        m: usize,
+        inv_sigma_sq: f64,
+    ) -> Result<Vec<f64>> {
+        let art = self
+            .manifest
+            .best_fit("gaussian_columns", n, &[("k", k), ("m", m)])
+            .ok_or_else(|| anyhow!("no gaussian_columns artifact for n={n} k={k} m={m}"))?
+            .clone();
+        let (n_pad, k_pad, m_pad) = (
+            art.dim("n").unwrap(),
+            art.dim("k").unwrap(),
+            art.dim("m").unwrap(),
+        );
+        self.executor.load(&art)?;
+        // zero-pad inputs
+        let mut zb = vec![0.0f32; n_pad * m_pad];
+        for i in 0..n {
+            for d in 0..m {
+                zb[i * m_pad + d] = z_blk[i * m + d] as f32;
+            }
+        }
+        let mut zs = vec![0.0f32; k_pad * m_pad];
+        for i in 0..k {
+            for d in 0..m {
+                zs[i * m_pad + d] = z_sel[i * m + d] as f32;
+            }
+        }
+        let gamma = [inv_sigma_sq as f32];
+        let outs = self.executor.run_f32(
+            &art.name,
+            &[
+                (&zb, &[n_pad as i64, m_pad as i64]),
+                (&zs, &[k_pad as i64, m_pad as i64]),
+                (&gamma, &[]),
+            ],
+        )?;
+        let cols = &outs[0]; // (n_pad, k_pad)
+        let mut out = vec![0.0f64; n * k];
+        for i in 0..n {
+            for j in 0..k {
+                out[i * k + j] = cols[i * k_pad + j] as f64;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// oASIS with the Δ-scoring step served by the PJRT artifact. Maintains
+/// the paper's R matrix natively (f64) plus f32 mirrors in the artifact's
+/// padded layout; selection sequences match the native sampler to f32
+/// precision (tested in rust/tests/runtime_pjrt.rs).
+pub struct PjrtOasis {
+    pub max_cols: usize,
+    pub init_cols: usize,
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl PjrtOasis {
+    pub fn new(max_cols: usize, init_cols: usize, tol: f64, seed: u64) -> Self {
+        PjrtOasis { max_cols, init_cols, tol, seed }
+    }
+
+    /// Run selection using `accel` for scoring.
+    pub fn sample_with(
+        &self,
+        accel: &mut Accel,
+        oracle: &dyn ColumnOracle,
+    ) -> Result<(NystromApprox, SelectionTrace)> {
+        let sw = Stopwatch::start();
+        let n = oracle.n();
+        let l = self.max_cols.min(n);
+        let art = accel
+            .manifest
+            .best_fit("delta_scores", n, &[("l", l)])
+            .ok_or_else(|| anyhow!("no delta_scores artifact for n={n} l={l}"))?
+            .clone();
+        let n_pad = art.dim("n").unwrap();
+        let l_pad = art.dim("l").unwrap();
+        accel.executor.load(&art)?;
+
+        let d = oracle.diag();
+        let tol = crate::sampling::effective_tol(self.tol, &d);
+        let mut d32 = vec![0.0f32; n_pad];
+        for i in 0..n {
+            d32[i] = d[i] as f32;
+        }
+
+        // native f64 state (C column-major, W⁻¹ strided, R row-major)
+        let mut c: Vec<f64> = Vec::with_capacity(l * n);
+        let mut winv = vec![0.0f64; l * l];
+        let mut r = vec![0.0f64; l * n];
+        // f32 mirrors in artifact layout
+        let mut c32 = vec![0.0f32; n_pad * l_pad];
+        let mut r32 = vec![0.0f32; l_pad * n_pad];
+
+        // --- seed (same stream/rejection as the native sampler) ---
+        let mut rng = Pcg64::new(self.seed);
+        let k0 = self.init_cols.min(l);
+        let mut lambda: Vec<usize>;
+        loop {
+            let cand = rng.sample_without_replacement(n, k0);
+            c.clear();
+            c.resize(k0 * n, 0.0);
+            for (t, &j) in cand.iter().enumerate() {
+                oracle.column_into(j, &mut c[t * n..(t + 1) * n]);
+            }
+            let mut w = Mat::zeros(k0, k0);
+            for (ti, &i) in cand.iter().enumerate() {
+                for tj in 0..k0 {
+                    *w.at_mut(ti, tj) = c[tj * n + i];
+                }
+            }
+            if let Some(inv) = crate::linalg::inverse(&w) {
+                let cond = inv.max_abs() * w.max_abs();
+                if cond.is_finite() && cond <= 1e12 {
+                    for i in 0..k0 {
+                        for j in 0..k0 {
+                            winv[i * l + j] = inv.at(i, j);
+                        }
+                    }
+                    lambda = cand;
+                    break;
+                }
+            }
+        }
+        // R₀ = W₀⁻¹ C₀ᵀ
+        let mut k = k0;
+        for t in 0..k {
+            for i in 0..n {
+                let mut acc = 0.0;
+                for u in 0..k {
+                    acc += winv[t * l + u] * c[u * n + i];
+                }
+                r[t * n + i] = acc;
+            }
+        }
+        // mirrors
+        for t in 0..k {
+            mirror_col(&mut c32, &c[t * n..(t + 1) * n], t, l_pad);
+            mirror_row(&mut r32, &r[t * n..(t + 1) * n], t, n_pad);
+        }
+
+        let mut selected = vec![false; n];
+        let mut trace = SelectionTrace::default();
+        for &j in &lambda {
+            selected[j] = true;
+            trace.order.push(j);
+            trace.cum_secs.push(sw.secs());
+            trace.deltas.push(f64::NAN);
+        }
+
+        let mut diff = vec![0.0f64; n];
+        while k < l {
+            // Δ via the PJRT artifact
+            let outs = accel.executor.run_f32(
+                &art.name,
+                &[
+                    (&c32, &[n_pad as i64, l_pad as i64]),
+                    (&r32, &[l_pad as i64, n_pad as i64]),
+                    (&d32, &[n_pad as i64]),
+                ],
+            )?;
+            let delta32 = &outs[0];
+            let mut best = usize::MAX;
+            let mut best_abs = -1.0f64;
+            for i in 0..n {
+                if selected[i] {
+                    continue;
+                }
+                let a = (delta32[i] as f64).abs();
+                if a > best_abs {
+                    best_abs = a;
+                    best = i;
+                }
+            }
+            if best == usize::MAX || best_abs < tol {
+                break;
+            }
+            let s = 1.0 / delta32[best] as f64;
+            let mut col = vec![0.0f64; n];
+            oracle.column_into(best, &mut col);
+            // q = W⁻¹ b
+            let mut q = vec![0.0f64; k];
+            for t in 0..k {
+                let mut acc = 0.0;
+                for u in 0..k {
+                    acc += winv[t * l + u] * c[u * n + best];
+                }
+                q[t] = acc;
+            }
+            // diff = Cq − c_new
+            for i in 0..n {
+                let mut acc = 0.0;
+                for (t, &qt) in q.iter().enumerate() {
+                    acc += qt * c[t * n + i];
+                }
+                diff[i] = acc - col[i];
+            }
+            // Eq. 5 (W⁻¹)
+            for i in 0..k {
+                for j in 0..k {
+                    winv[i * l + j] += s * q[i] * q[j];
+                }
+                winv[i * l + k] = -s * q[i];
+                winv[k * l + i] = -s * q[i];
+            }
+            winv[k * l + k] = s;
+            // Eq. 6 (R) + mirrors
+            for t in 0..k {
+                let f = s * q[t];
+                let row = &mut r[t * n..(t + 1) * n];
+                for (o, &dv) in row.iter_mut().zip(&diff) {
+                    *o += f * dv;
+                }
+                mirror_row(&mut r32, row, t, n_pad);
+            }
+            for i in 0..n {
+                r[k * n + i] = -s * diff[i];
+            }
+            mirror_row(&mut r32, &r[k * n..(k + 1) * n], k, n_pad);
+            c.extend_from_slice(&col);
+            mirror_col(&mut c32, &col, k, l_pad);
+
+            selected[best] = true;
+            lambda.push(best);
+            trace.order.push(best);
+            trace.cum_secs.push(sw.secs());
+            trace.deltas.push(best_abs);
+            k += 1;
+        }
+
+        // assemble
+        let mut c_mat = Mat::zeros(n, k);
+        for t in 0..k {
+            for i in 0..n {
+                c_mat.data[i * k + t] = c[t * n + i];
+            }
+        }
+        let mut w_mat = Mat::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                w_mat.data[i * k + j] = winv[i * l + j];
+            }
+        }
+        Ok((
+            NystromApprox {
+                indices: lambda,
+                c: c_mat,
+                winv: w_mat,
+                selection_secs: sw.secs(),
+            },
+            trace,
+        ))
+    }
+}
+
+fn mirror_col(c32: &mut [f32], col: &[f64], t: usize, l_pad: usize) {
+    for (i, &v) in col.iter().enumerate() {
+        c32[i * l_pad + t] = v as f32;
+    }
+}
+
+fn mirror_row(r32: &mut [f32], row: &[f64], t: usize, n_pad: usize) {
+    let dst = &mut r32[t * n_pad..t * n_pad + row.len()];
+    for (o, &v) in dst.iter_mut().zip(row) {
+        *o = v as f32;
+    }
+}
+
+/// Convenience: a `ColumnSampler` wrapper owning its accel context.
+pub struct AccelOasisSampler {
+    pub inner: PjrtOasis,
+    accel: std::sync::Mutex<Accel>,
+}
+
+impl AccelOasisSampler {
+    pub fn new(inner: PjrtOasis, accel: Accel) -> Self {
+        AccelOasisSampler { inner, accel: std::sync::Mutex::new(accel) }
+    }
+}
+
+impl ColumnSampler for AccelOasisSampler {
+    fn name(&self) -> &'static str {
+        "oASIS (PJRT)"
+    }
+
+    fn sample(&self, oracle: &dyn ColumnOracle) -> Result<NystromApprox> {
+        let mut accel = self
+            .accel
+            .lock()
+            .map_err(|_| anyhow!("accel mutex poisoned"))?;
+        if oracle.n() == 0 {
+            bail!("empty oracle");
+        }
+        self.inner.sample_with(&mut accel, oracle).map(|(a, _)| a)
+    }
+}

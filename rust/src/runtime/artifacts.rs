@@ -1,0 +1,197 @@
+//! Artifact manifest: which fixed-shape AOT modules exist and what they
+//! compute. Mirrors the JSON written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One input of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-lowered module.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    /// absolute path to the .hlo.txt file
+    pub path: PathBuf,
+    /// which L2 op this lowers (e.g. "delta_scores")
+    pub op: String,
+    /// symbolic dims (n, l, k, m, ...)
+    pub dims: BTreeMap<String, usize>,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl Artifact {
+    pub fn dim(&self, name: &str) -> Option<usize> {
+        self.dims.get(name).copied()
+    }
+}
+
+/// The parsed artifact registry.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (paths resolved relative to `dir`).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            return Err(anyhow!("unsupported manifest version {version}"));
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut out = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = field_str(a, "name")?;
+            let file = field_str(a, "file")?;
+            let op = field_str(a, "op")?;
+            let mut dims = BTreeMap::new();
+            if let Some(dj) = a.get("dims").and_then(Json::as_obj) {
+                for (k, v) in dj {
+                    dims.insert(
+                        k.clone(),
+                        v.as_usize().ok_or_else(|| anyhow!("bad dim {k}"))?,
+                    );
+                }
+            }
+            let mut inputs = Vec::new();
+            for inp in a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: missing inputs"))?
+            {
+                inputs.push(InputSpec {
+                    name: field_str(inp, "name")?,
+                    shape: inp
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("bad shape"))?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                    dtype: field_str(inp, "dtype")?,
+                });
+            }
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .map(|v| {
+                    v.iter()
+                        .filter_map(|x| x.as_str().map(String::from))
+                        .collect()
+                })
+                .unwrap_or_default();
+            out.push(Artifact {
+                name,
+                path: dir.join(&file),
+                op,
+                dims,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { artifacts: out })
+    }
+
+    /// All artifacts lowering a given op.
+    pub fn for_op(&self, op: &str) -> Vec<&Artifact> {
+        self.artifacts.iter().filter(|a| a.op == op).collect()
+    }
+
+    /// Smallest artifact of `op` whose `n` bucket fits `n` (and whose other
+    /// dims satisfy the given minimums).
+    pub fn best_fit(&self, op: &str, n: usize, mins: &[(&str, usize)]) -> Option<&Artifact> {
+        self.for_op(op)
+            .into_iter()
+            .filter(|a| a.dim("n").map(|an| an >= n).unwrap_or(false))
+            .filter(|a| {
+                mins.iter().all(|(k, v)| a.dim(k).map(|d| d >= *v).unwrap_or(false))
+            })
+            .min_by_key(|a| a.dim("n").unwrap())
+    }
+
+    /// Default artifact directory: `$OASIS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("OASIS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+fn field_str(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(String::from)
+        .ok_or_else(|| anyhow!("missing field {key}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"version":1,"artifacts":[
+      {"name":"delta_n1024_l512","file":"delta_n1024_l512.hlo.txt",
+       "op":"delta_scores","dims":{"n":1024,"l":512},
+       "inputs":[{"name":"c","shape":[1024,512],"dtype":"float32"},
+                 {"name":"r","shape":[512,1024],"dtype":"float32"},
+                 {"name":"d","shape":[1024],"dtype":"float32"}],
+       "outputs":["delta"]},
+      {"name":"delta_n4096_l512","file":"delta_n4096_l512.hlo.txt",
+       "op":"delta_scores","dims":{"n":4096,"l":512},
+       "inputs":[{"name":"c","shape":[4096,512],"dtype":"float32"}],
+       "outputs":["delta"]}]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = &m.artifacts[0];
+        assert_eq!(a.dim("n"), Some(1024));
+        assert_eq!(a.inputs[1].shape, vec![512, 1024]);
+        assert_eq!(a.path, Path::new("/tmp/a/delta_n1024_l512.hlo.txt"));
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_bucket() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert_eq!(
+            m.best_fit("delta_scores", 1000, &[("l", 100)]).unwrap().dim("n"),
+            Some(1024)
+        );
+        assert_eq!(
+            m.best_fit("delta_scores", 2000, &[]).unwrap().dim("n"),
+            Some(4096)
+        );
+        assert!(m.best_fit("delta_scores", 10_000, &[]).is_none());
+        assert!(m.best_fit("delta_scores", 100, &[("l", 1000)]).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = r#"{"version":2,"artifacts":[]}"#;
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime bridge: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the `xla` crate's CPU
+//! client from the Rust hot path. Every op has a native fallback
+//! ([`accel`] dispatches), so the library works without artifacts.
+
+pub mod accel;
+pub mod artifacts;
+pub mod executor;
+
+pub use accel::Accel;
+pub use artifacts::{Artifact, Manifest};
+pub use executor::Executor;

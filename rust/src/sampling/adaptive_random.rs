@@ -1,0 +1,192 @@
+//! Deshpande-style adaptive random sampling ([11], §II-D3): columns are
+//! drawn with probability proportional to the squared norms of the current
+//! *residual* columns, in rounds; the residual is deflated after each
+//! round. This is the stochastic counterpart of Farahat's deterministic
+//! greedy rule and, like it, requires the explicit matrix.
+
+use super::{
+    assemble_from_indices, ColumnOracle, ColumnSampler, SelectionTrace,
+    TracedSampler,
+};
+use crate::linalg::{pinv_psd, Mat};
+use crate::nystrom::NystromApprox;
+use crate::util::{parallel, rng::Pcg64, timing::Stopwatch};
+use crate::Result;
+use anyhow::bail;
+
+/// Adaptive (residual-norm-weighted) random sampler.
+#[derive(Clone, Debug)]
+pub struct AdaptiveRandom {
+    pub cols: usize,
+    /// columns drawn per round before the residual is re-deflated.
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl AdaptiveRandom {
+    pub fn new(cols: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch >= 1);
+        AdaptiveRandom { cols, batch, seed }
+    }
+}
+
+impl ColumnSampler for AdaptiveRandom {
+    fn name(&self) -> &'static str {
+        "Adaptive random"
+    }
+
+    fn sample(&self, oracle: &dyn ColumnOracle) -> Result<NystromApprox> {
+        self.sample_traced(oracle).map(|(a, _)| a)
+    }
+}
+
+impl TracedSampler for AdaptiveRandom {
+    fn sample_traced(
+        &self,
+        oracle: &dyn ColumnOracle,
+    ) -> Result<(NystromApprox, SelectionTrace)> {
+        let sw = Stopwatch::start();
+        let n = oracle.n();
+        if self.cols > n {
+            bail!("cols > n");
+        }
+        let threads = parallel::default_threads();
+        // materialize G into the residual
+        let mut e = Mat::zeros(n, n);
+        {
+            let mut col = vec![0.0; n];
+            for j in 0..n {
+                oracle.column_into(j, &mut col);
+                for i in 0..n {
+                    e.data[i * n + j] = col[i];
+                }
+            }
+        }
+        let mut rng = Pcg64::new(self.seed);
+        let mut selected = vec![false; n];
+        let mut order = Vec::with_capacity(self.cols);
+        let mut trace = SelectionTrace::default();
+        while order.len() < self.cols {
+            // residual column norms (row-streaming accumulation)
+            let mut weights = {
+                let parts = parallel::map_ranges(n, threads, |range| {
+                    let mut acc = vec![0.0f64; n];
+                    for i in range {
+                        let row = &e.data[i * n..(i + 1) * n];
+                        for (a, &v) in acc.iter_mut().zip(row) {
+                            *a += v * v;
+                        }
+                    }
+                    acc
+                });
+                let mut total = vec![0.0f64; n];
+                for p in parts {
+                    for (t, v) in total.iter_mut().zip(p) {
+                        *t += v;
+                    }
+                }
+                total
+            };
+            for (j, w) in weights.iter_mut().enumerate() {
+                if selected[j] {
+                    *w = 0.0;
+                }
+            }
+            if weights.iter().sum::<f64>() <= 1e-300 {
+                break; // residual exhausted
+            }
+            // draw a batch without replacement by the weighted distribution
+            let mut batch = Vec::new();
+            for _ in 0..self.batch.min(self.cols - order.len()) {
+                let total: f64 = weights.iter().sum();
+                if total <= 1e-300 {
+                    break;
+                }
+                let j = rng.weighted_index(&weights);
+                weights[j] = 0.0;
+                selected[j] = true;
+                batch.push(j);
+                order.push(j);
+                trace.order.push(j);
+                trace.cum_secs.push(sw.secs());
+                trace.deltas.push(f64::NAN);
+            }
+            // deflate the residual by the span of the batch columns:
+            // E ← E − E_B (E_BB)⁺ E_Bᵀ   (orthogonal projection step)
+            let eb = e.select_cols(&batch); // n×b
+            let ebb = eb.select_rows(&batch); // b×b
+            let pinv = pinv_psd(&ebb, 1e-10);
+            let proj = eb.matmul(&pinv); // n×b
+            // E −= proj · ebᵀ (threaded over rows)
+            let b = batch.len();
+            parallel::for_each_chunk_mut(&mut e.data, n, threads, |range, chunk| {
+                for (local, i) in range.clone().enumerate() {
+                    let row = &mut chunk[local * n..(local + 1) * n];
+                    for t in 0..b {
+                        let f = proj.at(i, t);
+                        if f == 0.0 {
+                            continue;
+                        }
+                        // ebᵀ row t = eb column t
+                        for (j, o) in row.iter_mut().enumerate() {
+                            *o -= f * eb.at(j, t);
+                        }
+                    }
+                }
+            });
+        }
+        let approx = assemble_from_indices(oracle, order, 0.0);
+        let approx = NystromApprox { selection_secs: sw.secs(), ..approx };
+        Ok((approx, trace))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::Gaussian;
+    use crate::nystrom::relative_frobenius_error;
+    use crate::sampling::{uniform::Uniform, ImplicitOracle};
+
+    #[test]
+    fn beats_uniform_on_clustered_data() {
+        let ds = two_moons(150, 0.05, 13);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.08);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let l = 30;
+        let mut e_ad = 0.0;
+        let mut e_un = 0.0;
+        for s in 0..3 {
+            e_ad += relative_frobenius_error(
+                &oracle,
+                &AdaptiveRandom::new(l, 5, 40 + s).sample(&oracle).unwrap(),
+            );
+            e_un += relative_frobenius_error(
+                &oracle,
+                &Uniform::new(l, 40 + s).sample(&oracle).unwrap(),
+            );
+        }
+        assert!(e_ad < e_un, "adaptive {e_ad} !< uniform {e_un}");
+    }
+
+    #[test]
+    fn draws_distinct_indices() {
+        let ds = two_moons(60, 0.05, 2);
+        let kern = Gaussian::new(0.5);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let approx = AdaptiveRandom::new(25, 4, 7).sample(&oracle).unwrap();
+        let set: std::collections::HashSet<_> = approx.indices.iter().collect();
+        assert_eq!(set.len(), approx.k());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = two_moons(50, 0.05, 3);
+        let kern = Gaussian::new(0.6);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let a = AdaptiveRandom::new(12, 3, 11).sample(&oracle).unwrap();
+        let b = AdaptiveRandom::new(12, 3, 11).sample(&oracle).unwrap();
+        assert_eq!(a.indices, b.indices);
+    }
+}

@@ -1,0 +1,214 @@
+//! Incomplete Cholesky Decomposition with greedy diagonal pivoting
+//! (Fine & Scheinberg [27], referenced in §II-D4 via the Kumar survey).
+//!
+//! Partial Cholesky selects the pivot with the largest *residual diagonal*
+//! — and the residual diagonal after k pivots is exactly the oASIS Schur
+//! complement `Δᵢ = dᵢ − bᵢᵀW⁻¹bᵢ`. ICD is therefore an independent
+//! O(kn)-per-step implementation of the same selection rule through
+//! triangular factors instead of the Eq. 5/6 inverse updates; the
+//! cross-validation test below asserts the selection sequences coincide,
+//! which checks both implementations' numerics against each other.
+
+use super::{
+    assemble_from_indices, ColumnOracle, ColumnSampler, SelectionTrace,
+    TracedSampler,
+};
+use crate::nystrom::NystromApprox;
+use crate::util::timing::Stopwatch;
+use crate::Result;
+
+/// Greedy-pivot incomplete Cholesky sampler.
+#[derive(Clone, Debug)]
+pub struct IncompleteCholesky {
+    pub max_cols: usize,
+    /// stop when the largest residual diagonal falls below this.
+    pub tol: f64,
+}
+
+impl IncompleteCholesky {
+    pub fn new(max_cols: usize, tol: f64) -> Self {
+        IncompleteCholesky { max_cols, tol }
+    }
+}
+
+impl ColumnSampler for IncompleteCholesky {
+    fn name(&self) -> &'static str {
+        "ICD"
+    }
+
+    fn sample(&self, oracle: &dyn ColumnOracle) -> Result<NystromApprox> {
+        self.sample_traced(oracle).map(|(a, _)| a)
+    }
+}
+
+impl TracedSampler for IncompleteCholesky {
+    fn sample_traced(
+        &self,
+        oracle: &dyn ColumnOracle,
+    ) -> Result<(NystromApprox, SelectionTrace)> {
+        let sw = Stopwatch::start();
+        let n = oracle.n();
+        let l = self.max_cols.min(n);
+        let d = oracle.diag();
+        let tol = super::effective_tol(self.tol, &d);
+        // residual diagonal, updated as pivots are added
+        let mut resid = d.clone();
+        // Cholesky columns: column t (length n) at ell[t*n..]
+        let mut ell: Vec<f64> = Vec::with_capacity(l * n);
+        let mut order = Vec::with_capacity(l);
+        let mut selected = vec![false; n];
+        let mut trace = SelectionTrace::default();
+        let mut col = vec![0.0; n];
+        for _step in 0..l {
+            // pivot: largest residual diagonal among unselected
+            let mut best = usize::MAX;
+            let mut best_val = -1.0;
+            for i in 0..n {
+                if !selected[i] && resid[i] > best_val {
+                    best_val = resid[i];
+                    best = i;
+                }
+            }
+            if best == usize::MAX || best_val < tol {
+                break;
+            }
+            let k = order.len();
+            oracle.column_into(best, &mut col);
+            // new Cholesky column:
+            //   v = (g_best − Σ_t ℓ_t ℓ_t[best]) / sqrt(resid[best])
+            let piv_sqrt = best_val.sqrt();
+            let start = ell.len();
+            ell.extend_from_slice(&col);
+            {
+                let (prev, new) = ell.split_at_mut(start);
+                for t in 0..k {
+                    let f = prev[t * n + best];
+                    if f == 0.0 {
+                        continue;
+                    }
+                    let lt = &prev[t * n..(t + 1) * n];
+                    for (o, &lv) in new.iter_mut().zip(lt) {
+                        *o -= f * lv;
+                    }
+                }
+                for o in new.iter_mut() {
+                    *o /= piv_sqrt;
+                }
+            }
+            // update residual diagonal: resid_i −= ℓ_k[i]²
+            {
+                let lk = &ell[start..start + n];
+                for (r, &lv) in resid.iter_mut().zip(lk) {
+                    *r -= lv * lv;
+                }
+            }
+            selected[best] = true;
+            order.push(best);
+            trace.order.push(best);
+            trace.cum_secs.push(sw.secs());
+            trace.deltas.push(best_val);
+        }
+        let approx = assemble_from_indices(oracle, order, 0.0);
+        let approx = NystromApprox { selection_secs: sw.secs(), ..approx };
+        Ok((approx, trace))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{gauss_2d_plus_3d, two_moons};
+    use crate::kernels::{kernel_matrix, Gaussian, Linear};
+    use crate::nystrom::relative_frobenius_error;
+    use crate::sampling::{oasis::Oasis, ExplicitOracle, ImplicitOracle};
+
+    /// The headline cross-validation: ICD's greedy diagonal pivoting and
+    /// oASIS's Δ-argmax are the same rule, so (seeded with k₀=1 from the
+    /// *same first pivot*) the sequences must match. We let oASIS pick its
+    /// random seed column first and hand ICD the same start by checking
+    /// from the first adaptive step onward on a deterministic start:
+    /// with init_cols=1 and seed such that oASIS's seed column equals the
+    /// max-diagonal pivot, both sequences coincide entirely. To avoid
+    /// depending on the random seed, we compare ICD against oASIS started
+    /// from ICD's own first pivot via a custom run below.
+    #[test]
+    fn icd_matches_oasis_criterion() {
+        let ds = two_moons(150, 0.05, 3);
+        // non-constant diagonal so pivots are informative: linear kernel
+        let g = kernel_matrix(&ds, &Linear);
+        let oracle = ExplicitOracle::new(&g);
+        let (_, icd_trace) = IncompleteCholesky::new(12, 1e-12)
+            .sample_traced(&oracle)
+            .unwrap();
+        // run oASIS brute-force style from the same first column: emulate
+        // by trying all oASIS seeds until seed column == icd first pivot
+        let first = icd_trace.order[0];
+        let mut matched = false;
+        for seed in 0..200u64 {
+            let (_, tr) = Oasis::new(12, 1, 1e-12, seed)
+                .sample_traced(&oracle)
+                .unwrap();
+            if tr.order[0] == first {
+                assert_eq!(
+                    tr.order, icd_trace.order,
+                    "ICD and oASIS diverged from the same start"
+                );
+                matched = true;
+                break;
+            }
+        }
+        assert!(matched, "no oASIS seed started at ICD's pivot {first}");
+    }
+
+    #[test]
+    fn icd_residual_diag_equals_delta() {
+        // after k pivots, the residual diagonal equals Δ computed from the
+        // explicit W⁻¹ quadratic form
+        let ds = two_moons(80, 0.05, 5);
+        let kern = Gaussian::new(0.7);
+        let g = kernel_matrix(&ds, &kern);
+        let oracle = ExplicitOracle::new(&g);
+        let (_, trace) = IncompleteCholesky::new(6, 1e-12)
+            .sample_traced(&oracle)
+            .unwrap();
+        // Δ from the trace must match d − bᵀW⁻¹b at each selection
+        for k in 1..trace.order.len() {
+            let lam = &trace.order[..k];
+            let w = g.select_cols(lam).select_rows(lam);
+            let winv = crate::linalg::inverse(&w).unwrap();
+            let j = trace.order[k];
+            let b: Vec<f64> = lam.iter().map(|&i| g.at(i, j)).collect();
+            let wb = winv.matvec(&b);
+            let quad: f64 = b.iter().zip(&wb).map(|(x, y)| x * y).sum();
+            let delta = g.at(j, j) - quad;
+            assert!(
+                (delta - trace.deltas[k]).abs() < 1e-8 * (1.0 + delta.abs()),
+                "step {k}: residual {} vs Δ {delta}",
+                trace.deltas[k]
+            );
+        }
+    }
+
+    #[test]
+    fn icd_exact_recovery_on_low_rank() {
+        let ds = gauss_2d_plus_3d(40, 40, 9);
+        let g = kernel_matrix(&ds, &Linear);
+        let oracle = ExplicitOracle::new(&g);
+        let (approx, _) = IncompleteCholesky::new(10, 1e-9)
+            .sample_traced(&oracle)
+            .unwrap();
+        assert!(approx.k() <= 4);
+        let err = relative_frobenius_error(&oracle, &approx);
+        assert!(err < 1e-6, "err {err}");
+    }
+
+    #[test]
+    fn icd_works_on_implicit_oracle() {
+        let ds = two_moons(120, 0.05, 7);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let approx = IncompleteCholesky::new(30, 1e-12).sample(&oracle).unwrap();
+        let err = relative_frobenius_error(&oracle, &approx);
+        assert!(err < 0.1, "err {err}");
+    }
+}

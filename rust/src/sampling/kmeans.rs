@@ -1,0 +1,259 @@
+//! K-means Nyström (Zhang, Tsang & Kwok [16], paper §II-D4).
+//!
+//! Instead of sampling columns of G, cluster the *data* into K centroids
+//! and approximate `G ≈ E W⁺ Eᵀ` where `E(i,j) = k(zᵢ, cⱼ)` and
+//! `W(i,j) = k(cᵢ, cⱼ)`. The centroids are not data points, so the method
+//! yields no index set Λ (`indices` is empty) and cannot serve general CSS
+//! — the limitation the paper highlights.
+
+use super::{ColumnOracle, ColumnSampler};
+use crate::data::Dataset;
+use crate::kernels::Kernel;
+use crate::linalg::{pinv_psd, Mat};
+use crate::nystrom::NystromApprox;
+use crate::util::{parallel, rng::Pcg64, timing::Stopwatch};
+use crate::Result;
+use anyhow::bail;
+
+/// Lloyd's algorithm with k-means++ seeding.
+pub struct KMeans {
+    pub k: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl KMeans {
+    pub fn new(k: usize, seed: u64) -> KMeans {
+        KMeans { k, max_iters: 25, seed }
+    }
+
+    /// Run Lloyd's algorithm; returns (centroids, assignments, iterations).
+    pub fn fit(&self, ds: &Dataset) -> (Dataset, Vec<usize>, usize) {
+        let n = ds.n();
+        let dim = ds.dim();
+        let k = self.k.min(n);
+        let mut rng = Pcg64::new(self.seed);
+
+        // --- k-means++ seeding ---
+        let mut centroids = Dataset::zeros(k, dim);
+        let first = rng.below(n);
+        centroids.point_mut(0).copy_from_slice(ds.point(first));
+        let mut dist2 = vec![f64::INFINITY; n];
+        for c in 1..k {
+            let prev = centroids.point(c - 1).to_vec();
+            for i in 0..n {
+                let d = sq_dist(ds.point(i), &prev);
+                if d < dist2[i] {
+                    dist2[i] = d;
+                }
+            }
+            let total: f64 = dist2.iter().sum();
+            let next = if total > 0.0 {
+                rng.weighted_index(&dist2)
+            } else {
+                rng.below(n)
+            };
+            centroids.point_mut(c).copy_from_slice(ds.point(next));
+        }
+
+        // --- Lloyd iterations ---
+        let threads = parallel::default_threads();
+        let mut assign = vec![0usize; n];
+        let mut iters = 0;
+        for it in 0..self.max_iters {
+            iters = it + 1;
+            // assignment step (threaded)
+            let new_assign: Vec<usize> = parallel::map_ranges(n, threads, |range| {
+                let mut out = Vec::with_capacity(range.len());
+                for i in range {
+                    let p = ds.point(i);
+                    let mut best = 0;
+                    let mut bd = f64::INFINITY;
+                    for c in 0..k {
+                        let d = sq_dist(p, centroids.point(c));
+                        if d < bd {
+                            bd = d;
+                            best = c;
+                        }
+                    }
+                    out.push(best);
+                }
+                out
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+            let changed = new_assign
+                .iter()
+                .zip(&assign)
+                .filter(|(a, b)| a != b)
+                .count();
+            assign = new_assign;
+            // update step
+            let mut sums = vec![0.0; k * dim];
+            let mut counts = vec![0usize; k];
+            for i in 0..n {
+                let c = assign[i];
+                counts[c] += 1;
+                let p = ds.point(i);
+                for d in 0..dim {
+                    sums[c * dim + d] += p[d];
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    // re-seed empty cluster at a random point
+                    let j = rng.below(n);
+                    centroids.point_mut(c).copy_from_slice(ds.point(j));
+                } else {
+                    let inv = 1.0 / counts[c] as f64;
+                    let cp = centroids.point_mut(c);
+                    for d in 0..dim {
+                        cp[d] = sums[c * dim + d] * inv;
+                    }
+                }
+            }
+            if changed == 0 && it > 0 {
+                break;
+            }
+        }
+        (centroids, assign, iters)
+    }
+}
+
+#[inline]
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// The K-means Nyström approximator. Unlike the column samplers it needs
+/// the raw dataset and kernel function, not just a column oracle.
+pub struct KMeansNystrom<'a> {
+    pub ds: &'a Dataset,
+    pub kernel: &'a dyn Kernel,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl<'a> KMeansNystrom<'a> {
+    pub fn new(
+        ds: &'a Dataset,
+        kernel: &'a dyn Kernel,
+        k: usize,
+        seed: u64,
+    ) -> Self {
+        KMeansNystrom { ds, kernel, k, seed }
+    }
+
+    /// Build the approximation G ≈ E W⁺ Eᵀ from K centroids.
+    pub fn approximate(&self) -> Result<NystromApprox> {
+        let sw = Stopwatch::start();
+        let n = self.ds.n();
+        if self.k > n {
+            bail!("k > n");
+        }
+        let (centroids, _assign, _iters) =
+            KMeans::new(self.k, self.seed).fit(self.ds);
+        let k = centroids.n();
+        // E: n×k kernel evaluations against centroids (threaded)
+        let mut e = Mat::zeros(n, k);
+        {
+            let ds = self.ds;
+            let kernel = self.kernel;
+            let cent = &centroids;
+            parallel::for_each_chunk_mut(
+                &mut e.data,
+                k,
+                parallel::default_threads(),
+                |range, chunk| {
+                    for (local, i) in range.clone().enumerate() {
+                        let zi = ds.point(i);
+                        let row = &mut chunk[local * k..(local + 1) * k];
+                        for (c, out) in row.iter_mut().enumerate() {
+                            *out = kernel.eval(zi, cent.point(c));
+                        }
+                    }
+                },
+            );
+        }
+        // W: k×k centroid kernel matrix
+        let w = Mat::from_fn(k, k, |i, j| {
+            self.kernel.eval(centroids.point(i), centroids.point(j))
+        });
+        let winv = pinv_psd(&w, 1e-12);
+        Ok(NystromApprox {
+            indices: vec![], // no columns of G are sampled (§II-D4)
+            c: e,
+            winv,
+            selection_secs: sw.secs(),
+        })
+    }
+}
+
+/// Adapter so K-means Nyström can sit in `&[&dyn ColumnSampler]` method
+/// sweeps. `sample` ignores the oracle's columns and uses the bound
+/// dataset; callers must pass an oracle over the same data.
+impl ColumnSampler for KMeansNystrom<'_> {
+    fn name(&self) -> &'static str {
+        "K-means"
+    }
+
+    fn sample(&self, oracle: &dyn ColumnOracle) -> Result<NystromApprox> {
+        if oracle.n() != self.ds.n() {
+            bail!("oracle size does not match bound dataset");
+        }
+        self.approximate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{gaussian_clusters, two_moons};
+    use crate::kernels::Gaussian;
+    use crate::nystrom::relative_frobenius_error;
+    use crate::sampling::ImplicitOracle;
+
+    #[test]
+    fn kmeans_recovers_separated_clusters() {
+        // 4 tight, well-separated clusters: inertia must be near zero and
+        // each cluster pure.
+        let ds = gaussian_clusters(200, 3, 4, 0.05, 1);
+        let (cent, assign, _) = KMeans::new(4, 2).fit(&ds);
+        assert_eq!(cent.n(), 4);
+        // all points close to their centroid
+        for i in 0..ds.n() {
+            let d = sq_dist(ds.point(i), cent.point(assign[i]));
+            assert!(d < 0.5, "point {i} far from centroid: {d}");
+        }
+    }
+
+    #[test]
+    fn empty_cluster_reseeded() {
+        // k larger than distinct points — must not panic
+        let ds = crate::data::Dataset::from_rows(vec![vec![0.0, 0.0]; 10]);
+        let (cent, _, _) = KMeans::new(5, 3).fit(&ds);
+        assert_eq!(cent.n(), 5);
+    }
+
+    #[test]
+    fn nystrom_accuracy_on_cluster_data() {
+        // BORG-like data is K-means's best case (paper §V-E)
+        let ds = gaussian_clusters(150, 4, 6, 0.15, 4);
+        let kern = Gaussian::new(2.0);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let approx = KMeansNystrom::new(&ds, &kern, 24, 5).approximate().unwrap();
+        assert!(approx.indices.is_empty());
+        let err = relative_frobenius_error(&oracle, &approx);
+        assert!(err < 0.05, "err {err}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = two_moons(80, 0.05, 6);
+        let (c1, a1, _) = KMeans::new(8, 9).fit(&ds);
+        let (c2, a2, _) = KMeans::new(8, 9).fit(&ds);
+        assert_eq!(a1, a2);
+        assert_eq!(c1, c2);
+    }
+}

@@ -1,0 +1,177 @@
+//! Leverage-score sampling (Gittens & Mahoney [15], paper §II-D2).
+//!
+//! Columns are drawn with probability proportional to the squared row
+//! norms of the top-k eigenvector matrix of G. Like the paper's setup this
+//! requires the *full* explicit G (the reason the method is excluded from
+//! the implicit/large classes). We compute the top-k subspace with
+//! randomized subspace iteration (Halko et al. [38]) — the "fast
+//! approximation" route the paper references — which costs O(n²(k+p))
+//! instead of a full O(n³) eigendecomposition.
+
+use super::{
+    assemble_from_indices, ColumnOracle, ColumnSampler, SelectionTrace,
+    TracedSampler,
+};
+use crate::linalg::{sym_eig, thin_qr, Mat};
+use crate::nystrom::NystromApprox;
+use crate::util::{rng::Pcg64, timing::Stopwatch};
+use crate::Result;
+use anyhow::bail;
+
+/// Leverage-score sampler over an explicit kernel matrix.
+#[derive(Clone, Debug)]
+pub struct LeverageScores {
+    /// number of columns ℓ to draw.
+    pub cols: usize,
+    /// rank of the leverage subspace (defaults to `cols` like [15]).
+    pub rank: usize,
+    /// subspace-iteration oversampling and power passes.
+    pub oversample: usize,
+    pub power_iters: usize,
+    pub seed: u64,
+}
+
+impl LeverageScores {
+    pub fn new(cols: usize, rank: usize, seed: u64) -> LeverageScores {
+        // one power pass suffices for the fast-decaying kernel spectra the
+        // paper targets (Halko et al. [38]); each extra pass costs an
+        // O(n²p) multiply plus a serial O(np²) QR — see §Perf
+        LeverageScores { cols, rank, oversample: 8, power_iters: 1, seed }
+    }
+
+    /// The leverage scores sⱼ = ‖U_k(j,:)‖² (probability weights).
+    pub fn scores(&self, g: &Mat) -> Vec<f64> {
+        let n = g.rows;
+        let k = self.rank.min(n);
+        let p = (k + self.oversample).min(n);
+        let mut rng = Pcg64::new(self.seed ^ 0x1e7e_7a6e);
+        // randomized range finder: Y = G Ω
+        let mut omega = Mat::zeros(n, p);
+        rng.fill_normal(&mut omega.data);
+        let mut y = g.matmul(&omega);
+        let mut q = thin_qr(&y).0;
+        for _ in 0..self.power_iters {
+            y = g.matmul(&q);
+            q = thin_qr(&y).0;
+        }
+        // small projected eig: B = Qᵀ G Q (p×p)
+        let gq = g.matmul(&q);
+        let b = q.t_matmul(&gq);
+        let eig = sym_eig(&b);
+        // top-k eigenvectors of G ≈ Q · V[:, :k]
+        let vk = eig.vecs.select_cols(&(0..k).collect::<Vec<_>>());
+        let u = q.matmul(&vk); // n×k
+        (0..n)
+            .map(|j| u.row(j).iter().map(|x| x * x).sum::<f64>())
+            .collect()
+    }
+}
+
+impl ColumnSampler for LeverageScores {
+    fn name(&self) -> &'static str {
+        "Leverage scores"
+    }
+
+    fn sample(&self, oracle: &dyn ColumnOracle) -> Result<NystromApprox> {
+        self.sample_traced(oracle).map(|(a, _)| a)
+    }
+}
+
+impl TracedSampler for LeverageScores {
+    fn sample_traced(
+        &self,
+        oracle: &dyn ColumnOracle,
+    ) -> Result<(NystromApprox, SelectionTrace)> {
+        let sw = Stopwatch::start();
+        let n = oracle.n();
+        if self.cols > n {
+            bail!("cols > n");
+        }
+        // materialize G (the method requires it — paper §II-D2)
+        let mut g = Mat::zeros(n, n);
+        {
+            let mut col = vec![0.0; n];
+            for j in 0..n {
+                oracle.column_into(j, &mut col);
+                for i in 0..n {
+                    g.data[i * n + j] = col[i];
+                }
+            }
+        }
+        let mut weights = self.scores(&g);
+        // draw ℓ distinct indices with probability ∝ score
+        let mut rng = Pcg64::new(self.seed);
+        let mut order = Vec::with_capacity(self.cols);
+        for _ in 0..self.cols {
+            let total: f64 = weights.iter().sum();
+            let j = if total <= 0.0 {
+                // all remaining scores zero — fall back to uniform
+                loop {
+                    let c = rng.below(n);
+                    if weights[c] >= 0.0 {
+                        break c;
+                    }
+                }
+            } else {
+                rng.weighted_index(&weights)
+            };
+            order.push(j);
+            weights[j] = 0.0; // without replacement
+        }
+        let secs = sw.secs();
+        let mut trace = SelectionTrace::default();
+        for (i, &j) in order.iter().enumerate() {
+            trace.order.push(j);
+            trace.cum_secs.push(secs * (i + 1) as f64 / self.cols as f64);
+            trace.deltas.push(f64::NAN);
+        }
+        let approx = assemble_from_indices(oracle, order, 0.0);
+        let approx = NystromApprox { selection_secs: sw.secs(), ..approx };
+        Ok((approx, trace))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{gaussian_clusters, two_moons};
+    use crate::kernels::{kernel_matrix, Gaussian};
+    use crate::nystrom::relative_frobenius_error;
+    use crate::sampling::ExplicitOracle;
+
+    #[test]
+    fn scores_concentrate_on_informative_columns() {
+        // rank-1 spike: one big outlier direction dominates the top
+        // subspace, so its leverage must rank near the top.
+        let ds = gaussian_clusters(60, 4, 3, 0.1, 5);
+        let g = kernel_matrix(&ds, &Gaussian::new(2.0));
+        let lev = LeverageScores::new(10, 10, 1);
+        let scores = lev.scores(&g);
+        assert_eq!(scores.len(), 60);
+        assert!(scores.iter().all(|&s| s >= -1e-9));
+        // scores sum ≈ rank (property of orthonormal U)
+        let sum: f64 = scores.iter().sum();
+        assert!((sum - 10.0).abs() < 0.5, "score mass {sum}");
+    }
+
+    #[test]
+    fn sampling_improves_over_worst_case() {
+        let ds = two_moons(120, 0.05, 7);
+        let g = kernel_matrix(&ds, &Gaussian::with_sigma_fraction(&ds, 0.05));
+        let oracle = ExplicitOracle::new(&g);
+        let approx = LeverageScores::new(40, 40, 3).sample(&oracle).unwrap();
+        assert_eq!(approx.k(), 40);
+        let err = relative_frobenius_error(&oracle, &approx);
+        assert!(err < 0.5, "err {err}");
+    }
+
+    #[test]
+    fn without_replacement() {
+        let ds = two_moons(50, 0.05, 8);
+        let g = kernel_matrix(&ds, &Gaussian::new(0.5));
+        let oracle = ExplicitOracle::new(&g);
+        let approx = LeverageScores::new(25, 25, 4).sample(&oracle).unwrap();
+        let set: std::collections::HashSet<_> = approx.indices.iter().collect();
+        assert_eq!(set.len(), 25);
+    }
+}

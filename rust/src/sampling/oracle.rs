@@ -1,0 +1,260 @@
+//! Column oracles: how samplers read the kernel matrix.
+//!
+//! The key property oASIS exploits (paper §III-A) is that only the sampled
+//! columns and the diagonal are ever needed — so the oracle interface
+//! exposes exactly that, and the implicit implementations never form G.
+
+use crate::data::Dataset;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::util::parallel;
+
+/// Read access to columns/diagonal/entries of a symmetric PSD matrix.
+pub trait ColumnOracle: Sync {
+    /// Matrix dimension n.
+    fn n(&self) -> usize;
+
+    /// diag(G).
+    fn diag(&self) -> Vec<f64>;
+
+    /// Write column j of G into `out` (length n).
+    fn column_into(&self, j: usize, out: &mut [f64]);
+
+    /// A single entry G(i, j) (used by sampled-error estimation).
+    fn entry(&self, i: usize, j: usize) -> f64;
+
+    /// Convenience: column j as a fresh Vec.
+    fn column(&self, j: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.n()];
+        self.column_into(j, &mut out);
+        out
+    }
+}
+
+/// Oracle over an explicitly stored kernel matrix (Table I class).
+pub struct ExplicitOracle<'a> {
+    g: &'a Mat,
+}
+
+impl<'a> ExplicitOracle<'a> {
+    pub fn new(g: &'a Mat) -> Self {
+        assert_eq!(g.rows, g.cols, "kernel matrix must be square");
+        ExplicitOracle { g }
+    }
+}
+
+impl ColumnOracle for ExplicitOracle<'_> {
+    fn n(&self) -> usize {
+        self.g.rows
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        (0..self.g.rows).map(|i| self.g.at(i, i)).collect()
+    }
+
+    fn column_into(&self, j: usize, out: &mut [f64]) {
+        // symmetric ⇒ column j == row j (contiguous in row-major storage)
+        out.copy_from_slice(self.g.row(j));
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.g.at(i, j)
+    }
+}
+
+/// Oracle that computes kernel columns on the fly from the data — the
+/// Table II "implicit" class where G is never formed.
+pub struct ImplicitOracle<'a> {
+    ds: &'a Dataset,
+    kernel: &'a dyn Kernel,
+}
+
+impl<'a> ImplicitOracle<'a> {
+    pub fn new(ds: &'a Dataset, kernel: &'a dyn Kernel) -> Self {
+        ImplicitOracle { ds, kernel }
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        self.ds
+    }
+
+    pub fn kernel(&self) -> &dyn Kernel {
+        self.kernel
+    }
+}
+
+impl ColumnOracle for ImplicitOracle<'_> {
+    fn n(&self) -> usize {
+        self.ds.n()
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        crate::kernels::kernel_diag(self.ds, self.kernel)
+    }
+
+    fn column_into(&self, j: usize, out: &mut [f64]) {
+        crate::kernels::kernel_column_into(self.ds, self.kernel, j, out);
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.kernel.eval(self.ds.point(i), self.ds.point(j))
+    }
+}
+
+/// Sparse k-NN-truncated kernel oracle (§V-E): each column keeps only the
+/// `knn` largest kernel values (plus the diagonal), all others are exactly
+/// zero. Columns are precomputed in CSR-like storage; symmetrized so the
+/// matrix stays symmetric (an entry survives if it is in either point's
+/// neighbor list).
+pub struct SparseKnnOracle {
+    n: usize,
+    diag: Vec<f64>,
+    /// per-column (row index, value) pairs, sorted by row
+    cols: Vec<Vec<(u32, f64)>>,
+}
+
+impl SparseKnnOracle {
+    pub fn build(ds: &Dataset, kernel: &dyn Kernel, knn: usize) -> Self {
+        let n = ds.n();
+        let diag = crate::kernels::kernel_diag(ds, kernel);
+        // neighbor lists per column (threaded)
+        let lists: Vec<Vec<(u32, f64)>> = parallel::map_ranges(
+            n,
+            parallel::default_threads(),
+            |range| {
+                let mut out = Vec::with_capacity(range.len());
+                let mut buf: Vec<(u32, f64)> = Vec::with_capacity(n);
+                for j in range {
+                    buf.clear();
+                    let zj = ds.point(j);
+                    for i in 0..n {
+                        if i != j {
+                            buf.push((i as u32, kernel.eval(ds.point(i), zj)));
+                        }
+                    }
+                    buf.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                    let mut kept: Vec<(u32, f64)> =
+                        buf.iter().take(knn).copied().collect();
+                    kept.sort_by_key(|e| e.0);
+                    out.push(kept);
+                }
+                out
+            },
+        )
+        .into_iter()
+        .flatten()
+        .collect();
+        // symmetrize: union of (i in knn(j)) and (j in knn(i))
+        let mut sets: Vec<std::collections::BTreeMap<u32, f64>> = lists
+            .iter()
+            .map(|l| l.iter().copied().collect())
+            .collect();
+        for j in 0..n {
+            for &(i, v) in &lists[j] {
+                sets[i as usize].entry(j as u32).or_insert(v);
+            }
+        }
+        let cols: Vec<Vec<(u32, f64)>> = sets
+            .into_iter()
+            .map(|m| m.into_iter().collect())
+            .collect();
+        SparseKnnOracle { n, diag, cols }
+    }
+
+    /// Fraction of nonzero entries (including the diagonal).
+    pub fn density(&self) -> f64 {
+        let nnz: usize = self.cols.iter().map(|c| c.len()).sum::<usize>() + self.n;
+        nnz as f64 / (self.n as f64 * self.n as f64)
+    }
+}
+
+impl ColumnOracle for SparseKnnOracle {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        self.diag.clone()
+    }
+
+    fn column_into(&self, j: usize, out: &mut [f64]) {
+        out.fill(0.0);
+        out[j] = self.diag[j];
+        for &(i, v) in &self.cols[j] {
+            out[i as usize] = v;
+        }
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        if i == j {
+            return self.diag[j];
+        }
+        match self.cols[j].binary_search_by_key(&(i as u32), |e| e.0) {
+            Ok(pos) => self.cols[j][pos].1,
+            Err(_) => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::{kernel_matrix, Gaussian};
+
+    #[test]
+    fn explicit_and_implicit_agree() {
+        let ds = two_moons(40, 0.05, 3);
+        let kern = Gaussian::new(0.9);
+        let g = kernel_matrix(&ds, &kern);
+        let exp = ExplicitOracle::new(&g);
+        let imp = ImplicitOracle::new(&ds, &kern);
+        assert_eq!(exp.n(), imp.n());
+        let de = exp.diag();
+        let di = imp.diag();
+        for j in [0usize, 13, 39] {
+            assert!((de[j] - di[j]).abs() < 1e-14);
+            let ce = exp.column(j);
+            let ci = imp.column(j);
+            for i in 0..40 {
+                assert!((ce[i] - ci[i]).abs() < 1e-14);
+                assert!((exp.entry(i, j) - imp.entry(i, j)).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_knn_is_symmetric() {
+        let ds = two_moons(50, 0.05, 4);
+        let kern = Gaussian::new(0.5);
+        let o = SparseKnnOracle::build(&ds, &kern, 5);
+        for i in 0..50 {
+            for j in 0..50 {
+                assert!(
+                    (o.entry(i, j) - o.entry(j, i)).abs() < 1e-14,
+                    "asymmetry at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_knn_preserves_top_neighbors_and_zeros() {
+        let ds = two_moons(60, 0.05, 5);
+        let kern = Gaussian::new(0.4);
+        let o = SparseKnnOracle::build(&ds, &kern, 4);
+        let dense = ImplicitOracle::new(&ds, &kern);
+        let col_s = o.column(7);
+        let col_d = dense.column(7);
+        // nonzeros match the dense kernel exactly
+        for i in 0..60 {
+            if col_s[i] != 0.0 {
+                assert!((col_s[i] - col_d[i]).abs() < 1e-14);
+            }
+        }
+        // sparsity actually happened
+        assert!(o.density() < 0.5, "density {}", o.density());
+        // diagonal kept
+        assert_eq!(col_s[7], 1.0);
+    }
+}

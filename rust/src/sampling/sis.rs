@@ -1,0 +1,185 @@
+//! SIS — the naive Sequential Incoherence Selection of paper §III-A.
+//!
+//! Identical selection rule to oASIS but recomputes `W_k⁻¹` (pseudo-inverse)
+//! and every score `Δᵢ = dᵢ − bᵢᵀ W⁺ bᵢ` from scratch each step: O(k³ + k²n)
+//! per iteration. It exists as the correctness oracle for oASIS — the
+//! accelerated update formulas (Eq. 5/6) must reproduce its selection
+//! sequence exactly — and for the ablation bench (fig6 runtime panel).
+
+use super::{ColumnOracle, ColumnSampler, SelectionTrace, TracedSampler};
+use crate::linalg::{pinv_psd, Mat};
+use crate::nystrom::NystromApprox;
+use crate::util::{rng::Pcg64, timing::Stopwatch};
+use crate::Result;
+
+/// The naive SIS sampler (test oracle; O(ℓ·(ℓ³+ℓ²n)) total).
+#[derive(Clone, Debug)]
+pub struct Sis {
+    pub max_cols: usize,
+    pub init_cols: usize,
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Sis {
+    pub fn new(max_cols: usize, init_cols: usize, tol: f64, seed: u64) -> Sis {
+        assert!(init_cols >= 1 && init_cols <= max_cols);
+        Sis { max_cols, init_cols, tol, seed }
+    }
+
+    pub fn sample_traced(
+        &self,
+        oracle: &dyn ColumnOracle,
+    ) -> Result<(NystromApprox, SelectionTrace)> {
+        let sw = Stopwatch::start();
+        let n = oracle.n();
+        let l = self.max_cols.min(n);
+        let d = oracle.diag();
+        let tol = super::effective_tol(self.tol, &d);
+        // seed columns — must match Oasis for sequence-equality tests:
+        // same RNG stream, same rejection rule.
+        let mut rng = Pcg64::new(self.seed);
+        let mut cols: Vec<Vec<f64>>;
+        let mut lambda: Vec<usize>;
+        loop {
+            let cand = rng.sample_without_replacement(n, self.init_cols.min(l));
+            let test_cols: Vec<Vec<f64>> =
+                cand.iter().map(|&j| oracle.column(j)).collect();
+            let w = w_from(&test_cols, &cand);
+            match crate::linalg::inverse(&w) {
+                Some(inv)
+                    if inv.max_abs() * w.max_abs() <= 1e12
+                        && (inv.max_abs() * w.max_abs()).is_finite() =>
+                {
+                    cols = test_cols;
+                    lambda = cand;
+                    break;
+                }
+                _ => continue,
+            }
+        }
+        let mut trace = SelectionTrace::default();
+        for &j in &lambda {
+            trace.order.push(j);
+            trace.cum_secs.push(sw.secs());
+            trace.deltas.push(f64::NAN);
+        }
+
+        while lambda.len() < l {
+            let k = lambda.len();
+            // W⁺ from scratch
+            let w = w_from(&cols, &lambda);
+            let winv = pinv_psd(&w, 1e-12);
+            // Δ for every candidate from scratch
+            let mut best = usize::MAX;
+            let mut best_abs = -1.0;
+            for i in 0..n {
+                if lambda.contains(&i) {
+                    continue;
+                }
+                let b: Vec<f64> = cols.iter().map(|c| c[i]).collect();
+                let wb = winv.matvec(&b);
+                let quad: f64 = b.iter().zip(&wb).map(|(x, y)| x * y).sum();
+                let delta = (d[i] - quad).abs();
+                if delta > best_abs {
+                    best_abs = delta;
+                    best = i;
+                }
+            }
+            if best_abs < tol {
+                break;
+            }
+            cols.push(oracle.column(best));
+            lambda.push(best);
+            trace.order.push(best);
+            trace.cum_secs.push(sw.secs());
+            trace.deltas.push(best_abs);
+            let _ = k;
+        }
+
+        // assemble
+        let k = lambda.len();
+        let mut c = Mat::zeros(n, k);
+        for (t, col) in cols.iter().enumerate() {
+            for i in 0..n {
+                c.data[i * k + t] = col[i];
+            }
+        }
+        let w = w_from(&cols, &lambda);
+        let winv = pinv_psd(&w, 1e-12);
+        Ok((
+            NystromApprox { indices: lambda, c, winv, selection_secs: sw.secs() },
+            trace,
+        ))
+    }
+}
+
+fn w_from(cols: &[Vec<f64>], lambda: &[usize]) -> Mat {
+    let k = lambda.len();
+    let mut w = Mat::zeros(k, k);
+    for (ti, &i) in lambda.iter().enumerate() {
+        for (tj, col) in cols.iter().enumerate() {
+            *w.at_mut(ti, tj) = col[i];
+        }
+    }
+    w
+}
+
+impl ColumnSampler for Sis {
+    fn name(&self) -> &'static str {
+        "SIS (naive)"
+    }
+
+    fn sample(&self, oracle: &dyn ColumnOracle) -> Result<NystromApprox> {
+        self.sample_traced(oracle).map(|(a, _)| a)
+    }
+}
+
+impl TracedSampler for Sis {
+    fn sample_traced(
+        &self,
+        oracle: &dyn ColumnOracle,
+    ) -> Result<(NystromApprox, SelectionTrace)> {
+        Sis::sample_traced(self, oracle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::Gaussian;
+    use crate::sampling::oasis::{Oasis, Variant};
+    use crate::sampling::ImplicitOracle;
+
+    /// DESIGN.md invariant 3: the accelerated oASIS must reproduce the
+    /// naive SIS selection sequence exactly.
+    #[test]
+    fn oasis_matches_sis_sequence() {
+        let ds = two_moons(90, 0.05, 17);
+        let kern = Gaussian::new(0.6);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let (_, sis_trace) = Sis::new(18, 3, 1e-12, 5).sample_traced(&oracle).unwrap();
+        for variant in [Variant::PaperR, Variant::Incremental] {
+            let (_, o_trace) = Oasis::new(18, 3, 1e-12, 5)
+                .with_variant(variant)
+                .sample_traced(&oracle)
+                .unwrap();
+            assert_eq!(
+                sis_trace.order, o_trace.order,
+                "variant {variant:?} diverged from naive SIS"
+            );
+        }
+    }
+
+    #[test]
+    fn sis_exact_recovery() {
+        let ds = crate::data::generators::gauss_2d_plus_3d(25, 25, 3);
+        let g = crate::kernels::kernel_matrix(&ds, &crate::kernels::Linear);
+        let oracle = crate::sampling::ExplicitOracle::new(&g);
+        let (approx, _) = Sis::new(10, 1, 1e-8, 2).sample_traced(&oracle).unwrap();
+        assert!(approx.k() <= 4);
+        let err = crate::nystrom::relative_frobenius_error(&oracle, &approx);
+        assert!(err < 1e-6, "err {err}");
+    }
+}

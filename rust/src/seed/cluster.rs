@@ -1,0 +1,112 @@
+//! Spectral clustering on a SEED affinity matrix — the clustering
+//! application the paper cites for SEED (§II-E) and the future-work
+//! direction (spectral clustering) of §VI.
+
+use crate::data::Dataset;
+use crate::linalg::{sym_eig, Mat};
+use crate::sampling::kmeans::KMeans;
+
+/// Normalized spectral clustering (Ng–Jordan–Weiss style):
+/// symmetric-normalize the affinity, embed into the top-k eigenvectors,
+/// row-normalize, and run k-means. Returns cluster labels.
+pub fn spectral_cluster(affinity: &Mat, k: usize, seed: u64) -> Vec<usize> {
+    assert_eq!(affinity.rows, affinity.cols);
+    let n = affinity.rows;
+    let k = k.min(n).max(1);
+    // M = D^{-1/2} A D^{-1/2}
+    let mut m = affinity.clone();
+    let deg: Vec<f64> = (0..n)
+        .map(|i| m.row(i).iter().sum::<f64>().max(1e-12))
+        .collect();
+    let inv_sqrt: Vec<f64> = deg.iter().map(|&d| 1.0 / d.sqrt()).collect();
+    for i in 0..n {
+        for j in 0..n {
+            *m.at_mut(i, j) *= inv_sqrt[i] * inv_sqrt[j];
+        }
+    }
+    let eig = sym_eig(&m);
+    // top-k eigenvectors as embedding rows, row-normalized
+    let mut emb = Dataset::zeros(n, k);
+    for i in 0..n {
+        let mut nrm = 0.0;
+        for c in 0..k {
+            let v = eig.vecs.at(i, c);
+            nrm += v * v;
+        }
+        let nrm = nrm.sqrt().max(1e-12);
+        let p = emb.point_mut(i);
+        for (c, pv) in p.iter_mut().enumerate() {
+            *pv = eig.vecs.at(i, c) / nrm;
+        }
+    }
+    let (_, labels, _) = KMeans::new(k, seed).fit(&emb);
+    labels
+}
+
+/// Clustering accuracy against ground truth up to label permutation
+/// (exhaustive over k! permutations; intended for k ≤ 6 in tests).
+pub fn permutation_accuracy(labels: &[usize], truth: &[usize], k: usize) -> f64 {
+    assert_eq!(labels.len(), truth.len());
+    fn permutations(k: usize) -> Vec<Vec<usize>> {
+        if k == 1 {
+            return vec![vec![0]];
+        }
+        let mut out = Vec::new();
+        for p in permutations(k - 1) {
+            for pos in 0..=p.len() {
+                let mut q = p.clone();
+                q.insert(pos, k - 1);
+                out.push(q);
+            }
+        }
+        out
+    }
+    let n = labels.len() as f64;
+    let mut best = 0.0;
+    for perm in permutations(k) {
+        let correct = labels
+            .iter()
+            .zip(truth)
+            .filter(|(&l, &t)| perm.get(l).copied() == Some(t))
+            .count();
+        best = f64::max(best, correct as f64 / n);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::gaussian_clusters;
+    use crate::seed::{Seed, SeedConfig};
+
+    #[test]
+    fn clusters_well_separated_data() {
+        let ds = gaussian_clusters(120, 5, 3, 0.08, 4);
+        let truth: Vec<usize> = (0..120).map(|i| i % 3).collect();
+        let seed = Seed::decompose(
+            &ds,
+            &SeedConfig { dict_size: 15, sparsity: 3, ..Default::default() },
+        )
+        .unwrap();
+        let labels = spectral_cluster(&seed.affinity(), 3, 9);
+        let acc = permutation_accuracy(&labels, &truth, 3);
+        assert!(acc > 0.9, "clustering accuracy {acc}");
+    }
+
+    #[test]
+    fn permutation_accuracy_handles_relabeling() {
+        let truth = vec![0, 0, 1, 1, 2, 2];
+        let labels = vec![2, 2, 0, 0, 1, 1]; // perfect up to permutation
+        assert_eq!(permutation_accuracy(&labels, &truth, 3), 1.0);
+        let noisy = vec![2, 1, 0, 0, 1, 1];
+        assert!((permutation_accuracy(&noisy, &truth, 3) - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_cluster_trivial() {
+        let a = Mat::from_fn(5, 5, |i, j| if i == j { 0.0 } else { 1.0 });
+        let labels = spectral_cluster(&a, 1, 3);
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+}

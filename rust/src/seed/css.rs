@@ -1,0 +1,118 @@
+//! The general column-subset-selection problem (paper Eq. 7 / §IV-A3):
+//! `min_{|Λ|=L} ‖Z − P_Λ Z‖_F` over a data matrix Z, solved greedily by
+//! running oASIS on the Gram matrix G = ZᵀZ. When |Λ| reaches rank(Z),
+//! the projection is exact — the guarantee SEED builds on.
+
+use crate::data::Dataset;
+use crate::kernels::Linear;
+use crate::linalg::{thin_qr, Mat};
+use crate::sampling::{oasis::Oasis, ColumnSampler, ImplicitOracle};
+use crate::Result;
+
+/// Select `l` representative points from the dataset by oASIS on the Gram
+/// matrix (never formed explicitly). Returns Λ in selection order.
+pub fn select_css(ds: &Dataset, l: usize, seed: u64) -> Result<Vec<usize>> {
+    let kern = Linear;
+    let oracle = ImplicitOracle::new(ds, &kern);
+    let approx = Oasis::new(l, 1, 1e-12, seed).sample(&oracle)?;
+    Ok(approx.indices)
+}
+
+/// The Eq. 7 objective: ‖Z − P_Λ Z‖_F / ‖Z‖_F where P_Λ projects onto the
+/// span of the selected points (columns of the paper's m×n Z — rows of our
+/// point-major Dataset).
+pub fn css_projection_error(ds: &Dataset, lambda: &[usize]) -> f64 {
+    let m = ds.dim();
+    let n = ds.n();
+    // Z_Λ as an m×|Λ| matrix (points are columns)
+    let mut zl = Mat::zeros(m, lambda.len());
+    for (c, &j) in lambda.iter().enumerate() {
+        for d in 0..m {
+            *zl.at_mut(d, c) = ds.point(j)[d];
+        }
+    }
+    let (q, _r) = thin_qr(&zl); // orthonormal basis of span(Z_Λ)
+    let mut num = 0.0;
+    let mut den = 0.0;
+    let mut proj = vec![0.0; q.cols];
+    for i in 0..n {
+        let z = ds.point(i);
+        // coefficients Qᵀz
+        for (c, p) in proj.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for d in 0..m {
+                acc += q.at(d, c) * z[d];
+            }
+            *p = acc;
+        }
+        for d in 0..m {
+            let mut r = z[d];
+            for (c, &p) in proj.iter().enumerate() {
+                r -= q.at(d, c) * p;
+            }
+            num += r * r;
+            den += z[d] * z[d];
+        }
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{gauss_2d_plus_3d, mnist_like};
+    use crate::util::rng::Pcg64;
+
+    /// §IV-A3: for Z of rank m, oASIS selects |Λ| = m with exact projection.
+    #[test]
+    fn exact_projection_at_rank() {
+        let ds = gauss_2d_plus_3d(50, 50, 7); // rank-3 point set in R³
+        let lambda = select_css(&ds, 5, 3).unwrap();
+        assert!(lambda.len() <= 4, "selected {} for rank 3", lambda.len());
+        let err = css_projection_error(&ds, &lambda);
+        assert!(err < 1e-8, "projection error {err}");
+    }
+
+    #[test]
+    fn css_error_decreases_with_budget() {
+        let ds = mnist_like(120, 32, 5);
+        let mut prev = f64::INFINITY;
+        for l in [2usize, 5, 10, 20] {
+            let lambda = select_css(&ds, l, 1).unwrap();
+            let err = css_projection_error(&ds, &lambda);
+            assert!(err <= prev + 1e-9, "error rose at l={l}: {prev} → {err}");
+            prev = err;
+        }
+        assert!(prev < 0.7, "final css error {prev}");
+    }
+
+    #[test]
+    fn oasis_css_beats_random_selection() {
+        let ds = mnist_like(150, 40, 9);
+        let l = 12;
+        let lam_oasis = select_css(&ds, l, 2).unwrap();
+        let e_oasis = css_projection_error(&ds, &lam_oasis);
+        let mut e_rand = 0.0;
+        let mut rng = Pcg64::new(11);
+        for _ in 0..5 {
+            let lam: Vec<usize> = rng.sample_without_replacement(ds.n(), l);
+            e_rand += css_projection_error(&ds, &lam);
+        }
+        e_rand /= 5.0;
+        assert!(
+            e_oasis <= e_rand + 1e-12,
+            "oasis {e_oasis} vs random {e_rand}"
+        );
+    }
+
+    #[test]
+    fn empty_lambda_full_error() {
+        let ds = mnist_like(30, 8, 2);
+        let err = css_projection_error(&ds, &[]);
+        assert!((err - 1.0).abs() < 1e-12);
+    }
+}

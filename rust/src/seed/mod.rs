@@ -1,0 +1,19 @@
+//! SEED — Sparse Self-Expressive Decomposition (paper §II-E, [30]).
+//!
+//! The paper's companion application of oASIS: (1) select a dictionary of
+//! representative *data points* with oASIS on the Gram matrix, then
+//! (2) represent every point as a sparse combination of dictionary points
+//! with Orthogonal Matching Pursuit. The sparse codes drive clustering,
+//! denoising and classification; §IV-A3's guarantee (exact recovery of Z
+//! when |Λ| reaches rank(Z)) is what makes the oASIS-selected dictionary
+//! sufficient.
+
+pub mod cluster;
+pub mod css;
+pub mod decompose;
+pub mod omp;
+
+pub use cluster::spectral_cluster;
+pub use css::{css_projection_error, select_css};
+pub use decompose::{Seed, SeedConfig};
+pub use omp::{omp, SparseCode};

@@ -1,0 +1,182 @@
+//! Orthogonal Matching Pursuit ([31], [32]) — the sparse-coding step of
+//! SEED: greedily select dictionary atoms by residual correlation and
+//! re-fit least squares over the active set.
+
+use crate::linalg::{lu_solve, Mat};
+
+/// A sparse code: (atom index, coefficient) pairs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseCode {
+    pub entries: Vec<(usize, f64)>,
+    /// squared norm of the final residual
+    pub residual_sq: f64,
+}
+
+impl SparseCode {
+    /// Dense coefficient vector of length `dict_size`.
+    pub fn to_dense(&self, dict_size: usize) -> Vec<f64> {
+        let mut x = vec![0.0; dict_size];
+        for &(j, v) in &self.entries {
+            x[j] = v;
+        }
+        x
+    }
+}
+
+/// Solve `min ‖y − D x‖₂  s.t. ‖x‖₀ ≤ sparsity` greedily.
+///
+/// `dict` is m×k with unit-normalized-ish columns (atoms); `y` is length m.
+/// Stops early when the residual norm² drops below `tol_sq`.
+pub fn omp(dict: &Mat, y: &[f64], sparsity: usize, tol_sq: f64) -> SparseCode {
+    let (m, k) = (dict.rows, dict.cols);
+    assert_eq!(y.len(), m);
+    let t = sparsity.min(k);
+    let mut residual = y.to_vec();
+    let mut active: Vec<usize> = Vec::with_capacity(t);
+    let mut coef: Vec<f64> = Vec::new();
+    for _ in 0..t {
+        let r2: f64 = residual.iter().map(|x| x * x).sum();
+        if r2 <= tol_sq {
+            break;
+        }
+        // atom most correlated with the residual (normalized)
+        let mut best = usize::MAX;
+        let mut best_score = 0.0;
+        for j in 0..k {
+            if active.contains(&j) {
+                continue;
+            }
+            let mut dot = 0.0;
+            let mut nrm = 0.0;
+            for i in 0..m {
+                let dij = dict.at(i, j);
+                dot += dij * residual[i];
+                nrm += dij * dij;
+            }
+            if nrm <= 1e-300 {
+                continue;
+            }
+            let score = dot * dot / nrm;
+            if score > best_score {
+                best_score = score;
+                best = j;
+            }
+        }
+        if best == usize::MAX || best_score <= 1e-300 {
+            break;
+        }
+        active.push(best);
+        // least squares over the active set: solve (DᵀD) x = Dᵀ y
+        let s = active.len();
+        let mut gram = Mat::zeros(s, s);
+        let mut rhs = vec![0.0; s];
+        for (a, &ja) in active.iter().enumerate() {
+            for (b, &jb) in active.iter().enumerate() {
+                let mut acc = 0.0;
+                for i in 0..m {
+                    acc += dict.at(i, ja) * dict.at(i, jb);
+                }
+                *gram.at_mut(a, b) = acc;
+            }
+            let mut acc = 0.0;
+            for i in 0..m {
+                acc += dict.at(i, ja) * y[i];
+            }
+            rhs[a] = acc;
+        }
+        // ridge jitter for safety on near-duplicate atoms
+        for a in 0..s {
+            *gram.at_mut(a, a) += 1e-12;
+        }
+        coef = lu_solve(&gram, &rhs).unwrap_or_else(|| vec![0.0; s]);
+        // residual = y − D_active coef
+        residual.copy_from_slice(y);
+        for (a, &ja) in active.iter().enumerate() {
+            let ca = coef[a];
+            for i in 0..m {
+                residual[i] -= ca * dict.at(i, ja);
+            }
+        }
+    }
+    SparseCode {
+        residual_sq: residual.iter().map(|x| x * x).sum(),
+        entries: active.into_iter().zip(coef).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_dict(m: usize, k: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut d = Mat::zeros(m, k);
+        rng.fill_normal(&mut d.data);
+        // normalize columns
+        for j in 0..k {
+            let nrm: f64 = (0..m).map(|i| d.at(i, j).powi(2)).sum::<f64>().sqrt();
+            for i in 0..m {
+                *d.at_mut(i, j) /= nrm;
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn recovers_exact_sparse_combination() {
+        let d = random_dict(20, 40, 1);
+        // y = 2·atom3 − 1.5·atom17
+        let mut y = vec![0.0; 20];
+        for i in 0..20 {
+            y[i] = 2.0 * d.at(i, 3) - 1.5 * d.at(i, 17);
+        }
+        let code = omp(&d, &y, 2, 1e-20);
+        assert!(code.residual_sq < 1e-16, "residual {}", code.residual_sq);
+        let dense = code.to_dense(40);
+        assert!((dense[3] - 2.0).abs() < 1e-8);
+        assert!((dense[17] + 1.5).abs() < 1e-8);
+        for (j, &v) in dense.iter().enumerate() {
+            if j != 3 && j != 17 {
+                assert!(v.abs() < 1e-8, "spurious coefficient at {j}: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn respects_sparsity_budget() {
+        let d = random_dict(15, 30, 2);
+        let mut rng = Pcg64::new(3);
+        let mut y = vec![0.0; 15];
+        rng.fill_normal(&mut y);
+        let code = omp(&d, &y, 4, 0.0);
+        assert!(code.entries.len() <= 4);
+        // residual decreases monotonically with budget
+        let r1 = omp(&d, &y, 1, 0.0).residual_sq;
+        let r2 = omp(&d, &y, 2, 0.0).residual_sq;
+        let r4 = code.residual_sq;
+        assert!(r2 <= r1 + 1e-12);
+        assert!(r4 <= r2 + 1e-12);
+    }
+
+    #[test]
+    fn zero_signal_gives_empty_code() {
+        let d = random_dict(10, 12, 4);
+        let code = omp(&d, &vec![0.0; 10], 3, 1e-12);
+        assert!(code.entries.is_empty());
+        assert_eq!(code.residual_sq, 0.0);
+    }
+
+    #[test]
+    fn early_stop_on_tolerance() {
+        let d = random_dict(20, 40, 5);
+        let mut y = vec![0.0; 20];
+        for i in 0..20 {
+            y[i] = d.at(i, 7);
+        }
+        // tolerance loose enough that 1 atom suffices
+        let code = omp(&d, &y, 10, 1e-10);
+        assert_eq!(code.entries.len(), 1);
+        assert_eq!(code.entries[0].0, 7);
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! typed access with defaults. Used by the `oasis` binary and the bench
+//! drivers.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// option keys in the order they were consumed (for usage errors)
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.known.borrow_mut().push(name.to_string());
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.usize_or(name, default as usize) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("approximate --n 2000 --method oasis two-moons");
+        assert_eq!(a.positional, vec!["approximate", "two-moons"]);
+        assert_eq!(a.get("n"), Some("2000"));
+        assert_eq!(a.get_or("method", "x"), "oasis");
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("--cols=450 --accel --sigma-frac=0.05");
+        assert_eq!(a.usize_or("cols", 0), 450);
+        assert!(a.flag("accel"));
+        assert!(!a.flag("verbose"));
+        assert!((a.f64_or("sigma-frac", 0.0) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("tol", 1e-8), 1e-8);
+        assert_eq!(a.get_or("kernel", "gaussian"), "gaussian");
+    }
+
+    #[test]
+    fn underscored_integers() {
+        let a = parse("--n 1_000_000");
+        assert_eq!(a.usize_or("n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        // `--key value` where value starts with '-' but not '--'
+        let a = parse("--shift -3.5");
+        assert_eq!(a.f64_or("shift", 0.0), -3.5);
+    }
+}

@@ -1,0 +1,15 @@
+//! Support substrates built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, timing/statistics, table rendering, a
+//! property-testing harness, and scoped-thread parallel helpers.
+//!
+//! These replace crates.io dependencies (rand, serde_json, clap, criterion,
+//! proptest, rayon) that are unavailable in this container — see
+//! DESIGN.md §6 (Substitutions).
+
+pub mod args;
+pub mod json;
+pub mod parallel;
+pub mod propcheck;
+pub mod rng;
+pub mod table;
+pub mod timing;

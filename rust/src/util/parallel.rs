@@ -1,0 +1,129 @@
+//! Scoped-thread data-parallel helpers (rayon substitute).
+//!
+//! The hot loops of the library (kernel column generation, Δ scoring over
+//! large n, error estimation) are chunked over OS threads with
+//! `std::thread::scope`; there is no work stealing, which is fine for the
+//! regular, evenly-sized loops used here.
+
+/// Number of worker threads to use by default (capped — this container's
+/// benches are noise-dominated past 8).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get().min(8))
+        .unwrap_or(4)
+}
+
+/// Split `n` items into at most `threads` contiguous ranges of near-equal
+/// size. Returns an empty vec when `n == 0`.
+pub fn chunk_ranges(n: usize, threads: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return vec![];
+    }
+    let t = threads.max(1).min(n);
+    let base = n / t;
+    let rem = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(range, chunk)` over disjoint mutable chunks of `data`, where the
+/// chunk boundaries are item ranges of size `stride` elements each (i.e.
+/// `data.len() == n * stride`). Single-threaded when `threads <= 1` or the
+/// work is tiny.
+pub fn for_each_chunk_mut<T: Send, F>(
+    data: &mut [T],
+    stride: usize,
+    threads: usize,
+    f: F,
+) where
+    F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
+{
+    assert!(stride > 0 && data.len() % stride == 0);
+    let n = data.len() / stride;
+    let ranges = chunk_ranges(n, threads);
+    if ranges.len() <= 1 {
+        f(0..n, data);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        for r in ranges {
+            let (chunk, tail) = rest.split_at_mut((r.end - r.start) * stride);
+            rest = tail;
+            let f = &f;
+            scope.spawn(move || f(r, chunk));
+        }
+    });
+}
+
+/// Map each range of `0..n` on its own thread and collect results in order.
+pub fn map_ranges<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    F: Fn(std::ops::Range<usize>) -> R + Sync,
+{
+    let ranges = chunk_ranges(n, threads);
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(&f).collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                let f = &f;
+                scope.spawn(move || f(r))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for n in [0usize, 1, 7, 64, 1000] {
+            for t in [1usize, 2, 3, 8, 64] {
+                let rs = chunk_ranges(n, t);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                    assert!(!r.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_mut_writes_all() {
+        let mut data = vec![0usize; 30];
+        for_each_chunk_mut(&mut data, 3, 4, |range, chunk| {
+            for (i, item) in range.clone().enumerate() {
+                for j in 0..3 {
+                    chunk[i * 3 + j] = item * 10 + j;
+                }
+            }
+        });
+        for item in 0..10 {
+            for j in 0..3 {
+                assert_eq!(data[item * 3 + j], item * 10 + j);
+            }
+        }
+    }
+
+    #[test]
+    fn map_ranges_ordered() {
+        let sums = map_ranges(100, 7, |r| r.sum::<usize>());
+        assert_eq!(sums.iter().sum::<usize>(), 4950);
+    }
+}

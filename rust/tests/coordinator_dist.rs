@@ -1,0 +1,134 @@
+//! Distributed-coordinator tests: oASIS-P ≡ sequential oASIS for every
+//! worker count (DESIGN.md invariant 4), communication accounting, fault
+//! injection, and end-to-end accuracy.
+
+use oasis::coordinator::{run_oasis_p, FailureSpec, OasisPConfig};
+use oasis::data::generators::{abalone_like, two_moons};
+use oasis::kernels::{Gaussian, Kernel};
+use oasis::nystrom::{relative_frobenius_error, sampled_relative_error};
+use oasis::sampling::{oasis::Oasis, oasis::Variant, ColumnSampler, ImplicitOracle};
+use std::sync::Arc;
+
+fn gaussian(ds: &oasis::data::Dataset, frac: f64) -> Arc<dyn Kernel + Send + Sync> {
+    Arc::new(Gaussian::with_sigma_fraction(ds, frac))
+}
+
+/// Invariant 4: identical selection sequence to the sequential sampler for
+/// p ∈ {1, 2, 3, 5, 8}.
+#[test]
+fn matches_sequential_for_all_worker_counts() {
+    let ds = two_moons(240, 0.05, 31);
+    let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+    let oracle = ImplicitOracle::new(&ds, &kern);
+    let (l, k0, seed) = (30usize, 5usize, 17u64);
+    let (_, seq_trace) = Oasis::new(l, k0, 1e-12, seed)
+        .with_variant(Variant::PaperR)
+        .sample_traced(&oracle)
+        .unwrap();
+    for p in [1usize, 2, 3, 5, 8] {
+        let cfg = OasisPConfig::new(l, k0, p).with_seed(seed);
+        let (approx, report) =
+            run_oasis_p(&ds, gaussian(&ds, 0.1), &cfg).unwrap();
+        assert_eq!(
+            report.trace.order, seq_trace.order,
+            "worker count {p} diverged from sequential"
+        );
+        assert_eq!(approx.indices, seq_trace.order);
+    }
+}
+
+/// The distributed result is a valid Nyström approximation: W·W⁻¹ ≈ I and
+/// the error matches the sequential sampler's.
+#[test]
+fn distributed_approximation_is_correct() {
+    let ds = abalone_like(400, 3);
+    let kern = Gaussian::with_sigma_fraction(&ds, 0.2);
+    let oracle = ImplicitOracle::new(&ds, &kern);
+    let cfg = OasisPConfig::new(40, 6, 4).with_seed(23);
+    let (approx, _) = run_oasis_p(&ds, gaussian(&ds, 0.2), &cfg).unwrap();
+    let w = approx.c.select_rows(&approx.indices);
+    let prod = w.matmul(&approx.winv);
+    let dist = prod.fro_dist(&oasis::linalg::Mat::eye(approx.k()));
+    assert!(dist < 1e-6, "‖WW⁻¹−I‖ = {dist}");
+
+    let e_dist = relative_frobenius_error(&oracle, &approx);
+    let seq = Oasis::new(40, 6, 1e-12, 23)
+        .sample(&oracle)
+        .unwrap();
+    let e_seq = relative_frobenius_error(&oracle, &seq);
+    assert!(
+        (e_dist - e_seq).abs() < 1e-9 + 0.01 * e_seq,
+        "dist {e_dist} vs seq {e_seq}"
+    );
+}
+
+/// Communication scales with points-broadcast, not with n — the paper's
+/// core scalability claim for oASIS-P.
+#[test]
+fn communication_independent_of_n() {
+    let cfg = |l| OasisPConfig::new(l, 4, 4).with_seed(7);
+    let small = two_moons(200, 0.05, 1);
+    let large = two_moons(2_000, 0.05, 1);
+    let (_, rep_small) = run_oasis_p(&small, gaussian(&small, 0.1), &cfg(20)).unwrap();
+    let (_, rep_large) = run_oasis_p(&large, gaussian(&large, 0.1), &cfg(20)).unwrap();
+    let bs = rep_small.metrics.broadcast_bytes();
+    let bl = rep_large.metrics.broadcast_bytes();
+    // same ℓ and dim ⇒ broadcast volume within 2× despite 10× data
+    assert!(
+        bl < bs * 2,
+        "broadcast grew with n: {bs} → {bl} (should be ~constant)"
+    );
+}
+
+/// Fault injection: a worker dying mid-run surfaces as a clean error, not
+/// a deadlock (leader timeout) or a wrong result.
+#[test]
+fn worker_failure_is_detected() {
+    let ds = two_moons(150, 0.05, 5);
+    let mut cfg = OasisPConfig::new(20, 4, 3).with_seed(9);
+    cfg.failure = Some(FailureSpec { worker: 1, at_iteration: 3 });
+    cfg.timeout = std::time::Duration::from_secs(5);
+    let res = run_oasis_p(&ds, gaussian(&ds, 0.1), &cfg);
+    let err = res.err().expect("expected failure to propagate");
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("worker") || msg.contains("recv"),
+        "unexpected error text: {msg}"
+    );
+}
+
+/// Tolerance-based early stop works distributed (rank-limited data).
+#[test]
+fn distributed_early_stop_on_exact_recovery() {
+    let ds = oasis::data::generators::gauss_2d_plus_3d(100, 100, 2);
+    let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(oasis::kernels::Linear);
+    let cfg = OasisPConfig::new(30, 1, 4).with_seed(3).with_tol(1e-6);
+    let (approx, report) = run_oasis_p(&ds, kernel, &cfg).unwrap();
+    assert!(
+        approx.k() <= 5,
+        "should stop near rank 3, got k = {}",
+        approx.k()
+    );
+    assert!(report.trace.order.len() == approx.k());
+    // exactness via sampled estimator
+    let lin = oasis::kernels::Linear;
+    let oracle = ImplicitOracle::new(&ds, &lin);
+    let err = sampled_relative_error(&oracle, &approx, 20_000, 5);
+    assert!(err < 1e-5, "err {err}");
+}
+
+/// Report metrics are self-consistent.
+#[test]
+fn metrics_consistency() {
+    let ds = two_moons(120, 0.05, 6);
+    let p = 3;
+    let cfg = OasisPConfig::new(15, 3, p).with_seed(11);
+    let (_, report) = run_oasis_p(&ds, gaussian(&ds, 0.1), &cfg).unwrap();
+    let m = &report.metrics;
+    assert_eq!(report.workers, p);
+    // 12 adaptive rounds + 1 final gather round
+    assert!(m.iterations() >= 12, "iterations {}", m.iterations());
+    assert!(m.broadcast_msgs() > 0 && m.gather_msgs() > 0);
+    assert!(m.worker_compute_secs() >= 0.0);
+    assert!(report.wall_secs > 0.0);
+}

@@ -1,0 +1,295 @@
+//! Property-based tests over the DESIGN.md §7 invariants, using the
+//! `util::propcheck` harness (proptest substitute — see DESIGN.md §6).
+
+use oasis::linalg::Mat;
+use oasis::nystrom::relative_frobenius_error;
+use oasis::sampling::{
+    oasis::{Oasis, Variant},
+    sis::Sis,
+    ColumnSampler, ExplicitOracle,
+};
+use oasis::util::propcheck::{check, close, Config, Gen};
+
+fn psd_oracle_case(g: &mut Gen<'_>) -> (Mat, usize) {
+    let n = g.usize_in(8, 8 + g.size.min(56));
+    let r = g.usize_in(2, n.min(12));
+    let m = Mat::from_vec(n, n, g.psd_matrix(n, r));
+    (m, r)
+}
+
+/// Invariant 2 (Theorem 1): oASIS recovers a rank-r PSD matrix to machine
+/// precision within r selected columns.
+#[test]
+fn prop_exact_recovery_in_rank_steps() {
+    check(
+        Config { cases: 24, max_size: 48, ..Default::default() },
+        |g| {
+            let (m, r) = psd_oracle_case(g);
+            let oracle = ExplicitOracle::new(&m);
+            let approx = Oasis::new(r + 2, 1, 1e-9 * m.max_abs().max(1.0), 7)
+                .sample(&oracle)
+                .map_err(|e| e.to_string())?;
+            if approx.k() > r + 2 {
+                return Err(format!("selected {} columns for rank {r}", approx.k()));
+            }
+            let err = relative_frobenius_error(&oracle, &approx);
+            if err > 1e-5 {
+                return Err(format!("error {err} after rank-budget selection"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 1 (Lemma 1): the iterated Eq. 5 inverse stays a true inverse
+/// of W = G(Λ,Λ) at termination.
+#[test]
+fn prop_winv_is_inverse() {
+    check(
+        Config { cases: 20, max_size: 40, ..Default::default() },
+        |g| {
+            let (m, r) = psd_oracle_case(g);
+            let oracle = ExplicitOracle::new(&m);
+            let l = r.min(6);
+            let approx = Oasis::new(l, 1, 1e-10 * m.max_abs().max(1.0), 3)
+                .sample(&oracle)
+                .map_err(|e| e.to_string())?;
+            let w = approx.c.select_rows(&approx.indices);
+            let prod = w.matmul(&approx.winv);
+            let dist = prod.fro_dist(&Mat::eye(approx.k()));
+            if dist > 1e-5 {
+                return Err(format!("‖WW⁻¹−I‖ = {dist} at k={}", approx.k()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 3: accelerated oASIS (both variants) equals naive SIS.
+#[test]
+fn prop_oasis_equals_sis() {
+    check(
+        Config { cases: 12, max_size: 32, ..Default::default() },
+        |g| {
+            let (m, _r) = psd_oracle_case(g);
+            let oracle = ExplicitOracle::new(&m);
+            let n = m.rows;
+            let l = g.usize_in(3, n.min(10));
+            let seed = g.usize_in(0, 1000) as u64;
+            let (_, ts) = Sis::new(l, 2.min(l), 1e-10, seed)
+                .sample_traced(&oracle)
+                .map_err(|e| e.to_string())?;
+            for v in [Variant::PaperR, Variant::Incremental] {
+                let (_, to) = Oasis::new(l, 2.min(l), 1e-10, seed)
+                    .with_variant(v)
+                    .sample_traced(&oracle)
+                    .map_err(|e| e.to_string())?;
+                if ts.order != to.order {
+                    return Err(format!(
+                        "{v:?} diverged: sis {:?} vs oasis {:?}",
+                        ts.order, to.order
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 5: Frobenius error is non-increasing in the column budget.
+#[test]
+fn prop_error_monotone_in_columns() {
+    check(
+        Config { cases: 12, max_size: 40, ..Default::default() },
+        |g| {
+            let (m, _) = psd_oracle_case(g);
+            let oracle = ExplicitOracle::new(&m);
+            let n = m.rows;
+            let seed = g.usize_in(0, 100) as u64;
+            let mut prev = f64::INFINITY;
+            for l in [2usize, 4, 8].iter().filter(|&&l| l <= n) {
+                let approx = Oasis::new(*l, 1, 0.0, seed)
+                    .sample(&oracle)
+                    .map_err(|e| e.to_string())?;
+                let err = relative_frobenius_error(&oracle, &approx);
+                if err > prev + 1e-7 {
+                    return Err(format!("error rose {prev} → {err} at ℓ={l}"));
+                }
+                prev = err;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 6: G̃ agrees with G exactly on the sampled columns (·, Λ).
+#[test]
+fn prop_nystrom_exact_on_sampled_columns() {
+    check(
+        Config { cases: 16, max_size: 36, ..Default::default() },
+        |g| {
+            let (m, r) = psd_oracle_case(g);
+            let oracle = ExplicitOracle::new(&m);
+            let approx = Oasis::new(r.min(5), 1, 1e-10 * m.max_abs().max(1.0), 11)
+                .sample(&oracle)
+                .map_err(|e| e.to_string())?;
+            let recon = approx.reconstruct();
+            let scale = m.max_abs().max(1.0);
+            for &j in &approx.indices {
+                for i in 0..m.rows {
+                    close(
+                        recon.at(i, j) / scale,
+                        m.at(i, j) / scale,
+                        1e-6,
+                        &format!("G̃({i},{j})"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 4: oASIS-P selects the same sequence as sequential oASIS for
+/// random shard counts and dataset shapes.
+#[test]
+fn prop_oasis_p_equals_sequential() {
+    use oasis::coordinator::{run_oasis_p, OasisPConfig};
+    use oasis::kernels::{Gaussian, Kernel};
+    use oasis::sampling::{oasis::Variant, ImplicitOracle};
+    use std::sync::Arc;
+    check(
+        Config { cases: 10, max_size: 40, ..Default::default() },
+        |g| {
+            let n = g.usize_in(20, 120);
+            let dim = g.usize_in(1, 6);
+            let noise = g.f64_in(0.01, 0.2);
+            let ds = oasis::data::generators::gaussian_clusters(
+                n,
+                dim,
+                g.usize_in(1, 4),
+                noise,
+                g.usize_in(0, 1000) as u64,
+            );
+            let l = g.usize_in(3, n.min(15));
+            let k0 = g.usize_in(1, l.min(4));
+            let p = g.usize_in(1, 7);
+            let seed = g.usize_in(0, 500) as u64;
+            let sigma = 1.0 + g.f64_in(0.0, 3.0);
+            let kern = Gaussian::new(sigma);
+            let oracle = ImplicitOracle::new(&ds, &kern);
+            let (_, ts) = Oasis::new(l, k0, 1e-10, seed)
+                .with_variant(Variant::PaperR)
+                .sample_traced(&oracle)
+                .map_err(|e| e.to_string())?;
+            let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(sigma));
+            let cfg = OasisPConfig::new(l, k0, p).with_seed(seed).with_tol(1e-10);
+            let (_, rep) =
+                run_oasis_p(&ds, kernel, &cfg).map_err(|e| e.to_string())?;
+            if ts.order != rep.trace.order {
+                return Err(format!(
+                    "p={p} diverged: seq {:?} vs dist {:?}",
+                    ts.order, rep.trace.order
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Gaussian kernel matrices are PSD for any data (Mercer kernel), so the
+/// whole pipeline's PSD assumption holds on generated inputs.
+#[test]
+fn prop_gaussian_kernel_matrix_is_psd() {
+    use oasis::kernels::{kernel_matrix, Gaussian};
+    check(
+        Config { cases: 16, max_size: 30, ..Default::default() },
+        |g| {
+            let n = g.usize_in(2, 40);
+            let dim = g.usize_in(1, 8);
+            let pts: Vec<Vec<f64>> =
+                (0..n).map(|_| g.normal_vec(dim)).collect();
+            let ds = oasis::data::Dataset::from_rows(pts);
+            let sigma = g.f64_in(0.1, 5.0);
+            let gm = kernel_matrix(&ds, &Gaussian::new(sigma));
+            let eig = oasis::linalg::sym_eig(&gm);
+            let lmin = eig.vals.last().copied().unwrap_or(0.0);
+            if lmin < -1e-8 * eig.vals[0].max(1.0) {
+                return Err(format!("negative eigenvalue {lmin}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// JSON writer/parser round-trip over randomly generated documents.
+#[test]
+fn prop_json_roundtrip() {
+    use oasis::util::json::Json;
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.usize_in(0, 1) == 1),
+            2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..g.usize_in(0, 12))
+                    .map(|_| {
+                        let c = g.usize_in(32, 126) as u8 as char;
+                        c
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr(
+                (0..g.usize_in(0, 4)).map(|_| gen_json(g, depth - 1)).collect(),
+            ),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(
+        Config { cases: 120, max_size: 32, ..Default::default() },
+        |g| {
+            let doc = gen_json(g, 3);
+            let text = doc.to_string();
+            let parsed = Json::parse(&text)
+                .map_err(|e| format!("reparse failed on {text}: {e}"))?;
+            if parsed != doc {
+                return Err(format!("roundtrip mismatch: {doc:?} vs {parsed:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Selected Δ values are non-increasing for oASIS on PSD inputs (greedy
+/// Schur complements shrink as the span grows).
+#[test]
+fn prop_deltas_non_increasing() {
+    check(
+        Config { cases: 12, max_size: 40, ..Default::default() },
+        |g| {
+            let (m, _) = psd_oracle_case(g);
+            let oracle = ExplicitOracle::new(&m);
+            let n = m.rows;
+            let (_, trace) = Oasis::new(n.min(8), 1, 0.0, 5)
+                .sample_traced(&oracle)
+                .map_err(|e| e.to_string())?;
+            let adaptive: Vec<f64> = trace
+                .deltas
+                .iter()
+                .copied()
+                .filter(|d| d.is_finite())
+                .collect();
+            for w in adaptive.windows(2) {
+                // allow tiny numerical wiggle
+                if w[1] > w[0] * (1.0 + 1e-6) + 1e-9 {
+                    return Err(format!("Δ increased: {} → {}", w[0], w[1]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
