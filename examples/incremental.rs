@@ -1,0 +1,63 @@
+//! Incremental sampling: grow a Nyström approximation until it reaches a
+//! target estimated error, snapshotting along the way — the serving-style
+//! workflow the session API exists for (grow per request instead of
+//! recomputing from scratch).
+//!
+//!     cargo run --release --example incremental -- [--n 4000] [--target 1e-2]
+
+use oasis::data::generators::two_moons;
+use oasis::kernels::Gaussian;
+use oasis::nystrom::relative_frobenius_error;
+use oasis::sampling::{
+    oasis::Oasis, run_to_completion, ImplicitOracle, SamplerSession,
+    StoppingCriterion, StoppingRule,
+};
+use oasis::util::args::Args;
+use oasis::util::timing::fmt_secs;
+
+fn main() -> oasis::Result<()> {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 4_000);
+    let target = args.f64_or("target", 1e-2);
+
+    let ds = two_moons(n, 0.05, 42);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.05);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+
+    // one long-lived session; the initial budget only sizes the first
+    // allocation — state grows on demand as the run is resumed
+    let mut session = Oasis::new(64, 10, 1e-12, 7).session(&oracle)?;
+
+    println!("growing until estimated relative error ≤ {target:.1e} (n = {n})\n");
+    println!("{:>8} {:>14} {:>14} {:>12}", "columns", "estimate", "exact", "time");
+
+    // grow in rounds of 64 columns, checking the error target between
+    // rounds; a serving system would run one round per request instead
+    let mut budget = 0usize;
+    loop {
+        budget += 64;
+        let rule = StoppingRule::new()
+            .with(StoppingCriterion::ErrorBelow(target))
+            .with(StoppingCriterion::ColumnBudget(budget));
+        let reason = run_to_completion(&mut session, &rule)?;
+        let estimate = session.error_estimate().unwrap_or(f64::NAN);
+        // exact error is O(n²·k) — affordable here, skipped in serving
+        let snapshot = session.snapshot()?;
+        let exact = relative_frobenius_error(&oracle, &snapshot);
+        println!(
+            "{:>8} {:>14.3e} {:>14.3e} {:>12}",
+            session.k(),
+            estimate,
+            exact,
+            fmt_secs(session.selection_secs()),
+        );
+        match reason {
+            oasis::sampling::StopReason::BudgetReached => continue,
+            other => {
+                println!("\nstopped: {other:?} at k = {}", session.k());
+                break;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,12 +1,16 @@
 //! Quickstart: approximate a Gaussian kernel matrix of the Two Moons
-//! dataset with oASIS and compare against uniform random sampling.
+//! dataset with a stepwise oASIS session and compare against uniform
+//! random sampling at the same budget.
 //!
 //!     cargo run --release --example quickstart
 
 use oasis::data::generators::two_moons;
 use oasis::kernels::Gaussian;
 use oasis::nystrom::relative_frobenius_error;
-use oasis::sampling::{oasis::Oasis, uniform::Uniform, ColumnSampler, ImplicitOracle};
+use oasis::sampling::{
+    oasis::Oasis, run_to_completion, uniform::Uniform, ColumnSampler,
+    ImplicitOracle, SamplerSession, StoppingCriterion, StoppingRule,
+};
 use oasis::util::timing::fmt_secs;
 
 fn main() -> oasis::Result<()> {
@@ -18,17 +22,22 @@ fn main() -> oasis::Result<()> {
     //    the full 2000×2000 matrix is never formed
     let oracle = ImplicitOracle::new(&ds, &kernel);
 
-    // 3. sample 450 columns adaptively with oASIS
-    let approx = Oasis::new(450, 10, 1e-12, 7).sample(&oracle)?;
+    // 3. open an oASIS session and grow it to 450 columns; the stopping
+    //    policy lives in the rule, not the sampler, so the same session
+    //    could stop on an error target or a deadline instead
+    let mut session = Oasis::new(450, 10, 1e-12, 7).session(&oracle)?;
+    let rule = StoppingRule::new().with(StoppingCriterion::ColumnBudget(450));
+    let reason = run_to_completion(&mut session, &rule)?;
+    let approx = session.snapshot()?;
     let err = relative_frobenius_error(&oracle, &approx);
     println!(
-        "oASIS : {} columns  error {:.3e}  selected in {}",
+        "oASIS : {} columns  error {:.3e}  selected in {}  ({reason:?})",
         approx.k(),
         err,
         fmt_secs(approx.selection_secs)
     );
 
-    // 4. same budget, uniform random
+    // 4. same budget, uniform random (one-shot API — still available)
     let rand = Uniform::new(450, 7).sample(&oracle)?;
     let err_r = relative_frobenius_error(&oracle, &rand);
     println!(
@@ -41,6 +50,16 @@ fn main() -> oasis::Result<()> {
     println!(
         "\noASIS is {:.0}x more accurate at the same column budget.",
         err_r / err.max(1e-300)
+    );
+
+    // 5. sessions resume: another 150 columns on top of the same state
+    run_to_completion(&mut session, &StoppingRule::budget(600))?;
+    let more = session.snapshot()?;
+    let err_more = relative_frobenius_error(&oracle, &more);
+    println!(
+        "resumed to {} columns  error {:.3e} (no recompute of the first 450)",
+        more.k(),
+        err_more
     );
     Ok(())
 }

@@ -41,6 +41,12 @@ pub enum FromWorker {
         /// max |diag| over this shard (for the leader's relative
         /// tolerance floor — see `sampling::effective_tol`).
         d_max: f64,
+        /// Σ|Δᵢ| over this shard's unselected candidates — lets the
+        /// leader maintain the residual-trace error estimate that drives
+        /// `StoppingCriterion::ErrorBelow` without extra messages.
+        sum_abs_delta: f64,
+        /// Σ|dᵢ| over this shard (the estimate's denominator share).
+        d_sum: f64,
     },
     /// Reply to `FetchPoint`.
     Point { global_idx: usize, point: Vec<f64> },
@@ -78,7 +84,7 @@ impl ToWorker {
 impl FromWorker {
     pub fn payload_bytes(&self) -> u64 {
         match self {
-            FromWorker::Argmax { .. } => 32,
+            FromWorker::Argmax { .. } => 48,
             FromWorker::Point { point, .. } => (point.len() * 8 + 8) as u64,
             FromWorker::Columns { c_block, winv, .. } => {
                 (c_block.len() * 8 + winv.as_ref().map_or(0, |w| w.len() * 8) + 24)

@@ -53,7 +53,7 @@ impl OasisPConfig {
     }
 
     pub fn validate(&self, n: usize) -> crate::Result<()> {
-        use anyhow::bail;
+        use crate::bail;
         if self.workers == 0 {
             bail!("workers must be ≥ 1");
         }

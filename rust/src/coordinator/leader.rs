@@ -1,6 +1,17 @@
 //! The oASIS-P leader: seeds the run, reduces gathered shard argmaxes,
 //! broadcasts selected points, detects worker failure, and assembles the
 //! final Nyström approximation from the gathered column blocks.
+//!
+//! The leader is itself a [`SamplerSession`]: [`OasisPSession::start`]
+//! spawns the worker threads and seeds them, each
+//! [`step`](SamplerSession::step) performs one gather → reduce → broadcast
+//! round (the paper's one-vector-per-iteration communication pattern), and
+//! [`finish_run`](OasisPSession::finish_run) gathers the column blocks and
+//! joins the workers. [`run_oasis_p`] is the one-shot adapter driving a
+//! session under a column-budget [`StoppingRule`]; callers can instead
+//! drive a session with any stopping rule — the workers ship shard-local
+//! `Σ|Δ|` piggybacked on every argmax, so even the error-target criterion
+//! works distributed with zero extra messages.
 
 use super::comm::{FromWorker, LeaderHandle, ToWorker, WorkerHandle};
 use super::config::OasisPConfig;
@@ -10,10 +21,13 @@ use crate::data::{shard, Dataset};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::nystrom::NystromApprox;
-use crate::sampling::SelectionTrace;
+use crate::sampling::{
+    run_to_completion, SamplerSession, SelectionTrace, StepOutcome, StopReason,
+    StoppingRule,
+};
 use crate::util::{rng::Pcg64, timing::Stopwatch};
+use crate::{anyhow, bail};
 use crate::Result;
-use anyhow::{anyhow, bail};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -34,150 +48,329 @@ pub fn run_oasis_p(
     kernel: Arc<dyn Kernel + Send + Sync>,
     cfg: &OasisPConfig,
 ) -> Result<(NystromApprox, OasisPReport)> {
-    let sw = Stopwatch::start();
-    let n = ds.n();
-    cfg.validate(n)?;
-    let p = cfg.workers.min(n);
-    let metrics = Arc::new(Metrics::default());
-
-    // --- spawn workers ---
-    let (to_leader_tx, leader_inbox) = mpsc::channel::<FromWorker>();
-    let mut handles = Vec::with_capacity(p);
-    let mut joins = Vec::with_capacity(p);
-    for s in shard::split(ds, p) {
-        let (tx, rx) = mpsc::channel::<ToWorker>();
-        handles.push(WorkerHandle::new(s.worker, tx, metrics.clone()));
-        let worker = Worker::new(
-            s.worker,
-            s,
-            kernel.clone(),
-            LeaderHandle::new(to_leader_tx.clone(), metrics.clone()),
-            metrics.clone(),
-            cfg.max_cols,
-            cfg.failure,
-        );
-        joins.push(std::thread::spawn(move || worker.run(rx)));
-    }
-    drop(to_leader_tx);
-
-    let run = leader_loop(ds, &kernel, cfg, p, &metrics, &handles, &leader_inbox, &sw);
-
-    // tear down: on error paths make sure workers exit
-    if run.is_err() {
-        for h in &handles {
-            h.send(ToWorker::Finish);
-        }
-    }
-    for j in joins {
-        let _ = j.join();
-    }
-    let (approx, trace) = run?;
-    let report = OasisPReport {
-        trace,
-        metrics,
-        workers: p,
-        wall_secs: sw.secs(),
-    };
-    Ok((approx, report))
+    let mut session = OasisPSession::start(ds, kernel, cfg.clone())?;
+    run_to_completion(&mut session, &StoppingRule::budget(cfg.max_cols))?;
+    session.finish_run()
 }
 
-#[allow(clippy::too_many_arguments)]
-fn leader_loop(
-    ds: &Dataset,
-    kernel: &Arc<dyn Kernel + Send + Sync>,
-    cfg: &OasisPConfig,
+/// A live distributed oASIS-P run: worker threads spawned and seeded, one
+/// selection round per [`step`](SamplerSession::step).
+///
+/// Unlike the sequential sessions this one holds no oracle borrow (the
+/// workers own their shards), so it is `'static`; its per-run capacity is
+/// fixed at `cfg.max_cols` because every worker pre-allocates its W⁻¹
+/// replica at that stride — stepping past it reports
+/// [`StopReason::Exhausted`]. Mid-run [`snapshot`](SamplerSession::snapshot)
+/// is not supported (assembly requires the terminal column gather); use
+/// [`finish_run`](OasisPSession::finish_run).
+pub struct OasisPSession {
+    cfg: OasisPConfig,
+    n: usize,
+    /// hard capacity: min(cfg.max_cols, n).
+    capacity: usize,
     p: usize,
-    metrics: &Arc<Metrics>,
-    handles: &[WorkerHandle],
-    inbox: &mpsc::Receiver<FromWorker>,
-    sw: &Stopwatch,
-) -> Result<(NystromApprox, SelectionTrace)> {
-    let n = ds.n();
-    let l = cfg.max_cols.min(n);
-    let k0 = cfg.init_cols.min(l);
-    let owner_of = |g: usize| -> usize {
-        shard::shard_ranges(n, p)
+    owner_ranges: Vec<std::ops::Range<usize>>,
+    handles: Vec<WorkerHandle>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    inbox: mpsc::Receiver<FromWorker>,
+    metrics: Arc<Metrics>,
+    trace: SelectionTrace,
+    d_scale: f64,
+    /// Σ|Δ| / Σ|d| from the most recent gather round.
+    resid_sum: Option<f64>,
+    d_sum: f64,
+    exhausted: Option<StopReason>,
+    torn_down: bool,
+    busy_secs: f64,
+}
+
+impl OasisPSession {
+    /// Spawn the workers, replicate the seed state (identical RNG stream
+    /// and rejection rule to the sequential sampler), and broadcast Init.
+    /// Workers reply with their first shard argmaxes, which the first
+    /// `step` will gather.
+    pub fn start(
+        ds: &Dataset,
+        kernel: Arc<dyn Kernel + Send + Sync>,
+        cfg: OasisPConfig,
+    ) -> Result<OasisPSession> {
+        let sw = Stopwatch::start();
+        let n = ds.n();
+        cfg.validate(n)?;
+        let p = cfg.workers.min(n);
+        let metrics = Arc::new(Metrics::default());
+
+        // --- spawn workers ---
+        let (to_leader_tx, inbox) = mpsc::channel::<FromWorker>();
+        let mut handles = Vec::with_capacity(p);
+        let mut joins = Vec::with_capacity(p);
+        for s in shard::split(ds, p) {
+            let (tx, rx) = mpsc::channel::<ToWorker>();
+            handles.push(WorkerHandle::new(s.worker, tx, metrics.clone()));
+            let worker = Worker::new(
+                s.worker,
+                s,
+                kernel.clone(),
+                LeaderHandle::new(to_leader_tx.clone(), metrics.clone()),
+                metrics.clone(),
+                cfg.max_cols,
+                cfg.failure,
+            );
+            joins.push(std::thread::spawn(move || worker.run(rx)));
+        }
+        drop(to_leader_tx);
+
+        let capacity = cfg.max_cols.min(n);
+        let mut session = OasisPSession {
+            cfg,
+            n,
+            capacity,
+            p,
+            owner_ranges: shard::shard_ranges(n, p),
+            handles,
+            joins,
+            inbox,
+            metrics,
+            trace: SelectionTrace::default(),
+            d_scale: 0.0,
+            resid_sum: None,
+            d_sum: 0.0,
+            exhausted: None,
+            torn_down: false,
+            busy_secs: 0.0,
+        };
+        if let Err(e) = session.init_seed(&kernel, &sw) {
+            session.teardown();
+            return Err(e);
+        }
+        session.busy_secs = sw.secs();
+        Ok(session)
+    }
+
+    /// Seed selection, replicating the sequential sampler exactly, then
+    /// the Init broadcast.
+    fn init_seed(
+        &mut self,
+        kernel: &Arc<dyn Kernel + Send + Sync>,
+        sw: &Stopwatch,
+    ) -> Result<()> {
+        let n = self.n;
+        let l = self.capacity;
+        let k0 = self.cfg.init_cols.min(l);
+        let mut rng = Pcg64::new(self.cfg.seed);
+        let seed_indices: Vec<usize>;
+        let seed_points: Vec<Vec<f64>>;
+        let winv0: Mat;
+        loop {
+            let cand = rng.sample_without_replacement(n, k0);
+            // fetch candidate points from their owners
+            let mut pts: Vec<Option<Vec<f64>>> = vec![None; k0];
+            for (slot, &g) in cand.iter().enumerate() {
+                let w = self.owner_of(g);
+                if !self.handles[w].send(ToWorker::FetchPoint { global_idx: g }) {
+                    bail!("worker {w} unavailable during seeding");
+                }
+                match self.recv()? {
+                    FromWorker::Point { global_idx, point } => {
+                        debug_assert_eq!(global_idx, g);
+                        pts[slot] = Some(point);
+                    }
+                    FromWorker::Failed { worker, message } => {
+                        bail!("worker {worker} failed during seeding: {message}")
+                    }
+                    other => bail!("unexpected message during seeding: {other:?}"),
+                }
+            }
+            let pts: Vec<Vec<f64>> = pts.into_iter().map(Option::unwrap).collect();
+            // W₀ from kernel evaluations on the gathered points — identical
+            // values to the sequential sampler's fetched-column entries.
+            let mut w = Mat::zeros(k0, k0);
+            for i in 0..k0 {
+                for j in 0..k0 {
+                    *w.at_mut(i, j) = kernel.eval(&pts[i], &pts[j]);
+                }
+            }
+            if let Some(inv) = crate::linalg::inverse(&w) {
+                let cond = inv.max_abs() * w.max_abs();
+                if cond.is_finite() && cond <= 1e12 {
+                    seed_indices = cand;
+                    seed_points = pts;
+                    winv0 = inv;
+                    break;
+                }
+            }
+        }
+
+        // broadcast Init — every worker replies with its first argmax
+        let init = ToWorker::Init {
+            seed_indices: seed_indices.clone(),
+            seed_points,
+            winv0: winv0.data.clone(),
+        };
+        for h in &self.handles {
+            if !h.send(init.clone()) {
+                bail!("worker {} unavailable at init", h.worker);
+            }
+        }
+        for &g in &seed_indices {
+            self.trace.order.push(g);
+            self.trace.cum_secs.push(sw.secs());
+            self.trace.deltas.push(f64::NAN);
+        }
+        Ok(())
+    }
+
+    fn owner_of(&self, g: usize) -> usize {
+        self.owner_ranges
             .iter()
             .position(|r| r.contains(&g))
             .expect("index in range")
-    };
+    }
 
-    // --- seed selection (replicates the sequential sampler exactly) ---
-    let mut rng = Pcg64::new(cfg.seed);
-    let seed_indices: Vec<usize>;
-    let seed_points: Vec<Vec<f64>>;
-    let winv0: Mat;
-    loop {
-        let cand = rng.sample_without_replacement(n, k0);
-        // fetch candidate points from their owners
-        let mut pts: Vec<Option<Vec<f64>>> = vec![None; k0];
-        for (slot, &g) in cand.iter().enumerate() {
-            let w = owner_of(g);
-            if !handles[w].send(ToWorker::FetchPoint { global_idx: g }) {
-                bail!("worker {w} unavailable during seeding");
+    fn recv(&self) -> Result<FromWorker> {
+        self.inbox
+            .recv_timeout(self.cfg.timeout)
+            .map_err(|e| anyhow!("leader recv: {e} (worker died or deadlock)"))
+    }
+
+    /// Send Finish to every worker and join the threads (idempotent).
+    fn teardown(&mut self) {
+        if self.torn_down {
+            return;
+        }
+        self.torn_down = true;
+        for h in &self.handles {
+            h.send(ToWorker::Finish);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+
+    /// Finish the run: gather the column blocks and W⁻¹ replica, join the
+    /// workers, and return the approximation plus the run report.
+    pub fn finish_run(mut self) -> Result<(NystromApprox, OasisPReport)> {
+        let sw = Stopwatch::start();
+        for h in &self.handles {
+            if !h.send(ToWorker::Finish) {
+                bail!("worker {} unavailable (finish)", h.worker);
             }
-            let msg = recv(inbox, cfg)?;
-            match msg {
-                FromWorker::Point { global_idx, point } => {
-                    debug_assert_eq!(global_idx, g);
-                    pts[slot] = Some(point);
+        }
+        let k = self.trace.order.len();
+        let n = self.n;
+        let mut c = Mat::zeros(n, k);
+        let mut winv: Option<Mat> = None;
+        let mut got = 0;
+        // drain remaining Argmax replies interleaved with Columns
+        while got < self.p {
+            match self.recv()? {
+                FromWorker::Columns { start, local_n, c_block, winv: w, .. } => {
+                    for i in 0..local_n {
+                        let dst = &mut c.data[(start + i) * k..(start + i + 1) * k];
+                        dst.copy_from_slice(&c_block[i * k..(i + 1) * k]);
+                    }
+                    if let Some(wd) = w {
+                        winv = Some(Mat::from_vec(k, k, wd));
+                    }
+                    got += 1;
                 }
+                FromWorker::Argmax { .. } => {} // stale replies from last round
                 FromWorker::Failed { worker, message } => {
-                    bail!("worker {worker} failed during seeding: {message}")
+                    bail!("worker {worker} failed at finish: {message}")
                 }
-                other => bail!("unexpected message during seeding: {other:?}"),
+                other => bail!("unexpected message at finish: {other:?}"),
             }
         }
-        let pts: Vec<Vec<f64>> = pts.into_iter().map(Option::unwrap).collect();
-        // W₀ from kernel evaluations on the gathered points — identical
-        // values to the sequential sampler's fetched-column entries.
-        let mut w = Mat::zeros(k0, k0);
-        for i in 0..k0 {
-            for j in 0..k0 {
-                *w.at_mut(i, j) = kernel.eval(&pts[i], &pts[j]);
-            }
+        self.torn_down = true;
+        for j in self.joins.drain(..) {
+            let _ = j.join();
         }
-        if let Some(inv) = crate::linalg::inverse(&w) {
-            let cond = inv.max_abs() * w.max_abs();
-            if cond.is_finite() && cond <= 1e12 {
-                seed_indices = cand;
-                seed_points = pts;
-                winv0 = inv;
-                break;
-            }
-        }
+        let winv = winv.ok_or_else(|| anyhow!("no W⁻¹ returned by worker 0"))?;
+        self.busy_secs += sw.secs();
+        let report = OasisPReport {
+            trace: self.trace.clone(),
+            metrics: self.metrics.clone(),
+            workers: self.p,
+            wall_secs: self.busy_secs,
+        };
+        Ok((
+            NystromApprox {
+                indices: self.trace.order.clone(),
+                c,
+                winv,
+                selection_secs: self.busy_secs,
+            },
+            report,
+        ))
     }
 
-    // broadcast Init
-    let init = ToWorker::Init {
-        seed_indices: seed_indices.clone(),
-        seed_points: seed_points.clone(),
-        winv0: winv0.data.clone(),
-    };
-    for h in handles {
-        if !h.send(init.clone()) {
-            bail!("worker {} unavailable at init", h.worker);
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+}
+
+impl SamplerSession for OasisPSession {
+    fn name(&self) -> &'static str {
+        "oASIS-P"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn indices(&self) -> &[usize] {
+        &self.trace.order
+    }
+
+    fn trace(&self) -> &SelectionTrace {
+        &self.trace
+    }
+
+    fn selection_secs(&self) -> f64 {
+        self.busy_secs
+    }
+
+    /// Residual trace ratio `Σ|Δᵢ| / Σ|dᵢ|`, aggregated from the shard
+    /// sums the workers piggyback on every argmax gather. `None` before
+    /// the first gather round.
+    fn error_estimate(&self) -> Option<f64> {
+        let resid = self.resid_sum?;
+        if self.d_sum <= 0.0 {
+            return Some(0.0);
         }
+        Some(resid / self.d_sum)
     }
 
-    let mut trace = SelectionTrace::default();
-    let mut lambda = seed_indices.clone();
-    let mut z_sel = seed_points;
-    for &g in &lambda {
-        trace.order.push(g);
-        trace.cum_secs.push(sw.secs());
-        trace.deltas.push(f64::NAN);
-    }
-
-    // --- main selection loop ---
-    let mut d_scale = 0.0f64;
-    while lambda.len() < l {
+    /// One distributed selection round: gather the shard argmaxes, reduce,
+    /// fetch the winning point from its owner, broadcast it (paper: one
+    /// gathered scalar + one broadcast vector per iteration).
+    fn step(&mut self) -> Result<StepOutcome> {
+        if let Some(reason) = self.exhausted {
+            return Ok(StepOutcome::Exhausted(reason));
+        }
+        let sw = Stopwatch::start();
+        if self.trace.order.len() >= self.capacity {
+            // the workers' W⁻¹ replicas are allocated at cfg.max_cols
+            self.exhausted = Some(StopReason::Exhausted);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+        }
         // gather shard argmaxes
         let mut best: Option<(usize, f64)> = None; // (global idx, signed Δ)
-        for _ in 0..p {
-            match recv(inbox, cfg)? {
-                FromWorker::Argmax { best: wb, d_max, .. } => {
-                    d_scale = d_scale.max(d_max);
+        let mut round_resid = 0.0f64;
+        let mut round_d_sum = 0.0f64;
+        for _ in 0..self.p {
+            match self.recv()? {
+                FromWorker::Argmax {
+                    best: wb,
+                    d_max,
+                    sum_abs_delta,
+                    d_sum,
+                    ..
+                } => {
+                    self.d_scale = self.d_scale.max(d_max);
+                    round_resid += sum_abs_delta;
+                    round_d_sum += d_sum;
                     if let Some((gi, dv)) = wb {
                         let replace = match best {
                             None => true,
@@ -197,19 +390,30 @@ fn leader_loop(
                 other => bail!("unexpected message in main loop: {other:?}"),
             }
         }
-        metrics.add_iteration();
-        let tol = crate::sampling::effective_tol(cfg.tol, &[d_scale]);
+        self.metrics.add_iteration();
+        self.resid_sum = Some(round_resid);
+        self.d_sum = round_d_sum;
+        let tol = crate::sampling::effective_tol(self.cfg.tol, &[self.d_scale]);
         let (gidx, dval) = match best {
             Some(b) if b.1.abs() >= tol => b,
-            _ => break, // tolerance reached or all shards exhausted
+            Some(_) => {
+                self.exhausted = Some(StopReason::ScoreBelowTol);
+                self.busy_secs += sw.secs();
+                return Ok(StepOutcome::Exhausted(StopReason::ScoreBelowTol));
+            }
+            None => {
+                self.exhausted = Some(StopReason::Exhausted);
+                self.busy_secs += sw.secs();
+                return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+            }
         };
         // fetch the winning point from its owner
-        let w = owner_of(gidx);
-        if !handles[w].send(ToWorker::FetchPoint { global_idx: gidx }) {
+        let w = self.owner_of(gidx);
+        if !self.handles[w].send(ToWorker::FetchPoint { global_idx: gidx }) {
             bail!("worker {w} unavailable (fetch)");
         }
         let point = loop {
-            match recv(inbox, cfg)? {
+            match self.recv()? {
                 FromWorker::Point { global_idx, point } => {
                     debug_assert_eq!(global_idx, gidx);
                     break point;
@@ -221,73 +425,42 @@ fn leader_loop(
             }
         };
         // broadcast the selected point — the paper's one-vector-per-step
-        // communication pattern
+        // communication pattern; every worker replies with its next argmax
         let msg = ToWorker::Selected {
             global_idx: gidx,
-            point: point.clone(),
+            point,
             delta: dval,
         };
-        for h in handles {
+        for h in &self.handles {
             if !h.send(msg.clone()) {
                 bail!("worker {} unavailable (broadcast)", h.worker);
             }
         }
-        lambda.push(gidx);
-        z_sel.push(point);
-        trace.order.push(gidx);
-        trace.cum_secs.push(sw.secs());
-        trace.deltas.push(dval.abs());
+        self.trace.order.push(gidx);
+        self.trace.cum_secs.push(self.busy_secs + sw.secs());
+        self.trace.deltas.push(dval.abs());
+        self.busy_secs += sw.secs();
+        Ok(StepOutcome::Selected { index: gidx, score: dval.abs() })
     }
 
-    // --- finish: gather C blocks and the W⁻¹ replica ---
-    for h in handles {
-        if !h.send(ToWorker::Finish) {
-            bail!("worker {} unavailable (finish)", h.worker);
-        }
+    /// Not supported mid-run: assembly requires the terminal column
+    /// gather. Use [`OasisPSession::finish_run`] (or the trait `finish`).
+    fn snapshot(&self) -> Result<NystromApprox> {
+        bail!(
+            "oASIS-P sessions assemble only at finish (the column gather \
+             is terminal) — call finish_run()"
+        )
     }
-    let k = lambda.len();
-    let mut c = Mat::zeros(n, k);
-    let mut winv: Option<Mat> = None;
-    let mut got = 0;
-    // drain remaining Argmax replies interleaved with Columns
-    while got < p {
-        match recv(inbox, cfg)? {
-            FromWorker::Columns { start, local_n, c_block, winv: w, .. } => {
-                for i in 0..local_n {
-                    let dst = &mut c.data[(start + i) * k..(start + i + 1) * k];
-                    dst.copy_from_slice(&c_block[i * k..(i + 1) * k]);
-                }
-                if let Some(wd) = w {
-                    winv = Some(Mat::from_vec(k, k, wd));
-                }
-                got += 1;
-            }
-            FromWorker::Argmax { .. } => {} // stale replies from last round
-            FromWorker::Failed { worker, message } => {
-                bail!("worker {worker} failed at finish: {message}")
-            }
-            other => bail!("unexpected message at finish: {other:?}"),
-        }
+
+    fn finish(self: Box<Self>) -> Result<NystromApprox> {
+        self.finish_run().map(|(a, _)| a)
     }
-    let winv = winv.ok_or_else(|| anyhow!("no W⁻¹ returned by worker 0"))?;
-    Ok((
-        NystromApprox {
-            indices: lambda,
-            c,
-            winv,
-            selection_secs: sw.secs(),
-        },
-        trace,
-    ))
 }
 
-fn recv(
-    inbox: &mpsc::Receiver<FromWorker>,
-    cfg: &OasisPConfig,
-) -> Result<FromWorker> {
-    inbox
-        .recv_timeout(cfg.timeout)
-        .map_err(|e| anyhow!("leader recv: {e} (worker died or deadlock)"))
+impl Drop for OasisPSession {
+    fn drop(&mut self) {
+        self.teardown();
+    }
 }
 
 #[cfg(test)]
@@ -326,5 +499,38 @@ mod tests {
             report.metrics.broadcast_bytes(),
             bound
         );
+    }
+
+    /// Dropping a live session (external stop without finish) must not
+    /// deadlock or leak worker threads.
+    #[test]
+    fn dropping_live_session_joins_workers() {
+        let ds = two_moons(80, 0.05, 4);
+        let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+        let cfg = OasisPConfig::new(20, 3, 3).with_seed(2);
+        let mut session = OasisPSession::start(&ds, kernel, cfg).unwrap();
+        for _ in 0..4 {
+            session.step().unwrap();
+        }
+        drop(session); // teardown must complete promptly
+    }
+
+    /// The distributed error estimate is populated after the first round
+    /// and decreases as columns accumulate.
+    #[test]
+    fn distributed_error_estimate_progresses() {
+        let ds = two_moons(120, 0.05, 8);
+        let kernel: Arc<dyn Kernel + Send + Sync> =
+            Arc::new(Gaussian::with_sigma_fraction(&ds, 0.1));
+        let cfg = OasisPConfig::new(30, 4, 3).with_seed(6);
+        let mut session = OasisPSession::start(&ds, kernel, cfg).unwrap();
+        assert!(session.error_estimate().is_none());
+        session.step().unwrap();
+        let e0 = session.error_estimate().unwrap();
+        run_to_completion(&mut session, &StoppingRule::budget(30)).unwrap();
+        let e1 = session.error_estimate().unwrap();
+        assert!(e1 < e0, "estimate did not decrease: {e0} → {e1}");
+        let (approx, _) = session.finish_run().unwrap();
+        assert_eq!(approx.k(), 30);
     }
 }

@@ -131,13 +131,16 @@ impl Worker {
         let k0 = seed_indices.len();
         self.k = k0;
         self.z_sel = seed_points.to_vec();
-        // C_(i): kernel of each local point against each seed point
+        // C_(i): one batched cross-kernel pull of every seed column's
+        // local slice (threads = 1: this worker is one thread of p)
         self.c.resize(k0 * ln, 0.0);
-        for (t, sp) in seed_points.iter().enumerate() {
-            for i in 0..ln {
-                self.c[t * ln + i] = self.kernel.eval(self.shard.points.point(i), sp);
-            }
-        }
+        crate::kernels::kernel_cross_columns_into(
+            &self.shard.points,
+            &*self.kernel,
+            seed_points,
+            1,
+            &mut self.c,
+        );
         // W⁻¹ replica
         let l = self.max_cols;
         for i in 0..k0 {
@@ -181,11 +184,16 @@ impl Worker {
             let row = &self.winv[t * l..t * l + k];
             q[t] = crate::linalg::matrix::dot(row, &b);
         }
-        // local new column c_new = g(Z_(i), z_new)
+        // local new column c_new = g(Z_(i), z_new) — the per-step column
+        // pull, through the same batched fill as the seed phase
         let mut c_new = vec![0.0; ln];
-        for (i, cv) in c_new.iter_mut().enumerate() {
-            *cv = self.kernel.eval(self.shard.points.point(i), point);
-        }
+        crate::kernels::kernel_cross_columns_into(
+            &self.shard.points,
+            &*self.kernel,
+            std::slice::from_ref(&point),
+            1,
+            &mut c_new,
+        );
         // diff = C_(i) q − c_new  (local slice of Cq − c_new; t-outer
         // streaming, see EXPERIMENTS.md §Perf)
         for (o, &cv) in self.diff.iter_mut().zip(&c_new) {
@@ -244,18 +252,27 @@ impl Worker {
             }
         }
         let mut best: Option<(usize, f64)> = None;
+        let mut sum_abs_delta = 0.0f64;
         for i in 0..ln {
             if self.selected_local[i] {
                 continue;
             }
             let a = self.delta[i].abs();
+            sum_abs_delta += a;
             match best {
                 Some((_, bd)) if self.delta_abs(bd) >= a => {}
                 _ => best = Some((self.shard.start + i, self.delta[i])),
             }
         }
         let d_max = self.d.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
-        self.leader.send(FromWorker::Argmax { worker: self.id, best, d_max });
+        let d_sum = self.d.iter().map(|x| x.abs()).sum();
+        self.leader.send(FromWorker::Argmax {
+            worker: self.id,
+            best,
+            d_max,
+            sum_abs_delta,
+            d_sum,
+        });
     }
 
     #[inline]

@@ -1,0 +1,147 @@
+//! Crate error type — a minimal, dependency-free `anyhow` substitute.
+//!
+//! Provides the three pieces of the `anyhow` API the crate uses:
+//! [`Error`] (an opaque, `Display`-able error value), the
+//! [`anyhow!`](crate::anyhow)/[`bail!`](crate::bail) macros, and the
+//! [`Context`] extension trait. Any `std::error::Error` converts into
+//! [`Error`] via `?`, so library code keeps ordinary error-propagation
+//! ergonomics without pulling a registry dependency into the offline
+//! tier-1 build.
+
+use std::fmt;
+
+/// An opaque error: a message plus an optional source it was built from.
+///
+/// Like `anyhow::Error`, this type deliberately does **not** implement
+/// `std::error::Error` — that keeps the blanket `From<E: std::error::Error>`
+/// conversion coherent (no overlap with the reflexive `From<Error>`).
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Prefix the message with additional context (innermost last).
+    pub fn wrap(self, context: impl fmt::Display) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source.as_deref().and_then(|e| e.source());
+        while let Some(e) = src {
+            write!(f, "\n  caused by: {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Construct an [`Error`] from a format string: `anyhow!("bad k = {k}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`]: `bail!("workers must be ≥ 1")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `anyhow::Context`-style extension: attach a message to the error arm.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> crate::Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> crate::Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> crate::Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> crate::Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> crate::Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> crate::Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> crate::Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!format!("{err}").is_empty());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e = anyhow!("bad value {}", 3);
+        assert_eq!(format!("{e}"), "bad value 3");
+        let r: crate::Result<()> = Err(e).context("while parsing");
+        let msg = format!("{}", r.unwrap_err());
+        assert_eq!(msg, "while parsing: bad value 3");
+        let o: Option<u32> = None;
+        assert!(o.with_context(|| "missing").is_err());
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: i32) -> crate::Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{}", f(-1).unwrap_err()).contains("negative"));
+    }
+}

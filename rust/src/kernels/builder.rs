@@ -48,6 +48,34 @@ pub fn kernel_diag(ds: &Dataset, k: &dyn Kernel) -> Vec<f64> {
     (0..ds.n()).map(|i| k.diag_value(ds.point(i))).collect()
 }
 
+/// Batched cross-kernel fill: evaluate every dataset point against every
+/// point in `points`, writing column-major — the column for `points[t]`
+/// occupies `out[t*n .. (t+1)*n]`. This is the oASIS-P worker's "column
+/// pull": its shard's slice of the sampled columns C, computed against
+/// selected points that may live on other nodes, in one batched pass
+/// instead of one eval loop per point. `threads = 1` keeps the fill on
+/// the calling thread (workers are already one thread of p).
+pub fn kernel_cross_columns_into<P: AsRef<[f64]> + Sync>(
+    ds: &Dataset,
+    k: &dyn Kernel,
+    points: &[P],
+    threads: usize,
+    out: &mut [f64],
+) {
+    let n = ds.n();
+    let m = points.len();
+    assert_eq!(out.len(), m * n, "cross-column buffer must be |points|·n");
+    parallel::for_each_chunk_mut(out, n, threads, |range, chunk| {
+        for (local, t) in range.clone().enumerate() {
+            let zt = points[t].as_ref();
+            let col = &mut chunk[local * n..(local + 1) * n];
+            for (i, o) in col.iter_mut().enumerate() {
+                *o = k.eval(ds.point(i), zt);
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +116,24 @@ mod tests {
         let d = kernel_diag(&ds, &k);
         for i in 0..25 {
             assert!((d[i] - g.at(i, i)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn cross_columns_match_matrix() {
+        let ds = two_moons(35, 0.05, 6);
+        let k = Gaussian::new(0.8);
+        let g = kernel_matrix(&ds, &k);
+        let sel = [4usize, 0, 30];
+        let pts: Vec<Vec<f64>> = sel.iter().map(|&j| ds.point(j).to_vec()).collect();
+        for threads in [1usize, 4] {
+            let mut out = vec![0.0; pts.len() * 35];
+            kernel_cross_columns_into(&ds, &k, &pts, threads, &mut out);
+            for (t, &j) in sel.iter().enumerate() {
+                for i in 0..35 {
+                    assert_eq!(out[t * 35 + i], g.at(i, j), "({i}, {j})");
+                }
+            }
         }
     }
 

@@ -10,6 +10,8 @@ pub mod builder;
 pub mod diffusion;
 pub mod functions;
 
-pub use builder::{kernel_column_into, kernel_diag, kernel_matrix};
+pub use builder::{
+    kernel_column_into, kernel_cross_columns_into, kernel_diag, kernel_matrix,
+};
 pub use diffusion::diffusion_normalize;
 pub use functions::{Gaussian, Kernel, Laplacian, Linear, Polynomial};

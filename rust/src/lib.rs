@@ -13,29 +13,55 @@
 //!   (Δ-scoring, Gaussian kernel columns, Eq. 5/6 rank-1 updates) written in
 //!   JAX calling Pallas kernels, AOT-lowered to HLO text artifacts.
 //! * **Runtime bridge** ([`runtime`]) — loads those artifacts through the
-//!   PJRT CPU client (`xla` crate) and serves them on the Rust hot path;
-//!   every op also has a native Rust fallback so the library is fully
-//!   functional without artifacts.
+//!   PJRT CPU client (`xla` crate, behind the `pjrt` feature) and serves
+//!   them on the Rust hot path; every op also has a native Rust fallback so
+//!   the library is fully functional without artifacts.
 //!
-//! ## Quickstart
+//! ## Quickstart: stepwise sessions
+//!
+//! Selection is sequential and cheap per step (paper §III), and the API
+//! exposes that directly: open a [`SamplerSession`](sampling::SamplerSession),
+//! drive it under any combination of stopping criteria — column budget,
+//! Δ tolerance, estimated-error target, wall-clock deadline — and assemble
+//! a [`NystromApprox`](nystrom::NystromApprox) whenever you like. Sessions
+//! are resumable: ask for more columns later and the index set extends.
 //!
 //! ```no_run
 //! use oasis::data::generators::two_moons;
 //! use oasis::kernels::Gaussian;
-//! use oasis::sampling::{oasis::Oasis, ColumnSampler};
 //! use oasis::nystrom::error::relative_frobenius_error;
+//! use oasis::sampling::oasis::Oasis;
+//! use oasis::sampling::{
+//!     run_to_completion, ImplicitOracle, SamplerSession, StoppingCriterion,
+//!     StoppingRule,
+//! };
 //!
 //! let ds = two_moons(2_000, 0.05, 42);
 //! let kernel = Gaussian::with_sigma_fraction(&ds, 0.05);
-//! let oracle = oasis::sampling::ImplicitOracle::new(&ds, &kernel);
-//! let approx = Oasis::new(450, 10, 1e-12, 7).sample(&oracle).unwrap();
+//! let oracle = ImplicitOracle::new(&ds, &kernel);
+//!
+//! // grow until the estimated error reaches 1e-3, capped at 450 columns
+//! let mut session = Oasis::new(450, 10, 1e-12, 7).session(&oracle).unwrap();
+//! let rule = StoppingRule::budget(450)
+//!     .with(StoppingCriterion::ErrorBelow(1e-3));
+//! let reason = run_to_completion(&mut session, &rule).unwrap();
+//! println!("stopped after {} columns ({reason:?})", session.k());
+//!
+//! // snapshot, keep the session, resume with a larger budget later
+//! let approx = session.snapshot().unwrap();
 //! let err = relative_frobenius_error(&oracle, &approx);
 //! println!("relative Frobenius error: {err:.3e}");
+//! run_to_completion(&mut session, &StoppingRule::budget(600)).unwrap();
 //! ```
+//!
+//! The one-shot API is still there — `Oasis::new(450, 10, 1e-12, 7)
+//! .sample(&oracle)` — as a thin adapter over the same session machinery,
+//! so both paths select bit-identical column sequences.
 
 pub mod bench_support;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod kernels;
 pub mod linalg;
 pub mod nystrom;
@@ -45,4 +71,4 @@ pub mod seed;
 pub mod util;
 
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, error::Error>;

@@ -13,15 +13,18 @@
 use oasis::coordinator::{run_oasis_p, OasisPConfig};
 use oasis::data::{generators, Dataset};
 use oasis::kernels::{Gaussian, Kernel, Linear};
-use oasis::nystrom::{relative_frobenius_error, sampled_relative_error};
+use oasis::nystrom::{relative_frobenius_error, sampled_relative_error, NystromApprox};
 use oasis::runtime::{Accel, Manifest};
 use oasis::sampling::{
     farahat::Farahat, kmeans::KMeansNystrom, leverage::LeverageScores,
-    oasis::Oasis, uniform::Uniform, ColumnSampler, ImplicitOracle,
+    oasis::Oasis, run_to_completion, uniform::Uniform, ColumnSampler,
+    ImplicitOracle, SamplerSession, StopReason, StoppingCriterion, StoppingRule,
 };
 use oasis::util::args::Args;
+use oasis::util::json::Json;
 use oasis::util::timing::fmt_secs;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = Args::from_env();
@@ -55,6 +58,12 @@ fn print_help() {
            --error     full|sampled (default full for n ≤ 8000)\n\
            --seed      RNG seed (default 7)\n\
            --accel     use the PJRT artifact path for oASIS scoring\n\
+           --target-err  stop once the estimated relative error reaches\n\
+                         this (oasis/farahat; may stop before --cols)\n\
+           --deadline-ms stop selection after this many milliseconds\n\
+                         (oasis/farahat)\n\
+           --json      structured one-line JSON output (method, k,\n\
+                       error, secs, stop)\n\
          \n\
          parallel options:\n\
            --dataset/--n/--cols/--sigma-frac/--seed as above\n\
@@ -91,6 +100,77 @@ fn make_dataset(args: &Args) -> Dataset {
     }
 }
 
+/// Build the stopping rule from the CLI flags: budget always applies;
+/// `--target-err` and `--deadline-ms` are listed first so their reasons
+/// win the report when several criteria hold at once.
+fn stopping_rule(args: &Args, cols: usize) -> StoppingRule {
+    let mut rule = StoppingRule::new();
+    if let Some(t) = args.get("target-err") {
+        let target: f64 = t.parse().unwrap_or_else(|_| {
+            panic!("--target-err expects a number, got '{t}'")
+        });
+        rule = rule.with(StoppingCriterion::ErrorBelow(target));
+    }
+    if let Some(ms) = args.get("deadline-ms") {
+        let ms: u64 = ms.parse().unwrap_or_else(|_| {
+            panic!("--deadline-ms expects an integer, got '{ms}'")
+        });
+        rule = rule.with(StoppingCriterion::Deadline(Duration::from_millis(ms)));
+    }
+    rule.with(StoppingCriterion::ColumnBudget(cols))
+}
+
+fn stop_reason_str(r: StopReason) -> &'static str {
+    match r {
+        StopReason::BudgetReached => "budget",
+        StopReason::ScoreBelowTol => "score-tol",
+        StopReason::ErrorTargetMet => "error-target",
+        StopReason::DeadlineExpired => "deadline",
+        StopReason::Exhausted => "exhausted",
+    }
+}
+
+fn report_approximate(
+    args: &Args,
+    ds: &Dataset,
+    method: &str,
+    approx: &NystromApprox,
+    err: f64,
+    stop: Option<StopReason>,
+) {
+    if args.flag("json") {
+        let mut fields = vec![
+            ("dataset", Json::Str(args.get_or("dataset", "two-moons"))),
+            ("n", Json::Num(ds.n() as f64)),
+            ("dim", Json::Num(ds.dim() as f64)),
+            ("method", Json::Str(method.to_string())),
+            ("k", Json::Num(approx.k() as f64)),
+            ("error", Json::Num(err)),
+            ("secs", Json::Num(approx.selection_secs)),
+        ];
+        if let Some(r) = stop {
+            fields.push(("stop", Json::Str(stop_reason_str(r).to_string())));
+        }
+        println!("{}", Json::obj(fields));
+    } else {
+        let stop_note = stop
+            .filter(|&r| r != StopReason::BudgetReached)
+            .map(|r| format!(" stop={}", stop_reason_str(r)))
+            .unwrap_or_default();
+        println!(
+            "dataset={} n={} dim={} method={} cols={} error={:.3e} select_time={}{}",
+            args.get_or("dataset", "two-moons"),
+            ds.n(),
+            ds.dim(),
+            method,
+            approx.k(),
+            err,
+            fmt_secs(approx.selection_secs),
+            stop_note,
+        );
+    }
+}
+
 fn cmd_approximate(args: &Args) -> i32 {
     let ds = make_dataset(args);
     let cols = args.usize_or("cols", 450).min(ds.n());
@@ -108,35 +188,68 @@ fn cmd_approximate(args: &Args) -> i32 {
     };
     let oracle = ImplicitOracle::new(&ds, kernel);
     let method = args.get_or("method", "oasis");
+    let mut stop: Option<StopReason> = None;
 
     let approx = if args.flag("accel") && method == "oasis" {
-        match Accel::try_default() {
-            Some(mut accel) => {
-                let sampler =
-                    oasis::runtime::accel::PjrtOasis::new(cols, 10.min(cols), 1e-12, seed);
-                match sampler.sample_with(&mut accel, &oracle) {
-                    Ok((a, _)) => a,
-                    Err(e) => {
-                        eprintln!("accel path failed ({e}); falling back to native");
-                        Oasis::new(cols, 10.min(cols), 1e-12, seed)
-                            .sample(&oracle)
-                            .expect("native oasis")
-                    }
-                }
+        let rule = stopping_rule(args, cols);
+        let accel_run = Accel::try_default()
+            .ok_or_else(|| {
+                oasis::anyhow!("no artifacts found (run `make artifacts`)")
+            })
+            .and_then(|mut accel| {
+                let sampler = oasis::runtime::accel::PjrtOasis::new(
+                    cols,
+                    10.min(cols),
+                    1e-12,
+                    seed,
+                );
+                let mut s = sampler.session(&mut accel, &oracle)?;
+                let reason = run_to_completion(&mut s, &rule)?;
+                Ok((s.snapshot()?, reason))
+            });
+        match accel_run {
+            Ok((a, reason)) => {
+                stop = Some(reason);
+                a
             }
-            None => {
-                eprintln!("no artifacts found (run `make artifacts`); using native");
-                Oasis::new(cols, 10.min(cols), 1e-12, seed)
-                    .sample(&oracle)
-                    .expect("native oasis")
+            Err(e) => {
+                eprintln!("accel path failed ({e}); falling back to native");
+                let mut s = Oasis::new(cols, 10.min(cols), 1e-12, seed)
+                    .session(&oracle)
+                    .expect("native oasis");
+                stop = Some(
+                    run_to_completion(&mut s, &rule).expect("native oasis"),
+                );
+                s.snapshot().expect("native oasis")
+            }
+        }
+    } else if method == "oasis" || method == "farahat" {
+        // sequential samplers run as sessions so --target-err and
+        // --deadline-ms can stop them before the column budget
+        let rule = stopping_rule(args, cols);
+        let result = (|| -> oasis::Result<NystromApprox> {
+            if method == "oasis" {
+                let mut s =
+                    Oasis::new(cols, 10.min(cols), 1e-12, seed).session(&oracle)?;
+                stop = Some(run_to_completion(&mut s, &rule)?);
+                s.snapshot()
+            } else {
+                let mut s = Farahat::new(cols).session(&oracle)?;
+                stop = Some(run_to_completion(&mut s, &rule)?);
+                s.snapshot()
+            }
+        })();
+        match result {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("sampling failed: {e}");
+                return 1;
             }
         }
     } else {
         let sampler: Box<dyn ColumnSampler> = match method.as_str() {
-            "oasis" => Box::new(Oasis::new(cols, 10.min(cols), 1e-12, seed)),
             "random" => Box::new(Uniform::new(cols, seed)),
             "leverage" => Box::new(LeverageScores::new(cols, cols, seed)),
-            "farahat" => Box::new(Farahat::new(cols)),
             "kmeans" => Box::new(KMeansNystrom::new(&ds, kernel, cols, seed)),
             other => {
                 eprintln!("unknown method '{other}'");
@@ -158,16 +271,7 @@ fn cmd_approximate(args: &Args) -> i32 {
     } else {
         sampled_relative_error(&oracle, &approx, 100_000, seed ^ 0xE44)
     };
-    println!(
-        "dataset={} n={} dim={} method={} cols={} error={:.3e} select_time={}",
-        args.get_or("dataset", "two-moons"),
-        ds.n(),
-        ds.dim(),
-        method,
-        approx.k(),
-        err,
-        fmt_secs(approx.selection_secs),
-    );
+    report_approximate(args, &ds, &method, &approx, err, stop);
     0
 }
 

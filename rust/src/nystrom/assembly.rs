@@ -1,0 +1,183 @@
+//! Assembling a [`NystromApprox`] from live session state.
+//!
+//! Sequential samplers keep their sampled columns *column-major* (each
+//! selection appends one contiguous n-slice) while [`NystromApprox`]
+//! stores C row-major. A one-shot transpose per snapshot is O(nk) strided
+//! writes; sessions that snapshot repeatedly while growing (the serving
+//! pattern: grow a few columns per request, hand out the current
+//! approximation) would pay that full transpose every time. The
+//! [`IncrementalAssembler`] caches the row-major image and transposes
+//! only the columns appended since the last sync, so a snapshot after m
+//! new selections costs O(nm) transpose work plus one contiguous copy.
+
+use super::NystromApprox;
+use crate::linalg::Mat;
+
+/// Cached row-major image of a growing column-major column buffer.
+#[derive(Clone, Debug)]
+pub struct IncrementalAssembler {
+    n: usize,
+    /// columns already transposed into `data`.
+    cols_done: usize,
+    /// current column capacity (row stride of `data`).
+    cap: usize,
+    /// n × cap row-major; first `cols_done` entries of each row are live.
+    data: Vec<f64>,
+}
+
+impl IncrementalAssembler {
+    pub fn new(n: usize) -> IncrementalAssembler {
+        IncrementalAssembler { n, cols_done: 0, cap: 0, data: Vec::new() }
+    }
+
+    pub fn cols_done(&self) -> usize {
+        self.cols_done
+    }
+
+    /// Bring the cache up to `k` columns of `c_colmajor` (column t lives
+    /// at `c_colmajor[t*n .. (t+1)*n]`). Only columns `cols_done..k` are
+    /// transposed; earlier columns are assumed unchanged, which holds for
+    /// every session here (selection only ever appends columns).
+    pub fn sync(&mut self, c_colmajor: &[f64], k: usize) {
+        assert!(c_colmajor.len() >= k * self.n, "column buffer too short");
+        assert!(k >= self.cols_done, "columns cannot be removed");
+        if k > self.cap {
+            self.grow(k);
+        }
+        for t in self.cols_done..k {
+            let src = &c_colmajor[t * self.n..(t + 1) * self.n];
+            for (i, &v) in src.iter().enumerate() {
+                self.data[i * self.cap + t] = v;
+            }
+        }
+        self.cols_done = k;
+    }
+
+    /// Re-stride to a capacity of at least `k` columns (geometric growth,
+    /// preserving the live block).
+    fn grow(&mut self, k: usize) {
+        let new_cap = k.max(self.cap * 2).max(8);
+        let mut data = vec![0.0; self.n * new_cap];
+        for i in 0..self.n {
+            data[i * new_cap..i * new_cap + self.cols_done].copy_from_slice(
+                &self.data[i * self.cap..i * self.cap + self.cols_done],
+            );
+        }
+        self.cap = new_cap;
+        self.data = data;
+    }
+
+    /// The current n×cols_done row-major C (contiguous copies per row; a
+    /// straight memcpy when the capacity is exact).
+    pub fn to_mat(&self) -> Mat {
+        let k = self.cols_done;
+        if k == self.cap {
+            return Mat::from_vec(self.n, k, self.data.clone());
+        }
+        let mut out = Mat::zeros(self.n, k);
+        for i in 0..self.n {
+            out.data[i * k..(i + 1) * k]
+                .copy_from_slice(&self.data[i * self.cap..i * self.cap + k]);
+        }
+        out
+    }
+}
+
+/// One-shot assembly from raw session state: column-major sampled columns
+/// plus the live k×k block of a (possibly over-allocated, `stride`-wide)
+/// W⁻¹ buffer. Used by sessions that do not keep an incremental cache.
+pub fn approx_from_colmajor(
+    indices: Vec<usize>,
+    n: usize,
+    c_colmajor: &[f64],
+    winv: &[f64],
+    winv_stride: usize,
+    selection_secs: f64,
+) -> NystromApprox {
+    let k = indices.len();
+    let mut asm = IncrementalAssembler::new(n);
+    asm.sync(c_colmajor, k);
+    NystromApprox {
+        indices,
+        c: asm.to_mat(),
+        winv: winv_block(winv, winv_stride, k),
+        selection_secs,
+    }
+}
+
+/// Extract the live k×k block of a stride-`stride` W⁻¹ buffer.
+pub fn winv_block(winv: &[f64], stride: usize, k: usize) -> Mat {
+    assert!(stride >= k && winv.len() >= (k.saturating_sub(1)) * stride + k);
+    let mut out = Mat::zeros(k, k);
+    for i in 0..k {
+        out.data[i * k..(i + 1) * k]
+            .copy_from_slice(&winv[i * stride..i * stride + k]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn colmajor(n: usize, k: usize) -> Vec<f64> {
+        (0..k * n).map(|x| (x * 7 % 23) as f64 - 11.0).collect()
+    }
+
+    #[test]
+    fn incremental_sync_matches_full_transpose() {
+        let (n, k) = (9, 7);
+        let c = colmajor(n, k);
+        // incremental: sync in uneven chunks
+        let mut asm = IncrementalAssembler::new(n);
+        asm.sync(&c, 2);
+        asm.sync(&c, 2); // no-op sync is fine
+        asm.sync(&c, 5);
+        asm.sync(&c, k);
+        let m = asm.to_mat();
+        for i in 0..n {
+            for t in 0..k {
+                assert_eq!(m.at(i, t), c[t * n + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn growth_preserves_live_block() {
+        let (n, k) = (5, 40);
+        let c = colmajor(n, k);
+        let mut asm = IncrementalAssembler::new(n);
+        for step in 1..=k {
+            asm.sync(&c, step); // forces several re-strides
+        }
+        let m = asm.to_mat();
+        assert_eq!((m.rows, m.cols), (n, k));
+        for i in 0..n {
+            for t in 0..k {
+                assert_eq!(m.at(i, t), c[t * n + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn one_shot_assembly_extracts_winv_block() {
+        let (n, k, stride) = (6, 3, 5);
+        let c = colmajor(n, k);
+        let mut winv = vec![0.0; stride * stride];
+        for i in 0..k {
+            for j in 0..k {
+                winv[i * stride + j] = (i * 10 + j) as f64;
+            }
+        }
+        let a = approx_from_colmajor(vec![1, 3, 5], n, &c, &winv, stride, 0.25);
+        assert_eq!(a.k(), k);
+        assert_eq!(a.n(), n);
+        assert_eq!(a.selection_secs, 0.25);
+        for i in 0..k {
+            for j in 0..k {
+                assert_eq!(a.winv.at(i, j), (i * 10 + j) as f64);
+            }
+        }
+        assert_eq!(a.c.at(4, 2), c[2 * n + 4]);
+    }
+}

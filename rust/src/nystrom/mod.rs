@@ -2,10 +2,12 @@
 //! SVD / diffusion-map embedding built from it (paper §II-C).
 
 pub mod approx;
+pub mod assembly;
 pub mod embedding;
 pub mod error;
 pub mod svd;
 
 pub use approx::NystromApprox;
+pub use assembly::{approx_from_colmajor, IncrementalAssembler};
 pub use error::{relative_frobenius_error, sampled_relative_error};
 pub use svd::nystrom_eig;

@@ -6,14 +6,23 @@
 //! (n_pad × l_pad) row-major f32 with zeros beyond (n, k), R to
 //! (l_pad × n_pad); zero padding leaves Δ = d − colsum(C∘R) unchanged, so
 //! one artifact serves every iteration k ≤ l_pad.
+//!
+//! Scoring is served one *session step* at a time: [`PjrtOasisSession`]
+//! implements [`SamplerSession`], running the Δ-scoring artifact per
+//! [`step`](SamplerSession::step) while maintaining the f64 state and its
+//! padded f32 mirrors natively. [`PjrtOasis::sample_with`] is the one-shot
+//! adapter.
 
 use super::{Executor, Manifest};
-use crate::sampling::{ColumnOracle, ColumnSampler, SelectionTrace};
 use crate::linalg::Mat;
-use crate::nystrom::NystromApprox;
+use crate::nystrom::{assembly, NystromApprox};
+use crate::sampling::{
+    run_to_completion, ColumnOracle, ColumnSampler, SamplerSession,
+    SelectionTrace, StepOutcome, StopReason, StoppingRule,
+};
 use crate::util::{rng::Pcg64, timing::Stopwatch};
+use crate::{anyhow, bail};
 use crate::Result;
-use anyhow::{anyhow, bail};
 use std::path::Path;
 
 /// Loaded manifest + executor, shared by accelerated ops.
@@ -108,12 +117,15 @@ impl PjrtOasis {
         PjrtOasis { max_cols, init_cols, tol, seed }
     }
 
-    /// Run selection using `accel` for scoring.
-    pub fn sample_with(
+    /// Open an accelerated session: picks and compiles the Δ-scoring
+    /// artifact bucket, seeds (same RNG stream / rejection rule as the
+    /// native sampler), and mirrors the state into the padded layout.
+    /// Capacity is fixed at the artifact's `l` bucket.
+    pub fn session<'a>(
         &self,
-        accel: &mut Accel,
-        oracle: &dyn ColumnOracle,
-    ) -> Result<(NystromApprox, SelectionTrace)> {
+        accel: &'a mut Accel,
+        oracle: &'a dyn ColumnOracle,
+    ) -> Result<PjrtOasisSession<'a>> {
         let sw = Stopwatch::start();
         let n = oracle.n();
         let l = self.max_cols.min(n);
@@ -128,6 +140,7 @@ impl PjrtOasis {
 
         let d = oracle.diag();
         let tol = crate::sampling::effective_tol(self.tol, &d);
+        let d_abs_sum = d.iter().map(|x| x.abs()).sum();
         let mut d32 = vec![0.0f32; n_pad];
         for i in 0..n {
             d32[i] = d[i] as f32;
@@ -144,7 +157,7 @@ impl PjrtOasis {
         // --- seed (same stream/rejection as the native sampler) ---
         let mut rng = Pcg64::new(self.seed);
         let k0 = self.init_cols.min(l);
-        let mut lambda: Vec<usize>;
+        let lambda: Vec<usize>;
         loop {
             let cand = rng.sample_without_replacement(n, k0);
             c.clear();
@@ -172,7 +185,7 @@ impl PjrtOasis {
             }
         }
         // R₀ = W₀⁻¹ C₀ᵀ
-        let mut k = k0;
+        let k = k0;
         for t in 0..k {
             for i in 0..n {
                 let mut acc = 0.0;
@@ -197,107 +210,219 @@ impl PjrtOasis {
             trace.deltas.push(f64::NAN);
         }
 
-        let mut diff = vec![0.0f64; n];
-        while k < l {
-            // Δ via the PJRT artifact
-            let outs = accel.executor.run_f32(
-                &art.name,
-                &[
-                    (&c32, &[n_pad as i64, l_pad as i64]),
-                    (&r32, &[l_pad as i64, n_pad as i64]),
-                    (&d32, &[n_pad as i64]),
-                ],
-            )?;
-            let delta32 = &outs[0];
-            let mut best = usize::MAX;
-            let mut best_abs = -1.0f64;
-            for i in 0..n {
-                if selected[i] {
-                    continue;
-                }
-                let a = (delta32[i] as f64).abs();
-                if a > best_abs {
-                    best_abs = a;
-                    best = i;
-                }
-            }
-            if best == usize::MAX || best_abs < tol {
-                break;
-            }
-            let s = 1.0 / delta32[best] as f64;
-            let mut col = vec![0.0f64; n];
-            oracle.column_into(best, &mut col);
-            // q = W⁻¹ b
-            let mut q = vec![0.0f64; k];
-            for t in 0..k {
-                let mut acc = 0.0;
-                for u in 0..k {
-                    acc += winv[t * l + u] * c[u * n + best];
-                }
-                q[t] = acc;
-            }
-            // diff = Cq − c_new
-            for i in 0..n {
-                let mut acc = 0.0;
-                for (t, &qt) in q.iter().enumerate() {
-                    acc += qt * c[t * n + i];
-                }
-                diff[i] = acc - col[i];
-            }
-            // Eq. 5 (W⁻¹)
-            for i in 0..k {
-                for j in 0..k {
-                    winv[i * l + j] += s * q[i] * q[j];
-                }
-                winv[i * l + k] = -s * q[i];
-                winv[k * l + i] = -s * q[i];
-            }
-            winv[k * l + k] = s;
-            // Eq. 6 (R) + mirrors
-            for t in 0..k {
-                let f = s * q[t];
-                let row = &mut r[t * n..(t + 1) * n];
-                for (o, &dv) in row.iter_mut().zip(&diff) {
-                    *o += f * dv;
-                }
-                mirror_row(&mut r32, row, t, n_pad);
-            }
-            for i in 0..n {
-                r[k * n + i] = -s * diff[i];
-            }
-            mirror_row(&mut r32, &r[k * n..(k + 1) * n], k, n_pad);
-            c.extend_from_slice(&col);
-            mirror_col(&mut c32, &col, k, l_pad);
+        Ok(PjrtOasisSession {
+            accel,
+            oracle,
+            art_name: art.name,
+            n,
+            n_pad,
+            l_pad,
+            capacity: l,
+            tol,
+            d32,
+            d_abs_sum,
+            c,
+            winv,
+            r,
+            c32,
+            r32,
+            diff: vec![0.0f64; n],
+            resid_sum: None,
+            selected,
+            trace,
+            exhausted: None,
+            busy_secs: sw.secs(),
+        })
+    }
 
-            selected[best] = true;
-            lambda.push(best);
-            trace.order.push(best);
-            trace.cum_secs.push(sw.secs());
-            trace.deltas.push(best_abs);
-            k += 1;
-        }
+    /// Run selection using `accel` for scoring (one-shot adapter over the
+    /// session + a column-budget rule).
+    pub fn sample_with(
+        &self,
+        accel: &mut Accel,
+        oracle: &dyn ColumnOracle,
+    ) -> Result<(NystromApprox, SelectionTrace)> {
+        let mut session = self.session(accel, oracle)?;
+        run_to_completion(&mut session, &StoppingRule::budget(self.max_cols))?;
+        let trace = session.trace().clone();
+        let approx = session.snapshot()?;
+        Ok((approx, trace))
+    }
+}
 
-        // assemble
-        let mut c_mat = Mat::zeros(n, k);
-        for t in 0..k {
-            for i in 0..n {
-                c_mat.data[i * k + t] = c[t * n + i];
+/// A paused PJRT-scored oASIS run (see [`PjrtOasis::session`]).
+pub struct PjrtOasisSession<'a> {
+    accel: &'a mut Accel,
+    oracle: &'a dyn ColumnOracle,
+    art_name: String,
+    n: usize,
+    n_pad: usize,
+    l_pad: usize,
+    /// fixed capacity: the state buffers are allocated at the constructor
+    /// budget (bounded by the artifact's `l` bucket).
+    capacity: usize,
+    tol: f64,
+    d32: Vec<f32>,
+    d_abs_sum: f64,
+    /// C column-major (f64 source of truth).
+    c: Vec<f64>,
+    /// W⁻¹, stride `capacity`.
+    winv: Vec<f64>,
+    /// R row-major, stride n.
+    r: Vec<f64>,
+    /// padded f32 mirrors in artifact layout.
+    c32: Vec<f32>,
+    r32: Vec<f32>,
+    diff: Vec<f64>,
+    /// Σ|Δ| over unselected candidates from the latest artifact scoring.
+    resid_sum: Option<f64>,
+    selected: Vec<bool>,
+    trace: SelectionTrace,
+    exhausted: Option<StopReason>,
+    busy_secs: f64,
+}
+
+impl SamplerSession for PjrtOasisSession<'_> {
+    fn name(&self) -> &'static str {
+        "oASIS (PJRT)"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn indices(&self) -> &[usize] {
+        &self.trace.order
+    }
+
+    fn trace(&self) -> &SelectionTrace {
+        &self.trace
+    }
+
+    fn selection_secs(&self) -> f64 {
+        self.busy_secs
+    }
+
+    /// Residual trace ratio from the latest f32 Δ sweep (`None` before
+    /// the first step).
+    fn error_estimate(&self) -> Option<f64> {
+        let sum = self.resid_sum?;
+        if self.d_abs_sum <= 0.0 {
+            return Some(0.0);
+        }
+        Some(sum / self.d_abs_sum)
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if let Some(reason) = self.exhausted {
+            return Ok(StepOutcome::Exhausted(reason));
+        }
+        let sw = Stopwatch::start();
+        let n = self.n;
+        let l = self.capacity;
+        let k = self.trace.order.len();
+        if k >= l {
+            // fixed-shape artifact state cannot grow past its bucket
+            self.exhausted = Some(StopReason::Exhausted);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+        }
+        // Δ via the PJRT artifact
+        let outs = self.accel.executor.run_f32(
+            &self.art_name,
+            &[
+                (&self.c32, &[self.n_pad as i64, self.l_pad as i64]),
+                (&self.r32, &[self.l_pad as i64, self.n_pad as i64]),
+                (&self.d32, &[self.n_pad as i64]),
+            ],
+        )?;
+        let delta32 = &outs[0];
+        let mut best = usize::MAX;
+        let mut best_abs = -1.0f64;
+        let mut sum_abs = 0.0f64;
+        for i in 0..n {
+            if self.selected[i] {
+                continue;
+            }
+            let a = (delta32[i] as f64).abs();
+            sum_abs += a;
+            if a > best_abs {
+                best_abs = a;
+                best = i;
             }
         }
-        let mut w_mat = Mat::zeros(k, k);
+        self.resid_sum = Some(sum_abs);
+        if best == usize::MAX {
+            self.exhausted = Some(StopReason::Exhausted);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+        }
+        if best_abs < self.tol {
+            self.exhausted = Some(StopReason::ScoreBelowTol);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::ScoreBelowTol));
+        }
+        let s = 1.0 / delta32[best] as f64;
+        let mut col = vec![0.0f64; n];
+        self.oracle.column_into(best, &mut col);
+        // q = W⁻¹ b
+        let mut q = vec![0.0f64; k];
+        for (t, qt) in q.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for u in 0..k {
+                acc += self.winv[t * l + u] * self.c[u * n + best];
+            }
+            *qt = acc;
+        }
+        // diff = Cq − c_new
+        for i in 0..n {
+            let mut acc = 0.0;
+            for (t, &qt) in q.iter().enumerate() {
+                acc += qt * self.c[t * n + i];
+            }
+            self.diff[i] = acc - col[i];
+        }
+        // Eq. 5 (W⁻¹)
         for i in 0..k {
             for j in 0..k {
-                w_mat.data[i * k + j] = winv[i * l + j];
+                self.winv[i * l + j] += s * q[i] * q[j];
             }
+            self.winv[i * l + k] = -s * q[i];
+            self.winv[k * l + i] = -s * q[i];
         }
-        Ok((
-            NystromApprox {
-                indices: lambda,
-                c: c_mat,
-                winv: w_mat,
-                selection_secs: sw.secs(),
-            },
-            trace,
+        self.winv[k * l + k] = s;
+        // Eq. 6 (R) + mirrors
+        for t in 0..k {
+            let f = s * q[t];
+            let row = &mut self.r[t * n..(t + 1) * n];
+            for (o, &dv) in row.iter_mut().zip(&self.diff) {
+                *o += f * dv;
+            }
+            mirror_row(&mut self.r32, row, t, self.n_pad);
+        }
+        for i in 0..n {
+            self.r[k * n + i] = -s * self.diff[i];
+        }
+        mirror_row(&mut self.r32, &self.r[k * n..(k + 1) * n], k, self.n_pad);
+        self.c.extend_from_slice(&col);
+        mirror_col(&mut self.c32, &col, k, self.l_pad);
+
+        self.selected[best] = true;
+        self.trace.order.push(best);
+        self.trace.cum_secs.push(self.busy_secs + sw.secs());
+        self.trace.deltas.push(best_abs);
+        self.busy_secs += sw.secs();
+        Ok(StepOutcome::Selected { index: best, score: best_abs })
+    }
+
+    fn snapshot(&self) -> Result<NystromApprox> {
+        Ok(assembly::approx_from_colmajor(
+            self.trace.order.clone(),
+            self.n,
+            &self.c,
+            &self.winv,
+            self.capacity,
+            self.busy_secs,
         ))
     }
 }

@@ -1,9 +1,10 @@
 //! Artifact manifest: which fixed-shape AOT modules exist and what they
 //! compute. Mirrors the JSON written by `python/compile/aot.py`.
 
+use crate::anyhow;
+use crate::error::Context;
 use crate::util::json::Json;
 use crate::Result;
-use anyhow::{anyhow, Context};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

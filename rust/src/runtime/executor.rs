@@ -3,98 +3,178 @@
 //! One [`Executor`] owns a PJRT CPU client and the compiled executables for
 //! every artifact it has loaded. HLO *text* is the interchange format — see
 //! python/compile/aot.py for why protos are rejected.
+//!
+//! The real implementation needs the `xla` crate (PJRT bindings + the XLA
+//! C library), which cannot be vendored into the offline build; it is
+//! gated behind the `pjrt` cargo feature. Without the feature this module
+//! compiles a stub with the same API whose constructor reports PJRT as
+//! unavailable — [`Accel::try_default`](super::Accel::try_default) then
+//! returns `None` and every caller takes its native fallback, so the
+//! library is fully functional either way.
 
 use super::artifacts::Artifact;
 use crate::Result;
-use anyhow::{anyhow, Context};
-use std::collections::BTreeMap;
 
-/// A loaded PJRT client plus compiled artifact executables.
-pub struct Executor {
-    client: xla::PjRtClient,
-    compiled: BTreeMap<String, xla::PjRtLoadedExecutable>,
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::Artifact;
+    use crate::anyhow;
+    use crate::error::Context;
+    use crate::Result;
+    use std::collections::BTreeMap;
+
+    /// A loaded PJRT client plus compiled artifact executables.
+    pub struct Executor {
+        client: xla::PjRtClient,
+        compiled: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Executor {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Executor> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Executor { client, compiled: BTreeMap::new() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one artifact (idempotent per name).
+        pub fn load(&mut self, artifact: &Artifact) -> Result<()> {
+            if self.compiled.contains_key(&artifact.name) {
+                return Ok(());
+            }
+            let path = artifact
+                .path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", artifact.name))?;
+            self.compiled.insert(artifact.name.clone(), exe);
+            Ok(())
+        }
+
+        pub fn is_loaded(&self, name: &str) -> bool {
+            self.compiled.contains_key(name)
+        }
+
+        /// Execute a loaded artifact on f32 inputs. Each input is
+        /// (data, dims); the module was lowered with `return_tuple=True`,
+        /// so the result is a tuple whose elements are returned in order
+        /// as f32 vectors.
+        pub fn run_f32(
+            &self,
+            name: &str,
+            inputs: &[(&[f32], &[i64])],
+        ) -> Result<Vec<Vec<f32>>> {
+            let exe = self
+                .compiled
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let lit = if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(dims)?
+                };
+                literals.push(lit);
+            }
+            let result = exe.execute::<xla::Literal>(&literals)?;
+            let out = result[0][0].to_literal_sync()?;
+            let parts = out.to_tuple()?;
+            let mut vecs = Vec::with_capacity(parts.len());
+            for p in parts {
+                // outputs may be f32 or i32 (argmax index) — convert to f32
+                let v: Vec<f32> = match p.to_vec::<f32>() {
+                    Ok(v) => v,
+                    Err(_) => p
+                        .convert(xla::PrimitiveType::F32)?
+                        .to_vec::<f32>()
+                        .context("converting output to f32")?,
+                };
+                vecs.push(v);
+            }
+            Ok(vecs)
+        }
+    }
+
+    impl std::fmt::Debug for Executor {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Executor")
+                .field("platform", &self.client.platform_name())
+                .field("loaded", &self.compiled.keys().collect::<Vec<_>>())
+                .finish()
+        }
+    }
 }
 
-impl Executor {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Executor> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Executor { client, compiled: BTreeMap::new() })
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::Artifact;
+    use crate::bail;
+    use crate::Result;
+
+    const UNAVAILABLE: &str =
+        "PJRT support not compiled in — rebuild with `--features pjrt` \
+         (requires the `xla` crate and the XLA C library)";
+
+    /// Stub executor: same API, every operation reports PJRT unavailable.
+    pub struct Executor {
+        _private: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one artifact (idempotent per name).
-    pub fn load(&mut self, artifact: &Artifact) -> Result<()> {
-        if self.compiled.contains_key(&artifact.name) {
-            return Ok(());
+    impl Executor {
+        pub fn cpu() -> Result<Executor> {
+            bail!("{UNAVAILABLE}")
         }
-        let path = artifact
-            .path
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 path"))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {}", artifact.name))?;
-        self.compiled.insert(artifact.name.clone(), exe);
-        Ok(())
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load(&mut self, _artifact: &Artifact) -> Result<()> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn is_loaded(&self, _name: &str) -> bool {
+            false
+        }
+
+        pub fn run_f32(
+            &self,
+            _name: &str,
+            _inputs: &[(&[f32], &[i64])],
+        ) -> Result<Vec<Vec<f32>>> {
+            bail!("{UNAVAILABLE}")
+        }
     }
 
-    pub fn is_loaded(&self, name: &str) -> bool {
-        self.compiled.contains_key(name)
-    }
-
-    /// Execute a loaded artifact on f32 inputs. Each input is (data, dims);
-    /// the module was lowered with `return_tuple=True`, so the result is a
-    /// tuple whose elements are returned in order as f32 vectors.
-    pub fn run_f32(
-        &self,
-        name: &str,
-        inputs: &[(&[f32], &[i64])],
-    ) -> Result<Vec<Vec<f32>>> {
-        let exe = self
-            .compiled
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let lit = if dims.is_empty() {
-                xla::Literal::scalar(data[0])
-            } else {
-                xla::Literal::vec1(data).reshape(dims)?
-            };
-            literals.push(lit);
+    impl std::fmt::Debug for Executor {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Executor").field("pjrt", &"disabled").finish()
         }
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        let out = result[0][0].to_literal_sync()?;
-        let parts = out.to_tuple()?;
-        let mut vecs = Vec::with_capacity(parts.len());
-        for p in parts {
-            // outputs may be f32 or i32 (argmax index) — convert to f32
-            let v: Vec<f32> = match p.to_vec::<f32>() {
-                Ok(v) => v,
-                Err(_) => p
-                    .convert(xla::PrimitiveType::F32)?
-                    .to_vec::<f32>()
-                    .context("converting output to f32")?,
-            };
-            vecs.push(v);
-        }
-        Ok(vecs)
     }
 }
 
-impl std::fmt::Debug for Executor {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Executor")
-            .field("platform", &self.client.platform_name())
-            .field("loaded", &self.compiled.keys().collect::<Vec<_>>())
-            .finish()
+pub use imp::Executor;
+
+// Re-assert the public contract is identical across both builds.
+const _: fn() -> Result<Executor> = Executor::cpu;
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = Executor::cpu().err().expect("stub must not create");
+        assert!(format!("{err}").contains("pjrt"), "{err}");
     }
 }

@@ -4,6 +4,9 @@
 //! round. This is the stochastic counterpart of Farahat's deterministic
 //! greedy rule and, like it, requires the explicit matrix.
 
+use super::session::{
+    run_to_completion, SamplerSession, StepOutcome, StopReason, StoppingRule,
+};
 use super::{
     assemble_from_indices, ColumnOracle, ColumnSampler, SelectionTrace,
     TracedSampler,
@@ -11,8 +14,8 @@ use super::{
 use crate::linalg::{pinv_psd, Mat};
 use crate::nystrom::NystromApprox;
 use crate::util::{parallel, rng::Pcg64, timing::Stopwatch};
+use crate::bail;
 use crate::Result;
-use anyhow::bail;
 
 /// Adaptive (residual-norm-weighted) random sampler.
 #[derive(Clone, Debug)]
@@ -27,6 +30,44 @@ impl AdaptiveRandom {
     pub fn new(cols: usize, batch: usize, seed: u64) -> Self {
         assert!(batch >= 1);
         AdaptiveRandom { cols, batch, seed }
+    }
+
+    /// Open a stepwise session: one weighted draw per step, deflating the
+    /// residual every `batch` draws. Driving it with a budget of ℓ yields
+    /// the same draw sequence as the one-shot path with `cols = ℓ` (the
+    /// RNG stream and deflation schedule are identical).
+    pub fn session<'a>(
+        &self,
+        oracle: &'a dyn ColumnOracle,
+    ) -> Result<AdaptiveRandomSession<'a>> {
+        let sw = Stopwatch::start();
+        let n = oracle.n();
+        if self.cols > n {
+            bail!("cols > n");
+        }
+        let threads = parallel::default_threads();
+        // materialize G into the residual via the batched column API
+        let mut e = Mat::zeros(n, n);
+        let all: Vec<usize> = (0..n).collect();
+        oracle.columns_into(&all, &mut e);
+        let g_fro = super::fro_norm(&e, threads);
+        Ok(AdaptiveRandomSession {
+            oracle,
+            n,
+            threads,
+            batch: self.batch,
+            rng: Pcg64::new(self.seed),
+            e,
+            g_fro,
+            e_fro_cache: std::cell::Cell::new(Some(g_fro)),
+            weights: Vec::new(),
+            weights_stale: true,
+            round: Vec::new(),
+            selected: vec![false; n],
+            trace: SelectionTrace::default(),
+            exhausted: None,
+            busy_secs: sw.secs(),
+        })
     }
 }
 
@@ -45,99 +86,176 @@ impl TracedSampler for AdaptiveRandom {
         &self,
         oracle: &dyn ColumnOracle,
     ) -> Result<(NystromApprox, SelectionTrace)> {
-        let sw = Stopwatch::start();
-        let n = oracle.n();
-        if self.cols > n {
-            bail!("cols > n");
-        }
-        let threads = parallel::default_threads();
-        // materialize G into the residual
-        let mut e = Mat::zeros(n, n);
-        {
-            let mut col = vec![0.0; n];
-            for j in 0..n {
-                oracle.column_into(j, &mut col);
-                for i in 0..n {
-                    e.data[i * n + j] = col[i];
-                }
-            }
-        }
-        let mut rng = Pcg64::new(self.seed);
-        let mut selected = vec![false; n];
-        let mut order = Vec::with_capacity(self.cols);
-        let mut trace = SelectionTrace::default();
-        while order.len() < self.cols {
-            // residual column norms (row-streaming accumulation)
-            let mut weights = {
-                let parts = parallel::map_ranges(n, threads, |range| {
-                    let mut acc = vec![0.0f64; n];
-                    for i in range {
-                        let row = &e.data[i * n..(i + 1) * n];
-                        for (a, &v) in acc.iter_mut().zip(row) {
-                            *a += v * v;
-                        }
-                    }
-                    acc
-                });
-                let mut total = vec![0.0f64; n];
-                for p in parts {
-                    for (t, v) in total.iter_mut().zip(p) {
-                        *t += v;
-                    }
-                }
-                total
-            };
-            for (j, w) in weights.iter_mut().enumerate() {
-                if selected[j] {
-                    *w = 0.0;
-                }
-            }
-            if weights.iter().sum::<f64>() <= 1e-300 {
-                break; // residual exhausted
-            }
-            // draw a batch without replacement by the weighted distribution
-            let mut batch = Vec::new();
-            for _ in 0..self.batch.min(self.cols - order.len()) {
-                let total: f64 = weights.iter().sum();
-                if total <= 1e-300 {
-                    break;
-                }
-                let j = rng.weighted_index(&weights);
-                weights[j] = 0.0;
-                selected[j] = true;
-                batch.push(j);
-                order.push(j);
-                trace.order.push(j);
-                trace.cum_secs.push(sw.secs());
-                trace.deltas.push(f64::NAN);
-            }
-            // deflate the residual by the span of the batch columns:
-            // E ← E − E_B (E_BB)⁺ E_Bᵀ   (orthogonal projection step)
-            let eb = e.select_cols(&batch); // n×b
-            let ebb = eb.select_rows(&batch); // b×b
-            let pinv = pinv_psd(&ebb, 1e-10);
-            let proj = eb.matmul(&pinv); // n×b
-            // E −= proj · ebᵀ (threaded over rows)
-            let b = batch.len();
-            parallel::for_each_chunk_mut(&mut e.data, n, threads, |range, chunk| {
-                for (local, i) in range.clone().enumerate() {
-                    let row = &mut chunk[local * n..(local + 1) * n];
-                    for t in 0..b {
-                        let f = proj.at(i, t);
-                        if f == 0.0 {
-                            continue;
-                        }
-                        // ebᵀ row t = eb column t
-                        for (j, o) in row.iter_mut().enumerate() {
-                            *o -= f * eb.at(j, t);
-                        }
-                    }
-                }
-            });
-        }
-        let approx = assemble_from_indices(oracle, order, 0.0);
-        let approx = NystromApprox { selection_secs: sw.secs(), ..approx };
+        let mut session = self.session(oracle)?;
+        run_to_completion(&mut session, &StoppingRule::budget(self.cols))?;
+        let trace = session.trace().clone();
+        let approx = session.snapshot()?;
         Ok((approx, trace))
+    }
+}
+
+/// A paused adaptive-random run (see [`AdaptiveRandom::session`]).
+pub struct AdaptiveRandomSession<'a> {
+    oracle: &'a dyn ColumnOracle,
+    n: usize,
+    threads: usize,
+    batch: usize,
+    rng: Pcg64,
+    /// residual E, deflated once per completed round.
+    e: Mat,
+    g_fro: f64,
+    /// cached ‖E‖_F — E only changes at deflation, so the estimate is
+    /// recomputed at most once per round (invalidated in `deflate_round`).
+    e_fro_cache: std::cell::Cell<Option<f64>>,
+    /// residual column norms; zeroed as columns are drawn within a round.
+    weights: Vec<f64>,
+    weights_stale: bool,
+    /// columns drawn in the current (incomplete) round.
+    round: Vec<usize>,
+    selected: Vec<bool>,
+    trace: SelectionTrace,
+    exhausted: Option<StopReason>,
+    busy_secs: f64,
+}
+
+impl AdaptiveRandomSession<'_> {
+    /// Recompute residual column norms (row-streaming accumulation).
+    fn recompute_weights(&mut self) {
+        let n = self.n;
+        let e = &self.e;
+        let parts = parallel::map_ranges(n, self.threads, |range| {
+            let mut acc = vec![0.0f64; n];
+            for i in range {
+                let row = &e.data[i * n..(i + 1) * n];
+                for (a, &v) in acc.iter_mut().zip(row) {
+                    *a += v * v;
+                }
+            }
+            acc
+        });
+        let mut total = vec![0.0f64; n];
+        for p in parts {
+            for (t, v) in total.iter_mut().zip(p) {
+                *t += v;
+            }
+        }
+        for (j, w) in total.iter_mut().enumerate() {
+            if self.selected[j] {
+                *w = 0.0;
+            }
+        }
+        self.weights = total;
+        self.weights_stale = false;
+    }
+
+    /// Deflate the residual by the span of the current round's columns:
+    /// `E ← E − E_B (E_BB)⁺ E_Bᵀ` (orthogonal projection step).
+    fn deflate_round(&mut self) {
+        let n = self.n;
+        let batch = std::mem::take(&mut self.round);
+        if batch.is_empty() {
+            return;
+        }
+        let eb = self.e.select_cols(&batch); // n×b
+        let ebb = eb.select_rows(&batch); // b×b
+        let pinv = pinv_psd(&ebb, 1e-10);
+        let proj = eb.matmul(&pinv); // n×b
+        // E −= proj · ebᵀ (threaded over rows)
+        let b = batch.len();
+        parallel::for_each_chunk_mut(&mut self.e.data, n, self.threads, |range, chunk| {
+            for (local, i) in range.clone().enumerate() {
+                let row = &mut chunk[local * n..(local + 1) * n];
+                for t in 0..b {
+                    let f = proj.at(i, t);
+                    if f == 0.0 {
+                        continue;
+                    }
+                    // ebᵀ row t = eb column t
+                    for (j, o) in row.iter_mut().enumerate() {
+                        *o -= f * eb.at(j, t);
+                    }
+                }
+            }
+        });
+        self.weights_stale = true;
+        self.e_fro_cache.set(None);
+    }
+}
+
+impl SamplerSession for AdaptiveRandomSession<'_> {
+    fn name(&self) -> &'static str {
+        "Adaptive random"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn indices(&self) -> &[usize] {
+        &self.trace.order
+    }
+
+    fn trace(&self) -> &SelectionTrace {
+        &self.trace
+    }
+
+    fn selection_secs(&self) -> f64 {
+        self.busy_secs
+    }
+
+    /// `‖E‖_F / ‖G‖_F` for the residual as of the last completed round
+    /// (columns drawn in the current round deflate only at the round
+    /// boundary, so the estimate is conservative mid-round).
+    fn error_estimate(&self) -> Option<f64> {
+        if self.g_fro <= 0.0 {
+            return Some(0.0);
+        }
+        let e_fro = match self.e_fro_cache.get() {
+            Some(v) => v,
+            None => {
+                let v = super::fro_norm(&self.e, self.threads);
+                self.e_fro_cache.set(Some(v));
+                v
+            }
+        };
+        Some(e_fro / self.g_fro)
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if let Some(reason) = self.exhausted {
+            return Ok(StepOutcome::Exhausted(reason));
+        }
+        let sw = Stopwatch::start();
+        if self.round.len() == self.batch {
+            self.deflate_round();
+        }
+        if self.weights_stale {
+            self.recompute_weights();
+        }
+        let total: f64 = self.weights.iter().sum();
+        if total <= 1e-300 {
+            // residual exhausted
+            self.exhausted = Some(StopReason::Exhausted);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+        }
+        let j = self.rng.weighted_index(&self.weights);
+        self.weights[j] = 0.0;
+        self.selected[j] = true;
+        self.round.push(j);
+        self.trace.order.push(j);
+        self.trace.cum_secs.push(self.busy_secs + sw.secs());
+        self.trace.deltas.push(f64::NAN);
+        self.busy_secs += sw.secs();
+        Ok(StepOutcome::Selected { index: j, score: f64::NAN })
+    }
+
+    fn snapshot(&self) -> Result<NystromApprox> {
+        Ok(assemble_from_indices(
+            self.oracle,
+            self.trace.order.clone(),
+            self.busy_secs,
+        ))
     }
 }
 
@@ -188,5 +306,26 @@ mod tests {
         let a = AdaptiveRandom::new(12, 3, 11).sample(&oracle).unwrap();
         let b = AdaptiveRandom::new(12, 3, 11).sample(&oracle).unwrap();
         assert_eq!(a.indices, b.indices);
+    }
+
+    /// A session driven one step at a time (budget checked externally)
+    /// draws exactly the same columns as the one-shot path, regardless of
+    /// whether the budget is a multiple of the deflation batch.
+    #[test]
+    fn session_draws_match_sample_for_ragged_budget() {
+        let ds = two_moons(70, 0.05, 9);
+        let kern = Gaussian::new(0.5);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        for cols in [10usize, 12, 15] {
+            let reference = AdaptiveRandom::new(cols, 4, 21).sample(&oracle).unwrap();
+            let mut s = AdaptiveRandom::new(cols, 4, 21).session(&oracle).unwrap();
+            while s.k() < cols {
+                match s.step().unwrap() {
+                    StepOutcome::Selected { .. } => {}
+                    StepOutcome::Exhausted(_) => break,
+                }
+            }
+            assert_eq!(s.indices(), &reference.indices[..], "cols = {cols}");
+        }
     }
 }

@@ -7,6 +7,9 @@
 //! iteration — exactly the cost profile the paper contrasts oASIS against
 //! (O(ℓn²) total vs oASIS's O(ℓ²n)).
 
+use super::session::{
+    run_to_completion, SamplerSession, StepOutcome, StopReason, StoppingRule,
+};
 use super::{
     assemble_from_indices, ColumnOracle, ColumnSampler, SelectionTrace,
     TracedSampler,
@@ -14,8 +17,8 @@ use super::{
 use crate::linalg::Mat;
 use crate::nystrom::NystromApprox;
 use crate::util::{parallel, timing::Stopwatch};
+use crate::bail;
 use crate::Result;
-use anyhow::bail;
 
 /// Farahat greedy residual sampler (explicit matrices only).
 #[derive(Clone, Debug)]
@@ -28,6 +31,38 @@ pub struct Farahat {
 impl Farahat {
     pub fn new(cols: usize) -> Farahat {
         Farahat { cols, pivot_tol: 1e-12 }
+    }
+
+    /// Open a stepwise session. Materializes the residual E = G with one
+    /// batched oracle fill (the method's requirement); each step performs
+    /// one greedy selection + rank-1 deflation.
+    pub fn session<'a>(
+        &self,
+        oracle: &'a dyn ColumnOracle,
+    ) -> Result<FarahatSession<'a>> {
+        let sw = Stopwatch::start();
+        let n = oracle.n();
+        if self.cols > n {
+            bail!("cols > n");
+        }
+        // materialize the residual E = G via the batched column API
+        let mut e = Mat::zeros(n, n);
+        let all: Vec<usize> = (0..n).collect();
+        oracle.columns_into(&all, &mut e);
+        let threads = parallel::default_threads();
+        let g_fro = super::fro_norm(&e, threads);
+        Ok(FarahatSession {
+            oracle,
+            n,
+            threads,
+            pivot_tol: self.pivot_tol,
+            e,
+            g_fro,
+            selected: vec![false; n],
+            trace: SelectionTrace::default(),
+            exhausted: None,
+            busy_secs: sw.secs(),
+        })
     }
 }
 
@@ -46,94 +81,144 @@ impl TracedSampler for Farahat {
         &self,
         oracle: &dyn ColumnOracle,
     ) -> Result<(NystromApprox, SelectionTrace)> {
-        let sw = Stopwatch::start();
-        let n = oracle.n();
-        if self.cols > n {
-            bail!("cols > n");
-        }
-        // materialize the residual E = G (the method's requirement)
-        let mut e = Mat::zeros(n, n);
-        {
-            let mut col = vec![0.0; n];
-            for j in 0..n {
-                oracle.column_into(j, &mut col);
-                for i in 0..n {
-                    e.data[i * n + j] = col[i];
-                }
-            }
-        }
-        let threads = parallel::default_threads();
-        let mut selected = vec![false; n];
-        let mut order = Vec::with_capacity(self.cols);
-        let mut trace = SelectionTrace::default();
-        for _step in 0..self.cols {
-            // criterion: ‖E(:,j)‖² / E(j,j) over unselected columns.
-            // Row-streaming accumulation (each thread sums the squares of
-            // its row block into a local n-vector) — the column-wise loop
-            // strides by n and is several times slower (§Perf).
-            let colnorms: Vec<f64> = {
-                let parts = parallel::map_ranges(n, threads, |range| {
-                    let mut acc = vec![0.0f64; n];
-                    for i in range {
-                        let row = &e.data[i * n..(i + 1) * n];
-                        for (a, &v) in acc.iter_mut().zip(row) {
-                            *a += v * v;
-                        }
-                    }
-                    acc
-                });
-                let mut total = vec![0.0f64; n];
-                for p in parts {
-                    for (t, v) in total.iter_mut().zip(p) {
-                        *t += v;
-                    }
-                }
-                total
-            };
-            let mut best = usize::MAX;
-            let mut best_score = -1.0;
-            for j in 0..n {
-                if selected[j] {
-                    continue;
-                }
-                let piv = e.at(j, j);
-                if piv <= self.pivot_tol {
-                    continue;
-                }
-                let score = colnorms[j] / piv;
-                if score > best_score {
-                    best_score = score;
-                    best = j;
-                }
-            }
-            if best == usize::MAX {
-                break; // residual exhausted — approximation exact
-            }
-            // deflate: E ← E − E_j E_jᵀ / E(j,j)
-            let piv = e.at(best, best);
-            let ej: Vec<f64> = (0..n).map(|i| e.at(i, best)).collect();
-            let inv_piv = 1.0 / piv;
-            parallel::for_each_chunk_mut(&mut e.data, n, threads, |range, chunk| {
-                for (local, i) in range.clone().enumerate() {
-                    let f = ej[i] * inv_piv;
-                    if f == 0.0 {
-                        continue;
-                    }
-                    let row = &mut chunk[local * n..(local + 1) * n];
-                    for (o, &v) in row.iter_mut().zip(&ej) {
-                        *o -= f * v;
-                    }
-                }
-            });
-            selected[best] = true;
-            order.push(best);
-            trace.order.push(best);
-            trace.cum_secs.push(sw.secs());
-            trace.deltas.push(best_score);
-        }
-        let approx = assemble_from_indices(oracle, order, 0.0);
-        let approx = NystromApprox { selection_secs: sw.secs(), ..approx };
+        let mut session = self.session(oracle)?;
+        run_to_completion(&mut session, &StoppingRule::budget(self.cols))?;
+        let trace = session.trace().clone();
+        let approx = session.snapshot()?;
         Ok((approx, trace))
+    }
+}
+
+/// A paused Farahat run (see [`Farahat::session`]).
+pub struct FarahatSession<'a> {
+    oracle: &'a dyn ColumnOracle,
+    n: usize,
+    threads: usize,
+    pivot_tol: f64,
+    /// current residual E = G − G̃_k.
+    e: Mat,
+    /// ‖G‖_F at materialization (error-estimate denominator).
+    g_fro: f64,
+    selected: Vec<bool>,
+    trace: SelectionTrace,
+    exhausted: Option<StopReason>,
+    busy_secs: f64,
+}
+
+impl SamplerSession for FarahatSession<'_> {
+    fn name(&self) -> &'static str {
+        "Farahat"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn indices(&self) -> &[usize] {
+        &self.trace.order
+    }
+
+    fn trace(&self) -> &SelectionTrace {
+        &self.trace
+    }
+
+    fn selection_secs(&self) -> f64 {
+        self.busy_secs
+    }
+
+    /// **Exact** current relative error `‖E‖_F / ‖G‖_F` — the deflation
+    /// methods hold the residual explicitly, so no estimation is needed.
+    /// Costs one O(n²) pass, the same order as a single step.
+    fn error_estimate(&self) -> Option<f64> {
+        if self.g_fro <= 0.0 {
+            return Some(0.0);
+        }
+        Some(super::fro_norm(&self.e, self.threads) / self.g_fro)
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if let Some(reason) = self.exhausted {
+            return Ok(StepOutcome::Exhausted(reason));
+        }
+        let sw = Stopwatch::start();
+        let n = self.n;
+        let threads = self.threads;
+        let e = &mut self.e;
+        // criterion: ‖E(:,j)‖² / E(j,j) over unselected columns.
+        // Row-streaming accumulation (each thread sums the squares of
+        // its row block into a local n-vector) — the column-wise loop
+        // strides by n and is several times slower (§Perf).
+        let colnorms: Vec<f64> = {
+            let parts = parallel::map_ranges(n, threads, |range| {
+                let mut acc = vec![0.0f64; n];
+                for i in range {
+                    let row = &e.data[i * n..(i + 1) * n];
+                    for (a, &v) in acc.iter_mut().zip(row) {
+                        *a += v * v;
+                    }
+                }
+                acc
+            });
+            let mut total = vec![0.0f64; n];
+            for p in parts {
+                for (t, v) in total.iter_mut().zip(p) {
+                    *t += v;
+                }
+            }
+            total
+        };
+        let mut best = usize::MAX;
+        let mut best_score = -1.0;
+        for j in 0..n {
+            if self.selected[j] {
+                continue;
+            }
+            let piv = e.at(j, j);
+            if piv <= self.pivot_tol {
+                continue;
+            }
+            let score = colnorms[j] / piv;
+            if score > best_score {
+                best_score = score;
+                best = j;
+            }
+        }
+        if best == usize::MAX {
+            // residual exhausted — approximation exact
+            self.exhausted = Some(StopReason::Exhausted);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+        }
+        // deflate: E ← E − E_j E_jᵀ / E(j,j)
+        let piv = e.at(best, best);
+        let ej: Vec<f64> = (0..n).map(|i| e.at(i, best)).collect();
+        let inv_piv = 1.0 / piv;
+        parallel::for_each_chunk_mut(&mut e.data, n, threads, |range, chunk| {
+            for (local, i) in range.clone().enumerate() {
+                let f = ej[i] * inv_piv;
+                if f == 0.0 {
+                    continue;
+                }
+                let row = &mut chunk[local * n..(local + 1) * n];
+                for (o, &v) in row.iter_mut().zip(&ej) {
+                    *o -= f * v;
+                }
+            }
+        });
+        self.selected[best] = true;
+        self.trace.order.push(best);
+        self.trace.cum_secs.push(self.busy_secs + sw.secs());
+        self.trace.deltas.push(best_score);
+        self.busy_secs += sw.secs();
+        Ok(StepOutcome::Selected { index: best, score: best_score })
+    }
+
+    fn snapshot(&self) -> Result<NystromApprox> {
+        Ok(assemble_from_indices(
+            self.oracle,
+            self.trace.order.clone(),
+            self.busy_secs,
+        ))
     }
 }
 
@@ -143,7 +228,7 @@ mod tests {
     use crate::data::generators::{gauss_2d_plus_3d, two_moons};
     use crate::kernels::{kernel_matrix, Gaussian, Linear};
     use crate::nystrom::relative_frobenius_error;
-    use crate::sampling::{ExplicitOracle, ImplicitOracle};
+    use crate::sampling::{ExplicitOracle, ImplicitOracle, StoppingCriterion};
 
     #[test]
     fn exact_recovery_on_low_rank() {
@@ -182,5 +267,27 @@ mod tests {
         assert_eq!(trace.order, approx.indices);
         // greedy scores are positive
         assert!(trace.deltas.iter().all(|&d| d > 0.0));
+    }
+
+    /// The exact error estimate tracks the true relative Frobenius error
+    /// and drives the error-target criterion.
+    #[test]
+    fn farahat_error_estimate_is_exact() {
+        let ds = two_moons(80, 0.05, 6);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let mut s = Farahat::new(40).session(&oracle).unwrap();
+        let rule = StoppingRule::budget(40)
+            .with(StoppingCriterion::ErrorBelow(0.2));
+        let reason = run_to_completion(&mut s, &rule).unwrap();
+        assert_eq!(reason, StopReason::ErrorTargetMet);
+        assert!(s.k() < 40, "stopped early at k = {}", s.k());
+        let approx = s.snapshot().unwrap();
+        let true_err = relative_frobenius_error(&oracle, &approx);
+        let est = s.error_estimate().unwrap();
+        assert!(
+            (true_err - est).abs() < 0.05 * est.max(1e-6) + 1e-9,
+            "estimate {est} vs true {true_err}"
+        );
     }
 }

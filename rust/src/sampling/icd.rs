@@ -9,6 +9,9 @@
 //! cross-validation test below asserts the selection sequences coincide,
 //! which checks both implementations' numerics against each other.
 
+use super::session::{
+    run_to_completion, SamplerSession, StepOutcome, StopReason, StoppingRule,
+};
 use super::{
     assemble_from_indices, ColumnOracle, ColumnSampler, SelectionTrace,
     TracedSampler,
@@ -29,6 +32,29 @@ impl IncompleteCholesky {
     pub fn new(max_cols: usize, tol: f64) -> Self {
         IncompleteCholesky { max_cols, tol }
     }
+
+    /// Open a stepwise session (one pivot per step). The Cholesky factor
+    /// grows unboundedly, so the session can be driven past `max_cols`.
+    pub fn session<'a>(&self, oracle: &'a dyn ColumnOracle) -> Result<IcdSession<'a>> {
+        let sw = Stopwatch::start();
+        let n = oracle.n();
+        let d = oracle.diag();
+        let tol = super::effective_tol(self.tol, &d);
+        let d_abs_sum = d.iter().map(|x| x.abs()).sum();
+        Ok(IcdSession {
+            oracle,
+            n,
+            tol,
+            d_abs_sum,
+            resid: d,
+            ell: Vec::new(),
+            selected: vec![false; n],
+            trace: SelectionTrace::default(),
+            col: vec![0.0; n],
+            exhausted: None,
+            busy_secs: sw.secs(),
+        })
+    }
 }
 
 impl ColumnSampler for IncompleteCholesky {
@@ -46,71 +72,141 @@ impl TracedSampler for IncompleteCholesky {
         &self,
         oracle: &dyn ColumnOracle,
     ) -> Result<(NystromApprox, SelectionTrace)> {
-        let sw = Stopwatch::start();
-        let n = oracle.n();
-        let l = self.max_cols.min(n);
-        let d = oracle.diag();
-        let tol = super::effective_tol(self.tol, &d);
-        // residual diagonal, updated as pivots are added
-        let mut resid = d.clone();
-        // Cholesky columns: column t (length n) at ell[t*n..]
-        let mut ell: Vec<f64> = Vec::with_capacity(l * n);
-        let mut order = Vec::with_capacity(l);
-        let mut selected = vec![false; n];
-        let mut trace = SelectionTrace::default();
-        let mut col = vec![0.0; n];
-        for _step in 0..l {
-            // pivot: largest residual diagonal among unselected
-            let mut best = usize::MAX;
-            let mut best_val = -1.0;
-            for i in 0..n {
-                if !selected[i] && resid[i] > best_val {
-                    best_val = resid[i];
-                    best = i;
-                }
-            }
-            if best == usize::MAX || best_val < tol {
-                break;
-            }
-            let k = order.len();
-            oracle.column_into(best, &mut col);
-            // new Cholesky column:
-            //   v = (g_best − Σ_t ℓ_t ℓ_t[best]) / sqrt(resid[best])
-            let piv_sqrt = best_val.sqrt();
-            let start = ell.len();
-            ell.extend_from_slice(&col);
-            {
-                let (prev, new) = ell.split_at_mut(start);
-                for t in 0..k {
-                    let f = prev[t * n + best];
-                    if f == 0.0 {
-                        continue;
-                    }
-                    let lt = &prev[t * n..(t + 1) * n];
-                    for (o, &lv) in new.iter_mut().zip(lt) {
-                        *o -= f * lv;
-                    }
-                }
-                for o in new.iter_mut() {
-                    *o /= piv_sqrt;
-                }
-            }
-            // update residual diagonal: resid_i −= ℓ_k[i]²
-            {
-                let lk = &ell[start..start + n];
-                for (r, &lv) in resid.iter_mut().zip(lk) {
-                    *r -= lv * lv;
-                }
-            }
-            selected[best] = true;
-            order.push(best);
-            trace.order.push(best);
-            trace.cum_secs.push(sw.secs());
-            trace.deltas.push(best_val);
-        }
-        let approx = assemble_from_indices(oracle, order, 0.0);
-        let approx = NystromApprox { selection_secs: sw.secs(), ..approx };
+        let mut session = self.session(oracle)?;
+        run_to_completion(&mut session, &StoppingRule::budget(self.max_cols))?;
+        let trace = session.trace().clone();
+        let approx = session.snapshot()?;
         Ok((approx, trace))
+    }
+}
+
+/// A paused ICD run (see [`IncompleteCholesky::session`]).
+pub struct IcdSession<'a> {
+    oracle: &'a dyn ColumnOracle,
+    n: usize,
+    tol: f64,
+    d_abs_sum: f64,
+    /// residual diagonal, updated as pivots are added — exactly the oASIS
+    /// Δ score for every candidate, always current.
+    resid: Vec<f64>,
+    /// Cholesky columns: column t (length n) at ell[t*n..]
+    ell: Vec<f64>,
+    selected: Vec<bool>,
+    trace: SelectionTrace,
+    /// scratch column buffer
+    col: Vec<f64>,
+    exhausted: Option<StopReason>,
+    busy_secs: f64,
+}
+
+impl SamplerSession for IcdSession<'_> {
+    fn name(&self) -> &'static str {
+        "ICD"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn indices(&self) -> &[usize] {
+        &self.trace.order
+    }
+
+    fn trace(&self) -> &SelectionTrace {
+        &self.trace
+    }
+
+    fn selection_secs(&self) -> f64 {
+        self.busy_secs
+    }
+
+    /// Residual trace ratio `Σ max(residᵢ, 0) / Σ|dᵢ|` — exact (the
+    /// residual diagonal is maintained every step), clamping the tiny
+    /// negative values f64 cancellation can leave behind.
+    fn error_estimate(&self) -> Option<f64> {
+        if self.d_abs_sum <= 0.0 {
+            return Some(0.0);
+        }
+        let resid: f64 = self
+            .resid
+            .iter()
+            .zip(&self.selected)
+            .filter(|(_, &sel)| !sel)
+            .map(|(&r, _)| r.max(0.0))
+            .sum();
+        Some(resid / self.d_abs_sum)
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if let Some(reason) = self.exhausted {
+            return Ok(StepOutcome::Exhausted(reason));
+        }
+        let sw = Stopwatch::start();
+        let n = self.n;
+        // pivot: largest residual diagonal among unselected
+        let mut best = usize::MAX;
+        let mut best_val = -1.0;
+        for i in 0..n {
+            if !self.selected[i] && self.resid[i] > best_val {
+                best_val = self.resid[i];
+                best = i;
+            }
+        }
+        if best == usize::MAX {
+            self.exhausted = Some(StopReason::Exhausted);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+        }
+        if best_val < self.tol {
+            self.exhausted = Some(StopReason::ScoreBelowTol);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::ScoreBelowTol));
+        }
+        let k = self.trace.order.len();
+        self.oracle.column_into(best, &mut self.col);
+        // new Cholesky column:
+        //   v = (g_best − Σ_t ℓ_t ℓ_t[best]) / sqrt(resid[best])
+        let piv_sqrt = best_val.sqrt();
+        let start = self.ell.len();
+        self.ell.extend_from_slice(&self.col);
+        {
+            let (prev, new) = self.ell.split_at_mut(start);
+            for t in 0..k {
+                let f = prev[t * n + best];
+                if f == 0.0 {
+                    continue;
+                }
+                let lt = &prev[t * n..(t + 1) * n];
+                for (o, &lv) in new.iter_mut().zip(lt) {
+                    *o -= f * lv;
+                }
+            }
+            for o in new.iter_mut() {
+                *o /= piv_sqrt;
+            }
+        }
+        // update residual diagonal: resid_i −= ℓ_k[i]²
+        {
+            let lk = &self.ell[start..start + n];
+            for (r, &lv) in self.resid.iter_mut().zip(lk) {
+                *r -= lv * lv;
+            }
+        }
+        self.selected[best] = true;
+        self.trace.order.push(best);
+        self.trace.cum_secs.push(self.busy_secs + sw.secs());
+        self.trace.deltas.push(best_val);
+        self.busy_secs += sw.secs();
+        Ok(StepOutcome::Selected { index: best, score: best_val })
+    }
+
+    fn snapshot(&self) -> Result<NystromApprox> {
+        let approx = assemble_from_indices(
+            self.oracle,
+            self.trace.order.clone(),
+            self.busy_secs,
+        );
+        Ok(approx)
     }
 }
 
@@ -210,5 +306,21 @@ mod tests {
         let approx = IncompleteCholesky::new(30, 1e-12).sample(&oracle).unwrap();
         let err = relative_frobenius_error(&oracle, &approx);
         assert!(err < 0.1, "err {err}");
+    }
+
+    /// Resuming a budget-stopped ICD session continues the same sequence.
+    #[test]
+    fn icd_session_resumes() {
+        let ds = two_moons(100, 0.05, 4);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let (reference, _) = IncompleteCholesky::new(24, 1e-12)
+            .sample_traced(&oracle)
+            .unwrap();
+        let mut s = IncompleteCholesky::new(8, 1e-12).session(&oracle).unwrap();
+        run_to_completion(&mut s, &StoppingRule::budget(8)).unwrap();
+        assert_eq!(s.k(), 8);
+        run_to_completion(&mut s, &StoppingRule::budget(24)).unwrap();
+        assert_eq!(s.indices(), &reference.indices[..]);
     }
 }

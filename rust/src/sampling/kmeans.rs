@@ -13,7 +13,7 @@ use crate::linalg::{pinv_psd, Mat};
 use crate::nystrom::NystromApprox;
 use crate::util::{parallel, rng::Pcg64, timing::Stopwatch};
 use crate::Result;
-use anyhow::bail;
+use crate::bail;
 
 /// Lloyd's algorithm with k-means++ seeding.
 pub struct KMeans {

@@ -16,7 +16,7 @@ use crate::linalg::{sym_eig, thin_qr, Mat};
 use crate::nystrom::NystromApprox;
 use crate::util::{rng::Pcg64, timing::Stopwatch};
 use crate::Result;
-use anyhow::bail;
+use crate::bail;
 
 /// Leverage-score sampler over an explicit kernel matrix.
 #[derive(Clone, Debug)]

@@ -5,7 +5,47 @@
 //!
 //! All samplers speak to the kernel matrix through [`ColumnOracle`], which
 //! abstracts over explicit matrices (Table I), implicit on-the-fly kernels
-//! (Table II), and sparse k-NN kernels (§V-E).
+//! (Table II), and sparse k-NN kernels (§V-E). Hot paths pull columns in
+//! batches through [`ColumnOracle::columns_into`].
+//!
+//! ## Two ways to run a sampler
+//!
+//! * **One-shot** — [`ColumnSampler::sample`] selects up to the
+//!   constructor's column budget and assembles the approximation. This is
+//!   a thin adapter over the session API below.
+//! * **Stepwise** — the sequential samplers expose a `session(…)`
+//!   constructor returning a [`SamplerSession`]: one selection per
+//!   [`step`](SamplerSession::step), assembly on demand via
+//!   [`snapshot`](SamplerSession::snapshot)/[`finish`](SamplerSession::finish),
+//!   and stopping policy supplied externally as a [`StoppingRule`] driven
+//!   by [`run_to_completion`].
+//!
+//! ## Stopping-criterion semantics
+//!
+//! A [`StoppingRule`] is an *any-of* list of [`StoppingCriterion`]s,
+//! evaluated against the session state **before every step**, in the
+//! order they were added; the first that holds names the returned
+//! [`StopReason`]. The criteria:
+//!
+//! * [`ColumnBudget(ℓ)`](StoppingCriterion::ColumnBudget) — `k ≥ ℓ`,
+//!   counting seed columns. Equivalent to the legacy `max_cols` budget.
+//! * [`ScoreBelow(ε)`](StoppingCriterion::ScoreBelow) — the most recent
+//!   selection score `|Δ|` fell below ε. Independent of (and checked
+//!   after) the session-internal numerical floor
+//!   ([`effective_tol`]), which always applies: a session refuses to
+//!   select a numerically-zero Δ no matter what the rule says, because
+//!   `s = 1/Δ` would poison the Eq. 5 update.
+//! * [`ErrorBelow(t)`](StoppingCriterion::ErrorBelow) — the session's
+//!   [`error_estimate`](SamplerSession::error_estimate) reached `t`.
+//!   Schur-complement sessions estimate with the residual trace ratio
+//!   `Σ|Δᵢ|/Σ|dᵢ|` (cheap, refreshed every scoring sweep); residual-
+//!   deflation sessions report the exact `‖E‖_F/‖G‖_F`.
+//! * [`Deadline(d)`](StoppingCriterion::Deadline) — wall clock since
+//!   [`run_to_completion`] entry exceeded `d`; resuming grants a fresh
+//!   deadline.
+//!
+//! Sessions are resumable: driving the same session again with a larger
+//! budget extends the selected index set — it never restarts.
 
 pub mod adaptive_random;
 pub mod farahat;
@@ -14,10 +54,15 @@ pub mod kmeans;
 pub mod leverage;
 pub mod oasis;
 pub mod oracle;
+pub mod session;
 pub mod sis;
 pub mod uniform;
 
 pub use oracle::{ColumnOracle, ExplicitOracle, ImplicitOracle, SparseKnnOracle};
+pub use session::{
+    run_to_completion, SamplerSession, StepOutcome, StopReason,
+    StoppingCriterion, StoppingRule,
+};
 
 use crate::nystrom::NystromApprox;
 use crate::Result;
@@ -53,6 +98,21 @@ pub trait TracedSampler: ColumnSampler {
     ) -> Result<(NystromApprox, SelectionTrace)>;
 }
 
+/// `‖M‖_F` with row-streaming threaded accumulation — shared by the
+/// residual-deflation sessions' exact error estimates.
+pub(crate) fn fro_norm(m: &crate::linalg::Mat, threads: usize) -> f64 {
+    let parts = crate::util::parallel::map_ranges(m.rows, threads, |range| {
+        let mut acc = 0.0f64;
+        for i in range {
+            for &v in m.row(i) {
+                acc += v * v;
+            }
+        }
+        acc
+    });
+    parts.into_iter().sum::<f64>().sqrt()
+}
+
 /// The effective stopping tolerance for Schur-complement selection: the
 /// user tolerance floored at machine-precision relative to the diagonal
 /// scale. Selecting a numerically-zero Δ would make `s = 1/Δ` explode and
@@ -64,9 +124,12 @@ pub fn effective_tol(user_tol: f64, diag: &[f64]) -> f64 {
     user_tol.max(1e-12 * scale.max(1e-300))
 }
 
-/// Assemble a [`NystromApprox`] from a chosen index set: forms C by
-/// querying the oracle and computes W⁺ by pseudo-inverse. Used by the
-/// baselines that select Λ without maintaining W⁻¹ themselves.
+/// Assemble a [`NystromApprox`] from a chosen index set: forms C with one
+/// batched [`ColumnOracle::columns_into`] fill (contiguous row-major
+/// writes instead of a strided scatter per column) and computes W⁺ by
+/// pseudo-inverse of the rows of C already fetched — the oracle is not
+/// queried again for W. Used by the baselines that select Λ without
+/// maintaining W⁻¹ themselves.
 pub fn assemble_from_indices(
     oracle: &dyn ColumnOracle,
     indices: Vec<usize>,
@@ -75,13 +138,7 @@ pub fn assemble_from_indices(
     let n = oracle.n();
     let k = indices.len();
     let mut c = crate::linalg::Mat::zeros(n, k);
-    let mut col = vec![0.0; n];
-    for (t, &j) in indices.iter().enumerate() {
-        oracle.column_into(j, &mut col);
-        for i in 0..n {
-            c.data[i * k + t] = col[i];
-        }
-    }
+    oracle.columns_into(&indices, &mut c);
     let w = c.select_rows(&indices);
     let winv = crate::linalg::pinv_psd(&w, 1e-12);
     NystromApprox { indices, c, winv, selection_secs }

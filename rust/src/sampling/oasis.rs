@@ -19,13 +19,23 @@
 //! degenerate ties) and satisfy Lemma 1/Theorem 1: each selected column is
 //! linearly independent of its predecessors while Δ > 0, and a rank-r
 //! matrix is recovered exactly in r steps.
+//!
+//! The selection loop lives in [`OasisSession`] — one selection per
+//! [`step`](SamplerSession::step), state growing on demand so a session
+//! can be resumed past its constructor's budget. [`Oasis::sample`] /
+//! [`Oasis::sample_traced`] are thin adapters: create a session, drive it
+//! with [`run_to_completion`] under a column-budget rule, assemble.
 
+use super::session::{
+    run_to_completion, SamplerSession, StepOutcome, StopReason, StoppingRule,
+};
 use super::{ColumnOracle, ColumnSampler, SelectionTrace, TracedSampler};
 use crate::linalg::Mat;
-use crate::nystrom::NystromApprox;
+use crate::nystrom::{assembly, NystromApprox};
 use crate::util::{parallel, rng::Pcg64, timing::Stopwatch};
+use crate::{anyhow, bail};
 use crate::Result;
-use anyhow::{anyhow, bail};
+use std::cell::RefCell;
 
 /// Scoring strategy (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,11 +80,16 @@ impl Oasis {
         self
     }
 
-    /// Run selection, returning the approximation and the per-step trace.
-    pub fn sample_traced(
+    /// Open a stepwise session: draws and incorporates the k₀ random seed
+    /// columns (redrawn if W₀ is singular), computes the initial Δ scores,
+    /// and returns with `session.k() == k₀`, ready to step. The session
+    /// borrows the oracle; its state grows on demand, so it can be driven
+    /// past `max_cols` (that field only sizes the initial allocation and
+    /// the budget used by the one-shot [`Oasis::sample`] adapter).
+    pub fn session<'a>(
         &self,
-        oracle: &dyn ColumnOracle,
-    ) -> Result<(NystromApprox, SelectionTrace)> {
+        oracle: &'a dyn ColumnOracle,
+    ) -> Result<OasisSession<'a>> {
         let sw = Stopwatch::start();
         let n = oracle.n();
         let l = self.max_cols.min(n);
@@ -84,12 +99,13 @@ impl Oasis {
         let k0 = self.init_cols.min(l);
         let d = oracle.diag();
         let tol = super::effective_tol(self.tol, &d);
+        let d_abs_sum: f64 = d.iter().map(|x| x.abs()).sum();
 
         let mut state = State::new(n, l, self.threads);
 
         // --- seed: k₀ random columns (redrawn if W₀ is singular) ---
         let mut rng = Pcg64::new(self.seed);
-        let mut lambda: Vec<usize>;
+        let lambda: Vec<usize>;
         let mut attempt = 0;
         loop {
             let cand = rng.sample_without_replacement(n, k0);
@@ -127,36 +143,32 @@ impl Oasis {
             Variant::Incremental => state.seed_delta(&d, &mut delta),
         }
 
-        // --- main loop ---
-        while lambda.len() < l {
-            let k = lambda.len();
-            if self.variant == Variant::PaperR {
-                state.colsum_delta(&d, &mut delta);
-            }
-            // argmax |Δ| over unselected
-            let (best, best_abs) = argmax_abs(&delta, &selected);
-            if best_abs < tol {
-                break; // approximation is (near-)exact
-            }
-            let s = 1.0 / delta[best];
-            // new column from the oracle
-            let col = state.fetch_column(oracle, best);
-            // q = W⁻¹ b where b = C(Λ, best) = row `best` of C
-            let q = state.q_for(best, k);
-            // diff = C q − c_new
-            state.compute_diff(&q, &col, k);
-            if self.variant == Variant::Incremental {
-                state.update_delta_inc(&mut delta, s);
-            }
-            state.apply_update(&q, &col, s, k, self.variant);
-            selected[best] = true;
-            lambda.push(best);
-            trace.order.push(best);
-            trace.cum_secs.push(sw.secs());
-            trace.deltas.push(best_abs);
-        }
+        Ok(OasisSession {
+            oracle,
+            variant: self.variant,
+            tol,
+            n,
+            d,
+            d_abs_sum,
+            delta,
+            selected,
+            state,
+            trace,
+            assembler: RefCell::new(assembly::IncrementalAssembler::new(n)),
+            exhausted: None,
+            busy_secs: sw.secs(),
+        })
+    }
 
-        let approx = state.into_approx(lambda, sw.secs());
+    /// Run selection, returning the approximation and the per-step trace.
+    pub fn sample_traced(
+        &self,
+        oracle: &dyn ColumnOracle,
+    ) -> Result<(NystromApprox, SelectionTrace)> {
+        let mut session = self.session(oracle)?;
+        run_to_completion(&mut session, &StoppingRule::budget(self.max_cols))?;
+        let trace = session.trace().clone();
+        let approx = session.snapshot()?;
         Ok((approx, trace))
     }
 }
@@ -180,17 +192,135 @@ impl TracedSampler for Oasis {
     }
 }
 
-/// Mutable algorithm state shared by the variants.
+/// A paused oASIS run (see [`Oasis::session`]). One column selection per
+/// [`step`](SamplerSession::step); the selection sequence is bit-identical
+/// to the one-shot [`Oasis::sample`] path for either [`Variant`].
+pub struct OasisSession<'a> {
+    oracle: &'a dyn ColumnOracle,
+    variant: Variant,
+    /// effective tolerance (numerical floor; see `effective_tol`).
+    tol: f64,
+    n: usize,
+    d: Vec<f64>,
+    d_abs_sum: f64,
+    delta: Vec<f64>,
+    selected: Vec<bool>,
+    state: State,
+    trace: SelectionTrace,
+    /// cached row-major C for cheap repeated snapshots.
+    assembler: RefCell<assembly::IncrementalAssembler>,
+    exhausted: Option<StopReason>,
+    busy_secs: f64,
+}
+
+impl SamplerSession for OasisSession<'_> {
+    fn name(&self) -> &'static str {
+        "oASIS"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn indices(&self) -> &[usize] {
+        &self.trace.order
+    }
+
+    fn trace(&self) -> &SelectionTrace {
+        &self.trace
+    }
+
+    fn selection_secs(&self) -> f64 {
+        self.busy_secs
+    }
+
+    /// Residual trace ratio `Σ_unselected |Δᵢ| / Σ |dᵢ|` — the residual
+    /// diagonal after k selections is exactly Δ, so this is
+    /// `trace(G − G̃) / trace-scale(G)`, a cheap proxy for the relative
+    /// error that decreases to 0 as the approximation becomes exact. For
+    /// [`Variant::PaperR`] the Δ vector is the one from the most recent
+    /// scoring sweep (stale by at most one update).
+    fn error_estimate(&self) -> Option<f64> {
+        if self.d_abs_sum <= 0.0 {
+            return Some(0.0);
+        }
+        let resid: f64 = self
+            .delta
+            .iter()
+            .zip(&self.selected)
+            .filter(|(_, &sel)| !sel)
+            .map(|(&dv, _)| dv.abs())
+            .sum();
+        Some(resid / self.d_abs_sum)
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if let Some(reason) = self.exhausted {
+            return Ok(StepOutcome::Exhausted(reason));
+        }
+        let sw = Stopwatch::start();
+        let k = self.state.k;
+        if self.variant == Variant::PaperR {
+            self.state.colsum_delta(&self.d, &mut self.delta);
+        }
+        // argmax |Δ| over unselected
+        let (best, best_abs) = argmax_abs(&self.delta, &self.selected);
+        if best == usize::MAX {
+            self.exhausted = Some(StopReason::Exhausted);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+        }
+        if best_abs < self.tol {
+            self.exhausted = Some(StopReason::ScoreBelowTol);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::ScoreBelowTol));
+        }
+        let s = 1.0 / self.delta[best];
+        // new column from the oracle
+        let col = self.state.fetch_column(self.oracle, best);
+        // q = W⁻¹ b where b = C(Λ, best) = row `best` of C
+        let q = self.state.q_for(best, k);
+        // diff = C q − c_new
+        self.state.compute_diff(&q, &col, k);
+        if self.variant == Variant::Incremental {
+            self.state.update_delta_inc(&mut self.delta, s);
+        }
+        self.state.apply_update(&q, &col, s, k, self.variant);
+        self.selected[best] = true;
+        self.trace.order.push(best);
+        self.trace.cum_secs.push(self.busy_secs + sw.secs());
+        self.trace.deltas.push(best_abs);
+        self.busy_secs += sw.secs();
+        Ok(StepOutcome::Selected { index: best, score: best_abs })
+    }
+
+    fn snapshot(&self) -> Result<NystromApprox> {
+        let k = self.state.k;
+        let mut asm = self.assembler.borrow_mut();
+        asm.sync(&self.state.c, k);
+        Ok(NystromApprox {
+            indices: self.trace.order.clone(),
+            c: asm.to_mat(),
+            winv: assembly::winv_block(&self.state.winv, self.state.cap, k),
+            selection_secs: self.busy_secs,
+        })
+    }
+}
+
+/// Mutable algorithm state shared by the variants. Capacity (`cap`, the
+/// W⁻¹ stride) grows geometrically when a session is driven past its
+/// initial budget, so resumed sessions extend in place.
 struct State {
     n: usize,
-    l: usize,
+    /// current column capacity; also the row stride of `winv`.
+    cap: usize,
     threads: usize,
     /// sampled columns, column-major: column t at `c[t*n .. (t+1)*n]`
     c: Vec<f64>,
-    /// W⁻¹, row-major with stride l; live block k×k
+    /// W⁻¹, row-major with stride `cap`; live block k×k
     winv: Vec<f64>,
     /// R = W⁻¹Cᵀ, row-major with stride n; live rows 0..k (PaperR only,
-    /// but allocated lazily on first use)
+    /// allocated lazily on first use and grown row-by-row)
     r: Vec<f64>,
     r_allocated: bool,
     /// scratch: diff = C q − c_new
@@ -199,13 +329,13 @@ struct State {
 }
 
 impl State {
-    fn new(n: usize, l: usize, threads: usize) -> State {
+    fn new(n: usize, cap: usize, threads: usize) -> State {
         State {
             n,
-            l,
+            cap,
             threads,
-            c: Vec::with_capacity(l * n),
-            winv: vec![0.0; l * l],
+            c: Vec::with_capacity(cap * n),
+            winv: vec![0.0; cap * cap],
             r: Vec::new(),
             r_allocated: false,
             diff: vec![0.0; n],
@@ -213,21 +343,41 @@ impl State {
         }
     }
 
-    fn ensure_r(&mut self) {
-        if !self.r_allocated {
-            self.r = vec![0.0; self.l * self.n];
-            self.r_allocated = true;
+    /// Ensure room for one more column, re-striding W⁻¹ if needed.
+    fn ensure_capacity(&mut self, k_next: usize) {
+        if k_next <= self.cap {
+            return;
+        }
+        let new_cap = (self.cap * 2).max(k_next).min(self.n.max(k_next));
+        let mut winv = vec![0.0; new_cap * new_cap];
+        for i in 0..self.k {
+            winv[i * new_cap..i * new_cap + self.k]
+                .copy_from_slice(&self.winv[i * self.cap..i * self.cap + self.k]);
+        }
+        self.winv = winv;
+        self.cap = new_cap;
+    }
+
+    fn ensure_r(&mut self, rows: usize) {
+        self.r_allocated = true;
+        if self.r.len() < rows * self.n {
+            self.r.resize(rows * self.n, 0.0);
         }
     }
 
     /// Try to seed with the candidate index set; false if W₀ is singular.
+    /// Columns arrive through one batched oracle fill.
     fn try_seed(&mut self, oracle: &dyn ColumnOracle, cand: &[usize]) -> bool {
         let k0 = cand.len();
         let n = self.n;
+        let mut block = Mat::zeros(n, k0);
+        oracle.columns_into(cand, &mut block);
         self.c.clear();
         self.c.resize(k0 * n, 0.0);
-        for (t, &j) in cand.iter().enumerate() {
-            oracle.column_into(j, &mut self.c[t * n..(t + 1) * n]);
+        for t in 0..k0 {
+            for i in 0..n {
+                self.c[t * n + i] = block.data[i * k0 + t];
+            }
         }
         // W₀ = C(Λ, :) — k0×k0
         let mut w = Mat::zeros(k0, k0);
@@ -247,7 +397,7 @@ impl State {
         }
         for i in 0..k0 {
             for j in 0..k0 {
-                self.winv[i * self.l + j] = inv.at(i, j);
+                self.winv[i * self.cap + j] = inv.at(i, j);
             }
         }
         self.k = k0;
@@ -286,7 +436,7 @@ impl State {
     fn seed_delta(&self, d: &[f64], delta: &mut [f64]) {
         let k = self.k;
         let n = self.n;
-        let l = self.l;
+        let cap = self.cap;
         let c = &self.c;
         let winv = &self.winv;
         parallel::for_each_chunk_mut(delta, 1, self.threads, |range, chunk| {
@@ -297,7 +447,7 @@ impl State {
                 }
                 let mut quad = 0.0;
                 for t in 0..k {
-                    let row = &winv[t * l..t * l + k];
+                    let row = &winv[t * cap..t * cap + k];
                     quad += b[t] * crate::linalg::matrix::dot(row, &b);
                 }
                 chunk[local] = d[i] - quad;
@@ -307,10 +457,10 @@ impl State {
 
     /// Build R = W⁻¹Cᵀ from scratch (seed time, PaperR variant).
     fn build_r_from_scratch(&mut self) {
-        self.ensure_r();
         let k = self.k;
+        self.ensure_r(k);
         let n = self.n;
-        let l = self.l;
+        let cap = self.cap;
         let winv = &self.winv;
         let c = &self.c;
         parallel::for_each_chunk_mut(
@@ -322,7 +472,7 @@ impl State {
                     let row = &mut chunk[local * n..(local + 1) * n];
                     row.fill(0.0);
                     for u in 0..k {
-                        let w = winv[t * l + u];
+                        let w = winv[t * cap + u];
                         if w == 0.0 {
                             continue;
                         }
@@ -345,14 +495,14 @@ impl State {
     /// q = W⁻¹ b with b = C(best,:) over live columns.
     fn q_for(&self, best: usize, k: usize) -> Vec<f64> {
         let n = self.n;
-        let l = self.l;
+        let cap = self.cap;
         let mut b = vec![0.0; k];
         for (t, bt) in b.iter_mut().enumerate() {
             *bt = self.c[t * n + best];
         }
         let mut q = vec![0.0; k];
         for t in 0..k {
-            let row = &self.winv[t * l..t * l + k];
+            let row = &self.winv[t * cap..t * cap + k];
             q[t] = crate::linalg::matrix::dot(row, &b);
         }
         q
@@ -392,21 +542,22 @@ impl State {
 
     /// Apply Eq. 5 (W⁻¹) and, for PaperR, Eq. 6 (R); append the column.
     fn apply_update(&mut self, q: &[f64], col: &[f64], s: f64, k: usize, v: Variant) {
-        let l = self.l;
+        self.ensure_capacity(k + 1);
+        let cap = self.cap;
         let n = self.n;
         // W⁻¹ ← [W⁻¹ + s qqᵀ, −sq; −sqᵀ, s]
         for i in 0..k {
             let qi = q[i];
-            let row = &mut self.winv[i * l..i * l + k];
+            let row = &mut self.winv[i * cap..i * cap + k];
             for (j, w) in row.iter_mut().enumerate() {
                 *w += s * qi * q[j];
             }
-            self.winv[i * l + k] = -s * qi;
-            self.winv[k * l + i] = -s * qi;
+            self.winv[i * cap + k] = -s * qi;
+            self.winv[k * cap + i] = -s * qi;
         }
-        self.winv[k * l + k] = s;
+        self.winv[k * cap + k] = s;
         if v == Variant::PaperR {
-            self.ensure_r();
+            self.ensure_r(k + 1);
             // R rows 0..k: R_t += s q_t diff ; new row k: −s diff
             let diff = &self.diff;
             let threads = self.threads;
@@ -433,26 +584,6 @@ impl State {
         }
         self.c.extend_from_slice(col);
         self.k = k + 1;
-    }
-
-    fn into_approx(self, lambda: Vec<usize>, secs: f64) -> NystromApprox {
-        let k = lambda.len();
-        let n = self.n;
-        // C: column-major buffer → row-major Mat
-        let mut c = Mat::zeros(n, k);
-        for t in 0..k {
-            let src = &self.c[t * n..(t + 1) * n];
-            for i in 0..n {
-                c.data[i * k + t] = src[i];
-            }
-        }
-        let mut winv = Mat::zeros(k, k);
-        for i in 0..k {
-            for j in 0..k {
-                winv.data[i * k + j] = self.winv[i * self.l + j];
-            }
-        }
-        NystromApprox { indices: lambda, c, winv, selection_secs: secs }
     }
 }
 
@@ -573,7 +704,7 @@ mod tests {
         // no duplicate selections
         let set: std::collections::HashSet<_> = trace.order.iter().collect();
         assert_eq!(set.len(), trace.order.len());
-        // seed deltas are NaN, adaptive deltas are finite & non-increasinging trend not guaranteed, just finite
+        // seed deltas are NaN, adaptive deltas are finite
         assert!(trace.deltas[0].is_nan());
         assert!(trace.deltas[4..].iter().all(|d| d.is_finite()));
     }
@@ -588,5 +719,63 @@ mod tests {
         assert_eq!(approx.k(), 1);
         let err = relative_frobenius_error(&oracle, &approx);
         assert!(err < 1e-10);
+    }
+
+    #[test]
+    fn session_is_idempotent_once_exhausted() {
+        let ds = gauss_2d_plus_3d(30, 30, 2);
+        let g = kernel_matrix(&ds, &Linear);
+        let oracle = ExplicitOracle::new(&g);
+        let mut s = Oasis::new(20, 1, 1e-8, 1).session(&oracle).unwrap();
+        let reason = run_to_completion(&mut s, &StoppingRule::new()).unwrap();
+        assert_eq!(reason, StopReason::ScoreBelowTol);
+        let k = s.k();
+        assert!(k <= 4, "rank-3 data, k = {k}");
+        // stepping again changes nothing
+        assert_eq!(
+            s.step().unwrap(),
+            StepOutcome::Exhausted(StopReason::ScoreBelowTol)
+        );
+        assert_eq!(s.k(), k);
+    }
+
+    #[test]
+    fn snapshot_mid_run_does_not_disturb_selection() {
+        let ds = two_moons(90, 0.05, 3);
+        let kern = Gaussian::new(0.6);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let (reference, _) = Oasis::new(20, 3, 1e-12, 5).sample_traced(&oracle).unwrap();
+        let mut s = Oasis::new(20, 3, 1e-12, 5).session(&oracle).unwrap();
+        let mut snaps = Vec::new();
+        while s.k() < 20 {
+            if s.k() % 5 == 0 {
+                snaps.push(s.snapshot().unwrap());
+            }
+            match s.step().unwrap() {
+                StepOutcome::Selected { .. } => {}
+                StepOutcome::Exhausted(_) => break,
+            }
+        }
+        let fin = Box::new(s).finish().unwrap();
+        assert_eq!(fin.indices, reference.indices);
+        assert_eq!(fin.c.data, reference.c.data);
+        assert_eq!(fin.winv.data, reference.winv.data);
+        // snapshots were consistent prefixes
+        for snap in snaps {
+            assert_eq!(snap.indices, reference.indices[..snap.k()]);
+        }
+    }
+
+    #[test]
+    fn error_estimate_decreases_and_reaches_zero_scale() {
+        let ds = two_moons(120, 0.05, 7);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let mut s = Oasis::new(60, 4, 1e-14, 9).session(&oracle).unwrap();
+        let e0 = s.error_estimate().unwrap();
+        assert!(e0 > 0.0 && e0 <= 1.5, "initial estimate {e0}");
+        run_to_completion(&mut s, &StoppingRule::budget(60)).unwrap();
+        let e1 = s.error_estimate().unwrap();
+        assert!(e1 < e0, "estimate did not decrease: {e0} → {e1}");
     }
 }

@@ -29,6 +29,43 @@ pub trait ColumnOracle: Sync {
         self.column_into(j, &mut out);
         out
     }
+
+    /// Batched column access for the hot paths: write columns `js` of G
+    /// into the n×|js| row-major matrix `out`, i.e.
+    /// `out(i, t) = G(i, js[t])`.
+    ///
+    /// The default implementation fetches one column at a time and
+    /// scatters it with stride-|js| writes; every oracle in this module
+    /// overrides it with a parallel fill whose writes are contiguous per
+    /// row chunk. Used by [`super::assemble_from_indices`], the oASIS
+    /// seed phase, and residual materialization in the deflation-based
+    /// baselines.
+    fn columns_into(&self, js: &[usize], out: &mut Mat) {
+        let n = self.n();
+        let k = js.len();
+        assert_eq!(out.rows, n, "columns_into: out has {} rows, n = {n}", out.rows);
+        assert_eq!(out.cols, k, "columns_into: out has {} cols for {k} indices", out.cols);
+        if k == 0 {
+            return;
+        }
+        let mut col = vec![0.0; n];
+        for (t, &j) in js.iter().enumerate() {
+            self.column_into(j, &mut col);
+            for (i, &v) in col.iter().enumerate() {
+                out.data[i * k + t] = v;
+            }
+        }
+    }
+}
+
+/// Thread count for a batched fill of `n × k` entries: stay single-
+/// threaded for small blocks where spawn overhead dominates.
+fn batch_threads(n: usize, k: usize) -> usize {
+    if n.saturating_mul(k) >= 16_384 {
+        parallel::default_threads()
+    } else {
+        1
+    }
 }
 
 /// Oracle over an explicitly stored kernel matrix (Table I class).
@@ -59,6 +96,32 @@ impl ColumnOracle for ExplicitOracle<'_> {
 
     fn entry(&self, i: usize, j: usize) -> f64 {
         self.g.at(i, j)
+    }
+
+    /// Batched gather: each output row i reads `g.row(i)` (hot in cache)
+    /// and writes contiguously — no strided passes over G.
+    fn columns_into(&self, js: &[usize], out: &mut Mat) {
+        let n = self.g.rows;
+        let k = js.len();
+        assert_eq!((out.rows, out.cols), (n, k));
+        if k == 0 {
+            return;
+        }
+        let g = self.g;
+        parallel::for_each_chunk_mut(
+            &mut out.data,
+            k,
+            batch_threads(n, k),
+            |range, chunk| {
+                for (local, i) in range.clone().enumerate() {
+                    let row = g.row(i);
+                    let dst = &mut chunk[local * k..(local + 1) * k];
+                    for (o, &j) in dst.iter_mut().zip(js) {
+                        *o = row[j];
+                    }
+                }
+            },
+        );
     }
 }
 
@@ -98,6 +161,34 @@ impl ColumnOracle for ImplicitOracle<'_> {
 
     fn entry(&self, i: usize, j: usize) -> f64 {
         self.kernel.eval(self.ds.point(i), self.ds.point(j))
+    }
+
+    /// Batched evaluation: one parallel sweep computes all |js| kernel
+    /// columns (the per-column path would launch |js| separate sweeps).
+    fn columns_into(&self, js: &[usize], out: &mut Mat) {
+        let n = self.ds.n();
+        let k = js.len();
+        assert_eq!((out.rows, out.cols), (n, k));
+        if k == 0 {
+            return;
+        }
+        let pts: Vec<&[f64]> = js.iter().map(|&j| self.ds.point(j)).collect();
+        let ds = self.ds;
+        let kernel = self.kernel;
+        parallel::for_each_chunk_mut(
+            &mut out.data,
+            k,
+            batch_threads(n, k),
+            |range, chunk| {
+                for (local, i) in range.clone().enumerate() {
+                    let zi = ds.point(i);
+                    let dst = &mut chunk[local * k..(local + 1) * k];
+                    for (o, &zj) in dst.iter_mut().zip(&pts) {
+                        *o = kernel.eval(zi, zj);
+                    }
+                }
+            },
+        );
     }
 }
 
@@ -194,6 +285,44 @@ impl ColumnOracle for SparseKnnOracle {
             Err(_) => 0.0,
         }
     }
+
+    /// Batched sparse fill: each thread owns a contiguous row range and
+    /// walks every requested column's (sorted) nonzeros restricted to it,
+    /// so no thread touches another's rows and each column list is
+    /// scanned exactly once in total.
+    fn columns_into(&self, js: &[usize], out: &mut Mat) {
+        let n = self.n;
+        let k = js.len();
+        assert_eq!((out.rows, out.cols), (n, k));
+        if k == 0 {
+            return;
+        }
+        let diag = &self.diag;
+        let cols = &self.cols;
+        parallel::for_each_chunk_mut(
+            &mut out.data,
+            k,
+            batch_threads(n, k),
+            |range, chunk| {
+                chunk.fill(0.0);
+                for (t, &j) in js.iter().enumerate() {
+                    if range.contains(&j) {
+                        chunk[(j - range.start) * k + t] = diag[j];
+                    }
+                    let col = &cols[j];
+                    let start =
+                        col.partition_point(|e| (e.0 as usize) < range.start);
+                    for &(i, v) in &col[start..] {
+                        let i = i as usize;
+                        if i >= range.end {
+                            break;
+                        }
+                        chunk[(i - range.start) * k + t] = v;
+                    }
+                }
+            },
+        );
+    }
 }
 
 #[cfg(test)]
@@ -234,6 +363,58 @@ mod tests {
                     (o.entry(i, j) - o.entry(j, i)).abs() < 1e-14,
                     "asymmetry at ({i},{j})"
                 );
+            }
+        }
+    }
+
+    /// Every oracle's batched `columns_into` must agree bitwise with the
+    /// one-column-at-a-time path (the default implementation), including
+    /// duplicate and out-of-order index lists.
+    #[test]
+    fn batched_columns_match_single_column_path() {
+        let ds = two_moons(70, 0.05, 6);
+        let kern = Gaussian::new(0.6);
+        let g = kernel_matrix(&ds, &kern);
+        let exp = ExplicitOracle::new(&g);
+        let imp = ImplicitOracle::new(&ds, &kern);
+        let sparse = SparseKnnOracle::build(&ds, &kern, 6);
+        let oracles: [&dyn ColumnOracle; 3] = [&exp, &imp, &sparse];
+        let js = vec![3usize, 69, 0, 17, 17, 42];
+        for oracle in oracles {
+            let mut batched = crate::linalg::Mat::zeros(70, js.len());
+            oracle.columns_into(&js, &mut batched);
+            let mut col = vec![0.0; 70];
+            for (t, &j) in js.iter().enumerate() {
+                oracle.column_into(j, &mut col);
+                for i in 0..70 {
+                    assert_eq!(
+                        batched.at(i, t),
+                        col[i],
+                        "mismatch at ({i}, {t}) for column {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The batched fill must also be exact on blocks large enough to take
+    /// the threaded path (n·k ≥ the parallel cutoff).
+    #[test]
+    fn batched_columns_threaded_path_exact() {
+        let ds = two_moons(600, 0.05, 8);
+        let kern = Gaussian::new(0.5);
+        let imp = ImplicitOracle::new(&ds, &kern);
+        let sparse = SparseKnnOracle::build(&ds, &kern, 8);
+        let js: Vec<usize> = (0..40).map(|t| (t * 13) % 600).collect();
+        for oracle in [&imp as &dyn ColumnOracle, &sparse] {
+            let mut batched = crate::linalg::Mat::zeros(600, js.len());
+            oracle.columns_into(&js, &mut batched);
+            let mut col = vec![0.0; 600];
+            for (t, &j) in js.iter().enumerate() {
+                oracle.column_into(j, &mut col);
+                for i in 0..600 {
+                    assert_eq!(batched.at(i, t), col[i]);
+                }
             }
         }
     }

@@ -1,0 +1,405 @@
+//! Stepwise sampling sessions and pluggable stopping criteria.
+//!
+//! oASIS's core advantage (paper §III) is that selection is *sequential
+//! and cheap per step* — this module exposes that directly. A
+//! [`SamplerSession`] is the paused state of a selection run: each
+//! [`step`](SamplerSession::step) performs exactly one column selection,
+//! [`snapshot`](SamplerSession::snapshot) assembles the current
+//! [`NystromApprox`] without ending the run, and
+//! [`finish`](SamplerSession::finish) consumes the session for the final
+//! approximation. Because *when to stop* is now the caller's decision,
+//! budgets become [`StoppingRule`]s evaluated by [`run_to_completion`]
+//! instead of constructor parameters — a run can stop on a column budget,
+//! a Δ-score tolerance, an estimated-error target, or a wall-clock
+//! deadline, and a stopped session can be resumed with a larger budget:
+//! the index set *extends*, it never restarts.
+//!
+//! Design note: a session captures its column source (oracle, dataset +
+//! kernel, or PJRT context) at construction rather than taking it per
+//! `step`. Swapping matrices mid-run would silently corrupt the cached
+//! `C`/`W⁻¹` state, and it lets sessions that do not read a
+//! [`ColumnOracle`](super::ColumnOracle) at all — the distributed
+//! coordinator, the PJRT-accelerated path — implement the same trait.
+//!
+//! ```no_run
+//! use oasis::data::generators::two_moons;
+//! use oasis::kernels::Gaussian;
+//! use oasis::sampling::oasis::Oasis;
+//! use oasis::sampling::{
+//!     run_to_completion, ImplicitOracle, SamplerSession, StoppingCriterion,
+//!     StoppingRule,
+//! };
+//!
+//! let ds = two_moons(2_000, 0.05, 42);
+//! let kernel = Gaussian::with_sigma_fraction(&ds, 0.05);
+//! let oracle = ImplicitOracle::new(&ds, &kernel);
+//! let mut session = Oasis::new(450, 10, 1e-12, 7).session(&oracle).unwrap();
+//! let rule = StoppingRule::budget(450)
+//!     .with(StoppingCriterion::ErrorBelow(1e-3));
+//! let reason = run_to_completion(&mut session, &rule).unwrap();
+//! println!("stopped after {} columns: {reason:?}", session.k());
+//! let approx = session.snapshot().unwrap();
+//! ```
+
+use super::SelectionTrace;
+use crate::nystrom::NystromApprox;
+use crate::Result;
+use std::time::Duration;
+
+/// What a single [`SamplerSession::step`] did.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepOutcome {
+    /// One column was selected and incorporated into the session state.
+    Selected {
+        /// global index of the selected column.
+        index: usize,
+        /// the method's selection score for it (|Δ| for the Schur-
+        /// complement methods, the greedy residual ratio for Farahat,
+        /// NaN for randomized draws without a score).
+        score: f64,
+    },
+    /// The session cannot make further progress; stepping again returns
+    /// the same outcome.
+    Exhausted(StopReason),
+}
+
+/// Why a run stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// a [`StoppingCriterion::ColumnBudget`] was reached.
+    BudgetReached,
+    /// the best selection score fell below the tolerance (either the
+    /// session's internal numerical floor — see
+    /// [`effective_tol`](super::effective_tol) — or a
+    /// [`StoppingCriterion::ScoreBelow`]). The approximation is
+    /// (near-)exact: selecting more columns would divide by ≈0.
+    ScoreBelowTol,
+    /// a [`StoppingCriterion::ErrorBelow`] target was met.
+    ErrorTargetMet,
+    /// a [`StoppingCriterion::Deadline`] expired.
+    DeadlineExpired,
+    /// nothing selectable remains (all n columns taken, the residual is
+    /// exhausted, or a fixed-capacity session hit its allocation limit).
+    Exhausted,
+}
+
+/// A paused, resumable column-selection run.
+///
+/// Implemented by every sequential sampler
+/// ([`OasisSession`](super::oasis::OasisSession),
+/// [`SisSession`](super::sis::SisSession),
+/// [`FarahatSession`](super::farahat::FarahatSession),
+/// [`IcdSession`](super::icd::IcdSession),
+/// [`AdaptiveRandomSession`](super::adaptive_random::AdaptiveRandomSession)),
+/// by the distributed coordinator
+/// ([`OasisPSession`](crate::coordinator::leader::OasisPSession)) and by
+/// the PJRT-accelerated path
+/// ([`PjrtOasisSession`](crate::runtime::accel::PjrtOasisSession)).
+pub trait SamplerSession {
+    /// Method name as used in the paper's tables.
+    fn name(&self) -> &'static str;
+
+    /// Matrix dimension n.
+    fn n(&self) -> usize;
+
+    /// Λ — every index selected so far, in selection order.
+    fn indices(&self) -> &[usize];
+
+    /// Number of selected columns so far (including seed columns).
+    fn k(&self) -> usize {
+        self.indices().len()
+    }
+
+    /// Per-step record of the run so far.
+    fn trace(&self) -> &SelectionTrace;
+
+    /// Seconds of selection work so far (time spent inside `step`/
+    /// construction — idle time between steps is not charged, so
+    /// serving-style callers get honest selection costs).
+    fn selection_secs(&self) -> f64;
+
+    /// A cheap estimate of the current relative approximation error, if
+    /// the method can provide one from session state. The Schur-complement
+    /// methods use the residual trace ratio `Σ|Δᵢ| / Σ|dᵢ|` (the residual
+    /// diagonal is exactly Δ); the residual-deflation methods report the
+    /// exact `‖E‖_F / ‖G‖_F`. `None` when the method has no estimator.
+    fn error_estimate(&self) -> Option<f64> {
+        None
+    }
+
+    /// Perform one selection step. Idempotent once exhausted.
+    fn step(&mut self) -> Result<StepOutcome>;
+
+    /// Assemble a [`NystromApprox`] from the current state *without*
+    /// consuming the session — the run can continue afterwards.
+    fn snapshot(&self) -> Result<NystromApprox>;
+
+    /// Consume the session and assemble the final approximation.
+    fn finish(self: Box<Self>) -> Result<NystromApprox> {
+        self.snapshot()
+    }
+}
+
+/// One pluggable stopping condition (combine via [`StoppingRule`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StoppingCriterion {
+    /// Stop once `k` columns are selected (the classic ℓ budget; seed
+    /// columns count).
+    ColumnBudget(usize),
+    /// Stop once the most recent selection score |Δ| drops below ε.
+    /// Fires only after at least one scored (non-seed) selection.
+    ScoreBelow(f64),
+    /// Stop once [`SamplerSession::error_estimate`] reaches the target.
+    /// Never fires on sessions without an estimator.
+    ErrorBelow(f64),
+    /// Stop once the driver has run for this long. Measured from
+    /// [`run_to_completion`] entry, so resuming grants a fresh deadline.
+    Deadline(Duration),
+}
+
+impl StoppingCriterion {
+    /// Check against the current session state; `elapsed` is driver time.
+    pub fn check(
+        &self,
+        session: &dyn SamplerSession,
+        elapsed: Duration,
+    ) -> Option<StopReason> {
+        match *self {
+            StoppingCriterion::ColumnBudget(l) => {
+                (session.k() >= l).then_some(StopReason::BudgetReached)
+            }
+            StoppingCriterion::ScoreBelow(eps) => match session.trace().deltas.last() {
+                Some(&d) if d.is_finite() && d.abs() < eps => {
+                    Some(StopReason::ScoreBelowTol)
+                }
+                _ => None,
+            },
+            StoppingCriterion::ErrorBelow(target) => match session.error_estimate() {
+                Some(e) if e <= target => Some(StopReason::ErrorTargetMet),
+                _ => None,
+            },
+            StoppingCriterion::Deadline(d) => {
+                (elapsed >= d).then_some(StopReason::DeadlineExpired)
+            }
+        }
+    }
+}
+
+/// A composable any-of stopping rule.
+///
+/// Criteria are evaluated **in the order they were added**, before every
+/// step; the first criterion that holds determines the reported
+/// [`StopReason`]. An empty rule never stops the driver externally — the
+/// run continues until the session itself is exhausted (rank reached or
+/// every column selected), which is well-defined for every sampler here.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StoppingRule {
+    criteria: Vec<StoppingCriterion>,
+}
+
+impl StoppingRule {
+    /// An empty rule (run until the session exhausts itself).
+    pub fn new() -> StoppingRule {
+        StoppingRule::default()
+    }
+
+    /// The classic fixed-ℓ rule.
+    pub fn budget(l: usize) -> StoppingRule {
+        StoppingRule::new().with(StoppingCriterion::ColumnBudget(l))
+    }
+
+    /// Add a criterion (builder style).
+    pub fn with(mut self, c: StoppingCriterion) -> StoppingRule {
+        self.criteria.push(c);
+        self
+    }
+
+    pub fn criteria(&self) -> &[StoppingCriterion] {
+        &self.criteria
+    }
+
+    /// First criterion (in insertion order) that holds, if any.
+    pub fn evaluate(
+        &self,
+        session: &dyn SamplerSession,
+        elapsed: Duration,
+    ) -> Option<StopReason> {
+        self.criteria
+            .iter()
+            .find_map(|c| c.check(session, elapsed))
+    }
+}
+
+/// Drive a session until the rule fires or the session exhausts itself,
+/// returning why the run stopped. The rule is evaluated before every step
+/// (so a session already past a budget stops immediately and a resumed
+/// session with a larger budget simply keeps extending its index set).
+pub fn run_to_completion(
+    session: &mut dyn SamplerSession,
+    rule: &StoppingRule,
+) -> Result<StopReason> {
+    let started = std::time::Instant::now();
+    loop {
+        if let Some(reason) = rule.evaluate(session, started.elapsed()) {
+            return Ok(reason);
+        }
+        match session.step()? {
+            StepOutcome::Selected { .. } => {}
+            StepOutcome::Exhausted(reason) => return Ok(reason),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scripted fake session: selects indices 0,1,2,… with scores from a
+    /// list, and a fixed error-estimate schedule.
+    struct Fake {
+        indices: Vec<usize>,
+        trace: SelectionTrace,
+        scores: Vec<f64>,
+        errors: Vec<f64>,
+    }
+
+    impl Fake {
+        fn new(scores: Vec<f64>, errors: Vec<f64>) -> Fake {
+            Fake {
+                indices: Vec::new(),
+                trace: SelectionTrace::default(),
+                scores,
+                errors,
+            }
+        }
+    }
+
+    impl SamplerSession for Fake {
+        fn name(&self) -> &'static str {
+            "fake"
+        }
+
+        fn n(&self) -> usize {
+            self.scores.len()
+        }
+
+        fn indices(&self) -> &[usize] {
+            &self.indices
+        }
+
+        fn trace(&self) -> &SelectionTrace {
+            &self.trace
+        }
+
+        fn selection_secs(&self) -> f64 {
+            0.0
+        }
+
+        fn error_estimate(&self) -> Option<f64> {
+            self.errors.get(self.k()).copied()
+        }
+
+        fn step(&mut self) -> Result<StepOutcome> {
+            let k = self.k();
+            if k >= self.scores.len() {
+                return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+            }
+            let score = self.scores[k];
+            self.indices.push(k);
+            self.trace.order.push(k);
+            self.trace.cum_secs.push(k as f64);
+            self.trace.deltas.push(score);
+            Ok(StepOutcome::Selected { index: k, score })
+        }
+
+        fn snapshot(&self) -> Result<NystromApprox> {
+            Ok(NystromApprox {
+                indices: self.indices.clone(),
+                c: crate::linalg::Mat::zeros(self.n(), self.k()),
+                winv: crate::linalg::Mat::zeros(self.k(), self.k()),
+                selection_secs: 0.0,
+            })
+        }
+    }
+
+    #[test]
+    fn budget_stops_at_l() {
+        let mut s = Fake::new(vec![1.0; 10], vec![]);
+        let reason = run_to_completion(&mut s, &StoppingRule::budget(4)).unwrap();
+        assert_eq!(reason, StopReason::BudgetReached);
+        assert_eq!(s.k(), 4);
+    }
+
+    #[test]
+    fn empty_rule_runs_to_exhaustion() {
+        let mut s = Fake::new(vec![1.0; 6], vec![]);
+        let reason = run_to_completion(&mut s, &StoppingRule::new()).unwrap();
+        assert_eq!(reason, StopReason::Exhausted);
+        assert_eq!(s.k(), 6);
+    }
+
+    #[test]
+    fn score_below_fires_after_scored_step() {
+        let mut s = Fake::new(vec![1.0, 0.5, 0.01, 0.001], vec![]);
+        let rule = StoppingRule::new().with(StoppingCriterion::ScoreBelow(0.1));
+        let reason = run_to_completion(&mut s, &rule).unwrap();
+        assert_eq!(reason, StopReason::ScoreBelowTol);
+        // stopped right after the 0.01 selection, before selecting 0.001
+        assert_eq!(s.k(), 3);
+    }
+
+    #[test]
+    fn error_target_stops_early() {
+        // error estimate after k selections: 1/(k+1)
+        let errors: Vec<f64> = (0..10).map(|k| 1.0 / (k as f64 + 1.0)).collect();
+        let mut s = Fake::new(vec![1.0; 10], errors);
+        let rule = StoppingRule::budget(10).with(StoppingCriterion::ErrorBelow(0.26));
+        let reason = run_to_completion(&mut s, &rule).unwrap();
+        assert_eq!(reason, StopReason::ErrorTargetMet);
+        assert!(s.k() < 10, "stopped at k = {}", s.k());
+    }
+
+    #[test]
+    fn criteria_fire_in_insertion_order() {
+        // both hold from the start: the first added wins
+        let mut a = Fake::new(vec![1.0; 5], vec![0.0; 6]);
+        let rule_a = StoppingRule::new()
+            .with(StoppingCriterion::ErrorBelow(0.5))
+            .with(StoppingCriterion::ColumnBudget(0));
+        assert_eq!(
+            run_to_completion(&mut a, &rule_a).unwrap(),
+            StopReason::ErrorTargetMet
+        );
+        let mut b = Fake::new(vec![1.0; 5], vec![0.0; 6]);
+        let rule_b = StoppingRule::new()
+            .with(StoppingCriterion::ColumnBudget(0))
+            .with(StoppingCriterion::ErrorBelow(0.5));
+        assert_eq!(
+            run_to_completion(&mut b, &rule_b).unwrap(),
+            StopReason::BudgetReached
+        );
+    }
+
+    #[test]
+    fn zero_deadline_stops_immediately() {
+        let mut s = Fake::new(vec![1.0; 5], vec![]);
+        let rule = StoppingRule::budget(5)
+            .with(StoppingCriterion::Deadline(Duration::ZERO));
+        // budget listed first but not met at k=0; deadline fires
+        assert_eq!(
+            run_to_completion(&mut s, &rule).unwrap(),
+            StopReason::DeadlineExpired
+        );
+        assert_eq!(s.k(), 0);
+    }
+
+    #[test]
+    fn resume_extends_with_larger_budget() {
+        let mut s = Fake::new(vec![1.0; 8], vec![]);
+        run_to_completion(&mut s, &StoppingRule::budget(3)).unwrap();
+        assert_eq!(s.k(), 3);
+        let reason = run_to_completion(&mut s, &StoppingRule::budget(6)).unwrap();
+        assert_eq!(reason, StopReason::BudgetReached);
+        assert_eq!(s.indices(), &[0, 1, 2, 3, 4, 5]);
+    }
+}

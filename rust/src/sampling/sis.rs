@@ -6,6 +6,9 @@
 //! accelerated update formulas (Eq. 5/6) must reproduce its selection
 //! sequence exactly — and for the ablation bench (fig6 runtime panel).
 
+use super::session::{
+    run_to_completion, SamplerSession, StepOutcome, StopReason, StoppingRule,
+};
 use super::{ColumnOracle, ColumnSampler, SelectionTrace, TracedSampler};
 use crate::linalg::{pinv_psd, Mat};
 use crate::nystrom::NystromApprox;
@@ -27,20 +30,18 @@ impl Sis {
         Sis { max_cols, init_cols, tol, seed }
     }
 
-    pub fn sample_traced(
-        &self,
-        oracle: &dyn ColumnOracle,
-    ) -> Result<(NystromApprox, SelectionTrace)> {
+    /// Open a stepwise session (one from-scratch rescoring + selection per
+    /// step). Seeding matches [`super::oasis::Oasis`] exactly — same RNG
+    /// stream, same rejection rule — so sequence-equality tests hold.
+    pub fn session<'a>(&self, oracle: &'a dyn ColumnOracle) -> Result<SisSession<'a>> {
         let sw = Stopwatch::start();
         let n = oracle.n();
         let l = self.max_cols.min(n);
         let d = oracle.diag();
         let tol = super::effective_tol(self.tol, &d);
-        // seed columns — must match Oasis for sequence-equality tests:
-        // same RNG stream, same rejection rule.
         let mut rng = Pcg64::new(self.seed);
-        let mut cols: Vec<Vec<f64>>;
-        let mut lambda: Vec<usize>;
+        let cols: Vec<Vec<f64>>;
+        let lambda: Vec<usize>;
         loop {
             let cand = rng.sample_without_replacement(n, self.init_cols.min(l));
             let test_cols: Vec<Vec<f64>> =
@@ -64,53 +65,152 @@ impl Sis {
             trace.cum_secs.push(sw.secs());
             trace.deltas.push(f64::NAN);
         }
+        Ok(SisSession {
+            oracle,
+            n,
+            d,
+            tol,
+            cols,
+            trace,
+            resid_sum: None,
+            d_abs_sum: 0.0,
+            exhausted: None,
+            busy_secs: sw.secs(),
+        })
+    }
 
-        while lambda.len() < l {
-            let k = lambda.len();
-            // W⁺ from scratch
-            let w = w_from(&cols, &lambda);
-            let winv = pinv_psd(&w, 1e-12);
-            // Δ for every candidate from scratch
-            let mut best = usize::MAX;
-            let mut best_abs = -1.0;
-            for i in 0..n {
-                if lambda.contains(&i) {
-                    continue;
-                }
-                let b: Vec<f64> = cols.iter().map(|c| c[i]).collect();
-                let wb = winv.matvec(&b);
-                let quad: f64 = b.iter().zip(&wb).map(|(x, y)| x * y).sum();
-                let delta = (d[i] - quad).abs();
-                if delta > best_abs {
-                    best_abs = delta;
-                    best = i;
-                }
-            }
-            if best_abs < tol {
-                break;
-            }
-            cols.push(oracle.column(best));
-            lambda.push(best);
-            trace.order.push(best);
-            trace.cum_secs.push(sw.secs());
-            trace.deltas.push(best_abs);
-            let _ = k;
+    pub fn sample_traced(
+        &self,
+        oracle: &dyn ColumnOracle,
+    ) -> Result<(NystromApprox, SelectionTrace)> {
+        let mut session = self.session(oracle)?;
+        run_to_completion(&mut session, &StoppingRule::budget(self.max_cols))?;
+        let trace = session.trace().clone();
+        let approx = session.snapshot()?;
+        Ok((approx, trace))
+    }
+}
+
+/// A paused naive-SIS run (see [`Sis::session`]).
+pub struct SisSession<'a> {
+    oracle: &'a dyn ColumnOracle,
+    n: usize,
+    d: Vec<f64>,
+    tol: f64,
+    /// fetched columns, in selection order.
+    cols: Vec<Vec<f64>>,
+    trace: SelectionTrace,
+    /// Σ|Δ| over unselected candidates from the latest rescoring sweep.
+    resid_sum: Option<f64>,
+    d_abs_sum: f64,
+    exhausted: Option<StopReason>,
+    busy_secs: f64,
+}
+
+impl SamplerSession for SisSession<'_> {
+    fn name(&self) -> &'static str {
+        "SIS (naive)"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn indices(&self) -> &[usize] {
+        &self.trace.order
+    }
+
+    fn trace(&self) -> &SelectionTrace {
+        &self.trace
+    }
+
+    fn selection_secs(&self) -> f64 {
+        self.busy_secs
+    }
+
+    /// Residual trace ratio from the most recent full rescoring sweep
+    /// (`None` before the first adaptive step).
+    fn error_estimate(&self) -> Option<f64> {
+        let sum = self.resid_sum?;
+        if self.d_abs_sum <= 0.0 {
+            return Some(0.0);
         }
+        Some(sum / self.d_abs_sum)
+    }
 
-        // assemble
+    fn step(&mut self) -> Result<StepOutcome> {
+        if let Some(reason) = self.exhausted {
+            return Ok(StepOutcome::Exhausted(reason));
+        }
+        let sw = Stopwatch::start();
+        let lambda = &self.trace.order;
+        let n = self.n;
+        if lambda.len() >= n {
+            self.exhausted = Some(StopReason::Exhausted);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+        }
+        // W⁺ from scratch
+        let w = w_from(&self.cols, lambda);
+        let winv = pinv_psd(&w, 1e-12);
+        // Δ for every candidate from scratch
+        let mut best = usize::MAX;
+        let mut best_abs = -1.0;
+        let mut sum_abs = 0.0;
+        for i in 0..n {
+            if lambda.contains(&i) {
+                continue;
+            }
+            let b: Vec<f64> = self.cols.iter().map(|c| c[i]).collect();
+            let wb = winv.matvec(&b);
+            let quad: f64 = b.iter().zip(&wb).map(|(x, y)| x * y).sum();
+            let delta = (self.d[i] - quad).abs();
+            sum_abs += delta;
+            if delta > best_abs {
+                best_abs = delta;
+                best = i;
+            }
+        }
+        self.resid_sum = Some(sum_abs);
+        if self.d_abs_sum == 0.0 {
+            self.d_abs_sum = self.d.iter().map(|x| x.abs()).sum();
+        }
+        if best == usize::MAX {
+            self.exhausted = Some(StopReason::Exhausted);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
+        }
+        if best_abs < self.tol {
+            self.exhausted = Some(StopReason::ScoreBelowTol);
+            self.busy_secs += sw.secs();
+            return Ok(StepOutcome::Exhausted(StopReason::ScoreBelowTol));
+        }
+        self.cols.push(self.oracle.column(best));
+        self.trace.order.push(best);
+        self.trace.cum_secs.push(self.busy_secs + sw.secs());
+        self.trace.deltas.push(best_abs);
+        self.busy_secs += sw.secs();
+        Ok(StepOutcome::Selected { index: best, score: best_abs })
+    }
+
+    fn snapshot(&self) -> Result<NystromApprox> {
+        let lambda = self.trace.order.clone();
+        let n = self.n;
         let k = lambda.len();
         let mut c = Mat::zeros(n, k);
-        for (t, col) in cols.iter().enumerate() {
+        for (t, col) in self.cols.iter().enumerate() {
             for i in 0..n {
                 c.data[i * k + t] = col[i];
             }
         }
-        let w = w_from(&cols, &lambda);
+        let w = w_from(&self.cols, &lambda);
         let winv = pinv_psd(&w, 1e-12);
-        Ok((
-            NystromApprox { indices: lambda, c, winv, selection_secs: sw.secs() },
-            trace,
-        ))
+        Ok(NystromApprox {
+            indices: lambda,
+            c,
+            winv,
+            selection_secs: self.busy_secs,
+        })
     }
 }
 
@@ -181,5 +281,26 @@ mod tests {
         assert!(approx.k() <= 4);
         let err = crate::nystrom::relative_frobenius_error(&oracle, &approx);
         assert!(err < 1e-6, "err {err}");
+    }
+
+    /// The session path selects the same sequence as the one-shot path
+    /// when stepped manually.
+    #[test]
+    fn sis_session_steps_match_sample() {
+        let ds = two_moons(60, 0.05, 8);
+        let kern = Gaussian::new(0.7);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let sampler = Sis::new(12, 2, 1e-12, 4);
+        let (reference, _) = sampler.sample_traced(&oracle).unwrap();
+        let mut s = sampler.session(&oracle).unwrap();
+        while s.k() < 12 {
+            match s.step().unwrap() {
+                StepOutcome::Selected { .. } => {}
+                StepOutcome::Exhausted(_) => break,
+            }
+        }
+        let approx = s.snapshot().unwrap();
+        assert_eq!(approx.indices, reference.indices);
+        assert_eq!(approx.c.data, reference.c.data);
     }
 }

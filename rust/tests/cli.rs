@@ -84,6 +84,60 @@ fn approximate_all_methods_run() {
 }
 
 #[test]
+fn approximate_json_output_parses() {
+    let (stdout, stderr, ok) = run(&[
+        "approximate",
+        "--dataset",
+        "two-moons",
+        "--n",
+        "300",
+        "--cols",
+        "40",
+        "--method",
+        "oasis",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let line = stdout.lines().find(|l| l.starts_with('{')).expect("json line");
+    // keys promised to downstream tooling: method, k, error, secs
+    for key in ["\"method\"", "\"k\"", "\"error\"", "\"secs\"", "\"stop\""] {
+        assert!(line.contains(key), "missing {key} in {line}");
+    }
+    assert!(line.contains("\"method\":\"oasis\""), "{line}");
+    assert!(line.contains("\"k\":40"), "{line}");
+}
+
+#[test]
+fn approximate_target_err_stops_early() {
+    let (stdout, stderr, ok) = run(&[
+        "approximate",
+        "--dataset",
+        "two-moons",
+        "--n",
+        "400",
+        "--cols",
+        "200",
+        "--method",
+        "oasis",
+        "--target-err",
+        "0.5",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let line = stdout.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"stop\":\"error-target\""), "{line}");
+    // k was parsed back out below the budget
+    let k: f64 = line
+        .split("\"k\":")
+        .nth(1)
+        .and_then(|s| s.split([',', '}']).next())
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!(k < 200.0, "expected early stop, k = {k}");
+}
+
+#[test]
 fn unknown_method_errors() {
     let (_, stderr, ok) = run(&[
         "approximate",

@@ -1,0 +1,210 @@
+//! Session-API acceptance tests: the stepwise `SamplerSession` path must
+//! reproduce the legacy one-shot `ColumnSampler::sample` path bit for bit,
+//! stopping criteria must fire deterministically and in rule order, and
+//! finished sessions must resume (extend, not restart).
+
+use oasis::data::generators::two_moons;
+use oasis::kernels::Gaussian;
+use oasis::sampling::{
+    oasis::{Oasis, Variant},
+    run_to_completion, ImplicitOracle, SamplerSession, StepOutcome, StopReason,
+    StoppingCriterion, StoppingRule,
+};
+use std::time::Duration;
+
+/// The headline acceptance criterion: oASIS driven one `step()` at a time
+/// selects the bit-identical column sequence — and assembles the
+/// bit-identical `NystromApprox` (C and W⁻¹ data) — as the legacy
+/// `ColumnSampler::sample` path on two-moons with n = 2000, ℓ = 450.
+#[test]
+fn stepped_session_bit_identical_to_sample_two_moons_2000() {
+    let ds = two_moons(2_000, 0.05, 42);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.05);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+    let sampler = Oasis::new(450, 10, 1e-12, 7);
+
+    let (reference, ref_trace) = sampler.sample_traced(&oracle).unwrap();
+
+    let mut session = sampler.session(&oracle).unwrap();
+    let mut stepped_order: Vec<usize> = session.indices().to_vec();
+    while stepped_order.len() < 450 {
+        match session.step().unwrap() {
+            StepOutcome::Selected { index, .. } => stepped_order.push(index),
+            StepOutcome::Exhausted(_) => break,
+        }
+    }
+    assert_eq!(stepped_order, ref_trace.order, "selection order diverged");
+
+    let approx = Box::new(session).finish().unwrap();
+    assert_eq!(approx.indices, reference.indices);
+    assert_eq!(approx.c.data, reference.c.data, "C diverged");
+    assert_eq!(approx.winv.data, reference.winv.data, "W⁻¹ diverged");
+    assert_eq!(approx.k(), 450);
+}
+
+/// Both scoring variants agree between their session and one-shot paths
+/// (smaller instance; the PaperR variant maintains extra state worth
+/// exercising through the stepwise path).
+#[test]
+fn both_variants_step_identically_to_sample() {
+    let ds = two_moons(300, 0.05, 11);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.1);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+    for variant in [Variant::PaperR, Variant::Incremental] {
+        let sampler = Oasis::new(60, 5, 1e-12, 3).with_variant(variant);
+        let (reference, _) = sampler.sample_traced(&oracle).unwrap();
+        let mut s = sampler.session(&oracle).unwrap();
+        while s.k() < 60 {
+            if let StepOutcome::Exhausted(_) = s.step().unwrap() {
+                break;
+            }
+        }
+        let approx = s.snapshot().unwrap();
+        assert_eq!(approx.indices, reference.indices, "{variant:?}");
+        assert_eq!(approx.c.data, reference.c.data, "{variant:?}");
+        assert_eq!(approx.winv.data, reference.winv.data, "{variant:?}");
+    }
+}
+
+/// A loose error target stops the run with k < ℓ and reports
+/// `ErrorTargetMet` (second acceptance criterion).
+#[test]
+fn loose_error_target_stops_before_budget() {
+    let ds = two_moons(2_000, 0.05, 42);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.05);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+    let mut session = Oasis::new(450, 10, 1e-12, 7).session(&oracle).unwrap();
+    let rule = StoppingRule::new()
+        .with(StoppingCriterion::ErrorBelow(0.5))
+        .with(StoppingCriterion::ColumnBudget(450));
+    let reason = run_to_completion(&mut session, &rule).unwrap();
+    assert_eq!(reason, StopReason::ErrorTargetMet);
+    assert!(
+        session.k() < 450,
+        "loose target should stop early, got k = {}",
+        session.k()
+    );
+    assert!(session.error_estimate().unwrap() <= 0.5);
+}
+
+/// Criteria are evaluated in rule order: when the budget and the error
+/// target hold simultaneously, the first-listed criterion names the stop.
+#[test]
+fn criteria_report_in_rule_order() {
+    let ds = two_moons(400, 0.05, 5);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.1);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+
+    // run once to learn where a 0.5 estimate is reached
+    let mut probe = Oasis::new(120, 5, 1e-12, 9).session(&oracle).unwrap();
+    run_to_completion(
+        &mut probe,
+        &StoppingRule::new().with(StoppingCriterion::ErrorBelow(0.5)),
+    )
+    .unwrap();
+    let k_at_target = probe.k();
+
+    // both criteria hold at k_at_target: listed order decides the reason
+    for (rule, expect) in [
+        (
+            StoppingRule::new()
+                .with(StoppingCriterion::ColumnBudget(k_at_target))
+                .with(StoppingCriterion::ErrorBelow(0.5)),
+            StopReason::BudgetReached,
+        ),
+        (
+            StoppingRule::new()
+                .with(StoppingCriterion::ErrorBelow(0.5))
+                .with(StoppingCriterion::ColumnBudget(k_at_target)),
+            StopReason::ErrorTargetMet,
+        ),
+    ] {
+        let mut s = Oasis::new(120, 5, 1e-12, 9).session(&oracle).unwrap();
+        let reason = run_to_completion(&mut s, &rule).unwrap();
+        assert_eq!(reason, expect, "rule {:?}", rule.criteria());
+        assert_eq!(s.k(), k_at_target);
+    }
+}
+
+/// Resuming a finished session with a larger budget extends the index set
+/// (never restarts): the extended run equals a fresh run at the larger
+/// budget, bitwise — which also exercises the state growth path, since the
+/// session was allocated for only 20 columns.
+#[test]
+fn resumed_session_extends_index_set() {
+    let ds = two_moons(500, 0.05, 13);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.1);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+
+    let (fresh_60, _) = Oasis::new(60, 5, 1e-12, 21)
+        .sample_traced(&oracle)
+        .unwrap();
+
+    // allocate for 20, run to 20, then resume twice (growing past cap)
+    let mut s = Oasis::new(20, 5, 1e-12, 21).session(&oracle).unwrap();
+    let r1 = run_to_completion(&mut s, &StoppingRule::budget(20)).unwrap();
+    assert_eq!(r1, StopReason::BudgetReached);
+    assert_eq!(s.k(), 20);
+    let at_20: Vec<usize> = s.indices().to_vec();
+    let snap_20 = s.snapshot().unwrap();
+
+    let r2 = run_to_completion(&mut s, &StoppingRule::budget(45)).unwrap();
+    assert_eq!(r2, StopReason::BudgetReached);
+    assert_eq!(s.k(), 45);
+    assert_eq!(&s.indices()[..20], &at_20[..], "resume restarted the run");
+
+    run_to_completion(&mut s, &StoppingRule::budget(60)).unwrap();
+    let extended = s.snapshot().unwrap();
+    assert_eq!(extended.indices, fresh_60.indices);
+    assert_eq!(extended.c.data, fresh_60.c.data);
+    assert_eq!(extended.winv.data, fresh_60.winv.data);
+    // the mid-run snapshot was a faithful 20-column prefix
+    assert_eq!(snap_20.indices, &fresh_60.indices[..20]);
+    for i in 0..500 {
+        for t in 0..20 {
+            assert_eq!(snap_20.c.at(i, t), fresh_60.c.at(i, t));
+        }
+    }
+}
+
+/// An immediate deadline stops before any adaptive selection; re-driving
+/// the same session afterwards picks up where it left off with a fresh
+/// deadline.
+#[test]
+fn deadline_stops_and_resumes() {
+    let ds = two_moons(300, 0.05, 2);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.1);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+    let mut s = Oasis::new(40, 4, 1e-12, 1).session(&oracle).unwrap();
+    let rule = StoppingRule::new()
+        .with(StoppingCriterion::Deadline(Duration::ZERO))
+        .with(StoppingCriterion::ColumnBudget(40));
+    let reason = run_to_completion(&mut s, &rule).unwrap();
+    assert_eq!(reason, StopReason::DeadlineExpired);
+    assert_eq!(s.k(), 4, "only the seed columns should be selected");
+    // resume without the dead deadline
+    let reason = run_to_completion(&mut s, &StoppingRule::budget(40)).unwrap();
+    assert_eq!(reason, StopReason::BudgetReached);
+    assert_eq!(s.k(), 40);
+}
+
+/// `ScoreBelow` as an external criterion stops a run that the internal
+/// numerical floor would have let continue.
+#[test]
+fn score_below_criterion_stops_externally() {
+    let ds = two_moons(400, 0.05, 7);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.1);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+    let mut s = Oasis::new(200, 5, 1e-14, 3).session(&oracle).unwrap();
+    let rule = StoppingRule::new()
+        .with(StoppingCriterion::ScoreBelow(1e-2))
+        .with(StoppingCriterion::ColumnBudget(200));
+    let reason = run_to_completion(&mut s, &rule).unwrap();
+    assert_eq!(reason, StopReason::ScoreBelowTol);
+    assert!(s.k() < 200, "k = {}", s.k());
+    // the last recorded score is indeed below the threshold, and the one
+    // before it was not
+    let deltas = &s.trace().deltas;
+    assert!(deltas.last().unwrap() < &1e-2);
+    assert!(deltas[deltas.len() - 2] >= 1e-2);
+}
