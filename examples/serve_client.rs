@@ -1,0 +1,127 @@
+//! `oasis serve` lifecycle, end to end: starts the server in-process on
+//! an ephemeral port, then drives it over a real socket exactly the way
+//! an external client would — create a session, grow it in batches while
+//! watching the error estimate, snapshot mid-run, answer out-of-sample
+//! queries against the live snapshot, read `/metrics`, finish, shut down.
+//!
+//!     cargo run --release --example serve_client
+//!
+//! Against an already-running server, point your own client at the same
+//! endpoints; the wire format is documented in the `oasis::server` docs.
+
+use oasis::server::http::client_request;
+use oasis::server::Server;
+use oasis::util::json::Json;
+use std::net::SocketAddr;
+
+/// One HTTP exchange on a fresh connection (the shared one-shot client
+/// from `oasis::server::http`; real clients would keep the connection
+/// alive).
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> Json {
+    let (status, raw) =
+        client_request(addr, method, path, body).expect("http exchange");
+    let json = Json::parse(&raw).expect("json body");
+    assert!(status < 400, "{method} {path} → {status}: {json}");
+    json
+}
+
+fn main() {
+    // serve in-process on an ephemeral port (a real deployment runs
+    // `oasis serve --port 7437` instead)
+    let server = Server::bind("127.0.0.1:0").expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let handle = std::thread::spawn(move || server.run().expect("serve"));
+    println!("server listening on http://{addr}");
+
+    // create a session: two-moons, Gaussian kernel, oASIS
+    let created = request(
+        addr,
+        "POST",
+        "/sessions",
+        r#"{"name":"demo",
+            "dataset":{"generator":"two-moons","n":2000,"seed":42},
+            "kernel":{"type":"gaussian","sigma_fraction":0.05},
+            "method":"oasis","max_cols":450,"init_cols":10,"seed":7}"#,
+    );
+    println!(
+        "created session '{}' (n = {}, k = {})",
+        created.get("name").and_then(Json::as_str).unwrap(),
+        created.get("n").and_then(Json::as_usize).unwrap(),
+        created.get("k").and_then(Json::as_usize).unwrap(),
+    );
+
+    // grow it in batches, watching the error estimate fall
+    for batch in 0..4 {
+        let rep = request(
+            addr,
+            "POST",
+            "/sessions/demo/step",
+            r#"{"steps":50,"target_err":1e-3}"#,
+        );
+        println!(
+            "batch {batch}: k = {} (+{}) estimate = {:.3e} in {:.1} ms{}",
+            rep.get("k").and_then(Json::as_usize).unwrap(),
+            rep.get("stepped").and_then(Json::as_usize).unwrap(),
+            rep.get("error_estimate").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            rep.get("secs").and_then(Json::as_f64).unwrap() * 1e3,
+            rep.get("stop")
+                .and_then(Json::as_str)
+                .map(|s| format!(" [stopped: {s}]"))
+                .unwrap_or_default(),
+        );
+        if rep.get("stop").is_some() {
+            break;
+        }
+    }
+
+    // snapshot the live factors (indices only here; add ?factors=1 for C
+    // and W⁻¹)
+    let snap = request(addr, "GET", "/sessions/demo/snapshot", "");
+    println!(
+        "snapshot: k = {} columns, first indices {:?}…",
+        snap.get("k").and_then(Json::as_usize).unwrap(),
+        snap.get("indices")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().take(5).filter_map(Json::as_usize).collect::<Vec<_>>())
+            .unwrap_or_default(),
+    );
+
+    // out-of-sample extension query against the live snapshot
+    let q = request(
+        addr,
+        "POST",
+        "/sessions/demo/query",
+        r#"{"points":[[0.5,0.25],[-0.5,0.4]],"targets":[0,1,2]}"#,
+    );
+    let results = q.get("results").and_then(Json::as_arr).unwrap();
+    for (i, r) in results.iter().enumerate() {
+        let kernel: Vec<f64> = r
+            .get("kernel")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_f64).collect())
+            .unwrap_or_default();
+        println!("query point {i}: ĝ(z, [0,1,2]) = {kernel:?}");
+    }
+
+    // server-wide metrics
+    let metrics = request(addr, "GET", "/metrics", "");
+    println!(
+        "metrics: {} requests, {} live session(s)",
+        metrics
+            .get("server")
+            .and_then(|s| s.get("requests"))
+            .and_then(Json::as_usize)
+            .unwrap(),
+        metrics.get("sessions").and_then(Json::as_arr).unwrap().len(),
+    );
+
+    // finish (final factors + eviction), then shut the server down
+    let fin = request(addr, "POST", "/sessions/demo/finish", "");
+    println!(
+        "finished: final k = {}",
+        fin.get("k").and_then(Json::as_usize).unwrap()
+    );
+    request(addr, "POST", "/shutdown", "");
+    handle.join().expect("server thread");
+    println!("server stopped");
+}

@@ -25,6 +25,13 @@ pub enum ToWorker {
         point: Vec<f64>,
         delta: f64,
     },
+    /// Non-terminal column gather (mid-run snapshot): the worker replies
+    /// with its current `Columns` block — same payload as the terminal
+    /// gather — and keeps running, so the leader can assemble a
+    /// [`NystromApprox`](crate::nystrom::NystromApprox) without ending
+    /// the run. Serving-style callers use this to hand out the current
+    /// factors between selection rounds.
+    GatherColumns,
     /// Finish: send back the local C block (and worker 0 its W⁻¹).
     Finish,
 }
@@ -76,6 +83,7 @@ impl ToWorker {
             }
             ToWorker::FetchPoint { .. } => 8,
             ToWorker::Selected { point, .. } => (point.len() * 8 + 16) as u64,
+            ToWorker::GatherColumns => 1,
             ToWorker::Finish => 1,
         }
     }

@@ -28,6 +28,8 @@ use crate::sampling::{
 use crate::util::{rng::Pcg64, timing::Stopwatch};
 use crate::{anyhow, bail};
 use crate::Result;
+use std::cell::RefCell;
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -60,9 +62,12 @@ pub fn run_oasis_p(
 /// workers own their shards), so it is `'static`; its per-run capacity is
 /// fixed at `cfg.max_cols` because every worker pre-allocates its W⁻¹
 /// replica at that stride — stepping past it reports
-/// [`StopReason::Exhausted`]. Mid-run [`snapshot`](SamplerSession::snapshot)
-/// is not supported (assembly requires the terminal column gather); use
-/// [`finish_run`](OasisPSession::finish_run).
+/// [`StopReason::Exhausted`]. Mid-run
+/// [`snapshot`](SamplerSession::snapshot) performs a non-terminal column
+/// gather ([`ToWorker::GatherColumns`]): the workers ship their current C
+/// blocks and keep running, so a serving caller can hand out the current
+/// factors and continue the run; [`finish_run`](OasisPSession::finish_run)
+/// remains the terminal gather that also joins the workers.
 pub struct OasisPSession {
     cfg: OasisPConfig,
     n: usize,
@@ -73,6 +78,10 @@ pub struct OasisPSession {
     handles: Vec<WorkerHandle>,
     joins: Vec<std::thread::JoinHandle<()>>,
     inbox: mpsc::Receiver<FromWorker>,
+    /// Argmax replies pulled off the inbox while a mid-run snapshot was
+    /// draining its `Columns` messages; consumed by the next `step`.
+    /// (`RefCell` because `snapshot` is a `&self` trait method.)
+    pending: RefCell<VecDeque<FromWorker>>,
     metrics: Arc<Metrics>,
     trace: SelectionTrace,
     d_scale: f64,
@@ -130,6 +139,7 @@ impl OasisPSession {
             handles,
             joins,
             inbox,
+            pending: RefCell::new(VecDeque::new()),
             metrics,
             trace: SelectionTrace::default(),
             d_scale: 0.0,
@@ -233,6 +243,56 @@ impl OasisPSession {
             .map_err(|e| anyhow!("leader recv: {e} (worker died or deadlock)"))
     }
 
+    /// Next message for the selection loop: messages stashed by a mid-run
+    /// snapshot are replayed before the live inbox is read.
+    fn next_msg(&self) -> Result<FromWorker> {
+        if let Some(m) = self.pending.borrow_mut().pop_front() {
+            return Ok(m);
+        }
+        self.recv()
+    }
+
+    /// Drain the p `Columns` replies of a gather (terminal or not) and
+    /// assemble (C, W⁻¹) at the current k. `stash_argmax` is the mid-run
+    /// mode: in-flight `Argmax` replies are buffered for the next `step`
+    /// (and the live inbox is read directly — `pending` can only hold
+    /// `Argmax`); the terminal mode consumes stashed-and-live `Argmax`
+    /// replies alike and discards them as stale.
+    fn gather_columns(&self, k: usize, stash_argmax: bool) -> Result<(Mat, Mat)> {
+        let n = self.n;
+        let mut c = Mat::zeros(n, k);
+        let mut winv: Option<Mat> = None;
+        let mut got = 0;
+        while got < self.p {
+            let msg = if stash_argmax { self.recv()? } else { self.next_msg()? };
+            match msg {
+                FromWorker::Columns { start, local_n, c_block, winv: w, .. } => {
+                    for i in 0..local_n {
+                        c.data[(start + i) * k..(start + i + 1) * k]
+                            .copy_from_slice(&c_block[i * k..(i + 1) * k]);
+                    }
+                    if let Some(wd) = w {
+                        winv = Some(Mat::from_vec(k, k, wd));
+                    }
+                    got += 1;
+                }
+                msg @ FromWorker::Argmax { .. } => {
+                    if stash_argmax {
+                        self.pending.borrow_mut().push_back(msg);
+                    }
+                }
+                FromWorker::Failed { worker, message } => {
+                    bail!("worker {worker} failed during column gather: {message}")
+                }
+                other => {
+                    bail!("unexpected message during column gather: {other:?}")
+                }
+            }
+        }
+        let winv = winv.ok_or_else(|| anyhow!("no W⁻¹ returned by worker 0"))?;
+        Ok((c, winv))
+    }
+
     /// Send Finish to every worker and join the threads (idempotent).
     fn teardown(&mut self) {
         if self.torn_down {
@@ -257,35 +317,13 @@ impl OasisPSession {
             }
         }
         let k = self.trace.order.len();
-        let n = self.n;
-        let mut c = Mat::zeros(n, k);
-        let mut winv: Option<Mat> = None;
-        let mut got = 0;
-        // drain remaining Argmax replies interleaved with Columns
-        while got < self.p {
-            match self.recv()? {
-                FromWorker::Columns { start, local_n, c_block, winv: w, .. } => {
-                    for i in 0..local_n {
-                        let dst = &mut c.data[(start + i) * k..(start + i + 1) * k];
-                        dst.copy_from_slice(&c_block[i * k..(i + 1) * k]);
-                    }
-                    if let Some(wd) = w {
-                        winv = Some(Mat::from_vec(k, k, wd));
-                    }
-                    got += 1;
-                }
-                FromWorker::Argmax { .. } => {} // stale replies from last round
-                FromWorker::Failed { worker, message } => {
-                    bail!("worker {worker} failed at finish: {message}")
-                }
-                other => bail!("unexpected message at finish: {other:?}"),
-            }
-        }
+        // terminal gather: stale Argmax replies (stashed or live) are
+        // drained and discarded
+        let (c, winv) = self.gather_columns(k, false)?;
         self.torn_down = true;
         for j in self.joins.drain(..) {
             let _ = j.join();
         }
-        let winv = winv.ok_or_else(|| anyhow!("no W⁻¹ returned by worker 0"))?;
         self.busy_secs += sw.secs();
         let report = OasisPReport {
             trace: self.trace.clone(),
@@ -360,7 +398,7 @@ impl SamplerSession for OasisPSession {
         let mut round_resid = 0.0f64;
         let mut round_d_sum = 0.0f64;
         for _ in 0..self.p {
-            match self.recv()? {
+            match self.next_msg()? {
                 FromWorker::Argmax {
                     best: wb,
                     d_max,
@@ -443,13 +481,33 @@ impl SamplerSession for OasisPSession {
         Ok(StepOutcome::Selected { index: gidx, score: dval.abs() })
     }
 
-    /// Not supported mid-run: assembly requires the terminal column
-    /// gather. Use [`OasisPSession::finish_run`] (or the trait `finish`).
+    /// Mid-run snapshot via a non-terminal column gather
+    /// ([`ToWorker::GatherColumns`]): every worker replies with its
+    /// current C block (worker 0 also its W⁻¹ replica) and keeps running,
+    /// so the session can continue stepping afterwards. Argmax replies
+    /// already in flight from the last broadcast are stashed and replayed
+    /// to the next `step` — per-worker channels are FIFO, so each worker
+    /// has incorporated every selection before it serves the gather and
+    /// the snapshot is always a consistent k-column prefix. Snapshot time
+    /// is deliberately not charged to `selection_secs` (it is serving
+    /// work, not selection).
     fn snapshot(&self) -> Result<NystromApprox> {
-        bail!(
-            "oASIS-P sessions assemble only at finish (the column gather \
-             is terminal) — call finish_run()"
-        )
+        if self.torn_down {
+            bail!("oASIS-P session already torn down");
+        }
+        for h in &self.handles {
+            if !h.send(ToWorker::GatherColumns) {
+                bail!("worker {} unavailable (snapshot gather)", h.worker);
+            }
+        }
+        let k = self.trace.order.len();
+        let (c, winv) = self.gather_columns(k, true)?;
+        Ok(NystromApprox {
+            indices: self.trace.order.clone(),
+            c,
+            winv,
+            selection_secs: self.busy_secs,
+        })
     }
 
     fn finish(self: Box<Self>) -> Result<NystromApprox> {
@@ -513,6 +571,46 @@ mod tests {
             session.step().unwrap();
         }
         drop(session); // teardown must complete promptly
+    }
+
+    /// A mid-run snapshot is a consistent prefix of the run — and taking
+    /// it does not disturb subsequent selection: the finished run is
+    /// bit-identical to an uninterrupted one.
+    #[test]
+    fn mid_run_snapshot_matches_prefix_and_run_continues() {
+        let ds = two_moons(100, 0.05, 3);
+        let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+        let cfg = OasisPConfig::new(24, 4, 3).with_seed(9);
+        let (reference, _) =
+            run_oasis_p(&ds, kernel.clone(), &cfg.clone()).unwrap();
+
+        let mut session = OasisPSession::start(&ds, kernel, cfg).unwrap();
+        for _ in 0..6 {
+            session.step().unwrap();
+        }
+        let snap = session.snapshot().unwrap();
+        assert_eq!(snap.k(), session.k());
+        assert_eq!(snap.indices, &reference.indices[..snap.k()]);
+        // the gathered factors are a real Nyström state: W·W⁻¹ ≈ I
+        let w = snap.c.select_rows(&snap.indices);
+        let prod = w.matmul(&snap.winv);
+        assert!(
+            prod.fro_dist(&Mat::eye(snap.k())) < 1e-6,
+            "‖W·W⁻¹−I‖ = {}",
+            prod.fro_dist(&Mat::eye(snap.k()))
+        );
+        // snapshot C columns are the reference's prefix, bit for bit
+        for i in 0..snap.n() {
+            for t in 0..snap.k() {
+                assert_eq!(snap.c.at(i, t), reference.c.at(i, t));
+            }
+        }
+        // continue to the budget: identical to the uninterrupted run
+        run_to_completion(&mut session, &StoppingRule::budget(24)).unwrap();
+        let (fin, _) = session.finish_run().unwrap();
+        assert_eq!(fin.indices, reference.indices);
+        assert_eq!(fin.c.data, reference.c.data);
+        assert_eq!(fin.winv.data, reference.winv.data);
     }
 
     /// The distributed error estimate is populated after the first round

@@ -111,6 +111,11 @@ impl Worker {
                     self.handle_selected(global_idx, &point, delta);
                     self.send_argmax();
                 }
+                ToWorker::GatherColumns => {
+                    // mid-run snapshot: same gather as Finish, but the
+                    // worker stays alive for further selection rounds
+                    self.send_columns();
+                }
                 ToWorker::Finish => {
                     self.send_columns();
                     return;

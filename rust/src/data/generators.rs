@@ -9,6 +9,59 @@
 use super::Dataset;
 use crate::util::rng::Pcg64;
 
+/// Dispatch a generator by its CLI/server name. `dim` of 0 means the
+/// generator's default dimensionality; `noise` applies to two-moons
+/// only. Returns `None` for an unknown name — callers own the error
+/// reporting. Shared by `oasis approximate` (`main.rs`, which XORs its
+/// `--seed` with `0xDA7A` first so dataset and sampler RNG streams
+/// differ) and the serving layer (`server::protocol`, which passes seeds
+/// raw), so the name table cannot drift between the two.
+pub fn by_name(
+    name: &str,
+    n: usize,
+    dim: usize,
+    noise: f64,
+    seed: u64,
+) -> Option<Dataset> {
+    Some(match name {
+        "two-moons" => two_moons(n, noise, seed),
+        "abalone" => abalone_like(n, seed),
+        "borg" => borg(8, (n / 256).max(1), 0.1, seed),
+        "mnist" => mnist_like(n, if dim > 0 { dim } else { 784 }, seed),
+        "salinas" => salinas_like(n, if dim > 0 { dim } else { 204 }, seed),
+        "lightfield" => lightfield_like(n, seed),
+        "tiny-images" => tiny_images_like(n, 32, seed),
+        _ => return None,
+    })
+}
+
+/// The dimensionality [`by_name`] will produce for these arguments —
+/// lets the serving layer validate n×dim *before* any allocation.
+pub fn dim_by_name(name: &str, dim: usize) -> Option<usize> {
+    Some(match name {
+        "two-moons" => 2,
+        "abalone" => 8,
+        "borg" => 8,
+        "mnist" => {
+            if dim > 0 {
+                dim
+            } else {
+                784
+            }
+        }
+        "salinas" => {
+            if dim > 0 {
+                dim
+            } else {
+                204
+            }
+        }
+        "lightfield" => 400,
+        "tiny-images" => 32 * 32,
+        _ => return None,
+    })
+}
+
 /// Two interlocking moons in 2-D (paper §V-B-a and §V-D-g).
 ///
 /// `noise` is the Gaussian jitter std as a fraction of the unit radius.
@@ -467,5 +520,28 @@ mod tests {
         let a = gaussian_clusters(60, 4, 5, 0.3, 9);
         let b = gaussian_clusters(60, 4, 5, 0.3, 9);
         assert_eq!(a, b);
+    }
+
+    /// `dim_by_name`'s predictions must match what `by_name` builds, for
+    /// every name, so pre-allocation validation can trust it.
+    #[test]
+    fn dim_by_name_matches_by_name() {
+        for name in [
+            "two-moons",
+            "abalone",
+            "borg",
+            "mnist",
+            "salinas",
+            "lightfield",
+            "tiny-images",
+        ] {
+            for dim in [0usize, 32] {
+                let predicted = dim_by_name(name, dim).unwrap();
+                let built = by_name(name, 300, dim, 0.05, 3).unwrap();
+                assert_eq!(built.dim(), predicted, "{name} dim={dim}");
+            }
+        }
+        assert!(by_name("nope", 10, 0, 0.05, 1).is_none());
+        assert!(dim_by_name("nope", 0).is_none());
     }
 }

@@ -57,6 +57,32 @@
 //! The one-shot API is still there — `Oasis::new(450, 10, 1e-12, 7)
 //! .sample(&oracle)` — as a thin adapter over the same session machinery,
 //! so both paths select bit-identical column sequences.
+//!
+//! ## Quickstart: serving
+//!
+//! Because sessions are resumable, an approximation can be hosted in a
+//! long-lived process and *grown per request* instead of recomputed:
+//! `oasis serve` (the [`server`] module) exposes a registry of named,
+//! concurrent sessions over a dependency-free HTTP/1.1 + JSON protocol —
+//! create a session, step it (synchronously or on its background actor
+//! thread), snapshot the current Nyström factors mid-run, answer
+//! out-of-sample extension queries against the live snapshot, and finish
+//! it for the final factors.
+//!
+//! ```bash
+//! oasis serve --port 7437 &
+//! curl -X POST localhost:7437/sessions -d '{
+//!   "name": "m", "dataset": {"generator": "two-moons", "n": 2000},
+//!   "method": "oasis", "max_cols": 450}'
+//! curl -X POST localhost:7437/sessions/m/step -d '{"steps": 50, "target_err": 1e-3}'
+//! curl localhost:7437/sessions/m/snapshot
+//! curl -X POST localhost:7437/sessions/m/query -d '{"points": [[0.5, 0.2]], "targets": [0]}'
+//! curl localhost:7437/metrics
+//! curl -X POST localhost:7437/sessions/m/finish
+//! ```
+//!
+//! The full endpoint/payload reference is in the [`server`] module docs;
+//! `examples/serve_client.rs` drives the same lifecycle from Rust.
 
 pub mod bench_support;
 pub mod coordinator;
@@ -68,6 +94,7 @@ pub mod nystrom;
 pub mod runtime;
 pub mod sampling;
 pub mod seed;
+pub mod server;
 pub mod util;
 
 /// Crate-wide result type.

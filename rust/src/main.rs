@@ -3,11 +3,13 @@
 //! Subcommands:
 //!   approximate  run one sampler on one dataset, report error + runtime
 //!   parallel     run the distributed oASIS-P coordinator
+//!   serve        host concurrent resumable sessions over HTTP/JSON
 //!   info         show the artifact manifest and PJRT platform
 //!
 //! Examples:
 //!   oasis approximate --dataset two-moons --n 2000 --cols 450 --method oasis
 //!   oasis parallel --dataset two-moons --n 100000 --cols 500 --workers 8
+//!   oasis serve --port 7437
 //!   oasis info
 
 use oasis::coordinator::{run_oasis_p, OasisPConfig};
@@ -33,6 +35,7 @@ fn main() {
         "approximate" => cmd_approximate(&args),
         "parallel" => cmd_parallel(&args),
         "seed" => cmd_seed(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(),
         _ => {
             print_help();
@@ -46,7 +49,7 @@ fn print_help() {
     println!(
         "oasis — adaptive column sampling for kernel matrix approximation\n\
          \n\
-         USAGE: oasis <approximate|parallel|info> [options]\n\
+         USAGE: oasis <approximate|parallel|serve|info> [options]\n\
          \n\
          approximate options:\n\
            --dataset   two-moons|abalone|borg|mnist|salinas|lightfield (default two-moons)\n\
@@ -74,27 +77,26 @@ fn print_help() {
            --dataset/--n/--seed as above\n\
            --dict      dictionary size L (default 50)\n\
            --sparsity  per-point OMP budget (default 5)\n\
-           --clusters  if set, spectral-cluster the codes into this many groups\n"
+           --clusters  if set, spectral-cluster the codes into this many groups\n\
+         \n\
+         serve options (HTTP/JSON session server; protocol reference in\n\
+         the oasis::server module docs):\n\
+           --host      bind address (default 127.0.0.1)\n\
+           --port      TCP port; 0 picks an ephemeral port, printed on\n\
+                       the \"listening\" line (default 7437)\n"
     );
 }
 
 fn make_dataset(args: &Args) -> Dataset {
     let name = args.get_or("dataset", "two-moons");
     let n = args.usize_or("n", 2000);
+    // XOR so dataset and sampler RNG streams differ for the same --seed
+    // (the server passes seeds raw; see generators::by_name)
     let seed = args.u64_or("seed", 7) ^ 0xDA7A;
-    match name.as_str() {
-        "two-moons" => generators::two_moons(n, 0.05, seed),
-        "abalone" => generators::abalone_like(n, seed),
-        "borg" => {
-            let per = (n / 256).max(1);
-            generators::borg(8, per, 0.1, seed)
-        }
-        "mnist" => generators::mnist_like(n, 784, seed),
-        "salinas" => generators::salinas_like(n, 204, seed),
-        "lightfield" => generators::lightfield_like(n, seed),
-        "tiny-images" => generators::tiny_images_like(n, 32, seed),
-        other => {
-            eprintln!("unknown dataset '{other}'");
+    match generators::by_name(&name, n, 0, 0.05, seed) {
+        Some(ds) => ds,
+        None => {
+            eprintln!("unknown dataset '{name}'");
             std::process::exit(2);
         }
     }
@@ -120,15 +122,6 @@ fn stopping_rule(args: &Args, cols: usize) -> StoppingRule {
     rule.with(StoppingCriterion::ColumnBudget(cols))
 }
 
-fn stop_reason_str(r: StopReason) -> &'static str {
-    match r {
-        StopReason::BudgetReached => "budget",
-        StopReason::ScoreBelowTol => "score-tol",
-        StopReason::ErrorTargetMet => "error-target",
-        StopReason::DeadlineExpired => "deadline",
-        StopReason::Exhausted => "exhausted",
-    }
-}
 
 fn report_approximate(
     args: &Args,
@@ -149,13 +142,13 @@ fn report_approximate(
             ("secs", Json::Num(approx.selection_secs)),
         ];
         if let Some(r) = stop {
-            fields.push(("stop", Json::Str(stop_reason_str(r).to_string())));
+            fields.push(("stop", Json::Str(r.as_str().to_string())));
         }
         println!("{}", Json::obj(fields));
     } else {
         let stop_note = stop
             .filter(|&r| r != StopReason::BudgetReached)
-            .map(|r| format!(" stop={}", stop_reason_str(r)))
+            .map(|r| format!(" stop={}", r.as_str()))
             .unwrap_or_default();
         println!(
             "dataset={} n={} dim={} method={} cols={} error={:.3e} select_time={}{}",
@@ -342,6 +335,42 @@ fn cmd_seed(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("SEED failed: {e}");
+            1
+        }
+    }
+}
+
+/// Host the approximation server. Prints one "listening" line (with the
+/// resolved port — useful with `--port 0`) and serves until
+/// `POST /shutdown`.
+fn cmd_serve(args: &Args) -> i32 {
+    let host = args.get_or("host", "127.0.0.1");
+    let port = args.usize_or("port", 7437);
+    if port > u16::MAX as usize {
+        eprintln!("--port must be ≤ {}", u16::MAX);
+        return 2;
+    }
+    let server = match oasis::server::Server::bind(&format!("{host}:{port}")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: could not bind {host}:{port}: {e}");
+            return 1;
+        }
+    };
+    match server.local_addr() {
+        Ok(addr) => println!("oasis serve listening on http://{addr}"),
+        Err(e) => {
+            eprintln!("serve: no local address: {e}");
+            return 1;
+        }
+    }
+    match server.run() {
+        Ok(()) => {
+            println!("oasis serve stopped");
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
             1
         }
     }

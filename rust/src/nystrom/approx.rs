@@ -52,6 +52,33 @@ impl NystromApprox {
     pub fn rank(&self, rtol: f64) -> usize {
         crate::linalg::eig::psd_rank(&self.winv, rtol)
     }
+
+    /// Out-of-sample extension weights for a query point z:
+    /// `w = W⁻¹ b` where `bₜ = k(z, x_{Λ(t)})` is the kernel evaluated
+    /// against the selected points only. Together with
+    /// [`extend_entry`](Self::extend_entry) this evaluates the Nyström
+    /// extension `ĝ(z, i) = b(z)ᵀ W⁻¹ C(i, :)` — the approximation's
+    /// natural prediction of the kernel row of an unseen point. Only the
+    /// k selected points are ever touched (O(k²) here plus O(k·dim) for
+    /// b), which is what makes serving queries against a live snapshot
+    /// cheap.
+    pub fn extension_weights(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(
+            b.len(),
+            self.k(),
+            "extension_weights: b must have one entry per selected column"
+        );
+        (0..self.k())
+            .map(|t| crate::linalg::matrix::dot(self.winv.row(t), b))
+            .collect()
+    }
+
+    /// `ĝ(z, i)` from weights precomputed by
+    /// [`extension_weights`](Self::extension_weights).
+    #[inline]
+    pub fn extend_entry(&self, w: &[f64], i: usize) -> f64 {
+        crate::linalg::matrix::dot(self.c.row(i), w)
+    }
 }
 
 #[cfg(test)]
@@ -103,6 +130,43 @@ mod tests {
         for i in 0..5 {
             for j in 0..5 {
                 assert!((approx.entry_with(&p, i, j) - full.at(i, j)).abs() < 1e-10);
+            }
+        }
+    }
+
+    /// Querying the extension at a *selected* point must reproduce that
+    /// point's sampled column exactly: b is then a column of W, so
+    /// `w = W⁻¹ b = eⱼ` and `ĝ(·, λⱼ) = C(·, j)`.
+    #[test]
+    fn extension_reproduces_selected_columns() {
+        let mut rng = crate::util::rng::Pcg64::new(9);
+        let mut x = Mat::zeros(4, 8);
+        rng.fill_normal(&mut x.data);
+        let g = x.t_matmul(&x); // 8×8 PSD, rank 4
+        let idx = vec![0usize, 3, 6];
+        let c = g.select_cols(&idx);
+        let w = c.select_rows(&idx);
+        let approx = NystromApprox {
+            indices: idx.clone(),
+            winv: inverse(&w).unwrap(),
+            c,
+            selection_secs: 0.0,
+        };
+        let scale = g.max_abs();
+        for (j, &lam) in idx.iter().enumerate() {
+            let b: Vec<f64> = idx.iter().map(|&i| g.at(i, lam)).collect();
+            let wts = approx.extension_weights(&b);
+            // near the j-th standard basis vector
+            for (t, &wt) in wts.iter().enumerate() {
+                let expect = if t == j { 1.0 } else { 0.0 };
+                assert!((wt - expect).abs() < 1e-8, "w[{t}] = {wt}");
+            }
+            for i in 0..8 {
+                assert!(
+                    (approx.extend_entry(&wts, i) - g.at(i, lam)).abs()
+                        < 1e-8 * scale.max(1.0),
+                    "ĝ({i}, {lam}) diverged"
+                );
             }
         }
     }

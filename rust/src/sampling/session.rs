@@ -83,6 +83,20 @@ pub enum StopReason {
     Exhausted,
 }
 
+impl StopReason {
+    /// Canonical short spelling, shared by the CLI's `--json` output and
+    /// the server's wire format.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StopReason::BudgetReached => "budget",
+            StopReason::ScoreBelowTol => "score-tol",
+            StopReason::ErrorTargetMet => "error-target",
+            StopReason::DeadlineExpired => "deadline",
+            StopReason::Exhausted => "exhausted",
+        }
+    }
+}
+
 /// A paused, resumable column-selection run.
 ///
 /// Implemented by every sequential sampler
@@ -132,6 +146,14 @@ pub trait SamplerSession {
 
     /// Assemble a [`NystromApprox`] from the current state *without*
     /// consuming the session — the run can continue afterwards.
+    ///
+    /// Snapshot cost (the serving layer calls this repeatedly while a
+    /// session grows): the oASIS session amortizes via
+    /// [`IncrementalAssembler`](crate::nystrom::IncrementalAssembler)
+    /// (O(n·m) for m columns added since the last snapshot, plus one
+    /// O(n·k) copy); SIS/ICD/Farahat/adaptive-random re-assemble from
+    /// their fetched columns at O(n·k); the distributed session performs
+    /// one non-terminal column gather across its workers.
     fn snapshot(&self) -> Result<NystromApprox>;
 
     /// Consume the session and assemble the final approximation.
@@ -253,6 +275,25 @@ pub fn run_to_completion(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The serving layer (`oasis::server`) constructs sessions inside
+    /// dedicated actor threads, which requires every session type to be
+    /// movable to (and constructible on) another thread. This
+    /// compile-time assertion documents that guarantee: every oracle is
+    /// `Sync` (so `&dyn ColumnOracle` is `Send`) and session state is
+    /// plain owned data.
+    #[test]
+    fn all_sessions_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<crate::sampling::oasis::OasisSession<'static>>();
+        assert_send::<crate::sampling::sis::SisSession<'static>>();
+        assert_send::<crate::sampling::farahat::FarahatSession<'static>>();
+        assert_send::<crate::sampling::icd::IcdSession<'static>>();
+        assert_send::<
+            crate::sampling::adaptive_random::AdaptiveRandomSession<'static>,
+        >();
+        assert_send::<crate::coordinator::OasisPSession>();
+    }
 
     /// A scripted fake session: selects indices 0,1,2,… with scores from a
     /// list, and a fixed error-estimate schedule.

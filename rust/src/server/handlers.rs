@@ -1,0 +1,350 @@
+//! Endpoint dispatch: every route parses its payload, talks to the
+//! [`Registry`](super::registry::Registry), and renders a JSON
+//! [`Response`]. Errors are `{"error": …}` with a 4xx/5xx status; no
+//! handler panics on user input (parsers validate before constructors
+//! that `assert!`).
+
+use super::http::{Request, Response};
+use super::metrics::ServerMetrics;
+use super::protocol;
+use super::registry::{self, lock, SessionStats};
+use super::ServerState;
+use crate::util::json::Json;
+use std::sync::Arc;
+
+fn error(status: u16, msg: impl std::fmt::Display) -> Response {
+    Response::json(
+        status,
+        Json::obj(vec![("error", Json::Str(msg.to_string()))]),
+    )
+}
+
+/// Dispatch one request (see the protocol reference in [`crate::server`]).
+pub fn route(state: &Arc<ServerState>, req: &Request) -> Response {
+    ServerMetrics::inc(&state.metrics.requests);
+    let segs = req.segments();
+    let resp = match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => {
+            Response::json(200, Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        ("GET", ["metrics"]) => metrics_report(state),
+        ("GET", ["sessions"]) => list_sessions(state),
+        ("POST", ["sessions"]) => create_session(state, req),
+        ("GET", ["sessions", name]) => session_status(state, name),
+        ("POST", ["sessions", name, "step"]) => step_session(state, name, req),
+        ("GET" | "POST", ["sessions", name, "snapshot"]) => {
+            snapshot_session(state, name, req)
+        }
+        ("POST", ["sessions", name, "query"]) => query_session(state, name, req),
+        ("POST", ["sessions", name, "finish"])
+        | ("DELETE", ["sessions", name]) => finish_session(state, name, req),
+        ("POST", ["shutdown"]) => {
+            state.request_stop();
+            Response::json(200, Json::obj(vec![("stopping", Json::Bool(true))]))
+        }
+        _ => error(
+            404,
+            "no such endpoint (see the protocol reference in oasis::server)",
+        ),
+    };
+    if resp.status >= 400 {
+        ServerMetrics::inc(&state.metrics.errors);
+    }
+    resp
+}
+
+fn factor_elems(c: &crate::linalg::Mat, winv: &crate::linalg::Mat) -> usize {
+    c.data.len().saturating_add(winv.data.len())
+}
+
+/// `?factors=1` refused for factor sets whose JSON rendering would dwarf
+/// the matrices themselves (see [`protocol::MAX_FACTOR_ELEMS`]).
+fn factors_too_large(c: &crate::linalg::Mat, winv: &crate::linalg::Mat) -> Response {
+    error(
+        400,
+        format!(
+            "factors=1 refused: {} factor elements exceed the cap of {} — \
+             fetch indices only, or grow the approximation in smaller pieces",
+            factor_elems(c, winv),
+            protocol::MAX_FACTOR_ELEMS
+        ),
+    )
+}
+
+fn stats_json(name: &str, st: &SessionStats) -> Json {
+    let mut fields = vec![
+        ("name", Json::Str(name.to_string())),
+        ("method", Json::Str(st.method.clone())),
+        ("n", Json::Num(st.n as f64)),
+        ("k", Json::Num(st.k as f64)),
+        ("busy", Json::Bool(st.busy)),
+        ("steps_done", Json::Num(st.steps_done as f64)),
+        ("error_estimate", protocol::opt_num(st.error_estimate)),
+        ("selection_secs", Json::Num(st.selection_secs)),
+        ("step_latency", st.step_latency.to_json()),
+    ];
+    if let Some(r) = st.stop {
+        fields.push(("stop", Json::Str(r.as_str().to_string())));
+    }
+    if let Some(f) = &st.failed {
+        fields.push(("failed", Json::Str(f.clone())));
+    }
+    Json::obj(fields)
+}
+
+fn create_session(state: &Arc<ServerState>, req: &Request) -> Response {
+    let parsed = match protocol::parse_create(&req.body_str()) {
+        Ok(p) => p,
+        Err(e) => return error(400, e),
+    };
+    // pre-check for a clean 409; a lost creation race still errors safely
+    let duplicate = parsed
+        .name
+        .as_deref()
+        .map(|n| state.registry.get(n).is_some())
+        .unwrap_or(false);
+    match state.registry.create(parsed) {
+        Ok(handle) => {
+            ServerMetrics::inc(&state.metrics.sessions_created);
+            let st = lock(&handle.shared.stats).clone();
+            Response::json(
+                200,
+                Json::obj(vec![
+                    ("name", Json::Str(handle.name.clone())),
+                    ("method", Json::Str(st.method)),
+                    ("n", Json::Num(st.n as f64)),
+                    ("dim", Json::Num(handle.dataset.dim() as f64)),
+                    ("k", Json::Num(st.k as f64)),
+                    ("error_estimate", protocol::opt_num(st.error_estimate)),
+                ]),
+            )
+        }
+        Err(e) => error(if duplicate { 409 } else { 400 }, e),
+    }
+}
+
+fn list_sessions(state: &Arc<ServerState>) -> Response {
+    let sessions: Vec<Json> = state
+        .registry
+        .list()
+        .into_iter()
+        .map(|(name, shared)| stats_json(&name, &lock(&shared.stats).clone()))
+        .collect();
+    Response::json(200, Json::obj(vec![("sessions", Json::Arr(sessions))]))
+}
+
+fn session_status(state: &Arc<ServerState>, name: &str) -> Response {
+    match state.registry.get(name) {
+        None => error(404, format!("no session '{name}'")),
+        Some(h) => {
+            let st = lock(&h.shared.stats).clone();
+            Response::json(200, stats_json(&h.name, &st))
+        }
+    }
+}
+
+fn step_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Response {
+    let h = match state.registry.get(name) {
+        None => return error(404, format!("no session '{name}'")),
+        Some(h) => h,
+    };
+    let sreq = match protocol::parse_step(&req.body_str()) {
+        Ok(s) => s,
+        Err(e) => return error(400, e),
+    };
+    if sreq.background {
+        return match registry::step_background(&h, sreq.steps, sreq.rule) {
+            Ok(()) => Response::json(
+                202,
+                Json::obj(vec![
+                    ("accepted", Json::Bool(true)),
+                    ("name", Json::Str(h.name.clone())),
+                    ("steps", Json::Num(sreq.steps as f64)),
+                ]),
+            ),
+            Err(e) => error(410, e),
+        };
+    }
+    let result = registry::step_sync(&h, sreq.steps, sreq.rule);
+    match result {
+        Ok(rep) => {
+            let mut fields = vec![
+                ("name", Json::Str(h.name.clone())),
+                ("k", Json::Num(rep.k as f64)),
+                ("stepped", Json::Num(rep.stepped as f64)),
+                ("error_estimate", protocol::opt_num(rep.error_estimate)),
+                ("secs", Json::Num(rep.secs)),
+            ];
+            if let Some(r) = rep.stop {
+                fields.push(("stop", Json::Str(r.as_str().to_string())));
+            }
+            Response::json(200, Json::obj(fields))
+        }
+        Err(e) => {
+            // a session finished by a concurrent request is the client's
+            // race (410, like the background path), not a server fault
+            let gone = lock(&h.shared.stats).finished;
+            error(if gone { 410 } else { 500 }, e)
+        }
+    }
+}
+
+fn snapshot_session(
+    state: &Arc<ServerState>,
+    name: &str,
+    req: &Request,
+) -> Response {
+    let h = match state.registry.get(name) {
+        None => return error(404, format!("no session '{name}'")),
+        Some(h) => h,
+    };
+    let body = match protocol::parse_body(&req.body_str()) {
+        Ok(b) => b,
+        Err(e) => return error(400, e),
+    };
+    let factors = req.flag(&body, "factors");
+    // `cached=true` reuses the query cache; the default is a fresh gather
+    let cached = req.flag(&body, "cached");
+    match registry::ensure_snapshot(&h, !cached) {
+        Ok(snap) => {
+            if factors && factor_elems(&snap.c, &snap.winv) > protocol::MAX_FACTOR_ELEMS
+            {
+                return factors_too_large(&snap.c, &snap.winv);
+            }
+            ServerMetrics::inc(&state.metrics.snapshots_total);
+            let st = lock(&h.shared.stats).clone();
+            let mut fields = vec![
+                ("name", Json::Str(h.name.clone())),
+                ("n", Json::Num(snap.n() as f64)),
+                ("k", Json::Num(snap.k() as f64)),
+                ("indices", protocol::usize_arr(&snap.indices)),
+                ("error_estimate", protocol::opt_num(st.error_estimate)),
+                ("selection_secs", Json::Num(snap.selection_secs)),
+            ];
+            if factors {
+                fields.push(("c", protocol::mat_json(&snap.c)));
+                fields.push(("winv", protocol::mat_json(&snap.winv)));
+            }
+            Response::json(200, Json::obj(fields))
+        }
+        Err(e) => error(500, e),
+    }
+}
+
+fn query_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Response {
+    let h = match state.registry.get(name) {
+        None => return error(404, format!("no session '{name}'")),
+        Some(h) => h,
+    };
+    let q = match protocol::parse_query(&req.body_str()) {
+        Ok(q) => q,
+        Err(e) => return error(400, e),
+    };
+    let dim = h.dataset.dim();
+    for (i, p) in q.points.iter().enumerate() {
+        if p.len() != dim {
+            return error(
+                400,
+                format!(
+                    "query point {i} has dimension {} but the dataset has {dim}",
+                    p.len()
+                ),
+            );
+        }
+    }
+    let snap = match registry::ensure_snapshot(&h, q.refresh) {
+        Ok(s) => s,
+        Err(e) => return error(500, e),
+    };
+    let n = snap.n();
+    for &t in &q.targets {
+        if t >= n {
+            return error(400, format!("target index {t} out of range (n = {n})"));
+        }
+    }
+    let mut results = Vec::with_capacity(q.points.len());
+    for p in &q.points {
+        // b = k(z, x_Λ): only the selected points are evaluated
+        let b: Vec<f64> = snap
+            .indices
+            .iter()
+            .map(|&j| h.kernel.eval(p, h.dataset.point(j)))
+            .collect();
+        let w = snap.extension_weights(&b);
+        let mut fields = vec![("weights", protocol::num_arr(&w))];
+        if !q.targets.is_empty() {
+            let vals: Vec<f64> =
+                q.targets.iter().map(|&t| snap.extend_entry(&w, t)).collect();
+            fields.push(("kernel", protocol::num_arr(&vals)));
+        }
+        results.push(Json::obj(fields));
+    }
+    ServerMetrics::inc(&state.metrics.queries_total);
+    Response::json(
+        200,
+        Json::obj(vec![
+            ("name", Json::Str(h.name.clone())),
+            ("snapshot_k", Json::Num(snap.k() as f64)),
+            ("results", Json::Arr(results)),
+        ]),
+    )
+}
+
+fn finish_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Response {
+    // parse before removing: a malformed body must not evict the session
+    let body = match protocol::parse_body(&req.body_str()) {
+        Ok(b) => b,
+        Err(e) => return error(400, e),
+    };
+    let factors = req.flag(&body, "factors");
+    let (h, join) = match state.registry.remove(name) {
+        None => return error(404, format!("no session '{name}'")),
+        Some(x) => x,
+    };
+    let res = registry::finish(&h);
+    let _ = join.join();
+    match res {
+        Ok(approx) => {
+            // the session is already evicted; degrade to indices-only
+            // rather than building an over-cap JSON tree
+            let factors = factors
+                && factor_elems(&approx.c, &approx.winv)
+                    <= protocol::MAX_FACTOR_ELEMS;
+            ServerMetrics::inc(&state.metrics.sessions_finished);
+            let mut fields = vec![
+                ("name", Json::Str(h.name.clone())),
+                ("final", Json::Bool(true)),
+                ("n", Json::Num(approx.n() as f64)),
+                ("k", Json::Num(approx.k() as f64)),
+                ("indices", protocol::usize_arr(&approx.indices)),
+                ("selection_secs", Json::Num(approx.selection_secs)),
+            ];
+            if factors {
+                fields.push(("c", protocol::mat_json(&approx.c)));
+                fields.push(("winv", protocol::mat_json(&approx.winv)));
+            }
+            Response::json(200, Json::obj(fields))
+        }
+        Err(e) => error(500, e),
+    }
+}
+
+fn metrics_report(state: &Arc<ServerState>) -> Response {
+    let sessions: Vec<Json> = state
+        .registry
+        .list()
+        .into_iter()
+        .map(|(name, shared)| stats_json(&name, &lock(&shared.stats).clone()))
+        .collect();
+    Response::json(
+        200,
+        Json::obj(vec![
+            (
+                "uptime_secs",
+                Json::Num(state.started.elapsed().as_secs_f64()),
+            ),
+            ("server", state.metrics.to_json()),
+            ("sessions", Json::Arr(sessions)),
+        ]),
+    )
+}

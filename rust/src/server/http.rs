@@ -1,0 +1,351 @@
+//! Minimal HTTP/1.1 framing over std TCP — just enough for the JSON
+//! protocol documented in [`super`]: request line + headers +
+//! `Content-Length` bodies, keep-alive by default, no chunked encoding,
+//! no TLS. Deliberately dependency-free so the tier-1 gate stays offline.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read, Write};
+
+/// Cap on request bodies. Inline datasets can be sizable, but a bound
+/// keeps one connection from exhausting server memory.
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// Cap on one request/header line — same rationale as [`MAX_BODY_BYTES`]:
+/// `read_line` alone would grow without limit on a newline-free stream.
+pub const MAX_LINE_BYTES: usize = 8 * 1024;
+
+/// Cap on header count per request.
+pub const MAX_HEADERS: usize = 64;
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Query-string pairs (`?a=1&b`); no percent-decoding is applied —
+    /// the protocol only uses flag-like parameters.
+    pub query: BTreeMap<String, String>,
+    /// Header map, keys lowercased.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+
+    /// Did the client ask to close the connection after this exchange?
+    pub fn wants_close(&self) -> bool {
+        self.headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+
+    /// Path split into non-empty segments (`/sessions/a/step` →
+    /// `["sessions", "a", "step"]`).
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+
+    /// A boolean flag given either as a query parameter (`?key`,
+    /// `?key=1`, `?key=true`) or as a boolean body field.
+    pub fn flag(&self, body: &crate::util::json::Json, key: &str) -> bool {
+        if let Some(v) = self.query.get(key) {
+            return v.is_empty() || v == "1" || v == "true";
+        }
+        body.get(key)
+            .and_then(crate::util::json::Json::as_bool)
+            .unwrap_or(false)
+    }
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Read one `\n`-terminated line (without the `\r\n`), bounded by
+/// [`MAX_LINE_BYTES`]. `Ok(None)` on clean EOF before any byte.
+fn read_line_capped<R: BufRead>(reader: &mut R) -> std::io::Result<Option<String>> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let buf = reader.fill_buf()?;
+        if buf.is_empty() {
+            return if line.is_empty() {
+                Ok(None)
+            } else {
+                Err(bad("eof mid-line"))
+            };
+        }
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                line.extend_from_slice(&buf[..pos]);
+                reader.consume(pos + 1);
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                if line.len() > MAX_LINE_BYTES {
+                    return Err(bad("line too long"));
+                }
+                return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+            }
+            None => {
+                let len = buf.len();
+                line.extend_from_slice(buf);
+                reader.consume(len);
+                if line.len() > MAX_LINE_BYTES {
+                    return Err(bad("line too long"));
+                }
+            }
+        }
+    }
+}
+
+/// Read one request off the connection, answering `Expect: 100-continue`
+/// with the interim response on `writer` before reading the body (curl
+/// sends the header for bodies over ~1 KB — inline-points datasets —
+/// and would otherwise stall waiting for it). `Ok(None)` on clean EOF
+/// before a request line (the peer closed a kept-alive connection).
+pub fn read_request<R: BufRead, W: Write>(
+    reader: &mut R,
+    writer: &mut W,
+) -> std::io::Result<Option<Request>> {
+    let line = match read_line_capped(reader)? {
+        None => return Ok(None),
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next()) {
+        (Some(m), Some(t)) => (m.to_string(), t.to_string()),
+        _ => return Err(bad("malformed request line")),
+    };
+    let mut headers = BTreeMap::new();
+    let mut header_lines = 0usize;
+    loop {
+        let h = match read_line_capped(reader)? {
+            None => return Err(bad("eof inside headers")),
+            Some(h) => h,
+        };
+        if h.is_empty() {
+            break;
+        }
+        header_lines += 1;
+        if header_lines > MAX_HEADERS {
+            return Err(bad("too many headers"));
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v.parse().map_err(|_| bad("bad content-length"))?,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(bad("request body too large"));
+    }
+    if headers
+        .get("expect")
+        .map(|v| v.eq_ignore_ascii_case("100-continue"))
+        .unwrap_or(false)
+    {
+        write!(writer, "HTTP/1.1 100 Continue\r\n\r\n")?;
+        writer.flush()?;
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    let mut query = BTreeMap::new();
+    for pair in query_str.split('&').filter(|s| !s.is_empty()) {
+        match pair.split_once('=') {
+            Some((k, v)) => query.insert(k.to_string(), v.to_string()),
+            None => query.insert(pair.to_string(), String::new()),
+        };
+    }
+    Ok(Some(Request { method, path, query, headers, body }))
+}
+
+/// Minimal one-shot client: one request on a fresh `Connection: close`
+/// connection, returning `(status, body)`. The server never calls this —
+/// it exists so the integration tests and `examples/serve_client.rs`
+/// share one wire-level client instead of drifting copies.
+pub fn client_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: client\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("no status line in response"))?;
+    let at = raw
+        .find("\r\n\r\n")
+        .ok_or_else(|| bad("no header terminator in response"))?
+        + 4;
+    Ok((status, raw[at..].to_string()))
+}
+
+/// An HTTP response carrying a JSON body.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, body: crate::util::json::Json) -> Response {
+        Response { status, body: body.to_string() }
+    }
+
+    pub fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            202 => "Accepted",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            410 => "Gone",
+            500 => "Internal Server Error",
+            _ => "Unknown",
+        }
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W, close: bool) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: {}\r\n\r\n{}",
+            self.status,
+            self.reason(),
+            self.body.len(),
+            if close { "close" } else { "keep-alive" },
+            self.body,
+        )?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Request {
+        read_request(&mut BufReader::new(raw.as_bytes()), &mut std::io::sink())
+            .unwrap()
+            .unwrap()
+    }
+
+    #[test]
+    fn parses_request_with_body_and_query() {
+        let raw = "POST /sessions/a/step?factors=1&x HTTP/1.1\r\n\
+                   Host: localhost\r\nContent-Length: 11\r\n\r\n{\"steps\":3}";
+        let req = parse(raw);
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/sessions/a/step");
+        assert_eq!(req.segments(), vec!["sessions", "a", "step"]);
+        assert_eq!(req.query.get("factors").map(String::as_str), Some("1"));
+        assert_eq!(req.query.get("x").map(String::as_str), Some(""));
+        assert_eq!(req.body_str(), "{\"steps\":3}");
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn keep_alive_reads_sequential_requests() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\n\
+                   GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut reader = BufReader::new(raw.as_bytes());
+        let mut sink = std::io::sink();
+        let a = read_request(&mut reader, &mut sink).unwrap().unwrap();
+        assert_eq!(a.path, "/healthz");
+        let b = read_request(&mut reader, &mut sink).unwrap().unwrap();
+        assert_eq!(b.path, "/metrics");
+        assert!(b.wants_close());
+        assert!(read_request(&mut reader, &mut sink).unwrap().is_none()); // EOF
+    }
+
+    #[test]
+    fn truncated_body_errors() {
+        let raw = "POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort";
+        let err = read_request(
+            &mut BufReader::new(raw.as_bytes()),
+            &mut std::io::sink(),
+        );
+        assert!(err.is_err());
+    }
+
+    /// `Expect: 100-continue` gets the interim response before the body
+    /// is read (curl sends it for bodies over ~1 KB).
+    #[test]
+    fn expect_100_continue_is_answered() {
+        let raw = "POST /sessions HTTP/1.1\r\nExpect: 100-continue\r\n\
+                   Content-Length: 2\r\n\r\n{}";
+        let mut interim: Vec<u8> = Vec::new();
+        let req = read_request(&mut BufReader::new(raw.as_bytes()), &mut interim)
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.body_str(), "{}");
+        assert_eq!(
+            String::from_utf8(interim).unwrap(),
+            "HTTP/1.1 100 Continue\r\n\r\n"
+        );
+    }
+
+    /// Header framing is bounded: an over-long line or an unbounded
+    /// header list must error instead of growing memory.
+    #[test]
+    fn oversized_lines_and_header_floods_rejected() {
+        let mut sink = std::io::sink();
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE_BYTES + 1));
+        assert!(
+            read_request(&mut BufReader::new(long.as_bytes()), &mut sink).is_err()
+        );
+        // a newline-free stream longer than the cap errors too
+        let endless = "G".repeat(MAX_LINE_BYTES + 2);
+        assert!(read_request(&mut BufReader::new(endless.as_bytes()), &mut sink)
+            .is_err());
+        let mut flood = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 2) {
+            flood.push_str(&format!("X-{i}: v\r\n"));
+        }
+        flood.push_str("\r\n");
+        assert!(read_request(&mut BufReader::new(flood.as_bytes()), &mut sink)
+            .is_err());
+    }
+
+    #[test]
+    fn response_framing() {
+        let mut out = Vec::new();
+        Response::json(
+            200,
+            crate::util::json::Json::obj(vec![(
+                "ok",
+                crate::util::json::Json::Bool(true),
+            )]),
+        )
+        .write_to(&mut out, true)
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 11"), "{text}");
+        assert!(text.contains("Connection: close"), "{text}");
+        assert!(text.ends_with("{\"ok\":true}"), "{text}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Server-wide counters and per-session latency accounting for the
+//! `/metrics` endpoint.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free counters shared by every connection thread.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub connections: AtomicU64,
+    pub requests: AtomicU64,
+    /// 4xx/5xx responses.
+    pub errors: AtomicU64,
+    pub sessions_created: AtomicU64,
+    pub sessions_finished: AtomicU64,
+    pub snapshots_total: AtomicU64,
+    pub queries_total: AtomicU64,
+}
+
+impl ServerMetrics {
+    pub fn inc(c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(c: &AtomicU64) -> u64 {
+        c.load(Ordering::Relaxed)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("connections", Json::Num(Self::get(&self.connections) as f64)),
+            ("requests", Json::Num(Self::get(&self.requests) as f64)),
+            ("errors", Json::Num(Self::get(&self.errors) as f64)),
+            (
+                "sessions_created",
+                Json::Num(Self::get(&self.sessions_created) as f64),
+            ),
+            (
+                "sessions_finished",
+                Json::Num(Self::get(&self.sessions_finished) as f64),
+            ),
+            (
+                "snapshots_total",
+                Json::Num(Self::get(&self.snapshots_total) as f64),
+            ),
+            (
+                "queries_total",
+                Json::Num(Self::get(&self.queries_total) as f64),
+            ),
+        ])
+    }
+}
+
+/// Streaming latency summary for one session's `step` calls (updated by
+/// the session's actor thread, read by `/metrics`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub total_secs: f64,
+    pub max_secs: f64,
+    pub last_secs: f64,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, secs: f64) {
+        self.count += 1;
+        self.total_secs += secs;
+        self.max_secs = self.max_secs.max(secs);
+        self.last_secs = secs;
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_secs / self.count as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_ms", Json::Num(self.mean_secs() * 1e3)),
+            ("last_ms", Json::Num(self.last_secs * 1e3)),
+            ("max_ms", Json::Num(self.max_secs * 1e3)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary() {
+        let mut l = LatencyStats::default();
+        assert_eq!(l.mean_secs(), 0.0);
+        l.record(0.010);
+        l.record(0.030);
+        l.record(0.020);
+        assert_eq!(l.count, 3);
+        assert!((l.mean_secs() - 0.020).abs() < 1e-12);
+        assert_eq!(l.max_secs, 0.030);
+        assert_eq!(l.last_secs, 0.020);
+        let j = l.to_json();
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn counters_render() {
+        let m = ServerMetrics::default();
+        ServerMetrics::inc(&m.requests);
+        ServerMetrics::inc(&m.requests);
+        let j = m.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("errors").unwrap().as_usize(), Some(0));
+    }
+}

@@ -1,0 +1,296 @@
+//! `oasis serve` — a long-lived approximation server hosting concurrent,
+//! resumable sampler sessions over HTTP/1.1 + JSON.
+//!
+//! The paper's core claim is that oASIS selection is cheap *per step*
+//! (§III), and PR 1 turned every sampler into a resumable
+//! [`SamplerSession`](crate::sampling::SamplerSession) precisely so an
+//! approximation can be **grown** over time instead of recomputed. This
+//! module is the serving layer on top: a registry of named sessions, each
+//! hosted on its own actor thread ([`registry`]), grown a few columns per
+//! request, snapshotted and queried while it runs, and evicted when the
+//! caller is done. The server is dependency-free — std `TcpListener`
+//! ([`http`]) and the crate's own JSON ([`crate::util::json`]).
+//!
+//! ```no_run
+//! use oasis::server::Server;
+//! let server = Server::bind("127.0.0.1:7437").unwrap();
+//! println!("listening on http://{}", server.local_addr().unwrap());
+//! server.run().unwrap(); // serves until POST /shutdown
+//! ```
+//!
+//! # Protocol reference
+//!
+//! Every request and response body is JSON (`Content-Type:
+//! application/json`); errors are `{"error": "<message>"}` with a 4xx/5xx
+//! status. Boolean options can be sent either as body fields or as query
+//! parameters (`?factors=1`).
+//!
+//! ## `POST /sessions` — create a session
+//!
+//! ```json
+//! {
+//!   "name": "train-7",                 // optional; auto-generated "sN"
+//!   "dataset": {                        // optional; default two-moons
+//!     "generator": "two-moons",         // or abalone|borg|mnist|salinas|
+//!                                       //    lightfield|tiny-images
+//!     "n": 2000, "seed": 7,
+//!     "noise": 0.05,                    // two-moons only
+//!     "dim": 0                          // 0 = generator default
+//!   },
+//!   // …or inline data: "dataset": {"points": [[x0,…], [x1,…], …]}
+//!   "kernel": {                         // optional; default gaussian
+//!     "type": "gaussian",               // or linear|laplacian|polynomial
+//!     "sigma": 0.5,                     // explicit σ…
+//!     "sigma_fraction": 0.05            // …or fraction of max distance
+//!   },
+//!   "method": "oasis",                  // or sis|farahat|icd|
+//!                                       //    adaptive-random|oasis-p
+//!   "max_cols": 450, "init_cols": 10,   // sampler parameters
+//!   "tol": 1e-12, "seed": 7,
+//!   "batch": 10,                        // adaptive-random only
+//!   "workers": 4                        // oasis-p only
+//! }
+//! ```
+//!
+//! → `{"name", "method", "n", "dim", "k", "error_estimate"}`. `409` if the
+//! name exists. Note `farahat` and `adaptive-random` materialize the full
+//! n×n residual at creation — use them for explicit-scale datasets only.
+//! Serving-sanity caps apply (see [`protocol`]'s `MAX_*` constants):
+//! dataset size, dimensionality, worker count, n×n-residual methods, and
+//! n×max_cols session state are all bounded so one request cannot abort
+//! the server with an oversized allocation.
+//!
+//! ## `POST /sessions/{name}/step` — grow the approximation
+//!
+//! ```json
+//! {
+//!   "steps": 25,            // max selections this batch (default 1, or
+//!                           // unbounded if "budget" is given)
+//!   "target_err": 1e-3,     // optional any-of stopping criteria,
+//!   "deadline_ms": 500,     // evaluated before every step in this
+//!   "score_below": 1e-9,    // order (first match names the stop)
+//!   "budget": 450,          // total-k cap (counts seed columns)
+//!   "background": false     // true → 202 now, work proceeds on the
+//!                           // session's actor thread
+//! }
+//! ```
+//!
+//! → `{"name", "k", "stepped", "error_estimate", "secs", "stop"?}` where
+//! `stop` ∈ `budget|score-tol|error-target|deadline|exhausted` when the
+//! batch ended early. Steps on one session serialize in arrival order;
+//! different sessions step in parallel.
+//!
+//! ## `GET /sessions/{name}/snapshot` — current factors, mid-run
+//!
+//! Options: `factors` (include `"c"`/`"winv"` as
+//! `{"rows","cols","data"}`), `cached` (reuse the last snapshot instead
+//! of gathering a fresh one). → `{"name", "n", "k", "indices",
+//! "error_estimate", "selection_secs", "c"?, "winv"?}`. The run can keep
+//! stepping afterwards — snapshots are consistent prefixes.
+//!
+//! ## `POST /sessions/{name}/query` — out-of-sample extension
+//!
+//! ```json
+//! {"points": [[x,…], …], "targets": [0, 17], "refresh": false}
+//! ```
+//!
+//! For each query point z the server computes `b = k(z, x_Λ)` against the
+//! live snapshot's selected points and returns the Nyström extension
+//! weights `w = W⁻¹ b` (length k), plus `ĝ(z, i) = wᵀC(i,:)` for each
+//! requested target row. Only the k selected points are touched — O(k²)
+//! per point. `refresh` forces a fresh snapshot first; otherwise the
+//! cached one is reused across queries.
+//!
+//! → `{"name", "snapshot_k", "results": [{"weights": […], "kernel": […]?}]}`
+//!
+//! ## Other endpoints
+//!
+//! | endpoint | effect |
+//! |---|---|
+//! | `GET /sessions` | `{"sessions": [status…]}` (name-sorted) |
+//! | `GET /sessions/{name}` | status: `k`, `busy`, `steps_done`, `error_estimate`, `step_latency`, `stop`?, `failed`? |
+//! | `POST /sessions/{name}/finish` (or `DELETE /sessions/{name}`) | final factors + eviction; options: `factors` |
+//! | `GET /metrics` | `{"uptime_secs", "server": counters, "sessions": [status…]}` |
+//! | `GET /healthz` | `{"ok": true}` |
+//! | `POST /shutdown` | stop accepting, tear down all sessions |
+//!
+//! ## Consistency guarantees
+//!
+//! A session's selection sequence is bit-identical to the equivalent
+//! offline run (`session(...)` + `run_to_completion`) with the same
+//! dataset/kernel/method parameters: the server adds no randomness and
+//! every snapshot is a consistent k-column prefix of that sequence —
+//! which is what the socket-level acceptance test in
+//! `rust/tests/server.rs` asserts.
+
+pub mod handlers;
+pub mod http;
+pub mod metrics;
+pub mod protocol;
+pub mod registry;
+
+pub use http::{Request, Response};
+pub use metrics::ServerMetrics;
+pub use registry::{Registry, SessionHandle};
+
+use crate::Result;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared server state: the session registry, counters, and the stop flag.
+pub struct ServerState {
+    pub registry: Registry,
+    pub metrics: ServerMetrics,
+    pub started: Instant,
+    stop: AtomicBool,
+}
+
+impl ServerState {
+    fn new() -> ServerState {
+        ServerState {
+            registry: Registry::new(),
+            metrics: ServerMetrics::default(),
+            started: Instant::now(),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Ask the accept loop to exit (what `POST /shutdown` does).
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// The `oasis serve` server: a bound listener plus shared state.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind (e.g. `"127.0.0.1:7437"`, or port `0` for an ephemeral port —
+    /// read it back with [`local_addr`](Server::local_addr)).
+    pub fn bind(addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        // non-blocking accept so the stop flag is polled between peers
+        listener.set_nonblocking(true)?;
+        Ok(Server { listener, state: Arc::new(ServerState::new()) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A handle to the shared state (for in-process callers/tests: request
+    /// a stop, inspect metrics, drive the registry directly).
+    pub fn state(&self) -> Arc<ServerState> {
+        self.state.clone()
+    }
+
+    /// Serve until [`ServerState::request_stop`] (usually `POST
+    /// /shutdown`), then tear down every session. One thread per
+    /// connection; connections are kept alive until the peer closes or
+    /// sends `Connection: close`.
+    pub fn run(self) -> Result<()> {
+        let mut consecutive_errors = 0u32;
+        loop {
+            // checked every iteration — a stream of incoming connections
+            // must not postpone shutdown past the current accept
+            if self.state.stopping() {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    consecutive_errors = 0;
+                    ServerMetrics::inc(&self.state.metrics.connections);
+                    // accepted sockets must block; the listener's
+                    // non-blocking flag is not inherited on all platforms
+                    let _ = stream.set_nonblocking(false);
+                    let state = self.state.clone();
+                    std::thread::spawn(move || handle_conn(stream, state));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    consecutive_errors = 0;
+                    if self.state.stopping() {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // transient accept errors (a peer that RSTs before
+                    // accept → ECONNABORTED, fd exhaustion → EMFILE) must
+                    // not take down every hosted session; back off and
+                    // retry, giving up only on persistent failure
+                    if self.state.stopping() {
+                        break;
+                    }
+                    consecutive_errors += 1;
+                    if consecutive_errors >= 100 {
+                        self.state.registry.shutdown();
+                        return Err(e.into());
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        self.state.registry.shutdown();
+        Ok(())
+    }
+}
+
+/// One connection: read requests until EOF/close, dispatch each.
+fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
+    // bound idle keep-alive connections
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = stream;
+    loop {
+        match http::read_request(&mut reader, &mut writer) {
+            Ok(Some(req)) => {
+                let resp = handlers::route(&state, &req);
+                // check the stop flag *after* routing so /shutdown closes
+                // its own connection
+                let close = req.wants_close() || state.stopping();
+                if resp.write_to(&mut writer, close).is_err() || close {
+                    return;
+                }
+            }
+            Ok(None) => return, // peer closed between requests
+            Err(e) => {
+                // an idle keep-alive connection hitting the read timeout
+                // is closed silently — writing an unsolicited 400 here
+                // could be mistaken for the response to the client's next
+                // pipelined request
+                let idle = matches!(
+                    e.kind(),
+                    std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                );
+                if !idle {
+                    let resp = Response::json(
+                        400,
+                        crate::util::json::Json::obj(vec![(
+                            "error",
+                            crate::util::json::Json::Str(
+                                "malformed HTTP request".into(),
+                            ),
+                        )]),
+                    );
+                    let _ = resp.write_to(&mut writer, true);
+                }
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,714 @@
+//! Wire-format types for `oasis serve`: request-payload parsing,
+//! validation, and the JSON serialization helpers shared by the
+//! handlers. The endpoint-by-endpoint protocol reference lives in the
+//! [`server`](crate::server) module docs.
+//!
+//! Every parser here validates before constructing — sampler
+//! constructors `assert!` on bad arguments, and a panic inside a
+//! connection or actor thread would drop the request without a response,
+//! so malformed input must be rejected with a clean 400 first.
+
+use crate::data::{generators, Dataset};
+use crate::kernels::{Gaussian, Kernel, Laplacian, Linear, Polynomial};
+use crate::linalg::Mat;
+use crate::sampling::{StoppingCriterion, StoppingRule};
+use crate::util::json::Json;
+use crate::Result;
+use crate::{anyhow, bail};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serving-sanity caps: request bodies are already bounded
+/// ([`MAX_BODY_BYTES`](super::http::MAX_BODY_BYTES)), so a tiny request
+/// must not be able to trigger an unbounded server-side allocation or
+/// thread storm either. Generous for real workloads, fatal for abuse.
+pub const MAX_DATASET_N: usize = 2_000_000;
+pub const MAX_DATASET_DIM: usize = 4_096;
+pub const MAX_WORKERS: usize = 256;
+/// Cap on generated-dataset storage n × dim (100e6 f64 ≈ 800 MB) —
+/// checked against [`generators::dim_by_name`] *before* allocating.
+pub const MAX_DATASET_ELEMS: u128 = 100_000_000;
+/// Residual-materializing methods (`farahat`, `adaptive-random`) hold a
+/// dense n×n matrix; cap their n (16_384² × 8 B ≈ 2.1 GB).
+pub const MAX_RESIDUAL_N: usize = 16_384;
+/// Cap on n × max_cols session state (C plus W⁻¹ working sets;
+/// 200e6 f64 ≈ 1.6 GB).
+pub const MAX_STATE_ELEMS: u128 = 200_000_000;
+/// Cap on factor elements shipped by `?factors=1` responses: the JSON
+/// tree costs ~3× the matrix itself, so a legal-sized session's factors
+/// could otherwise OOM the server on serialization alone (10e6 numbers
+/// ≈ a 200 MB response).
+pub const MAX_FACTOR_ELEMS: usize = 10_000_000;
+
+/// Hosted sampling method. All but `OasisP` are the sequential
+/// [`SamplerSession`](crate::sampling::SamplerSession) implementations;
+/// `OasisP` hosts the distributed leader (whose worker threads live
+/// inside the session's actor thread).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Oasis,
+    Sis,
+    Farahat,
+    Icd,
+    AdaptiveRandom,
+    OasisP,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "oasis" => Method::Oasis,
+            "sis" => Method::Sis,
+            "farahat" => Method::Farahat,
+            "icd" => Method::Icd,
+            "adaptive-random" => Method::AdaptiveRandom,
+            "oasis-p" => Method::OasisP,
+            other => bail!(
+                "unknown method '{other}' (expected oasis|sis|farahat|icd|\
+                 adaptive-random|oasis-p)"
+            ),
+        })
+    }
+}
+
+/// Where the session's data comes from.
+#[derive(Clone, Debug)]
+pub enum DatasetSpec {
+    /// One of the crate's deterministic generators. `dim` is 0 for the
+    /// generator's default dimensionality.
+    Generator { name: String, n: usize, seed: u64, noise: f64, dim: usize },
+    /// Points shipped inline in the request body.
+    Points(Vec<Vec<f64>>),
+}
+
+impl DatasetSpec {
+    /// Consumes the spec so inline point rows move into the [`Dataset`]
+    /// instead of being copied (they can be body-cap sized).
+    pub fn build(self) -> Result<Dataset> {
+        Ok(match self {
+            // inline points are bounded by the request-body cap
+            DatasetSpec::Points(rows) => Dataset::from_rows(rows),
+            DatasetSpec::Generator { name, n, seed, noise, dim } => {
+                let d = generators::dim_by_name(&name, dim)
+                    .ok_or_else(|| anyhow!("unknown dataset generator '{name}'"))?;
+                let elems = (n as u128) * (d as u128);
+                if elems > MAX_DATASET_ELEMS {
+                    bail!(
+                        "dataset n×dim = {elems} exceeds the serving cap of \
+                         {MAX_DATASET_ELEMS} elements"
+                    );
+                }
+                generators::by_name(&name, n, dim, noise, seed)
+                    .ok_or_else(|| anyhow!("unknown dataset generator '{name}'"))?
+            }
+        })
+    }
+}
+
+/// Which kernel the session evaluates.
+#[derive(Clone, Debug)]
+pub enum KernelSpec {
+    Gaussian { sigma: Option<f64>, sigma_fraction: f64 },
+    Linear,
+    Laplacian { sigma: f64 },
+    Polynomial { degree: u32, offset: f64 },
+}
+
+impl KernelSpec {
+    pub fn build(&self, ds: &Dataset) -> Arc<dyn Kernel + Send + Sync> {
+        match self {
+            KernelSpec::Gaussian { sigma: Some(s), .. } => {
+                Arc::new(Gaussian::new(*s))
+            }
+            KernelSpec::Gaussian { sigma: None, sigma_fraction } => {
+                Arc::new(Gaussian::with_sigma_fraction(ds, *sigma_fraction))
+            }
+            KernelSpec::Linear => Arc::new(Linear),
+            KernelSpec::Laplacian { sigma } => Arc::new(Laplacian::new(*sigma)),
+            KernelSpec::Polynomial { degree, offset } => {
+                Arc::new(Polynomial { degree: *degree, offset: *offset })
+            }
+        }
+    }
+}
+
+/// Sampler parameters (top-level keys of the create payload; unused keys
+/// are ignored by methods that do not need them).
+#[derive(Clone, Debug)]
+pub struct MethodSpec {
+    pub method: Method,
+    pub max_cols: usize,
+    pub init_cols: usize,
+    pub tol: f64,
+    pub seed: u64,
+    /// adaptive-random deflation batch.
+    pub batch: usize,
+    /// oasis-p worker threads.
+    pub workers: usize,
+}
+
+/// Parsed `POST /sessions` payload.
+#[derive(Clone, Debug)]
+pub struct CreateRequest {
+    pub name: Option<String>,
+    pub dataset: DatasetSpec,
+    pub kernel: KernelSpec,
+    pub method: MethodSpec,
+}
+
+/// Parsed `POST /sessions/{name}/step` payload.
+#[derive(Clone, Debug)]
+pub struct StepRequest {
+    /// Maximum number of `step()` calls in this batch.
+    pub steps: usize,
+    /// Extra any-of stopping criteria evaluated before every step.
+    pub rule: StoppingRule,
+    /// Enqueue on the session's actor thread and return 202 immediately.
+    pub background: bool,
+}
+
+/// Parsed `POST /sessions/{name}/query` payload.
+#[derive(Clone, Debug)]
+pub struct QueryRequest {
+    pub points: Vec<Vec<f64>>,
+    /// Row indices i for which to return ĝ(z, i).
+    pub targets: Vec<usize>,
+    /// Take a fresh snapshot instead of reusing the cached one.
+    pub refresh: bool,
+}
+
+/// Parse a request body as a JSON object; an empty body means `{}`.
+pub fn parse_body(body: &str) -> Result<Json> {
+    let trimmed = body.trim();
+    if trimmed.is_empty() {
+        return Ok(Json::Obj(Default::default()));
+    }
+    let j = Json::parse(trimmed).map_err(|e| anyhow!("invalid JSON body: {e}"))?;
+    if j.as_obj().is_none() {
+        bail!("request body must be a JSON object");
+    }
+    Ok(j)
+}
+
+/// Field access that treats an explicit JSON `null` as absent — clients
+/// that serialize unset options as `null` must not trip presence checks
+/// (a `"deadline_ms": null` must not become a zero deadline).
+fn field<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j.get(key) {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v),
+    }
+}
+
+fn get_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match field(j, key) {
+        None => Ok(default),
+        Some(v) => {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("'{key}' must be a number"))?;
+            if !x.is_finite() {
+                bail!("'{key}' must be finite");
+            }
+            Ok(x)
+        }
+    }
+}
+
+fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match field(j, key) {
+        None => Ok(default),
+        Some(v) => {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("'{key}' must be a number"))?;
+            if !x.is_finite() || x < 0.0 || x.fract() != 0.0 || x > 1e15 {
+                bail!("'{key}' must be a non-negative integer");
+            }
+            Ok(x as usize)
+        }
+    }
+}
+
+fn get_u64(j: &Json, key: &str, default: u64) -> Result<u64> {
+    Ok(get_usize(j, key, default as usize)? as u64)
+}
+
+fn get_bool(j: &Json, key: &str, default: bool) -> Result<bool> {
+    match field(j, key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| anyhow!("'{key}' must be a boolean")),
+    }
+}
+
+fn get_str(j: &Json, key: &str, default: &str) -> Result<String> {
+    match field(j, key) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("'{key}' must be a string")),
+    }
+}
+
+/// Session names appear in URLs and thread names: short and URL-safe.
+fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() || name.len() > 64 {
+        bail!("session name must be 1–64 characters");
+    }
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+    {
+        bail!("session name may only contain [A-Za-z0-9._-]");
+    }
+    Ok(())
+}
+
+fn parse_dataset(j: &Json) -> Result<DatasetSpec> {
+    let d = match j.get("dataset") {
+        None => {
+            return Ok(DatasetSpec::Generator {
+                name: "two-moons".into(),
+                n: 2000,
+                seed: 7,
+                noise: 0.05,
+                dim: 0,
+            })
+        }
+        Some(d) => d,
+    };
+    if d.as_obj().is_none() {
+        bail!("'dataset' must be an object");
+    }
+    if let Some(points) = d.get("points") {
+        let arr = points
+            .as_arr()
+            .ok_or_else(|| anyhow!("'dataset.points' must be an array"))?;
+        if arr.is_empty() {
+            bail!("'dataset.points' must not be empty");
+        }
+        let mut rows = Vec::with_capacity(arr.len());
+        let mut dim = None;
+        for (i, row) in arr.iter().enumerate() {
+            let row = row
+                .as_arr()
+                .ok_or_else(|| anyhow!("point {i} must be an array of numbers"))?;
+            let mut out = Vec::with_capacity(row.len());
+            for v in row {
+                let x = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("point {i} has a non-number entry"))?;
+                if !x.is_finite() {
+                    bail!("point {i} has a non-finite entry");
+                }
+                out.push(x);
+            }
+            match dim {
+                None => {
+                    if out.is_empty() {
+                        bail!("points must have dimension ≥ 1");
+                    }
+                    dim = Some(out.len());
+                }
+                Some(d) if d != out.len() => {
+                    bail!("point {i} has dimension {} but point 0 has {d}", out.len())
+                }
+                _ => {}
+            }
+            rows.push(out);
+        }
+        return Ok(DatasetSpec::Points(rows));
+    }
+    let n = get_usize(d, "n", 2000)?;
+    if n == 0 || n > MAX_DATASET_N {
+        bail!("'dataset.n' must be in 1..={MAX_DATASET_N}");
+    }
+    let dim = get_usize(d, "dim", 0)?;
+    if dim > MAX_DATASET_DIM {
+        bail!("'dataset.dim' must be ≤ {MAX_DATASET_DIM}");
+    }
+    Ok(DatasetSpec::Generator {
+        name: get_str(d, "generator", "two-moons")?,
+        n,
+        seed: get_u64(d, "seed", 7)?,
+        noise: get_f64(d, "noise", 0.05)?,
+        dim,
+    })
+}
+
+fn parse_kernel(j: &Json) -> Result<KernelSpec> {
+    let k = match j.get("kernel") {
+        None => {
+            return Ok(KernelSpec::Gaussian { sigma: None, sigma_fraction: 0.05 })
+        }
+        Some(k) => k,
+    };
+    if k.as_obj().is_none() {
+        bail!("'kernel' must be an object");
+    }
+    let t = get_str(k, "type", "gaussian")?;
+    Ok(match t.as_str() {
+        "gaussian" => {
+            let sigma = match field(k, "sigma") {
+                None => None,
+                Some(v) => {
+                    let s = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("'kernel.sigma' must be a number"))?;
+                    if !(s.is_finite() && s > 0.0) {
+                        bail!("'kernel.sigma' must be > 0");
+                    }
+                    Some(s)
+                }
+            };
+            let frac = get_f64(k, "sigma_fraction", 0.05)?;
+            if !(frac > 0.0) {
+                bail!("'kernel.sigma_fraction' must be > 0");
+            }
+            KernelSpec::Gaussian { sigma, sigma_fraction: frac }
+        }
+        "linear" => KernelSpec::Linear,
+        "laplacian" => {
+            let sigma = get_f64(k, "sigma", 1.0)?;
+            if !(sigma > 0.0) {
+                bail!("'kernel.sigma' must be > 0");
+            }
+            KernelSpec::Laplacian { sigma }
+        }
+        "polynomial" => KernelSpec::Polynomial {
+            degree: get_usize(k, "degree", 2)?.min(64) as u32,
+            offset: get_f64(k, "offset", 1.0)?,
+        },
+        other => bail!(
+            "unknown kernel type '{other}' (expected gaussian|linear|\
+             laplacian|polynomial)"
+        ),
+    })
+}
+
+/// Parse a `POST /sessions` body.
+pub fn parse_create(body: &str) -> Result<CreateRequest> {
+    let j = parse_body(body)?;
+    let name = match field(&j, "name") {
+        None => None,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("'name' must be a string"))?;
+            validate_name(s)?;
+            Some(s.to_string())
+        }
+    };
+    let dataset = parse_dataset(&j)?;
+    let kernel = parse_kernel(&j)?;
+    let method = Method::parse(&get_str(&j, "method", "oasis")?)?;
+    let max_cols = get_usize(&j, "max_cols", 450)?;
+    if max_cols == 0 {
+        bail!("'max_cols' must be ≥ 1");
+    }
+    let init_cols = get_usize(&j, "init_cols", 10.min(max_cols))?;
+    if init_cols == 0 || init_cols > max_cols {
+        bail!("'init_cols' must be in 1..=max_cols");
+    }
+    let tol = get_f64(&j, "tol", 1e-12)?;
+    if tol < 0.0 {
+        bail!("'tol' must be ≥ 0");
+    }
+    let batch = get_usize(&j, "batch", 10)?;
+    if batch == 0 {
+        bail!("'batch' must be ≥ 1");
+    }
+    let workers = get_usize(&j, "workers", 4)?;
+    if workers == 0 || workers > MAX_WORKERS {
+        bail!("'workers' must be in 1..={MAX_WORKERS}");
+    }
+    Ok(CreateRequest {
+        name,
+        dataset,
+        kernel,
+        method: MethodSpec {
+            method,
+            max_cols,
+            init_cols,
+            tol,
+            seed: get_u64(&j, "seed", 7)?,
+            batch,
+            workers,
+        },
+    })
+}
+
+/// Parse a `POST /sessions/{name}/step` body. Criteria are assembled in
+/// the same order as the CLI (`target_err`, `deadline_ms`, `score_below`,
+/// then `budget`) so the first-listed reason wins ties.
+pub fn parse_step(body: &str) -> Result<StepRequest> {
+    let j = parse_body(body)?;
+    let mut rule = StoppingRule::new();
+    if field(&j, "target_err").is_some() {
+        let t = get_f64(&j, "target_err", 0.0)?; // finite or 400
+        rule = rule.with(StoppingCriterion::ErrorBelow(t));
+    }
+    if field(&j, "deadline_ms").is_some() {
+        let ms = get_u64(&j, "deadline_ms", 0)?;
+        rule = rule.with(StoppingCriterion::Deadline(Duration::from_millis(ms)));
+    }
+    if field(&j, "score_below").is_some() {
+        let s = get_f64(&j, "score_below", 0.0)?; // finite or 400
+        rule = rule.with(StoppingCriterion::ScoreBelow(s));
+    }
+    let budget = match field(&j, "budget") {
+        None => None,
+        Some(_) => {
+            let b = get_usize(&j, "budget", 0)?;
+            rule = rule.with(StoppingCriterion::ColumnBudget(b));
+            Some(b)
+        }
+    };
+    // with an explicit budget the batch may run all the way to it; the
+    // bare default is one step per request
+    let default_steps = if budget.is_some() { 1_000_000 } else { 1 };
+    let steps = get_usize(&j, "steps", default_steps)?;
+    if steps == 0 || steps > 1_000_000 {
+        bail!("'steps' must be in 1..=1000000");
+    }
+    Ok(StepRequest {
+        steps,
+        rule,
+        background: get_bool(&j, "background", false)?,
+    })
+}
+
+/// Parse a `POST /sessions/{name}/query` body.
+pub fn parse_query(body: &str) -> Result<QueryRequest> {
+    let j = parse_body(body)?;
+    let pts = j
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("'points' (array of points) is required"))?;
+    if pts.is_empty() {
+        bail!("'points' must not be empty");
+    }
+    let mut points = Vec::with_capacity(pts.len());
+    for (i, p) in pts.iter().enumerate() {
+        let row = p
+            .as_arr()
+            .ok_or_else(|| anyhow!("query point {i} must be an array"))?;
+        let mut out = Vec::with_capacity(row.len());
+        for v in row {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("query point {i} has a non-number entry"))?;
+            if !x.is_finite() {
+                bail!("query point {i} has a non-finite entry");
+            }
+            out.push(x);
+        }
+        points.push(out);
+    }
+    let targets = match j.get("targets") {
+        None => Vec::new(),
+        Some(t) => {
+            let arr = t
+                .as_arr()
+                .ok_or_else(|| anyhow!("'targets' must be an array of indices"))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for v in arr {
+                match v.as_f64() {
+                    Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 => {
+                        out.push(x as usize)
+                    }
+                    _ => bail!("'targets' entries must be non-negative integers"),
+                }
+            }
+            out
+        }
+    };
+    Ok(QueryRequest {
+        points,
+        targets,
+        refresh: get_bool(&j, "refresh", false)?,
+    })
+}
+
+pub fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+pub fn num_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+pub fn opt_num(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => Json::Num(v),
+        None => Json::Null,
+    }
+}
+
+/// `{"rows": r, "cols": c, "data": [row-major flat]}`.
+pub fn mat_json(m: &Mat) -> Json {
+    Json::obj(vec![
+        ("rows", Json::Num(m.rows as f64)),
+        ("cols", Json::Num(m.cols as f64)),
+        ("data", num_arr(&m.data)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_defaults() {
+        let req = parse_create("{}").unwrap();
+        assert!(req.name.is_none());
+        assert_eq!(req.method.method, Method::Oasis);
+        assert_eq!(req.method.max_cols, 450);
+        assert_eq!(req.method.init_cols, 10);
+        match req.dataset {
+            DatasetSpec::Generator { ref name, n, .. } => {
+                assert_eq!(name, "two-moons");
+                assert_eq!(n, 2000);
+            }
+            _ => panic!("expected generator default"),
+        }
+        match req.kernel {
+            KernelSpec::Gaussian { sigma: None, sigma_fraction } => {
+                assert_eq!(sigma_fraction, 0.05)
+            }
+            ref k => panic!("unexpected kernel {k:?}"),
+        }
+    }
+
+    #[test]
+    fn create_full_payload() {
+        let body = r#"{
+            "name": "train-7",
+            "dataset": {"generator": "two-moons", "n": 300, "seed": 42},
+            "kernel": {"type": "gaussian", "sigma_fraction": 0.1},
+            "method": "farahat",
+            "max_cols": 40, "init_cols": 3, "tol": 1e-10, "seed": 5
+        }"#;
+        let req = parse_create(body).unwrap();
+        assert_eq!(req.name.as_deref(), Some("train-7"));
+        assert_eq!(req.method.method, Method::Farahat);
+        assert_eq!(req.method.max_cols, 40);
+        assert_eq!(req.method.seed, 5);
+    }
+
+    #[test]
+    fn create_inline_points() {
+        let body = r#"{"dataset": {"points": [[0,0],[1,0],[0,1]]}}"#;
+        let req = parse_create(body).unwrap();
+        match req.dataset {
+            DatasetSpec::Points(ref rows) => {
+                assert_eq!(rows.len(), 3);
+                assert_eq!(rows[1], vec![1.0, 0.0]);
+            }
+            _ => panic!("expected inline points"),
+        }
+        let ds = req.dataset.build().unwrap();
+        assert_eq!((ds.n(), ds.dim()), (3, 2));
+    }
+
+    /// One request must not be able to abort the server with an
+    /// unbounded allocation or thread storm.
+    #[test]
+    fn create_enforces_serving_caps() {
+        assert!(parse_create(r#"{"dataset": {"n": 1e9}}"#).is_err());
+        assert!(parse_create(r#"{"dataset": {"dim": 100000}}"#).is_err());
+        assert!(parse_create(r#"{"workers": 100000}"#).is_err());
+        // at the cap is fine
+        assert!(parse_create(&format!(
+            r#"{{"dataset": {{"n": {MAX_DATASET_N}}}, "workers": {MAX_WORKERS}}}"#
+        ))
+        .is_ok());
+        // n and dim individually legal but n×dim over the element cap is
+        // rejected at build time, before any allocation
+        let big = parse_create(
+            r#"{"dataset": {"generator": "mnist", "n": 200000, "dim": 4096}}"#,
+        )
+        .unwrap();
+        assert!(big.dataset.build().is_err());
+        // …while the same generator at sane scale builds
+        let ok = parse_create(r#"{"dataset": {"generator": "mnist", "n": 50}}"#)
+            .unwrap();
+        assert_eq!(ok.dataset.build().unwrap().dim(), 784);
+    }
+
+    #[test]
+    fn create_rejects_bad_input() {
+        assert!(parse_create("not json").is_err());
+        assert!(parse_create(r#"{"name": "has space"}"#).is_err());
+        assert!(parse_create(r#"{"method": "magic"}"#).is_err());
+        assert!(parse_create(r#"{"max_cols": 0}"#).is_err());
+        assert!(parse_create(r#"{"max_cols": 5, "init_cols": 9}"#).is_err());
+        assert!(parse_create(r#"{"dataset": {"points": [[1,2],[3]]}}"#).is_err());
+        assert!(parse_create(r#"{"dataset": {"points": []}}"#).is_err());
+        assert!(parse_create(r#"{"kernel": {"type": "gaussian", "sigma": -1}}"#)
+            .is_err());
+        assert!(parse_create(r#"{"dataset": {"generator": "nope"}}"#)
+            .map(|r| r.dataset.build())
+            .unwrap()
+            .is_err());
+    }
+
+    #[test]
+    fn step_defaults_and_rule_order() {
+        let s = parse_step("").unwrap();
+        assert_eq!(s.steps, 1);
+        assert!(s.rule.criteria().is_empty());
+        assert!(!s.background);
+
+        let s = parse_step(
+            r#"{"steps": 25, "target_err": 0.1, "deadline_ms": 500,
+                "budget": 80, "background": true}"#,
+        )
+        .unwrap();
+        assert_eq!(s.steps, 25);
+        assert!(s.background);
+        assert_eq!(
+            s.rule.criteria(),
+            &[
+                StoppingCriterion::ErrorBelow(0.1),
+                StoppingCriterion::Deadline(Duration::from_millis(500)),
+                StoppingCriterion::ColumnBudget(80),
+            ]
+        );
+    }
+
+    #[test]
+    fn step_budget_without_steps_runs_to_budget() {
+        let s = parse_step(r#"{"budget": 30}"#).unwrap();
+        assert_eq!(s.steps, 1_000_000);
+        assert_eq!(s.rule.criteria(), &[StoppingCriterion::ColumnBudget(30)]);
+    }
+
+    /// Clients that serialize unset options as `null` must get the same
+    /// behavior as omitting them — not a zero deadline/budget that stops
+    /// the batch before its first step.
+    #[test]
+    fn step_null_fields_mean_absent() {
+        let s = parse_step(
+            r#"{"steps": 9, "deadline_ms": null, "budget": null,
+                "target_err": null, "score_below": null}"#,
+        )
+        .unwrap();
+        assert_eq!(s.steps, 9);
+        assert!(s.rule.criteria().is_empty());
+    }
+
+    #[test]
+    fn query_parses_points_and_targets() {
+        let q = parse_query(r#"{"points": [[0.5, 0.5]], "targets": [0, 7]}"#)
+            .unwrap();
+        assert_eq!(q.points, vec![vec![0.5, 0.5]]);
+        assert_eq!(q.targets, vec![0, 7]);
+        assert!(!q.refresh);
+        assert!(parse_query("{}").is_err());
+        assert!(parse_query(r#"{"points": [[1], [2]], "targets": [-1]}"#).is_err());
+    }
+}

@@ -1,0 +1,686 @@
+//! The session registry: named, concurrent, resumable sampler sessions.
+//!
+//! ## Why an actor thread per session
+//!
+//! The sequential sampler sessions borrow their
+//! [`ColumnOracle`](crate::sampling::ColumnOracle) (and through it the
+//! dataset and kernel), so a live session cannot hop between
+//! request-handler threads. Each hosted session therefore runs on a
+//! dedicated **actor thread** that keeps the dataset and kernel alive via
+//! `Arc`, constructs the oracle and session on its own stack, and
+//! serializes commands received over a channel: stepping, snapshots and
+//! finish all execute on that thread, while request handlers only ever
+//! exchange owned `Send` values ([`StepReport`], `Arc<NystromApprox>`).
+//! This also gives per-session mutual exclusion for free — two clients
+//! stepping the same session are simply queued in arrival order — while
+//! distinct sessions run fully in parallel.
+//!
+//! Cheap read paths never touch the actor: every actor mirrors its
+//! externally visible state into a shared [`SessionShared`] (stats +
+//! cached snapshot) that `/metrics`, `GET /sessions/{name}` and queries
+//! read lock-only.
+
+use super::metrics::LatencyStats;
+use super::protocol::{CreateRequest, Method, MethodSpec};
+use crate::coordinator::{OasisPConfig, OasisPSession};
+use crate::data::Dataset;
+use crate::kernels::Kernel;
+use crate::nystrom::NystromApprox;
+use crate::sampling::{
+    adaptive_random::AdaptiveRandom, farahat::Farahat, icd::IncompleteCholesky,
+    oasis::Oasis, sis::Sis, ImplicitOracle, SamplerSession, StepOutcome,
+    StopReason, StoppingRule,
+};
+use crate::Result;
+use crate::{anyhow, bail};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Non-poisoning lock helper: a panicked writer must not take the whole
+/// server down with it.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Externally visible state of one hosted session, mirrored by its actor
+/// thread after every step batch (and per step for latencies).
+#[derive(Clone, Debug, Default)]
+pub struct SessionStats {
+    /// Method name as reported by the session (e.g. "oASIS").
+    pub method: String,
+    pub n: usize,
+    /// Columns selected so far (including seed columns).
+    pub k: usize,
+    pub error_estimate: Option<f64>,
+    /// Most recent external/internal stop, if any (a stopped session can
+    /// still be stepped further — rules are per-request).
+    pub stop: Option<StopReason>,
+    /// An actor is currently inside a step batch.
+    pub busy: bool,
+    /// Finish was processed; the session is gone.
+    pub finished: bool,
+    /// Adaptive selections performed over the session's lifetime.
+    pub steps_done: u64,
+    /// The session's own selection-work clock (see
+    /// [`SamplerSession::selection_secs`]).
+    pub selection_secs: f64,
+    pub step_latency: LatencyStats,
+    /// Message of the first step error, if one occurred.
+    pub failed: Option<String>,
+}
+
+/// Stats plus the cached snapshot, shared between the actor thread and
+/// request handlers.
+#[derive(Debug, Default)]
+pub struct SessionShared {
+    pub stats: Mutex<SessionStats>,
+    /// Most recent snapshot; reused across queries until refreshed.
+    pub snapshot: Mutex<Option<Arc<NystromApprox>>>,
+    /// Set at server shutdown: step batches poll this between steps so a
+    /// queued million-step background batch cannot stall
+    /// [`Registry::shutdown`]'s join.
+    pub cancel: AtomicBool,
+}
+
+/// What one step batch did.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    pub k: usize,
+    /// Selections actually performed in this batch (≤ requested steps).
+    pub stepped: usize,
+    /// Why the batch ended early, if it did.
+    pub stop: Option<StopReason>,
+    pub error_estimate: Option<f64>,
+    /// Wall-clock seconds the batch took on the actor.
+    pub secs: f64,
+}
+
+/// Commands processed by a session's actor thread, in arrival order.
+pub enum Command {
+    /// Advance by up to `steps` selections, checking `rule` before every
+    /// step. `reply: None` runs the batch in the background (the caller
+    /// already got 202; progress is visible through [`SessionShared`]).
+    Step {
+        steps: usize,
+        rule: StoppingRule,
+        reply: Option<Sender<Result<StepReport>>>,
+    },
+    /// Assemble the current factors without ending the run; also refreshes
+    /// the shared snapshot cache.
+    Snapshot { reply: Sender<Result<Arc<NystromApprox>>> },
+    /// Consume the session and return the final approximation.
+    Finish { reply: Sender<Result<NystromApprox>> },
+}
+
+/// Handler-side handle to one hosted session. Cloneable; all fields are
+/// shared-ownership or channel endpoints.
+#[derive(Clone)]
+pub struct SessionHandle {
+    pub name: String,
+    pub tx: Sender<Command>,
+    pub shared: Arc<SessionShared>,
+    pub dataset: Arc<Dataset>,
+    pub kernel: Arc<dyn Kernel + Send + Sync>,
+}
+
+struct Entry {
+    handle: SessionHandle,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// Named live sessions.
+pub struct Registry {
+    inner: Mutex<HashMap<String, Entry>>,
+    counter: AtomicU64,
+    /// Set by [`shutdown`](Registry::shutdown); a create that loses the
+    /// race against shutdown must not insert a session nobody will join.
+    closed: AtomicBool,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            inner: Mutex::new(HashMap::new()),
+            counter: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Create a session: build the dataset and kernel, spawn the actor
+    /// thread, and wait for it to report that session construction
+    /// succeeded — so construction errors (singular seeds, bad configs)
+    /// surface synchronously as a clean request error.
+    pub fn create(&self, req: CreateRequest) -> Result<SessionHandle> {
+        let name = match req.name {
+            Some(n) => {
+                if lock(&self.inner).contains_key(&n) {
+                    bail!("session '{n}' already exists");
+                }
+                n
+            }
+            // auto names skip anything taken (a user may have claimed
+            // "s0" explicitly); a residual race is caught at insert
+            None => loop {
+                let candidate =
+                    format!("s{}", self.counter.fetch_add(1, Ordering::Relaxed));
+                if !lock(&self.inner).contains_key(&candidate) {
+                    break candidate;
+                }
+            },
+        };
+        let dataset = Arc::new(req.dataset.build()?);
+        let kernel = req.kernel.build(&dataset);
+        let mut spec = req.method;
+        // clamp like the CLI: a budget past n is just "all columns"
+        spec.max_cols = spec.max_cols.min(dataset.n());
+        spec.init_cols = spec.init_cols.min(spec.max_cols).max(1);
+        // serving-sanity caps: one request must not be able to abort the
+        // whole server with an oversized allocation (see protocol's caps)
+        let n = dataset.n();
+        if matches!(spec.method, Method::Farahat | Method::AdaptiveRandom)
+            && n > super::protocol::MAX_RESIDUAL_N
+        {
+            bail!(
+                "method '{:?}' materializes an n×n residual; n = {n} exceeds \
+                 the serving cap of {}",
+                spec.method,
+                super::protocol::MAX_RESIDUAL_N
+            );
+        }
+        if (n as u128) * (spec.max_cols as u128) > super::protocol::MAX_STATE_ELEMS {
+            bail!(
+                "n × max_cols = {} exceeds the serving cap of {} state \
+                 elements — lower max_cols",
+                (n as u128) * (spec.max_cols as u128),
+                super::protocol::MAX_STATE_ELEMS
+            );
+        }
+        // oasis-p replicates a max_cols×max_cols W⁻¹ on every worker
+        if spec.method == Method::OasisP {
+            let replicas = (spec.workers as u128)
+                * (spec.max_cols as u128)
+                * (spec.max_cols as u128);
+            if replicas > super::protocol::MAX_STATE_ELEMS {
+                bail!(
+                    "workers × max_cols² = {replicas} exceeds the serving cap \
+                     of {} state elements — lower workers or max_cols",
+                    super::protocol::MAX_STATE_ELEMS
+                );
+            }
+        }
+
+        let shared = Arc::new(SessionShared::default());
+        let (tx, rx) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let handle = SessionHandle {
+            name: name.clone(),
+            tx,
+            shared: shared.clone(),
+            dataset: dataset.clone(),
+            kernel: kernel.clone(),
+        };
+        let join = std::thread::Builder::new()
+            .name(format!("oasis-session-{name}"))
+            .spawn(move || session_thread(spec, dataset, kernel, shared, rx, ready_tx))
+            .map_err(|e| anyhow!("could not spawn session thread: {e}"))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = join.join();
+                return Err(e.wrap(format!("creating session '{name}'")));
+            }
+            Err(_) => {
+                let _ = join.join();
+                bail!("session '{name}': construction thread died");
+            }
+        }
+        {
+            let mut map = lock(&self.inner);
+            // both rejection cases tear the fresh actor down again
+            // (dropping its only Sender ends its loop). The `closed` check
+            // under the map lock makes create/shutdown serializable: either
+            // this insert lands before shutdown's drain (which then removes
+            // and joins it), or it observes `closed` and backs out — no
+            // session can outlive `Registry::shutdown`.
+            let refused = if self.closed.load(Ordering::SeqCst) {
+                Some("server is shutting down".to_string())
+            } else if map.contains_key(&name) {
+                Some(format!("session '{name}' already exists"))
+            } else {
+                None
+            };
+            if let Some(msg) = refused {
+                drop(map);
+                drop(handle);
+                let _ = join.join();
+                return Err(anyhow!("{msg}"));
+            }
+            map.insert(name.clone(), Entry { handle: handle.clone(), join });
+        }
+        Ok(handle)
+    }
+
+    pub fn get(&self, name: &str) -> Option<SessionHandle> {
+        lock(&self.inner).get(name).map(|e| e.handle.clone())
+    }
+
+    /// Remove a session for finish/evict: exactly one caller wins the
+    /// entry (and with it the join handle).
+    pub fn remove(
+        &self,
+        name: &str,
+    ) -> Option<(SessionHandle, std::thread::JoinHandle<()>)> {
+        lock(&self.inner).remove(name).map(|e| (e.handle, e.join))
+    }
+
+    /// Name + shared state of every live session, name-sorted.
+    pub fn list(&self) -> Vec<(String, Arc<SessionShared>)> {
+        let mut out: Vec<_> = lock(&self.inner)
+            .iter()
+            .map(|(k, e)| (k.clone(), e.handle.shared.clone()))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        lock(&self.inner).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every session (server shutdown): closing each command channel
+    /// ends its actor loop; joining bounds the shutdown. Distributed
+    /// sessions tear their worker threads down in their `Drop`. Also
+    /// closes the registry: creations racing this call are refused (see
+    /// [`create`](Registry::create)).
+    pub fn shutdown(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let entries: Vec<Entry> = {
+            let mut map = lock(&self.inner);
+            map.drain().map(|(_, e)| e).collect()
+        };
+        // interrupt running/queued step batches first so the joins below
+        // are bounded by one selection step, not one batch
+        for e in &entries {
+            e.handle.shared.cancel.store(true, Ordering::SeqCst);
+        }
+        for e in entries {
+            drop(e.handle);
+            let _ = e.join.join();
+        }
+    }
+}
+
+/// Send a synchronous step batch to the session's actor.
+pub fn step_sync(
+    handle: &SessionHandle,
+    steps: usize,
+    rule: StoppingRule,
+) -> Result<StepReport> {
+    let (tx, rx) = mpsc::channel();
+    handle
+        .tx
+        .send(Command::Step { steps, rule, reply: Some(tx) })
+        .map_err(|_| anyhow!("session '{}' is already finished", handle.name))?;
+    rx.recv()
+        .map_err(|_| anyhow!("session '{}' terminated", handle.name))?
+}
+
+/// Enqueue a background step batch (fire and forget).
+pub fn step_background(
+    handle: &SessionHandle,
+    steps: usize,
+    rule: StoppingRule,
+) -> Result<()> {
+    handle
+        .tx
+        .send(Command::Step { steps, rule, reply: None })
+        .map_err(|_| anyhow!("session '{}' is already finished", handle.name))
+}
+
+/// The session's current snapshot: the cached one if present (and
+/// `refresh` is false), otherwise a fresh one taken by the actor.
+pub fn ensure_snapshot(
+    handle: &SessionHandle,
+    refresh: bool,
+) -> Result<Arc<NystromApprox>> {
+    if !refresh {
+        if let Some(s) = lock(&handle.shared.snapshot).clone() {
+            return Ok(s);
+        }
+    }
+    let (tx, rx) = mpsc::channel();
+    handle
+        .tx
+        .send(Command::Snapshot { reply: tx })
+        .map_err(|_| anyhow!("session '{}' is already finished", handle.name))?;
+    rx.recv()
+        .map_err(|_| anyhow!("session '{}' terminated", handle.name))?
+}
+
+/// Finish the session: the final approximation, after which the actor
+/// thread exits. The caller should have removed the registry entry first
+/// (so no new commands can be enqueued) and joins the thread afterwards.
+/// Step batches still queued ahead of the Finish are interrupted via the
+/// cancel flag — an evicted session's million-step background batch must
+/// not make its finisher wait for hours.
+pub fn finish(handle: &SessionHandle) -> Result<NystromApprox> {
+    handle.shared.cancel.store(true, Ordering::SeqCst);
+    let (tx, rx) = mpsc::channel();
+    handle
+        .tx
+        .send(Command::Finish { reply: tx })
+        .map_err(|_| anyhow!("session '{}' is already finished", handle.name))?;
+    rx.recv()
+        .map_err(|_| anyhow!("session '{}' terminated", handle.name))?
+}
+
+fn boxed<'a, S: SamplerSession + 'a>(s: S) -> Box<dyn SamplerSession + 'a> {
+    Box::new(s)
+}
+
+/// Actor-thread body: construct the oracle and session on this stack
+/// (the session borrows them), report construction, serve commands.
+fn session_thread(
+    spec: MethodSpec,
+    ds: Arc<Dataset>,
+    kernel: Arc<dyn Kernel + Send + Sync>,
+    shared: Arc<SessionShared>,
+    rx: Receiver<Command>,
+    ready: Sender<Result<()>>,
+) {
+    let oracle = ImplicitOracle::new(&ds, &*kernel);
+    let built: Result<Box<dyn SamplerSession + '_>> = (|| {
+        Ok(match spec.method {
+            Method::Oasis => boxed(
+                Oasis::new(spec.max_cols, spec.init_cols, spec.tol, spec.seed)
+                    .session(&oracle)?,
+            ),
+            Method::Sis => boxed(
+                Sis::new(spec.max_cols, spec.init_cols, spec.tol, spec.seed)
+                    .session(&oracle)?,
+            ),
+            Method::Farahat => boxed(Farahat::new(spec.max_cols).session(&oracle)?),
+            Method::Icd => boxed(
+                IncompleteCholesky::new(spec.max_cols, spec.tol).session(&oracle)?,
+            ),
+            Method::AdaptiveRandom => boxed(
+                AdaptiveRandom::new(spec.max_cols, spec.batch, spec.seed)
+                    .session(&oracle)?,
+            ),
+            Method::OasisP => {
+                let cfg =
+                    OasisPConfig::new(spec.max_cols, spec.init_cols, spec.workers)
+                        .with_seed(spec.seed)
+                        .with_tol(spec.tol);
+                boxed(OasisPSession::start(&ds, kernel.clone(), cfg)?)
+            }
+        })
+    })();
+    match built {
+        Ok(session) => {
+            sync_stats(&shared, session.as_ref(), None);
+            let _ = ready.send(Ok(()));
+            drive(session, &shared, &rx);
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+        }
+    }
+}
+
+/// The actor loop: commands strictly in arrival order, one at a time.
+fn drive(
+    mut session: Box<dyn SamplerSession + '_>,
+    shared: &SessionShared,
+    rx: &Receiver<Command>,
+) {
+    loop {
+        let cmd = match rx.recv() {
+            Ok(c) => c,
+            // every Sender dropped (session evicted / server shutdown)
+            Err(_) => return,
+        };
+        match cmd {
+            Command::Step { steps, rule, reply } => {
+                lock(&shared.stats).busy = true;
+                let report = step_batch(session.as_mut(), steps, &rule, shared);
+                {
+                    let mut st = lock(&shared.stats);
+                    st.busy = false;
+                    // keep the *first* failure: later errors are usually
+                    // downstream of the original root cause
+                    if st.failed.is_none() {
+                        if let Err(e) = &report {
+                            st.failed = Some(e.to_string());
+                        }
+                    }
+                }
+                if let Some(tx) = reply {
+                    let _ = tx.send(report);
+                }
+            }
+            Command::Snapshot { reply } => {
+                let res = session.snapshot().map(Arc::new);
+                if let Ok(snap) = &res {
+                    *lock(&shared.snapshot) = Some(snap.clone());
+                }
+                let _ = reply.send(res);
+            }
+            Command::Finish { reply } => {
+                let res = session.finish();
+                {
+                    let mut st = lock(&shared.stats);
+                    st.finished = true;
+                    st.busy = false;
+                }
+                let _ = reply.send(res);
+                return;
+            }
+        }
+    }
+}
+
+/// Drive up to `steps` selections under `rule`, mirroring
+/// [`run_to_completion`](crate::sampling::run_to_completion)'s
+/// evaluate-before-step semantics, while recording per-step latency into
+/// the shared stats.
+fn step_batch(
+    session: &mut dyn SamplerSession,
+    steps: usize,
+    rule: &StoppingRule,
+    shared: &SessionShared,
+) -> Result<StepReport> {
+    let started = Instant::now();
+    let mut stepped = 0usize;
+    let mut stop: Option<StopReason> = None;
+    while stepped < steps {
+        if shared.cancel.load(Ordering::SeqCst) {
+            break; // server shutting down; report what was done
+        }
+        if let Some(r) = rule.evaluate(session, started.elapsed()) {
+            stop = Some(r);
+            break;
+        }
+        let t0 = Instant::now();
+        match session.step()? {
+            StepOutcome::Selected { .. } => {
+                stepped += 1;
+                let secs = t0.elapsed().as_secs_f64();
+                let mut st = lock(&shared.stats);
+                st.k = session.k();
+                st.steps_done += 1;
+                st.step_latency.record(secs);
+            }
+            StepOutcome::Exhausted(r) => {
+                stop = Some(r);
+                break;
+            }
+        }
+    }
+    sync_stats(shared, session, stop);
+    Ok(StepReport {
+        k: session.k(),
+        stepped,
+        stop,
+        error_estimate: session.error_estimate(),
+        secs: started.elapsed().as_secs_f64(),
+    })
+}
+
+fn sync_stats(
+    shared: &SessionShared,
+    session: &dyn SamplerSession,
+    stop: Option<StopReason>,
+) {
+    let mut st = lock(&shared.stats);
+    if st.method.is_empty() {
+        st.method = session.name().to_string();
+    }
+    st.n = session.n();
+    st.k = session.k();
+    st.error_estimate = session.error_estimate();
+    st.selection_secs = session.selection_secs();
+    if stop.is_some() {
+        st.stop = stop;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::protocol::{DatasetSpec, KernelSpec};
+
+    fn create_req(name: &str, n: usize, max_cols: usize, seed: u64) -> CreateRequest {
+        CreateRequest {
+            name: Some(name.to_string()),
+            dataset: DatasetSpec::Generator {
+                name: "two-moons".into(),
+                n,
+                seed: 42,
+                noise: 0.05,
+                dim: 0,
+            },
+            kernel: KernelSpec::Gaussian { sigma: None, sigma_fraction: 0.05 },
+            method: MethodSpec {
+                method: Method::Oasis,
+                max_cols,
+                init_cols: 5,
+                tol: 1e-12,
+                seed,
+                batch: 10,
+                workers: 2,
+            },
+        }
+    }
+
+    #[test]
+    fn create_step_snapshot_finish_lifecycle() {
+        let reg = Registry::new();
+        let h = reg.create(create_req("a", 200, 40, 7)).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(lock(&h.shared.stats).k, 5, "seed columns visible at create");
+
+        let rep = step_sync(&h, 10, StoppingRule::new()).unwrap();
+        assert_eq!(rep.stepped, 10);
+        assert_eq!(rep.k, 15);
+        assert!(rep.stop.is_none());
+        assert_eq!(lock(&h.shared.stats).steps_done, 10);
+
+        let snap = ensure_snapshot(&h, true).unwrap();
+        assert_eq!(snap.k(), 15);
+        // cached reuse returns the same Arc
+        let again = ensure_snapshot(&h, false).unwrap();
+        assert!(Arc::ptr_eq(&snap, &again));
+
+        let (h2, join) = reg.remove("a").unwrap();
+        let fin = finish(&h2).unwrap();
+        let _ = join.join();
+        assert_eq!(fin.k(), 15);
+        assert!(lock(&h2.shared.stats).finished);
+        assert!(reg.is_empty());
+        // further commands fail cleanly
+        assert!(step_sync(&h, 1, StoppingRule::new()).is_err());
+    }
+
+    #[test]
+    fn step_batch_respects_rule() {
+        let reg = Registry::new();
+        let h = reg.create(create_req("r", 150, 60, 3)).unwrap();
+        // budget below current k stops immediately with zero steps
+        let rep = step_sync(&h, 10, StoppingRule::budget(3)).unwrap();
+        assert_eq!(rep.stepped, 0);
+        assert_eq!(rep.stop, Some(StopReason::BudgetReached));
+        // generous budget: the steps cap binds instead
+        let rep = step_sync(&h, 4, StoppingRule::budget(100)).unwrap();
+        assert_eq!(rep.stepped, 4);
+        assert!(rep.stop.is_none());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let reg = Registry::new();
+        let _a = reg.create(create_req("dup", 80, 20, 1)).unwrap();
+        let err = reg.create(create_req("dup", 80, 20, 1)).unwrap_err();
+        assert!(format!("{err}").contains("already exists"));
+        assert_eq!(reg.len(), 1);
+        reg.shutdown();
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn background_steps_progress_via_shared_stats() {
+        let reg = Registry::new();
+        let h = reg.create(create_req("bg", 200, 50, 5)).unwrap();
+        step_background(&h, 20, StoppingRule::new()).unwrap();
+        // a sync no-op step queues behind the background batch, so once it
+        // returns the background work is done
+        let rep = step_sync(&h, 1, StoppingRule::budget(1)).unwrap();
+        assert_eq!(rep.stepped, 0);
+        assert_eq!(lock(&h.shared.stats).k, 25);
+        assert_eq!(lock(&h.shared.stats).steps_done, 20);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn hosts_every_method() {
+        let reg = Registry::new();
+        for (i, m) in [
+            Method::Oasis,
+            Method::Sis,
+            Method::Farahat,
+            Method::Icd,
+            Method::AdaptiveRandom,
+            Method::OasisP,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mut req = create_req(&format!("m{i}"), 60, 12, 2);
+            req.method.method = m;
+            let h = reg.create(req).unwrap();
+            let rep = step_sync(&h, 3, StoppingRule::new()).unwrap();
+            assert!(rep.stepped >= 1, "{m:?} did not step");
+            let snap = ensure_snapshot(&h, true).unwrap();
+            assert_eq!(snap.k(), rep.k, "{m:?} snapshot k");
+        }
+        assert_eq!(reg.len(), 6);
+        // metrics-style listing sees all of them
+        let listed = reg.list();
+        assert_eq!(listed.len(), 6);
+        reg.shutdown();
+    }
+}

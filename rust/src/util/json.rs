@@ -18,10 +18,15 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Recursion cap for the recursive-descent parser: parsing is a
+/// network-facing input path (the `oasis serve` request bodies), and an
+/// unbounded `[[[[…` would overflow the stack — an uncatchable abort.
+const MAX_DEPTH: usize = 128;
+
 impl Json {
-    /// Parse a JSON document.
+    /// Parse a JSON document (containers nested at most 128 deep).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -41,6 +46,13 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
@@ -81,9 +93,22 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity; null is the conventional
+                    // lossy mapping (what serde_json does for f64::NAN).
+                    write!(f, "null")
+                } else if x.fract() == 0.0
+                    && x.abs() < 1e15
+                    && !(*x == 0.0 && x.is_sign_negative())
+                {
+                    // -0.0 is excluded: the i64 cast would drop the sign
+                    // bit; the Display branch prints it as "-0", which
+                    // parses back bit-exactly.
                     write!(f, "{}", *x as i64)
                 } else {
+                    // Rust's f64 Display is the shortest string that parses
+                    // back to the same value, so Display→parse round-trips
+                    // bit-exactly for every finite non-integer.
                     write!(f, "{x}")
                 }
             }
@@ -147,11 +172,23 @@ impl std::error::Error for JsonError {}
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// current container nesting (bounded by [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, m: &str) -> JsonError {
         JsonError { offset: self.i, message: m.to_string() }
+    }
+
+    /// Four hex digits starting at byte `at`.
+    fn hex4(&self, at: usize) -> Result<u32, JsonError> {
+        if at + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[at..at + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
     }
 
     fn skip_ws(&mut self) {
@@ -183,7 +220,11 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek() {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting deeper than 128 levels"));
+        }
+        self.depth += 1;
+        let v = match self.peek() {
             Some(b'n') => self.lit("null", Json::Null),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -192,7 +233,9 @@ impl<'a> Parser<'a> {
             Some(b'{') => self.object(),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(self.err("expected a value")),
-        }
+        };
+        self.depth -= 1;
+        v
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -217,16 +260,29 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let hi = self.hex4(self.i + 1)?;
                             self.i += 4;
+                            if (0xD800..0xDC00).contains(&hi) {
+                                // high surrogate: must pair with \uDC00–DFFF
+                                // to form one supplementary-plane scalar
+                                let paired = self.b.get(self.i + 1) == Some(&b'\\')
+                                    && self.b.get(self.i + 2) == Some(&b'u');
+                                let lo = if paired { self.hex4(self.i + 3).ok() } else { None };
+                                match lo {
+                                    Some(lo) if (0xDC00..0xE000).contains(&lo) => {
+                                        let cp = 0x10000
+                                            + ((hi - 0xD800) << 10)
+                                            + (lo - 0xDC00);
+                                        out.push(
+                                            char::from_u32(cp).unwrap_or('\u{fffd}'),
+                                        );
+                                        self.i += 6;
+                                    }
+                                    _ => out.push('\u{fffd}'), // lone surrogate
+                                }
+                            } else {
+                                out.push(char::from_u32(hi).unwrap_or('\u{fffd}'));
+                            }
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -363,6 +419,17 @@ mod tests {
         assert!(Json::parse("\"unterminated").is_err());
     }
 
+    /// Deep nesting must be a clean error, not a stack-overflow abort —
+    /// the parser handles network-facing request bodies.
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        let bomb = "[".repeat(100_000);
+        assert!(Json::parse(&bomb).is_err());
+        // …while reasonable nesting is unaffected
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
     #[test]
     fn roundtrip() {
         let src = r#"{"arts":[{"dims":{"l":512,"n":1024},"name":"d"}],"v":1}"#;
@@ -375,6 +442,78 @@ mod tests {
     fn display_escapes() {
         let j = Json::Str("a\"b\\c\n".into());
         assert_eq!(j.to_string(), r#""a\"b\\c\n""#);
+    }
+
+    /// Serialize→parse must reproduce every finite f64 bit-exactly: the
+    /// server's snapshot/query responses ship factor matrices as numbers,
+    /// and the acceptance tests compare them against offline runs.
+    #[test]
+    fn f64_round_trip_is_exact() {
+        let values = [
+            0.0,
+            -0.0, // sign bit must survive (serialized as "-0")
+            1.0,
+            -1.0,
+            0.1,
+            1.0 / 3.0,
+            -1234.567_8,
+            1e-7,
+            2.5e-300,
+            1.7976931348623157e308, // f64::MAX
+            5e-324,                 // smallest subnormal
+            1e15,                   // integer-format boundary
+            9.007199254740992e15,   // 2^53
+            123456.75,
+        ];
+        for &v in &values {
+            let s = Json::Num(v).to_string();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(
+                back.to_bits(),
+                v.to_bits(),
+                "value {v:e} serialized as {s} parsed back as {back:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(v).to_string(), "null");
+        }
+        // …and stays valid inside containers
+        let j = Json::Arr(vec![Json::Num(1.5), Json::Num(f64::NAN)]);
+        assert_eq!(j.to_string(), "[1.5,null]");
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn string_round_trip_with_tricky_contents() {
+        let cases = [
+            "plain",
+            "quote \" backslash \\ slash /",
+            "ctrl \u{1} \u{1f} tab\t newline\n cr\r",
+            "unicode é ☃ 語",
+            "emoji 😀 outside the BMP",
+        ];
+        for case in cases {
+            let s = Json::Str(case.to_string()).to_string();
+            assert_eq!(
+                Json::parse(&s).unwrap().as_str(),
+                Some(case),
+                "round-trip failed for {case:?} via {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn surrogate_pair_escapes_parse() {
+        // the UTF-16 escape pair for U+1F600 (grinning-face emoji)
+        let j = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(j.as_str(), Some("\u{1f600}"));
+        // a lone high surrogate degrades to U+FFFD instead of erroring
+        let lone = Json::parse(r#""a\ud83db""#).unwrap();
+        assert_eq!(lone.as_str(), Some("a\u{fffd}b"));
     }
 
     #[test]

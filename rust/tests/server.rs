@@ -1,0 +1,335 @@
+//! Socket-level integration tests for `oasis serve`: a real
+//! `TcpListener` on an ephemeral port, raw HTTP/1.1 requests over
+//! `TcpStream`, and JSON assertions via the crate's own parser.
+//!
+//! The headline acceptance criterion lives in
+//! [`concurrent_sessions_mid_run_snapshot_matches_offline_prefix`]: two
+//! sessions created over the socket, stepped interleaved, and a mid-run
+//! snapshot whose selected indices (and factor matrices) are
+//! bit-identical to an equivalent offline `run_to_completion` prefix.
+
+use oasis::data::generators::two_moons;
+use oasis::kernels::{Gaussian, Kernel};
+use oasis::sampling::{
+    oasis::Oasis, run_to_completion, ImplicitOracle, SamplerSession,
+    StoppingRule,
+};
+use oasis::server::http::client_request;
+use oasis::server::Server;
+use oasis::util::json::Json;
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+fn start_server() -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let join = std::thread::spawn(move || server.run().expect("server run"));
+    (addr, join)
+}
+
+fn stop_server(addr: SocketAddr, join: std::thread::JoinHandle<()>) {
+    let (status, _) = request(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    join.join().expect("server thread");
+}
+
+/// One HTTP exchange on a fresh connection; returns (status, JSON body).
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let (status, raw) =
+        client_request(addr, method, path, body).expect("http exchange");
+    let json = Json::parse(&raw)
+        .unwrap_or_else(|e| panic!("bad JSON body {e}: {raw}"));
+    (status, json)
+}
+
+fn usize_field(j: &Json, key: &str) -> usize {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("missing usize '{key}' in {j}"))
+}
+
+fn indices_of(j: &Json) -> Vec<usize> {
+    j.get("indices")
+        .and_then(Json::as_arr)
+        .expect("indices array")
+        .iter()
+        .map(|v| v.as_usize().expect("index"))
+        .collect()
+}
+
+/// ACCEPTANCE: ≥2 concurrent sessions over a real socket, interleaved
+/// steps, and a mid-run snapshot bit-identical to the equivalent offline
+/// `run_to_completion` prefix.
+#[test]
+fn concurrent_sessions_mid_run_snapshot_matches_offline_prefix() {
+    let (addr, join) = start_server();
+
+    let create = |name: &str, sampler_seed: u64| {
+        format!(
+            r#"{{"name":"{name}",
+                 "dataset":{{"generator":"two-moons","n":400,"seed":42,"noise":0.05}},
+                 "kernel":{{"type":"gaussian","sigma_fraction":0.05}},
+                 "method":"oasis","max_cols":60,"init_cols":5,
+                 "tol":1e-12,"seed":{sampler_seed}}}"#
+        )
+    };
+    let (status, j) = request(addr, "POST", "/sessions", &create("a", 7));
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "k"), 5, "seed columns at create");
+    let (status, j) = request(addr, "POST", "/sessions", &create("b", 9));
+    assert_eq!(status, 200, "{j}");
+
+    // interleave stepping across the two live sessions
+    for (name, steps) in [("a", 7), ("b", 5), ("a", 8), ("b", 10)] {
+        let (status, j) = request(
+            addr,
+            "POST",
+            &format!("/sessions/{name}/step"),
+            &format!(r#"{{"steps":{steps}}}"#),
+        );
+        assert_eq!(status, 200, "{j}");
+        assert_eq!(usize_field(&j, "stepped"), steps, "{j}");
+    }
+
+    // mid-run snapshot of "a" at k = 5 + 15 = 20, with factors
+    let (status, snap) =
+        request(addr, "GET", "/sessions/a/snapshot?factors=1", "");
+    assert_eq!(status, 200, "{snap}");
+    assert_eq!(usize_field(&snap, "k"), 20);
+
+    // equivalent offline run: same dataset, kernel, and sampler params
+    let ds = two_moons(400, 0.05, 42);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.05);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+    let mut offline = Oasis::new(60, 5, 1e-12, 7).session(&oracle).unwrap();
+    run_to_completion(&mut offline, &StoppingRule::budget(20)).unwrap();
+    let reference = offline.snapshot().unwrap();
+
+    assert_eq!(
+        indices_of(&snap),
+        reference.indices,
+        "server selection diverged from the offline run"
+    );
+    // factor matrices survive the JSON round-trip exactly (shortest
+    // round-trip f64 formatting), so compare by value
+    for (key, want) in [("c", &reference.c), ("winv", &reference.winv)] {
+        let m = snap.get(key).unwrap_or_else(|| panic!("missing {key}"));
+        assert_eq!(usize_field(m, "rows"), want.rows);
+        assert_eq!(usize_field(m, "cols"), want.cols);
+        let data = m.get("data").and_then(Json::as_arr).expect("data");
+        assert_eq!(data.len(), want.data.len());
+        for (i, (got, want)) in data.iter().zip(&want.data).enumerate() {
+            assert_eq!(
+                got.as_f64().expect("number"),
+                *want,
+                "{key}[{i}] diverged"
+            );
+        }
+    }
+
+    // the snapshot did not disturb the run: continue "a" to k = 30 and
+    // compare against the continued offline session
+    let (status, j) = request(addr, "POST", "/sessions/a/step", r#"{"budget":30}"#);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "k"), 30);
+    assert_eq!(j.get("stop").and_then(Json::as_str), Some("budget"));
+    run_to_completion(&mut offline, &StoppingRule::budget(30)).unwrap();
+    let (_, snap2) = request(addr, "GET", "/sessions/a/snapshot", "");
+    assert_eq!(indices_of(&snap2), offline.indices());
+
+    // session "b" ran concurrently and was not affected
+    let (status, jb) = request(addr, "GET", "/sessions/b", "");
+    assert_eq!(status, 200);
+    assert_eq!(usize_field(&jb, "k"), 20);
+
+    // finish both (one via POST …/finish, one via DELETE), registry empties
+    let (status, jf) = request(addr, "POST", "/sessions/a/finish", "");
+    assert_eq!(status, 200, "{jf}");
+    assert_eq!(jf.get("final").and_then(Json::as_bool), Some(true));
+    assert_eq!(usize_field(&jf, "k"), 30);
+    let (status, _) = request(addr, "DELETE", "/sessions/b", "");
+    assert_eq!(status, 200);
+    let (_, jl) = request(addr, "GET", "/sessions", "");
+    assert_eq!(jl.get("sessions").and_then(Json::as_arr).unwrap().len(), 0);
+
+    stop_server(addr, join);
+}
+
+/// Stopping-rule composition over the wire: a loose error target ends the
+/// batch before the steps cap; protocol errors map to clean status codes.
+#[test]
+fn step_rules_and_error_statuses() {
+    let (addr, join) = start_server();
+    let create = r#"{"name":"r",
+        "dataset":{"generator":"two-moons","n":300,"seed":1},
+        "method":"oasis","max_cols":200,"init_cols":5}"#;
+    let (status, j) = request(addr, "POST", "/sessions", create);
+    assert_eq!(status, 200, "{j}");
+
+    let (status, j) = request(
+        addr,
+        "POST",
+        "/sessions/r/step",
+        r#"{"steps":150,"target_err":0.5,"deadline_ms":60000}"#,
+    );
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(j.get("stop").and_then(Json::as_str), Some("error-target"));
+    assert!(j.get("error_estimate").and_then(Json::as_f64).unwrap() <= 0.5);
+    assert!(usize_field(&j, "k") < 155, "{j}");
+
+    // status codes: 404 unknown session/endpoint, 400 bad payloads,
+    // 409 duplicate name
+    assert_eq!(request(addr, "POST", "/sessions/nope/step", "{}").0, 404);
+    assert_eq!(request(addr, "GET", "/nothing", "").0, 404);
+    assert_eq!(request(addr, "POST", "/sessions", "{not json").0, 400);
+    assert_eq!(
+        request(addr, "POST", "/sessions", r#"{"method":"magic"}"#).0,
+        400
+    );
+    assert_eq!(request(addr, "POST", "/sessions", r#"{"name":"r"}"#).0, 409);
+    assert_eq!(
+        request(addr, "POST", "/sessions/r/query", r#"{"points":[[1,2,3]]}"#).0,
+        400,
+        "dimension mismatch must 400"
+    );
+
+    stop_server(addr, join);
+}
+
+/// Background stepping, /metrics, and out-of-sample queries against the
+/// live snapshot (checked against direct kernel evaluations).
+#[test]
+fn background_steps_metrics_and_queries() {
+    let (addr, join) = start_server();
+
+    // deterministic inline dataset: 12 well-separated 2-D points
+    let pts: Vec<Vec<f64>> = (0..12)
+        .map(|i| vec![(i % 4) as f64 * 0.9, (i / 4) as f64 * 1.1])
+        .collect();
+    let pts_json = format!(
+        "[{}]",
+        pts.iter()
+            .map(|p| format!("[{},{}]", p[0], p[1]))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    let create = format!(
+        r#"{{"name":"q","dataset":{{"points":{pts_json}}},
+            "kernel":{{"type":"gaussian","sigma":1.0}},
+            "method":"oasis","max_cols":12,"init_cols":2,"tol":1e-14,"seed":3}}"#
+    );
+    let (status, j) = request(addr, "POST", "/sessions", &create);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "n"), 12);
+    assert_eq!(usize_field(&j, "dim"), 2);
+
+    // background batch: 202 now, progress visible via status polling
+    let (status, j) = request(
+        addr,
+        "POST",
+        "/sessions/q/step",
+        r#"{"steps":5,"background":true}"#,
+    );
+    assert_eq!(status, 202, "{j}");
+    assert_eq!(j.get("accepted").and_then(Json::as_bool), Some(true));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (_, s) = request(addr, "GET", "/sessions/q", "");
+        let done = usize_field(&s, "steps_done") >= 5
+            && s.get("busy").and_then(Json::as_bool) == Some(false);
+        if done {
+            assert_eq!(usize_field(&s, "k"), 7); // 2 seeds + 5 background
+            break;
+        }
+        assert!(Instant::now() < deadline, "background batch never finished");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // grow to full rank so the extension is exact, then query
+    let (status, j) = request(addr, "POST", "/sessions/q/step", r#"{"steps":20}"#);
+    assert_eq!(status, 200, "{j}");
+    let (status, snap) = request(addr, "GET", "/sessions/q/snapshot", "");
+    assert_eq!(status, 200);
+    let k = usize_field(&snap, "k");
+    assert!(k >= 11, "expected near-full rank, k = {k} ({snap})");
+
+    let z = &pts[3];
+    let query = format!(
+        r#"{{"points":[[{},{}]],"targets":[0,5,11],"refresh":true}}"#,
+        z[0], z[1]
+    );
+    let (status, jq) = request(addr, "POST", "/sessions/q/query", &query);
+    assert_eq!(status, 200, "{jq}");
+    assert_eq!(usize_field(&jq, "snapshot_k"), k);
+    let results = jq.get("results").and_then(Json::as_arr).expect("results");
+    assert_eq!(results.len(), 1);
+    let weights = results[0].get("weights").and_then(Json::as_arr).unwrap();
+    assert_eq!(weights.len(), k);
+    let kernel_vals = results[0].get("kernel").and_then(Json::as_arr).unwrap();
+    let g = Gaussian::new(1.0);
+    for (t, &target) in [0usize, 5, 11].iter().enumerate() {
+        let got = kernel_vals[t].as_f64().unwrap();
+        let want = g.eval(&pts[target], z);
+        assert!(
+            (got - want).abs() < 1e-6,
+            "ĝ(z, {target}) = {got}, want {want}"
+        );
+    }
+
+    // /metrics reports the session with its step latencies and counters
+    let (status, m) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert!(m.get("uptime_secs").and_then(Json::as_f64).unwrap() >= 0.0);
+    let server = m.get("server").expect("server counters");
+    assert!(usize_field(server, "sessions_created") >= 1);
+    assert!(usize_field(server, "queries_total") >= 1);
+    assert!(usize_field(server, "requests") >= 5);
+    let sessions = m.get("sessions").and_then(Json::as_arr).unwrap();
+    let q = sessions
+        .iter()
+        .find(|s| s.get("name").and_then(Json::as_str) == Some("q"))
+        .expect("session q listed");
+    assert!(usize_field(q, "steps_done") >= 5);
+    let lat = q.get("step_latency").expect("latency stats");
+    assert!(usize_field(lat, "count") >= 5);
+    assert!(lat.get("mean_ms").and_then(Json::as_f64).unwrap() >= 0.0);
+
+    // health endpoint and eviction
+    assert_eq!(request(addr, "GET", "/healthz", "").0, 200);
+    assert_eq!(request(addr, "DELETE", "/sessions/q", "").0, 200);
+    assert_eq!(request(addr, "GET", "/sessions/q", "").0, 404);
+
+    stop_server(addr, join);
+}
+
+/// The distributed oASIS-P method is hostable too, including its (new)
+/// non-terminal snapshot gather.
+#[test]
+fn oasis_p_session_over_socket() {
+    let (addr, join) = start_server();
+    let create = r#"{"name":"p",
+        "dataset":{"generator":"two-moons","n":200,"seed":5},
+        "method":"oasis-p","max_cols":24,"init_cols":4,"workers":3,"seed":11}"#;
+    let (status, j) = request(addr, "POST", "/sessions", create);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(j.get("method").and_then(Json::as_str), Some("oASIS-P"));
+
+    let (status, j) = request(addr, "POST", "/sessions/p/step", r#"{"steps":8}"#);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "k"), 12);
+
+    let (status, snap) = request(addr, "GET", "/sessions/p/snapshot", "");
+    assert_eq!(status, 200, "{snap}");
+    assert_eq!(usize_field(&snap, "k"), 12);
+    assert_eq!(indices_of(&snap).len(), 12);
+
+    // keeps running after the snapshot, then finishes cleanly
+    let (status, j) = request(addr, "POST", "/sessions/p/step", r#"{"budget":24}"#);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "k"), 24);
+    let (status, jf) = request(addr, "POST", "/sessions/p/finish", "");
+    assert_eq!(status, 200, "{jf}");
+    assert_eq!(usize_field(&jf, "k"), 24);
+
+    stop_server(addr, join);
+}

@@ -188,6 +188,60 @@ fn deadline_stops_and_resumes() {
     assert_eq!(s.k(), 40);
 }
 
+/// Deadline and error-target composed in one rule, driven *stepwise* (the
+/// serving pattern: evaluate-before-step exactly like `run_to_completion`,
+/// but with the loop in caller hands): whichever criterion holds first
+/// names the stop, and a deadline-stopped session resumes to the error
+/// target afterwards.
+#[test]
+fn composed_deadline_and_error_target_under_stepped_execution() {
+    let ds = two_moons(400, 0.05, 17);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.1);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+
+    // (a) generous deadline + loose error target → the error target fires
+    let mut s = Oasis::new(200, 5, 1e-12, 3).session(&oracle).unwrap();
+    let rule = StoppingRule::new()
+        .with(StoppingCriterion::ErrorBelow(0.5))
+        .with(StoppingCriterion::Deadline(Duration::from_secs(3600)))
+        .with(StoppingCriterion::ColumnBudget(200));
+    let started = std::time::Instant::now();
+    let reason = loop {
+        if let Some(r) = rule.evaluate(&s, started.elapsed()) {
+            break r;
+        }
+        match s.step().unwrap() {
+            StepOutcome::Selected { .. } => {}
+            StepOutcome::Exhausted(r) => break r,
+        }
+    };
+    assert_eq!(reason, StopReason::ErrorTargetMet);
+    assert!(s.k() < 200, "k = {}", s.k());
+    assert!(s.error_estimate().unwrap() <= 0.5);
+
+    // (b) zero deadline + unreachable error target → the deadline fires
+    // before any adaptive selection…
+    let mut s2 = Oasis::new(200, 5, 1e-12, 3).session(&oracle).unwrap();
+    let rule2 = StoppingRule::new()
+        .with(StoppingCriterion::ErrorBelow(1e-12))
+        .with(StoppingCriterion::Deadline(Duration::ZERO))
+        .with(StoppingCriterion::ColumnBudget(200));
+    let reason2 = run_to_completion(&mut s2, &rule2).unwrap();
+    assert_eq!(reason2, StopReason::DeadlineExpired);
+    assert_eq!(s2.k(), 5, "only the seed columns");
+
+    // …and resuming the same session with a reachable target (fresh
+    // deadline) extends it to exactly where session (a) stopped — stepped
+    // and rule-driven execution agree bit for bit
+    let resume = StoppingRule::new()
+        .with(StoppingCriterion::ErrorBelow(0.5))
+        .with(StoppingCriterion::ColumnBudget(200));
+    let reason3 = run_to_completion(&mut s2, &resume).unwrap();
+    assert_eq!(reason3, StopReason::ErrorTargetMet);
+    assert_eq!(s2.k(), s.k());
+    assert_eq!(s2.indices(), s.indices());
+}
+
 /// `ScoreBelow` as an external criterion stops a run that the internal
 /// numerical floor would have let continue.
 #[test]
