@@ -4,25 +4,49 @@
 //!   L3 native : Δ colsum (PaperR) vs incremental Δ update; rank-1 R
 //!               update; kernel column generation; end-to-end per-column
 //!               selection throughput for both variants.
+//!   Methods   : per-method wall-ms / k / est. error on one workload
+//!               (the CI bench-smoke trajectory, written to --json).
 //!   Runtime   : PJRT delta artifact execution vs native Δ sweep.
 //!
-//!     cargo bench --bench perf
+//!     cargo bench --bench perf                         # full sizes
+//!     cargo bench --bench perf -- --quick --json BENCH_ci.json
+//!
+//! `--quick` shrinks problem sizes and repetitions to CI scale;
+//! `--json PATH` additionally writes every result as one JSON document
+//! (`{"micro": […], "methods": […]}`) for the workflow artifact.
 
-use oasis::bench_support::{bench, BenchConfig};
+use oasis::bench_support::{bench, BenchConfig, BenchResult};
 use oasis::data::generators::two_moons;
 use oasis::kernels::{kernel_column_into, Gaussian};
+use oasis::nystrom::relative_frobenius_error;
 use oasis::runtime::Accel;
 use oasis::sampling::{
+    adaptive_random::AdaptiveRandom,
+    farahat::Farahat,
+    icd::IncompleteCholesky,
     oasis::{Oasis, Variant},
+    sis::Sis,
     ColumnSampler, ImplicitOracle,
 };
+use oasis::util::args::Args;
+use oasis::util::json::Json;
 
 fn main() {
-    let cfg = BenchConfig { warmup: 1, reps: 5 };
-    let n = 20_000;
-    let k = 256;
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let cfg = BenchConfig {
+        warmup: if quick { 0 } else { 1 },
+        reps: if quick { 2 } else { 5 },
+    };
+    let n = args.usize_or("n", if quick { 4_000 } else { 20_000 });
+    let k = args.usize_or("k", if quick { 64 } else { 256 });
     let ds = two_moons(n, 0.05, 3);
     let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+    let mut micro: Vec<BenchResult> = Vec::new();
+    let record = |micro: &mut Vec<BenchResult>, res: BenchResult| {
+        println!("{}", res.report());
+        micro.push(res);
+    };
 
     println!("== L3 hot-path microbenches (n={n}, k={k}) ==");
 
@@ -41,7 +65,7 @@ fn main() {
         }
         delta[0]
     });
-    println!("{}", res.report());
+    record(&mut micro, res);
 
     // the shipped streaming version (t-outer, sequential reads)
     let res = bench("delta_colsum streaming (t-outer, after)", &cfg, || {
@@ -55,7 +79,7 @@ fn main() {
         }
         delta[0]
     });
-    println!("{}", res.report());
+    record(&mut micro, res);
 
     // incremental Δ update: Δ −= s·diff²  (the Variant::Incremental path)
     let diff = vec![0.1f64; n];
@@ -65,7 +89,7 @@ fn main() {
         }
         delta[0]
     });
-    println!("{}", res.report());
+    record(&mut micro, res);
 
     // rank-1 R update (Eq. 6): R[0..k] += s·q⊗diff
     let mut rr = vec![0.0f64; k * n];
@@ -80,7 +104,7 @@ fn main() {
         }
         rr[0]
     });
-    println!("{}", res.report());
+    record(&mut micro, res);
 
     // kernel column generation (the oracle cost per selection)
     let mut col = vec![0.0f64; n];
@@ -88,24 +112,26 @@ fn main() {
         kernel_column_into(&ds, &kern, n / 2, &mut col);
         col[0]
     });
-    println!("{}", res.report());
+    record(&mut micro, res);
 
     // end-to-end per-column selection throughput, both variants
-    let small = two_moons(8_000, 0.05, 5);
+    let (sel_n, sel_cols) = if quick { (1_500, 48) } else { (8_000, 128) };
+    let small = two_moons(sel_n, 0.05, 5);
     let skern = Gaussian::with_sigma_fraction(&small, 0.1);
     let oracle = ImplicitOracle::new(&small, &skern);
-    for (label, variant) in [
-        ("oasis_select PaperR  (ℓ=128, n=8000)", Variant::PaperR),
-        ("oasis_select Increm. (ℓ=128, n=8000)", Variant::Incremental),
-    ] {
-        let res = bench(label, &cfg, || {
-            Oasis::new(128, 10, 1e-14, 7)
+    for (variant_name, variant) in
+        [("PaperR ", Variant::PaperR), ("Increm.", Variant::Incremental)]
+    {
+        let label =
+            format!("oasis_select {variant_name} (ℓ={sel_cols}, n={sel_n})");
+        let res = bench(&label, &cfg, || {
+            Oasis::new(sel_cols, 10, 1e-14, 7)
                 .with_variant(variant)
                 .sample(&oracle)
                 .unwrap()
                 .k()
         });
-        println!("{}", res.report());
+        record(&mut micro, res);
     }
 
     // PJRT delta artifact vs native sweep at the artifact shape
@@ -136,7 +162,7 @@ fn main() {
                     )
                     .unwrap()[0][0]
             });
-            println!("{}", res.report());
+            record(&mut micro, res);
             let cc = vec![0.5f64; lp * np];
             let rr2 = vec![0.25f64; lp * np];
             let dd = vec![1.0f64; np];
@@ -151,7 +177,69 @@ fn main() {
                 }
                 out[0]
             });
-            println!("{}", res.report());
+            record(&mut micro, res);
         }
+    }
+
+    // per-method quality trajectory: wall-ms, k, and estimated error on
+    // one shared workload — the rows the CI bench-smoke job publishes
+    let (mq_n, mq_cols) = if quick { (600, 32) } else { (2_000, 64) };
+    println!("\n== method quality (n={mq_n}, ℓ={mq_cols}) ==");
+    let mds = two_moons(mq_n, 0.05, 17);
+    let mkern = Gaussian::with_sigma_fraction(&mds, 0.05);
+    let moracle = ImplicitOracle::new(&mds, &mkern);
+    let samplers: Vec<Box<dyn ColumnSampler>> = vec![
+        Box::new(Oasis::new(mq_cols, 10, 1e-12, 7)),
+        Box::new(Sis::new(mq_cols, 10, 1e-12, 7)),
+        Box::new(IncompleteCholesky::new(mq_cols, 1e-12)),
+        Box::new(Farahat::new(mq_cols)),
+        Box::new(AdaptiveRandom::new(mq_cols, 10, 7)),
+    ];
+    let mut methods = Vec::new();
+    for sampler in samplers {
+        let approx = sampler.sample(&moracle).expect("sampler runs");
+        let err = relative_frobenius_error(&moracle, &approx);
+        let wall_ms = approx.selection_secs * 1e3;
+        println!(
+            "{:16} {:>9.2} ms  k={:<4} error={:.3e}",
+            sampler.name(),
+            wall_ms,
+            approx.k(),
+            err
+        );
+        methods.push(Json::obj(vec![
+            ("method", Json::Str(sampler.name().to_string())),
+            ("k", Json::Num(approx.k() as f64)),
+            ("wall_ms", Json::Num(wall_ms)),
+            ("error", Json::Num(err)),
+        ]));
+    }
+
+    // one JSON document for the CI workflow artifact
+    if let Some(path) = args.get("json") {
+        let doc = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("quick", Json::Bool(quick)),
+            (
+                "micro",
+                Json::Arr(
+                    micro
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::Str(r.name.clone())),
+                                ("median_ms", Json::Num(r.summary.median * 1e3)),
+                                ("min_ms", Json::Num(r.summary.min * 1e3)),
+                                ("max_ms", Json::Num(r.summary.max * 1e3)),
+                                ("reps", Json::Num(r.summary.n as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("methods", Json::Arr(methods)),
+        ]);
+        std::fs::write(path, format!("{doc}\n")).expect("write --json file");
+        println!("\nwrote {path}");
     }
 }

@@ -1,0 +1,630 @@
+//! File-backed datasets: load points from CSV or the crate's binary
+//! matrix format, optionally as per-worker [`Shard`] blocks so oASIS-P
+//! nodes each read only their own column block of Z (the paper's
+//! Algorithm 2 distributed-data setting).
+//!
+//! # Formats
+//!
+//! **CSV** — one point per line, comma-separated numeric fields. Blank
+//! lines and `#` comments are skipped; if the *first* data line contains
+//! any non-numeric field it is treated as a header row and skipped.
+//! Every row must have the same dimensionality and every value must be
+//! finite. Numbers parse with Rust's `str::parse::<f64>` — the same
+//! routine the JSON request parser uses, so a CSV file and the
+//! equivalent inline-points request body yield bit-identical datasets
+//! (and therefore identical oASIS selection sequences).
+//!
+//! **Binary matrix** (`oasis-matrix`) — the same magic-line + JSON
+//! header + framed little-endian f64 payload layout as the artifact
+//! store (see [`crate::util::framing`]):
+//!
+//! ```text
+//! oasis-matrix\n
+//! {"version":1,"n":…,"dim":…,"payload_bytes":…,"checksum":"…"}\n
+//! [u64 LE count][count × f64 LE]      ← n×dim point-major values
+//! ```
+//!
+//! Full loads verify the checksum; [`load_shard`] reads only the
+//! requested worker's byte range of a binary file (constant memory in n
+//! for the other shards) and skips the whole-payload checksum — the
+//! per-section frame bound still catches truncation. Note the in-process
+//! CLI coordinator (`oasis parallel`) currently loads the whole file and
+//! shards in memory; `load_shard` is the building block for deployments
+//! where workers open the file themselves (wiring the coordinator's
+//! workers to it is a ROADMAP follow-up).
+//!
+//! # Caps
+//!
+//! [`LoadLimits`] lets serving callers enforce their existing dataset
+//! caps *during* parsing (the row count is checked as it grows, before
+//! the file is fully materialized). Library/CLI callers use
+//! [`LoadLimits::unlimited`].
+
+use super::{shard_ranges, Dataset, Shard};
+use crate::util::framing::{
+    checksum_hex, fnv1a64, parse_checksum_hex, push_f64_section,
+    split_magic_file, SectionReader,
+};
+use crate::util::json::Json;
+use crate::Result;
+use crate::{anyhow, bail};
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom};
+use std::path::Path;
+
+/// Binary matrix format version.
+pub const MATRIX_FORMAT_VERSION: usize = 1;
+
+/// Magic line opening every binary matrix file (includes the newline).
+pub const MATRIX_MAGIC: &[u8] = b"oasis-matrix\n";
+
+/// Size caps applied while a file loads (mirrors the serving layer's
+/// `MAX_DATASET_*` limits; see `server::protocol`).
+#[derive(Clone, Copy, Debug)]
+pub struct LoadLimits {
+    pub max_n: usize,
+    pub max_dim: usize,
+    /// Cap on total n × dim elements.
+    pub max_elems: u128,
+}
+
+impl LoadLimits {
+    /// No caps (library and CLI use).
+    pub fn unlimited() -> LoadLimits {
+        LoadLimits { max_n: usize::MAX, max_dim: usize::MAX, max_elems: u128::MAX }
+    }
+
+    fn check_dim(&self, dim: usize) -> Result<()> {
+        if dim == 0 {
+            bail!("dataset rows must have dimension ≥ 1");
+        }
+        if dim > self.max_dim {
+            bail!("dataset dimension {dim} exceeds the cap of {}", self.max_dim);
+        }
+        Ok(())
+    }
+
+    fn check_n(&self, n: usize, dim: usize) -> Result<()> {
+        if n > self.max_n {
+            bail!("dataset has more than {} rows", self.max_n);
+        }
+        if (n as u128) * (dim as u128) > self.max_elems {
+            bail!(
+                "dataset n×dim exceeds the cap of {} elements",
+                self.max_elems
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Load a dataset from `path`, sniffing the format: files opening with
+/// the [`MATRIX_MAGIC`] line are binary, anything else parses as CSV.
+pub fn load_dataset(path: &Path, limits: &LoadLimits) -> Result<Dataset> {
+    let mut f = open(path)?;
+    let mut probe = vec![0u8; MATRIX_MAGIC.len()];
+    let is_binary = match f.read_exact(&mut probe) {
+        Ok(()) => probe == MATRIX_MAGIC,
+        Err(_) => false, // shorter than the magic: can only be CSV
+    };
+    f.seek(SeekFrom::Start(0))
+        .map_err(|e| anyhow!("seeking {}: {e}", path.display()))?;
+    let res = if is_binary {
+        load_matrix_file(&mut f, limits)
+    } else {
+        load_csv_reader(BufReader::new(f), limits)
+    };
+    res.map_err(|e| e.wrap(format!("loading dataset {}", path.display())))
+}
+
+/// Load only worker `worker`'s shard (of `p`) from `path` — the
+/// contiguous row block [`shard_ranges`] assigns it. Binary files are
+/// read by byte range (O(shard) memory — the format for large
+/// distributed deployments); CSV files have no row index, so the whole
+/// file is parsed and then sliced (O(n) peak memory per worker).
+pub fn load_shard(
+    path: &Path,
+    worker: usize,
+    p: usize,
+    limits: &LoadLimits,
+) -> Result<Shard> {
+    if worker >= p {
+        bail!("worker {worker} out of range for {p} shards");
+    }
+    let mut f = open(path)?;
+    let mut probe = vec![0u8; MATRIX_MAGIC.len()];
+    let is_binary = match f.read_exact(&mut probe) {
+        Ok(()) => probe == MATRIX_MAGIC,
+        Err(_) => false,
+    };
+    f.seek(SeekFrom::Start(0))
+        .map_err(|e| anyhow!("seeking {}: {e}", path.display()))?;
+    let res = if is_binary {
+        load_matrix_shard(&mut f, worker, p, limits)
+    } else {
+        let ds = load_csv_reader(BufReader::new(f), limits)?;
+        let range = shard_range(ds.n(), worker, p);
+        Ok(Shard {
+            worker,
+            start: range.start,
+            points: ds.slice(range.start, range.end),
+        })
+    };
+    res.map_err(|e| {
+        e.wrap(format!("loading shard {worker}/{p} of {}", path.display()))
+    })
+}
+
+/// Write `ds` to `path` in the binary matrix format.
+pub fn save_matrix(path: &Path, ds: &Dataset) -> Result<usize> {
+    let mut payload = Vec::new();
+    push_f64_section(&mut payload, ds.flat());
+    let header = Json::obj(vec![
+        ("version", Json::Num(MATRIX_FORMAT_VERSION as f64)),
+        ("n", Json::Num(ds.n() as f64)),
+        ("dim", Json::Num(ds.dim() as f64)),
+        ("payload_bytes", Json::Num(payload.len() as f64)),
+        ("checksum", Json::Str(checksum_hex(fnv1a64(&payload)))),
+    ]);
+    let mut out = Vec::with_capacity(MATRIX_MAGIC.len() + payload.len() + 128);
+    out.extend_from_slice(MATRIX_MAGIC);
+    out.extend_from_slice(header.to_string().as_bytes());
+    out.push(b'\n');
+    out.extend_from_slice(&payload);
+    std::fs::write(path, &out)
+        .map_err(|e| anyhow!("writing matrix {}: {e}", path.display()))?;
+    Ok(out.len())
+}
+
+/// Write `ds` to `path` as CSV. Values use Rust's shortest-round-trip
+/// f64 formatting, so `save_csv` → CSV load is bit-exact.
+pub fn save_csv(path: &Path, ds: &Dataset) -> Result<()> {
+    let mut out = String::new();
+    for i in 0..ds.n() {
+        for (j, v) in ds.point(i).iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{v}"));
+        }
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+        .map_err(|e| anyhow!("writing csv {}: {e}", path.display()))
+}
+
+fn open(path: &Path) -> Result<std::fs::File> {
+    std::fs::File::open(path)
+        .map_err(|e| anyhow!("opening {}: {e}", path.display()))
+}
+
+/// Cap on one CSV line: `lines()`-style reading would buffer a
+/// newline-free multi-GB file whole before any per-row limit applied.
+const MAX_CSV_LINE_BYTES: u64 = 16 * 1024 * 1024;
+
+/// Parse CSV text from any reader (exposed for tests and in-memory use
+/// via `load_csv_str`). Reads line-by-line with a per-line byte cap, so
+/// [`LoadLimits`] genuinely bound memory *during* the parse.
+fn load_csv_reader<R: BufRead>(
+    mut reader: R,
+    limits: &LoadLimits,
+) -> Result<Dataset> {
+    let mut dim: Option<usize> = None;
+    let mut data: Vec<f64> = Vec::new();
+    let mut n = 0usize;
+    let mut first_data_line = true;
+    let mut lineno = 0usize;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        let got = std::io::Read::by_ref(&mut reader)
+            .take(MAX_CSV_LINE_BYTES)
+            .read_until(b'\n', &mut buf)
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        if got == 0 {
+            break;
+        }
+        lineno += 1;
+        if buf.last() != Some(&b'\n') && got as u64 == MAX_CSV_LINE_BYTES {
+            bail!("line {lineno}: longer than {MAX_CSV_LINE_BYTES} bytes");
+        }
+        let line = std::str::from_utf8(&buf)
+            .map_err(|_| anyhow!("line {lineno}: not UTF-8"))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        match parse_csv_row(trimmed) {
+            Ok(row) => {
+                match dim {
+                    None => {
+                        limits.check_dim(row.len())?;
+                        dim = Some(row.len());
+                    }
+                    Some(d) if d != row.len() => bail!(
+                        "line {lineno}: row has {} fields but previous \
+                         rows have {d}",
+                        row.len()
+                    ),
+                    _ => {}
+                }
+                n += 1;
+                limits.check_n(n, dim.unwrap())?;
+                data.extend_from_slice(&row);
+                first_data_line = false;
+            }
+            Err(e) => {
+                // Only a *fully* non-numeric first line is a header row
+                // ("x,y", "id,value"). A first data row with one bad
+                // field ("0.5,inf", "1.0,2x") must error like any other
+                // row — silently skipping it would shift every row index.
+                let is_header = first_data_line
+                    && trimmed
+                        .split(',')
+                        .all(|f| f.trim().parse::<f64>().is_err());
+                if is_header {
+                    first_data_line = false;
+                    continue;
+                }
+                return Err(e.wrap(format!("line {lineno}")));
+            }
+        }
+    }
+    match dim {
+        Some(d) if n > 0 => Ok(Dataset::from_flat(d, data)),
+        _ => bail!("no data rows found"),
+    }
+}
+
+/// Parse one CSV data row into finite f64 fields.
+fn parse_csv_row(line: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for field in line.split(',') {
+        let field = field.trim();
+        if field.is_empty() {
+            bail!("empty field");
+        }
+        let x: f64 = field
+            .parse()
+            .map_err(|_| anyhow!("field {field:?} is not a number"))?;
+        if !x.is_finite() {
+            bail!("field {field:?} is not finite");
+        }
+        out.push(x);
+    }
+    Ok(out)
+}
+
+/// Read the binary header (magic + JSON line) off `f`, returning
+/// `(n, dim, payload_bytes, checksum, payload_offset)`.
+fn read_matrix_header(
+    f: &mut std::fs::File,
+) -> Result<(usize, usize, usize, u64, u64)> {
+    // headers are small; read a bounded prefix to find the two newlines
+    let mut prefix = vec![0u8; 4096];
+    let got = read_up_to(f, &mut prefix)?;
+    let prefix = &prefix[..got];
+    let (header_str, _) = split_magic_file(prefix, MATRIX_MAGIC, "oasis matrix")?;
+    let header_end = MATRIX_MAGIC.len() + header_str.len() + 1;
+    let h = Json::parse(header_str).map_err(|e| anyhow!("matrix header: {e}"))?;
+    let version = h
+        .get("version")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("matrix header missing version"))?;
+    if version != MATRIX_FORMAT_VERSION {
+        bail!(
+            "unsupported matrix version {version} (this build reads version \
+             {MATRIX_FORMAT_VERSION})"
+        );
+    }
+    let field = |key: &str| -> Result<usize> {
+        h.get(key)
+            .and_then(Json::as_f64)
+            .filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0)
+            .map(|x| x as usize)
+            .ok_or_else(|| anyhow!("matrix header field '{key}' missing"))
+    };
+    let n = field("n")?;
+    let dim = field("dim")?;
+    let payload_bytes = field("payload_bytes")?;
+    let checksum = parse_checksum_hex(
+        h.get("checksum")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("matrix header missing checksum"))?,
+    )?;
+    if n == 0 || dim == 0 {
+        bail!("matrix header has empty dimensions (n={n}, dim={dim})");
+    }
+    Ok((n, dim, payload_bytes, checksum, header_end as u64))
+}
+
+/// `Read::read` until the buffer is full or EOF; returns bytes read.
+fn read_up_to(f: &mut std::fs::File, buf: &mut [u8]) -> Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        let k = f.read(&mut buf[got..]).map_err(|e| anyhow!("read: {e}"))?;
+        if k == 0 {
+            break;
+        }
+        got += k;
+    }
+    Ok(got)
+}
+
+/// `n × dim` with overflow-checked arithmetic: a crafted header must be
+/// a clean error, not a panic or a wrapped-to-zero allocation.
+fn checked_matrix_elems(n: usize, dim: usize) -> Result<usize> {
+    let elems = (n as u128) * (dim as u128);
+    if elems > (1u128 << 48) {
+        bail!("matrix header implies an implausible size ({n}×{dim})");
+    }
+    Ok(elems as usize)
+}
+
+fn load_matrix_file(f: &mut std::fs::File, limits: &LoadLimits) -> Result<Dataset> {
+    let (n, dim, payload_bytes, checksum, offset) = read_matrix_header(f)?;
+    limits.check_dim(dim)?;
+    limits.check_n(n, dim)?;
+    let elems = checked_matrix_elems(n, dim)?;
+    // the payload must be exactly the one framed section n×dim implies —
+    // checked *before* reading, so a small header cannot front an
+    // arbitrarily large read
+    if payload_bytes != 8 + elems * 8 {
+        bail!(
+            "matrix payload_bytes {payload_bytes} inconsistent with \
+             n×dim = {n}×{dim}"
+        );
+    }
+    f.seek(SeekFrom::Start(offset)).map_err(|e| anyhow!("seek: {e}"))?;
+    let mut payload = Vec::new();
+    // +1 so trailing garbage is detected without materializing it
+    f.take(payload_bytes as u64 + 1)
+        .read_to_end(&mut payload)
+        .map_err(|e| anyhow!("read: {e}"))?;
+    if payload.len() != payload_bytes {
+        bail!(
+            "matrix payload is {} bytes but the header promises \
+             {payload_bytes} (truncated or trailing garbage)",
+            if payload.len() > payload_bytes {
+                format!("over {payload_bytes}")
+            } else {
+                payload.len().to_string()
+            }
+        );
+    }
+    let got = fnv1a64(&payload);
+    if got != checksum {
+        bail!(
+            "matrix checksum mismatch: payload hashes to {} but the header \
+             says {} (corrupted file)",
+            checksum_hex(got),
+            checksum_hex(checksum)
+        );
+    }
+    let mut r = SectionReader::new(&payload);
+    let data = r.read_f64_section(elems, "matrix values")?;
+    if r.remaining() != 0 {
+        bail!("matrix payload has {} unread trailing bytes", r.remaining());
+    }
+    for (i, &v) in data.iter().enumerate() {
+        if !v.is_finite() {
+            bail!("matrix value {i} is not finite");
+        }
+    }
+    Ok(Dataset::from_flat(dim, data))
+}
+
+/// Read only one worker's row block of a binary matrix: seek past the
+/// frame's length prefix to `start×dim` values and read `len×dim`.
+fn load_matrix_shard(
+    f: &mut std::fs::File,
+    worker: usize,
+    p: usize,
+    limits: &LoadLimits,
+) -> Result<Shard> {
+    let (n, dim, payload_bytes, _checksum, offset) = read_matrix_header(f)?;
+    limits.check_dim(dim)?;
+    limits.check_n(n, dim)?;
+    let elems = checked_matrix_elems(n, dim)?;
+    if payload_bytes != 8 + elems * 8 {
+        bail!(
+            "matrix payload_bytes {} inconsistent with n×dim = {}×{}",
+            payload_bytes,
+            n,
+            dim
+        );
+    }
+    let range = shard_range(n, worker, p);
+    let count = (range.end - range.start) * dim;
+    // offset → [u64 frame count][values…]; verify the frame count first
+    f.seek(SeekFrom::Start(offset)).map_err(|e| anyhow!("seek: {e}"))?;
+    let mut lenbuf = [0u8; 8];
+    f.read_exact(&mut lenbuf)
+        .map_err(|e| anyhow!("reading frame header: {e}"))?;
+    let framed = u64::from_le_bytes(lenbuf);
+    if framed != elems as u64 {
+        bail!("matrix frame holds {framed} values but the header implies {elems}");
+    }
+    f.seek(SeekFrom::Current((range.start * dim * 8) as i64))
+        .map_err(|e| anyhow!("seek: {e}"))?;
+    let mut raw = vec![0u8; count * 8];
+    f.read_exact(&mut raw)
+        .map_err(|e| anyhow!("reading shard rows: {e} (truncated file?)"))?;
+    let mut data = Vec::with_capacity(count);
+    for chunk in raw.chunks_exact(8) {
+        let v = f64::from_le_bytes(chunk.try_into().unwrap());
+        if !v.is_finite() {
+            bail!("shard value is not finite");
+        }
+        data.push(v);
+    }
+    Ok(Shard {
+        worker,
+        start: range.start,
+        points: Dataset::from_flat(dim, data),
+    })
+}
+
+/// This worker's row range. [`shard_ranges`] yields `min(p, n)` ranges
+/// (never an empty one), so workers past that own an empty block at the
+/// end — mirroring how `shard::split` would leave them without a shard.
+fn shard_range(n: usize, worker: usize, p: usize) -> std::ops::Range<usize> {
+    shard_ranges(n, p).get(worker).cloned().unwrap_or(n..n)
+}
+
+/// Parse CSV from an in-memory string (tests, inline comparisons).
+pub fn load_csv_str(text: &str, limits: &LoadLimits) -> Result<Dataset> {
+    load_csv_reader(BufReader::new(text.as_bytes()), limits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::data::shard::split;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("oasis-loader-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn csv_parses_with_comments_header_and_blank_lines() {
+        let text = "# a comment\nx,y\n\n1.5,2.5\n-3,4e-2\n# mid comment\n0.1,0.2\n";
+        let ds = load_csv_str(text, &LoadLimits::unlimited()).unwrap();
+        assert_eq!((ds.n(), ds.dim()), (3, 2));
+        assert_eq!(ds.point(0), &[1.5, 2.5]);
+        assert_eq!(ds.point(1), &[-3.0, 0.04]);
+    }
+
+    #[test]
+    fn csv_rejects_bad_rows() {
+        let lim = LoadLimits::unlimited();
+        // ragged
+        assert!(load_csv_str("1,2\n3\n", &lim).is_err());
+        // non-numeric after the first data row
+        assert!(load_csv_str("1,2\nx,y\n", &lim).is_err());
+        // non-finite
+        assert!(load_csv_str("1,inf\n", &lim).is_err());
+        // empty field
+        assert!(load_csv_str("1,,2\n", &lim).is_err());
+        // nothing at all
+        assert!(load_csv_str("# only comments\n", &lim).is_err());
+    }
+
+    /// A malformed *first* data row must error, not be silently skipped
+    /// as a header — skipping would shift every row index by one.
+    #[test]
+    fn csv_header_sniffing_is_strict() {
+        let lim = LoadLimits::unlimited();
+        // partially-numeric first lines are data with an error
+        assert!(load_csv_str("0.5,inf\n1,2\n", &lim).is_err());
+        assert!(load_csv_str("1.0,2x\n1,2\n", &lim).is_err());
+        assert!(load_csv_str("x,1\n1,2\n", &lim).is_err());
+        // fully non-numeric first line is still a header
+        let ds = load_csv_str("id,value\n1,2\n3,4\n", &lim).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.point(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn csv_limits_enforced_during_parse() {
+        let lim = LoadLimits { max_n: 2, max_dim: 8, max_elems: u128::MAX };
+        assert!(load_csv_str("1\n2\n", &lim).is_ok());
+        assert!(load_csv_str("1\n2\n3\n", &lim).is_err());
+        let lim = LoadLimits { max_n: 100, max_dim: 1, max_elems: u128::MAX };
+        assert!(load_csv_str("1,2\n", &lim).is_err());
+    }
+
+    #[test]
+    fn binary_matrix_round_trips_bit_exactly() {
+        let ds = two_moons(37, 0.05, 9);
+        let path = tmp("roundtrip.mat");
+        save_matrix(&path, &ds).unwrap();
+        let back = load_dataset(&path, &LoadLimits::unlimited()).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.dim(), ds.dim());
+        for (a, b) in ds.flat().iter().zip(back.flat()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_save_load_round_trips_bit_exactly() {
+        let ds = two_moons(23, 0.05, 4);
+        let path = tmp("roundtrip.csv");
+        save_csv(&path, &ds).unwrap();
+        let back = load_dataset(&path, &LoadLimits::unlimited()).unwrap();
+        assert_eq!(back.dim(), ds.dim());
+        for (a, b) in ds.flat().iter().zip(back.flat()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "shortest-round-trip failed");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn binary_corruption_and_truncation_rejected() {
+        let ds = two_moons(10, 0.05, 1);
+        let path = tmp("corrupt.mat");
+        save_matrix(&path, &ds).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        // truncated
+        let cut_path = tmp("cut.mat");
+        std::fs::write(&cut_path, &bytes[..bytes.len() - 5]).unwrap();
+        let err = load_dataset(&cut_path, &LoadLimits::unlimited()).unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+
+        // flipped payload byte
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        let flip_path = tmp("flip.mat");
+        std::fs::write(&flip_path, &flipped).unwrap();
+        let err = load_dataset(&flip_path, &LoadLimits::unlimited()).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+
+        // wrong version
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let bumped = text.replacen("\"version\":1", "\"version\":9", 1);
+        let v_path = tmp("badver.mat");
+        std::fs::write(&v_path, bumped.as_bytes()).unwrap();
+        let err = load_dataset(&v_path, &LoadLimits::unlimited()).unwrap_err();
+        assert!(format!("{err}").contains("version 9"), "{err}");
+
+        for p in [&path, &cut_path, &flip_path, &v_path] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    /// `load_shard` must reproduce exactly what in-memory sharding of the
+    /// full dataset produces, for both formats.
+    #[test]
+    fn shard_loads_match_in_memory_split() {
+        let ds = two_moons(53, 0.05, 6);
+        let lim = LoadLimits::unlimited();
+        let bin = tmp("shards.mat");
+        let csv = tmp("shards.csv");
+        save_matrix(&bin, &ds).unwrap();
+        save_csv(&csv, &ds).unwrap();
+        let p = 4;
+        let want = split(&ds, p);
+        for path in [&bin, &csv] {
+            for w in 0..p {
+                let shard = load_shard(path, w, p, &lim).unwrap();
+                assert_eq!(shard.worker, want[w].worker);
+                assert_eq!(shard.start, want[w].start);
+                assert_eq!(shard.points.n(), want[w].points.n());
+                for (a, b) in
+                    shard.points.flat().iter().zip(want[w].points.flat())
+                {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+        assert!(load_shard(&bin, p, p, &lim).is_err(), "worker out of range");
+        std::fs::remove_file(&bin).ok();
+        std::fs::remove_file(&csv).ok();
+    }
+}

@@ -1,9 +1,13 @@
 //! Datasets: the point container, the synthetic generators matching the
-//! paper's evaluation workloads, and sharding for oASIS-P.
+//! paper's evaluation workloads, sharding for oASIS-P, and file-backed
+//! loading (CSV / binary matrix, whole or per-worker shard) in
+//! [`loader`].
 
 pub mod dataset;
 pub mod generators;
+pub mod loader;
 pub mod shard;
 
 pub use dataset::Dataset;
+pub use loader::{load_dataset, load_shard, save_csv, save_matrix, LoadLimits};
 pub use shard::{shard_ranges, Shard};

@@ -15,6 +15,58 @@ pub trait Kernel: Sync {
 
     /// Human-readable name for logs/tables.
     fn name(&self) -> &'static str;
+
+    /// The kernel's *resolved* parameters, if it can be reconstructed
+    /// from plain numbers — what the artifact store persists so a saved
+    /// approximation can answer out-of-sample queries without the
+    /// original kernel object. `None` (the default) marks kernels that
+    /// are not storable (e.g. data-dependent or ad-hoc test kernels).
+    fn params(&self) -> Option<KernelParams> {
+        None
+    }
+}
+
+/// Resolved, serializable kernel parameters. Unlike the serving layer's
+/// request-side kernel spec (which may say "σ = 5% of the max pairwise
+/// distance"), these are the concrete numbers a built kernel evaluates
+/// with, so [`build`](KernelParams::build) reproduces it bit-exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelParams {
+    /// `exp(-‖a-b‖² · inv_sigma_sq)` — stored pre-inverted, exactly as
+    /// [`Gaussian`] holds it.
+    Gaussian { inv_sigma_sq: f64 },
+    Linear,
+    /// `exp(-‖a-b‖₁ · inv_sigma)`.
+    Laplacian { inv_sigma: f64 },
+    Polynomial { degree: u32, offset: f64 },
+}
+
+impl KernelParams {
+    /// Canonical type name (shared with the CLI/server kernel spellings).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelParams::Gaussian { .. } => "gaussian",
+            KernelParams::Linear => "linear",
+            KernelParams::Laplacian { .. } => "laplacian",
+            KernelParams::Polynomial { .. } => "polynomial",
+        }
+    }
+
+    /// Rebuild the kernel these parameters came from.
+    pub fn build(&self) -> Box<dyn Kernel + Send + Sync> {
+        match *self {
+            KernelParams::Gaussian { inv_sigma_sq } => {
+                Box::new(Gaussian { inv_sigma_sq })
+            }
+            KernelParams::Linear => Box::new(Linear),
+            KernelParams::Laplacian { inv_sigma } => {
+                Box::new(Laplacian { inv_sigma })
+            }
+            KernelParams::Polynomial { degree, offset } => {
+                Box::new(Polynomial { degree, offset })
+            }
+        }
+    }
 }
 
 #[inline]
@@ -81,6 +133,10 @@ impl Kernel for Gaussian {
     fn name(&self) -> &'static str {
         "gaussian"
     }
+
+    fn params(&self) -> Option<KernelParams> {
+        Some(KernelParams::Gaussian { inv_sigma_sq: self.inv_sigma_sq })
+    }
 }
 
 /// Linear kernel `aᵀb` — yields the Gram matrix `G = ZᵀZ` of the theory
@@ -96,6 +152,10 @@ impl Kernel for Linear {
 
     fn name(&self) -> &'static str {
         "linear"
+    }
+
+    fn params(&self) -> Option<KernelParams> {
+        Some(KernelParams::Linear)
     }
 }
 
@@ -127,6 +187,10 @@ impl Kernel for Laplacian {
     fn name(&self) -> &'static str {
         "laplacian"
     }
+
+    fn params(&self) -> Option<KernelParams> {
+        Some(KernelParams::Laplacian { inv_sigma: self.inv_sigma })
+    }
 }
 
 /// Polynomial kernel `(aᵀb + c)^d`.
@@ -144,6 +208,13 @@ impl Kernel for Polynomial {
 
     fn name(&self) -> &'static str {
         "polynomial"
+    }
+
+    fn params(&self) -> Option<KernelParams> {
+        Some(KernelParams::Polynomial {
+            degree: self.degree,
+            offset: self.offset,
+        })
     }
 }
 
@@ -182,6 +253,32 @@ mod tests {
     fn polynomial_known() {
         let k = Polynomial { degree: 2, offset: 1.0 };
         assert_eq!(k.eval(&[1.0, 1.0], &[2.0, 3.0]), 36.0);
+    }
+
+    /// `params()` → `build()` must reproduce the kernel bit-exactly —
+    /// the artifact store round-trips kernels through this pair.
+    #[test]
+    fn params_rebuild_evaluates_identically() {
+        let a = [0.3, -1.7, 2.0];
+        let b = [1.1, 0.4, -0.9];
+        let kernels: Vec<Box<dyn Kernel + Send + Sync>> = vec![
+            Box::new(Gaussian::new(0.73)),
+            Box::new(Linear),
+            Box::new(Laplacian::new(2.4)),
+            Box::new(Polynomial { degree: 3, offset: 0.5 }),
+        ];
+        for k in kernels {
+            let p = k.params().expect("concrete kernels are storable");
+            let rebuilt = p.build();
+            assert_eq!(rebuilt.name(), k.name());
+            assert_eq!(
+                rebuilt.eval(&a, &b).to_bits(),
+                k.eval(&a, &b).to_bits(),
+                "{} diverged after params round-trip",
+                k.name()
+            );
+            assert_eq!(rebuilt.params(), Some(p));
+        }
     }
 
     #[test]

@@ -14,4 +14,6 @@ pub use builder::{
     kernel_column_into, kernel_cross_columns_into, kernel_diag, kernel_matrix,
 };
 pub use diffusion::diffusion_normalize;
-pub use functions::{Gaussian, Kernel, Laplacian, Linear, Polynomial};
+pub use functions::{
+    Gaussian, Kernel, KernelParams, Laplacian, Linear, Polynomial,
+};

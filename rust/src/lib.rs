@@ -83,6 +83,25 @@
 //!
 //! The full endpoint/payload reference is in the [`server`] module docs;
 //! `examples/serve_client.rs` drives the same lifecycle from Rust.
+//!
+//! ## Quickstart: persistence
+//!
+//! Finished (or snapshot) approximations can outlive their process: the
+//! artifact store ([`nystrom::store`]) serializes indices, factors, the
+//! selected points, and the resolved kernel to a checksummed on-disk
+//! format, and the loaded artifact answers out-of-sample extension
+//! queries **without** the original dataset or oracle. Datasets load
+//! from CSV or binary matrix files ([`data::loader`]), whole or as
+//! per-worker shards. End to end:
+//!
+//! ```bash
+//! oasis approximate --data train.csv --cols 200 --save model.oasis
+//! oasis query --load model.oasis --points "0.5,0.2" --targets 0,17
+//! # …or over HTTP: POST /sessions/{name}/save, POST /artifacts/load,
+//! #                POST /artifacts/{name}/query
+//! ```
+//!
+//! `examples/persist_and_query.rs` drives the same round trip in Rust.
 
 pub mod bench_support;
 pub mod coordinator;

@@ -2,20 +2,28 @@
 //!
 //! Subcommands:
 //!   approximate  run one sampler on one dataset, report error + runtime
+//!                (optionally save the result as a stored artifact)
+//!   query        answer out-of-sample extensions from a stored artifact
+//!                without the original dataset or kernel oracle
 //!   parallel     run the distributed oASIS-P coordinator
 //!   serve        host concurrent resumable sessions over HTTP/JSON
 //!   info         show the artifact manifest and PJRT platform
 //!
 //! Examples:
 //!   oasis approximate --dataset two-moons --n 2000 --cols 450 --method oasis
+//!   oasis approximate --data points.csv --cols 100 --save model.oasis
+//!   oasis query --load model.oasis --points "0.5,0.2;1.0,-0.3" --targets 0,5
 //!   oasis parallel --dataset two-moons --n 100000 --cols 500 --workers 8
-//!   oasis serve --port 7437
+//!   oasis serve --port 7437 --fs-root .
 //!   oasis info
 
 use oasis::coordinator::{run_oasis_p, OasisPConfig};
-use oasis::data::{generators, Dataset};
+use oasis::data::{generators, loader, Dataset, LoadLimits};
 use oasis::kernels::{Gaussian, Kernel, Linear};
-use oasis::nystrom::{relative_frobenius_error, sampled_relative_error, NystromApprox};
+use oasis::nystrom::{
+    relative_frobenius_error, sampled_relative_error, NystromApprox,
+    Provenance, StoredArtifact,
+};
 use oasis::runtime::{Accel, Manifest};
 use oasis::sampling::{
     farahat::Farahat, kmeans::KMeansNystrom, leverage::LeverageScores,
@@ -25,6 +33,7 @@ use oasis::sampling::{
 use oasis::util::args::Args;
 use oasis::util::json::Json;
 use oasis::util::timing::fmt_secs;
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -33,6 +42,7 @@ fn main() {
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let code = match cmd {
         "approximate" => cmd_approximate(&args),
+        "query" => cmd_query(&args),
         "parallel" => cmd_parallel(&args),
         "seed" => cmd_seed(&args),
         "serve" => cmd_serve(&args),
@@ -49,10 +59,15 @@ fn print_help() {
     println!(
         "oasis — adaptive column sampling for kernel matrix approximation\n\
          \n\
-         USAGE: oasis <approximate|parallel|serve|info> [options]\n\
+         USAGE: oasis <approximate|query|parallel|serve|info> [options]\n\
          \n\
          approximate options:\n\
            --dataset   two-moons|abalone|borg|mnist|salinas|lightfield (default two-moons)\n\
+           --data      load the dataset from a file instead (CSV or\n\
+                       oasis-matrix binary; overrides --dataset/--n)\n\
+           --save      write the finished approximation as a stored\n\
+                       artifact (indices, factors, selected points,\n\
+                       kernel — see oasis::nystrom::store)\n\
            --n         dataset size (default 2000)\n\
            --cols      columns to sample ℓ (default 450)\n\
            --method    oasis|random|leverage|farahat|kmeans (default oasis)\n\
@@ -68,8 +83,16 @@ fn print_help() {
            --json      structured one-line JSON output (method, k,\n\
                        error, secs, stop)\n\
          \n\
+         query options (serve a stored artifact, no oracle needed):\n\
+           --load      artifact file written by approximate --save or the\n\
+                       server's POST /sessions/{{name}}/save (required)\n\
+           --points    query points \"x,y;x,y;…\" (omit for a summary)\n\
+           --targets   row indices i to evaluate ĝ(z, i) at, \"0,5,11\"\n\
+           --json      structured one-line JSON output\n\
+         \n\
          parallel options:\n\
            --dataset/--n/--cols/--sigma-frac/--seed as above\n\
+           --data      dataset from a file, as in approximate\n\
            --workers   node count p (default 8)\n\
            --tol       stopping tolerance (default 1e-12)\n\
          \n\
@@ -83,11 +106,23 @@ fn print_help() {
          the oasis::server module docs):\n\
            --host      bind address (default 127.0.0.1)\n\
            --port      TCP port; 0 picks an ephemeral port, printed on\n\
-                       the \"listening\" line (default 7437)\n"
+                       the \"listening\" line (default 7437)\n\
+           --fs-root   directory under which client-supplied paths\n\
+                       (dataset files, artifact save/load) resolve\n\
+                       (default \".\")\n"
     );
 }
 
 fn make_dataset(args: &Args) -> Dataset {
+    if let Some(path) = args.get("data") {
+        match loader::load_dataset(Path::new(path), &LoadLimits::unlimited()) {
+            Ok(ds) => return ds,
+            Err(e) => {
+                eprintln!("could not load --data {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     let name = args.get_or("dataset", "two-moons");
     let n = args.usize_or("n", 2000);
     // XOR so dataset and sampler RNG streams differ for the same --seed
@@ -99,6 +134,15 @@ fn make_dataset(args: &Args) -> Dataset {
             eprintln!("unknown dataset '{name}'");
             std::process::exit(2);
         }
+    }
+}
+
+/// Label for report lines and artifact provenance: the file path when
+/// `--data` is given, else the generator spelling.
+fn dataset_label(args: &Args) -> String {
+    match args.get("data") {
+        Some(p) => format!("file:{p}"),
+        None => args.get_or("dataset", "two-moons"),
     }
 }
 
@@ -133,7 +177,7 @@ fn report_approximate(
 ) {
     if args.flag("json") {
         let mut fields = vec![
-            ("dataset", Json::Str(args.get_or("dataset", "two-moons"))),
+            ("dataset", Json::Str(dataset_label(args))),
             ("n", Json::Num(ds.n() as f64)),
             ("dim", Json::Num(ds.dim() as f64)),
             ("method", Json::Str(method.to_string())),
@@ -152,7 +196,7 @@ fn report_approximate(
             .unwrap_or_default();
         println!(
             "dataset={} n={} dim={} method={} cols={} error={:.3e} select_time={}{}",
-            args.get_or("dataset", "two-moons"),
+            dataset_label(args),
             ds.n(),
             ds.dim(),
             method,
@@ -265,7 +309,185 @@ fn cmd_approximate(args: &Args) -> i32 {
         sampled_relative_error(&oracle, &approx, 100_000, seed ^ 0xE44)
     };
     report_approximate(args, &ds, &method, &approx, err, stop);
+    if let Some(out) = args.get("save") {
+        // selected points + resolved kernel ride along, so `oasis query
+        // --load` can answer extensions without this dataset. Runs after
+        // the report so the approximation moves into the artifact
+        // instead of being cloned (C alone is n×k).
+        let save = StoredArtifact::from_parts(
+            approx,
+            &ds,
+            kernel,
+            Provenance { source: dataset_label(args), method: method.clone() },
+            Some(err),
+        )
+        .and_then(|artifact| artifact.save(Path::new(out)));
+        match save {
+            // stderr so `--json` stdout stays a single parseable line
+            Ok(bytes) => eprintln!("saved artifact to {out} ({bytes} bytes)"),
+            Err(e) => {
+                eprintln!("--save {out} failed: {e}");
+                return 1;
+            }
+        }
+    }
     0
+}
+
+/// Serve extension queries from a stored artifact — no dataset, no
+/// kernel oracle, just the file written by `approximate --save` or the
+/// server's save endpoint.
+fn cmd_query(args: &Args) -> i32 {
+    let path = match args.get("load") {
+        Some(p) => p,
+        None => {
+            eprintln!("query requires --load <artifact file>");
+            return 2;
+        }
+    };
+    let artifact = match StoredArtifact::load(Path::new(path)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("query: {e}");
+            return 1;
+        }
+    };
+    let points = match args.get("points").map(parse_points) {
+        None => Vec::new(),
+        Some(Ok(p)) => p,
+        Some(Err(e)) => {
+            eprintln!("--points: {e}");
+            return 2;
+        }
+    };
+    let targets = match args.get("targets").map(parse_indices) {
+        None => Vec::new(),
+        Some(Ok(t)) => t,
+        Some(Err(e)) => {
+            eprintln!("--targets: {e}");
+            return 2;
+        }
+    };
+    if points.is_empty() {
+        // no query points: report what the artifact holds
+        if args.flag("json") {
+            println!("{}", artifact.summary_json());
+        } else {
+            println!(
+                "artifact {path}: n={} k={} dim={} kernel={} method={} \
+                 source={} error_estimate={}",
+                artifact.n(),
+                artifact.k(),
+                artifact.dim(),
+                artifact.kernel.name(),
+                artifact.provenance.method,
+                artifact.provenance.source,
+                artifact
+                    .error_estimate
+                    .map(|e| format!("{e:.3e}"))
+                    .unwrap_or_else(|| "n/a".into()),
+            );
+        }
+        return 0;
+    }
+    let mut results = Vec::with_capacity(points.len());
+    for (i, z) in points.iter().enumerate() {
+        let w = match artifact.query_weights(z) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("query point {i}: {e}");
+                return 1;
+            }
+        };
+        let vals = match artifact.extend(&w, &targets) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("query point {i}: {e}");
+                return 1;
+            }
+        };
+        results.push((w, vals));
+    }
+    if args.flag("json") {
+        let arr: Vec<Json> = results
+            .iter()
+            .map(|(w, vals)| {
+                let mut fields = vec![(
+                    "weights",
+                    Json::Arr(w.iter().map(|&x| Json::Num(x)).collect()),
+                )];
+                if !targets.is_empty() {
+                    fields.push((
+                        "kernel",
+                        Json::Arr(vals.iter().map(|&x| Json::Num(x)).collect()),
+                    ));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("k", Json::Num(artifact.k() as f64)),
+                ("results", Json::Arr(arr)),
+            ])
+        );
+    } else {
+        for (i, (w, vals)) in results.iter().enumerate() {
+            if targets.is_empty() {
+                let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+                println!("point {i}: weights k={} ‖w‖={norm:.6e}", w.len());
+            } else {
+                let rendered: Vec<String> = targets
+                    .iter()
+                    .zip(vals)
+                    .map(|(t, v)| format!("g({t})={v:.6e}"))
+                    .collect();
+                println!("point {i}: {}", rendered.join(" "));
+            }
+        }
+    }
+    0
+}
+
+/// Parse `"x,y;x,y;…"` into query points.
+fn parse_points(s: &str) -> Result<Vec<Vec<f64>>, String> {
+    let mut out = Vec::new();
+    for (i, part) in s.split(';').enumerate() {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let mut row = Vec::new();
+        for field in part.split(',') {
+            let x: f64 = field
+                .trim()
+                .parse()
+                .map_err(|_| format!("point {i}: {field:?} is not a number"))?;
+            // same rule as the server's query parser and the CSV loader
+            if !x.is_finite() {
+                return Err(format!("point {i}: {field:?} is not finite"));
+            }
+            row.push(x);
+        }
+        out.push(row);
+    }
+    if out.is_empty() {
+        return Err("no points given".into());
+    }
+    Ok(out)
+}
+
+/// Parse `"0,5,11"` into row indices.
+fn parse_indices(s: &str) -> Result<Vec<usize>, String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse::<usize>()
+                .map_err(|_| format!("{t:?} is not an index"))
+        })
+        .collect()
 }
 
 fn cmd_parallel(args: &Args) -> i32 {
@@ -350,13 +572,20 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("--port must be ≤ {}", u16::MAX);
         return 2;
     }
-    let server = match oasis::server::Server::bind(&format!("{host}:{port}")) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("serve: could not bind {host}:{port}: {e}");
-            return 1;
-        }
-    };
+    let fs_root = std::path::PathBuf::from(args.get_or("fs-root", "."));
+    if !fs_root.is_dir() {
+        eprintln!("serve: --fs-root {} is not a directory", fs_root.display());
+        return 2;
+    }
+    let config = oasis::server::ServerConfig { fs_root };
+    let server =
+        match oasis::server::Server::bind_with(&format!("{host}:{port}"), config) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: could not bind {host}:{port}: {e}");
+                return 1;
+            }
+        };
     match server.local_addr() {
         Ok(addr) => println!("oasis serve listening on http://{addr}"),
         Err(e) => {

@@ -5,9 +5,11 @@ pub mod approx;
 pub mod assembly;
 pub mod embedding;
 pub mod error;
+pub mod store;
 pub mod svd;
 
 pub use approx::NystromApprox;
 pub use assembly::{approx_from_colmajor, IncrementalAssembler};
 pub use error::{relative_frobenius_error, sampled_relative_error};
+pub use store::{Provenance, StoredArtifact};
 pub use svd::nystrom_eig;

@@ -1,0 +1,706 @@
+//! Persistent approximation artifacts: serialize a finished (or
+//! snapshot) [`NystromApprox`] to disk and load it back bit-identically,
+//! so a factorization can outlive the process/session that computed it
+//! and keep answering out-of-sample extension queries **without** the
+//! original dataset or kernel oracle.
+//!
+//! What makes that possible: the Nyström extension `ĝ(z, i) = b(z)ᵀ W⁻¹
+//! C(i, :)` only ever evaluates the kernel against the *k selected*
+//! points (`b_t = k(z, x_{Λ(t)})`), so an artifact that carries Λ, `C`,
+//! `W⁻¹`, the k selected points, and the kernel's resolved parameters
+//! ([`KernelParams`]) is a complete, self-contained query server for the
+//! approximation — the other n−k points are never needed again.
+//!
+//! # On-disk format (version 1)
+//!
+//! ```text
+//! oasis-artifact\n                 ← ASCII magic line
+//! {…json header…}\n                ← one line, crate JSON (util::json)
+//! <binary payload>                 ← framed little-endian f64 sections
+//! ```
+//!
+//! Header fields: `version` (must be 1), `n`, `k`, `dim`, `indices`
+//! (array of k column indices in selection order), `kernel` (`{"type":
+//! …}` plus resolved numeric parameters), `provenance` (`{"source",
+//! "method"}` — where the data came from and which sampler selected Λ),
+//! `error_estimate` (number or null), `selection_secs`,
+//! `payload_bytes`, and `checksum` (FNV-1a 64 of the payload, 16 hex
+//! digits).
+//!
+//! Payload sections, in order, each framed as `[u64 LE count][count ×
+//! f64 LE]` (see [`crate::util::framing`]):
+//!
+//! 1. `C` — n×k, row-major
+//! 2. `W⁻¹` — k×k, row-major
+//! 3. selected points `Z_Λ` — k×dim, point-major
+//!
+//! Loads verify, in order: magic, header JSON, version, dimensional
+//! consistency (index count/ranges, section sizes), payload byte count,
+//! and checksum — so truncated, corrupted, or wrong-version files are
+//! rejected with a clear error before any value is used. All floats
+//! round-trip bit-exactly (binary f64 in the payload; the JSON header's
+//! numbers use the crate serializer's shortest-round-trip formatting).
+
+use crate::data::Dataset;
+use crate::kernels::{Kernel, KernelParams};
+use crate::linalg::Mat;
+use crate::nystrom::NystromApprox;
+use crate::util::framing::{
+    checksum_hex, fnv1a64, parse_checksum_hex, push_f64_section,
+    split_magic_file, SectionReader,
+};
+use crate::util::json::Json;
+use crate::Result;
+use crate::{anyhow, bail};
+use std::path::Path;
+
+/// Current artifact format version.
+pub const FORMAT_VERSION: usize = 1;
+
+/// Magic line opening every artifact file (includes the newline).
+pub const MAGIC: &[u8] = b"oasis-artifact\n";
+
+/// Where an artifact's approximation came from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Provenance {
+    /// Dataset description, e.g. `generator:two-moons?n=2000&seed=7`,
+    /// `file:digits.csv`, or `points:n=12`.
+    pub source: String,
+    /// Sampler that selected Λ (e.g. "oASIS").
+    pub method: String,
+}
+
+/// A self-contained, persistable Nyström approximation: the factors, the
+/// selected points, and the resolved kernel — everything needed to
+/// answer [`query`](StoredArtifact::query) without the original oracle.
+#[derive(Clone, Debug)]
+pub struct StoredArtifact {
+    pub approx: NystromApprox,
+    pub kernel: KernelParams,
+    /// The k selected points `Z_Λ`, in selection order (row t is the
+    /// point of column `approx.indices[t]`).
+    pub selected_points: Dataset,
+    pub provenance: Provenance,
+    pub error_estimate: Option<f64>,
+}
+
+impl StoredArtifact {
+    /// Package an approximation for storage, extracting the selected
+    /// points from the dataset the approximation was computed on and the
+    /// resolved parameters from its kernel. Fails cleanly for kernels
+    /// that are not storable ([`Kernel::params`] is `None`) and for
+    /// approximations without column indices (K-means Nyström's
+    /// "columns" are centroid evaluations, not columns of G).
+    pub fn from_parts(
+        approx: NystromApprox,
+        dataset: &Dataset,
+        kernel: &dyn Kernel,
+        provenance: Provenance,
+        error_estimate: Option<f64>,
+    ) -> Result<StoredArtifact> {
+        let params = kernel.params().ok_or_else(|| {
+            anyhow!(
+                "kernel '{}' is not storable (no resolved parameters)",
+                kernel.name()
+            )
+        })?;
+        if approx.indices.is_empty() || approx.indices.len() != approx.k() {
+            bail!(
+                "approximation is not storable: it has {} column indices \
+                 for k = {} columns (index-free methods like kmeans cannot \
+                 answer stored queries)",
+                approx.indices.len(),
+                approx.k()
+            );
+        }
+        if approx.n() != dataset.n() {
+            bail!(
+                "approximation has n = {} but the dataset has {} points",
+                approx.n(),
+                dataset.n()
+            );
+        }
+        if let Some(&bad) = approx.indices.iter().find(|&&i| i >= dataset.n()) {
+            bail!("selected index {bad} out of range (n = {})", dataset.n());
+        }
+        let selected_points = dataset.select(&approx.indices);
+        Ok(StoredArtifact {
+            approx,
+            kernel: params,
+            selected_points,
+            provenance,
+            error_estimate,
+        })
+    }
+
+    /// Number of data points n in the approximated matrix.
+    pub fn n(&self) -> usize {
+        self.approx.n()
+    }
+
+    /// Number of selected columns k.
+    pub fn k(&self) -> usize {
+        self.approx.k()
+    }
+
+    /// Dimensionality of the underlying data points.
+    pub fn dim(&self) -> usize {
+        self.selected_points.dim()
+    }
+
+    /// Serialize to the version-1 byte format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        push_f64_section(&mut payload, &self.approx.c.data);
+        push_f64_section(&mut payload, &self.approx.winv.data);
+        push_f64_section(&mut payload, self.selected_points.flat());
+        let header = Json::obj(vec![
+            ("version", Json::Num(FORMAT_VERSION as f64)),
+            ("n", Json::Num(self.n() as f64)),
+            ("k", Json::Num(self.k() as f64)),
+            ("dim", Json::Num(self.dim() as f64)),
+            (
+                "indices",
+                Json::Arr(
+                    self.approx
+                        .indices
+                        .iter()
+                        .map(|&i| Json::Num(i as f64))
+                        .collect(),
+                ),
+            ),
+            ("kernel", kernel_to_json(&self.kernel)),
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("source", Json::Str(self.provenance.source.clone())),
+                    ("method", Json::Str(self.provenance.method.clone())),
+                ]),
+            ),
+            (
+                "error_estimate",
+                match self.error_estimate {
+                    Some(e) => Json::Num(e),
+                    None => Json::Null,
+                },
+            ),
+            ("selection_secs", Json::Num(self.approx.selection_secs)),
+            ("payload_bytes", Json::Num(payload.len() as f64)),
+            ("checksum", Json::Str(checksum_hex(fnv1a64(&payload)))),
+        ]);
+        let mut out = Vec::with_capacity(MAGIC.len() + payload.len() + 512);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(header.to_string().as_bytes());
+        out.push(b'\n');
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Write the artifact to `path`, returning the byte count written.
+    pub fn save(&self, path: &Path) -> Result<usize> {
+        let bytes = self.to_bytes();
+        std::fs::write(path, &bytes).map_err(|e| {
+            anyhow!("writing artifact {}: {e}", path.display())
+        })?;
+        Ok(bytes.len())
+    }
+
+    /// Parse and verify the version-1 byte format.
+    pub fn from_bytes(bytes: &[u8]) -> Result<StoredArtifact> {
+        let (header_str, payload) =
+            split_magic_file(bytes, MAGIC, "oasis artifact")?;
+        let h = Json::parse(header_str)
+            .map_err(|e| anyhow!("artifact header: {e}"))?;
+        let version = field_usize(&h, "version")?;
+        if version != FORMAT_VERSION {
+            bail!(
+                "unsupported artifact version {version} (this build reads \
+                 version {FORMAT_VERSION})"
+            );
+        }
+        let n = field_usize(&h, "n")?;
+        let k = field_usize(&h, "k")?;
+        let dim = field_usize(&h, "dim")?;
+        if n == 0 || k == 0 || dim == 0 {
+            bail!("artifact header has empty dimensions (n={n}, k={k}, dim={dim})");
+        }
+        // size the sections with overflow-checked arithmetic: a crafted
+        // header (n = 2⁶³) must be a clean error, not a panic or a
+        // wrapped-to-zero allocation
+        let c_elems = checked_elems(n, k, "C factor")?;
+        let winv_elems = checked_elems(k, k, "W⁻¹ factor")?;
+        let pts_elems = checked_elems(k, dim, "selected points")?;
+        let payload_bytes = field_usize(&h, "payload_bytes")?;
+        if payload.len() != payload_bytes {
+            bail!(
+                "artifact payload is {} bytes but the header promises \
+                 {payload_bytes} (truncated or trailing garbage)",
+                payload.len()
+            );
+        }
+        let want = parse_checksum_hex(
+            h.get("checksum")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact header missing checksum"))?,
+        )?;
+        let got = fnv1a64(payload);
+        if got != want {
+            bail!(
+                "artifact checksum mismatch: payload hashes to \
+                 {} but the header says {} (corrupted file)",
+                checksum_hex(got),
+                checksum_hex(want)
+            );
+        }
+        let idx_json = h
+            .get("indices")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact header missing indices"))?;
+        if idx_json.len() != k {
+            bail!("artifact has {} indices for k = {k}", idx_json.len());
+        }
+        let mut indices = Vec::with_capacity(k);
+        for v in idx_json {
+            match v.as_f64() {
+                Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 => {
+                    let i = x as usize;
+                    if i >= n {
+                        bail!("artifact index {i} out of range (n = {n})");
+                    }
+                    indices.push(i);
+                }
+                _ => bail!("artifact indices must be non-negative integers"),
+            }
+        }
+        let kernel = kernel_from_json(
+            h.get("kernel")
+                .ok_or_else(|| anyhow!("artifact header missing kernel"))?,
+        )?;
+        let provenance = match h.get("provenance") {
+            Some(p) => Provenance {
+                source: p
+                    .get("source")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                method: p
+                    .get("method")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+            },
+            None => Provenance {
+                source: "unknown".into(),
+                method: "unknown".into(),
+            },
+        };
+        let error_estimate = h.get("error_estimate").and_then(Json::as_f64);
+        let selection_secs = h
+            .get("selection_secs")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+
+        let mut r = SectionReader::new(payload);
+        let c = r.read_f64_section(c_elems, "C factor")?;
+        let winv = r.read_f64_section(winv_elems, "W⁻¹ factor")?;
+        let pts = r.read_f64_section(pts_elems, "selected points")?;
+        if r.remaining() != 0 {
+            bail!("artifact payload has {} unread trailing bytes", r.remaining());
+        }
+        Ok(StoredArtifact {
+            approx: NystromApprox {
+                indices,
+                c: Mat::from_vec(n, k, c),
+                winv: Mat::from_vec(k, k, winv),
+                selection_secs,
+            },
+            kernel,
+            selected_points: Dataset::from_flat(dim, pts),
+            provenance,
+            error_estimate,
+        })
+    }
+
+    /// Read and verify an artifact file.
+    pub fn load(path: &Path) -> Result<StoredArtifact> {
+        let bytes = std::fs::read(path).map_err(|e| {
+            anyhow!("reading artifact {}: {e}", path.display())
+        })?;
+        Self::from_bytes(&bytes)
+            .map_err(|e| e.wrap(format!("loading {}", path.display())))
+    }
+
+    /// Read just an artifact file's header — returning `(n, k, dim)` —
+    /// without touching the payload, and verify that the file's total
+    /// size is exactly what those dimensions imply. This is the serving
+    /// layer's cap pre-check: an over-cap (or trailing-garbage-padded)
+    /// file is refused before [`load`](Self::load) would materialize
+    /// its bytes in memory.
+    pub fn peek_dims(path: &Path) -> Result<(usize, usize, usize)> {
+        use std::io::{BufRead, BufReader, Read};
+        let f = std::fs::File::open(path).map_err(|e| {
+            anyhow!("reading artifact {}: {e}", path.display())
+        })?;
+        let file_len = f
+            .metadata()
+            .map_err(|e| anyhow!("stat artifact {}: {e}", path.display()))?
+            .len();
+        let mut reader = BufReader::new(f);
+        let mut magic = vec![0u8; MAGIC.len()];
+        reader
+            .read_exact(&mut magic)
+            .map_err(|_| anyhow!("not a oasis artifact file (bad magic)"))?;
+        if magic != MAGIC {
+            bail!("not a oasis artifact file (bad magic)");
+        }
+        // the header line carries the k-entry index array, so it can be
+        // sizable — but still bounded
+        const MAX_HEADER_BYTES: u64 = 64 * 1024 * 1024;
+        let mut line = Vec::new();
+        reader
+            .by_ref()
+            .take(MAX_HEADER_BYTES)
+            .read_until(b'\n', &mut line)
+            .map_err(|e| anyhow!("reading artifact header: {e}"))?;
+        if line.last() != Some(&b'\n') {
+            bail!("artifact header line did not terminate");
+        }
+        let header_bytes = line.len(); // includes the newline
+        line.pop();
+        let text = std::str::from_utf8(&line)
+            .map_err(|_| anyhow!("artifact header is not UTF-8"))?;
+        let h = Json::parse(text).map_err(|e| anyhow!("artifact header: {e}"))?;
+        let n = field_usize(&h, "n")?;
+        let k = field_usize(&h, "k")?;
+        let dim = field_usize(&h, "dim")?;
+        let payload_bytes = field_usize(&h, "payload_bytes")?;
+        // the payload must be exactly the three framed sections the
+        // dimensions imply, and the file exactly magic+header+payload —
+        // a small header cannot front gigabytes of trailing bytes
+        let implied = 3 * 8
+            + 8 * (checked_elems(n, k, "C factor")?
+                + checked_elems(k, k, "W⁻¹ factor")?
+                + checked_elems(k, dim, "selected points")?);
+        if payload_bytes != implied {
+            bail!(
+                "artifact header promises {payload_bytes} payload bytes but \
+                 its dimensions imply {implied}"
+            );
+        }
+        let expected_len =
+            (MAGIC.len() + header_bytes) as u64 + payload_bytes as u64;
+        if file_len != expected_len {
+            bail!(
+                "artifact file is {file_len} bytes but its header implies \
+                 {expected_len} (truncated or trailing garbage)"
+            );
+        }
+        Ok((n, k, dim))
+    }
+
+    /// Out-of-sample extension weights `w = W⁻¹ b(z)` for a query point,
+    /// evaluating the stored kernel against the k stored points only —
+    /// no access to the original dataset or oracle.
+    pub fn query_weights(&self, z: &[f64]) -> Result<Vec<f64>> {
+        if z.len() != self.dim() {
+            bail!(
+                "query point has dimension {} but the artifact stores \
+                 dimension {}",
+                z.len(),
+                self.dim()
+            );
+        }
+        let kernel = self.kernel.build();
+        let b: Vec<f64> = (0..self.k())
+            .map(|t| kernel.eval(z, self.selected_points.point(t)))
+            .collect();
+        Ok(self.approx.extension_weights(&b))
+    }
+
+    /// `ĝ(z, i)` for each target row, from weights computed by
+    /// [`query_weights`](Self::query_weights).
+    pub fn extend(&self, weights: &[f64], targets: &[usize]) -> Result<Vec<f64>> {
+        if let Some(&bad) = targets.iter().find(|&&t| t >= self.n()) {
+            bail!("target index {bad} out of range (n = {})", self.n());
+        }
+        Ok(targets
+            .iter()
+            .map(|&t| self.approx.extend_entry(weights, t))
+            .collect())
+    }
+
+    /// One-line JSON summary (CLI `query --load` info, server listings).
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n() as f64)),
+            ("k", Json::Num(self.k() as f64)),
+            ("dim", Json::Num(self.dim() as f64)),
+            ("kernel", Json::Str(self.kernel.name().to_string())),
+            ("method", Json::Str(self.provenance.method.clone())),
+            ("source", Json::Str(self.provenance.source.clone())),
+            (
+                "error_estimate",
+                match self.error_estimate {
+                    Some(e) => Json::Num(e),
+                    None => Json::Null,
+                },
+            ),
+            ("selection_secs", Json::Num(self.approx.selection_secs)),
+        ])
+    }
+}
+
+/// `a × b` as a section element count, rejected well before it can
+/// overflow a usize (or an allocation): the payload byte cap it implies,
+/// `2⁴⁸ × 8`, is already far beyond any real artifact.
+fn checked_elems(a: usize, b: usize, what: &str) -> Result<usize> {
+    let n = (a as u128) * (b as u128);
+    if n > (1u128 << 48) {
+        bail!("artifact header implies an implausible {what} size ({a}×{b})");
+    }
+    Ok(n as usize)
+}
+
+fn field_usize(j: &Json, key: &str) -> Result<usize> {
+    match j.get(key).and_then(Json::as_f64) {
+        Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 => {
+            Ok(x as usize)
+        }
+        _ => bail!("artifact header field '{key}' missing or not an integer"),
+    }
+}
+
+/// Serialize resolved kernel parameters for the artifact header.
+pub fn kernel_to_json(k: &KernelParams) -> Json {
+    let mut fields = vec![("type", Json::Str(k.name().to_string()))];
+    match *k {
+        KernelParams::Gaussian { inv_sigma_sq } => {
+            fields.push(("inv_sigma_sq", Json::Num(inv_sigma_sq)));
+        }
+        KernelParams::Linear => {}
+        KernelParams::Laplacian { inv_sigma } => {
+            fields.push(("inv_sigma", Json::Num(inv_sigma)));
+        }
+        KernelParams::Polynomial { degree, offset } => {
+            fields.push(("degree", Json::Num(degree as f64)));
+            fields.push(("offset", Json::Num(offset)));
+        }
+    }
+    Json::obj(fields)
+}
+
+/// Parse kernel parameters written by [`kernel_to_json`].
+pub fn kernel_from_json(j: &Json) -> Result<KernelParams> {
+    let t = j
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("kernel spec missing type"))?;
+    let num = |key: &str| -> Result<f64> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .filter(|x| x.is_finite())
+            .ok_or_else(|| anyhow!("kernel spec missing finite '{key}'"))
+    };
+    Ok(match t {
+        "gaussian" => KernelParams::Gaussian { inv_sigma_sq: num("inv_sigma_sq")? },
+        "linear" => KernelParams::Linear,
+        "laplacian" => KernelParams::Laplacian { inv_sigma: num("inv_sigma")? },
+        "polynomial" => KernelParams::Polynomial {
+            // any u32 degree that was saveable must load back (the
+            // serving layer clamps *request* degrees separately)
+            degree: {
+                let d = num("degree")?;
+                if d < 0.0 || d.fract() != 0.0 || d > u32::MAX as f64 {
+                    bail!("kernel degree must be a u32 integer");
+                }
+                d as u32
+            },
+            offset: num("offset")?,
+        },
+        other => bail!("unknown stored kernel type '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::Gaussian;
+    use crate::sampling::{assemble_from_indices, ImplicitOracle};
+
+    fn sample_artifact() -> (StoredArtifact, Dataset, Gaussian) {
+        let ds = two_moons(50, 0.05, 11);
+        let kern = Gaussian::new(0.8);
+        let art = {
+            let oracle = ImplicitOracle::new(&ds, &kern);
+            let approx =
+                assemble_from_indices(&oracle, vec![3, 17, 29, 44], 1.25);
+            StoredArtifact::from_parts(
+                approx,
+                &ds,
+                &kern,
+                Provenance {
+                    source: "test:two-moons".into(),
+                    method: "oASIS".into(),
+                },
+                Some(0.125),
+            )
+            .unwrap()
+        };
+        (art, ds, kern)
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        let (art, _, _) = sample_artifact();
+        let bytes = art.to_bytes();
+        let back = StoredArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(back.approx.indices, art.approx.indices);
+        assert_eq!(back.approx.c.data.len(), art.approx.c.data.len());
+        for (a, b) in art.approx.c.data.iter().zip(&back.approx.c.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in art.approx.winv.data.iter().zip(&back.approx.winv.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.selected_points, art.selected_points);
+        assert_eq!(back.kernel, art.kernel);
+        assert_eq!(back.provenance, art.provenance);
+        assert_eq!(back.error_estimate, art.error_estimate);
+        assert_eq!(
+            back.approx.selection_secs.to_bits(),
+            art.approx.selection_secs.to_bits()
+        );
+        // and the serialization is stable: re-encoding gives identical bytes
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn stored_query_matches_live_oracle() {
+        let (art, ds, kern) = sample_artifact();
+        let z = [0.4, -0.2];
+        let w = art.query_weights(&z).unwrap();
+        // live path: b against the original dataset's selected points
+        let b: Vec<f64> = art
+            .approx
+            .indices
+            .iter()
+            .map(|&j| kern.eval(&z, ds.point(j)))
+            .collect();
+        let live = art.approx.extension_weights(&b);
+        assert_eq!(w.len(), live.len());
+        for (a, b) in w.iter().zip(&live) {
+            assert_eq!(a.to_bits(), b.to_bits(), "stored query diverged");
+        }
+        let vals = art.extend(&w, &[0, 10, 49]).unwrap();
+        assert_eq!(vals.len(), 3);
+        assert!(art.extend(&w, &[50]).is_err(), "out-of-range target");
+        assert!(art.query_weights(&[1.0]).is_err(), "dimension mismatch");
+    }
+
+    #[test]
+    fn corrupted_truncated_and_wrong_version_rejected() {
+        let (art, _, _) = sample_artifact();
+        let bytes = art.to_bytes();
+
+        // bad magic
+        assert!(StoredArtifact::from_bytes(b"not an artifact").is_err());
+
+        // truncated payload
+        let cut = &bytes[..bytes.len() - 9];
+        let err = StoredArtifact::from_bytes(cut).unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+
+        // single flipped payload byte → checksum mismatch
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        let err = StoredArtifact::from_bytes(&flipped).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+
+        // wrong version: rewrite the header line
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let bumped = text.replacen("\"version\":1", "\"version\":99", 1);
+        let err = StoredArtifact::from_bytes(bumped.as_bytes()).unwrap_err();
+        assert!(format!("{err}").contains("version 99"), "{err}");
+
+        // trailing garbage after the payload
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(b"zzzz");
+        assert!(StoredArtifact::from_bytes(&padded).is_err());
+    }
+
+    #[test]
+    fn unstorable_inputs_rejected() {
+        let ds = two_moons(20, 0.05, 2);
+        let kern = Gaussian::new(0.5);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        // no indices (kmeans-style)
+        let mut approx = assemble_from_indices(&oracle, vec![1, 2], 0.0);
+        approx.indices.clear();
+        assert!(StoredArtifact::from_parts(
+            approx,
+            &ds,
+            &kern,
+            Provenance { source: "t".into(), method: "kmeans".into() },
+            None,
+        )
+        .is_err());
+        // unstorable kernel
+        struct Opaque;
+        impl Kernel for Opaque {
+            fn eval(&self, _a: &[f64], _b: &[f64]) -> f64 {
+                0.0
+            }
+            fn name(&self) -> &'static str {
+                "opaque"
+            }
+        }
+        let approx = assemble_from_indices(&oracle, vec![1, 2], 0.0);
+        let err = StoredArtifact::from_parts(
+            approx,
+            &ds,
+            &Opaque,
+            Provenance { source: "t".into(), method: "x".into() },
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("not storable"), "{err}");
+    }
+
+    #[test]
+    fn kernel_json_round_trips_every_variant() {
+        let variants = [
+            KernelParams::Gaussian { inv_sigma_sq: 1.0 / 3.0 },
+            KernelParams::Linear,
+            KernelParams::Laplacian { inv_sigma: 0.7 },
+            KernelParams::Polynomial { degree: 4, offset: -0.25 },
+        ];
+        for v in variants {
+            let j = kernel_to_json(&v);
+            let back = kernel_from_json(&Json::parse(&j.to_string()).unwrap())
+                .unwrap();
+            assert_eq!(back, v);
+        }
+        assert!(kernel_from_json(&Json::parse(r#"{"type":"magic"}"#).unwrap())
+            .is_err());
+        assert!(kernel_from_json(&Json::parse(r#"{"type":"gaussian"}"#).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn save_and_load_via_filesystem() {
+        let (art, _, _) = sample_artifact();
+        let dir = std::env::temp_dir().join("oasis-store-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.oasis");
+        let bytes = art.save(&path).unwrap();
+        assert!(bytes > 0);
+        let back = StoredArtifact::load(&path).unwrap();
+        assert_eq!(back.approx.indices, art.approx.indices);
+        std::fs::remove_file(&path).ok();
+        // missing file is a clean error naming the path
+        let err = StoredArtifact::load(&dir.join("absent.oasis")).unwrap_err();
+        assert!(format!("{err}").contains("absent.oasis"), "{err}");
+    }
+}

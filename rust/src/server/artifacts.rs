@@ -1,0 +1,196 @@
+//! Hosted approximation artifacts: named, query-only read replicas of
+//! stored [`StoredArtifact`]s (`POST /artifacts/load`).
+//!
+//! Unlike live sessions, a loaded artifact has no actor thread — it is
+//! immutable shared state, so queries from any number of connection
+//! threads read it concurrently through an `Arc` with no serialization
+//! point. This is the "store-and-serve" half of the system: a session
+//! computes and saves a factorization once, and any number of servers
+//! can reload it and answer out-of-sample extension queries without the
+//! original dataset or kernel oracle.
+
+use super::protocol::MAX_ARTIFACTS;
+use super::registry::lock;
+use crate::nystrom::StoredArtifact;
+use crate::util::json::Json;
+use crate::Result;
+use crate::{anyhow, bail};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One hosted artifact: the immutable stored approximation plus serving
+/// bookkeeping.
+pub struct HostedArtifact {
+    pub name: String,
+    pub artifact: StoredArtifact,
+    /// Raw client path it was loaded from (display only).
+    pub loaded_from: PathBuf,
+    /// Query points answered against this artifact.
+    pub queries: AtomicU64,
+}
+
+impl HostedArtifact {
+    /// Status object for `GET /artifacts[/{name}]` and `/metrics`.
+    /// (`Json::Obj` is a BTreeMap, so key order in the response is
+    /// alphabetical regardless of insertion order.)
+    pub fn status_json(&self) -> Json {
+        let mut fields = match self.artifact.summary_json() {
+            Json::Obj(m) => m,
+            _ => Default::default(),
+        };
+        fields.insert("name".to_string(), Json::Str(self.name.clone()));
+        fields.insert(
+            "loaded_from".to_string(),
+            Json::Str(self.loaded_from.display().to_string()),
+        );
+        fields.insert(
+            "queries".to_string(),
+            Json::Num(self.queries.load(Ordering::Relaxed) as f64),
+        );
+        Json::Obj(fields)
+    }
+}
+
+/// Named loaded artifacts (the query-only sibling of the session
+/// [`Registry`](super::registry::Registry)).
+#[derive(Default)]
+pub struct ArtifactRegistry {
+    inner: Mutex<HashMap<String, Arc<HostedArtifact>>>,
+    counter: AtomicU64,
+}
+
+impl ArtifactRegistry {
+    pub fn new() -> ArtifactRegistry {
+        ArtifactRegistry::default()
+    }
+
+    /// Host an artifact under `name` (auto-generated `aN` when absent).
+    pub fn insert(
+        &self,
+        name: Option<String>,
+        artifact: StoredArtifact,
+        loaded_from: PathBuf,
+    ) -> Result<Arc<HostedArtifact>> {
+        let mut map = lock(&self.inner);
+        if map.len() >= MAX_ARTIFACTS {
+            bail!(
+                "artifact cap reached ({MAX_ARTIFACTS} loaded) — unload one \
+                 first (DELETE /artifacts/{{name}})"
+            );
+        }
+        let name = match name {
+            Some(n) => {
+                if map.contains_key(&n) {
+                    bail!("artifact '{n}' already exists");
+                }
+                n
+            }
+            None => loop {
+                let candidate =
+                    format!("a{}", self.counter.fetch_add(1, Ordering::Relaxed));
+                if !map.contains_key(&candidate) {
+                    break candidate;
+                }
+            },
+        };
+        let hosted = Arc::new(HostedArtifact {
+            name: name.clone(),
+            artifact,
+            loaded_from,
+            queries: AtomicU64::new(0),
+        });
+        map.insert(name, hosted.clone());
+        Ok(hosted)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<HostedArtifact>> {
+        lock(&self.inner).get(name).cloned()
+    }
+
+    pub fn remove(&self, name: &str) -> Option<Arc<HostedArtifact>> {
+        lock(&self.inner).remove(name)
+    }
+
+    /// Every hosted artifact, name-sorted.
+    pub fn list(&self) -> Vec<Arc<HostedArtifact>> {
+        let mut out: Vec<_> = lock(&self.inner).values().cloned().collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        lock(&self.inner).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Find a duplicate-name conflict without inserting (for a clean 409
+    /// like the session registry's create path).
+    pub fn contains(&self, name: &str) -> bool {
+        lock(&self.inner).contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::Gaussian;
+    use crate::nystrom::store::Provenance;
+    use crate::sampling::{assemble_from_indices, ImplicitOracle};
+
+    fn artifact() -> StoredArtifact {
+        let ds = two_moons(30, 0.05, 3);
+        let kern = Gaussian::new(0.6);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let approx = assemble_from_indices(&oracle, vec![0, 7, 21], 0.0);
+        StoredArtifact::from_parts(
+            approx,
+            &ds,
+            &kern,
+            Provenance { source: "test".into(), method: "oASIS".into() },
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn insert_get_remove_and_auto_names() {
+        let reg = ArtifactRegistry::new();
+        let a =
+            reg.insert(Some("x".into()), artifact(), PathBuf::from("x.oasis"));
+        assert_eq!(a.unwrap().name, "x");
+        assert!(reg
+            .insert(Some("x".into()), artifact(), PathBuf::from("x.oasis"))
+            .is_err());
+        let auto = reg.insert(None, artifact(), PathBuf::from("y.oasis")).unwrap();
+        assert_eq!(auto.name, "a0");
+        assert_eq!(reg.len(), 2);
+        let names: Vec<_> =
+            reg.list().iter().map(|h| h.name.clone()).collect();
+        assert_eq!(names, vec!["a0", "x"]);
+        assert!(reg.get("x").is_some());
+        assert!(reg.remove("x").is_some());
+        assert!(reg.get("x").is_none());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn status_json_shape() {
+        let reg = ArtifactRegistry::new();
+        let h = reg
+            .insert(Some("s".into()), artifact(), PathBuf::from("s.oasis"))
+            .unwrap();
+        h.queries.fetch_add(3, Ordering::Relaxed);
+        let j = h.status_json();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("s"));
+        assert_eq!(j.get("k").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("n").and_then(Json::as_usize), Some(30));
+        assert_eq!(j.get("queries").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("method").and_then(Json::as_str), Some("oASIS"));
+    }
+}

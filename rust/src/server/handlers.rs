@@ -36,8 +36,14 @@ pub fn route(state: &Arc<ServerState>, req: &Request) -> Response {
             snapshot_session(state, name, req)
         }
         ("POST", ["sessions", name, "query"]) => query_session(state, name, req),
+        ("POST", ["sessions", name, "save"]) => save_session(state, name, req),
         ("POST", ["sessions", name, "finish"])
         | ("DELETE", ["sessions", name]) => finish_session(state, name, req),
+        ("POST", ["artifacts", "load"]) => load_artifact(state, req),
+        ("GET", ["artifacts"]) => list_artifacts(state),
+        ("GET", ["artifacts", name]) => artifact_status(state, name),
+        ("POST", ["artifacts", name, "query"]) => query_artifact(state, name, req),
+        ("DELETE", ["artifacts", name]) => unload_artifact(state, name),
         ("POST", ["shutdown"]) => {
             state.request_stop();
             Response::json(200, Json::obj(vec![("stopping", Json::Bool(true))]))
@@ -93,10 +99,14 @@ fn stats_json(name: &str, st: &SessionStats) -> Json {
 }
 
 fn create_session(state: &Arc<ServerState>, req: &Request) -> Response {
-    let parsed = match protocol::parse_create(&req.body_str()) {
-        Ok(p) => p,
-        Err(e) => return error(400, e),
-    };
+    // file-backed dataset paths are resolved under --fs-root inside the
+    // parser itself (the `client` field keeps the raw spelling for
+    // provenance), so an unresolved path cannot reach the registry
+    let parsed =
+        match protocol::parse_create(&req.body_str(), &state.config.fs_root) {
+            Ok(p) => p,
+            Err(e) => return error(400, e),
+        };
     // pre-check for a clean 409; a lost creation race still errors safely
     let duplicate = parsed
         .name
@@ -329,12 +339,206 @@ fn finish_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Respon
     }
 }
 
+/// Persist a fresh snapshot of a live session as a stored artifact
+/// (`POST /sessions/{name}/save`). The session keeps running.
+fn save_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Response {
+    let h = match state.registry.get(name) {
+        None => return error(404, format!("no session '{name}'")),
+        Some(h) => h,
+    };
+    let sreq = match protocol::parse_save(&req.body_str()) {
+        Ok(s) => s,
+        Err(e) => return error(400, e),
+    };
+    let path = match protocol::resolve_fs_path(&state.config.fs_root, &sreq.path) {
+        Ok(p) => p,
+        Err(e) => return error(400, e),
+    };
+    let snap = match registry::ensure_snapshot(&h, true) {
+        Ok(s) => s,
+        Err(e) => return error(500, e),
+    };
+    let st = lock(&h.shared.stats).clone();
+    let artifact = match crate::nystrom::StoredArtifact::from_parts(
+        (*snap).clone(),
+        &h.dataset,
+        &*h.kernel,
+        crate::nystrom::Provenance {
+            source: h.source.to_string(),
+            method: st.method,
+        },
+        st.error_estimate,
+    ) {
+        Ok(a) => a,
+        Err(e) => return error(400, e),
+    };
+    match artifact.save(&path) {
+        Ok(bytes) => {
+            ServerMetrics::inc(&state.metrics.artifacts_saved);
+            Response::json(
+                200,
+                Json::obj(vec![
+                    ("name", Json::Str(h.name.clone())),
+                    ("path", Json::Str(sreq.path)),
+                    ("n", Json::Num(artifact.n() as f64)),
+                    ("k", Json::Num(artifact.k() as f64)),
+                    ("bytes", Json::Num(bytes as f64)),
+                ]),
+            )
+        }
+        Err(e) => error(500, e),
+    }
+}
+
+/// Host a stored artifact as a query-only read replica
+/// (`POST /artifacts/load`).
+fn load_artifact(state: &Arc<ServerState>, req: &Request) -> Response {
+    let lreq = match protocol::parse_artifact_load(&req.body_str()) {
+        Ok(l) => l,
+        Err(e) => return error(400, e),
+    };
+    let path = match protocol::resolve_fs_path(&state.config.fs_root, &lreq.path) {
+        Ok(p) => p,
+        Err(e) => return error(400, e),
+    };
+    // pre-check for a clean 409; a lost race still errors safely below
+    let duplicate = lreq
+        .name
+        .as_deref()
+        .map(|n| state.artifacts.contains(n))
+        .unwrap_or(false);
+    // cap check from the header alone, *before* the payload is
+    // materialized — mirroring how datasets are bounded during parse
+    let (pn, pk, _pdim) = match crate::nystrom::StoredArtifact::peek_dims(&path)
+    {
+        Ok(d) => d,
+        Err(e) => return error(400, e),
+    };
+    let elems = (pn as u128) * (pk as u128);
+    if elems > protocol::MAX_STATE_ELEMS {
+        return error(
+            400,
+            format!(
+                "artifact n×k = {elems} exceeds the serving cap of {} state \
+                 elements",
+                protocol::MAX_STATE_ELEMS
+            ),
+        );
+    }
+    let artifact = match crate::nystrom::StoredArtifact::load(&path) {
+        Ok(a) => a,
+        Err(e) => return error(400, e),
+    };
+    // re-check against what actually loaded (the file could have been
+    // swapped between the peek and the read)
+    let elems = (artifact.n() as u128) * (artifact.k() as u128);
+    if elems > protocol::MAX_STATE_ELEMS {
+        return error(
+            400,
+            format!(
+                "artifact n×k = {elems} exceeds the serving cap of {} state \
+                 elements",
+                protocol::MAX_STATE_ELEMS
+            ),
+        );
+    }
+    match state.artifacts.insert(lreq.name, artifact, lreq.path.into()) {
+        Ok(hosted) => {
+            ServerMetrics::inc(&state.metrics.artifacts_loaded);
+            Response::json(200, hosted.status_json())
+        }
+        Err(e) => error(if duplicate { 409 } else { 400 }, e),
+    }
+}
+
+fn list_artifacts(state: &Arc<ServerState>) -> Response {
+    let artifacts: Vec<Json> = state
+        .artifacts
+        .list()
+        .into_iter()
+        .map(|h| h.status_json())
+        .collect();
+    Response::json(200, Json::obj(vec![("artifacts", Json::Arr(artifacts))]))
+}
+
+fn artifact_status(state: &Arc<ServerState>, name: &str) -> Response {
+    match state.artifacts.get(name) {
+        None => error(404, format!("no artifact '{name}'")),
+        Some(h) => Response::json(200, h.status_json()),
+    }
+}
+
+/// Out-of-sample extension against a loaded artifact — answered from the
+/// stored factors and selected points only (`POST
+/// /artifacts/{name}/query`). Response shape matches the session query.
+fn query_artifact(state: &Arc<ServerState>, name: &str, req: &Request) -> Response {
+    let h = match state.artifacts.get(name) {
+        None => return error(404, format!("no artifact '{name}'")),
+        Some(h) => h,
+    };
+    let q = match protocol::parse_query(&req.body_str()) {
+        Ok(q) => q,
+        Err(e) => return error(400, e),
+    };
+    let n = h.artifact.n();
+    for &t in &q.targets {
+        if t >= n {
+            return error(400, format!("target index {t} out of range (n = {n})"));
+        }
+    }
+    let mut results = Vec::with_capacity(q.points.len());
+    for (i, p) in q.points.iter().enumerate() {
+        let w = match h.artifact.query_weights(p) {
+            Ok(w) => w,
+            Err(e) => return error(400, format!("query point {i}: {e}")),
+        };
+        let mut fields = vec![("weights", protocol::num_arr(&w))];
+        if !q.targets.is_empty() {
+            match h.artifact.extend(&w, &q.targets) {
+                Ok(vals) => fields.push(("kernel", protocol::num_arr(&vals))),
+                Err(e) => return error(400, e),
+            }
+        }
+        results.push(Json::obj(fields));
+    }
+    h.queries
+        .fetch_add(q.points.len() as u64, std::sync::atomic::Ordering::Relaxed);
+    ServerMetrics::inc(&state.metrics.artifact_queries);
+    Response::json(
+        200,
+        Json::obj(vec![
+            ("name", Json::Str(h.name.clone())),
+            ("k", Json::Num(h.artifact.k() as f64)),
+            ("results", Json::Arr(results)),
+        ]),
+    )
+}
+
+fn unload_artifact(state: &Arc<ServerState>, name: &str) -> Response {
+    match state.artifacts.remove(name) {
+        None => error(404, format!("no artifact '{name}'")),
+        Some(h) => Response::json(
+            200,
+            Json::obj(vec![
+                ("name", Json::Str(h.name.clone())),
+                ("unloaded", Json::Bool(true)),
+            ]),
+        ),
+    }
+}
+
 fn metrics_report(state: &Arc<ServerState>) -> Response {
     let sessions: Vec<Json> = state
         .registry
         .list()
         .into_iter()
         .map(|(name, shared)| stats_json(&name, &lock(&shared.stats).clone()))
+        .collect();
+    let artifacts: Vec<Json> = state
+        .artifacts
+        .list()
+        .into_iter()
+        .map(|h| h.status_json())
         .collect();
     Response::json(
         200,
@@ -345,6 +549,7 @@ fn metrics_report(state: &Arc<ServerState>) -> Response {
             ),
             ("server", state.metrics.to_json()),
             ("sessions", Json::Arr(sessions)),
+            ("artifacts", Json::Arr(artifacts)),
         ]),
     )
 }

@@ -15,6 +15,12 @@ pub struct ServerMetrics {
     pub sessions_finished: AtomicU64,
     pub snapshots_total: AtomicU64,
     pub queries_total: AtomicU64,
+    /// Session factorizations persisted via `POST /sessions/{name}/save`.
+    pub artifacts_saved: AtomicU64,
+    /// Stored artifacts hosted via `POST /artifacts/load`.
+    pub artifacts_loaded: AtomicU64,
+    /// Queries answered from loaded artifacts.
+    pub artifact_queries: AtomicU64,
 }
 
 impl ServerMetrics {
@@ -46,6 +52,18 @@ impl ServerMetrics {
             (
                 "queries_total",
                 Json::Num(Self::get(&self.queries_total) as f64),
+            ),
+            (
+                "artifacts_saved",
+                Json::Num(Self::get(&self.artifacts_saved) as f64),
+            ),
+            (
+                "artifacts_loaded",
+                Json::Num(Self::get(&self.artifacts_loaded) as f64),
+            ),
+            (
+                "artifact_queries",
+                Json::Num(Self::get(&self.artifact_queries) as f64),
             ),
         ])
     }

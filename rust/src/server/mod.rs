@@ -38,6 +38,9 @@
 //!     "dim": 0                          // 0 = generator default
 //!   },
 //!   // …or inline data: "dataset": {"points": [[x0,…], [x1,…], …]}
+//!   // …or a file:      "dataset": {"file": "sets/train.csv"}
+//!   //    (CSV or oasis-matrix binary; the path resolves under the
+//!   //     server's --fs-root and may not escape it)
 //!   "kernel": {                         // optional; default gaussian
 //!     "type": "gaussian",               // or linear|laplacian|polynomial
 //!     "sigma": 0.5,                     // explicit σ…
@@ -103,6 +106,39 @@
 //!
 //! → `{"name", "snapshot_k", "results": [{"weights": […], "kernel": […]?}]}`
 //!
+//! ## `POST /sessions/{name}/save` — persist the approximation
+//!
+//! ```json
+//! {"path": "models/train-7.oasis"}
+//! ```
+//!
+//! Takes a fresh snapshot of the (still-running) session and writes it
+//! as a versioned artifact file — indices, `C`, `W⁻¹`, the k selected
+//! points, resolved kernel parameters, dataset provenance, and the
+//! current error estimate, checksummed (format documented in
+//! [`crate::nystrom::store`]). The path resolves under `--fs-root`
+//! (relative, no `..`). → `{"name", "path", "n", "k", "bytes"}`. The
+//! session keeps running; save again later for a bigger artifact.
+//!
+//! ## `POST /artifacts/load` — host a stored artifact
+//!
+//! ```json
+//! {"path": "models/train-7.oasis", "name": "prod"}   // name optional ("aN")
+//! ```
+//!
+//! Loads and verifies an artifact file and hosts it as a **query-only**
+//! read replica: no actor thread, immutable, any number of concurrent
+//! queries. → the artifact status object (`{"name", "n", "k", "dim",
+//! "kernel", "method", "source", "error_estimate", …}`). `409` if the
+//! name exists; `400` for corrupt/truncated/wrong-version files.
+//!
+//! ## `POST /artifacts/{name}/query` — query without the original data
+//!
+//! Same payload and response shape as the session query (`points` +
+//! optional `targets`), but answered entirely from the stored factors
+//! and the k stored selected points — the original dataset and kernel
+//! oracle are not needed (`refresh` is meaningless here and ignored).
+//!
 //! ## Other endpoints
 //!
 //! | endpoint | effect |
@@ -110,7 +146,10 @@
 //! | `GET /sessions` | `{"sessions": [status…]}` (name-sorted) |
 //! | `GET /sessions/{name}` | status: `k`, `busy`, `steps_done`, `error_estimate`, `step_latency`, `stop`?, `failed`? |
 //! | `POST /sessions/{name}/finish` (or `DELETE /sessions/{name}`) | final factors + eviction; options: `factors` |
-//! | `GET /metrics` | `{"uptime_secs", "server": counters, "sessions": [status…]}` |
+//! | `GET /artifacts` | `{"artifacts": [status…]}` (name-sorted) |
+//! | `GET /artifacts/{name}` | one artifact's status (incl. `queries` served) |
+//! | `DELETE /artifacts/{name}` | unload a hosted artifact |
+//! | `GET /metrics` | `{"uptime_secs", "server": counters, "sessions": […], "artifacts": […]}` |
 //! | `GET /healthz` | `{"ok": true}` |
 //! | `POST /shutdown` | stop accepting, tear down all sessions |
 //!
@@ -123,12 +162,14 @@
 //! which is what the socket-level acceptance test in
 //! `rust/tests/server.rs` asserts.
 
+pub mod artifacts;
 pub mod handlers;
 pub mod http;
 pub mod metrics;
 pub mod protocol;
 pub mod registry;
 
+pub use artifacts::ArtifactRegistry;
 pub use http::{Request, Response};
 pub use metrics::ServerMetrics;
 pub use registry::{Registry, SessionHandle};
@@ -136,22 +177,43 @@ pub use registry::{Registry, SessionHandle};
 use crate::Result;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Shared server state: the session registry, counters, and the stop flag.
+/// Operator-side server configuration (CLI flags, not request payloads).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Root directory under which every client-supplied path (dataset
+    /// `{"file": …}`, artifact save/load) resolves; clients cannot reach
+    /// outside it (see [`protocol::resolve_fs_path`]).
+    pub fs_root: PathBuf,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { fs_root: PathBuf::from(".") }
+    }
+}
+
+/// Shared server state: the session registry, hosted artifacts,
+/// counters, and the stop flag.
 pub struct ServerState {
     pub registry: Registry,
+    pub artifacts: ArtifactRegistry,
+    pub config: ServerConfig,
     pub metrics: ServerMetrics,
     pub started: Instant,
     stop: AtomicBool,
 }
 
 impl ServerState {
-    fn new() -> ServerState {
+    fn new(config: ServerConfig) -> ServerState {
         ServerState {
             registry: Registry::new(),
+            artifacts: ArtifactRegistry::new(),
+            config,
             metrics: ServerMetrics::default(),
             started: Instant::now(),
             stop: AtomicBool::new(false),
@@ -176,12 +238,18 @@ pub struct Server {
 
 impl Server {
     /// Bind (e.g. `"127.0.0.1:7437"`, or port `0` for an ephemeral port —
-    /// read it back with [`local_addr`](Server::local_addr)).
+    /// read it back with [`local_addr`](Server::local_addr)) with the
+    /// default configuration (`fs_root` = current directory).
     pub fn bind(addr: &str) -> Result<Server> {
+        Server::bind_with(addr, ServerConfig::default())
+    }
+
+    /// Bind with an explicit [`ServerConfig`].
+    pub fn bind_with(addr: &str, config: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         // non-blocking accept so the stop flag is polled between peers
         listener.set_nonblocking(true)?;
-        Ok(Server { listener, state: Arc::new(ServerState::new()) })
+        Ok(Server { listener, state: Arc::new(ServerState::new(config)) })
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {

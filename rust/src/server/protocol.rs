@@ -8,13 +8,14 @@
 //! connection or actor thread would drop the request without a response,
 //! so malformed input must be rejected with a clean 400 first.
 
-use crate::data::{generators, Dataset};
+use crate::data::{generators, loader, Dataset, LoadLimits};
 use crate::kernels::{Gaussian, Kernel, Laplacian, Linear, Polynomial};
 use crate::linalg::Mat;
 use crate::sampling::{StoppingCriterion, StoppingRule};
 use crate::util::json::Json;
 use crate::Result;
 use crate::{anyhow, bail};
+use std::path::{Component, Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -39,6 +40,80 @@ pub const MAX_STATE_ELEMS: u128 = 200_000_000;
 /// could otherwise OOM the server on serialization alone (10e6 numbers
 /// ≈ a 200 MB response).
 pub const MAX_FACTOR_ELEMS: usize = 10_000_000;
+/// Cap on concurrently hosted loaded artifacts.
+pub const MAX_ARTIFACTS: usize = 256;
+
+/// The dataset caps above as [`LoadLimits`], so file-backed datasets are
+/// bounded *while they parse* — a tiny `{"file": …}` request must not be
+/// able to materialize an arbitrarily large file into server memory.
+pub fn serving_load_limits() -> LoadLimits {
+    LoadLimits {
+        max_n: MAX_DATASET_N,
+        max_dim: MAX_DATASET_DIM,
+        max_elems: MAX_DATASET_ELEMS,
+    }
+}
+
+/// Resolve a client-supplied path under the server's `--fs-root`:
+/// relative paths only, no `..` (or root/prefix) components, and the
+/// deepest *existing* ancestor must canonicalize to somewhere inside
+/// the canonicalized root (a symlink inside the root pointing outside
+/// it would otherwise defeat the lexical checks) — the filesystem the
+/// server will touch is exactly the subtree the operator pointed it at.
+pub fn resolve_fs_path(root: &Path, raw: &str) -> Result<PathBuf> {
+    if raw.is_empty() {
+        bail!("'path' must be a non-empty relative path");
+    }
+    let p = Path::new(raw);
+    if p.is_absolute() {
+        bail!("'path' must be relative (it resolves under the server's --fs-root)");
+    }
+    for comp in p.components() {
+        match comp {
+            Component::Normal(_) | Component::CurDir => {}
+            _ => bail!("'path' may not contain '..', root, or drive components"),
+        }
+    }
+    let joined = root.join(p);
+    let canon_root = root.canonicalize().map_err(|e| {
+        anyhow!("server fs root {} is not resolvable: {e}", root.display())
+    })?;
+    // walk up to the deepest existing ancestor; the not-yet-existing
+    // suffix is Normal-only (checked above), so it cannot escape later
+    let mut probe: &Path = &joined;
+    let canon = loop {
+        match probe.canonicalize() {
+            Ok(c) => break c,
+            Err(_) => {
+                // an ancestor that *exists* but cannot canonicalize is a
+                // dangling/cyclic symlink — writing through it would
+                // create a file wherever it points, so refuse it rather
+                // than fall back to its (in-root) parent
+                if probe.symlink_metadata().is_ok() {
+                    bail!(
+                        "'path' passes through an unresolvable symlink ({})",
+                        probe.display()
+                    );
+                }
+                match probe.parent() {
+                    Some(parent) if !parent.as_os_str().is_empty() => {
+                        probe = parent
+                    }
+                    // ran out of ancestors (relative root like "."): the
+                    // root itself is the deepest existing ancestor
+                    _ => break canon_root.clone(),
+                }
+            }
+        }
+    };
+    if !canon.starts_with(&canon_root) {
+        bail!(
+            "'path' escapes the server's --fs-root via a symlink ({})",
+            probe.display()
+        );
+    }
+    Ok(joined)
+}
 
 /// Hosted sampling method. All but `OasisP` are the sequential
 /// [`SamplerSession`](crate::sampling::SamplerSession) implementations;
@@ -79,6 +154,13 @@ pub enum DatasetSpec {
     Generator { name: String, n: usize, seed: u64, noise: f64, dim: usize },
     /// Points shipped inline in the request body.
     Points(Vec<Vec<f64>>),
+    /// A CSV or binary matrix file on disk. `client` is the raw path as
+    /// the client sent it (what provenance records — the server's
+    /// filesystem layout must not leak into artifacts or listings);
+    /// `path` is its `--fs-root` resolution, produced by
+    /// [`resolve_fs_path`] inside [`parse_create`] so an unresolved
+    /// client path never exists in a parsed request.
+    File { client: String, path: PathBuf },
 }
 
 impl DatasetSpec {
@@ -101,7 +183,25 @@ impl DatasetSpec {
                 generators::by_name(&name, n, dim, noise, seed)
                     .ok_or_else(|| anyhow!("unknown dataset generator '{name}'"))?
             }
+            DatasetSpec::File { path, .. } => {
+                loader::load_dataset(&path, &serving_load_limits())?
+            }
         })
+    }
+
+    /// Provenance line recorded with sessions and saved artifacts.
+    pub fn describe(&self) -> String {
+        match self {
+            DatasetSpec::Generator { name, n, seed, dim, .. } => {
+                if *dim == 0 {
+                    format!("generator:{name}?n={n}&seed={seed}")
+                } else {
+                    format!("generator:{name}?n={n}&seed={seed}&dim={dim}")
+                }
+            }
+            DatasetSpec::Points(rows) => format!("points:n={}", rows.len()),
+            DatasetSpec::File { client, .. } => format!("file:{client}"),
+        }
     }
 }
 
@@ -267,7 +367,7 @@ fn validate_name(name: &str) -> Result<()> {
     Ok(())
 }
 
-fn parse_dataset(j: &Json) -> Result<DatasetSpec> {
+fn parse_dataset(j: &Json, fs_root: &Path) -> Result<DatasetSpec> {
     let d = match j.get("dataset") {
         None => {
             return Ok(DatasetSpec::Generator {
@@ -282,6 +382,20 @@ fn parse_dataset(j: &Json) -> Result<DatasetSpec> {
     };
     if d.as_obj().is_none() {
         bail!("'dataset' must be an object");
+    }
+    if let Some(file) = field(d, "file") {
+        let raw = file
+            .as_str()
+            .ok_or_else(|| anyhow!("'dataset.file' must be a string path"))?;
+        if raw.is_empty() {
+            bail!("'dataset.file' must be a non-empty path");
+        }
+        if d.get("points").is_some() {
+            bail!("'dataset' may give 'file' or 'points', not both");
+        }
+        let path = resolve_fs_path(fs_root, raw)
+            .map_err(|e| e.wrap("'dataset.file'"))?;
+        return Ok(DatasetSpec::File { client: raw.to_string(), path });
     }
     if let Some(points) = d.get("points") {
         let arr = points
@@ -389,8 +503,10 @@ fn parse_kernel(j: &Json) -> Result<KernelSpec> {
     })
 }
 
-/// Parse a `POST /sessions` body.
-pub fn parse_create(body: &str) -> Result<CreateRequest> {
+/// Parse a `POST /sessions` body. `fs_root` is the server's `--fs-root`;
+/// a `dataset.file` path is resolved (and sandbox-checked) under it
+/// right here, so no caller can forget to.
+pub fn parse_create(body: &str, fs_root: &Path) -> Result<CreateRequest> {
     let j = parse_body(body)?;
     let name = match field(&j, "name") {
         None => None,
@@ -402,7 +518,7 @@ pub fn parse_create(body: &str) -> Result<CreateRequest> {
             Some(s.to_string())
         }
     };
-    let dataset = parse_dataset(&j)?;
+    let dataset = parse_dataset(&j, fs_root)?;
     let kernel = parse_kernel(&j)?;
     let method = Method::parse(&get_str(&j, "method", "oasis")?)?;
     let max_cols = get_usize(&j, "max_cols", 450)?;
@@ -533,6 +649,52 @@ pub fn parse_query(body: &str) -> Result<QueryRequest> {
     })
 }
 
+/// Parsed `POST /sessions/{name}/save` payload.
+#[derive(Clone, Debug)]
+pub struct SaveRequest {
+    /// Raw client path (resolved under `--fs-root` by the handler).
+    pub path: String,
+}
+
+/// Parse a `POST /sessions/{name}/save` body.
+pub fn parse_save(body: &str) -> Result<SaveRequest> {
+    let j = parse_body(body)?;
+    let path = field(&j, "path")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("'path' (string) is required"))?
+        .to_string();
+    Ok(SaveRequest { path })
+}
+
+/// Parsed `POST /artifacts/load` payload.
+#[derive(Clone, Debug)]
+pub struct ArtifactLoadRequest {
+    /// Raw client path (resolved under `--fs-root` by the handler).
+    pub path: String,
+    /// Hosting name; auto-generated (`aN`) when absent.
+    pub name: Option<String>,
+}
+
+/// Parse a `POST /artifacts/load` body.
+pub fn parse_artifact_load(body: &str) -> Result<ArtifactLoadRequest> {
+    let j = parse_body(body)?;
+    let path = field(&j, "path")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("'path' (string) is required"))?
+        .to_string();
+    let name = match field(&j, "name") {
+        None => None,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("'name' must be a string"))?;
+            validate_name(s)?;
+            Some(s.to_string())
+        }
+    };
+    Ok(ArtifactLoadRequest { path, name })
+}
+
 pub fn usize_arr(xs: &[usize]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
 }
@@ -561,9 +723,15 @@ pub fn mat_json(m: &Mat) -> Json {
 mod tests {
     use super::*;
 
+    /// `parse_create` with a benign fs root (tests that exercise the
+    /// sandbox itself build their own root).
+    fn pc(body: &str) -> crate::Result<CreateRequest> {
+        parse_create(body, Path::new("."))
+    }
+
     #[test]
     fn create_defaults() {
-        let req = parse_create("{}").unwrap();
+        let req = pc("{}").unwrap();
         assert!(req.name.is_none());
         assert_eq!(req.method.method, Method::Oasis);
         assert_eq!(req.method.max_cols, 450);
@@ -592,7 +760,7 @@ mod tests {
             "method": "farahat",
             "max_cols": 40, "init_cols": 3, "tol": 1e-10, "seed": 5
         }"#;
-        let req = parse_create(body).unwrap();
+        let req = pc(body).unwrap();
         assert_eq!(req.name.as_deref(), Some("train-7"));
         assert_eq!(req.method.method, Method::Farahat);
         assert_eq!(req.method.max_cols, 40);
@@ -602,7 +770,7 @@ mod tests {
     #[test]
     fn create_inline_points() {
         let body = r#"{"dataset": {"points": [[0,0],[1,0],[0,1]]}}"#;
-        let req = parse_create(body).unwrap();
+        let req = pc(body).unwrap();
         match req.dataset {
             DatasetSpec::Points(ref rows) => {
                 assert_eq!(rows.len(), 3);
@@ -618,39 +786,39 @@ mod tests {
     /// unbounded allocation or thread storm.
     #[test]
     fn create_enforces_serving_caps() {
-        assert!(parse_create(r#"{"dataset": {"n": 1e9}}"#).is_err());
-        assert!(parse_create(r#"{"dataset": {"dim": 100000}}"#).is_err());
-        assert!(parse_create(r#"{"workers": 100000}"#).is_err());
+        assert!(pc(r#"{"dataset": {"n": 1e9}}"#).is_err());
+        assert!(pc(r#"{"dataset": {"dim": 100000}}"#).is_err());
+        assert!(pc(r#"{"workers": 100000}"#).is_err());
         // at the cap is fine
-        assert!(parse_create(&format!(
+        assert!(pc(&format!(
             r#"{{"dataset": {{"n": {MAX_DATASET_N}}}, "workers": {MAX_WORKERS}}}"#
         ))
         .is_ok());
         // n and dim individually legal but n×dim over the element cap is
         // rejected at build time, before any allocation
-        let big = parse_create(
+        let big = pc(
             r#"{"dataset": {"generator": "mnist", "n": 200000, "dim": 4096}}"#,
         )
         .unwrap();
         assert!(big.dataset.build().is_err());
         // …while the same generator at sane scale builds
-        let ok = parse_create(r#"{"dataset": {"generator": "mnist", "n": 50}}"#)
+        let ok = pc(r#"{"dataset": {"generator": "mnist", "n": 50}}"#)
             .unwrap();
         assert_eq!(ok.dataset.build().unwrap().dim(), 784);
     }
 
     #[test]
     fn create_rejects_bad_input() {
-        assert!(parse_create("not json").is_err());
-        assert!(parse_create(r#"{"name": "has space"}"#).is_err());
-        assert!(parse_create(r#"{"method": "magic"}"#).is_err());
-        assert!(parse_create(r#"{"max_cols": 0}"#).is_err());
-        assert!(parse_create(r#"{"max_cols": 5, "init_cols": 9}"#).is_err());
-        assert!(parse_create(r#"{"dataset": {"points": [[1,2],[3]]}}"#).is_err());
-        assert!(parse_create(r#"{"dataset": {"points": []}}"#).is_err());
-        assert!(parse_create(r#"{"kernel": {"type": "gaussian", "sigma": -1}}"#)
+        assert!(pc("not json").is_err());
+        assert!(pc(r#"{"name": "has space"}"#).is_err());
+        assert!(pc(r#"{"method": "magic"}"#).is_err());
+        assert!(pc(r#"{"max_cols": 0}"#).is_err());
+        assert!(pc(r#"{"max_cols": 5, "init_cols": 9}"#).is_err());
+        assert!(pc(r#"{"dataset": {"points": [[1,2],[3]]}}"#).is_err());
+        assert!(pc(r#"{"dataset": {"points": []}}"#).is_err());
+        assert!(pc(r#"{"kernel": {"type": "gaussian", "sigma": -1}}"#)
             .is_err());
-        assert!(parse_create(r#"{"dataset": {"generator": "nope"}}"#)
+        assert!(pc(r#"{"dataset": {"generator": "nope"}}"#)
             .map(|r| r.dataset.build())
             .unwrap()
             .is_err());
@@ -699,6 +867,81 @@ mod tests {
         .unwrap();
         assert_eq!(s.steps, 9);
         assert!(s.rule.criteria().is_empty());
+    }
+
+    #[test]
+    fn file_dataset_and_artifact_payloads_parse() {
+        let req = pc(r#"{"dataset": {"file": "sets/train.csv"}}"#)
+            .unwrap();
+        match req.dataset {
+            DatasetSpec::File { ref client, ref path } => {
+                assert_eq!(client, "sets/train.csv");
+                // resolved under the (benign) test root, raw spelling kept
+                assert!(path.ends_with("sets/train.csv"), "{}", path.display());
+                assert_eq!(req.dataset.describe(), "file:sets/train.csv");
+            }
+            other => panic!("expected file spec, got {other:?}"),
+        }
+        assert!(pc(r#"{"dataset": {"file": ""}}"#).is_err());
+        assert!(pc(
+            r#"{"dataset": {"file": "a.csv", "points": [[1]]}}"#
+        )
+        .is_err());
+
+        let s = parse_save(r#"{"path": "out/model.oasis"}"#).unwrap();
+        assert_eq!(s.path, "out/model.oasis");
+        assert!(parse_save("{}").is_err());
+
+        let l = parse_artifact_load(r#"{"path": "m.oasis", "name": "prod"}"#)
+            .unwrap();
+        assert_eq!((l.path.as_str(), l.name.as_deref()), ("m.oasis", Some("prod")));
+        assert!(parse_artifact_load(r#"{"path": "m", "name": "bad name"}"#)
+            .is_err());
+    }
+
+    /// Client paths must stay inside the server's `--fs-root` subtree —
+    /// lexically and through symlinks.
+    #[test]
+    fn fs_path_resolution_rejects_escapes() {
+        let root = std::env::temp_dir()
+            .join("oasis-fsroot-test")
+            .join(format!("r{}", std::process::id()));
+        std::fs::create_dir_all(root.join("a")).unwrap();
+        // existing subdirectory, and a file that does not exist yet
+        // (the save path) both resolve under the root
+        assert!(resolve_fs_path(&root, "a/b.csv")
+            .unwrap()
+            .ends_with("a/b.csv"));
+        assert!(resolve_fs_path(&root, "fresh.oasis").is_ok());
+        assert!(resolve_fs_path(&root, "new-dir/deep/fresh.oasis").is_ok());
+        assert!(resolve_fs_path(&root, "").is_err());
+        assert!(resolve_fs_path(&root, "/etc/passwd").is_err());
+        assert!(resolve_fs_path(&root, "../outside").is_err());
+        assert!(resolve_fs_path(&root, "a/../../outside").is_err());
+        // a nonexistent root is refused outright
+        assert!(resolve_fs_path(&root.join("absent"), "x").is_err());
+        // a symlink inside the root pointing outside it must not let a
+        // request through the sandbox — whether its target exists
+        // (canonicalizes outside) or not (dangling: a save would write
+        // through it)
+        #[cfg(unix)]
+        {
+            let link = root.join("esc");
+            std::fs::remove_file(&link).ok();
+            std::os::unix::fs::symlink("/", &link).unwrap();
+            let err = resolve_fs_path(&root, "esc/etc/passwd").unwrap_err();
+            assert!(format!("{err}").contains("symlink"), "{err}");
+            let dangling = root.join("dangle");
+            std::fs::remove_file(&dangling).ok();
+            std::os::unix::fs::symlink(
+                root.join("absent-target-far-away"),
+                &dangling,
+            )
+            .unwrap();
+            let err = resolve_fs_path(&root, "dangle").unwrap_err();
+            assert!(format!("{err}").contains("symlink"), "{err}");
+        }
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

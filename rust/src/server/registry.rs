@@ -124,6 +124,8 @@ pub struct SessionHandle {
     pub shared: Arc<SessionShared>,
     pub dataset: Arc<Dataset>,
     pub kernel: Arc<dyn Kernel + Send + Sync>,
+    /// Dataset provenance line (recorded into saved artifacts).
+    pub source: Arc<str>,
 }
 
 struct Entry {
@@ -177,6 +179,7 @@ impl Registry {
                 }
             },
         };
+        let source: Arc<str> = req.dataset.describe().into();
         let dataset = Arc::new(req.dataset.build()?);
         let kernel = req.kernel.build(&dataset);
         let mut spec = req.method;
@@ -227,6 +230,7 @@ impl Registry {
             shared: shared.clone(),
             dataset: dataset.clone(),
             kernel: kernel.clone(),
+            source,
         };
         let join = std::thread::Builder::new()
             .name(format!("oasis-session-{name}"))

@@ -1,0 +1,177 @@
+//! Little-endian binary framing and checksumming for the crate's
+//! on-disk formats (the approximation artifact store in
+//! [`crate::nystrom::store`] and the binary matrix files read by
+//! [`crate::data::loader`]).
+//!
+//! Both formats share one layout: an ASCII magic line, one line of JSON
+//! header, then a binary payload of framed f64 sections. Each section is
+//! `[u64 LE element count][count × f64 LE]`, and the header carries the
+//! total payload byte count plus an FNV-1a 64 checksum of the payload so
+//! truncation and corruption are detected before any numbers are trusted.
+//! Everything here is dependency-free (tier-1 builds offline).
+
+use crate::Result;
+use crate::{anyhow, bail};
+
+/// FNV-1a 64-bit hash — the store's integrity checksum. Not
+/// cryptographic; it exists to catch truncation, bit rot, and partial
+/// writes, and round-trips through the JSON header as a fixed-width hex
+/// string (u64 does not survive an f64 JSON number above 2^53).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Render a checksum the way headers store it (16 hex digits).
+pub fn checksum_hex(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+/// Parse a header checksum rendered by [`checksum_hex`].
+pub fn parse_checksum_hex(s: &str) -> Result<u64> {
+    if s.len() != 16 {
+        bail!("checksum must be 16 hex digits, got {:?}", s);
+    }
+    u64::from_str_radix(s, 16).map_err(|_| anyhow!("bad checksum {s:?}"))
+}
+
+/// Append one framed f64 section: `[u64 LE count][count × f64 LE]`.
+pub fn push_f64_section(out: &mut Vec<u8>, xs: &[f64]) {
+    out.reserve(8 + xs.len() * 8);
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Sequential reader over a framed payload.
+pub struct SectionReader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> SectionReader<'a> {
+    pub fn new(payload: &'a [u8]) -> SectionReader<'a> {
+        SectionReader { b: payload, i: 0 }
+    }
+
+    /// Bytes left unread (0 once every section was consumed).
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated payload: {what} needs {n} bytes, {} left",
+                self.remaining()
+            );
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    /// Read one framed f64 section, checking the frame's element count
+    /// against `expect` (what the header's dimensions imply).
+    pub fn read_f64_section(&mut self, expect: usize, what: &str) -> Result<Vec<f64>> {
+        let len_bytes = self.take(8, what)?;
+        let len = u64::from_le_bytes(len_bytes.try_into().unwrap());
+        if len != expect as u64 {
+            bail!("{what}: frame holds {len} values but the header implies {expect}");
+        }
+        let raw = self.take(expect * 8, what)?;
+        let mut out = Vec::with_capacity(expect);
+        for chunk in raw.chunks_exact(8) {
+            out.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+}
+
+/// Split a magic-line file into its JSON header line and binary payload:
+/// `<magic>\n<json header>\n<payload>`. The magic must include its
+/// trailing newline. Returns `(header_str, payload_bytes)`.
+pub fn split_magic_file<'a>(
+    bytes: &'a [u8],
+    magic: &[u8],
+    what: &str,
+) -> Result<(&'a str, &'a [u8])> {
+    if !bytes.starts_with(magic) {
+        bail!("not a {what} file (bad magic)");
+    }
+    let rest = &bytes[magic.len()..];
+    let nl = rest
+        .iter()
+        .position(|&b| b == b'\n')
+        .ok_or_else(|| anyhow!("{what}: truncated before the header line ended"))?;
+    let header = std::str::from_utf8(&rest[..nl])
+        .map_err(|_| anyhow!("{what}: header is not UTF-8"))?;
+    Ok((header, &rest[nl + 1..]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn checksum_hex_round_trips() {
+        for h in [0u64, 1, 0xdead_beef, u64::MAX] {
+            assert_eq!(parse_checksum_hex(&checksum_hex(h)).unwrap(), h);
+        }
+        assert!(parse_checksum_hex("xyz").is_err());
+        assert!(parse_checksum_hex("0123").is_err());
+    }
+
+    #[test]
+    fn f64_sections_round_trip_bit_exactly() {
+        let a = vec![0.1, -0.0, 1.0 / 3.0, f64::MAX, 5e-324];
+        let b = vec![42.0; 3];
+        let mut payload = Vec::new();
+        push_f64_section(&mut payload, &a);
+        push_f64_section(&mut payload, &b);
+        let mut r = SectionReader::new(&payload);
+        let ra = r.read_f64_section(a.len(), "a").unwrap();
+        let rb = r.read_f64_section(b.len(), "b").unwrap();
+        assert_eq!(r.remaining(), 0);
+        for (x, y) in a.iter().zip(&ra) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(rb, b);
+    }
+
+    #[test]
+    fn truncated_and_miscounted_sections_error() {
+        let mut payload = Vec::new();
+        push_f64_section(&mut payload, &[1.0, 2.0, 3.0]);
+        // truncation mid-section
+        let cut = &payload[..payload.len() - 4];
+        assert!(SectionReader::new(cut).read_f64_section(3, "x").is_err());
+        // header/frame disagreement
+        assert!(SectionReader::new(&payload).read_f64_section(4, "x").is_err());
+        // empty payload
+        assert!(SectionReader::new(&[]).read_f64_section(1, "x").is_err());
+    }
+
+    #[test]
+    fn magic_split() {
+        let file = b"magic\n{\"v\":1}\n\x01\x02";
+        let (h, p) = split_magic_file(file, b"magic\n", "test").unwrap();
+        assert_eq!(h, "{\"v\":1}");
+        assert_eq!(p, b"\x01\x02");
+        assert!(split_magic_file(b"other\nx", b"magic\n", "test").is_err());
+        assert!(split_magic_file(b"magic\nno newline", b"magic\n", "test").is_err());
+    }
+}

@@ -7,6 +7,7 @@
 //! DESIGN.md §6 (Substitutions).
 
 pub mod args;
+pub mod framing;
 pub mod json;
 pub mod parallel;
 pub mod propcheck;

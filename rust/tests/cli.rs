@@ -137,6 +137,102 @@ fn approximate_target_err_stops_early() {
     assert!(k < 200.0, "expected early stop, k = {k}");
 }
 
+/// End-to-end persistence through the binary: approximate a CSV file,
+/// save the artifact, then answer queries from it with `oasis query` —
+/// deterministically, and without the CSV still being around.
+#[test]
+fn approximate_data_save_then_query_load() {
+    let dir = std::env::temp_dir()
+        .join("oasis-cli-store-test")
+        .join(format!("run-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("pts.csv");
+    let model = dir.join("model.oasis");
+
+    // small deterministic grid dataset
+    let mut text = String::new();
+    for i in 0..60 {
+        text.push_str(&format!("{},{}\n", (i % 10) as f64 * 0.37, (i / 10) as f64 * 0.81));
+    }
+    std::fs::write(&csv, text).unwrap();
+
+    let (stdout, stderr, ok) = run(&[
+        "approximate",
+        "--data",
+        csv.to_str().unwrap(),
+        "--cols",
+        "12",
+        "--method",
+        "oasis",
+        "--save",
+        model.to_str().unwrap(),
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stderr.contains("saved artifact"), "{stderr}");
+    let line = stdout.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"dataset\":\"file:"), "{line}");
+    assert!(line.contains("\"k\":12"), "{line}");
+    assert!(model.is_file());
+
+    // the CSV is no longer needed for queries
+    std::fs::remove_file(&csv).unwrap();
+
+    // summary mode
+    let (stdout, stderr, ok) =
+        run(&["query", "--load", model.to_str().unwrap()]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("n=60"), "{stdout}");
+    assert!(stdout.contains("k=12"), "{stdout}");
+    assert!(stdout.contains("kernel=gaussian"), "{stdout}");
+
+    // query mode, twice: deterministic bit-identical output
+    let q = |targs: &[&str]| {
+        let mut argv = vec![
+            "query",
+            "--load",
+            model.to_str().unwrap(),
+            "--points",
+            "0.5,0.5;1.0,2.0",
+        ];
+        argv.extend_from_slice(targs);
+        run(&argv)
+    };
+    let (out1, stderr, ok) = q(&["--targets", "0,30,59", "--json"]);
+    assert!(ok, "stderr: {stderr}");
+    let line = out1.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"k\":12"), "{line}");
+    assert!(line.contains("\"weights\":["), "{line}");
+    assert!(line.contains("\"kernel\":["), "{line}");
+    let (out2, _, _) = q(&["--targets", "0,30,59", "--json"]);
+    assert_eq!(out1, out2, "stored queries must be deterministic");
+
+    // human-readable mode names the targets
+    let (out, stderr, ok) = q(&["--targets", "7"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(out.contains("g(7)="), "{out}");
+    assert!(out.contains("point 1:"), "{out}");
+
+    // a corrupted artifact is rejected with a clear error
+    let mut bytes = std::fs::read(&model).unwrap();
+    let at = bytes.len() - 3;
+    bytes[at] ^= 0x08;
+    let bad = dir.join("bad.oasis");
+    std::fs::write(&bad, &bytes).unwrap();
+    let (_, stderr, ok) = run(&["query", "--load", bad.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(stderr.contains("checksum"), "{stderr}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn query_without_load_errors() {
+    let (_, stderr, ok) = run(&["query"]);
+    assert!(!ok);
+    assert!(stderr.contains("--load"), "{stderr}");
+}
+
 #[test]
 fn unknown_method_errors() {
     let (_, stderr, ok) = run(&[

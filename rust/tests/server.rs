@@ -9,19 +9,32 @@
 //! bit-identical to an equivalent offline `run_to_completion` prefix.
 
 use oasis::data::generators::two_moons;
+use oasis::data::loader;
 use oasis::kernels::{Gaussian, Kernel};
 use oasis::sampling::{
     oasis::Oasis, run_to_completion, ImplicitOracle, SamplerSession,
     StoppingRule,
 };
 use oasis::server::http::client_request;
-use oasis::server::Server;
+use oasis::server::{Server, ServerConfig};
 use oasis::util::json::Json;
 use std::net::SocketAddr;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 fn start_server() -> (SocketAddr, std::thread::JoinHandle<()>) {
     let server = Server::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let join = std::thread::spawn(move || server.run().expect("server run"));
+    (addr, join)
+}
+
+/// Server whose client paths resolve under a private temp directory.
+fn start_server_rooted(
+    root: PathBuf,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Server::bind_with("127.0.0.1:0", ServerConfig { fs_root: root })
+        .expect("bind ephemeral port");
     let addr = server.local_addr().unwrap();
     let join = std::thread::spawn(move || server.run().expect("server run"));
     (addr, join)
@@ -300,6 +313,189 @@ fn background_steps_metrics_and_queries() {
     assert_eq!(request(addr, "GET", "/sessions/q", "").0, 404);
 
     stop_server(addr, join);
+}
+
+/// ACCEPTANCE: full store-and-serve lifecycle over the socket — create a
+/// session from a CSV *file*, grow it, persist it with
+/// `POST /sessions/{name}/save`, host the saved artifact with
+/// `POST /artifacts/load`, and get bit-identical answers from
+/// `POST /artifacts/{name}/query` without the original dataset — plus
+/// path-traversal rejection and artifact listing in `/metrics`.
+#[test]
+fn save_load_and_query_artifact_over_socket() {
+    let root = std::env::temp_dir()
+        .join("oasis-server-store-test")
+        .join(format!("run-{}", std::process::id()));
+    std::fs::create_dir_all(&root).unwrap();
+    let (addr, join) = start_server_rooted(root.clone());
+
+    // a CSV dataset inside the server's fs-root
+    let ds = two_moons(150, 0.05, 21);
+    loader::save_csv(&root.join("train.csv"), &ds).unwrap();
+
+    let create = r#"{"name":"fs",
+        "dataset":{"file":"train.csv"},
+        "kernel":{"type":"gaussian","sigma":0.7},
+        "method":"oasis","max_cols":30,"init_cols":4,"seed":13}"#;
+    let (status, j) = request(addr, "POST", "/sessions", create);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "n"), 150);
+    assert_eq!(usize_field(&j, "dim"), 2);
+
+    let (status, j) = request(addr, "POST", "/sessions/fs/step", r#"{"steps":16}"#);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "k"), 20);
+
+    // escaping the fs-root must 400 for both datasets and artifacts
+    let (status, j) = request(
+        addr,
+        "POST",
+        "/sessions",
+        r#"{"dataset":{"file":"../outside.csv"}}"#,
+    );
+    assert_eq!(status, 400, "{j}");
+    let (status, _) = request(
+        addr,
+        "POST",
+        "/sessions/fs/save",
+        r#"{"path":"/tmp/abs.oasis"}"#,
+    );
+    assert_eq!(status, 400, "absolute save path must be rejected");
+
+    // persist the live session
+    let (status, j) = request(
+        addr,
+        "POST",
+        "/sessions/fs/save",
+        r#"{"path":"models/fs.oasis"}"#,
+    );
+    // models/ does not exist: the server must not invent directories
+    assert_eq!(status, 500, "{j}");
+    let (status, j) =
+        request(addr, "POST", "/sessions/fs/save", r#"{"path":"fs.oasis"}"#);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "k"), 20);
+    assert!(usize_field(&j, "bytes") > 0, "{j}");
+    assert!(root.join("fs.oasis").is_file());
+
+    // query the live session for reference answers
+    let qbody = r#"{"points":[[0.4,0.1]],"targets":[0,75,149]}"#;
+    let (status, live) = request(addr, "POST", "/sessions/fs/query", qbody);
+    assert_eq!(status, 200, "{live}");
+
+    // host the stored artifact and query it — the artifact never touches
+    // the session, its dataset, or its oracle
+    let (status, j) = request(
+        addr,
+        "POST",
+        "/artifacts/load",
+        r#"{"path":"fs.oasis","name":"fs-replica"}"#,
+    );
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(j.get("name").and_then(Json::as_str), Some("fs-replica"));
+    assert_eq!(usize_field(&j, "k"), 20);
+    assert_eq!(j.get("method").and_then(Json::as_str), Some("oASIS"));
+    assert!(
+        j.get("source").and_then(Json::as_str).unwrap().contains("train.csv"),
+        "{j}"
+    );
+    // duplicate name → 409; corrupt file → 400
+    assert_eq!(
+        request(
+            addr,
+            "POST",
+            "/artifacts/load",
+            r#"{"path":"fs.oasis","name":"fs-replica"}"#
+        )
+        .0,
+        409
+    );
+    std::fs::write(root.join("junk.oasis"), b"not an artifact").unwrap();
+    assert_eq!(
+        request(addr, "POST", "/artifacts/load", r#"{"path":"junk.oasis"}"#).0,
+        400
+    );
+
+    let (status, stored) =
+        request(addr, "POST", "/artifacts/fs-replica/query", qbody);
+    assert_eq!(status, 200, "{stored}");
+    assert_eq!(usize_field(&stored, "k"), 20);
+
+    // bit-identical answers: weights and kernel values match the live
+    // session query exactly (both travel as shortest-round-trip JSON)
+    let result_of = |j: &Json| -> (Vec<f64>, Vec<f64>) {
+        let r = &j.get("results").and_then(Json::as_arr).expect("results")[0];
+        let nums = |key: &str| -> Vec<f64> {
+            r.get(key)
+                .and_then(Json::as_arr)
+                .unwrap_or_else(|| panic!("missing {key} in {j}"))
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect()
+        };
+        (nums("weights"), nums("kernel"))
+    };
+    let (lw, lk) = result_of(&live);
+    let (sw, sk) = result_of(&stored);
+    assert_eq!(lw.len(), sw.len());
+    for (a, b) in lw.iter().zip(&sw) {
+        assert_eq!(a.to_bits(), b.to_bits(), "weights diverged");
+    }
+    for (a, b) in lk.iter().zip(&sk) {
+        assert_eq!(a.to_bits(), b.to_bits(), "kernel values diverged");
+    }
+
+    // bad artifact queries map to clean statuses
+    assert_eq!(
+        request(addr, "POST", "/artifacts/fs-replica/query", r#"{"points":[[1]]}"#).0,
+        400,
+        "dimension mismatch"
+    );
+    assert_eq!(
+        request(
+            addr,
+            "POST",
+            "/artifacts/fs-replica/query",
+            r#"{"points":[[0,0]],"targets":[150]}"#
+        )
+        .0,
+        400,
+        "target out of range"
+    );
+    assert_eq!(request(addr, "POST", "/artifacts/nope/query", qbody).0, 404);
+
+    // listings: GET /artifacts, GET /artifacts/{name}, /metrics
+    let (_, jl) = request(addr, "GET", "/artifacts", "");
+    let arts = jl.get("artifacts").and_then(Json::as_arr).unwrap();
+    assert_eq!(arts.len(), 1);
+    // exactly one artifact query succeeded so far (the malformed ones
+    // 400 before the counters are touched)
+    let (_, js) = request(addr, "GET", "/artifacts/fs-replica", "");
+    assert_eq!(usize_field(&js, "queries"), 1, "{js}");
+    let (_, m) = request(addr, "GET", "/metrics", "");
+    let marts = m.get("artifacts").and_then(Json::as_arr).unwrap();
+    assert_eq!(marts.len(), 1);
+    let server_counters = m.get("server").expect("server counters");
+    assert!(usize_field(server_counters, "artifacts_saved") >= 1);
+    assert!(usize_field(server_counters, "artifacts_loaded") >= 1);
+    assert_eq!(usize_field(server_counters, "artifact_queries"), 1);
+
+    // the artifact outlives its session: evict the session, query again
+    assert_eq!(request(addr, "DELETE", "/sessions/fs", "").0, 200);
+    let (status, again) =
+        request(addr, "POST", "/artifacts/fs-replica/query", qbody);
+    assert_eq!(status, 200, "{again}");
+    let (aw, _) = result_of(&again);
+    for (a, b) in lw.iter().zip(&aw) {
+        assert_eq!(a.to_bits(), b.to_bits(), "post-eviction answers diverged");
+    }
+
+    // unload
+    assert_eq!(request(addr, "DELETE", "/artifacts/fs-replica", "").0, 200);
+    assert_eq!(request(addr, "GET", "/artifacts/fs-replica", "").0, 404);
+
+    stop_server(addr, join);
+    std::fs::remove_dir_all(&root).ok();
 }
 
 /// The distributed oASIS-P method is hostable too, including its (new)

@@ -1,0 +1,212 @@
+//! Integration tests for the persistence layer: artifact save→load
+//! round trips through real files, clean rejection of damaged files, and
+//! the file-backed dataset path — including the acceptance check that a
+//! CSV-loaded dataset drives the *same* oASIS selection sequence as the
+//! equivalent inline-points dataset.
+
+use oasis::data::generators::two_moons;
+use oasis::data::{loader, Dataset, LoadLimits};
+use oasis::kernels::{Gaussian, Kernel};
+use oasis::nystrom::{Provenance, StoredArtifact};
+use oasis::sampling::{
+    oasis::Oasis, run_to_completion, ImplicitOracle, SamplerSession,
+    StoppingRule,
+};
+use std::path::PathBuf;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("oasis-store-integration").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run an oASIS session to `cols` columns and return the snapshot plus
+/// its inputs.
+fn run_oasis(ds: &Dataset, cols: usize) -> (oasis::nystrom::NystromApprox, Gaussian) {
+    let kernel = Gaussian::with_sigma_fraction(ds, 0.05);
+    let approx = {
+        let oracle = ImplicitOracle::new(ds, &kernel);
+        let mut session = Oasis::new(cols, 5, 1e-12, 7).session(&oracle).unwrap();
+        run_to_completion(&mut session, &StoppingRule::budget(cols)).unwrap();
+        session.snapshot().unwrap()
+    };
+    (approx, kernel)
+}
+
+/// ACCEPTANCE: a saved approximation reloads bit-identically — indices,
+/// both factor matrices, and the extension weights it produces for a
+/// query point — and answers queries without the original dataset.
+#[test]
+fn artifact_file_round_trip_is_bit_identical() {
+    let dir = tmp_dir("roundtrip");
+    let ds = two_moons(300, 0.05, 42);
+    let (approx, kernel) = run_oasis(&ds, 40);
+    let artifact = StoredArtifact::from_parts(
+        approx,
+        &ds,
+        &kernel,
+        Provenance { source: "generator:two-moons".into(), method: "oASIS".into() },
+        Some(0.01),
+    )
+    .unwrap();
+
+    let path = dir.join("model.oasis");
+    artifact.save(&path).unwrap();
+    let loaded = StoredArtifact::load(&path).unwrap();
+
+    // indices and factors: bit-identical
+    assert_eq!(loaded.approx.indices, artifact.approx.indices);
+    for (a, b) in artifact.approx.c.data.iter().zip(&loaded.approx.c.data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "C diverged");
+    }
+    for (a, b) in artifact.approx.winv.data.iter().zip(&loaded.approx.winv.data)
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "W⁻¹ diverged");
+    }
+
+    // extension weights from the loaded artifact (which never sees `ds`)
+    // match the live-oracle path exactly
+    let z = [0.35, -0.1];
+    let stored_w = loaded.query_weights(&z).unwrap();
+    let b: Vec<f64> = artifact
+        .approx
+        .indices
+        .iter()
+        .map(|&j| kernel.eval(&z, ds.point(j)))
+        .collect();
+    let live_w = artifact.approx.extension_weights(&b);
+    assert_eq!(stored_w.len(), live_w.len());
+    for (a, b) in stored_w.iter().zip(&live_w) {
+        assert_eq!(a.to_bits(), b.to_bits(), "extension weights diverged");
+    }
+    let vals = loaded.extend(&stored_w, &[0, 150, 299]).unwrap();
+    for (v, &t) in vals.iter().zip(&[0usize, 150, 299]) {
+        assert_eq!(
+            v.to_bits(),
+            artifact.approx.extend_entry(&live_w, t).to_bits(),
+            "ĝ(z, {t}) diverged"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Damaged files must be rejected with a clear error, not garbage data:
+/// flipped payload bytes, truncation at several byte counts, and a
+/// future format version.
+#[test]
+fn damaged_artifact_files_rejected() {
+    let dir = tmp_dir("damage");
+    let ds = two_moons(80, 0.05, 3);
+    let (approx, kernel) = run_oasis(&ds, 12);
+    let artifact = StoredArtifact::from_parts(
+        approx,
+        &ds,
+        &kernel,
+        Provenance { source: "t".into(), method: "oASIS".into() },
+        None,
+    )
+    .unwrap();
+    let path = dir.join("good.oasis");
+    artifact.save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // truncations at several depths: inside magic, header, and payload
+    for keep in [3usize, 20, good.len() / 2, good.len() - 1] {
+        let p = dir.join(format!("trunc-{keep}.oasis"));
+        std::fs::write(&p, &good[..keep]).unwrap();
+        assert!(
+            StoredArtifact::load(&p).is_err(),
+            "truncation to {keep} bytes was accepted"
+        );
+    }
+
+    // one flipped bit deep in the payload → checksum failure
+    let mut corrupt = good.clone();
+    let at = good.len() - good.len() / 4;
+    corrupt[at] ^= 0x10;
+    let p = dir.join("corrupt.oasis");
+    std::fs::write(&p, &corrupt).unwrap();
+    let err = StoredArtifact::load(&p).unwrap_err();
+    assert!(format!("{err}").contains("checksum"), "{err}");
+
+    // future version
+    let text = String::from_utf8_lossy(&good).into_owned();
+    let bumped = text.replacen("\"version\":1", "\"version\":7", 1);
+    let p = dir.join("future.oasis");
+    std::fs::write(&p, bumped.as_bytes()).unwrap();
+    let err = StoredArtifact::load(&p).unwrap_err();
+    assert!(format!("{err}").contains("version 7"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ACCEPTANCE: a dataset loaded from CSV selects the *same columns in
+/// the same order* as the equivalent inline-points dataset (both sides
+/// parse decimal text with the same `str::parse::<f64>`, so the values
+/// — and therefore the whole selection sequence — are bit-identical).
+#[test]
+fn csv_dataset_reproduces_inline_selection_sequence() {
+    let dir = tmp_dir("csv-vs-inline");
+    let ds = two_moons(200, 0.05, 9);
+
+    // one canonical decimal rendering, consumed by both paths
+    let csv_path = dir.join("points.csv");
+    loader::save_csv(&csv_path, &ds).unwrap();
+    let csv_text = std::fs::read_to_string(&csv_path).unwrap();
+
+    // "inline" path: parse each field back exactly as a JSON request
+    // parser would (str::parse::<f64>)
+    let rows: Vec<Vec<f64>> = csv_text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.split(',').map(|f| f.trim().parse().unwrap()).collect())
+        .collect();
+    let inline_ds = Dataset::from_rows(rows);
+    let file_ds = loader::load_dataset(&csv_path, &LoadLimits::unlimited()).unwrap();
+
+    assert_eq!(inline_ds.n(), file_ds.n());
+    assert_eq!(inline_ds.dim(), file_ds.dim());
+    for (a, b) in inline_ds.flat().iter().zip(file_ds.flat()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "datasets diverged before sampling");
+    }
+
+    let select = |ds: &Dataset| -> Vec<usize> {
+        let kernel = Gaussian::with_sigma_fraction(ds, 0.05);
+        let oracle = ImplicitOracle::new(ds, &kernel);
+        let mut s = Oasis::new(30, 5, 1e-12, 11).session(&oracle).unwrap();
+        run_to_completion(&mut s, &StoppingRule::budget(30)).unwrap();
+        s.indices().to_vec()
+    };
+    assert_eq!(
+        select(&inline_ds),
+        select(&file_ds),
+        "oASIS selection diverged between inline and CSV-loaded data"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The binary matrix format round-trips through shard loads: each
+/// worker's block read straight off the file equals the in-memory shard.
+#[test]
+fn binary_file_shards_feed_oasis_p_blocks() {
+    let dir = tmp_dir("bin-shards");
+    let ds = two_moons(91, 0.05, 5);
+    let path = dir.join("points.mat");
+    loader::save_matrix(&path, &ds).unwrap();
+    let p = 3;
+    let shards: Vec<_> = (0..p)
+        .map(|w| loader::load_shard(&path, w, p, &LoadLimits::unlimited()).unwrap())
+        .collect();
+    let total: usize = shards.iter().map(|s| s.len()).sum();
+    assert_eq!(total, ds.n());
+    for s in &shards {
+        for l in 0..s.len() {
+            let want = ds.point(s.start + l);
+            let got = s.points.point(l);
+            for (a, b) in want.iter().zip(got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
