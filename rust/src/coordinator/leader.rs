@@ -17,7 +17,7 @@ use super::comm::{FromWorker, LeaderHandle, ToWorker, WorkerHandle};
 use super::config::OasisPConfig;
 use super::metrics::Metrics;
 use super::worker::Worker;
-use crate::data::{shard, Dataset};
+use crate::data::{loader, shard, Dataset, LoadLimits, Shard};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::nystrom::NystromApprox;
@@ -32,6 +32,31 @@ use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
+
+/// Where the workers' shards come from.
+///
+/// `Memory` is the in-process setting: the caller (usually the
+/// [`engine`](crate::engine)) splits a materialized dataset and each
+/// worker thread receives its block. `File` is the paper's
+/// distributed-data setting (Alg. 2: "load separate n/p column blocks of
+/// Z into each node"): every worker opens the binary dataset file itself
+/// and reads only its own byte range via [`loader::load_shard`] — the
+/// leader never materializes the dataset, only the `n` its caller read
+/// from the file header ([`loader::peek_matrix_dims`]).
+pub enum ShardPlan {
+    Memory(Vec<Shard>),
+    File { path: std::path::PathBuf, n: usize, limits: LoadLimits },
+}
+
+impl ShardPlan {
+    /// Total points across all shards.
+    pub fn n(&self) -> usize {
+        match self {
+            ShardPlan::Memory(shards) => shards.iter().map(Shard::len).sum(),
+            ShardPlan::File { n, .. } => *n,
+        }
+    }
+}
 
 /// Outcome report of a distributed run.
 #[derive(Debug)]
@@ -84,6 +109,14 @@ pub struct OasisPSession {
     pending: RefCell<VecDeque<FromWorker>>,
     metrics: Arc<Metrics>,
     trace: SelectionTrace,
+    /// Leader-side mirror of the selected points Z_Λ (selection order).
+    /// The leader sees every selected point anyway — seeds are fetched
+    /// during init, winners fetched before each broadcast — so the
+    /// mirror costs no extra communication. It is what
+    /// [`SamplerSession::selected_points`] serves, letting shard-read
+    /// deployments (whose caller holds no dataset) answer queries and
+    /// save artifacts from Λ's points alone.
+    z_sel: Vec<Vec<f64>>,
     d_scale: f64,
     /// Σ|Δ| / Σ|d| from the most recent gather round.
     resid_sum: Option<f64>,
@@ -94,38 +127,129 @@ pub struct OasisPSession {
 }
 
 impl OasisPSession {
-    /// Spawn the workers, replicate the seed state (identical RNG stream
-    /// and rejection rule to the sequential sampler), and broadcast Init.
-    /// Workers reply with their first shard argmaxes, which the first
-    /// `step` will gather.
+    /// Spawn the workers over an in-memory dataset split (the
+    /// single-process setting). See [`start_with_plan`] for the
+    /// plan-driven entry the engine uses — including per-worker file
+    /// reads.
+    ///
+    /// [`start_with_plan`]: OasisPSession::start_with_plan
     pub fn start(
         ds: &Dataset,
         kernel: Arc<dyn Kernel + Send + Sync>,
         cfg: OasisPConfig,
     ) -> Result<OasisPSession> {
+        // start_with_plan validates against the plan's n
+        let p = cfg.workers.min(ds.n()).max(1);
+        Self::start_with_plan(ShardPlan::Memory(shard::split(ds, p)), kernel, cfg)
+    }
+
+    /// Spawn the workers from a [`ShardPlan`], replicate the seed state
+    /// (identical RNG stream and rejection rule to the sequential
+    /// sampler), and broadcast Init. Workers reply with their first
+    /// shard argmaxes, which the first `step` will gather.
+    ///
+    /// With [`ShardPlan::File`], each worker thread reads only its own
+    /// byte range of the binary dataset file ([`loader::load_shard`])
+    /// before entering its message loop; a failed read surfaces through
+    /// the normal worker-failure path during seeding. Worker state
+    /// construction (including the kernel-diagonal pass) happens on the
+    /// worker threads for both plans, so per-shard init runs in
+    /// parallel.
+    pub fn start_with_plan(
+        plan: ShardPlan,
+        kernel: Arc<dyn Kernel + Send + Sync>,
+        cfg: OasisPConfig,
+    ) -> Result<OasisPSession> {
         let sw = Stopwatch::start();
-        let n = ds.n();
+        let n = plan.n();
         cfg.validate(n)?;
-        let p = cfg.workers.min(n);
         let metrics = Arc::new(Metrics::default());
 
         // --- spawn workers ---
+        // one spawn path for both plans: the worker thread obtains its
+        // shard (already-split block, or its own byte-range read of the
+        // file), constructs its state — including the kernel-diagonal
+        // pass, so per-shard init runs in parallel — and enters its
+        // message loop; an Err from the source surfaces at the leader's
+        // next recv as a worker failure
         let (to_leader_tx, inbox) = mpsc::channel::<FromWorker>();
-        let mut handles = Vec::with_capacity(p);
-        let mut joins = Vec::with_capacity(p);
-        for s in shard::split(ds, p) {
-            let (tx, rx) = mpsc::channel::<ToWorker>();
-            handles.push(WorkerHandle::new(s.worker, tx, metrics.clone()));
-            let worker = Worker::new(
-                s.worker,
-                s,
-                kernel.clone(),
-                LeaderHandle::new(to_leader_tx.clone(), metrics.clone()),
-                metrics.clone(),
-                cfg.max_cols,
-                cfg.failure,
-            );
-            joins.push(std::thread::spawn(move || worker.run(rx)));
+        let mut handles = Vec::new();
+        let mut joins = Vec::new();
+        let p;
+        {
+            let mut spawn =
+                |w: usize, source: Box<dyn FnOnce() -> Result<Shard> + Send>| {
+                    let (tx, rx) = mpsc::channel::<ToWorker>();
+                    handles.push(WorkerHandle::new(w, tx, metrics.clone()));
+                    let worker_kernel = kernel.clone();
+                    let leader =
+                        LeaderHandle::new(to_leader_tx.clone(), metrics.clone());
+                    let worker_metrics = metrics.clone();
+                    let (max_cols, failure) = (cfg.max_cols, cfg.failure);
+                    joins.push(std::thread::spawn(move || match source() {
+                        Ok(s) => Worker::new(
+                            w,
+                            s,
+                            worker_kernel,
+                            leader,
+                            worker_metrics,
+                            max_cols,
+                            failure,
+                        )
+                        .run(rx),
+                        Err(e) => {
+                            leader.send(FromWorker::Failed {
+                                worker: w,
+                                message: format!("{e}"),
+                            });
+                        }
+                    }));
+                };
+            match plan {
+                ShardPlan::Memory(shards) => {
+                    p = shards.len();
+                    for s in shards {
+                        let w = s.worker;
+                        spawn(w, Box::new(move || Ok(s)));
+                    }
+                }
+                ShardPlan::File { path, n: _, limits } => {
+                    p = cfg.workers.min(n).max(1);
+                    // the leader's ownership ranges come from the plan's
+                    // n; each worker re-derives its range from the
+                    // file's *actual* header, so cross-check the two —
+                    // a stale plan (file replaced since it was peeked)
+                    // or a caller-supplied wrong n must fail loudly at
+                    // seeding, not misroute FetchPoints or silently
+                    // select over mismatched blocks. If total rows
+                    // differ, at least one worker's range differs.
+                    let expected = shard::shard_ranges(n, p);
+                    for w in 0..p {
+                        let path = path.clone();
+                        let want = expected[w].clone();
+                        spawn(
+                            w,
+                            Box::new(move || {
+                                let s = loader::load_shard(&path, w, p, &limits)?;
+                                if s.start != want.start || s.len() != want.len() {
+                                    return Err(anyhow!(
+                                        "shard {w} of {} covers rows {}..{} \
+                                         but this run expects {}..{} — the \
+                                         file changed since the run was \
+                                         planned",
+                                        path.display(),
+                                        s.start,
+                                        s.start + s.len(),
+                                        want.start,
+                                        want.end
+                                    ));
+                                }
+                                Ok(s)
+                            }),
+                        );
+                    }
+                }
+            }
         }
         drop(to_leader_tx);
 
@@ -142,6 +266,7 @@ impl OasisPSession {
             pending: RefCell::new(VecDeque::new()),
             metrics,
             trace: SelectionTrace::default(),
+            z_sel: Vec::new(),
             d_scale: 0.0,
             resid_sum: None,
             d_sum: 0.0,
@@ -212,6 +337,7 @@ impl OasisPSession {
         }
 
         // broadcast Init — every worker replies with its first argmax
+        self.z_sel = seed_points.clone();
         let init = ToWorker::Init {
             seed_indices: seed_indices.clone(),
             seed_points,
@@ -379,6 +505,14 @@ impl SamplerSession for OasisPSession {
         Some(resid / self.d_sum)
     }
 
+    /// The leader's Z_Λ mirror (see the field docs on `z_sel`): lets
+    /// callers that hold no dataset — shard-read deployments — answer
+    /// extension queries and save artifacts, which only ever touch the
+    /// selected points.
+    fn selected_points(&self, from: usize) -> Option<Vec<Vec<f64>>> {
+        Some(self.z_sel[from.min(self.z_sel.len())..].to_vec())
+    }
+
     /// One distributed selection round: gather the shard argmaxes, reduce,
     /// fetch the winning point from its owner, broadcast it (paper: one
     /// gathered scalar + one broadcast vector per iteration).
@@ -464,6 +598,7 @@ impl SamplerSession for OasisPSession {
         };
         // broadcast the selected point — the paper's one-vector-per-step
         // communication pattern; every worker replies with its next argmax
+        self.z_sel.push(point.clone());
         let msg = ToWorker::Selected {
             global_idx: gidx,
             point,

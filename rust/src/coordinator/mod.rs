@@ -20,5 +20,5 @@ pub mod metrics;
 pub mod worker;
 
 pub use config::{FailureSpec, OasisPConfig};
-pub use leader::{run_oasis_p, OasisPReport, OasisPSession};
+pub use leader::{run_oasis_p, OasisPReport, OasisPSession, ShardPlan};
 pub use metrics::Metrics;

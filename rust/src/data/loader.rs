@@ -73,7 +73,7 @@ impl LoadLimits {
         LoadLimits { max_n: usize::MAX, max_dim: usize::MAX, max_elems: u128::MAX }
     }
 
-    fn check_dim(&self, dim: usize) -> Result<()> {
+    pub(crate) fn check_dim(&self, dim: usize) -> Result<()> {
         if dim == 0 {
             bail!("dataset rows must have dimension ≥ 1");
         }
@@ -83,7 +83,7 @@ impl LoadLimits {
         Ok(())
     }
 
-    fn check_n(&self, n: usize, dim: usize) -> Result<()> {
+    pub(crate) fn check_n(&self, n: usize, dim: usize) -> Result<()> {
         if n > self.max_n {
             bail!("dataset has more than {} rows", self.max_n);
         }
@@ -97,10 +97,10 @@ impl LoadLimits {
     }
 }
 
-/// Load a dataset from `path`, sniffing the format: files opening with
-/// the [`MATRIX_MAGIC`] line are binary, anything else parses as CSV.
-pub fn load_dataset(path: &Path, limits: &LoadLimits) -> Result<Dataset> {
-    let mut f = open(path)?;
+/// Does `f` open with the binary [`MATRIX_MAGIC`] line? Rewinds to the
+/// start either way, so format sniffing stays identical across
+/// [`load_dataset`], [`load_shard`], and [`peek_matrix_dims`].
+fn sniff_binary(f: &mut std::fs::File, path: &Path) -> Result<bool> {
     let mut probe = vec![0u8; MATRIX_MAGIC.len()];
     let is_binary = match f.read_exact(&mut probe) {
         Ok(()) => probe == MATRIX_MAGIC,
@@ -108,7 +108,14 @@ pub fn load_dataset(path: &Path, limits: &LoadLimits) -> Result<Dataset> {
     };
     f.seek(SeekFrom::Start(0))
         .map_err(|e| anyhow!("seeking {}: {e}", path.display()))?;
-    let res = if is_binary {
+    Ok(is_binary)
+}
+
+/// Load a dataset from `path`, sniffing the format: files opening with
+/// the [`MATRIX_MAGIC`] line are binary, anything else parses as CSV.
+pub fn load_dataset(path: &Path, limits: &LoadLimits) -> Result<Dataset> {
+    let mut f = open(path)?;
+    let res = if sniff_binary(&mut f, path)? {
         load_matrix_file(&mut f, limits)
     } else {
         load_csv_reader(BufReader::new(f), limits)
@@ -131,14 +138,7 @@ pub fn load_shard(
         bail!("worker {worker} out of range for {p} shards");
     }
     let mut f = open(path)?;
-    let mut probe = vec![0u8; MATRIX_MAGIC.len()];
-    let is_binary = match f.read_exact(&mut probe) {
-        Ok(()) => probe == MATRIX_MAGIC,
-        Err(_) => false,
-    };
-    f.seek(SeekFrom::Start(0))
-        .map_err(|e| anyhow!("seeking {}: {e}", path.display()))?;
-    let res = if is_binary {
+    let res = if sniff_binary(&mut f, path)? {
         load_matrix_shard(&mut f, worker, p, limits)
     } else {
         let ds = load_csv_reader(BufReader::new(f), limits)?;
@@ -152,6 +152,25 @@ pub fn load_shard(
     res.map_err(|e| {
         e.wrap(format!("loading shard {worker}/{p} of {}", path.display()))
     })
+}
+
+/// Read only a binary matrix file's header, returning `(n, dim)` without
+/// touching the payload — how a shard-read oASIS-P leader learns the
+/// dataset size while its workers read their own byte ranges. Errors
+/// (with a pointer at the fix) for CSV files, which have no header to
+/// peek.
+pub fn peek_matrix_dims(path: &Path) -> Result<(usize, usize)> {
+    let mut f = open(path)?;
+    if !sniff_binary(&mut f, path)? {
+        bail!(
+            "{} is not an oasis-matrix binary file — per-worker shard reads \
+             need the binary format (write one with data::loader::save_matrix)",
+            path.display()
+        );
+    }
+    let (n, dim, _payload, _checksum, _offset) = read_matrix_header(&mut f)
+        .map_err(|e| e.wrap(format!("reading header of {}", path.display())))?;
+    Ok((n, dim))
 }
 
 /// Write `ds` to `path` in the binary matrix format.
@@ -170,8 +189,8 @@ pub fn save_matrix(path: &Path, ds: &Dataset) -> Result<usize> {
     out.extend_from_slice(header.to_string().as_bytes());
     out.push(b'\n');
     out.extend_from_slice(&payload);
-    std::fs::write(path, &out)
-        .map_err(|e| anyhow!("writing matrix {}: {e}", path.display()))?;
+    crate::util::fsio::write_atomic(path, &out)
+        .map_err(|e| e.wrap(format!("writing matrix {}", path.display())))?;
     Ok(out.len())
 }
 
@@ -188,8 +207,8 @@ pub fn save_csv(path: &Path, ds: &Dataset) -> Result<()> {
         }
         out.push('\n');
     }
-    std::fs::write(path, out)
-        .map_err(|e| anyhow!("writing csv {}: {e}", path.display()))
+    crate::util::fsio::write_atomic(path, out.as_bytes())
+        .map_err(|e| e.wrap(format!("writing csv {}", path.display())))
 }
 
 fn open(path: &Path) -> Result<std::fs::File> {

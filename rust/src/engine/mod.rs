@@ -1,0 +1,80 @@
+//! The unified run pipeline: one spec-driven path from "where is the
+//! data and which sampler" to a live [`SamplerSession`], shared by every
+//! front end.
+//!
+//! Before this layer existed the CLI (`main.rs`), the HTTP server
+//! (`server::registry`) and the oASIS-P coordinator each hand-rolled the
+//! dataset → kernel → oracle → session → stopping wiring, and features
+//! like artifact warm-start or per-worker shard reads had no single seam
+//! to plug into. Now the pipeline is *data*:
+//!
+//! * [`RunSpec`] — dataset source (generator | inline points | file),
+//!   kernel + params, method + sampler parameters, stopping criteria,
+//!   optional `warm_start` artifact, optional `shard_reads`.
+//! * [`SessionBuilder`] — resolves a spec once (materializes or
+//!   header-peeks the dataset, resolves σ, clamps budgets to n,
+//!   validates the warm-start artifact) into a [`ResolvedRun`].
+//! * [`ResolvedRun`] — opens sessions: [`open_session`]
+//!   (stepwise, all hosted methods), [`one_shot`]
+//!   (`random`/`leverage`/`kmeans`), [`open_oasis_p`]
+//!   (concrete distributed session with its run report), and
+//!   [`open_accel_session`] (the PJRT path).
+//!
+//! [`open_session`]: ResolvedRun::open_session
+//! [`one_shot`]: ResolvedRun::one_shot
+//! [`open_oasis_p`]: ResolvedRun::open_oasis_p
+//! [`open_accel_session`]: ResolvedRun::open_accel_session
+//!
+//! Two capabilities live here because every front end gets them for free
+//! through the spec:
+//!
+//! * **Artifact warm-start** (`RunSpec::warm_start`) — a stored
+//!   artifact's Λ seeds a new session that *resumes* selection instead
+//!   of starting cold (CLI `approximate --resume-from`, server create
+//!   option `"warm_start"`). The replay is bit-exact: given the same
+//!   dataset/kernel/`init_cols`, the warm session's state equals the
+//!   state of the session that saved the artifact, so continued
+//!   selection matches an uninterrupted run bit for bit.
+//! * **Sharded worker reads** (`RunSpec::shard_reads`) — oASIS-P workers
+//!   each read only their own byte range of a binary dataset file
+//!   ([`data::loader::load_shard`](crate::data::loader::load_shard));
+//!   the leader never materializes the dataset (the paper's Algorithm 2
+//!   distributed-data setting).
+//!
+//! ```no_run
+//! use oasis::engine::{
+//!     stopping_rule, DatasetSpec, KernelSpec, Method, MethodSpec, RunSpec,
+//!     SessionBuilder,
+//! };
+//! use oasis::sampling::{run_to_completion, SamplerSession};
+//!
+//! let spec = RunSpec {
+//!     dataset: DatasetSpec::Generator {
+//!         name: "two-moons".into(), n: 2_000, seed: 42, noise: 0.05, dim: 0,
+//!     },
+//!     kernel: KernelSpec::Gaussian { sigma: None, sigma_fraction: 0.05 },
+//!     method: MethodSpec {
+//!         method: Method::Oasis, max_cols: 450, init_cols: 10,
+//!         tol: 1e-12, seed: 7, batch: 10, workers: 4,
+//!     },
+//!     stopping: stopping_rule(450, Some(1e-3), None),
+//!     shard_reads: false,
+//!     warm_start: None,
+//! };
+//! let run = SessionBuilder::new().resolve(spec).unwrap();
+//! let slot = run.oracle_slot();
+//! let mut session = run.open_session(&slot).unwrap();
+//! let reason = run_to_completion(session.as_mut(), &run.stopping).unwrap();
+//! println!("stopped after {} columns ({reason:?})", session.k());
+//! ```
+//!
+//! [`SamplerSession`]: crate::sampling::SamplerSession
+
+pub mod builder;
+pub mod spec;
+
+pub use builder::{OracleSlot, ResolvedRun, RunData, SessionBuilder, WarmStart};
+pub use spec::{
+    stopping_rule, DatasetSpec, KernelSpec, Method, MethodSpec, RunSpec,
+    WarmStartSpec,
+};

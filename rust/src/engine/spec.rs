@@ -1,0 +1,343 @@
+//! The run pipeline *as data*: where the points come from, which kernel
+//! evaluates them, which sampler selects columns, and when to stop — one
+//! [`RunSpec`] that the CLI, the HTTP server, and the oASIS-P coordinator
+//! all resolve through [`SessionBuilder`](super::SessionBuilder) instead
+//! of hand-wiring dataset → kernel → oracle → session themselves.
+//!
+//! The wire format (`server::protocol`) parses JSON *into* these types;
+//! the CLI builds them from flags; tests construct them directly. None
+//! of the variants hold live resources — resolution (file loads,
+//! generator runs, kernel σ estimation, artifact loads) happens in
+//! [`SessionBuilder::resolve`](super::SessionBuilder::resolve).
+
+use crate::data::{generators, loader, Dataset, LoadLimits};
+use crate::kernels::{Gaussian, Kernel, Laplacian, Linear, Polynomial};
+use crate::sampling::{StoppingCriterion, StoppingRule};
+use crate::Result;
+use crate::{anyhow, bail};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Where the run's data comes from.
+#[derive(Clone, Debug)]
+pub enum DatasetSpec {
+    /// One of the crate's deterministic generators. `dim` is 0 for the
+    /// generator's default dimensionality; `noise` applies to two-moons.
+    Generator { name: String, n: usize, seed: u64, noise: f64, dim: usize },
+    /// Points supplied inline (the server's request-body dataset).
+    Points(Vec<Vec<f64>>),
+    /// A CSV or binary `oasis-matrix` file on disk. `label` is the
+    /// caller's spelling of the path (what provenance records — the
+    /// serving layer must not leak its `--fs-root` resolution into
+    /// artifacts or listings); `path` is where the bytes actually live.
+    File { label: String, path: PathBuf },
+}
+
+impl DatasetSpec {
+    /// Materialize the dataset, enforcing `limits` *while* it builds
+    /// (generators are size-checked before allocating; file loads are
+    /// capped during the parse). Consumes the spec so inline point rows
+    /// move instead of being copied.
+    pub fn build(self, limits: &LoadLimits) -> Result<Dataset> {
+        Ok(match self {
+            DatasetSpec::Points(rows) => {
+                if rows.is_empty() || rows[0].is_empty() {
+                    bail!("inline points must be a non-empty list of non-empty rows");
+                }
+                let (n, dim) = (rows.len(), rows[0].len());
+                if let Some(i) = rows.iter().position(|r| r.len() != dim) {
+                    bail!(
+                        "inline point {i} has dimension {} but point 0 has {dim}",
+                        rows[i].len()
+                    );
+                }
+                limits.check_dim(dim)?;
+                limits.check_n(n, dim)?;
+                Dataset::from_rows(rows)
+            }
+            DatasetSpec::Generator { name, n, seed, noise, dim } => {
+                let d = generators::dim_by_name(&name, dim)
+                    .ok_or_else(|| anyhow!("unknown dataset generator '{name}'"))?;
+                limits.check_dim(d)?;
+                limits.check_n(n, d)?;
+                generators::by_name(&name, n, dim, noise, seed)
+                    .ok_or_else(|| anyhow!("unknown dataset generator '{name}'"))?
+            }
+            DatasetSpec::File { path, .. } => loader::load_dataset(&path, limits)?,
+        })
+    }
+
+    /// Provenance line recorded with sessions and saved artifacts.
+    pub fn describe(&self) -> String {
+        match self {
+            DatasetSpec::Generator { name, n, seed, dim, .. } => {
+                if *dim == 0 {
+                    format!("generator:{name}?n={n}&seed={seed}")
+                } else {
+                    format!("generator:{name}?n={n}&seed={seed}&dim={dim}")
+                }
+            }
+            DatasetSpec::Points(rows) => format!("points:n={}", rows.len()),
+            DatasetSpec::File { label, .. } => format!("file:{label}"),
+        }
+    }
+}
+
+/// Which kernel the run evaluates.
+#[derive(Clone, Debug)]
+pub enum KernelSpec {
+    /// `sigma: None` resolves σ as `sigma_fraction` of the max pairwise
+    /// distance — which requires the materialized dataset.
+    Gaussian { sigma: Option<f64>, sigma_fraction: f64 },
+    Linear,
+    Laplacian { sigma: f64 },
+    Polynomial { degree: u32, offset: f64 },
+}
+
+impl KernelSpec {
+    /// Resolve against a materialized dataset (always succeeds).
+    pub fn build(&self, ds: &Dataset) -> Arc<dyn Kernel + Send + Sync> {
+        match self {
+            KernelSpec::Gaussian { sigma: None, sigma_fraction } => {
+                Arc::new(Gaussian::with_sigma_fraction(ds, *sigma_fraction))
+            }
+            other => other
+                .build_resolved()
+                .expect("only sigma_fraction needs the dataset"),
+        }
+    }
+
+    /// Resolve without a dataset — `None` when the spec needs one (a
+    /// Gaussian σ given as a fraction of the max pairwise distance).
+    /// Shard-read runs, whose leader never materializes the dataset, can
+    /// only use kernels that resolve this way.
+    pub fn build_resolved(&self) -> Option<Arc<dyn Kernel + Send + Sync>> {
+        Some(match self {
+            KernelSpec::Gaussian { sigma: Some(s), .. } => {
+                Arc::new(Gaussian::new(*s))
+            }
+            KernelSpec::Gaussian { sigma: None, .. } => return None,
+            KernelSpec::Linear => Arc::new(Linear),
+            KernelSpec::Laplacian { sigma } => Arc::new(Laplacian::new(*sigma)),
+            KernelSpec::Polynomial { degree, offset } => {
+                Arc::new(Polynomial { degree: *degree, offset: *offset })
+            }
+        })
+    }
+}
+
+/// Every sampling method the crate ships, under its CLI/server spelling.
+/// The first six run as stepwise
+/// [`SamplerSession`](crate::sampling::SamplerSession)s (and are
+/// hostable by the server); the last three are one-shot samplers driven
+/// through [`ResolvedRun::one_shot`](super::ResolvedRun::one_shot).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Oasis,
+    Sis,
+    Farahat,
+    Icd,
+    AdaptiveRandom,
+    OasisP,
+    /// uniform random column sampling (spelled `random`).
+    Uniform,
+    /// ridge leverage-score sampling.
+    Leverage,
+    /// K-means Nyström (centroid landmarks, not matrix columns).
+    Kmeans,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "oasis" => Method::Oasis,
+            "sis" => Method::Sis,
+            "farahat" => Method::Farahat,
+            "icd" => Method::Icd,
+            "adaptive-random" => Method::AdaptiveRandom,
+            "oasis-p" => Method::OasisP,
+            "random" => Method::Uniform,
+            "leverage" => Method::Leverage,
+            "kmeans" => Method::Kmeans,
+            other => bail!(
+                "unknown method '{other}' (expected oasis|sis|farahat|icd|\
+                 adaptive-random|oasis-p|random|leverage|kmeans)"
+            ),
+        })
+    }
+
+    /// The canonical spelling [`parse`](Method::parse) accepts.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Method::Oasis => "oasis",
+            Method::Sis => "sis",
+            Method::Farahat => "farahat",
+            Method::Icd => "icd",
+            Method::AdaptiveRandom => "adaptive-random",
+            Method::OasisP => "oasis-p",
+            Method::Uniform => "random",
+            Method::Leverage => "leverage",
+            Method::Kmeans => "kmeans",
+        }
+    }
+
+    /// Does this method run as a stepwise session (vs one-shot)?
+    pub fn has_session(self) -> bool {
+        !matches!(self, Method::Uniform | Method::Leverage | Method::Kmeans)
+    }
+}
+
+/// Sampler parameters. Fields a method does not use are ignored by it
+/// (`batch` is adaptive-random's deflation batch, `workers` is oASIS-P's
+/// node count).
+#[derive(Clone, Debug)]
+pub struct MethodSpec {
+    pub method: Method,
+    pub max_cols: usize,
+    pub init_cols: usize,
+    pub tol: f64,
+    pub seed: u64,
+    pub batch: usize,
+    pub workers: usize,
+}
+
+/// A stored artifact whose selected indices Λ seed the run (selection
+/// *resumes* from them instead of starting cold). `label` is the
+/// caller's spelling for error messages and provenance; `path` is where
+/// the artifact file lives.
+#[derive(Clone, Debug)]
+pub struct WarmStartSpec {
+    pub label: String,
+    pub path: PathBuf,
+}
+
+/// One full run, as data. Everything the CLI's `approximate`/`parallel`,
+/// the server's `POST /sessions`, and the oASIS-P coordinator need to
+/// build identical pipelines — same spec, bit-identical selection.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub dataset: DatasetSpec,
+    pub kernel: KernelSpec,
+    pub method: MethodSpec,
+    /// Any-of stopping criteria for drivers that run the session to
+    /// completion (the CLI). The server leaves this empty — its stopping
+    /// rules arrive per step request. Column budgets are clamped to n at
+    /// resolve time.
+    pub stopping: StoppingRule,
+    /// oASIS-P + binary file datasets only: each worker reads its own
+    /// byte range of the file via `loader::load_shard`; the leader never
+    /// materializes the dataset (Algorithm 2's distributed-data setting).
+    pub shard_reads: bool,
+    pub warm_start: Option<WarmStartSpec>,
+}
+
+/// The shared CLI/run-spec stopping rule: `target_err` and `deadline_ms`
+/// are listed before the column budget so their reasons win the report
+/// when several criteria hold at once.
+pub fn stopping_rule(
+    budget: usize,
+    target_err: Option<f64>,
+    deadline_ms: Option<u64>,
+) -> StoppingRule {
+    let mut rule = StoppingRule::new();
+    if let Some(t) = target_err {
+        rule = rule.with(StoppingCriterion::ErrorBelow(t));
+    }
+    if let Some(ms) = deadline_ms {
+        rule = rule.with(StoppingCriterion::Deadline(Duration::from_millis(ms)));
+    }
+    rule.with(StoppingCriterion::ColumnBudget(budget))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_spellings_round_trip() {
+        for m in [
+            Method::Oasis,
+            Method::Sis,
+            Method::Farahat,
+            Method::Icd,
+            Method::AdaptiveRandom,
+            Method::OasisP,
+            Method::Uniform,
+            Method::Leverage,
+            Method::Kmeans,
+        ] {
+            assert_eq!(Method::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(Method::parse("magic").is_err());
+    }
+
+    #[test]
+    fn session_methods_classified() {
+        assert!(Method::Oasis.has_session());
+        assert!(Method::OasisP.has_session());
+        assert!(!Method::Uniform.has_session());
+        assert!(!Method::Kmeans.has_session());
+    }
+
+    #[test]
+    fn generator_spec_builds_and_describes() {
+        let spec = DatasetSpec::Generator {
+            name: "two-moons".into(),
+            n: 40,
+            seed: 3,
+            noise: 0.05,
+            dim: 0,
+        };
+        assert_eq!(spec.describe(), "generator:two-moons?n=40&seed=3");
+        let ds = spec.build(&LoadLimits::unlimited()).unwrap();
+        assert_eq!((ds.n(), ds.dim()), (40, 2));
+        let bad = DatasetSpec::Generator {
+            name: "nope".into(),
+            n: 10,
+            seed: 0,
+            noise: 0.0,
+            dim: 0,
+        };
+        assert!(bad.build(&LoadLimits::unlimited()).is_err());
+    }
+
+    #[test]
+    fn generator_caps_checked_before_allocation() {
+        let spec = DatasetSpec::Generator {
+            name: "mnist".into(),
+            n: 1000,
+            seed: 1,
+            noise: 0.0,
+            dim: 0,
+        };
+        let tight =
+            LoadLimits { max_n: 1000, max_dim: 1024, max_elems: 100_000 };
+        // 1000 × 784 elems exceeds the cap; dim 784 is under max_dim
+        assert!(spec.build(&tight).is_err());
+    }
+
+    #[test]
+    fn kernel_resolution_with_and_without_dataset() {
+        let frac = KernelSpec::Gaussian { sigma: None, sigma_fraction: 0.05 };
+        assert!(frac.build_resolved().is_none());
+        let fixed = KernelSpec::Gaussian { sigma: Some(0.7), sigma_fraction: 0.05 };
+        assert_eq!(fixed.build_resolved().unwrap().name(), "gaussian");
+        assert_eq!(KernelSpec::Linear.build_resolved().unwrap().name(), "linear");
+    }
+
+    #[test]
+    fn stopping_rule_orders_criteria() {
+        let rule = stopping_rule(40, Some(0.1), Some(500));
+        assert_eq!(
+            rule.criteria(),
+            &[
+                StoppingCriterion::ErrorBelow(0.1),
+                StoppingCriterion::Deadline(Duration::from_millis(500)),
+                StoppingCriterion::ColumnBudget(40),
+            ]
+        );
+        let bare = stopping_rule(10, None, None);
+        assert_eq!(bare.criteria(), &[StoppingCriterion::ColumnBudget(10)]);
+    }
+}

@@ -8,7 +8,10 @@
 //!   selector, the distributed oASIS-P leader/worker runtime
 //!   ([`coordinator`]), every baseline sampler the paper compares against
 //!   ([`sampling`]), Nyström assembly and error estimation ([`nystrom`]),
-//!   dataset generators ([`data`]) and dense linear algebra ([`linalg`]).
+//!   dataset generators ([`data`]), dense linear algebra ([`linalg`]),
+//!   and the spec-driven run pipeline ([`engine`]) that the CLI, the
+//!   HTTP server ([`server`]) and the coordinator all resolve their runs
+//!   through.
 //! * **L2/L1 (python/, build time only)** — the per-iteration compute graph
 //!   (Δ-scoring, Gaussian kernel columns, Eq. 5/6 rank-1 updates) written in
 //!   JAX calling Pallas kernels, AOT-lowered to HLO text artifacts.
@@ -102,10 +105,25 @@
 //! ```
 //!
 //! `examples/persist_and_query.rs` drives the same round trip in Rust.
+//!
+//! ## Quickstart: spec-driven runs
+//!
+//! Every front end resolves its runs through the same [`engine`] layer:
+//! a typed [`RunSpec`](engine::RunSpec) (dataset source, kernel, method,
+//! stopping criteria, optional warm-start artifact, optional sharded
+//! worker reads) resolved by a
+//! [`SessionBuilder`](engine::SessionBuilder) into oracle + session —
+//! so the CLI, the server, and the oASIS-P coordinator select
+//! bit-identical column sequences from the same spec. Saved artifacts
+//! can *warm-start* new sessions (`approximate --resume-from`, server
+//! create option `"warm_start"`), and oASIS-P workers can each read only
+//! their own shard byte range of a binary dataset file
+//! (`parallel --shard-reads`, server create option `"shard_reads"`).
 
 pub mod bench_support;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod error;
 pub mod kernels;
 pub mod linalg;

@@ -17,25 +17,21 @@
 //!   oasis serve --port 7437 --fs-root .
 //!   oasis info
 
-use oasis::coordinator::{run_oasis_p, OasisPConfig};
-use oasis::data::{generators, loader, Dataset, LoadLimits};
-use oasis::kernels::{Gaussian, Kernel, Linear};
+use oasis::data::{Dataset, LoadLimits};
+use oasis::engine::{
+    self, DatasetSpec, KernelSpec, Method, MethodSpec, ResolvedRun, RunSpec,
+    SessionBuilder, WarmStartSpec,
+};
 use oasis::nystrom::{
     relative_frobenius_error, sampled_relative_error, NystromApprox,
     Provenance, StoredArtifact,
 };
 use oasis::runtime::{Accel, Manifest};
-use oasis::sampling::{
-    farahat::Farahat, kmeans::KMeansNystrom, leverage::LeverageScores,
-    oasis::Oasis, run_to_completion, uniform::Uniform, ColumnSampler,
-    ImplicitOracle, SamplerSession, StopReason, StoppingCriterion, StoppingRule,
-};
+use oasis::sampling::{run_to_completion, SamplerSession, StopReason};
 use oasis::util::args::Args;
 use oasis::util::json::Json;
 use oasis::util::timing::fmt_secs;
-use std::path::Path;
-use std::sync::Arc;
-use std::time::Duration;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = Args::from_env();
@@ -70,11 +66,17 @@ fn print_help() {
                        kernel — see oasis::nystrom::store)\n\
            --n         dataset size (default 2000)\n\
            --cols      columns to sample ℓ (default 450)\n\
-           --method    oasis|random|leverage|farahat|kmeans (default oasis)\n\
+           --method    oasis|sis|farahat|icd|adaptive-random|oasis-p|\n\
+                       random|leverage|kmeans (default oasis)\n\
            --kernel    gaussian|linear (default gaussian)\n\
+           --sigma     explicit Gaussian σ (overrides --sigma-frac)\n\
            --sigma-frac  σ as fraction of max pairwise distance (default 0.05)\n\
            --error     full|sampled (default full for n ≤ 8000)\n\
            --seed      RNG seed (default 7)\n\
+           --resume-from  warm-start selection from a stored artifact's\n\
+                       Λ (oasis method; the artifact's dataset/kernel\n\
+                       must match this run's — checked; bit-exact resume\n\
+                       additionally needs the original run's init_cols)\n\
            --accel     use the PJRT artifact path for oASIS scoring\n\
            --target-err  stop once the estimated relative error reaches\n\
                          this (oasis/farahat; may stop before --cols)\n\
@@ -91,10 +93,14 @@ fn print_help() {
            --json      structured one-line JSON output\n\
          \n\
          parallel options:\n\
-           --dataset/--n/--cols/--sigma-frac/--seed as above\n\
+           --dataset/--n/--cols/--sigma/--sigma-frac/--seed as above\n\
            --data      dataset from a file, as in approximate\n\
            --workers   node count p (default 8)\n\
            --tol       stopping tolerance (default 1e-12)\n\
+           --shard-reads  each worker reads only its own byte range of\n\
+                       the binary --data file (the leader never loads\n\
+                       the dataset; needs --sigma or a data-free kernel;\n\
+                       reports the distributed error estimate)\n\
          \n\
          seed options (SEED decomposition, §II-E):\n\
            --dataset/--n/--seed as above\n\
@@ -113,32 +119,46 @@ fn print_help() {
     );
 }
 
-fn make_dataset(args: &Args) -> Dataset {
+/// The engine dataset spec the CLI flags describe: `--data FILE`, else a
+/// generator.
+fn dataset_spec(args: &Args) -> DatasetSpec {
     if let Some(path) = args.get("data") {
-        match loader::load_dataset(Path::new(path), &LoadLimits::unlimited()) {
-            Ok(ds) => return ds,
-            Err(e) => {
-                eprintln!("could not load --data {path}: {e}");
-                std::process::exit(2);
-            }
-        }
-    }
-    let name = args.get_or("dataset", "two-moons");
-    let n = args.usize_or("n", 2000);
-    // XOR so dataset and sampler RNG streams differ for the same --seed
-    // (the server passes seeds raw; see generators::by_name)
-    let seed = args.u64_or("seed", 7) ^ 0xDA7A;
-    match generators::by_name(&name, n, 0, 0.05, seed) {
-        Some(ds) => ds,
-        None => {
-            eprintln!("unknown dataset '{name}'");
-            std::process::exit(2);
+        DatasetSpec::File { label: path.to_string(), path: PathBuf::from(path) }
+    } else {
+        DatasetSpec::Generator {
+            name: args.get_or("dataset", "two-moons"),
+            n: args.usize_or("n", 2000),
+            // XOR so dataset and sampler RNG streams differ for the same
+            // --seed (the server passes seeds raw; see generators::by_name)
+            seed: args.u64_or("seed", 7) ^ 0xDA7A,
+            noise: 0.05,
+            dim: 0,
         }
     }
 }
 
+/// The engine kernel spec: `--kernel linear`, or a Gaussian with
+/// `--sigma` (explicit, required by `--shard-reads`) / `--sigma-frac`.
+fn kernel_spec(args: &Args) -> Result<KernelSpec, String> {
+    if args.get_or("kernel", "gaussian") == "linear" {
+        return Ok(KernelSpec::Linear);
+    }
+    let sigma = match args.get("sigma") {
+        None => None,
+        Some(s) => Some(
+            s.parse::<f64>()
+                .ok()
+                .filter(|x| x.is_finite() && *x > 0.0)
+                .ok_or_else(|| format!("--sigma expects a number > 0, got '{s}'"))?,
+        ),
+    };
+    Ok(KernelSpec::Gaussian { sigma, sigma_fraction: args.f64_or("sigma-frac", 0.05) })
+}
+
 /// Label for report lines and artifact provenance: the file path when
-/// `--data` is given, else the generator spelling.
+/// `--data` is given, else the generator spelling. (The engine's own
+/// `source` is the fully qualified description; the CLI keeps its
+/// historical short spelling.)
 fn dataset_label(args: &Args) -> String {
     match args.get("data") {
         Some(p) => format!("file:{p}"),
@@ -146,24 +166,58 @@ fn dataset_label(args: &Args) -> String {
     }
 }
 
-/// Build the stopping rule from the CLI flags: budget always applies;
-/// `--target-err` and `--deadline-ms` are listed first so their reasons
-/// win the report when several criteria hold at once.
-fn stopping_rule(args: &Args, cols: usize) -> StoppingRule {
-    let mut rule = StoppingRule::new();
-    if let Some(t) = args.get("target-err") {
-        let target: f64 = t.parse().unwrap_or_else(|_| {
-            panic!("--target-err expects a number, got '{t}'")
-        });
-        rule = rule.with(StoppingCriterion::ErrorBelow(target));
+/// The full `approximate`/`parallel` run spec from the CLI flags — the
+/// same [`RunSpec`] the server parses from a create payload, so both
+/// front ends resolve through the identical engine pipeline.
+fn run_spec(args: &Args, method: Method, default_cols: usize) -> Result<RunSpec, String> {
+    let cols = args.usize_or("cols", default_cols);
+    let target_err = match args.get("target-err") {
+        None => None,
+        Some(t) => Some(
+            t.parse::<f64>()
+                .map_err(|_| format!("--target-err expects a number, got '{t}'"))?,
+        ),
+    };
+    let deadline_ms = match args.get("deadline-ms") {
+        None => None,
+        Some(m) => Some(
+            m.parse::<u64>()
+                .map_err(|_| format!("--deadline-ms expects an integer, got '{m}'"))?,
+        ),
+    };
+    Ok(RunSpec {
+        dataset: dataset_spec(args),
+        kernel: kernel_spec(args)?,
+        method: MethodSpec {
+            method,
+            max_cols: cols,
+            init_cols: 10.min(cols).max(1),
+            tol: args.f64_or("tol", 1e-12),
+            seed: args.u64_or("seed", 7),
+            batch: 10,
+            workers: args.usize_or("workers", 8),
+        },
+        // budget always applies; target/deadline listed first so their
+        // reasons win the report when several criteria hold at once
+        // (budgets past n are clamped at resolve time)
+        stopping: engine::stopping_rule(cols, target_err, deadline_ms),
+        shard_reads: args.flag("shard-reads"),
+        warm_start: args.get("resume-from").map(|p| WarmStartSpec {
+            label: p.to_string(),
+            path: PathBuf::from(p),
+        }),
+    })
+}
+
+/// Resolve a spec or exit with the CLI's usage-error code.
+fn resolve_or_exit(cmd: &str, spec: RunSpec) -> ResolvedRun {
+    match SessionBuilder::new().resolve(spec) {
+        Ok(run) => run,
+        Err(e) => {
+            eprintln!("{cmd}: {e}");
+            std::process::exit(2);
+        }
     }
-    if let Some(ms) = args.get("deadline-ms") {
-        let ms: u64 = ms.parse().unwrap_or_else(|_| {
-            panic!("--deadline-ms expects an integer, got '{ms}'")
-        });
-        rule = rule.with(StoppingCriterion::Deadline(Duration::from_millis(ms)));
-    }
-    rule.with(StoppingCriterion::ColumnBudget(cols))
 }
 
 
@@ -209,39 +263,42 @@ fn report_approximate(
 }
 
 fn cmd_approximate(args: &Args) -> i32 {
-    let ds = make_dataset(args);
-    let cols = args.usize_or("cols", 450).min(ds.n());
-    let seed = args.u64_or("seed", 7);
-    let kernel_name = args.get_or("kernel", "gaussian");
-    let sigma_frac = args.f64_or("sigma-frac", 0.05);
-    let gaussian;
-    let linear;
-    let kernel: &dyn Kernel = if kernel_name == "linear" {
-        linear = Linear;
-        &linear
-    } else {
-        gaussian = Gaussian::with_sigma_fraction(&ds, sigma_frac);
-        &gaussian
+    let method = match Method::parse(&args.get_or("method", "oasis")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
     };
-    let oracle = ImplicitOracle::new(&ds, kernel);
-    let method = args.get_or("method", "oasis");
+    let spec = match run_spec(args, method, 450) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = resolve_or_exit("approximate", spec);
+    // `approximate` always materializes the dataset (shard reads are the
+    // parallel coordinator's mode), so the oracle always exists
+    let ds: &Dataset = match run.dataset() {
+        Ok(ds) => ds,
+        Err(e) => {
+            eprintln!("approximate: {e} (use `oasis parallel` for --shard-reads)");
+            return 2;
+        }
+    };
+    let slot = run.oracle_slot();
+    let seed = run.method.seed;
     let mut stop: Option<StopReason> = None;
 
-    let approx = if args.flag("accel") && method == "oasis" {
-        let rule = stopping_rule(args, cols);
+    let approx = if args.flag("accel") && method == Method::Oasis {
         let accel_run = Accel::try_default()
             .ok_or_else(|| {
                 oasis::anyhow!("no artifacts found (run `make artifacts`)")
             })
             .and_then(|mut accel| {
-                let sampler = oasis::runtime::accel::PjrtOasis::new(
-                    cols,
-                    10.min(cols),
-                    1e-12,
-                    seed,
-                );
-                let mut s = sampler.session(&mut accel, &oracle)?;
-                let reason = run_to_completion(&mut s, &rule)?;
+                let mut s = run.open_accel_session(&mut accel, &slot)?;
+                let reason = run_to_completion(s.as_mut(), &run.stopping)?;
                 Ok((s.snapshot()?, reason))
             });
         match accel_run {
@@ -251,30 +308,28 @@ fn cmd_approximate(args: &Args) -> i32 {
             }
             Err(e) => {
                 eprintln!("accel path failed ({e}); falling back to native");
-                let mut s = Oasis::new(cols, 10.min(cols), 1e-12, seed)
-                    .session(&oracle)
-                    .expect("native oasis");
-                stop = Some(
-                    run_to_completion(&mut s, &rule).expect("native oasis"),
-                );
-                s.snapshot().expect("native oasis")
+                let native = (|| -> oasis::Result<NystromApprox> {
+                    let mut s = run.open_session(&slot)?;
+                    stop = Some(run_to_completion(s.as_mut(), &run.stopping)?);
+                    s.snapshot()
+                })();
+                match native {
+                    Ok(a) => a,
+                    Err(e) => {
+                        eprintln!("sampling failed: {e}");
+                        return 1;
+                    }
+                }
             }
         }
-    } else if method == "oasis" || method == "farahat" {
-        // sequential samplers run as sessions so --target-err and
-        // --deadline-ms can stop them before the column budget
-        let rule = stopping_rule(args, cols);
+    } else if method.has_session() {
+        // stepwise methods run as sessions so --target-err and
+        // --deadline-ms can stop them before the column budget — and
+        // --resume-from warm-starts them from a stored artifact's Λ
         let result = (|| -> oasis::Result<NystromApprox> {
-            if method == "oasis" {
-                let mut s =
-                    Oasis::new(cols, 10.min(cols), 1e-12, seed).session(&oracle)?;
-                stop = Some(run_to_completion(&mut s, &rule)?);
-                s.snapshot()
-            } else {
-                let mut s = Farahat::new(cols).session(&oracle)?;
-                stop = Some(run_to_completion(&mut s, &rule)?);
-                s.snapshot()
-            }
+            let mut s = run.open_session(&slot)?;
+            stop = Some(run_to_completion(s.as_mut(), &run.stopping)?);
+            s.snapshot()
         })();
         match result {
             Ok(a) => a,
@@ -284,16 +339,8 @@ fn cmd_approximate(args: &Args) -> i32 {
             }
         }
     } else {
-        let sampler: Box<dyn ColumnSampler> = match method.as_str() {
-            "random" => Box::new(Uniform::new(cols, seed)),
-            "leverage" => Box::new(LeverageScores::new(cols, cols, seed)),
-            "kmeans" => Box::new(KMeansNystrom::new(&ds, kernel, cols, seed)),
-            other => {
-                eprintln!("unknown method '{other}'");
-                return 2;
-            }
-        };
-        match sampler.sample(&oracle) {
+        // random | leverage | kmeans
+        match run.one_shot(&slot) {
             Ok(a) => a,
             Err(e) => {
                 eprintln!("sampling failed: {e}");
@@ -302,13 +349,14 @@ fn cmd_approximate(args: &Args) -> i32 {
         }
     };
 
+    let oracle = slot.get().expect("full dataset implies an oracle");
     let mode = args.get_or("error", if ds.n() <= 8000 { "full" } else { "sampled" });
     let err = if mode == "full" {
-        relative_frobenius_error(&oracle, &approx)
+        relative_frobenius_error(oracle, &approx)
     } else {
-        sampled_relative_error(&oracle, &approx, 100_000, seed ^ 0xE44)
+        sampled_relative_error(oracle, &approx, 100_000, seed ^ 0xE44)
     };
-    report_approximate(args, &ds, &method, &approx, err, stop);
+    report_approximate(args, ds, method.as_str(), &approx, err, stop);
     if let Some(out) = args.get("save") {
         // selected points + resolved kernel ride along, so `oasis query
         // --load` can answer extensions without this dataset. Runs after
@@ -316,9 +364,12 @@ fn cmd_approximate(args: &Args) -> i32 {
         // instead of being cloned (C alone is n×k).
         let save = StoredArtifact::from_parts(
             approx,
-            &ds,
-            kernel,
-            Provenance { source: dataset_label(args), method: method.clone() },
+            ds,
+            &*run.kernel,
+            Provenance {
+                source: dataset_label(args),
+                method: method.as_str().to_string(),
+            },
             Some(err),
         )
         .and_then(|artifact| artifact.save(Path::new(out)));
@@ -491,30 +542,59 @@ fn parse_indices(s: &str) -> Result<Vec<usize>, String> {
 }
 
 fn cmd_parallel(args: &Args) -> i32 {
-    let ds = make_dataset(args);
-    let cols = args.usize_or("cols", 500).min(ds.n());
-    let workers = args.usize_or("workers", 8);
-    let seed = args.u64_or("seed", 7);
-    let sigma_frac = args.f64_or("sigma-frac", 0.05);
-    let kernel: Arc<dyn Kernel + Send + Sync> =
-        Arc::new(Gaussian::with_sigma_fraction(&ds, sigma_frac));
-    let cfg = OasisPConfig::new(cols, 10.min(cols), workers)
-        .with_seed(seed)
-        .with_tol(args.f64_or("tol", 1e-12));
-    match run_oasis_p(&ds, kernel.clone(), &cfg) {
-        Ok((approx, report)) => {
-            let gaussian = Gaussian::with_sigma_fraction(&ds, sigma_frac);
-            let oracle = ImplicitOracle::new(&ds, &gaussian);
-            let err = sampled_relative_error(&oracle, &approx, 100_000, seed ^ 0xE44);
-            println!(
-                "oASIS-P n={} workers={} cols={} error={:.3e} wall={} [{}]",
-                ds.n(),
-                report.workers,
-                approx.k(),
-                err,
-                fmt_secs(report.wall_secs),
-                report.metrics.summary(),
-            );
+    let spec = match run_spec(args, Method::OasisP, 500) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = resolve_or_exit("parallel", spec);
+    let seed = run.method.seed;
+    let result = (|| -> oasis::Result<_> {
+        let mut session = run.open_oasis_p()?;
+        run_to_completion(&mut session, &run.stopping)?;
+        // captured before finish_run consumes the session — the
+        // shard-read report has no oracle to measure the error with
+        let estimate = session.error_estimate();
+        let (approx, report) = session.finish_run()?;
+        Ok((approx, report, estimate))
+    })();
+    match result {
+        Ok((approx, report, estimate)) => {
+            let slot = run.oracle_slot();
+            match slot.get() {
+                Some(oracle) => {
+                    let err =
+                        sampled_relative_error(oracle, &approx, 100_000, seed ^ 0xE44);
+                    println!(
+                        "oASIS-P n={} workers={} cols={} error={:.3e} wall={} [{}]",
+                        run.n(),
+                        report.workers,
+                        approx.k(),
+                        err,
+                        fmt_secs(report.wall_secs),
+                        report.metrics.summary(),
+                    );
+                }
+                None => {
+                    // --shard-reads: the leader never materialized the
+                    // dataset, so report the distributed residual-trace
+                    // estimate the workers piggybacked instead
+                    let est = estimate
+                        .map(|e| format!("{e:.3e}"))
+                        .unwrap_or_else(|| "n/a".into());
+                    println!(
+                        "oASIS-P n={} workers={} cols={} error_est={} wall={} [{}]",
+                        run.n(),
+                        report.workers,
+                        approx.k(),
+                        est,
+                        fmt_secs(report.wall_secs),
+                        report.metrics.summary(),
+                    );
+                }
+            }
             0
         }
         Err(e) => {
@@ -526,7 +606,13 @@ fn cmd_parallel(args: &Args) -> i32 {
 
 fn cmd_seed(args: &Args) -> i32 {
     use oasis::seed::{css_projection_error, Seed, SeedConfig};
-    let ds = make_dataset(args);
+    let ds = match dataset_spec(args).build(&LoadLimits::unlimited()) {
+        Ok(ds) => ds,
+        Err(e) => {
+            eprintln!("seed: {e}");
+            return 2;
+        }
+    };
     let cfg = SeedConfig {
         dict_size: args.usize_or("dict", 50).min(ds.n()),
         sparsity: args.usize_or("sparsity", 5),

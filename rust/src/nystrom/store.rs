@@ -98,6 +98,31 @@ impl StoredArtifact {
         provenance: Provenance,
         error_estimate: Option<f64>,
     ) -> Result<StoredArtifact> {
+        if approx.n() != dataset.n() {
+            bail!(
+                "approximation has n = {} but the dataset has {} points",
+                approx.n(),
+                dataset.n()
+            );
+        }
+        if let Some(&bad) = approx.indices.iter().find(|&&i| i >= dataset.n()) {
+            bail!("selected index {bad} out of range (n = {})", dataset.n());
+        }
+        let selected_points = dataset.select(&approx.indices);
+        Self::from_selected(approx, selected_points, kernel, provenance, error_estimate)
+    }
+
+    /// Package an approximation whose selected points `Z_Λ` are already
+    /// extracted — the shard-read serving path, where no full dataset
+    /// exists to extract them from. Row t of `selected_points` must be
+    /// the data point of column `approx.indices[t]`.
+    pub fn from_selected(
+        approx: NystromApprox,
+        selected_points: Dataset,
+        kernel: &dyn Kernel,
+        provenance: Provenance,
+        error_estimate: Option<f64>,
+    ) -> Result<StoredArtifact> {
         let params = kernel.params().ok_or_else(|| {
             anyhow!(
                 "kernel '{}' is not storable (no resolved parameters)",
@@ -113,17 +138,16 @@ impl StoredArtifact {
                 approx.k()
             );
         }
-        if approx.n() != dataset.n() {
+        if let Some(&bad) = approx.indices.iter().find(|&&i| i >= approx.n()) {
+            bail!("selected index {bad} out of range (n = {})", approx.n());
+        }
+        if selected_points.n() != approx.k() {
             bail!(
-                "approximation has n = {} but the dataset has {} points",
-                approx.n(),
-                dataset.n()
+                "{} selected points for k = {} columns",
+                selected_points.n(),
+                approx.k()
             );
         }
-        if let Some(&bad) = approx.indices.iter().find(|&&i| i >= dataset.n()) {
-            bail!("selected index {bad} out of range (n = {})", dataset.n());
-        }
-        let selected_points = dataset.select(&approx.indices);
         Ok(StoredArtifact {
             approx,
             kernel: params,
@@ -197,11 +221,15 @@ impl StoredArtifact {
     }
 
     /// Write the artifact to `path`, returning the byte count written.
+    /// The write is atomic (temp file in the destination directory +
+    /// rename — [`crate::util::fsio::write_atomic`]), so a crash
+    /// mid-save can never leave a truncated artifact behind, and a
+    /// reader racing a re-save sees either the old artifact or the new
+    /// one, both complete.
     pub fn save(&self, path: &Path) -> Result<usize> {
         let bytes = self.to_bytes();
-        std::fs::write(path, &bytes).map_err(|e| {
-            anyhow!("writing artifact {}: {e}", path.display())
-        })?;
+        crate::util::fsio::write_atomic(path, &bytes)
+            .map_err(|e| e.wrap(format!("writing artifact {}", path.display())))?;
         Ok(bytes.len())
     }
 
@@ -337,6 +365,91 @@ impl StoredArtifact {
     /// file is refused before [`load`](Self::load) would materialize
     /// its bytes in memory.
     pub fn peek_dims(path: &Path) -> Result<(usize, usize, usize)> {
+        let (_, n, k, dim, _) = Self::peek_header(path)?;
+        Ok((n, k, dim))
+    }
+
+    /// Everything warm-start resolution needs — Λ (range-checked like
+    /// [`from_bytes`](Self::from_bytes)), the resolved kernel, n/dim,
+    /// and the k selected points `Z_Λ` (read by byte-range seek so a
+    /// caller can verify the artifact really describes its dataset) —
+    /// without materializing the n×k factor payload a warm start never
+    /// touches (replay rebuilds state from the oracle). File size is
+    /// validated against the header exactly as
+    /// [`peek_dims`](Self::peek_dims) does, so truncation is still
+    /// caught; the cost is O(header + k·dim), not O(n·k).
+    pub fn peek_warm_start(path: &Path) -> Result<WarmStartHeader> {
+        let (h, n, k, dim, payload_offset) = Self::peek_header(path)?;
+        let idx_json = h
+            .get("indices")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact header missing indices"))?;
+        if idx_json.len() != k {
+            bail!("artifact has {} indices for k = {k}", idx_json.len());
+        }
+        let mut indices = Vec::with_capacity(k);
+        for v in idx_json {
+            match v.as_f64() {
+                Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 => {
+                    let i = x as usize;
+                    if i >= n {
+                        bail!("artifact index {i} out of range (n = {n})");
+                    }
+                    indices.push(i);
+                }
+                _ => bail!("artifact indices must be non-negative integers"),
+            }
+        }
+        let kernel = kernel_from_json(
+            h.get("kernel")
+                .ok_or_else(|| anyhow!("artifact header missing kernel"))?,
+        )?;
+        // the selected points are the last payload section; seek straight
+        // to it (its frame count included) past C and W⁻¹ — file length
+        // was already verified to match the header exactly
+        let pts_elems = checked_elems(k, dim, "selected points")?;
+        let pts_offset = payload_offset
+            + (8 + 8 * checked_elems(n, k, "C factor")? as u64)
+            + (8 + 8 * checked_elems(k, k, "W⁻¹ factor")? as u64);
+        let mut f = std::fs::File::open(path).map_err(|e| {
+            anyhow!("reading artifact {}: {e}", path.display())
+        })?;
+        use std::io::{Read, Seek, SeekFrom};
+        f.seek(SeekFrom::Start(pts_offset))
+            .map_err(|e| anyhow!("seeking selected points: {e}"))?;
+        let mut lenbuf = [0u8; 8];
+        f.read_exact(&mut lenbuf)
+            .map_err(|e| anyhow!("reading selected-points frame: {e}"))?;
+        if u64::from_le_bytes(lenbuf) != pts_elems as u64 {
+            bail!(
+                "selected-points frame holds {} values but the header \
+                 implies {pts_elems}",
+                u64::from_le_bytes(lenbuf)
+            );
+        }
+        let mut raw = vec![0u8; pts_elems * 8];
+        f.read_exact(&mut raw)
+            .map_err(|e| anyhow!("reading selected points: {e}"))?;
+        let pts: Vec<f64> = raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(WarmStartHeader {
+            n,
+            k,
+            dim,
+            indices,
+            kernel,
+            selected_points: Dataset::from_flat(dim, pts),
+        })
+    }
+
+    /// Shared header reader behind [`peek_dims`](Self::peek_dims) and
+    /// [`peek_warm_start`](Self::peek_warm_start): parse the bounded
+    /// header line and verify the file is exactly
+    /// magic + header + payload for the dimensions it declares. The last
+    /// element of the return tuple is the payload's byte offset.
+    fn peek_header(path: &Path) -> Result<(Json, usize, usize, usize, u64)> {
         use std::io::{BufRead, BufReader, Read};
         let f = std::fs::File::open(path).map_err(|e| {
             anyhow!("reading artifact {}: {e}", path.display())
@@ -370,6 +483,13 @@ impl StoredArtifact {
         let text = std::str::from_utf8(&line)
             .map_err(|_| anyhow!("artifact header is not UTF-8"))?;
         let h = Json::parse(text).map_err(|e| anyhow!("artifact header: {e}"))?;
+        let version = field_usize(&h, "version")?;
+        if version != FORMAT_VERSION {
+            bail!(
+                "unsupported artifact version {version} (this build reads \
+                 version {FORMAT_VERSION})"
+            );
+        }
         let n = field_usize(&h, "n")?;
         let k = field_usize(&h, "k")?;
         let dim = field_usize(&h, "dim")?;
@@ -387,15 +507,15 @@ impl StoredArtifact {
                  its dimensions imply {implied}"
             );
         }
-        let expected_len =
-            (MAGIC.len() + header_bytes) as u64 + payload_bytes as u64;
+        let payload_offset = (MAGIC.len() + header_bytes) as u64;
+        let expected_len = payload_offset + payload_bytes as u64;
         if file_len != expected_len {
             bail!(
                 "artifact file is {file_len} bytes but its header implies \
                  {expected_len} (truncated or trailing garbage)"
             );
         }
-        Ok((n, k, dim))
+        Ok((h, n, k, dim, payload_offset))
     }
 
     /// Out-of-sample extension weights `w = W⁻¹ b(z)` for a query point,
@@ -448,6 +568,24 @@ impl StoredArtifact {
             ("selection_secs", Json::Num(self.approx.selection_secs)),
         ])
     }
+}
+
+/// The header-plus-selected-points view
+/// [`StoredArtifact::peek_warm_start`] returns: what a warm start needs,
+/// without the n×k factor payload.
+#[derive(Clone, Debug)]
+pub struct WarmStartHeader {
+    pub n: usize,
+    pub k: usize,
+    pub dim: usize,
+    /// Λ in selection order.
+    pub indices: Vec<usize>,
+    /// The resolved kernel the artifact was computed with.
+    pub kernel: KernelParams,
+    /// `Z_Λ` (row t is the point of column `indices[t]`) — lets warm
+    /// starts verify the artifact was computed on *this* dataset, not
+    /// merely one with the same shape.
+    pub selected_points: Dataset,
 }
 
 /// `a × b` as a section element count, rejected well before it can
@@ -702,5 +840,28 @@ mod tests {
         // missing file is a clean error naming the path
         let err = StoredArtifact::load(&dir.join("absent.oasis")).unwrap_err();
         assert!(format!("{err}").contains("absent.oasis"), "{err}");
+    }
+
+    /// The header-only warm-start view agrees with a full load — without
+    /// touching the factor payload — and still rejects truncation.
+    #[test]
+    fn warm_start_header_matches_full_load() {
+        let (art, _, _) = sample_artifact();
+        let dir = std::env::temp_dir().join("oasis-store-warm-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warm.oasis");
+        art.save(&path).unwrap();
+        let h = StoredArtifact::peek_warm_start(&path).unwrap();
+        assert_eq!((h.n, h.k, h.dim), (art.n(), art.k(), art.dim()));
+        assert_eq!(h.indices, art.approx.indices);
+        assert_eq!(h.kernel, art.kernel);
+        assert_eq!(h.selected_points, art.selected_points);
+        // a truncated file is refused from the length check alone
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = dir.join("cut.oasis");
+        std::fs::write(&cut, &bytes[..bytes.len() - 7]).unwrap();
+        let err = StoredArtifact::peek_warm_start(&cut).unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -160,6 +160,96 @@ impl Oasis {
         })
     }
 
+    /// Open a session warm-started from a previously selected index set
+    /// (artifact warm start): the first `init_cols` indices seed W₀ by
+    /// direct inversion — the same arithmetic [`session`](Oasis::session)
+    /// applies to its successful seed draw — and the remaining indices
+    /// are *replayed* through the step arithmetic with the argmax
+    /// replaced by the stored selection. Because a step's arithmetic
+    /// depends only on which index is incorporated (never on how it was
+    /// chosen), the resulting state is bit-identical to the session that
+    /// produced `indices` — given the same oracle, `init_cols`, and
+    /// variant — so continued selection extends it exactly as an
+    /// uninterrupted run would.
+    ///
+    /// Replay cost is the same O(kn) per column as selection was, minus
+    /// the argmax sweeps. Errors cleanly when the indices repeat, fall
+    /// out of range, or score below the tolerance mid-replay — the
+    /// signature of an artifact that does not match this dataset/kernel.
+    pub fn session_from_indices<'a>(
+        &self,
+        oracle: &'a dyn ColumnOracle,
+        indices: &[usize],
+    ) -> Result<OasisSession<'a>> {
+        let sw = Stopwatch::start();
+        let n = oracle.n();
+        if indices.is_empty() {
+            bail!("warm start needs at least one stored index");
+        }
+        let mut seen = vec![false; n];
+        for &j in indices {
+            if j >= n {
+                bail!("stored index {j} out of range (n = {n})");
+            }
+            if seen[j] {
+                bail!("stored index {j} repeats");
+            }
+            seen[j] = true;
+        }
+        // capacity covers both the configured budget and the warm prefix
+        // (indices.len() ≤ n — all distinct and < n); the W⁻¹ stride this
+        // picks never affects the arithmetic, only reallocation count
+        let l = self.max_cols.min(n).max(indices.len());
+        let k0 = self.init_cols.min(l).min(indices.len());
+        let d = oracle.diag();
+        let tol = super::effective_tol(self.tol, &d);
+        let d_abs_sum: f64 = d.iter().map(|x| x.abs()).sum();
+        let mut state = State::new(n, l, self.threads);
+        if !state.try_seed(oracle, &indices[..k0]) {
+            bail!(
+                "the stored seed columns are singular on this dataset/kernel \
+                 — artifact mismatch?"
+            );
+        }
+        let mut selected = vec![false; n];
+        let mut trace = SelectionTrace::default();
+        for &j in &indices[..k0] {
+            selected[j] = true;
+            trace.order.push(j);
+            trace.cum_secs.push(sw.secs());
+            trace.deltas.push(f64::NAN);
+        }
+        let mut delta = vec![0.0; n];
+        match self.variant {
+            Variant::PaperR => {
+                state.build_r_from_scratch();
+                state.colsum_delta(&d, &mut delta);
+            }
+            Variant::Incremental => state.seed_delta(&d, &mut delta),
+        }
+        let mut session = OasisSession {
+            oracle,
+            variant: self.variant,
+            tol,
+            n,
+            d,
+            d_abs_sum,
+            delta,
+            selected,
+            state,
+            trace,
+            assembler: RefCell::new(assembly::IncrementalAssembler::new(n)),
+            exhausted: None,
+            busy_secs: sw.secs(),
+        };
+        for &j in &indices[k0..] {
+            session
+                .force_select(j)
+                .map_err(|e| e.wrap("warm-start replay"))?;
+        }
+        Ok(session)
+    }
+
     /// Run selection, returning the approximation and the per-step trace.
     pub fn sample_traced(
         &self,
@@ -259,7 +349,6 @@ impl SamplerSession for OasisSession<'_> {
             return Ok(StepOutcome::Exhausted(reason));
         }
         let sw = Stopwatch::start();
-        let k = self.state.k;
         if self.variant == Variant::PaperR {
             self.state.colsum_delta(&self.d, &mut self.delta);
         }
@@ -275,6 +364,33 @@ impl SamplerSession for OasisSession<'_> {
             self.busy_secs += sw.secs();
             return Ok(StepOutcome::Exhausted(StopReason::ScoreBelowTol));
         }
+        self.incorporate(best, best_abs, &sw);
+        Ok(StepOutcome::Selected { index: best, score: best_abs })
+    }
+
+    fn snapshot(&self) -> Result<NystromApprox> {
+        let k = self.state.k;
+        let mut asm = self.assembler.borrow_mut();
+        asm.sync(&self.state.c, k);
+        Ok(NystromApprox {
+            indices: self.trace.order.clone(),
+            c: asm.to_mat(),
+            winv: assembly::winv_block(&self.state.winv, self.state.cap, k),
+            selection_secs: self.busy_secs,
+        })
+    }
+}
+
+impl OasisSession<'_> {
+    /// Incorporate column `best` into the state — Eq. 5 (and, for
+    /// PaperR, Eq. 6) updates, selection bookkeeping, trace, and time
+    /// accounting. `best_abs` is `|Δ[best]|`, already verified ≥ the
+    /// tolerance by the caller. Shared by
+    /// [`step`](SamplerSession::step) (argmax selection) and
+    /// [`force_select`](OasisSession::force_select) (warm-start replay),
+    /// so both perform bit-identical arithmetic.
+    fn incorporate(&mut self, best: usize, best_abs: f64, sw: &Stopwatch) {
+        let k = self.state.k;
         let s = 1.0 / self.delta[best];
         // new column from the oracle
         let col = self.state.fetch_column(self.oracle, best);
@@ -291,19 +407,32 @@ impl SamplerSession for OasisSession<'_> {
         self.trace.cum_secs.push(self.busy_secs + sw.secs());
         self.trace.deltas.push(best_abs);
         self.busy_secs += sw.secs();
-        Ok(StepOutcome::Selected { index: best, score: best_abs })
     }
 
-    fn snapshot(&self) -> Result<NystromApprox> {
-        let k = self.state.k;
-        let mut asm = self.assembler.borrow_mut();
-        asm.sync(&self.state.c, k);
-        Ok(NystromApprox {
-            indices: self.trace.order.clone(),
-            c: asm.to_mat(),
-            winv: assembly::winv_block(&self.state.winv, self.state.cap, k),
-            selection_secs: self.busy_secs,
-        })
+    /// Warm-start replay: incorporate a *stored* selection instead of
+    /// the argmax. Mirrors [`step`](SamplerSession::step) exactly —
+    /// including the PaperR per-step rescore — with the argmax sweep
+    /// replaced by the given index, so a replayed session's state is
+    /// bit-identical to the one that recorded the index.
+    fn force_select(&mut self, best: usize) -> Result<()> {
+        let sw = Stopwatch::start();
+        if self.variant == Variant::PaperR {
+            self.state.colsum_delta(&self.d, &mut self.delta);
+        }
+        if best >= self.n || self.selected[best] {
+            bail!("stored index {best} is out of range or already selected");
+        }
+        let best_abs = self.delta[best].abs();
+        // `!(≥)` also catches a NaN score
+        if !(best_abs >= self.tol) {
+            bail!(
+                "replaying stored index {best}: |Δ| = {best_abs:.3e} is below \
+                 the selection tolerance — the artifact does not match this \
+                 dataset/kernel"
+            );
+        }
+        self.incorporate(best, best_abs, &sw);
+        Ok(())
     }
 }
 
@@ -764,6 +893,40 @@ mod tests {
         for snap in snaps {
             assert_eq!(snap.indices, reference.indices[..snap.k()]);
         }
+    }
+
+    /// Warm start (artifact resume): seeding from a stored prefix and
+    /// replaying it reproduces the recording session's state bit for
+    /// bit, so continued selection matches an uninterrupted run exactly
+    /// — for both scoring variants.
+    #[test]
+    fn warm_started_session_is_bit_identical_to_prefix_resume() {
+        let ds = two_moons(200, 0.05, 8);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        for variant in [Variant::Incremental, Variant::PaperR] {
+            let sampler = Oasis::new(40, 5, 1e-12, 3).with_variant(variant);
+            let (reference, ref_trace) = sampler.sample_traced(&oracle).unwrap();
+
+            let mut prefix = sampler.session(&oracle).unwrap();
+            run_to_completion(&mut prefix, &StoppingRule::budget(20)).unwrap();
+            let stored: Vec<usize> = prefix.indices().to_vec();
+
+            let mut warm =
+                sampler.session_from_indices(&oracle, &stored).unwrap();
+            assert_eq!(warm.k(), 20, "{variant:?}");
+            assert_eq!(warm.indices(), &stored[..], "{variant:?}");
+            run_to_completion(&mut warm, &StoppingRule::budget(40)).unwrap();
+            let warmed = warm.snapshot().unwrap();
+            assert_eq!(warmed.indices, ref_trace.order, "{variant:?}");
+            assert_eq!(warmed.c.data, reference.c.data, "{variant:?}");
+            assert_eq!(warmed.winv.data, reference.winv.data, "{variant:?}");
+        }
+        // malformed index sets error cleanly
+        let sampler = Oasis::new(10, 2, 1e-12, 3);
+        assert!(sampler.session_from_indices(&oracle, &[]).is_err());
+        assert!(sampler.session_from_indices(&oracle, &[4, 4]).is_err());
+        assert!(sampler.session_from_indices(&oracle, &[999]).is_err());
     }
 
     #[test]

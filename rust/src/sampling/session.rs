@@ -141,6 +141,19 @@ pub trait SamplerSession {
         None
     }
 
+    /// The selected data points `Z_Λ[from..]` in selection order, for
+    /// sessions whose driver holds no dataset to look them up in. The
+    /// distributed coordinator mirrors them on its leader (shard-read
+    /// runs leave the serving layer with no materialized dataset, and
+    /// queries/saves only ever touch Λ's points); sessions whose callers
+    /// own the dataset return `None` (the default) and are looked up
+    /// directly. `from` lets a caller that already mirrored a prefix
+    /// fetch only the new tail — selection is append-only.
+    fn selected_points(&self, from: usize) -> Option<Vec<Vec<f64>>> {
+        let _ = from;
+        None
+    }
+
     /// Perform one selection step. Idempotent once exhausted.
     fn step(&mut self) -> Result<StepOutcome>;
 
@@ -238,6 +251,21 @@ impl StoppingRule {
 
     pub fn criteria(&self) -> &[StoppingCriterion] {
         &self.criteria
+    }
+
+    /// Clamp every [`ColumnBudget`](StoppingCriterion::ColumnBudget)
+    /// criterion to `n` — a budget past n is just "all columns", and
+    /// without the clamp such a run would report
+    /// [`Exhausted`](StopReason::Exhausted) instead of
+    /// [`BudgetReached`](StopReason::BudgetReached). Applied by the
+    /// engine once the dataset size is known.
+    pub fn clamp_budget(mut self, n: usize) -> StoppingRule {
+        for c in &mut self.criteria {
+            if let StoppingCriterion::ColumnBudget(l) = c {
+                *l = (*l).min(n);
+            }
+        }
+        self
     }
 
     /// First criterion (in insertion order) that holds, if any.

@@ -123,7 +123,7 @@ fn create_session(state: &Arc<ServerState>, req: &Request) -> Response {
                     ("name", Json::Str(handle.name.clone())),
                     ("method", Json::Str(st.method)),
                     ("n", Json::Num(st.n as f64)),
-                    ("dim", Json::Num(handle.dataset.dim() as f64)),
+                    ("dim", Json::Num(handle.points.dim() as f64)),
                     ("k", Json::Num(st.k as f64)),
                     ("error_estimate", protocol::opt_num(st.error_estimate)),
                 ]),
@@ -250,7 +250,7 @@ fn query_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Respons
         Ok(q) => q,
         Err(e) => return error(400, e),
     };
-    let dim = h.dataset.dim();
+    let dim = h.points.dim();
     for (i, p) in q.points.iter().enumerate() {
         if p.len() != dim {
             return error(
@@ -274,12 +274,12 @@ fn query_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Respons
     }
     let mut results = Vec::with_capacity(q.points.len());
     for p in &q.points {
-        // b = k(z, x_Λ): only the selected points are evaluated
-        let b: Vec<f64> = snap
-            .indices
-            .iter()
-            .map(|&j| h.kernel.eval(p, h.dataset.point(j)))
-            .collect();
+        // b = k(z, x_Λ): only the selected points are evaluated (via the
+        // dataset, or the shard-read selected-points mirror)
+        let b = match h.points.kernel_row(&*h.kernel, p, &snap.indices) {
+            Ok(b) => b,
+            Err(e) => return error(500, e),
+        };
         let w = snap.extension_weights(&b);
         let mut fields = vec![("weights", protocol::num_arr(&w))];
         if !q.targets.is_empty() {
@@ -359,9 +359,15 @@ fn save_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Response
         Err(e) => return error(500, e),
     };
     let st = lock(&h.shared.stats).clone();
-    let artifact = match crate::nystrom::StoredArtifact::from_parts(
+    // Λ's points via PointAccess: the whole dataset for ordinary
+    // sessions, the leader-synced mirror for shard-read ones
+    let selected = match h.points.selected_dataset(&snap.indices) {
+        Ok(d) => d,
+        Err(e) => return error(500, e),
+    };
+    let artifact = match crate::nystrom::StoredArtifact::from_selected(
         (*snap).clone(),
-        &h.dataset,
+        selected,
         &*h.kernel,
         crate::nystrom::Provenance {
             source: h.source.to_string(),

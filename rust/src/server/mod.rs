@@ -51,9 +51,42 @@
 //!   "max_cols": 450, "init_cols": 10,   // sampler parameters
 //!   "tol": 1e-12, "seed": 7,
 //!   "batch": 10,                        // adaptive-random only
-//!   "workers": 4                        // oasis-p only
+//!   "workers": 4,                       // oasis-p only
+//!   "warm_start": "models/seed.oasis",  // optional (oasis method):
+//!                                       //   resume selection from a
+//!                                       //   stored artifact's Λ — the
+//!                                       //   session starts at the
+//!                                       //   artifact's k and extends
+//!                                       //   it. The run's dataset/
+//!                                       //   kernel must match the
+//!                                       //   artifact's (checked). For
+//!                                       //   a *bit-exact* resume, also
+//!                                       //   pass the init_cols the
+//!                                       //   recording run used (not
+//!                                       //   stored in the artifact; a
+//!                                       //   different split is still a
+//!                                       //   valid resume, just not
+//!                                       //   bitwise). Path resolves
+//!                                       //   under --fs-root.
+//!   "shard_reads": false                // optional (oasis-p + a binary
+//!                                       //   dataset file): each worker
+//!                                       //   reads only its own byte
+//!                                       //   range of the file; the
+//!                                       //   server holds no full
+//!                                       //   dataset (queries and saves
+//!                                       //   use the selected points
+//!                                       //   mirrored from the leader).
+//!                                       //   Needs a kernel that
+//!                                       //   resolves without data
+//!                                       //   (e.g. explicit sigma).
 //! }
 //! ```
+//!
+//! The create payload *is* an [`engine::RunSpec`](crate::engine::RunSpec)
+//! in JSON: the parser ([`protocol`]) decodes into the same spec types
+//! the CLI builds from flags, and the registry resolves them through the
+//! same [`engine::SessionBuilder`](crate::engine::SessionBuilder) — which
+//! is why a server-hosted run is bit-identical to the equivalent CLI run.
 //!
 //! → `{"name", "method", "n", "dim", "k", "error_estimate"}`. `409` if the
 //! name exists. Note `farahat` and `adaptive-random` materialize the full

@@ -1,6 +1,8 @@
-//! Wire-format types for `oasis serve`: request-payload parsing,
-//! validation, and the JSON serialization helpers shared by the
-//! handlers. The endpoint-by-endpoint protocol reference lives in the
+//! Wire-format parsing for `oasis serve`: request payloads are decoded
+//! into the [`engine`](crate::engine) layer's spec types (the same
+//! [`RunSpec`] the CLI builds from flags), validated, and handed to the
+//! registry; JSON serialization helpers shared by the handlers live here
+//! too. The endpoint-by-endpoint protocol reference is in the
 //! [`server`](crate::server) module docs.
 //!
 //! Every parser here validates before constructing — sampler
@@ -8,16 +10,18 @@
 //! connection or actor thread would drop the request without a response,
 //! so malformed input must be rejected with a clean 400 first.
 
-use crate::data::{generators, loader, Dataset, LoadLimits};
-use crate::kernels::{Gaussian, Kernel, Laplacian, Linear, Polynomial};
+use crate::data::LoadLimits;
 use crate::linalg::Mat;
 use crate::sampling::{StoppingCriterion, StoppingRule};
 use crate::util::json::Json;
 use crate::Result;
 use crate::{anyhow, bail};
 use std::path::{Component, Path, PathBuf};
-use std::sync::Arc;
 use std::time::Duration;
+
+pub use crate::engine::{
+    DatasetSpec, KernelSpec, Method, MethodSpec, RunSpec, WarmStartSpec,
+};
 
 /// Serving-sanity caps: request bodies are already bounded
 /// ([`MAX_BODY_BYTES`](super::http::MAX_BODY_BYTES)), so a tiny request
@@ -27,7 +31,8 @@ pub const MAX_DATASET_N: usize = 2_000_000;
 pub const MAX_DATASET_DIM: usize = 4_096;
 pub const MAX_WORKERS: usize = 256;
 /// Cap on generated-dataset storage n × dim (100e6 f64 ≈ 800 MB) —
-/// checked against [`generators::dim_by_name`] *before* allocating.
+/// checked against [`crate::data::generators::dim_by_name`] *before*
+/// allocating.
 pub const MAX_DATASET_ELEMS: u128 = 100_000_000;
 /// Residual-materializing methods (`farahat`, `adaptive-random`) hold a
 /// dense n×n matrix; cap their n (16_384² × 8 B ≈ 2.1 GB).
@@ -115,145 +120,15 @@ pub fn resolve_fs_path(root: &Path, raw: &str) -> Result<PathBuf> {
     Ok(joined)
 }
 
-/// Hosted sampling method. All but `OasisP` are the sequential
-/// [`SamplerSession`](crate::sampling::SamplerSession) implementations;
-/// `OasisP` hosts the distributed leader (whose worker threads live
-/// inside the session's actor thread).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    Oasis,
-    Sis,
-    Farahat,
-    Icd,
-    AdaptiveRandom,
-    OasisP,
-}
-
-impl Method {
-    pub fn parse(s: &str) -> Result<Method> {
-        Ok(match s {
-            "oasis" => Method::Oasis,
-            "sis" => Method::Sis,
-            "farahat" => Method::Farahat,
-            "icd" => Method::Icd,
-            "adaptive-random" => Method::AdaptiveRandom,
-            "oasis-p" => Method::OasisP,
-            other => bail!(
-                "unknown method '{other}' (expected oasis|sis|farahat|icd|\
-                 adaptive-random|oasis-p)"
-            ),
-        })
-    }
-}
-
-/// Where the session's data comes from.
-#[derive(Clone, Debug)]
-pub enum DatasetSpec {
-    /// One of the crate's deterministic generators. `dim` is 0 for the
-    /// generator's default dimensionality.
-    Generator { name: String, n: usize, seed: u64, noise: f64, dim: usize },
-    /// Points shipped inline in the request body.
-    Points(Vec<Vec<f64>>),
-    /// A CSV or binary matrix file on disk. `client` is the raw path as
-    /// the client sent it (what provenance records — the server's
-    /// filesystem layout must not leak into artifacts or listings);
-    /// `path` is its `--fs-root` resolution, produced by
-    /// [`resolve_fs_path`] inside [`parse_create`] so an unresolved
-    /// client path never exists in a parsed request.
-    File { client: String, path: PathBuf },
-}
-
-impl DatasetSpec {
-    /// Consumes the spec so inline point rows move into the [`Dataset`]
-    /// instead of being copied (they can be body-cap sized).
-    pub fn build(self) -> Result<Dataset> {
-        Ok(match self {
-            // inline points are bounded by the request-body cap
-            DatasetSpec::Points(rows) => Dataset::from_rows(rows),
-            DatasetSpec::Generator { name, n, seed, noise, dim } => {
-                let d = generators::dim_by_name(&name, dim)
-                    .ok_or_else(|| anyhow!("unknown dataset generator '{name}'"))?;
-                let elems = (n as u128) * (d as u128);
-                if elems > MAX_DATASET_ELEMS {
-                    bail!(
-                        "dataset n×dim = {elems} exceeds the serving cap of \
-                         {MAX_DATASET_ELEMS} elements"
-                    );
-                }
-                generators::by_name(&name, n, dim, noise, seed)
-                    .ok_or_else(|| anyhow!("unknown dataset generator '{name}'"))?
-            }
-            DatasetSpec::File { path, .. } => {
-                loader::load_dataset(&path, &serving_load_limits())?
-            }
-        })
-    }
-
-    /// Provenance line recorded with sessions and saved artifacts.
-    pub fn describe(&self) -> String {
-        match self {
-            DatasetSpec::Generator { name, n, seed, dim, .. } => {
-                if *dim == 0 {
-                    format!("generator:{name}?n={n}&seed={seed}")
-                } else {
-                    format!("generator:{name}?n={n}&seed={seed}&dim={dim}")
-                }
-            }
-            DatasetSpec::Points(rows) => format!("points:n={}", rows.len()),
-            DatasetSpec::File { client, .. } => format!("file:{client}"),
-        }
-    }
-}
-
-/// Which kernel the session evaluates.
-#[derive(Clone, Debug)]
-pub enum KernelSpec {
-    Gaussian { sigma: Option<f64>, sigma_fraction: f64 },
-    Linear,
-    Laplacian { sigma: f64 },
-    Polynomial { degree: u32, offset: f64 },
-}
-
-impl KernelSpec {
-    pub fn build(&self, ds: &Dataset) -> Arc<dyn Kernel + Send + Sync> {
-        match self {
-            KernelSpec::Gaussian { sigma: Some(s), .. } => {
-                Arc::new(Gaussian::new(*s))
-            }
-            KernelSpec::Gaussian { sigma: None, sigma_fraction } => {
-                Arc::new(Gaussian::with_sigma_fraction(ds, *sigma_fraction))
-            }
-            KernelSpec::Linear => Arc::new(Linear),
-            KernelSpec::Laplacian { sigma } => Arc::new(Laplacian::new(*sigma)),
-            KernelSpec::Polynomial { degree, offset } => {
-                Arc::new(Polynomial { degree: *degree, offset: *offset })
-            }
-        }
-    }
-}
-
-/// Sampler parameters (top-level keys of the create payload; unused keys
-/// are ignored by methods that do not need them).
-#[derive(Clone, Debug)]
-pub struct MethodSpec {
-    pub method: Method,
-    pub max_cols: usize,
-    pub init_cols: usize,
-    pub tol: f64,
-    pub seed: u64,
-    /// adaptive-random deflation batch.
-    pub batch: usize,
-    /// oasis-p worker threads.
-    pub workers: usize,
-}
-
-/// Parsed `POST /sessions` payload.
+/// Parsed `POST /sessions` payload: an optional hosting name plus the
+/// engine [`RunSpec`] every front end shares. The spec types themselves
+/// (dataset/kernel/method, warm start, shard reads) live in
+/// [`crate::engine`] and are re-exported above; this module only parses
+/// JSON into them.
 #[derive(Clone, Debug)]
 pub struct CreateRequest {
     pub name: Option<String>,
-    pub dataset: DatasetSpec,
-    pub kernel: KernelSpec,
-    pub method: MethodSpec,
+    pub spec: RunSpec,
 }
 
 /// Parsed `POST /sessions/{name}/step` payload.
@@ -393,9 +268,13 @@ fn parse_dataset(j: &Json, fs_root: &Path) -> Result<DatasetSpec> {
         if d.get("points").is_some() {
             bail!("'dataset' may give 'file' or 'points', not both");
         }
+        // resolved (and sandbox-checked) under --fs-root right here, so
+        // an unresolved client path never exists in a parsed request;
+        // `label` keeps the raw spelling for provenance — the server's
+        // filesystem layout must not leak into artifacts or listings
         let path = resolve_fs_path(fs_root, raw)
             .map_err(|e| e.wrap("'dataset.file'"))?;
-        return Ok(DatasetSpec::File { client: raw.to_string(), path });
+        return Ok(DatasetSpec::File { label: raw.to_string(), path });
     }
     if let Some(points) = d.get("points") {
         let arr = points
@@ -503,9 +382,10 @@ fn parse_kernel(j: &Json) -> Result<KernelSpec> {
     })
 }
 
-/// Parse a `POST /sessions` body. `fs_root` is the server's `--fs-root`;
-/// a `dataset.file` path is resolved (and sandbox-checked) under it
-/// right here, so no caller can forget to.
+/// Parse a `POST /sessions` body into a [`CreateRequest`]. `fs_root` is
+/// the server's `--fs-root`; `dataset.file` and `warm_start` paths are
+/// resolved (and sandbox-checked) under it right here, so no caller can
+/// forget to.
 pub fn parse_create(body: &str, fs_root: &Path) -> Result<CreateRequest> {
     let j = parse_body(body)?;
     let name = match field(&j, "name") {
@@ -521,6 +401,15 @@ pub fn parse_create(body: &str, fs_root: &Path) -> Result<CreateRequest> {
     let dataset = parse_dataset(&j, fs_root)?;
     let kernel = parse_kernel(&j)?;
     let method = Method::parse(&get_str(&j, "method", "oasis")?)?;
+    // reject one-shot methods before any dataset is materialized — they
+    // have no resumable session to host
+    if !method.has_session() {
+        bail!(
+            "method '{}' is one-shot and cannot be hosted as a session \
+             (hostable: oasis|sis|farahat|icd|adaptive-random|oasis-p)",
+            method.as_str()
+        );
+    }
     let max_cols = get_usize(&j, "max_cols", 450)?;
     if max_cols == 0 {
         bail!("'max_cols' must be ≥ 1");
@@ -541,18 +430,35 @@ pub fn parse_create(body: &str, fs_root: &Path) -> Result<CreateRequest> {
     if workers == 0 || workers > MAX_WORKERS {
         bail!("'workers' must be in 1..={MAX_WORKERS}");
     }
+    let warm_start = match field(&j, "warm_start") {
+        None => None,
+        Some(v) => {
+            let raw = v
+                .as_str()
+                .ok_or_else(|| anyhow!("'warm_start' must be a string path"))?;
+            let path = resolve_fs_path(fs_root, raw)
+                .map_err(|e| e.wrap("'warm_start'"))?;
+            Some(WarmStartSpec { label: raw.to_string(), path })
+        }
+    };
     Ok(CreateRequest {
         name,
-        dataset,
-        kernel,
-        method: MethodSpec {
-            method,
-            max_cols,
-            init_cols,
-            tol,
-            seed: get_u64(&j, "seed", 7)?,
-            batch,
-            workers,
+        spec: RunSpec {
+            dataset,
+            kernel,
+            method: MethodSpec {
+                method,
+                max_cols,
+                init_cols,
+                tol,
+                seed: get_u64(&j, "seed", 7)?,
+                batch,
+                workers,
+            },
+            // the server's stopping rules arrive per step request
+            stopping: StoppingRule::new(),
+            shard_reads: get_bool(&j, "shard_reads", false)?,
+            warm_start,
         },
     })
 }
@@ -733,17 +639,20 @@ mod tests {
     fn create_defaults() {
         let req = pc("{}").unwrap();
         assert!(req.name.is_none());
-        assert_eq!(req.method.method, Method::Oasis);
-        assert_eq!(req.method.max_cols, 450);
-        assert_eq!(req.method.init_cols, 10);
-        match req.dataset {
+        assert_eq!(req.spec.method.method, Method::Oasis);
+        assert_eq!(req.spec.method.max_cols, 450);
+        assert_eq!(req.spec.method.init_cols, 10);
+        assert!(!req.spec.shard_reads);
+        assert!(req.spec.warm_start.is_none());
+        assert!(req.spec.stopping.criteria().is_empty());
+        match req.spec.dataset {
             DatasetSpec::Generator { ref name, n, .. } => {
                 assert_eq!(name, "two-moons");
                 assert_eq!(n, 2000);
             }
             _ => panic!("expected generator default"),
         }
-        match req.kernel {
+        match req.spec.kernel {
             KernelSpec::Gaussian { sigma: None, sigma_fraction } => {
                 assert_eq!(sigma_fraction, 0.05)
             }
@@ -762,24 +671,48 @@ mod tests {
         }"#;
         let req = pc(body).unwrap();
         assert_eq!(req.name.as_deref(), Some("train-7"));
-        assert_eq!(req.method.method, Method::Farahat);
-        assert_eq!(req.method.max_cols, 40);
-        assert_eq!(req.method.seed, 5);
+        assert_eq!(req.spec.method.method, Method::Farahat);
+        assert_eq!(req.spec.method.max_cols, 40);
+        assert_eq!(req.spec.method.seed, 5);
     }
 
     #[test]
     fn create_inline_points() {
         let body = r#"{"dataset": {"points": [[0,0],[1,0],[0,1]]}}"#;
         let req = pc(body).unwrap();
-        match req.dataset {
+        match req.spec.dataset {
             DatasetSpec::Points(ref rows) => {
                 assert_eq!(rows.len(), 3);
                 assert_eq!(rows[1], vec![1.0, 0.0]);
             }
             _ => panic!("expected inline points"),
         }
-        let ds = req.dataset.build().unwrap();
+        let ds = req.spec.dataset.build(&serving_load_limits()).unwrap();
         assert_eq!((ds.n(), ds.dim()), (3, 2));
+    }
+
+    #[test]
+    fn create_parses_warm_start_and_shard_reads() {
+        let req = pc(
+            r#"{"method": "oasis-p",
+                "dataset": {"file": "train.mat"},
+                "warm_start": "models/seed.oasis",
+                "shard_reads": true}"#,
+        )
+        .unwrap();
+        assert!(req.spec.shard_reads);
+        let ws = req.spec.warm_start.as_ref().expect("warm start parsed");
+        assert_eq!(ws.label, "models/seed.oasis");
+        assert!(ws.path.ends_with("models/seed.oasis"));
+        // paths resolve under --fs-root like every other client path
+        assert!(pc(r#"{"warm_start": "../outside.oasis"}"#).is_err());
+        assert!(pc(r#"{"warm_start": "/abs.oasis"}"#).is_err());
+        // null means absent, like every other option
+        assert!(pc(r#"{"warm_start": null, "shard_reads": null}"#)
+            .unwrap()
+            .spec
+            .warm_start
+            .is_none());
     }
 
     /// One request must not be able to abort the server with an
@@ -800,11 +733,14 @@ mod tests {
             r#"{"dataset": {"generator": "mnist", "n": 200000, "dim": 4096}}"#,
         )
         .unwrap();
-        assert!(big.dataset.build().is_err());
+        assert!(big.spec.dataset.build(&serving_load_limits()).is_err());
         // …while the same generator at sane scale builds
         let ok = pc(r#"{"dataset": {"generator": "mnist", "n": 50}}"#)
             .unwrap();
-        assert_eq!(ok.dataset.build().unwrap().dim(), 784);
+        assert_eq!(
+            ok.spec.dataset.build(&serving_load_limits()).unwrap().dim(),
+            784
+        );
     }
 
     #[test]
@@ -812,6 +748,12 @@ mod tests {
         assert!(pc("not json").is_err());
         assert!(pc(r#"{"name": "has space"}"#).is_err());
         assert!(pc(r#"{"method": "magic"}"#).is_err());
+        // one-shot methods parse in the engine but are not hostable —
+        // refused here, before any dataset could be materialized
+        for m in ["random", "leverage", "kmeans"] {
+            let err = pc(&format!(r#"{{"method": "{m}"}}"#)).unwrap_err();
+            assert!(format!("{err}").contains("one-shot"), "{err}");
+        }
         assert!(pc(r#"{"max_cols": 0}"#).is_err());
         assert!(pc(r#"{"max_cols": 5, "init_cols": 9}"#).is_err());
         assert!(pc(r#"{"dataset": {"points": [[1,2],[3]]}}"#).is_err());
@@ -819,7 +761,7 @@ mod tests {
         assert!(pc(r#"{"kernel": {"type": "gaussian", "sigma": -1}}"#)
             .is_err());
         assert!(pc(r#"{"dataset": {"generator": "nope"}}"#)
-            .map(|r| r.dataset.build())
+            .map(|r| r.spec.dataset.build(&serving_load_limits()))
             .unwrap()
             .is_err());
     }
@@ -873,12 +815,12 @@ mod tests {
     fn file_dataset_and_artifact_payloads_parse() {
         let req = pc(r#"{"dataset": {"file": "sets/train.csv"}}"#)
             .unwrap();
-        match req.dataset {
-            DatasetSpec::File { ref client, ref path } => {
-                assert_eq!(client, "sets/train.csv");
+        match req.spec.dataset {
+            DatasetSpec::File { ref label, ref path } => {
+                assert_eq!(label, "sets/train.csv");
                 // resolved under the (benign) test root, raw spelling kept
                 assert!(path.ends_with("sets/train.csv"), "{}", path.display());
-                assert_eq!(req.dataset.describe(), "file:sets/train.csv");
+                assert_eq!(req.spec.dataset.describe(), "file:sets/train.csv");
             }
             other => panic!("expected file spec, got {other:?}"),
         }

@@ -21,16 +21,12 @@
 //! read lock-only.
 
 use super::metrics::LatencyStats;
-use super::protocol::{CreateRequest, Method, MethodSpec};
-use crate::coordinator::{OasisPConfig, OasisPSession};
+use super::protocol::{CreateRequest, Method};
 use crate::data::Dataset;
+use crate::engine::{ResolvedRun, RunData, SessionBuilder};
 use crate::kernels::Kernel;
 use crate::nystrom::NystromApprox;
-use crate::sampling::{
-    adaptive_random::AdaptiveRandom, farahat::Farahat, icd::IncompleteCholesky,
-    oasis::Oasis, sis::Sis, ImplicitOracle, SamplerSession, StepOutcome,
-    StopReason, StoppingRule,
-};
+use crate::sampling::{SamplerSession, StepOutcome, StopReason, StoppingRule};
 use crate::Result;
 use crate::{anyhow, bail};
 use std::collections::HashMap;
@@ -83,6 +79,15 @@ pub struct SessionShared {
     /// queued million-step background batch cannot stall
     /// [`Registry::shutdown`]'s join.
     pub cancel: AtomicBool,
+    /// Shard-read sessions mirror `(global index, point)` for every
+    /// selected column here (synced from the session by its actor after
+    /// construction and every step batch — see
+    /// [`SamplerSession::selected_points`]); the server holds no dataset
+    /// for them, and queries/saves only ever touch Λ's points.
+    pub selected_mirror: Mutex<Vec<(usize, Vec<f64>)>>,
+    /// Gates the mirror sync so full-dataset sessions do not pay the
+    /// per-batch O(k·dim) copy they would never read.
+    pub mirror_points: AtomicBool,
 }
 
 /// What one step batch did.
@@ -115,6 +120,110 @@ pub enum Command {
     Finish { reply: Sender<Result<NystromApprox>> },
 }
 
+/// How request handlers resolve data points for a hosted session.
+///
+/// Every method except shard-read oASIS-P keeps the whole dataset alive
+/// in the server (`Full`) — queries evaluate `k(z, xⱼ)` against
+/// arbitrary selected rows, and saves extract Λ's points. A shard-read
+/// session holds no dataset — its workers own the shards — so the
+/// handlers fall back to the selected-points mirror its actor syncs from
+/// the leader ([`SessionShared::selected_mirror`]): Λ's points are all
+/// the query, save, and status paths ever touch.
+#[derive(Clone)]
+pub enum PointAccess {
+    Full(Arc<Dataset>),
+    Selected { n: usize, dim: usize, shared: Arc<SessionShared> },
+}
+
+impl PointAccess {
+    pub fn n(&self) -> usize {
+        match self {
+            PointAccess::Full(ds) => ds.n(),
+            PointAccess::Selected { n, .. } => *n,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            PointAccess::Full(ds) => ds.dim(),
+            PointAccess::Selected { dim, .. } => *dim,
+        }
+    }
+
+    /// The Nyström extension's `b(z) = [k(z, x_j)]` over the given
+    /// selected indices.
+    pub fn kernel_row(
+        &self,
+        kernel: &dyn Kernel,
+        z: &[f64],
+        indices: &[usize],
+    ) -> Result<Vec<f64>> {
+        match self {
+            PointAccess::Full(ds) => Ok(indices
+                .iter()
+                .map(|&j| kernel.eval(z, ds.point(j)))
+                .collect()),
+            PointAccess::Selected { shared, .. } => {
+                let mirror = lock(&shared.selected_mirror);
+                indices
+                    .iter()
+                    .enumerate()
+                    .map(|(t, &j)| {
+                        lookup_mirrored(&mirror, t, j).map(|p| kernel.eval(z, p))
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// The points of `indices`, as a dataset (what artifact saves embed).
+    pub fn selected_dataset(&self, indices: &[usize]) -> Result<Dataset> {
+        match self {
+            PointAccess::Full(ds) => {
+                if let Some(&bad) = indices.iter().find(|&&i| i >= ds.n()) {
+                    bail!("selected index {bad} out of range (n = {})", ds.n());
+                }
+                Ok(ds.select(indices))
+            }
+            PointAccess::Selected { shared, dim, .. } => {
+                if indices.is_empty() {
+                    // let the caller's own empty-Λ validation speak
+                    return Ok(Dataset::zeros(0, *dim));
+                }
+                let mirror = lock(&shared.selected_mirror);
+                let mut rows = Vec::with_capacity(indices.len());
+                for (t, &j) in indices.iter().enumerate() {
+                    rows.push(lookup_mirrored(&mirror, t, j)?.to_vec());
+                }
+                Ok(Dataset::from_rows(rows))
+            }
+        }
+    }
+}
+
+/// Mirror lookup for global index `j`, trying position `t` first (a
+/// snapshot's indices and the mirror share selection order, so the fast
+/// path almost always hits).
+fn lookup_mirrored<'m>(
+    mirror: &'m [(usize, Vec<f64>)],
+    t: usize,
+    j: usize,
+) -> Result<&'m [f64]> {
+    match mirror.get(t) {
+        Some((g, p)) if *g == j => Ok(p),
+        _ => mirror
+            .iter()
+            .find(|(g, _)| *g == j)
+            .map(|(_, p)| p.as_slice())
+            .ok_or_else(|| {
+                anyhow!(
+                    "selected point {j} is not mirrored yet — retry after the \
+                     current step batch"
+                )
+            }),
+    }
+}
+
 /// Handler-side handle to one hosted session. Cloneable; all fields are
 /// shared-ownership or channel endpoints.
 #[derive(Clone)]
@@ -122,7 +231,9 @@ pub struct SessionHandle {
     pub name: String,
     pub tx: Sender<Command>,
     pub shared: Arc<SessionShared>,
-    pub dataset: Arc<Dataset>,
+    /// Point resolution for queries/saves (whole dataset, or the
+    /// shard-read selected-points mirror).
+    pub points: PointAccess,
     pub kernel: Arc<dyn Kernel + Send + Sync>,
     /// Dataset provenance line (recorded into saved artifacts).
     pub source: Arc<str>,
@@ -157,10 +268,14 @@ impl Registry {
         }
     }
 
-    /// Create a session: build the dataset and kernel, spawn the actor
-    /// thread, and wait for it to report that session construction
-    /// succeeded — so construction errors (singular seeds, bad configs)
-    /// surface synchronously as a clean request error.
+    /// Create a session: resolve the request's [`RunSpec`] through the
+    /// engine (dataset/kernel/warm-start, under the serving caps), spawn
+    /// the actor thread, and wait for it to report that session
+    /// construction succeeded — so construction errors (singular seeds,
+    /// bad configs, mismatched warm-start artifacts) surface
+    /// synchronously as a clean request error.
+    ///
+    /// [`RunSpec`]: crate::engine::RunSpec
     pub fn create(&self, req: CreateRequest) -> Result<SessionHandle> {
         let name = match req.name {
             Some(n) => {
@@ -179,16 +294,17 @@ impl Registry {
                 }
             },
         };
-        let source: Arc<str> = req.dataset.describe().into();
-        let dataset = Arc::new(req.dataset.build()?);
-        let kernel = req.kernel.build(&dataset);
-        let mut spec = req.method;
-        // clamp like the CLI: a budget past n is just "all columns"
-        spec.max_cols = spec.max_cols.min(dataset.n());
-        spec.init_cols = spec.init_cols.min(spec.max_cols).max(1);
+        let run = SessionBuilder::with_limits(super::protocol::serving_load_limits())
+            .resolve(req.spec)?;
         // serving-sanity caps: one request must not be able to abort the
-        // whole server with an oversized allocation (see protocol's caps)
-        let n = dataset.n();
+        // whole server with an oversized allocation (see protocol's caps;
+        // the engine already clamped max_cols/init_cols to n). Warm-start
+        // resolution is header-only (peek_warm_start never materializes
+        // the artifact's n×k payload), so capping the *resolved* warm k
+        // here — one read, no check-to-use window — bounds the session
+        // state a replay would grow to.
+        let n = run.n();
+        let spec = &run.method;
         if matches!(spec.method, Method::Farahat | Method::AdaptiveRandom)
             && n > super::protocol::MAX_RESIDUAL_N
         {
@@ -199,11 +315,15 @@ impl Registry {
                 super::protocol::MAX_RESIDUAL_N
             );
         }
-        if (n as u128) * (spec.max_cols as u128) > super::protocol::MAX_STATE_ELEMS {
+        let state_cols = spec
+            .max_cols
+            .max(run.warm.as_ref().map_or(0, |w| w.indices.len()));
+        if (n as u128) * (state_cols as u128) > super::protocol::MAX_STATE_ELEMS {
             bail!(
-                "n × max_cols = {} exceeds the serving cap of {} state \
-                 elements — lower max_cols",
-                (n as u128) * (spec.max_cols as u128),
+                "n × columns = {} exceeds the serving cap of {} state \
+                 elements — lower max_cols (or warm-start from a smaller \
+                 artifact)",
+                (n as u128) * (state_cols as u128),
                 super::protocol::MAX_STATE_ELEMS
             );
         }
@@ -222,19 +342,26 @@ impl Registry {
         }
 
         let shared = Arc::new(SessionShared::default());
+        let points = match &run.data {
+            RunData::Full(ds) => PointAccess::Full(ds.clone()),
+            RunData::ShardFile { n, dim, .. } => {
+                shared.mirror_points.store(true, Ordering::SeqCst);
+                PointAccess::Selected { n: *n, dim: *dim, shared: shared.clone() }
+            }
+        };
         let (tx, rx) = mpsc::channel();
         let (ready_tx, ready_rx) = mpsc::channel();
         let handle = SessionHandle {
             name: name.clone(),
             tx,
             shared: shared.clone(),
-            dataset: dataset.clone(),
-            kernel: kernel.clone(),
-            source,
+            points,
+            kernel: run.kernel.clone(),
+            source: run.source.clone().into(),
         };
         let join = std::thread::Builder::new()
             .name(format!("oasis-session-{name}"))
-            .spawn(move || session_thread(spec, dataset, kernel, shared, rx, ready_tx))
+            .spawn(move || session_thread(run, shared, rx, ready_tx))
             .map_err(|e| anyhow!("could not spawn session thread: {e}"))?;
         match ready_rx.recv() {
             Ok(Ok(())) => {}
@@ -391,49 +518,17 @@ pub fn finish(handle: &SessionHandle) -> Result<NystromApprox> {
         .map_err(|_| anyhow!("session '{}' terminated", handle.name))?
 }
 
-fn boxed<'a, S: SamplerSession + 'a>(s: S) -> Box<dyn SamplerSession + 'a> {
-    Box::new(s)
-}
-
-/// Actor-thread body: construct the oracle and session on this stack
-/// (the session borrows them), report construction, serve commands.
+/// Actor-thread body: pin the resolved run's oracle on this stack (the
+/// sequential sessions borrow it), open the session through the engine,
+/// report construction, serve commands.
 fn session_thread(
-    spec: MethodSpec,
-    ds: Arc<Dataset>,
-    kernel: Arc<dyn Kernel + Send + Sync>,
+    run: ResolvedRun,
     shared: Arc<SessionShared>,
     rx: Receiver<Command>,
     ready: Sender<Result<()>>,
 ) {
-    let oracle = ImplicitOracle::new(&ds, &*kernel);
-    let built: Result<Box<dyn SamplerSession + '_>> = (|| {
-        Ok(match spec.method {
-            Method::Oasis => boxed(
-                Oasis::new(spec.max_cols, spec.init_cols, spec.tol, spec.seed)
-                    .session(&oracle)?,
-            ),
-            Method::Sis => boxed(
-                Sis::new(spec.max_cols, spec.init_cols, spec.tol, spec.seed)
-                    .session(&oracle)?,
-            ),
-            Method::Farahat => boxed(Farahat::new(spec.max_cols).session(&oracle)?),
-            Method::Icd => boxed(
-                IncompleteCholesky::new(spec.max_cols, spec.tol).session(&oracle)?,
-            ),
-            Method::AdaptiveRandom => boxed(
-                AdaptiveRandom::new(spec.max_cols, spec.batch, spec.seed)
-                    .session(&oracle)?,
-            ),
-            Method::OasisP => {
-                let cfg =
-                    OasisPConfig::new(spec.max_cols, spec.init_cols, spec.workers)
-                        .with_seed(spec.seed)
-                        .with_tol(spec.tol);
-                boxed(OasisPSession::start(&ds, kernel.clone(), cfg)?)
-            }
-        })
-    })();
-    match built {
+    let slot = run.oracle_slot();
+    match run.open_session(&slot) {
         Ok(session) => {
             sync_stats(&shared, session.as_ref(), None);
             let _ = ready.send(Ok(()));
@@ -549,43 +644,71 @@ fn sync_stats(
     session: &dyn SamplerSession,
     stop: Option<StopReason>,
 ) {
-    let mut st = lock(&shared.stats);
-    if st.method.is_empty() {
-        st.method = session.name().to_string();
+    {
+        let mut st = lock(&shared.stats);
+        if st.method.is_empty() {
+            st.method = session.name().to_string();
+        }
+        st.n = session.n();
+        st.k = session.k();
+        st.error_estimate = session.error_estimate();
+        st.selection_secs = session.selection_secs();
+        if stop.is_some() {
+            st.stop = stop;
+        }
     }
-    st.n = session.n();
-    st.k = session.k();
-    st.error_estimate = session.error_estimate();
-    st.selection_secs = session.selection_secs();
-    if stop.is_some() {
-        st.stop = stop;
+    // shard-read sessions: extend the selected-points mirror the
+    // handlers' queries and saves read. Selection is append-only, so
+    // only the tail past what is already mirrored is fetched — O(new
+    // columns), not O(k), per batch. (Commands on one actor serialize,
+    // so by the time a snapshot/query command runs, the mirror covers
+    // every batch that preceded it.)
+    if shared.mirror_points.load(Ordering::Relaxed) {
+        let order = session.indices();
+        let mut mirror = lock(&shared.selected_mirror);
+        let have = mirror.len();
+        if order.len() > have {
+            if let Some(pts) = session.selected_points(have) {
+                mirror.extend(order[have..].iter().copied().zip(pts));
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::server::protocol::{DatasetSpec, KernelSpec};
+    use crate::server::protocol::{
+        DatasetSpec, KernelSpec, MethodSpec, RunSpec,
+    };
 
     fn create_req(name: &str, n: usize, max_cols: usize, seed: u64) -> CreateRequest {
         CreateRequest {
             name: Some(name.to_string()),
-            dataset: DatasetSpec::Generator {
-                name: "two-moons".into(),
-                n,
-                seed: 42,
-                noise: 0.05,
-                dim: 0,
-            },
-            kernel: KernelSpec::Gaussian { sigma: None, sigma_fraction: 0.05 },
-            method: MethodSpec {
-                method: Method::Oasis,
-                max_cols,
-                init_cols: 5,
-                tol: 1e-12,
-                seed,
-                batch: 10,
-                workers: 2,
+            spec: RunSpec {
+                dataset: DatasetSpec::Generator {
+                    name: "two-moons".into(),
+                    n,
+                    seed: 42,
+                    noise: 0.05,
+                    dim: 0,
+                },
+                kernel: KernelSpec::Gaussian {
+                    sigma: None,
+                    sigma_fraction: 0.05,
+                },
+                method: MethodSpec {
+                    method: Method::Oasis,
+                    max_cols,
+                    init_cols: 5,
+                    tol: 1e-12,
+                    seed,
+                    batch: 10,
+                    workers: 2,
+                },
+                stopping: StoppingRule::new(),
+                shard_reads: false,
+                warm_start: None,
             },
         }
     }
@@ -674,7 +797,7 @@ mod tests {
         .enumerate()
         {
             let mut req = create_req(&format!("m{i}"), 60, 12, 2);
-            req.method.method = m;
+            req.spec.method.method = m;
             let h = reg.create(req).unwrap();
             let rep = step_sync(&h, 3, StoppingRule::new()).unwrap();
             assert!(rep.stepped >= 1, "{m:?} did not step");

@@ -1,0 +1,85 @@
+//! Filesystem helpers shared by the artifact store and dataset writers.
+
+use crate::anyhow;
+use crate::Result;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-process uniquifier for temp file names: two concurrent
+/// [`write_atomic`] calls targeting the same destination must not write
+/// through the same temp file.
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Write `bytes` to `path` atomically: the bytes go to a uniquely named
+/// temp file in the destination directory, are synced to stable storage,
+/// and the temp file is then renamed into place. A crash mid-write —
+/// process *or* system — leaves at worst a stray `.tmp` file, never a
+/// truncated `path`, and readers racing the writer see either the old
+/// complete file or the new complete one. (Rename is atomic only within
+/// one filesystem; writing the temp file next to the destination
+/// guarantees they share one. The fsync before the rename is what makes
+/// the guarantee hold across power loss: without it the rename can land
+/// on disk ahead of the data.)
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("out");
+    let tmp = dir.join(format!(
+        ".{name}.{}-{}.tmp",
+        std::process::id(),
+        TEMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    let write = (|| -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(anyhow!("writing {}: {e}", tmp.display()));
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(anyhow!("renaming {} into place: {e}", path.display()));
+    }
+    // best effort: make the rename itself durable (the directory entry
+    // lives in the directory's data)
+    #[cfg(unix)]
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_overwrites_without_residue() {
+        let dir = std::env::temp_dir()
+            .join("oasis-fsio-test")
+            .join(format!("r{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.bin");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        // overwrite renames over the existing file
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        // no temp files left behind
+        let stray: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(stray.is_empty(), "stray temp files: {stray:?}");
+        // a missing destination directory is a clean error
+        assert!(write_atomic(&dir.join("absent/deep.bin"), b"x").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

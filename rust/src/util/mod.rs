@@ -8,6 +8,7 @@
 
 pub mod args;
 pub mod framing;
+pub mod fsio;
 pub mod json;
 pub mod parallel;
 pub mod propcheck;

@@ -2,11 +2,17 @@
 //! worker count (DESIGN.md invariant 4), communication accounting, fault
 //! injection, and end-to-end accuracy.
 
-use oasis::coordinator::{run_oasis_p, FailureSpec, OasisPConfig};
+use oasis::coordinator::{
+    run_oasis_p, FailureSpec, OasisPConfig, OasisPSession, ShardPlan,
+};
 use oasis::data::generators::{abalone_like, two_moons};
+use oasis::data::{loader, LoadLimits};
 use oasis::kernels::{Gaussian, Kernel};
 use oasis::nystrom::{relative_frobenius_error, sampled_relative_error};
-use oasis::sampling::{oasis::Oasis, oasis::Variant, ColumnSampler, ImplicitOracle};
+use oasis::sampling::{
+    oasis::Oasis, oasis::Variant, run_to_completion, ColumnSampler,
+    ImplicitOracle, SamplerSession, StoppingRule,
+};
 use std::sync::Arc;
 
 fn gaussian(ds: &oasis::data::Dataset, frac: f64) -> Arc<dyn Kernel + Send + Sync> {
@@ -115,6 +121,78 @@ fn distributed_early_stop_on_exact_recovery() {
     let oracle = ImplicitOracle::new(&ds, &lin);
     let err = sampled_relative_error(&oracle, &approx, 20_000, 5);
     assert!(err < 1e-5, "err {err}");
+}
+
+/// SHARD READS ≡ WHOLE FILE: a run whose workers each read only their
+/// own byte range of the binary dataset file produces bit-identical
+/// results to the in-memory run over the whole dataset — indices, C, and
+/// W⁻¹ — and still supports the mid-run snapshot gather. (Explicit σ:
+/// the shard-read leader has no dataset to resolve a σ fraction from.)
+#[test]
+fn shard_file_reads_match_whole_file_run() {
+    let dir = std::env::temp_dir()
+        .join("oasis-dist-shard-test")
+        .join(format!("r{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = two_moons(220, 0.05, 12);
+    let path = dir.join("points.mat");
+    loader::save_matrix(&path, &ds).unwrap();
+    let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+    let cfg = OasisPConfig::new(26, 4, 3).with_seed(19);
+
+    // reference: the leader materializes the dataset and splits in memory
+    let (reference, _) = run_oasis_p(&ds, kernel.clone(), &cfg).unwrap();
+
+    // sharded: workers read their own byte ranges; the leader only knows
+    // (n, dim) from the header
+    let (n, dim) = loader::peek_matrix_dims(&path).unwrap();
+    assert_eq!((n, dim), (220, 2));
+    let mut session = OasisPSession::start_with_plan(
+        ShardPlan::File {
+            path: path.clone(),
+            n,
+            limits: LoadLimits::unlimited(),
+        },
+        kernel,
+        cfg,
+    )
+    .unwrap();
+    for _ in 0..8 {
+        session.step().unwrap();
+    }
+    // mid-run snapshot still works without any leader-side dataset, and
+    // the leader's selected-points mirror tracks Λ
+    let snap = session.snapshot().unwrap();
+    assert_eq!(snap.indices, &reference.indices[..snap.k()]);
+    let pts = session.selected_points(0).expect("leader mirrors Λ's points");
+    assert_eq!(pts.len(), session.k());
+    // the incremental tail view agrees with the full mirror
+    assert_eq!(session.selected_points(10).unwrap()[..], pts[10..]);
+    for (t, &g) in session.indices().iter().enumerate() {
+        for (a, b) in pts[t].iter().zip(ds.point(g)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "mirrored point diverged");
+        }
+    }
+    run_to_completion(&mut session, &StoppingRule::budget(26)).unwrap();
+    let (sharded, report) = session.finish_run().unwrap();
+    assert_eq!(report.workers, 3);
+    assert_eq!(sharded.indices, reference.indices);
+    assert_eq!(sharded.c.data, reference.c.data);
+    assert_eq!(sharded.winv.data, reference.winv.data);
+
+    // a worker that cannot read its shard surfaces as a clean error, not
+    // a hang: point the plan at a missing file
+    let missing = OasisPSession::start_with_plan(
+        ShardPlan::File {
+            path: dir.join("absent.mat"),
+            n: 220,
+            limits: LoadLimits::unlimited(),
+        },
+        Arc::new(Gaussian::new(0.6)),
+        OasisPConfig::new(10, 2, 2).with_seed(1),
+    );
+    assert!(missing.is_err(), "missing shard file must fail to start");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Report metrics are self-consistent.

@@ -1,0 +1,193 @@
+//! Engine-layer acceptance tests: the spec-driven run pipeline shared by
+//! the CLI, the HTTP server, and the oASIS-P coordinator. Front-end
+//! parity proper lives in `tests/session.rs` (engine vs hand-built) and
+//! `tests/server.rs` (engine vs socket); this file exercises the
+//! resolution rules themselves — clamping, one-shot methods, shard-read
+//! validation and equivalence, and warm-start validation.
+
+use oasis::data::generators::two_moons;
+use oasis::data::{loader, LoadLimits};
+use oasis::engine::{
+    self, DatasetSpec, KernelSpec, Method, MethodSpec, RunSpec, SessionBuilder,
+    WarmStartSpec,
+};
+use oasis::sampling::run_to_completion;
+use std::path::PathBuf;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("oasis-engine-test")
+        .join(format!("{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spec(method: Method, dataset: DatasetSpec, kernel: KernelSpec, cols: usize) -> RunSpec {
+    RunSpec {
+        dataset,
+        kernel,
+        method: MethodSpec {
+            method,
+            max_cols: cols,
+            init_cols: 4,
+            tol: 1e-12,
+            seed: 17,
+            batch: 10,
+            workers: 3,
+        },
+        stopping: engine::stopping_rule(cols, None, None),
+        shard_reads: false,
+        warm_start: None,
+    }
+}
+
+fn moons(n: usize) -> DatasetSpec {
+    DatasetSpec::Generator {
+        name: "two-moons".into(),
+        n,
+        seed: 5,
+        noise: 0.05,
+        dim: 0,
+    }
+}
+
+fn gaussian_frac() -> KernelSpec {
+    KernelSpec::Gaussian { sigma: None, sigma_fraction: 0.1 }
+}
+
+/// Budgets and sampler parameters clamp to the resolved dataset size —
+/// the clamp every front end used to hand-roll.
+#[test]
+fn resolve_clamps_budgets_and_method_to_n() {
+    let run = SessionBuilder::new()
+        .resolve(spec(Method::Oasis, moons(25), gaussian_frac(), 500))
+        .unwrap();
+    assert_eq!(run.n(), 25);
+    assert_eq!(run.method.max_cols, 25);
+    let slot = run.oracle_slot();
+    let mut s = run.open_session(&slot).unwrap();
+    // the clamped budget reports BudgetReached (not Exhausted) at n
+    let reason = run_to_completion(s.as_mut(), &run.stopping).unwrap();
+    assert!(
+        matches!(
+            reason,
+            oasis::sampling::StopReason::BudgetReached
+                | oasis::sampling::StopReason::ScoreBelowTol
+        ),
+        "{reason:?}"
+    );
+}
+
+/// File datasets resolve through the loader under the builder's limits.
+#[test]
+fn file_dataset_resolves_with_limits() {
+    let dir = tmp_dir("file-limits");
+    let ds = two_moons(60, 0.05, 2);
+    let path = dir.join("train.csv");
+    loader::save_csv(&path, &ds).unwrap();
+    let file_spec = || DatasetSpec::File {
+        label: "train.csv".into(),
+        path: path.clone(),
+    };
+    let run = SessionBuilder::new()
+        .resolve(spec(Method::Oasis, file_spec(), gaussian_frac(), 10))
+        .unwrap();
+    assert_eq!((run.n(), run.dim()), (60, 2));
+    assert_eq!(run.source, "file:train.csv");
+    // a limits-bounded builder refuses the same file while parsing
+    let tight = LoadLimits { max_n: 10, max_dim: 8, max_elems: u128::MAX };
+    let err = SessionBuilder::with_limits(tight)
+        .resolve(spec(Method::Oasis, file_spec(), gaussian_frac(), 10))
+        .unwrap_err();
+    assert!(format!("{err}").contains("rows"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Shard-read resolution: oASIS-P + a binary file + a data-free kernel.
+/// Every other combination is a clean error, and the accepted one runs
+/// bit-identically to the whole-file path.
+#[test]
+fn shard_reads_resolve_and_match_full_run() {
+    let dir = tmp_dir("shard-reads");
+    let ds = two_moons(140, 0.05, 21);
+    let bin = dir.join("points.mat");
+    loader::save_matrix(&bin, &ds).unwrap();
+    let csv = dir.join("points.csv");
+    loader::save_csv(&csv, &ds).unwrap();
+    let file_spec = |p: &PathBuf| DatasetSpec::File {
+        label: "points".into(),
+        path: p.clone(),
+    };
+    let sigma = KernelSpec::Gaussian { sigma: Some(0.5), sigma_fraction: 0.1 };
+
+    // CSV cannot be byte-range sharded
+    let mut s = spec(Method::OasisP, file_spec(&csv), sigma.clone(), 20);
+    s.shard_reads = true;
+    let err = SessionBuilder::new().resolve(s).unwrap_err();
+    assert!(format!("{err}").contains("binary"), "{err}");
+    // a σ-fraction kernel needs the dataset the leader never loads
+    let mut s = spec(Method::OasisP, file_spec(&bin), gaussian_frac(), 20);
+    s.shard_reads = true;
+    let err = SessionBuilder::new().resolve(s).unwrap_err();
+    assert!(format!("{err}").contains("sigma"), "{err}");
+
+    // the valid combination: equal to the whole-file run, bit for bit
+    let mut sharded_spec = spec(Method::OasisP, file_spec(&bin), sigma.clone(), 20);
+    sharded_spec.shard_reads = true;
+    let sharded_run = SessionBuilder::new().resolve(sharded_spec).unwrap();
+    assert!(sharded_run.dataset().is_err(), "no dataset is materialized");
+    let mut session = sharded_run.open_oasis_p().unwrap();
+    run_to_completion(&mut session, &sharded_run.stopping).unwrap();
+    let (sharded, report) = session.finish_run().unwrap();
+    assert_eq!(report.workers, 3);
+
+    let full_run = SessionBuilder::new()
+        .resolve(spec(Method::OasisP, file_spec(&bin), sigma, 20))
+        .unwrap();
+    let mut session = full_run.open_oasis_p().unwrap();
+    run_to_completion(&mut session, &full_run.stopping).unwrap();
+    let (full, _) = session.finish_run().unwrap();
+
+    assert_eq!(sharded.indices, full.indices);
+    assert_eq!(sharded.c.data, full.c.data);
+    assert_eq!(sharded.winv.data, full.winv.data);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Warm-start validation happens at resolve time with specific errors.
+#[test]
+fn warm_start_resolution_errors_are_specific() {
+    let warm = |label: &str| {
+        Some(WarmStartSpec {
+            label: label.into(),
+            path: PathBuf::from(format!("/nonexistent/{label}")),
+        })
+    };
+    // non-oasis methods cannot warm start
+    let mut s = spec(Method::Sis, moons(40), gaussian_frac(), 10);
+    s.warm_start = warm("a.oasis");
+    let err = SessionBuilder::new().resolve(s).unwrap_err();
+    assert!(format!("{err}").contains("'oasis'"), "{err}");
+    // a missing artifact file names the problem
+    let mut s = spec(Method::Oasis, moons(40), gaussian_frac(), 10);
+    s.warm_start = warm("b.oasis");
+    let err = SessionBuilder::new().resolve(s).unwrap_err();
+    assert!(format!("{err}").contains("warm_start"), "{err}");
+}
+
+/// The one-shot methods resolve and sample through the same engine spec.
+#[test]
+fn one_shot_methods_run_through_the_engine() {
+    for m in [Method::Uniform, Method::Leverage, Method::Kmeans] {
+        let run = SessionBuilder::new()
+            .resolve(spec(m, moons(50), gaussian_frac(), 8))
+            .unwrap();
+        let slot = run.oracle_slot();
+        let approx = run.one_shot(&slot).unwrap();
+        assert_eq!(approx.n(), 50, "{m:?}");
+        assert!(approx.k() >= 1, "{m:?}");
+        // and the stepwise entry refuses them with a pointer at one_shot
+        let err = run.open_session(&slot).unwrap_err();
+        assert!(format!("{err}").contains("one_shot"), "{err}");
+    }
+}

@@ -10,6 +10,9 @@
 
 use oasis::data::generators::two_moons;
 use oasis::data::loader;
+use oasis::engine::{
+    self, DatasetSpec, KernelSpec, Method, MethodSpec, RunSpec, SessionBuilder,
+};
 use oasis::kernels::{Gaussian, Kernel};
 use oasis::sampling::{
     oasis::Oasis, run_to_completion, ImplicitOracle, SamplerSession,
@@ -493,6 +496,172 @@ fn save_load_and_query_artifact_over_socket() {
     // unload
     assert_eq!(request(addr, "DELETE", "/artifacts/fs-replica", "").0, 200);
     assert_eq!(request(addr, "GET", "/artifacts/fs-replica", "").0, 404);
+
+    stop_server(addr, join);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// FRONT-END PARITY: the same `RunSpec`, once resolved through the
+/// engine in-process (the CLI's path) and once shipped as a `POST
+/// /sessions` payload (the server's path), yields bit-identical
+/// selection sequences and factor matrices.
+#[test]
+fn engine_runspec_parity_cli_vs_server() {
+    let (addr, join) = start_server();
+    let (status, j) = request(
+        addr,
+        "POST",
+        "/sessions",
+        r#"{"name":"par",
+            "dataset":{"generator":"two-moons","n":350,"seed":4},
+            "kernel":{"type":"gaussian","sigma_fraction":0.05},
+            "method":"oasis","max_cols":50,"init_cols":5,"tol":1e-12,"seed":11}"#,
+    );
+    assert_eq!(status, 200, "{j}");
+    let (status, j) = request(addr, "POST", "/sessions/par/step", r#"{"budget":50}"#);
+    assert_eq!(status, 200, "{j}");
+    let (status, snap) =
+        request(addr, "GET", "/sessions/par/snapshot?factors=1", "");
+    assert_eq!(status, 200, "{snap}");
+
+    // the identical spec, resolved in-process through the engine
+    let spec = RunSpec {
+        dataset: DatasetSpec::Generator {
+            name: "two-moons".into(),
+            n: 350,
+            seed: 4,
+            noise: 0.05,
+            dim: 0,
+        },
+        kernel: KernelSpec::Gaussian { sigma: None, sigma_fraction: 0.05 },
+        method: MethodSpec {
+            method: Method::Oasis,
+            max_cols: 50,
+            init_cols: 5,
+            tol: 1e-12,
+            seed: 11,
+            batch: 10,
+            workers: 1,
+        },
+        stopping: engine::stopping_rule(50, None, None),
+        shard_reads: false,
+        warm_start: None,
+    };
+    let run = SessionBuilder::new().resolve(spec).unwrap();
+    let slot = run.oracle_slot();
+    let mut s = run.open_session(&slot).unwrap();
+    run_to_completion(s.as_mut(), &run.stopping).unwrap();
+    let reference = s.snapshot().unwrap();
+
+    assert_eq!(indices_of(&snap), reference.indices, "selection diverged");
+    for (key, want) in [("c", &reference.c), ("winv", &reference.winv)] {
+        let m = snap.get(key).unwrap_or_else(|| panic!("missing {key}"));
+        let data = m.get("data").and_then(Json::as_arr).expect("data");
+        assert_eq!(data.len(), want.data.len());
+        for (i, (got, want)) in data.iter().zip(&want.data).enumerate() {
+            assert_eq!(got.as_f64().expect("number"), *want, "{key}[{i}]");
+        }
+    }
+    stop_server(addr, join);
+}
+
+/// Warm start over the wire: a session saved mid-run seeds a fresh
+/// session through the create option `{"warm_start": …}`; the warm
+/// session resumes at the stored k, answers queries bit-identically to
+/// the original, and continues selecting in lockstep with it.
+#[test]
+fn warm_start_create_resumes_from_artifact() {
+    let root = std::env::temp_dir()
+        .join("oasis-server-warm-test")
+        .join(format!("run-{}", std::process::id()));
+    std::fs::create_dir_all(&root).unwrap();
+    let (addr, join) = start_server_rooted(root.clone());
+
+    let ds = two_moons(120, 0.05, 33);
+    loader::save_csv(&root.join("train.csv"), &ds).unwrap();
+
+    let create = |name: &str, extra: &str| {
+        format!(
+            r#"{{"name":"{name}",
+                "dataset":{{"file":"train.csv"}},
+                "kernel":{{"type":"gaussian","sigma":0.7}},
+                "method":"oasis","max_cols":30,"init_cols":4,"seed":13{extra}}}"#
+        )
+    };
+    let (status, j) = request(addr, "POST", "/sessions", &create("w0", ""));
+    assert_eq!(status, 200, "{j}");
+    let (status, j) = request(addr, "POST", "/sessions/w0/step", r#"{"steps":14}"#);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "k"), 18);
+    let (status, j) =
+        request(addr, "POST", "/sessions/w0/save", r#"{"path":"w.oasis"}"#);
+    assert_eq!(status, 200, "{j}");
+
+    // warm create resumes at the artifact's k…
+    let (status, j) = request(
+        addr,
+        "POST",
+        "/sessions",
+        &create("w1", r#","warm_start":"w.oasis""#),
+    );
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "k"), 18, "warm session starts at stored k");
+
+    // …answers queries bit-identically to the session that saved it…
+    let q = r#"{"points":[[0.3,-0.1]],"targets":[0,60,119],"refresh":true}"#;
+    let result_of = |j: &Json| -> (Vec<f64>, Vec<f64>) {
+        let r = &j.get("results").and_then(Json::as_arr).expect("results")[0];
+        let nums = |key: &str| -> Vec<f64> {
+            r.get(key)
+                .and_then(Json::as_arr)
+                .unwrap_or_else(|| panic!("missing {key} in {j}"))
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect()
+        };
+        (nums("weights"), nums("kernel"))
+    };
+    let (status, q0) = request(addr, "POST", "/sessions/w0/query", q);
+    assert_eq!(status, 200, "{q0}");
+    let (status, q1) = request(addr, "POST", "/sessions/w1/query", q);
+    assert_eq!(status, 200, "{q1}");
+    let ((w0w, w0k), (w1w, w1k)) = (result_of(&q0), result_of(&q1));
+    for (a, b) in w0w.iter().zip(&w1w) {
+        assert_eq!(a.to_bits(), b.to_bits(), "warm weights diverged");
+    }
+    for (a, b) in w0k.iter().zip(&w1k) {
+        assert_eq!(a.to_bits(), b.to_bits(), "warm kernel values diverged");
+    }
+
+    // …and keeps selecting in lockstep with the original session
+    for name in ["w0", "w1"] {
+        let (status, j) = request(
+            addr,
+            "POST",
+            &format!("/sessions/{name}/step"),
+            r#"{"budget":30}"#,
+        );
+        assert_eq!(status, 200, "{j}");
+        assert_eq!(usize_field(&j, "k"), 30);
+    }
+    let (_, s0) = request(addr, "GET", "/sessions/w0/snapshot", "");
+    let (_, s1) = request(addr, "GET", "/sessions/w1/snapshot", "");
+    assert_eq!(indices_of(&s0), indices_of(&s1), "continued selection diverged");
+
+    // mismatched warm starts are clean 400s
+    let (status, j) = request(
+        addr,
+        "POST",
+        "/sessions",
+        &create("w2", r#","warm_start":"missing.oasis""#),
+    );
+    assert_eq!(status, 400, "{j}");
+    let bad_kernel = r#"{"name":"w3",
+        "dataset":{"file":"train.csv"},
+        "kernel":{"type":"gaussian","sigma":2.5},
+        "method":"oasis","max_cols":30,"warm_start":"w.oasis"}"#;
+    let (status, j) = request(addr, "POST", "/sessions", bad_kernel);
+    assert_eq!(status, 400, "{j}");
 
     stop_server(addr, join);
     std::fs::remove_dir_all(&root).ok();

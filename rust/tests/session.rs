@@ -4,7 +4,12 @@
 //! finished sessions must resume (extend, not restart).
 
 use oasis::data::generators::two_moons;
+use oasis::engine::{
+    self, DatasetSpec, KernelSpec, Method, MethodSpec, RunSpec, SessionBuilder,
+    WarmStartSpec,
+};
 use oasis::kernels::Gaussian;
+use oasis::nystrom::{Provenance, StoredArtifact};
 use oasis::sampling::{
     oasis::{Oasis, Variant},
     run_to_completion, ImplicitOracle, SamplerSession, StepOutcome, StopReason,
@@ -240,6 +245,129 @@ fn composed_deadline_and_error_target_under_stepped_execution() {
     assert_eq!(reason3, StopReason::ErrorTargetMet);
     assert_eq!(s2.k(), s.k());
     assert_eq!(s2.indices(), s.indices());
+}
+
+/// The engine spec for a plain oASIS run over a generator dataset.
+fn oasis_spec(n: usize, cols: usize, warm: Option<WarmStartSpec>) -> RunSpec {
+    RunSpec {
+        dataset: DatasetSpec::Generator {
+            name: "two-moons".into(),
+            n,
+            seed: 42,
+            noise: 0.05,
+            dim: 0,
+        },
+        kernel: KernelSpec::Gaussian { sigma: None, sigma_fraction: 0.05 },
+        method: MethodSpec {
+            method: Method::Oasis,
+            max_cols: cols,
+            init_cols: 5,
+            tol: 1e-12,
+            seed: 7,
+            batch: 10,
+            workers: 1,
+        },
+        stopping: engine::stopping_rule(cols, None, None),
+        shard_reads: false,
+        warm_start: warm,
+    }
+}
+
+/// FRONT-END PARITY: the same `RunSpec` resolved through the engine (the
+/// CLI's path) selects the bit-identical sequence — and assembles the
+/// bit-identical factors — as a hand-wired dataset → kernel → oracle →
+/// session pipeline with the same parameters.
+#[test]
+fn engine_resolved_spec_matches_hand_built_session() {
+    let run = SessionBuilder::new().resolve(oasis_spec(400, 60, None)).unwrap();
+    let slot = run.oracle_slot();
+    let mut s = run.open_session(&slot).unwrap();
+    run_to_completion(s.as_mut(), &run.stopping).unwrap();
+    let via_engine = s.snapshot().unwrap();
+
+    let ds = two_moons(400, 0.05, 42);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.05);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+    let mut hand = Oasis::new(60, 5, 1e-12, 7).session(&oracle).unwrap();
+    run_to_completion(&mut hand, &StoppingRule::budget(60)).unwrap();
+    let reference = hand.snapshot().unwrap();
+
+    assert_eq!(via_engine.indices, reference.indices, "selection diverged");
+    assert_eq!(via_engine.c.data, reference.c.data, "C diverged");
+    assert_eq!(via_engine.winv.data, reference.winv.data, "W⁻¹ diverged");
+}
+
+/// WARM START ≡ PREFIX RESUME: saving a 20-column prefix as an artifact
+/// and warm-starting a fresh spec from it continues bit-identically to
+/// the uninterrupted 40-column run — the engine's warm replay exactly
+/// reconstructs the recording session's state.
+#[test]
+fn warm_start_from_artifact_equals_prefix_resume() {
+    let dir = std::env::temp_dir()
+        .join("oasis-engine-warm-test")
+        .join(format!("r{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // uninterrupted reference to 40
+    let run = SessionBuilder::new().resolve(oasis_spec(300, 40, None)).unwrap();
+    let slot = run.oracle_slot();
+    let mut s = run.open_session(&slot).unwrap();
+    run_to_completion(s.as_mut(), &run.stopping).unwrap();
+    let reference = s.snapshot().unwrap();
+
+    // prefix run to 20, saved as an artifact
+    let run2 = SessionBuilder::new().resolve(oasis_spec(300, 20, None)).unwrap();
+    let slot2 = run2.oracle_slot();
+    let mut s2 = run2.open_session(&slot2).unwrap();
+    run_to_completion(s2.as_mut(), &run2.stopping).unwrap();
+    let artifact = StoredArtifact::from_parts(
+        s2.snapshot().unwrap(),
+        run2.dataset().unwrap(),
+        &*run2.kernel,
+        Provenance { source: run2.source.clone(), method: "oASIS".into() },
+        None,
+    )
+    .unwrap();
+    let path = dir.join("prefix.oasis");
+    artifact.save(&path).unwrap();
+
+    // warm-start a third run from the artifact and continue to 40
+    let warm = Some(WarmStartSpec {
+        label: "prefix.oasis".into(),
+        path: path.clone(),
+    });
+    let run3 = SessionBuilder::new().resolve(oasis_spec(300, 40, warm)).unwrap();
+    let slot3 = run3.oracle_slot();
+    let mut s3 = run3.open_session(&slot3).unwrap();
+    assert_eq!(s3.k(), 20, "warm session resumes at the stored k");
+    assert_eq!(s3.indices(), &reference.indices[..20]);
+    run_to_completion(s3.as_mut(), &run3.stopping).unwrap();
+    let warmed = s3.snapshot().unwrap();
+    assert_eq!(warmed.indices, reference.indices, "selection diverged");
+    assert_eq!(warmed.c.data, reference.c.data, "C diverged");
+    assert_eq!(warmed.winv.data, reference.winv.data, "W⁻¹ diverged");
+
+    // a mismatched kernel is refused at resolve time — resuming under a
+    // different kernel would make every replayed Δ meaningless
+    let mut bad = oasis_spec(
+        300,
+        40,
+        Some(WarmStartSpec { label: "prefix.oasis".into(), path: path.clone() }),
+    );
+    bad.kernel = KernelSpec::Gaussian { sigma: Some(0.9), sigma_fraction: 0.05 };
+    let err = SessionBuilder::new().resolve(bad).unwrap_err();
+    assert!(format!("{err}").contains("mismatch"), "{err}");
+    // …and so is a mismatched dataset size
+    let mut bad_n = oasis_spec(
+        280,
+        40,
+        Some(WarmStartSpec { label: "prefix.oasis".into(), path }),
+    );
+    bad_n.kernel = KernelSpec::Gaussian { sigma: Some(0.9), sigma_fraction: 0.05 };
+    let err = SessionBuilder::new().resolve(bad_n).unwrap_err();
+    assert!(format!("{err}").contains("n = "), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// `ScoreBelow` as an external criterion stops a run that the internal

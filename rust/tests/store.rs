@@ -210,3 +210,45 @@ fn binary_file_shards_feed_oasis_p_blocks() {
     }
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// Artifact saves are atomic: re-saving renames over the existing file
+/// (readers racing a save can never observe a truncated artifact), no
+/// temp files are left behind, and a save into a directory that does not
+/// exist is a clean error that leaves nothing on disk.
+#[test]
+fn artifact_save_is_atomic() {
+    let dir = tmp_dir("atomic-save");
+    let ds = two_moons(120, 0.05, 9);
+    let (approx, kernel) = run_oasis(&ds, 20);
+    let artifact = StoredArtifact::from_parts(
+        approx,
+        &ds,
+        &kernel,
+        Provenance { source: "generator:two-moons".into(), method: "oASIS".into() },
+        None,
+    )
+    .unwrap();
+
+    let path = dir.join("model.oasis");
+    artifact.save(&path).unwrap();
+    // overwrite in place: the rename replaces the old file atomically
+    let bytes = artifact.save(&path).unwrap();
+    assert_eq!(std::fs::metadata(&path).unwrap().len(), bytes as u64);
+    let back = StoredArtifact::load(&path).unwrap();
+    assert_eq!(back.approx.indices, artifact.approx.indices);
+
+    // no temp residue in the destination directory
+    let stray: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".tmp"))
+        .collect();
+    assert!(stray.is_empty(), "stray temp files: {stray:?}");
+
+    // missing directory: clean error, nothing created
+    let absent = dir.join("absent-dir").join("model.oasis");
+    assert!(artifact.save(&absent).is_err());
+    assert!(!absent.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
