@@ -1,0 +1,84 @@
+//! The downstream-task pipeline end to end: **sample → save → fit →
+//! predict**. A stepwise oASIS session approximates a labeled dataset,
+//! the factorization is persisted, a Nyström KRR model is fit from the
+//! artifact's rank-k factors (O(nk²), never forming the n×n kernel
+//! matrix), attached to the artifact, and finally reloaded in a
+//! "serving process" that predicts for unseen points with **neither the
+//! dataset nor the labels** — only the k selected points stored in the
+//! artifact. The same flow runs as `oasis task --task krr` on the CLI
+//! and `POST /artifacts/{name}/task` on the server.
+//!
+//!     cargo run --release --example krr_pipeline
+
+use oasis::data::generators::two_moons;
+use oasis::kernels::Gaussian;
+use oasis::nystrom::{Provenance, StoredArtifact};
+use oasis::sampling::{
+    oasis::Oasis, run_to_completion, ImplicitOracle, SamplerSession,
+    StoppingRule,
+};
+use oasis::tasks::{FittedTask, TaskConfig, TaskKind, TaskPrediction};
+
+fn main() -> oasis::Result<()> {
+    let dir = std::env::temp_dir().join("oasis-krr-example");
+    std::fs::create_dir_all(&dir)?;
+    let model_path = dir.join("moons-krr.oasis");
+
+    // 1. SAMPLE — a labeled dataset (moon membership alternates with the
+    //    index in this generator) approximated by a stepwise session
+    let n = 800;
+    let ds = two_moons(n, 0.05, 42);
+    let labels: Vec<f64> = (0..n).map(|i| (i % 2) as f64).collect();
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.1);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+    let mut session = Oasis::new(90, 10, 1e-12, 7).session(&oracle)?;
+    run_to_completion(&mut session, &StoppingRule::budget(90))?;
+    let approx = session.snapshot()?;
+    println!("sampled k = {} of n = {n} columns", approx.k());
+
+    // 2. FIT — Nyström KRR dual weights from the rank-k factors; the
+    //    model lives entirely in the k-dimensional landmark space
+    let mut cfg = TaskConfig::new(TaskKind::Krr);
+    cfg.ridge = 1e-3;
+    cfg.labels = Some(labels);
+    let fit = FittedTask::fit(&approx, &cfg)?;
+    if let FittedTask::Krr(m) = &fit.model {
+        println!("fit krr: ridge = {:e}, train rmse = {:.3e}", m.lambda, m.train_rmse);
+    }
+
+    // 3. SAVE — factors, selected points, kernel params, and the fitted
+    //    model travel together in one checksummed artifact
+    let artifact = StoredArtifact::from_parts(
+        approx,
+        &ds,
+        &kernel,
+        Provenance { source: "generator:two-moons".into(), method: "oASIS".into() },
+        session.error_estimate(),
+    )?
+    .with_task(fit.model)?;
+    let bytes = artifact.save(&model_path)?;
+    println!("saved {} ({bytes} bytes, incl. task section)", model_path.display());
+
+    // 4. PREDICT — a fresh process: no dataset, no labels, no oracle.
+    //    Each prediction evaluates the kernel against the k stored
+    //    selected points only: f(z) = b(z)ᵀ β.
+    let loaded = StoredArtifact::load(&model_path)?;
+    let stored_model = loaded.task.as_ref().expect("artifact carries the model");
+    let stored_kernel = loaded.kernel.build();
+    let queries =
+        vec![vec![0.1, 0.4], vec![1.0, -0.45], vec![-0.9, 0.3], vec![1.9, 0.2]];
+    let preds = stored_model.predict(
+        &*stored_kernel,
+        &loaded.selected_points,
+        &queries,
+    )?;
+    if let TaskPrediction::Values(vs) = &preds {
+        for (z, f) in queries.iter().zip(vs) {
+            let class = if *f > 0.5 { 1 } else { 0 };
+            println!("f({z:?}) = {f:+.4}  → moon {class}");
+        }
+    }
+
+    std::fs::remove_file(&model_path).ok();
+    Ok(())
+}

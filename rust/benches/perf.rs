@@ -6,6 +6,9 @@
 //!               selection throughput for both variants.
 //!   Methods   : per-method wall-ms / k / est. error on one workload
 //!               (the CI bench-smoke trajectory, written to --json).
+//!   Tasks     : per-method downstream quality — KRR held-out error and
+//!               spectral-clustering accuracy on labeled two-moons (the
+//!               BENCH_*.json downstream-accuracy trajectory).
 //!   Runtime   : PJRT delta artifact execution vs native Δ sweep.
 //!
 //!     cargo bench --bench perf                         # full sizes
@@ -13,7 +16,8 @@
 //!
 //! `--quick` shrinks problem sizes and repetitions to CI scale;
 //! `--json PATH` additionally writes every result as one JSON document
-//! (`{"micro": […], "methods": […]}`) for the workflow artifact.
+//! (`{"micro": […], "methods": […], "tasks": […]}`) for the workflow
+//! artifact.
 
 use oasis::bench_support::{bench, BenchConfig, BenchResult};
 use oasis::data::generators::two_moons;
@@ -28,6 +32,8 @@ use oasis::sampling::{
     sis::Sis,
     ColumnSampler, ImplicitOracle,
 };
+use oasis::seed::permutation_accuracy;
+use oasis::tasks::{FittedTask, TaskConfig, TaskKind, TaskPrediction};
 use oasis::util::args::Args;
 use oasis::util::json::Json;
 
@@ -215,6 +221,86 @@ fn main() {
         ]));
     }
 
+    // downstream-task quality per sampling method (the tasks layer):
+    // KRR held-out error and spectral-clustering accuracy on a labeled
+    // two-moons workload — BENCH_*.json's downstream-accuracy trajectory
+    let (tq_n, tq_cols) = if quick { (500, 32) } else { (1_500, 64) };
+    println!("\n== downstream-task quality (n={tq_n}, ℓ={tq_cols}) ==");
+    let train = two_moons(tq_n, 0.06, 23);
+    let truth: Vec<usize> = (0..tq_n).map(|i| i % 2).collect();
+    let labels: Vec<f64> = truth.iter().map(|&t| t as f64).collect();
+    // held-out points from the same distribution (fresh noise seed)
+    let test = two_moons(tq_n, 0.06, 24);
+    let test_points: Vec<Vec<f64>> =
+        (0..test.n()).map(|i| test.point(i).to_vec()).collect();
+    let test_truth: Vec<f64> = (0..test.n()).map(|i| (i % 2) as f64).collect();
+    let tkern = Gaussian::with_sigma_fraction(&train, 0.1);
+    let toracle = ImplicitOracle::new(&train, &tkern);
+    let task_samplers: Vec<Box<dyn ColumnSampler>> = vec![
+        Box::new(Oasis::new(tq_cols, 10, 1e-12, 7)),
+        Box::new(Sis::new(tq_cols, 10, 1e-12, 7)),
+        Box::new(IncompleteCholesky::new(tq_cols, 1e-12)),
+        Box::new(Farahat::new(tq_cols)),
+        Box::new(AdaptiveRandom::new(tq_cols, 10, 7)),
+    ];
+    let mut tasks_quality = Vec::new();
+    for sampler in task_samplers {
+        let approx = sampler.sample(&toracle).expect("sampler runs");
+        let selected = train.select(&approx.indices);
+        // KRR: fit on the training labels, score on the held-out set
+        let krr = {
+            let mut cfg = TaskConfig::new(TaskKind::Krr);
+            cfg.labels = Some(labels.clone());
+            FittedTask::fit(&approx, &cfg).expect("krr fit")
+        };
+        let preds = match krr
+            .model
+            .predict(&tkern, &selected, &test_points)
+            .expect("krr predict")
+        {
+            TaskPrediction::Values(v) => v,
+            other => panic!("krr produced {other:?}"),
+        };
+        let mut sse = 0.0;
+        let mut misclassified = 0usize;
+        for (p, want) in preds.iter().zip(&test_truth) {
+            sse += (p - want) * (p - want);
+            if (*p > 0.5) != (*want > 0.5) {
+                misclassified += 1;
+            }
+        }
+        let krr_rmse = (sse / preds.len() as f64).sqrt();
+        let krr_err = misclassified as f64 / preds.len() as f64;
+        // spectral clustering: in-sample accuracy vs the moon labels
+        let cluster = {
+            let mut cfg = TaskConfig::new(TaskKind::Cluster);
+            cfg.clusters = 2;
+            cfg.components = 2;
+            FittedTask::fit(&approx, &cfg).expect("cluster fit")
+        };
+        let cluster_acc = permutation_accuracy(
+            cluster.cluster_labels.as_ref().expect("in-sample labels"),
+            &truth,
+            2,
+        );
+        println!(
+            "{:16} k={:<4} krr_test_rmse={:.3e} krr_test_err={:.3} \
+             cluster_acc={:.3}",
+            sampler.name(),
+            approx.k(),
+            krr_rmse,
+            krr_err,
+            cluster_acc
+        );
+        tasks_quality.push(Json::obj(vec![
+            ("method", Json::Str(sampler.name().to_string())),
+            ("k", Json::Num(approx.k() as f64)),
+            ("krr_test_rmse", Json::Num(krr_rmse)),
+            ("krr_test_err", Json::Num(krr_err)),
+            ("cluster_acc", Json::Num(cluster_acc)),
+        ]));
+    }
+
     // one JSON document for the CI workflow artifact
     if let Some(path) = args.get("json") {
         let doc = Json::obj(vec![
@@ -238,6 +324,7 @@ fn main() {
                 ),
             ),
             ("methods", Json::Arr(methods)),
+            ("tasks", Json::Arr(tasks_quality)),
         ]);
         std::fs::write(path, format!("{doc}\n")).expect("write --json file");
         println!("\nwrote {path}");

@@ -10,7 +10,10 @@
 //! caller's stack, then [`ResolvedRun::open_session`] builds the session
 //! against it — the same shape the server's actor threads already use.
 
-use super::spec::{DatasetSpec, KernelSpec, Method, MethodSpec, RunSpec, WarmStartSpec};
+use super::spec::{
+    DatasetSpec, KernelSpec, LabelsSpec, Method, MethodSpec, RunSpec, TaskSpec,
+    WarmStartSpec,
+};
 use crate::coordinator::{OasisPConfig, OasisPSession, ShardPlan};
 use crate::data::{loader, Dataset, LoadLimits};
 use crate::kernels::Kernel;
@@ -110,6 +113,44 @@ impl SessionBuilder {
             limits: self.limits,
         })
     }
+
+    /// Resolve a [`TaskSpec`] into a validated
+    /// [`tasks::TaskConfig`](crate::tasks::TaskConfig): load the label
+    /// file (under this builder's dataset caps — labels are data too),
+    /// pick the label column, and validate the task parameters. The
+    /// returned config fits against any approximation via
+    /// [`FittedTask::fit`](crate::tasks::FittedTask::fit).
+    pub fn resolve_task(&self, spec: &TaskSpec) -> Result<crate::tasks::TaskConfig> {
+        let labels = match &spec.labels {
+            None => None,
+            Some(ls) => Some(self.load_labels(ls)?),
+        };
+        let cfg = crate::tasks::TaskConfig {
+            kind: spec.kind,
+            ridge: spec.ridge,
+            components: spec.components,
+            clusters: spec.clusters,
+            seed: spec.seed,
+            labels,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load one column of a CSV/binary dataset file as labels.
+    fn load_labels(&self, ls: &LabelsSpec) -> Result<Vec<f64>> {
+        let ds = loader::load_dataset(&ls.path, &self.limits)
+            .map_err(|e| e.wrap(format!("loading labels '{}'", ls.label)))?;
+        if ls.col >= ds.dim() {
+            bail!(
+                "labels '{}': column {} requested but the file has {} columns",
+                ls.label,
+                ls.col,
+                ds.dim()
+            );
+        }
+        Ok((0..ds.n()).map(|i| ds.point(i)[ls.col]).collect())
+    }
 }
 
 /// Load the warm-start artifact and verify it describes *this* run —
@@ -121,9 +162,9 @@ fn resolve_warm(
     kernel: &dyn Kernel,
     method: &MethodSpec,
 ) -> Result<WarmStart> {
-    if method.method != Method::Oasis {
+    if !matches!(method.method, Method::Oasis | Method::Sis) {
         bail!(
-            "warm_start resumes the 'oasis' method only (got '{}')",
+            "warm_start resumes the 'oasis' and 'sis' methods only (got '{}')",
             method.method.as_str()
         );
     }
@@ -306,12 +347,28 @@ impl ResolvedRun {
     ) -> Result<Box<dyn SamplerSession + 'a>> {
         let m = &self.method;
         if let Some(w) = &self.warm {
-            // resolve() restricts warm starts to the oasis method
+            // resolve() restricts warm starts to the oasis/sis methods
             let oracle = self.need_oracle(slot)?;
-            let s = Oasis::new(m.max_cols, m.init_cols, m.tol, m.seed)
-                .session_from_indices(oracle, &w.indices)
-                .map_err(|e| e.wrap(format!("warm start from '{}'", w.label)))?;
-            return Ok(boxed(s));
+            let wrap = |e: crate::error::Error| {
+                e.wrap(format!("warm start from '{}'", w.label))
+            };
+            return Ok(match m.method {
+                Method::Oasis => boxed(
+                    Oasis::new(m.max_cols, m.init_cols, m.tol, m.seed)
+                        .session_from_indices(oracle, &w.indices)
+                        .map_err(wrap)?,
+                ),
+                Method::Sis => boxed(
+                    Sis::new(m.max_cols, m.init_cols, m.tol, m.seed)
+                        .session_from_indices(oracle, &w.indices)
+                        .map_err(wrap)?,
+                ),
+                other => bail!(
+                    "warm_start resumes the 'oasis' and 'sis' methods only \
+                     (got '{}')",
+                    other.as_str()
+                ),
+            });
         }
         Ok(match m.method {
             Method::Oasis => boxed(

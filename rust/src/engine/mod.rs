@@ -75,6 +75,6 @@ pub mod spec;
 
 pub use builder::{OracleSlot, ResolvedRun, RunData, SessionBuilder, WarmStart};
 pub use spec::{
-    stopping_rule, DatasetSpec, KernelSpec, Method, MethodSpec, RunSpec,
-    WarmStartSpec,
+    stopping_rule, DatasetSpec, KernelSpec, LabelsSpec, Method, MethodSpec,
+    RunSpec, TaskSpec, WarmStartSpec,
 };

@@ -13,6 +13,7 @@
 use crate::data::{generators, loader, Dataset, LoadLimits};
 use crate::kernels::{Gaussian, Kernel, Laplacian, Linear, Polynomial};
 use crate::sampling::{StoppingCriterion, StoppingRule};
+use crate::tasks::TaskKind;
 use crate::Result;
 use crate::{anyhow, bail};
 use std::path::PathBuf;
@@ -230,6 +231,59 @@ pub struct RunSpec {
     /// materializes the dataset (Algorithm 2's distributed-data setting).
     pub shard_reads: bool,
     pub warm_start: Option<WarmStartSpec>,
+}
+
+/// Where a task's training labels come from: a column of a CSV or
+/// binary dataset file (one label per data point, same row order as the
+/// training data). `label` is the caller's spelling (for errors and
+/// provenance); `path` is where the bytes live — the serving layer
+/// resolves it under `--fs-root` like every other client path.
+#[derive(Clone, Debug)]
+pub struct LabelsSpec {
+    pub label: String,
+    pub path: PathBuf,
+    /// Column of the file to read labels from.
+    pub col: usize,
+}
+
+/// A downstream task *as data* — which task, its parameters, and where
+/// any labels come from. Resolved by
+/// [`SessionBuilder::resolve_task`](super::SessionBuilder::resolve_task)
+/// into a [`tasks::TaskConfig`](crate::tasks::TaskConfig) (labels
+/// loaded, parameters validated), which then fits against any
+/// approximation: a live session snapshot, a finished run, or a loaded
+/// artifact — dataset-free in the artifact case. The CLI builds this
+/// from `oasis task` flags; the server parses it from the task-endpoint
+/// JSON; tests construct it directly.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub kind: TaskKind,
+    /// Ridge λ (KRR).
+    pub ridge: f64,
+    /// Embedding dimensions (KPCA / cluster embedding).
+    pub components: usize,
+    /// Cluster count (cluster task).
+    pub clusters: usize,
+    /// K-means seeding RNG (cluster task).
+    pub seed: u64,
+    pub labels: Option<LabelsSpec>,
+}
+
+impl TaskSpec {
+    /// A spec with the shared CLI/server defaults for `kind`. Callers
+    /// that change `clusters` should also refresh `components` via
+    /// [`TaskKind::default_components`] (the front ends do) — the
+    /// cluster task defaults to one embedding dimension per cluster.
+    pub fn new(kind: TaskKind) -> TaskSpec {
+        TaskSpec {
+            kind,
+            ridge: 1e-3,
+            components: 2,
+            clusters: 2,
+            seed: 7,
+            labels: None,
+        }
+    }
 }
 
 /// The shared CLI/run-spec stopping rule: `target_err` and `deadline_ms`

@@ -9,9 +9,10 @@
 //!   ([`coordinator`]), every baseline sampler the paper compares against
 //!   ([`sampling`]), Nyström assembly and error estimation ([`nystrom`]),
 //!   dataset generators ([`data`]), dense linear algebra ([`linalg`]),
-//!   and the spec-driven run pipeline ([`engine`]) that the CLI, the
+//!   the spec-driven run pipeline ([`engine`]) that the CLI, the
 //!   HTTP server ([`server`]) and the coordinator all resolve their runs
-//!   through.
+//!   through, and the downstream-task layer ([`tasks`]) that turns an
+//!   approximation into regression, embedding, and clustering answers.
 //! * **L2/L1 (python/, build time only)** — the per-iteration compute graph
 //!   (Δ-scoring, Gaussian kernel columns, Eq. 5/6 rank-1 updates) written in
 //!   JAX calling Pallas kernels, AOT-lowered to HLO text artifacts.
@@ -106,6 +107,48 @@
 //!
 //! `examples/persist_and_query.rs` drives the same round trip in Rust.
 //!
+//! ## Quickstart: downstream tasks
+//!
+//! An approximation is a means, not an end: the [`tasks`] layer runs
+//! the workloads the paper motivates — kernel ridge regression
+//! ([`tasks::krr`]), kernel PCA ([`tasks::kpca`]), and spectral
+//! clustering ([`tasks::cluster`]) — directly on the rank-k factors in
+//! O(nk²), never materializing the n×n matrix. Models live in the
+//! k-dimensional landmark space, so prediction is dataset-free: a
+//! loaded artifact (optionally carrying the fitted model in its `task`
+//! section) answers with only its k stored points.
+//!
+//! ```no_run
+//! use oasis::data::generators::two_moons;
+//! use oasis::kernels::Gaussian;
+//! use oasis::sampling::oasis::Oasis;
+//! use oasis::sampling::{run_to_completion, ImplicitOracle, SamplerSession, StoppingRule};
+//! use oasis::tasks::{FittedTask, TaskConfig, TaskKind};
+//!
+//! let ds = two_moons(2_000, 0.05, 42);
+//! let kernel = Gaussian::with_sigma_fraction(&ds, 0.1);
+//! let oracle = ImplicitOracle::new(&ds, &kernel);
+//! let mut session = Oasis::new(200, 10, 1e-12, 7).session(&oracle).unwrap();
+//! run_to_completion(&mut session, &StoppingRule::budget(200)).unwrap();
+//! let approx = session.snapshot().unwrap();
+//!
+//! let mut cfg = TaskConfig::new(TaskKind::Krr);
+//! cfg.labels = Some((0..2_000).map(|i| (i % 2) as f64).collect());
+//! let fit = FittedTask::fit(&approx, &cfg).unwrap();
+//! let selected = ds.select(&approx.indices);
+//! let pred = fit.model.predict(&kernel, &selected, &[vec![0.5, 0.2]]).unwrap();
+//! println!("{pred:?}");
+//! ```
+//!
+//! ```bash
+//! oasis task --task krr --data train.csv --labels y.csv --cols 200 \
+//!     --save model.oasis                       # sample → fit → save
+//! oasis task --task krr --load model.oasis --predict new.csv   # no labels
+//! # …or over HTTP: POST /sessions/{name}/task, POST /artifacts/{name}/task
+//! ```
+//!
+//! `examples/krr_pipeline.rs` drives sample → save → fit → predict.
+//!
 //! ## Quickstart: spec-driven runs
 //!
 //! Every front end resolves its runs through the same [`engine`] layer:
@@ -132,6 +175,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod seed;
 pub mod server;
+pub mod tasks;
 pub mod util;
 
 /// Crate-wide result type.

@@ -257,6 +257,16 @@ impl SymEig {
     }
 }
 
+/// Symmetric PSD square root `A^{1/2} = V diag(λ₊^{1/2}) Vᵀ`, clamping
+/// tiny negative eigenvalues (from pseudo-inverses) to zero. Shared by
+/// the Nyström eigendecomposition ([`crate::nystrom::nystrom_eig`]) and
+/// the downstream-task fits ([`crate::tasks`]), both of which split
+/// `G̃ = C W⁺ Cᵀ` into the factor form `B Bᵀ` with `B = C (W⁺)^{1/2}`.
+pub fn psd_sqrt(a: &Mat) -> Mat {
+    let eig = sym_eig(a);
+    eig.apply_spectral(|l| l.max(0.0).sqrt())
+}
+
 /// Moore–Penrose pseudo-inverse of a symmetric PSD matrix, with relative
 /// eigenvalue cutoff `rcond` (eigenvalues ≤ rcond·λmax are treated as zero).
 pub fn pinv_psd(a: &Mat, rcond: f64) -> Mat {
@@ -322,6 +332,22 @@ mod tests {
         let e = sym_eig(&a);
         assert!((e.vals[0] - 3.0).abs() < 1e-12);
         assert!((e.vals[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn psd_sqrt_squares_back() {
+        // PSD with a zero eigenvalue: sqrt² must reproduce A
+        let x = [1.0, 2.0, 3.0];
+        let mut a = Mat::from_fn(3, 3, |i, j| x[i] * x[j]);
+        *a.at_mut(0, 0) += 2.0;
+        *a.at_mut(1, 1) += 2.0;
+        *a.at_mut(2, 2) += 2.0;
+        let r = psd_sqrt(&a);
+        assert!(r.matmul(&r).fro_dist(&a) < 1e-9 * (1.0 + a.fro_norm()));
+        // exactly symmetric inputs with negative noise clamp cleanly
+        let rank1 = Mat::from_fn(3, 3, |i, j| x[i] * x[j]);
+        let r1 = psd_sqrt(&rank1);
+        assert!(r1.matmul(&r1).fro_dist(&rank1) < 1e-8 * rank1.fro_norm());
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod matrix;
 pub mod qr;
 
 pub use chol::Cholesky;
-pub use eig::{pinv_psd, sym_eig, SymEig};
+pub use eig::{pinv_psd, psd_sqrt, sym_eig, SymEig};
 pub use lu::{inverse, solve as lu_solve};
 pub use matrix::Mat;
 pub use qr::thin_qr;

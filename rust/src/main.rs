@@ -5,6 +5,9 @@
 //!                (optionally save the result as a stored artifact)
 //!   query        answer out-of-sample extensions from a stored artifact
 //!                without the original dataset or kernel oracle
+//!   task         fit and run a downstream task (KRR, kernel PCA,
+//!                spectral clustering) on an approximation — from a
+//!                fresh run or a stored artifact (dataset-free)
 //!   parallel     run the distributed oASIS-P coordinator
 //!   serve        host concurrent resumable sessions over HTTP/JSON
 //!   info         show the artifact manifest and PJRT platform
@@ -13,14 +16,15 @@
 //!   oasis approximate --dataset two-moons --n 2000 --cols 450 --method oasis
 //!   oasis approximate --data points.csv --cols 100 --save model.oasis
 //!   oasis query --load model.oasis --points "0.5,0.2;1.0,-0.3" --targets 0,5
+//!   oasis task --task krr --load model.oasis --labels y.csv --predict new.csv
 //!   oasis parallel --dataset two-moons --n 100000 --cols 500 --workers 8
 //!   oasis serve --port 7437 --fs-root .
 //!   oasis info
 
 use oasis::data::{Dataset, LoadLimits};
 use oasis::engine::{
-    self, DatasetSpec, KernelSpec, Method, MethodSpec, ResolvedRun, RunSpec,
-    SessionBuilder, WarmStartSpec,
+    self, DatasetSpec, KernelSpec, LabelsSpec, Method, MethodSpec, ResolvedRun,
+    RunSpec, SessionBuilder, TaskSpec, WarmStartSpec,
 };
 use oasis::nystrom::{
     relative_frobenius_error, sampled_relative_error, NystromApprox,
@@ -28,6 +32,7 @@ use oasis::nystrom::{
 };
 use oasis::runtime::{Accel, Manifest};
 use oasis::sampling::{run_to_completion, SamplerSession, StopReason};
+use oasis::tasks::{FittedTask, TaskKind};
 use oasis::util::args::Args;
 use oasis::util::json::Json;
 use oasis::util::timing::fmt_secs;
@@ -39,6 +44,7 @@ fn main() {
     let code = match cmd {
         "approximate" => cmd_approximate(&args),
         "query" => cmd_query(&args),
+        "task" => cmd_task(&args),
         "parallel" => cmd_parallel(&args),
         "seed" => cmd_seed(&args),
         "serve" => cmd_serve(&args),
@@ -64,6 +70,11 @@ fn print_help() {
            --save      write the finished approximation as a stored\n\
                        artifact (indices, factors, selected points,\n\
                        kernel — see oasis::nystrom::store)\n\
+           --save-f32  with --save: encode the C/W⁻¹ factor payload as\n\
+                       f32 (about half the bytes; lossy — reloaded\n\
+                       factors, extension queries, and task fits then\n\
+                       carry f32 precision. Selected points stay f64,\n\
+                       so warm starts still verify exactly)\n\
            --n         dataset size (default 2000)\n\
            --cols      columns to sample ℓ (default 450)\n\
            --method    oasis|sis|farahat|icd|adaptive-random|oasis-p|\n\
@@ -74,9 +85,10 @@ fn print_help() {
            --error     full|sampled (default full for n ≤ 8000)\n\
            --seed      RNG seed (default 7)\n\
            --resume-from  warm-start selection from a stored artifact's\n\
-                       Λ (oasis method; the artifact's dataset/kernel\n\
-                       must match this run's — checked; bit-exact resume\n\
-                       additionally needs the original run's init_cols)\n\
+                       Λ (oasis and sis methods; the artifact's dataset/\n\
+                       kernel must match this run's — checked; bit-exact\n\
+                       resume additionally needs the original run's\n\
+                       init_cols)\n\
            --accel     use the PJRT artifact path for oASIS scoring\n\
            --target-err  stop once the estimated relative error reaches\n\
                          this (oasis/farahat; may stop before --cols)\n\
@@ -90,6 +102,26 @@ fn print_help() {
                        server's POST /sessions/{{name}}/save (required)\n\
            --points    query points \"x,y;x,y;…\" (omit for a summary)\n\
            --targets   row indices i to evaluate ĝ(z, i) at, \"0,5,11\"\n\
+           --json      structured one-line JSON output\n\
+         \n\
+         task options (downstream tasks on an approximation):\n\
+           --task      krr|kpca|cluster (default krr)\n\
+           --load      fit from a stored artifact — dataset-free; without\n\
+                       --labels, a krr model stored in the artifact is\n\
+                       reused as-is. Omit --load to run a fresh\n\
+                       approximation first (same flags as approximate)\n\
+           --labels    CSV/binary file with one training label per data\n\
+                       point (krr; --label-col picks the column, default 0)\n\
+           --ridge     krr regularization λ > 0 (default 1e-3)\n\
+           --components  embedding dimensions (kpca/cluster; default\n\
+                       2, cluster defaults to --clusters)\n\
+           --clusters  cluster count (cluster; default 2)\n\
+           --predict   CSV/binary file of query points to predict for\n\
+                       (krr value / kpca embedding / cluster label per\n\
+                       point — evaluates only the k selected points)\n\
+           --save      write the artifact back with the fitted task\n\
+                       model attached (versioned task section; a later\n\
+                       `oasis task --load` can predict without labels)\n\
            --json      structured one-line JSON output\n\
          \n\
          parallel options:\n\
@@ -372,6 +404,7 @@ fn cmd_approximate(args: &Args) -> i32 {
             },
             Some(err),
         )
+        .map(|artifact| artifact.with_f32(args.flag("save-f32")))
         .and_then(|artifact| artifact.save(Path::new(out)));
         match save {
             // stderr so `--json` stdout stays a single parseable line
@@ -499,6 +532,266 @@ fn cmd_query(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// The task spec the `oasis task` flags describe.
+fn task_spec(args: &Args) -> Result<TaskSpec, String> {
+    let kind = TaskKind::parse(&args.get_or("task", "krr"))
+        .map_err(|e| e.to_string())?;
+    let mut spec = TaskSpec::new(kind);
+    spec.ridge = args.f64_or("ridge", 1e-3);
+    spec.clusters = args.usize_or("clusters", 2);
+    spec.components =
+        args.usize_or("components", kind.default_components(spec.clusters));
+    spec.seed = args.u64_or("seed", 7);
+    if let Some(p) = args.get("labels") {
+        spec.labels = Some(LabelsSpec {
+            label: p.to_string(),
+            path: PathBuf::from(p),
+            col: args.usize_or("label-col", 0),
+        });
+    }
+    Ok(spec)
+}
+
+/// Report a fitted task and its predictions (JSON mirrors the server's
+/// task responses, so the rendered `"predictions"` arrays are
+/// byte-identical across front ends).
+fn report_task(
+    args: &Args,
+    model: &FittedTask,
+    cluster_sizes: Option<Vec<usize>>,
+    predictions: Option<&oasis::tasks::TaskPrediction>,
+) {
+    if args.flag("json") {
+        let mut fields = match model.summary_json() {
+            Json::Obj(m) => m,
+            _ => Default::default(),
+        };
+        if let Some(sizes) = cluster_sizes {
+            fields.insert(
+                "cluster_sizes".into(),
+                Json::Arr(sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
+            );
+        }
+        if let Some(p) = predictions {
+            fields.insert("predictions".into(), p.to_json());
+        }
+        println!("{}", Json::Obj(fields));
+        return;
+    }
+    match model {
+        FittedTask::Krr(m) => println!(
+            "task=krr k={} ridge={:e} train_rmse={:.6e}",
+            m.beta.len(),
+            m.lambda,
+            m.train_rmse
+        ),
+        FittedTask::Kpca(m) => {
+            let vals: Vec<String> =
+                m.vals.iter().map(|v| format!("{v:.4e}")).collect();
+            println!(
+                "task=kpca k={} components={} eigenvalues=[{}]",
+                m.proj.rows,
+                m.vals.len(),
+                vals.join(", ")
+            );
+        }
+        FittedTask::Cluster(m) => {
+            let sizes = cluster_sizes
+                .map(|s| format!(" sizes={s:?}"))
+                .unwrap_or_default();
+            println!(
+                "task=cluster k={} clusters={} components={}{}",
+                m.embedding.proj.rows,
+                m.centroids.rows,
+                m.embedding.vals.len(),
+                sizes
+            );
+        }
+    }
+    match predictions {
+        None => {}
+        Some(oasis::tasks::TaskPrediction::Values(vs)) => {
+            for (i, v) in vs.iter().enumerate() {
+                println!("point {i}: f(z)={v:.6e}");
+            }
+        }
+        Some(oasis::tasks::TaskPrediction::Embeddings(rows)) => {
+            for (i, r) in rows.iter().enumerate() {
+                let coords: Vec<String> =
+                    r.iter().map(|c| format!("{c:.6e}")).collect();
+                println!("point {i}: [{}]", coords.join(", "));
+            }
+        }
+        Some(oasis::tasks::TaskPrediction::Labels { labels, .. }) => {
+            for (i, l) in labels.iter().enumerate() {
+                println!("point {i}: cluster {l}");
+            }
+        }
+    }
+}
+
+/// Fit and run a downstream task — from a stored artifact (`--load`,
+/// dataset-free) or a fresh approximation run (approximate's flags).
+fn cmd_task(args: &Args) -> i32 {
+    let spec = match task_spec(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("task: {e}");
+            return 2;
+        }
+    };
+    // query points to predict for, loaded like any dataset file
+    let predict: Option<Vec<Vec<f64>>> = match args.get("predict") {
+        None => None,
+        Some(f) => {
+            match oasis::data::load_dataset(Path::new(f), &LoadLimits::unlimited())
+            {
+                Ok(ds) => Some(
+                    (0..ds.n()).map(|i| ds.point(i).to_vec()).collect(),
+                ),
+                Err(e) => {
+                    eprintln!("task: --predict {f}: {e}");
+                    return 2;
+                }
+            }
+        }
+    };
+
+    let result = if let Some(art_path) = args.get("load") {
+        task_from_artifact(args, &spec, art_path, predict.as_deref())
+    } else {
+        task_from_run(args, &spec, predict.as_deref())
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("task: {e}");
+            1
+        }
+    }
+}
+
+/// `oasis task --load ART`: fit (or reuse a stored model) from an
+/// artifact — no dataset, no oracle.
+fn task_from_artifact(
+    args: &Args,
+    spec: &TaskSpec,
+    art_path: &str,
+    predict: Option<&[Vec<f64>]>,
+) -> oasis::Result<()> {
+    let artifact = StoredArtifact::load(Path::new(art_path))?;
+    // Without labels, a krr request reuses the model stored in the
+    // artifact (the sample → save-with-task → predict pipeline);
+    // kpca/cluster always fit fresh — they need no labels.
+    let (model, cluster_sizes) = if spec.kind == TaskKind::Krr
+        && spec.labels.is_none()
+    {
+        match &artifact.task {
+            Some(m @ FittedTask::Krr(_)) => (m.clone(), None),
+            _ => oasis::bail!(
+                "krr needs --labels FILE (or an artifact saved with a fitted \
+                 krr model via `oasis task --save`)"
+            ),
+        }
+    } else {
+        let cfg = SessionBuilder::new().resolve_task(spec)?;
+        let fit = FittedTask::fit(&artifact.approx, &cfg)?;
+        let sizes = fit
+            .cluster_labels
+            .as_ref()
+            .map(|l| cluster_size_counts(l, spec.clusters));
+        (fit.model, sizes)
+    };
+    let kernel = artifact.kernel.build();
+    let predictions = match predict {
+        None => None,
+        Some(points) => {
+            Some(model.predict(&*kernel, &artifact.selected_points, points)?)
+        }
+    };
+    report_task(args, &model, cluster_sizes, predictions.as_ref());
+    if let Some(out) = args.get("save") {
+        let mut tasked = artifact.with_task(model)?;
+        if args.flag("save-f32") {
+            // otherwise keep the loaded artifact's own encoding
+            tasked = tasked.with_f32(true);
+        }
+        let bytes = tasked.save(Path::new(out))?;
+        eprintln!("saved artifact with task model to {out} ({bytes} bytes)");
+    }
+    Ok(())
+}
+
+/// `oasis task` without `--load`: run a fresh approximation (same flags
+/// as approximate) and fit on its final snapshot.
+fn task_from_run(
+    args: &Args,
+    spec: &TaskSpec,
+    predict: Option<&[Vec<f64>]>,
+) -> oasis::Result<()> {
+    let method = Method::parse(&args.get_or("method", "oasis"))?;
+    // resolve the task config (and load the labels file) *before* the
+    // potentially long sampling run — a typo'd labels path must fail
+    // now, not after minutes of selection
+    let cfg = SessionBuilder::new().resolve_task(spec)?;
+    let rspec = run_spec(args, method, 450).map_err(oasis::error::Error::msg)?;
+    let run = SessionBuilder::new().resolve(rspec)?;
+    let ds = run.dataset()?.clone();
+    let slot = run.oracle_slot();
+    let approx = if method.has_session() {
+        let mut s = run.open_session(&slot)?;
+        run_to_completion(s.as_mut(), &run.stopping)?;
+        s.snapshot()?
+    } else {
+        run.one_shot(&slot)?
+    };
+    if approx.indices.is_empty() {
+        oasis::bail!(
+            "method '{}' selects no data-point landmarks; tasks need a \
+             column-sampling method",
+            method.as_str()
+        );
+    }
+    let fit = FittedTask::fit(&approx, &cfg)?;
+    let sizes = fit
+        .cluster_labels
+        .as_ref()
+        .map(|l| cluster_size_counts(l, spec.clusters));
+    let selected = ds.select(&approx.indices);
+    let predictions = match predict {
+        None => None,
+        Some(points) => Some(fit.model.predict(&*run.kernel, &selected, points)?),
+    };
+    report_task(args, &fit.model, sizes, predictions.as_ref());
+    if let Some(out) = args.get("save") {
+        let artifact = StoredArtifact::from_parts(
+            approx,
+            &ds,
+            &*run.kernel,
+            Provenance {
+                source: dataset_label(args),
+                method: method.as_str().to_string(),
+            },
+            None,
+        )?
+        .with_f32(args.flag("save-f32"))
+        .with_task(fit.model)?;
+        let bytes = artifact.save(Path::new(out))?;
+        eprintln!("saved artifact with task model to {out} ({bytes} bytes)");
+    }
+    Ok(())
+}
+
+fn cluster_size_counts(labels: &[usize], clusters: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; clusters];
+    for &l in labels {
+        if l < clusters {
+            counts[l] += 1;
+        }
+    }
+    counts
 }
 
 /// Parse `"x,y;x,y;…"` into query points.

@@ -12,4 +12,4 @@ pub use approx::NystromApprox;
 pub use assembly::{approx_from_colmajor, IncrementalAssembler};
 pub use error::{relative_frobenius_error, sampled_relative_error};
 pub use store::{Provenance, StoredArtifact};
-pub use svd::nystrom_eig;
+pub use svd::{nystrom_eig, nystrom_factor};

@@ -11,15 +11,15 @@
 //! ([`KernelParams`]) is a complete, self-contained query server for the
 //! approximation — the other n−k points are never needed again.
 //!
-//! # On-disk format (version 1)
+//! # On-disk format (versions 1 and 2)
 //!
 //! ```text
 //! oasis-artifact\n                 ← ASCII magic line
 //! {…json header…}\n                ← one line, crate JSON (util::json)
-//! <binary payload>                 ← framed little-endian f64 sections
+//! <binary payload>                 ← framed little-endian sections
 //! ```
 //!
-//! Header fields: `version` (must be 1), `n`, `k`, `dim`, `indices`
+//! Header fields: `version` (1 or 2), `n`, `k`, `dim`, `indices`
 //! (array of k column indices in selection order), `kernel` (`{"type":
 //! …}` plus resolved numeric parameters), `provenance` (`{"source",
 //! "method"}` — where the data came from and which sampler selected Λ),
@@ -28,34 +28,56 @@
 //! digits).
 //!
 //! Payload sections, in order, each framed as `[u64 LE count][count ×
-//! f64 LE]` (see [`crate::util::framing`]):
+//! value LE]` (see [`crate::util::framing`]):
 //!
 //! 1. `C` — n×k, row-major
 //! 2. `W⁻¹` — k×k, row-major
-//! 3. selected points `Z_Λ` — k×dim, point-major
+//! 3. selected points `Z_Λ` — k×dim, point-major, always f64
+//!
+//! **Version 2** additions (a version-1 file is exactly the subset
+//! above; the loader reads both):
+//!
+//! * `"encoding": "f32"` — the `C` and `W⁻¹` sections hold f32 values
+//!   (`[u64 LE count][count × f32 LE]`), halving the payload for the
+//!   n×k bulk. The compaction is **lossy**: factors reload widened to
+//!   f64, so extension queries and task fits/predictions from an f32
+//!   artifact differ from the f64 original at f32 precision (~1e-7
+//!   relative). `Z_Λ` deliberately stays f64 — warm starts verify the
+//!   stored points bit-equal the dataset's, and the kernel row `b(z)`
+//!   keeps full precision either way.
+//! * `"task": {"type": "krr"|"kpca"|"cluster", …}` — a fitted
+//!   downstream model ([`crate::tasks::FittedTask`]), its numeric state
+//!   appended as additional **f64** sections after `Z_Λ`:
+//!   `krr` → `β` (k); `kpca` → eigenvalues (d), projection (k×d);
+//!   `cluster` → eigenvalues (d), projection (k×d), centroids (c×d).
+//!   Round-trips are bit-identical.
 //!
 //! Loads verify, in order: magic, header JSON, version, dimensional
 //! consistency (index count/ranges, section sizes), payload byte count,
 //! and checksum — so truncated, corrupted, or wrong-version files are
-//! rejected with a clear error before any value is used. All floats
-//! round-trip bit-exactly (binary f64 in the payload; the JSON header's
-//! numbers use the crate serializer's shortest-round-trip formatting).
+//! rejected with a clear error before any value is used. All f64
+//! payloads round-trip bit-exactly (the JSON header's numbers use the
+//! crate serializer's shortest-round-trip formatting).
 
 use crate::data::Dataset;
 use crate::kernels::{Kernel, KernelParams};
 use crate::linalg::Mat;
 use crate::nystrom::NystromApprox;
+use crate::tasks::{ClusterModel, FittedTask, KpcaModel, KrrModel};
 use crate::util::framing::{
-    checksum_hex, fnv1a64, parse_checksum_hex, push_f64_section,
-    split_magic_file, SectionReader,
+    checksum_hex, fnv1a64, parse_checksum_hex, push_f32_section,
+    push_f64_section, split_magic_file, SectionReader,
 };
 use crate::util::json::Json;
 use crate::Result;
 use crate::{anyhow, bail};
 use std::path::Path;
 
-/// Current artifact format version.
-pub const FORMAT_VERSION: usize = 1;
+/// Newest artifact format version this build writes (reads accept
+/// `1..=FORMAT_VERSION`). Version 1 files are written whenever neither
+/// v2 feature (f32 encoding, task section) is used, so plain artifacts
+/// stay readable by older builds.
+pub const FORMAT_VERSION: usize = 2;
 
 /// Magic line opening every artifact file (includes the newline).
 pub const MAGIC: &[u8] = b"oasis-artifact\n";
@@ -82,6 +104,13 @@ pub struct StoredArtifact {
     pub selected_points: Dataset,
     pub provenance: Provenance,
     pub error_estimate: Option<f64>,
+    /// Fitted downstream model riding along (version-2 `task` section).
+    pub task: Option<FittedTask>,
+    /// Encode `C`/`W⁻¹` as f32 on save (version-2 compaction; lossy —
+    /// see the module docs' precision caveat). Set by
+    /// [`with_f32`](Self::with_f32), or by the loader to whatever the
+    /// file used, so re-saving keeps the artifact's encoding.
+    pub f32_payload: bool,
 }
 
 impl StoredArtifact {
@@ -154,7 +183,58 @@ impl StoredArtifact {
             selected_points,
             provenance,
             error_estimate,
+            task: None,
+            f32_payload: false,
         })
+    }
+
+    /// Attach a fitted downstream model (persisted as the version-2
+    /// `task` section). The model must have been fit on this artifact's
+    /// factors — its landmark count k has to match.
+    pub fn with_task(mut self, task: FittedTask) -> Result<StoredArtifact> {
+        if task.k() != self.k() {
+            bail!(
+                "task model was fit with k = {} landmarks but the artifact \
+                 has k = {}",
+                task.k(),
+                self.k()
+            );
+        }
+        // header scalars travel through JSON numbers: non-finite values
+        // serialize as null and seeds past 2^53 lose bits — either would
+        // save an artifact that later fails to load (or lies about the
+        // fit), so refuse at attach time
+        match &task {
+            FittedTask::Krr(m) => {
+                if !(m.lambda.is_finite() && m.train_rmse.is_finite()) {
+                    bail!(
+                        "krr model has non-finite header scalars (lambda = \
+                         {}, train_rmse = {}) and is not storable",
+                        m.lambda,
+                        m.train_rmse
+                    );
+                }
+            }
+            FittedTask::Cluster(m) => {
+                if m.seed > (1u64 << 53) {
+                    bail!(
+                        "cluster seed {} exceeds 2^53 and cannot be stored \
+                         exactly — pick a smaller seed",
+                        m.seed
+                    );
+                }
+            }
+            FittedTask::Kpca(_) => {}
+        }
+        self.task = Some(task);
+        Ok(self)
+    }
+
+    /// Choose the compact f32 payload encoding for `C`/`W⁻¹` (version-2;
+    /// lossy — see the module docs' precision caveat).
+    pub fn with_f32(mut self, yes: bool) -> StoredArtifact {
+        self.f32_payload = yes;
+        self
     }
 
     /// Number of data points n in the approximated matrix.
@@ -172,14 +252,28 @@ impl StoredArtifact {
         self.selected_points.dim()
     }
 
-    /// Serialize to the version-1 byte format.
+    /// Serialize: version 1 when no v2 feature is used, version 2 when
+    /// the payload is f32-encoded or a task model rides along.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut payload = Vec::new();
-        push_f64_section(&mut payload, &self.approx.c.data);
-        push_f64_section(&mut payload, &self.approx.winv.data);
+        if self.f32_payload {
+            push_f32_section(&mut payload, &self.approx.c.data);
+            push_f32_section(&mut payload, &self.approx.winv.data);
+        } else {
+            push_f64_section(&mut payload, &self.approx.c.data);
+            push_f64_section(&mut payload, &self.approx.winv.data);
+        }
         push_f64_section(&mut payload, self.selected_points.flat());
-        let header = Json::obj(vec![
-            ("version", Json::Num(FORMAT_VERSION as f64)),
+        if let Some(task) = &self.task {
+            push_task_sections(&mut payload, task);
+        }
+        let version = if self.f32_payload || self.task.is_some() {
+            FORMAT_VERSION
+        } else {
+            1
+        };
+        let mut fields = vec![
+            ("version", Json::Num(version as f64)),
             ("n", Json::Num(self.n() as f64)),
             ("k", Json::Num(self.k() as f64)),
             ("dim", Json::Num(self.dim() as f64)),
@@ -211,7 +305,14 @@ impl StoredArtifact {
             ("selection_secs", Json::Num(self.approx.selection_secs)),
             ("payload_bytes", Json::Num(payload.len() as f64)),
             ("checksum", Json::Str(checksum_hex(fnv1a64(&payload)))),
-        ]);
+        ];
+        if self.f32_payload {
+            fields.push(("encoding", Json::Str("f32".into())));
+        }
+        if let Some(task) = &self.task {
+            fields.push(("task", task_header_json(task)));
+        }
+        let header = Json::obj(fields);
         let mut out = Vec::with_capacity(MAGIC.len() + payload.len() + 512);
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(header.to_string().as_bytes());
@@ -233,19 +334,14 @@ impl StoredArtifact {
         Ok(bytes.len())
     }
 
-    /// Parse and verify the version-1 byte format.
+    /// Parse and verify the byte format (versions 1 and 2).
     pub fn from_bytes(bytes: &[u8]) -> Result<StoredArtifact> {
         let (header_str, payload) =
             split_magic_file(bytes, MAGIC, "oasis artifact")?;
         let h = Json::parse(header_str)
             .map_err(|e| anyhow!("artifact header: {e}"))?;
-        let version = field_usize(&h, "version")?;
-        if version != FORMAT_VERSION {
-            bail!(
-                "unsupported artifact version {version} (this build reads \
-                 version {FORMAT_VERSION})"
-            );
-        }
+        check_version(&h)?;
+        let f32_payload = encoding_is_f32(&h)?;
         let n = field_usize(&h, "n")?;
         let k = field_usize(&h, "k")?;
         let dim = field_usize(&h, "dim")?;
@@ -329,9 +425,22 @@ impl StoredArtifact {
             .unwrap_or(0.0);
 
         let mut r = SectionReader::new(payload);
-        let c = r.read_f64_section(c_elems, "C factor")?;
-        let winv = r.read_f64_section(winv_elems, "W⁻¹ factor")?;
+        let (c, winv) = if f32_payload {
+            (
+                r.read_f32_section(c_elems, "C factor")?,
+                r.read_f32_section(winv_elems, "W⁻¹ factor")?,
+            )
+        } else {
+            (
+                r.read_f64_section(c_elems, "C factor")?,
+                r.read_f64_section(winv_elems, "W⁻¹ factor")?,
+            )
+        };
         let pts = r.read_f64_section(pts_elems, "selected points")?;
+        let task = match h.get("task") {
+            None | Some(Json::Null) => None,
+            Some(th) => Some(read_task_sections(th, k, &mut r)?),
+        };
         if r.remaining() != 0 {
             bail!("artifact payload has {} unread trailing bytes", r.remaining());
         }
@@ -346,6 +455,8 @@ impl StoredArtifact {
             selected_points: Dataset::from_flat(dim, pts),
             provenance,
             error_estimate,
+            task,
+            f32_payload,
         })
     }
 
@@ -404,13 +515,16 @@ impl StoredArtifact {
             h.get("kernel")
                 .ok_or_else(|| anyhow!("artifact header missing kernel"))?,
         )?;
-        // the selected points are the last payload section; seek straight
-        // to it (its frame count included) past C and W⁻¹ — file length
-        // was already verified to match the header exactly
+        // the selected points follow the C and W⁻¹ sections (any task
+        // sections come after them); seek straight to their frame — file
+        // length was already verified to match the header exactly. The
+        // factor sections' width depends on the payload encoding, the
+        // selected points are always f64.
+        let fw = if encoding_is_f32(&h)? { 4u64 } else { 8u64 };
         let pts_elems = checked_elems(k, dim, "selected points")?;
         let pts_offset = payload_offset
-            + (8 + 8 * checked_elems(n, k, "C factor")? as u64)
-            + (8 + 8 * checked_elems(k, k, "W⁻¹ factor")? as u64);
+            + (8 + fw * checked_elems(n, k, "C factor")? as u64)
+            + (8 + fw * checked_elems(k, k, "W⁻¹ factor")? as u64);
         let mut f = std::fs::File::open(path).map_err(|e| {
             anyhow!("reading artifact {}: {e}", path.display())
         })?;
@@ -483,24 +597,17 @@ impl StoredArtifact {
         let text = std::str::from_utf8(&line)
             .map_err(|_| anyhow!("artifact header is not UTF-8"))?;
         let h = Json::parse(text).map_err(|e| anyhow!("artifact header: {e}"))?;
-        let version = field_usize(&h, "version")?;
-        if version != FORMAT_VERSION {
-            bail!(
-                "unsupported artifact version {version} (this build reads \
-                 version {FORMAT_VERSION})"
-            );
-        }
+        check_version(&h)?;
         let n = field_usize(&h, "n")?;
         let k = field_usize(&h, "k")?;
         let dim = field_usize(&h, "dim")?;
         let payload_bytes = field_usize(&h, "payload_bytes")?;
-        // the payload must be exactly the three framed sections the
-        // dimensions imply, and the file exactly magic+header+payload —
-        // a small header cannot front gigabytes of trailing bytes
-        let implied = 3 * 8
-            + 8 * (checked_elems(n, k, "C factor")?
-                + checked_elems(k, k, "W⁻¹ factor")?
-                + checked_elems(k, dim, "selected points")?);
+        // the payload must be exactly the framed sections the header
+        // implies (three base sections plus any task sections, at the
+        // declared encoding width), and the file exactly
+        // magic+header+payload — a small header cannot front gigabytes
+        // of trailing bytes
+        let implied = implied_payload_bytes(&h, n, k, dim)?;
         if payload_bytes != implied {
             bail!(
                 "artifact header promises {payload_bytes} payload bytes but \
@@ -552,6 +659,17 @@ impl StoredArtifact {
     /// One-line JSON summary (CLI `query --load` info, server listings).
     pub fn summary_json(&self) -> Json {
         Json::obj(vec![
+            (
+                "stored_task",
+                match &self.task {
+                    Some(t) => Json::Str(t.kind().as_str().to_string()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "encoding",
+                Json::Str(if self.f32_payload { "f32" } else { "f64" }.into()),
+            ),
             ("n", Json::Num(self.n() as f64)),
             ("k", Json::Num(self.k() as f64)),
             ("dim", Json::Num(self.dim() as f64)),
@@ -586,6 +704,182 @@ pub struct WarmStartHeader {
     /// starts verify the artifact was computed on *this* dataset, not
     /// merely one with the same shape.
     pub selected_points: Dataset,
+}
+
+/// Accept format versions `1..=FORMAT_VERSION`.
+fn check_version(h: &Json) -> Result<()> {
+    let version = field_usize(h, "version")?;
+    if version == 0 || version > FORMAT_VERSION {
+        bail!(
+            "unsupported artifact version {version} (this build reads \
+             versions 1..={FORMAT_VERSION})"
+        );
+    }
+    Ok(())
+}
+
+/// Parse the header's payload encoding: absent → f64, `"f32"` → f32.
+fn encoding_is_f32(h: &Json) -> Result<bool> {
+    match h.get("encoding") {
+        None | Some(Json::Null) => Ok(false),
+        Some(v) => match v.as_str() {
+            Some("f64") => Ok(false),
+            Some("f32") => Ok(true),
+            _ => bail!("artifact encoding must be \"f64\" or \"f32\""),
+        },
+    }
+}
+
+/// Exact payload byte count the header implies: the three base sections
+/// at the declared encoding width (selected points always f64), plus any
+/// task sections (always f64).
+fn implied_payload_bytes(h: &Json, n: usize, k: usize, dim: usize) -> Result<usize> {
+    let fw = if encoding_is_f32(h)? { 4 } else { 8 };
+    let mut bytes = (8 + fw * checked_elems(n, k, "C factor")?)
+        + (8 + fw * checked_elems(k, k, "W⁻¹ factor")?)
+        + (8 + 8 * checked_elems(k, dim, "selected points")?);
+    if let Some(th) = h.get("task").filter(|t| !matches!(t, Json::Null)) {
+        for elems in task_section_elems(th, k)? {
+            bytes += 8 + 8 * elems;
+        }
+    }
+    Ok(bytes)
+}
+
+/// The `task` header object for a fitted model (its numeric state goes
+/// into the payload sections, only scalars and dims live here).
+fn task_header_json(task: &FittedTask) -> Json {
+    match task {
+        FittedTask::Krr(m) => Json::obj(vec![
+            ("type", Json::Str("krr".into())),
+            ("lambda", Json::Num(m.lambda)),
+            ("train_rmse", Json::Num(m.train_rmse)),
+        ]),
+        FittedTask::Kpca(m) => Json::obj(vec![
+            ("type", Json::Str("kpca".into())),
+            ("components", Json::Num(m.vals.len() as f64)),
+        ]),
+        FittedTask::Cluster(m) => Json::obj(vec![
+            ("type", Json::Str("cluster".into())),
+            ("clusters", Json::Num(m.centroids.rows as f64)),
+            ("components", Json::Num(m.embedding.vals.len() as f64)),
+            ("seed", Json::Num(m.seed as f64)),
+        ]),
+    }
+}
+
+/// Append the task's payload sections (all f64; see the module docs for
+/// the per-type section list).
+fn push_task_sections(payload: &mut Vec<u8>, task: &FittedTask) {
+    match task {
+        FittedTask::Krr(m) => push_f64_section(payload, &m.beta),
+        FittedTask::Kpca(m) => {
+            push_f64_section(payload, &m.vals);
+            push_f64_section(payload, &m.proj.data);
+        }
+        FittedTask::Cluster(m) => {
+            push_f64_section(payload, &m.embedding.vals);
+            push_f64_section(payload, &m.embedding.proj.data);
+            push_f64_section(payload, &m.centroids.data);
+        }
+    }
+}
+
+/// Per-section element counts a `task` header implies (overflow-checked,
+/// like every other size derived from header fields).
+fn task_section_elems(th: &Json, k: usize) -> Result<Vec<usize>> {
+    let t = th
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("artifact task header missing type"))?;
+    Ok(match t {
+        "krr" => vec![k],
+        "kpca" => {
+            let d = task_dim(th, "components")?;
+            vec![d, checked_elems(k, d, "task projection")?]
+        }
+        "cluster" => {
+            let d = task_dim(th, "components")?;
+            let c = task_dim(th, "clusters")?;
+            vec![
+                d,
+                checked_elems(k, d, "task projection")?,
+                checked_elems(c, d, "task centroids")?,
+            ]
+        }
+        other => bail!("unknown stored task type '{other}'"),
+    })
+}
+
+fn task_dim(th: &Json, key: &str) -> Result<usize> {
+    match th.get(key).and_then(Json::as_f64) {
+        Some(x) if x.is_finite() && x >= 1.0 && x.fract() == 0.0 && x <= 1e12 => {
+            Ok(x as usize)
+        }
+        _ => bail!("artifact task header field '{key}' missing or invalid"),
+    }
+}
+
+/// Read the task sections declared by `th` back into a [`FittedTask`].
+fn read_task_sections(
+    th: &Json,
+    k: usize,
+    r: &mut SectionReader<'_>,
+) -> Result<FittedTask> {
+    let t = th
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("artifact task header missing type"))?;
+    let num = |key: &str| -> Result<f64> {
+        th.get(key)
+            .and_then(Json::as_f64)
+            .filter(|x| x.is_finite())
+            .ok_or_else(|| anyhow!("artifact task header missing finite '{key}'"))
+    };
+    Ok(match t {
+        "krr" => {
+            let beta = r.read_f64_section(k, "task beta")?;
+            FittedTask::Krr(KrrModel {
+                lambda: num("lambda")?,
+                beta,
+                train_rmse: num("train_rmse")?,
+            })
+        }
+        "kpca" => {
+            let d = task_dim(th, "components")?;
+            let vals = r.read_f64_section(d, "task eigenvalues")?;
+            let proj = r.read_f64_section(
+                checked_elems(k, d, "task projection")?,
+                "task projection",
+            )?;
+            FittedTask::Kpca(KpcaModel { vals, proj: Mat::from_vec(k, d, proj) })
+        }
+        "cluster" => {
+            let d = task_dim(th, "components")?;
+            let c = task_dim(th, "clusters")?;
+            let vals = r.read_f64_section(d, "task eigenvalues")?;
+            let proj = r.read_f64_section(
+                checked_elems(k, d, "task projection")?,
+                "task projection",
+            )?;
+            let centroids = r.read_f64_section(
+                checked_elems(c, d, "task centroids")?,
+                "task centroids",
+            )?;
+            let seed = match th.get("seed").and_then(Json::as_f64) {
+                Some(s) if s.is_finite() && s >= 0.0 && s.fract() == 0.0 => {
+                    s as u64
+                }
+                _ => bail!("artifact task header missing integer 'seed'"),
+            };
+            FittedTask::Cluster(ClusterModel {
+                embedding: KpcaModel { vals, proj: Mat::from_vec(k, d, proj) },
+                centroids: Mat::from_vec(c, d, centroids),
+                seed,
+            })
+        }
+        other => bail!("unknown stored task type '{other}'"),
+    })
 }
 
 /// `a × b` as a section element count, rejected well before it can
@@ -840,6 +1134,112 @@ mod tests {
         // missing file is a clean error naming the path
         let err = StoredArtifact::load(&dir.join("absent.oasis")).unwrap_err();
         assert!(format!("{err}").contains("absent.oasis"), "{err}");
+    }
+
+    /// Version-2 `task` section: every fitted-task variant rides along
+    /// and round-trips bit-identically (header scalars and payload
+    /// sections), and re-encoding is byte-stable.
+    #[test]
+    fn task_section_round_trips_bit_identically() {
+        use crate::tasks::{FittedTask, TaskConfig, TaskKind};
+        let (art, _, _) = sample_artifact();
+        let configs = [
+            {
+                let mut c = TaskConfig::new(TaskKind::Krr);
+                c.labels =
+                    Some((0..art.n()).map(|i| (i % 2) as f64).collect());
+                c
+            },
+            TaskConfig::new(TaskKind::Kpca),
+            TaskConfig::new(TaskKind::Cluster),
+        ];
+        for cfg in configs {
+            let fit = FittedTask::fit(&art.approx, &cfg).unwrap();
+            let stored = art.clone().with_task(fit.model.clone()).unwrap();
+            let bytes = stored.to_bytes();
+            assert!(
+                String::from_utf8_lossy(&bytes).contains("\"version\":2"),
+                "task artifacts are version 2"
+            );
+            let back = StoredArtifact::from_bytes(&bytes).unwrap();
+            let back_task = back.task.as_ref().expect("task survived");
+            match (&fit.model, back_task) {
+                (FittedTask::Krr(a), FittedTask::Krr(b)) => {
+                    assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+                    assert_eq!(a.train_rmse.to_bits(), b.train_rmse.to_bits());
+                    assert_eq!(a.beta.len(), b.beta.len());
+                    for (x, y) in a.beta.iter().zip(&b.beta) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+                (FittedTask::Kpca(a), FittedTask::Kpca(b)) => {
+                    assert_eq!(a.vals, b.vals);
+                    assert_eq!(a.proj.data, b.proj.data);
+                }
+                (FittedTask::Cluster(a), FittedTask::Cluster(b)) => {
+                    assert_eq!(a.embedding.vals, b.embedding.vals);
+                    assert_eq!(a.embedding.proj.data, b.embedding.proj.data);
+                    assert_eq!(a.centroids.data, b.centroids.data);
+                    assert_eq!(a.seed, b.seed);
+                }
+                other => panic!("task variant changed in flight: {other:?}"),
+            }
+            // byte-stable re-encode, and the plain parts still agree
+            assert_eq!(back.to_bytes(), bytes);
+            assert_eq!(back.approx.indices, stored.approx.indices);
+            // truncating the last (task) section is caught
+            let cut = &bytes[..bytes.len() - 5];
+            assert!(StoredArtifact::from_bytes(cut).is_err());
+        }
+        // a mismatched task is refused at attach time
+        let other = {
+            let ds = two_moons(30, 0.05, 4);
+            let kern = Gaussian::new(0.5);
+            let oracle = ImplicitOracle::new(&ds, &kern);
+            let approx = assemble_from_indices(&oracle, vec![0, 9], 0.0);
+            FittedTask::fit(&approx, &TaskConfig::new(TaskKind::Kpca))
+                .unwrap()
+                .model
+        };
+        assert!(sample_artifact().0.with_task(other).is_err());
+    }
+
+    /// Version-2 f32 compaction: the payload shrinks, factors reload at
+    /// f32 precision, `Z_Λ` stays bit-exact (so queries still evaluate
+    /// the kernel against exact points), and re-encoding is byte-stable.
+    #[test]
+    fn f32_encoding_round_trips_at_reduced_precision() {
+        let (art, _, _) = sample_artifact();
+        let f64_bytes = art.to_bytes();
+        let compact = art.clone().with_f32(true);
+        let bytes = compact.to_bytes();
+        assert!(bytes.len() < f64_bytes.len(), "{} !< {}", bytes.len(), f64_bytes.len());
+        let back = StoredArtifact::from_bytes(&bytes).unwrap();
+        assert!(back.f32_payload);
+        // factors: exactly the f32 cast of the originals
+        for (a, b) in art.approx.c.data.iter().zip(&back.approx.c.data) {
+            assert_eq!(((*a as f32) as f64).to_bits(), b.to_bits());
+        }
+        for (a, b) in art.approx.winv.data.iter().zip(&back.approx.winv.data) {
+            assert_eq!(((*a as f32) as f64).to_bits(), b.to_bits());
+        }
+        // selected points stay f64-exact
+        assert_eq!(back.selected_points, art.selected_points);
+        // warm-start peek reads the exact points through the f32 layout
+        let dir = std::env::temp_dir().join("oasis-store-f32-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("compact.oasis");
+        compact.save(&path).unwrap();
+        let h = StoredArtifact::peek_warm_start(&path).unwrap();
+        assert_eq!(h.selected_points, art.selected_points);
+        assert_eq!(h.indices, art.approx.indices);
+        assert_eq!(
+            StoredArtifact::peek_dims(&path).unwrap(),
+            (art.n(), art.k(), art.dim())
+        );
+        // stable re-encode keeps the f32 encoding
+        assert_eq!(back.to_bytes(), bytes);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// The header-only warm-start view agrees with a full load — without

@@ -9,26 +9,21 @@
 //! costs the same O(nk² + k³).
 
 use super::NystromApprox;
-use crate::linalg::{sym_eig, Mat};
+use crate::linalg::{psd_sqrt, sym_eig, Mat};
+
+/// The factor `B = C (W⁺)^{1/2}` with `G̃ = B Bᵀ` — the shared starting
+/// point of the eigendecomposition below and the downstream-task fits
+/// ([`crate::tasks`]), which both need G̃ in symmetric factor form.
+pub fn nystrom_factor(approx: &NystromApprox) -> Mat {
+    // (W⁺)^{1/2} = V diag(λ₊^{1/2}) Vᵀ — clamp tiny negatives from pinv
+    approx.c.matmul(&psd_sqrt(&approx.winv))
+}
 
 /// Top eigenpairs of `G̃ = C W⁺ Cᵀ`: returns descending eigenvalues and the
 /// matrix of corresponding orthonormal eigenvectors (n×r, r = retained
 /// rank). Eigenvalues below `rtol * λmax` are dropped.
 pub fn nystrom_eig(approx: &NystromApprox, rtol: f64) -> (Vec<f64>, Mat) {
-    let winv_eig = sym_eig(&approx.winv);
-    let k = approx.k();
-    // (W⁺)^{1/2} = V diag(λ₊^{1/2}) Vᵀ — clamp tiny negatives from pinv
-    let winv_half = {
-        let mut scaled = winv_eig.vecs.clone();
-        for j in 0..k {
-            let f = winv_eig.vals[j].max(0.0).sqrt();
-            for i in 0..k {
-                *scaled.at_mut(i, j) *= f;
-            }
-        }
-        scaled.matmul(&winv_eig.vecs.transpose())
-    };
-    let b = approx.c.matmul(&winv_half); // n×k
+    let b = nystrom_factor(approx); // n×k
     let btb = b.t_matmul(&b); // k×k
     let eig = sym_eig(&btb);
     let lmax = eig.vals.first().copied().unwrap_or(0.0).max(0.0);

@@ -14,6 +14,7 @@ use crate::linalg::{pinv_psd, Mat};
 use crate::nystrom::NystromApprox;
 use crate::util::{rng::Pcg64, timing::Stopwatch};
 use crate::Result;
+use crate::bail;
 
 /// The naive SIS sampler (test oracle; O(ℓ·(ℓ³+ℓ²n)) total).
 #[derive(Clone, Debug)]
@@ -77,6 +78,86 @@ impl Sis {
             exhausted: None,
             busy_secs: sw.secs(),
         })
+    }
+
+    /// Open a session warm-started from a previously selected index set
+    /// (artifact warm start) — the same replay shape as
+    /// [`Oasis::session_from_indices`](super::oasis::Oasis::session_from_indices):
+    /// the first `init_cols` indices seed W₀ by direct inversion (the
+    /// arithmetic a successful seed draw performs), and the remaining
+    /// indices are *replayed* through the step arithmetic with the
+    /// argmax replaced by the stored selection. SIS recomputes W⁺ and
+    /// every Δ from scratch each step, so the replayed session's state
+    /// (fetched columns, trace, residual sum) is bit-identical to the
+    /// recording session's — given the same oracle and `init_cols` —
+    /// and continued selection extends it exactly as an uninterrupted
+    /// run would.
+    ///
+    /// Replay cost is the full O(k³ + k²n) per column that selection
+    /// paid (this sampler is the naive correctness oracle). Errors
+    /// cleanly when the indices repeat, fall out of range, or score
+    /// below the tolerance mid-replay — the signature of an artifact
+    /// that does not match this dataset/kernel.
+    pub fn session_from_indices<'a>(
+        &self,
+        oracle: &'a dyn ColumnOracle,
+        indices: &[usize],
+    ) -> Result<SisSession<'a>> {
+        let sw = Stopwatch::start();
+        let n = oracle.n();
+        if indices.is_empty() {
+            bail!("warm start needs at least one stored index");
+        }
+        let mut seen = vec![false; n];
+        for &j in indices {
+            if j >= n {
+                bail!("stored index {j} out of range (n = {n})");
+            }
+            if seen[j] {
+                bail!("stored index {j} repeats");
+            }
+            seen[j] = true;
+        }
+        let l = self.max_cols.min(n).max(indices.len());
+        let k0 = self.init_cols.min(l).min(indices.len());
+        let d = oracle.diag();
+        let tol = super::effective_tol(self.tol, &d);
+        let cols: Vec<Vec<f64>> =
+            indices[..k0].iter().map(|&j| oracle.column(j)).collect();
+        let w = w_from(&cols, &indices[..k0]);
+        match crate::linalg::inverse(&w) {
+            Some(inv)
+                if (inv.max_abs() * w.max_abs()).is_finite()
+                    && inv.max_abs() * w.max_abs() <= 1e12 => {}
+            _ => bail!(
+                "the stored seed columns are singular on this dataset/kernel \
+                 — artifact mismatch?"
+            ),
+        }
+        let mut trace = SelectionTrace::default();
+        for &j in &indices[..k0] {
+            trace.order.push(j);
+            trace.cum_secs.push(sw.secs());
+            trace.deltas.push(f64::NAN);
+        }
+        let mut session = SisSession {
+            oracle,
+            n,
+            d,
+            tol,
+            cols,
+            trace,
+            resid_sum: None,
+            d_abs_sum: 0.0,
+            exhausted: None,
+            busy_secs: sw.secs(),
+        };
+        for &j in &indices[k0..] {
+            session
+                .force_select(j)
+                .map_err(|e| e.wrap("warm-start replay"))?;
+        }
+        Ok(session)
     }
 
     pub fn sample_traced(
@@ -143,34 +224,12 @@ impl SamplerSession for SisSession<'_> {
             return Ok(StepOutcome::Exhausted(reason));
         }
         let sw = Stopwatch::start();
-        let lambda = &self.trace.order;
-        let n = self.n;
-        if lambda.len() >= n {
+        if self.trace.order.len() >= self.n {
             self.exhausted = Some(StopReason::Exhausted);
             self.busy_secs += sw.secs();
             return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
         }
-        // W⁺ from scratch
-        let w = w_from(&self.cols, lambda);
-        let winv = pinv_psd(&w, 1e-12);
-        // Δ for every candidate from scratch
-        let mut best = usize::MAX;
-        let mut best_abs = -1.0;
-        let mut sum_abs = 0.0;
-        for i in 0..n {
-            if lambda.contains(&i) {
-                continue;
-            }
-            let b: Vec<f64> = self.cols.iter().map(|c| c[i]).collect();
-            let wb = winv.matvec(&b);
-            let quad: f64 = b.iter().zip(&wb).map(|(x, y)| x * y).sum();
-            let delta = (self.d[i] - quad).abs();
-            sum_abs += delta;
-            if delta > best_abs {
-                best_abs = delta;
-                best = i;
-            }
-        }
+        let (best, best_abs, _, sum_abs) = self.rescore(None);
         self.resid_sum = Some(sum_abs);
         if self.d_abs_sum == 0.0 {
             self.d_abs_sum = self.d.iter().map(|x| x.abs()).sum();
@@ -211,6 +270,76 @@ impl SamplerSession for SisSession<'_> {
             winv,
             selection_secs: self.busy_secs,
         })
+    }
+}
+
+impl SisSession<'_> {
+    /// One from-scratch rescoring sweep — W⁺ rebuilt, every unselected
+    /// candidate's Δ recomputed — returning `(argmax index, argmax |Δ|,
+    /// |Δ| at `target`, Σ|Δ|)`. The argmax index is `usize::MAX` (and
+    /// the target Δ `NaN`) when no candidate matched. Shared by
+    /// [`step`](SamplerSession::step) (argmax selection) and
+    /// [`force_select`](SisSession::force_select) (warm-start replay),
+    /// so both perform bit-identical arithmetic — the warm-resume
+    /// guarantee depends on these never diverging.
+    fn rescore(&self, target: Option<usize>) -> (usize, f64, f64, f64) {
+        let lambda = &self.trace.order;
+        let w = w_from(&self.cols, lambda);
+        let winv = pinv_psd(&w, 1e-12);
+        let mut best = usize::MAX;
+        let mut best_abs = -1.0;
+        let mut target_abs = f64::NAN;
+        let mut sum_abs = 0.0;
+        for i in 0..self.n {
+            if lambda.contains(&i) {
+                continue;
+            }
+            let b: Vec<f64> = self.cols.iter().map(|c| c[i]).collect();
+            let wb = winv.matvec(&b);
+            let quad: f64 = b.iter().zip(&wb).map(|(x, y)| x * y).sum();
+            let delta = (self.d[i] - quad).abs();
+            sum_abs += delta;
+            if delta > best_abs {
+                best_abs = delta;
+                best = i;
+            }
+            if target == Some(i) {
+                target_abs = delta;
+            }
+        }
+        (best, best_abs, target_abs, sum_abs)
+    }
+
+    /// Warm-start replay: incorporate a *stored* selection instead of
+    /// the argmax. Performs the same full [`rescore`](SisSession::rescore)
+    /// sweep `step` performs — including the residual-sum bookkeeping —
+    /// with only the argmax replaced by the given index, so the
+    /// replayed session's state is bit-identical to the one that
+    /// recorded the index.
+    fn force_select(&mut self, best: usize) -> Result<()> {
+        let sw = Stopwatch::start();
+        if best >= self.n || self.trace.order.contains(&best) {
+            bail!("stored index {best} is out of range or already selected");
+        }
+        let (_, _, delta_best, sum_abs) = self.rescore(Some(best));
+        self.resid_sum = Some(sum_abs);
+        if self.d_abs_sum == 0.0 {
+            self.d_abs_sum = self.d.iter().map(|x| x.abs()).sum();
+        }
+        // `!(≥)` also catches a NaN score
+        if !(delta_best >= self.tol) {
+            bail!(
+                "replaying stored index {best}: |Δ| = {delta_best:.3e} is \
+                 below the selection tolerance — the artifact does not match \
+                 this dataset/kernel"
+            );
+        }
+        self.cols.push(self.oracle.column(best));
+        self.trace.order.push(best);
+        self.trace.cum_secs.push(self.busy_secs + sw.secs());
+        self.trace.deltas.push(delta_best);
+        self.busy_secs += sw.secs();
+        Ok(())
     }
 }
 
@@ -281,6 +410,43 @@ mod tests {
         assert!(approx.k() <= 4);
         let err = crate::nystrom::relative_frobenius_error(&oracle, &approx);
         assert!(err < 1e-6, "err {err}");
+    }
+
+    /// Warm start (artifact resume), same contract as oASIS's: seeding
+    /// from a stored prefix and replaying it reproduces the recording
+    /// session's state bit for bit — continued selection, factors, and
+    /// the error-estimate state all match an uninterrupted run exactly.
+    #[test]
+    fn warm_started_sis_is_bit_identical_to_prefix_resume() {
+        let ds = two_moons(120, 0.05, 21);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let sampler = Sis::new(26, 4, 1e-12, 6);
+        let (reference, ref_trace) = sampler.sample_traced(&oracle).unwrap();
+
+        let mut prefix = sampler.session(&oracle).unwrap();
+        run_to_completion(&mut prefix, &StoppingRule::budget(14)).unwrap();
+        let stored: Vec<usize> = prefix.indices().to_vec();
+
+        let mut warm = sampler.session_from_indices(&oracle, &stored).unwrap();
+        assert_eq!(warm.k(), 14);
+        assert_eq!(warm.indices(), &stored[..]);
+        // the replay reproduced the rescoring sweep's residual state
+        assert_eq!(
+            warm.error_estimate().map(f64::to_bits),
+            prefix.error_estimate().map(f64::to_bits),
+            "replayed error estimate diverged"
+        );
+        run_to_completion(&mut warm, &StoppingRule::budget(26)).unwrap();
+        let warmed = warm.snapshot().unwrap();
+        assert_eq!(warmed.indices, ref_trace.order);
+        assert_eq!(warmed.c.data, reference.c.data);
+        assert_eq!(warmed.winv.data, reference.winv.data);
+
+        // malformed index sets error cleanly
+        assert!(sampler.session_from_indices(&oracle, &[]).is_err());
+        assert!(sampler.session_from_indices(&oracle, &[3, 3]).is_err());
+        assert!(sampler.session_from_indices(&oracle, &[999]).is_err());
     }
 
     /// The session path selects the same sequence as the one-shot path

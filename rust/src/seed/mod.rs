@@ -13,7 +13,7 @@ pub mod css;
 pub mod decompose;
 pub mod omp;
 
-pub use cluster::spectral_cluster;
+pub use cluster::{permutation_accuracy, spectral_cluster};
 pub use css::{css_projection_error, select_css};
 pub use decompose::{Seed, SeedConfig};
 pub use omp::{omp, SparseCode};

@@ -29,6 +29,9 @@ pub struct HostedArtifact {
     pub loaded_from: PathBuf,
     /// Query points answered against this artifact.
     pub queries: AtomicU64,
+    /// Most recent task model fit against this artifact (same reuse
+    /// pattern as [`SessionShared::task_cache`](super::registry::SessionShared)).
+    pub task_cache: Mutex<Option<super::registry::CachedTask>>,
 }
 
 impl HostedArtifact {
@@ -100,6 +103,7 @@ impl ArtifactRegistry {
             artifact,
             loaded_from,
             queries: AtomicU64::new(0),
+            task_cache: Mutex::new(None),
         });
         map.insert(name, hosted.clone());
         Ok(hosted)

@@ -36,6 +36,7 @@ pub fn route(state: &Arc<ServerState>, req: &Request) -> Response {
             snapshot_session(state, name, req)
         }
         ("POST", ["sessions", name, "query"]) => query_session(state, name, req),
+        ("POST", ["sessions", name, "task"]) => task_session(state, name, req),
         ("POST", ["sessions", name, "save"]) => save_session(state, name, req),
         ("POST", ["sessions", name, "finish"])
         | ("DELETE", ["sessions", name]) => finish_session(state, name, req),
@@ -43,6 +44,7 @@ pub fn route(state: &Arc<ServerState>, req: &Request) -> Response {
         ("GET", ["artifacts"]) => list_artifacts(state),
         ("GET", ["artifacts", name]) => artifact_status(state, name),
         ("POST", ["artifacts", name, "query"]) => query_artifact(state, name, req),
+        ("POST", ["artifacts", name, "task"]) => task_artifact(state, name, req),
         ("DELETE", ["artifacts", name]) => unload_artifact(state, name),
         ("POST", ["shutdown"]) => {
             state.request_stop();
@@ -339,6 +341,303 @@ fn finish_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Respon
     }
 }
 
+/// Resolve a task request into a validated
+/// [`TaskConfig`](crate::tasks::TaskConfig): inline labels pass through,
+/// file labels load under the serving caps through the engine's
+/// resolver (the same path the CLI's `--labels` takes).
+fn resolve_task_config(
+    t: &protocol::TaskRequest,
+) -> crate::Result<crate::tasks::TaskConfig> {
+    use crate::engine::{LabelsSpec, SessionBuilder, TaskSpec};
+    let labels = match &t.labels {
+        None => None,
+        Some(protocol::TaskLabels::Inline(v)) => Some(v.clone()),
+        Some(protocol::TaskLabels::File { label, path, col }) => {
+            let spec = TaskSpec {
+                kind: t.kind,
+                ridge: t.ridge,
+                components: t.components,
+                clusters: t.clusters,
+                seed: t.seed,
+                labels: Some(LabelsSpec {
+                    label: label.clone(),
+                    path: path.clone(),
+                    col: *col,
+                }),
+            };
+            return SessionBuilder::with_limits(protocol::serving_load_limits())
+                .resolve_task(&spec);
+        }
+    };
+    let cfg = crate::tasks::TaskConfig {
+        kind: t.kind,
+        ridge: t.ridge,
+        components: t.components,
+        clusters: t.clusters,
+        seed: t.seed,
+        labels,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Canonical cache key of a task config at snapshot size k: every
+/// parameter the fit reads, with labels reduced to an FNV-1a 64 over
+/// their bit patterns.
+fn task_cache_key(cfg: &crate::tasks::TaskConfig, k: usize) -> String {
+    let labels_fnv = cfg
+        .labels
+        .as_ref()
+        .map(|l| {
+            let mut bytes = Vec::with_capacity(l.len() * 8);
+            for v in l {
+                bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            crate::util::framing::fnv1a64(&bytes)
+        })
+        .unwrap_or(0);
+    format!(
+        "{}|{:016x}|{}|{}|{}|{:016x}|k={k}",
+        cfg.kind.as_str(),
+        cfg.ridge.to_bits(),
+        cfg.components,
+        cfg.clusters,
+        cfg.seed,
+        labels_fnv
+    )
+}
+
+/// Fit through the registry cache: an identical key reuses the cached
+/// model (the common serve pattern — fit once, predict many); anything
+/// else fits fresh and replaces the cache entry. Returns
+/// `(model, was_cached)`.
+fn fit_with_cache(
+    cache: &std::sync::Mutex<Option<registry::CachedTask>>,
+    approx: &crate::nystrom::NystromApprox,
+    cfg: &crate::tasks::TaskConfig,
+    key: String,
+) -> crate::Result<(Arc<crate::tasks::FittedTask>, bool)> {
+    if let Some(c) = lock(cache).as_ref() {
+        // the key hashes the labels; compare them outright so a hash
+        // collision can never serve a model fit to different labels
+        if c.key == key && c.labels == cfg.labels {
+            return Ok((c.model.clone(), true));
+        }
+    }
+    let fit = crate::tasks::FittedTask::fit(approx, cfg)?;
+    let model = Arc::new(fit.model);
+    *lock(cache) = Some(registry::CachedTask {
+        key,
+        labels: cfg.labels.clone(),
+        model: model.clone(),
+    });
+    Ok((model, false))
+}
+
+/// Render a task response: the model's fit summary plus serving fields
+/// and (when requested) the predictions — the `"predictions"` value is
+/// rendered by the same code as the CLI's, so the two are
+/// byte-identical for the same model and points.
+fn task_response(
+    name: &str,
+    model: &crate::tasks::FittedTask,
+    model_source: &str,
+    predictions: Option<&crate::tasks::TaskPrediction>,
+) -> Response {
+    let mut fields = match model.summary_json() {
+        Json::Obj(m) => m,
+        _ => Default::default(),
+    };
+    fields.insert("name".into(), Json::Str(name.to_string()));
+    fields.insert("model".into(), Json::Str(model_source.to_string()));
+    if let Some(p) = predictions {
+        fields.insert("predictions".into(), p.to_json());
+    }
+    Response::json(200, Json::Obj(fields))
+}
+
+/// Fit (or reuse) a downstream task on a live session's current
+/// snapshot and predict for the request's points
+/// (`POST /sessions/{name}/task`).
+fn task_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Response {
+    let h = match state.registry.get(name) {
+        None => return error(404, format!("no session '{name}'")),
+        Some(h) => h,
+    };
+    let treq = match protocol::parse_task(&req.body_str(), &state.config.fs_root) {
+        Ok(t) => t,
+        Err(e) => return error(400, e),
+    };
+    let dim = h.points.dim();
+    for (i, p) in treq.predict.iter().enumerate() {
+        if p.len() != dim {
+            return error(
+                400,
+                format!(
+                    "predict point {i} has dimension {} but the dataset has {dim}",
+                    p.len()
+                ),
+            );
+        }
+    }
+    // fit-once-predict-many: a krr request without labels reuses the
+    // session's most recently fitted krr model as-is (its ridge and fit
+    // k), so predict traffic does not re-ship — or re-load — the label
+    // set on every call. 400 when nothing was fitted yet.
+    let label_free_krr =
+        treq.kind == crate::tasks::TaskKind::Krr && treq.labels.is_none();
+    let (model, cached) = if label_free_krr {
+        match lock(&h.shared.task_cache)
+            .as_ref()
+            .filter(|c| c.model.kind() == crate::tasks::TaskKind::Krr)
+            .map(|c| c.model.clone())
+        {
+            Some(m) => (m, true),
+            None => {
+                return error(
+                    400,
+                    "krr needs 'labels' or 'labels_file' (a later request \
+                     may omit them to reuse the fitted model)",
+                )
+            }
+        }
+    } else {
+        let cfg = match resolve_task_config(&treq) {
+            Ok(c) => c,
+            Err(e) => return error(400, e),
+        };
+        let snap = match registry::ensure_snapshot(&h, treq.refresh) {
+            Ok(s) => s,
+            Err(e) => return error(500, e),
+        };
+        let key = task_cache_key(&cfg, snap.k());
+        match fit_with_cache(&h.shared.task_cache, &snap, &cfg, key) {
+            Ok(x) => x,
+            Err(e) => return error(400, e),
+        }
+    };
+    ServerMetrics::inc(if cached {
+        &state.metrics.task_cache_hits
+    } else {
+        &state.metrics.tasks_fitted
+    });
+    let predictions = if treq.predict.is_empty() {
+        None
+    } else {
+        // the model's landmarks are the first k() selected indices —
+        // selection is append-only, so a (possibly newer) snapshot's
+        // prefix is exactly the fit-time index set
+        let snap = match registry::ensure_snapshot(&h, false) {
+            Ok(s) => s,
+            Err(e) => return error(500, e),
+        };
+        if snap.indices.len() < model.k() {
+            return error(
+                500,
+                "session snapshot is older than the fitted model — retry",
+            );
+        }
+        let selected =
+            match h.points.selected_dataset(&snap.indices[..model.k()]) {
+                Ok(d) => d,
+                Err(e) => return error(500, e),
+            };
+        match model.predict(&*h.kernel, &selected, &treq.predict) {
+            Ok(p) => {
+                state.metrics.task_predictions.fetch_add(
+                    treq.predict.len() as u64,
+                    std::sync::atomic::Ordering::Relaxed,
+                );
+                Some(p)
+            }
+            Err(e) => return error(400, e),
+        }
+    };
+    task_response(
+        &h.name,
+        &model,
+        if cached { "cached" } else { "fitted" },
+        predictions.as_ref(),
+    )
+}
+
+/// Fit (or reuse) a downstream task on a loaded artifact — dataset-free
+/// (`POST /artifacts/{name}/task`). A krr request without labels falls
+/// back to the model stored in the artifact's task section, if any.
+fn task_artifact(state: &Arc<ServerState>, name: &str, req: &Request) -> Response {
+    let h = match state.artifacts.get(name) {
+        None => return error(404, format!("no artifact '{name}'")),
+        Some(h) => h,
+    };
+    let treq = match protocol::parse_task(&req.body_str(), &state.config.fs_root) {
+        Ok(t) => t,
+        Err(e) => return error(400, e),
+    };
+    let dim = h.artifact.dim();
+    for (i, p) in treq.predict.iter().enumerate() {
+        if p.len() != dim {
+            return error(
+                400,
+                format!(
+                    "predict point {i} has dimension {} but the artifact \
+                     stores dimension {dim}",
+                    p.len()
+                ),
+            );
+        }
+    }
+    let stored_fallback = treq.kind == crate::tasks::TaskKind::Krr
+        && treq.labels.is_none();
+    let (model, source) = if stored_fallback {
+        match &h.artifact.task {
+            Some(m @ crate::tasks::FittedTask::Krr(_)) => {
+                (Arc::new(m.clone()), "stored")
+            }
+            _ => {
+                return error(
+                    400,
+                    "krr needs 'labels' or 'labels_file' (or an artifact \
+                     saved with a fitted krr model)",
+                )
+            }
+        }
+    } else {
+        let cfg = match resolve_task_config(&treq) {
+            Ok(c) => c,
+            Err(e) => return error(400, e),
+        };
+        let key = task_cache_key(&cfg, h.artifact.k());
+        match fit_with_cache(&h.task_cache, &h.artifact.approx, &cfg, key) {
+            Ok((m, cached)) => {
+                ServerMetrics::inc(if cached {
+                    &state.metrics.task_cache_hits
+                } else {
+                    &state.metrics.tasks_fitted
+                });
+                (m, if cached { "cached" } else { "fitted" })
+            }
+            Err(e) => return error(400, e),
+        }
+    };
+    let predictions = if treq.predict.is_empty() {
+        None
+    } else {
+        let kernel = h.artifact.kernel.build();
+        match model.predict(&*kernel, &h.artifact.selected_points, &treq.predict)
+        {
+            Ok(p) => {
+                state.metrics.task_predictions.fetch_add(
+                    treq.predict.len() as u64,
+                    std::sync::atomic::Ordering::Relaxed,
+                );
+                Some(p)
+            }
+            Err(e) => return error(400, e),
+        }
+    };
+    task_response(&h.name, &model, source, predictions.as_ref())
+}
+
 /// Persist a fresh snapshot of a live session as a stored artifact
 /// (`POST /sessions/{name}/save`). The session keeps running.
 fn save_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Response {
@@ -375,7 +674,7 @@ fn save_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Response
         },
         st.error_estimate,
     ) {
-        Ok(a) => a,
+        Ok(a) => a.with_f32(sreq.f32_payload),
         Err(e) => return error(400, e),
     };
     match artifact.save(&path) {

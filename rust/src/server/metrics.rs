@@ -21,6 +21,12 @@ pub struct ServerMetrics {
     pub artifacts_loaded: AtomicU64,
     /// Queries answered from loaded artifacts.
     pub artifact_queries: AtomicU64,
+    /// Downstream-task models fit by the task endpoints.
+    pub tasks_fitted: AtomicU64,
+    /// Task requests answered from a cached fitted model.
+    pub task_cache_hits: AtomicU64,
+    /// Points predicted by the task endpoints.
+    pub task_predictions: AtomicU64,
 }
 
 impl ServerMetrics {
@@ -64,6 +70,18 @@ impl ServerMetrics {
             (
                 "artifact_queries",
                 Json::Num(Self::get(&self.artifact_queries) as f64),
+            ),
+            (
+                "tasks_fitted",
+                Json::Num(Self::get(&self.tasks_fitted) as f64),
+            ),
+            (
+                "task_cache_hits",
+                Json::Num(Self::get(&self.task_cache_hits) as f64),
+            ),
+            (
+                "task_predictions",
+                Json::Num(Self::get(&self.task_predictions) as f64),
             ),
         ])
     }

@@ -52,7 +52,7 @@
 //!   "tol": 1e-12, "seed": 7,
 //!   "batch": 10,                        // adaptive-random only
 //!   "workers": 4,                       // oasis-p only
-//!   "warm_start": "models/seed.oasis",  // optional (oasis method):
+//!   "warm_start": "models/seed.oasis",  // optional (oasis|sis methods):
 //!                                       //   resume selection from a
 //!                                       //   stored artifact's Λ — the
 //!                                       //   session starts at the
@@ -139,17 +139,67 @@
 //!
 //! → `{"name", "snapshot_k", "results": [{"weights": […], "kernel": […]?}]}`
 //!
+//! ## `POST /sessions/{name}/task` — fit + run a downstream task
+//!
+//! ```json
+//! {
+//!   "task": "krr",              // krr|kpca|cluster (default krr)
+//!   "ridge": 1e-3,              // krr regularization λ > 0
+//!   "components": 2,            // kpca/cluster embedding dims
+//!   "clusters": 2,              // cluster count (cluster task)
+//!   "seed": 7,                  // cluster k-means seeding
+//!   "labels": [0, 1, 0, …],     // krr training labels, inline…
+//!   "labels_file": "y.csv",     // …or a dataset file column (resolves
+//!   "label_col": 0,             //    under --fs-root; default col 0)
+//!   "predict": [[x,…], …],      // points to predict for (optional)
+//!   "refresh": false            // fresh snapshot before fitting
+//! }
+//! ```
+//!
+//! Fits the task on the session's current snapshot — KRR dual weights,
+//! kernel-PCA eigenpairs, or spectral k-means — in O(nk²), never
+//! materializing the n×n matrix, and predicts for the given points by
+//! evaluating the kernel against the k selected points only. Identical
+//! consecutive requests reuse the cached fitted model (`"model":
+//! "cached"`; see the `tasks_fitted`/`task_cache_hits`/
+//! `task_predictions` counters in `/metrics`), and a krr request
+//! **without** labels reuses the session's cached fitted model when it
+//! is a krr model — fit once with labels, then serve predict-only
+//! traffic without re-shipping or re-reading the label set. (The cache
+//! holds one model per session: fitting a different task in between
+//! evicts it, and the next label-free krr request is a 400 until
+//! labels are shipped again.)
+//!
+//! → the fit summary (`{"task", "k", …}` — e.g. `ridge`+`train_rmse`
+//! for krr, `eigenvalues` for kpca, `clusters` for cluster) plus
+//! `{"name", "model": "fitted"|"cached", "predictions"?}` where
+//! `predictions` is one value (krr), embedding vector (kpca), or
+//! cluster label (cluster) per point — rendered by the same serializer
+//! as `oasis task --json`, so front-end answers are byte-comparable.
+//!
+//! ## `POST /artifacts/{name}/task` — downstream task, dataset-free
+//!
+//! Same payload and response as the session task endpoint, but fit on a
+//! loaded artifact's stored factors and answered from its k stored
+//! selected points — no dataset, no oracle (`refresh` is ignored). A
+//! `krr` request **without** labels reuses the fitted model persisted
+//! in the artifact's task section, if any (`"model": "stored"`) — the
+//! `sample → save → fit → predict` pipeline's serving end.
+//!
 //! ## `POST /sessions/{name}/save` — persist the approximation
 //!
 //! ```json
-//! {"path": "models/train-7.oasis"}
+//! {"path": "models/train-7.oasis", "f32": false}
 //! ```
 //!
 //! Takes a fresh snapshot of the (still-running) session and writes it
 //! as a versioned artifact file — indices, `C`, `W⁻¹`, the k selected
 //! points, resolved kernel parameters, dataset provenance, and the
 //! current error estimate, checksummed (format documented in
-//! [`crate::nystrom::store`]). The path resolves under `--fs-root`
+//! [`crate::nystrom::store`]). `"f32": true` stores the `C`/`W⁻¹`
+//! payload in f32 (half the bytes; lossy — reloaded factors, queries,
+//! and task fits then carry f32 precision, while the selected points
+//! stay f64-exact). The path resolves under `--fs-root`
 //! (relative, no `..`). → `{"name", "path", "n", "k", "bytes"}`. The
 //! session keeps running; save again later for a bigger artifact.
 //!

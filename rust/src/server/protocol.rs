@@ -506,29 +506,12 @@ pub fn parse_step(body: &str) -> Result<StepRequest> {
 /// Parse a `POST /sessions/{name}/query` body.
 pub fn parse_query(body: &str) -> Result<QueryRequest> {
     let j = parse_body(body)?;
-    let pts = j
-        .get("points")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("'points' (array of points) is required"))?;
-    if pts.is_empty() {
+    let points = match j.get("points") {
+        None => bail!("'points' (array of points) is required"),
+        Some(p) => parse_point_rows(p, "points")?,
+    };
+    if points.is_empty() {
         bail!("'points' must not be empty");
-    }
-    let mut points = Vec::with_capacity(pts.len());
-    for (i, p) in pts.iter().enumerate() {
-        let row = p
-            .as_arr()
-            .ok_or_else(|| anyhow!("query point {i} must be an array"))?;
-        let mut out = Vec::with_capacity(row.len());
-        for v in row {
-            let x = v
-                .as_f64()
-                .ok_or_else(|| anyhow!("query point {i} has a non-number entry"))?;
-            if !x.is_finite() {
-                bail!("query point {i} has a non-finite entry");
-            }
-            out.push(x);
-        }
-        points.push(out);
     }
     let targets = match j.get("targets") {
         None => Vec::new(),
@@ -560,6 +543,9 @@ pub fn parse_query(body: &str) -> Result<QueryRequest> {
 pub struct SaveRequest {
     /// Raw client path (resolved under `--fs-root` by the handler).
     pub path: String,
+    /// Encode the factor payload as f32 (compact, lossy — see
+    /// [`crate::nystrom::store`]'s precision caveat).
+    pub f32_payload: bool,
 }
 
 /// Parse a `POST /sessions/{name}/save` body.
@@ -569,7 +555,117 @@ pub fn parse_save(body: &str) -> Result<SaveRequest> {
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow!("'path' (string) is required"))?
         .to_string();
-    Ok(SaveRequest { path })
+    Ok(SaveRequest { path, f32_payload: get_bool(&j, "f32", false)? })
+}
+
+/// Where a task request's training labels come from.
+#[derive(Clone, Debug)]
+pub enum TaskLabels {
+    /// `"labels": […]` — inline values (bounded by the body size cap).
+    Inline(Vec<f64>),
+    /// `"labels_file": "y.csv"` — a dataset file column, resolved under
+    /// `--fs-root` and loaded under the serving caps by the handler.
+    File { label: String, path: PathBuf, col: usize },
+}
+
+/// Parsed `POST /sessions/{name}/task` / `POST /artifacts/{name}/task`
+/// payload.
+#[derive(Clone, Debug)]
+pub struct TaskRequest {
+    pub kind: crate::tasks::TaskKind,
+    pub ridge: f64,
+    pub components: usize,
+    pub clusters: usize,
+    pub seed: u64,
+    pub labels: Option<TaskLabels>,
+    /// Query points to predict for (may be empty: fit only).
+    pub predict: Vec<Vec<f64>>,
+    /// Sessions only: take a fresh snapshot before fitting.
+    pub refresh: bool,
+}
+
+/// Parse a task-endpoint body. Defaults mirror the CLI's `oasis task`
+/// flags (`ridge` 1e-3, `components` 2 — or the cluster count for the
+/// cluster task — `clusters` 2, `seed` 7).
+pub fn parse_task(body: &str, fs_root: &Path) -> Result<TaskRequest> {
+    let j = parse_body(body)?;
+    let kind = crate::tasks::TaskKind::parse(&get_str(&j, "task", "krr")?)?;
+    let ridge = get_f64(&j, "ridge", 1e-3)?;
+    let clusters = get_usize(&j, "clusters", 2)?;
+    let components =
+        get_usize(&j, "components", kind.default_components(clusters))?;
+    let seed = get_u64(&j, "seed", 7)?;
+    let labels = match (field(&j, "labels"), field(&j, "labels_file")) {
+        (Some(_), Some(_)) => {
+            bail!("give 'labels' (inline) or 'labels_file', not both")
+        }
+        (Some(v), None) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("'labels' must be an array of numbers"))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, l) in arr.iter().enumerate() {
+                match l.as_f64() {
+                    Some(x) if x.is_finite() => out.push(x),
+                    _ => bail!("label {i} is not a finite number"),
+                }
+            }
+            Some(TaskLabels::Inline(out))
+        }
+        (None, Some(v)) => {
+            let raw = v
+                .as_str()
+                .ok_or_else(|| anyhow!("'labels_file' must be a string path"))?;
+            let path = resolve_fs_path(fs_root, raw)
+                .map_err(|e| e.wrap("'labels_file'"))?;
+            Some(TaskLabels::File {
+                label: raw.to_string(),
+                path,
+                col: get_usize(&j, "label_col", 0)?,
+            })
+        }
+        (None, None) => None,
+    };
+    let predict = match field(&j, "predict") {
+        None => Vec::new(),
+        Some(p) => parse_point_rows(p, "predict")?,
+    };
+    Ok(TaskRequest {
+        kind,
+        ridge,
+        components,
+        clusters,
+        seed,
+        labels,
+        predict,
+        refresh: get_bool(&j, "refresh", false)?,
+    })
+}
+
+/// Parse an array of numeric points (shared by the query and task
+/// parsers).
+fn parse_point_rows(v: &Json, what: &str) -> Result<Vec<Vec<f64>>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("'{what}' must be an array of points"))?;
+    let mut points = Vec::with_capacity(arr.len());
+    for (i, p) in arr.iter().enumerate() {
+        let row = p
+            .as_arr()
+            .ok_or_else(|| anyhow!("{what} point {i} must be an array"))?;
+        let mut out = Vec::with_capacity(row.len());
+        for x in row {
+            let x = x
+                .as_f64()
+                .ok_or_else(|| anyhow!("{what} point {i} has a non-number entry"))?;
+            if !x.is_finite() {
+                bail!("{what} point {i} has a non-finite entry");
+            }
+            out.push(x);
+        }
+        points.push(out);
+    }
+    Ok(points)
 }
 
 /// Parsed `POST /artifacts/load` payload.
@@ -884,6 +980,71 @@ mod tests {
             assert!(format!("{err}").contains("symlink"), "{err}");
         }
         std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn task_payloads_parse() {
+        use crate::tasks::TaskKind;
+        let root = Path::new(".");
+        // defaults
+        let t = parse_task("{}", root).unwrap();
+        assert_eq!(t.kind, TaskKind::Krr);
+        assert_eq!(t.ridge, 1e-3);
+        assert_eq!(t.components, 2);
+        assert!(t.labels.is_none());
+        assert!(t.predict.is_empty());
+        assert!(!t.refresh);
+        // cluster components default to the cluster count
+        let t = parse_task(r#"{"task":"cluster","clusters":5}"#, root).unwrap();
+        assert_eq!(t.kind, TaskKind::Cluster);
+        assert_eq!(t.components, 5);
+        // full krr payload with inline labels + predictions
+        let t = parse_task(
+            r#"{"task":"krr","ridge":0.01,"labels":[0,1,0.5],
+                "predict":[[0.1,0.2],[1,2]],"refresh":true}"#,
+            root,
+        )
+        .unwrap();
+        assert_eq!(t.ridge, 0.01);
+        match &t.labels {
+            Some(TaskLabels::Inline(v)) => assert_eq!(v, &vec![0.0, 1.0, 0.5]),
+            other => panic!("unexpected labels {other:?}"),
+        }
+        assert_eq!(t.predict.len(), 2);
+        assert!(t.refresh);
+        // labels_file resolves under fs-root, with a column selector
+        let t = parse_task(
+            r#"{"labels_file":"y/train.csv","label_col":3}"#,
+            root,
+        )
+        .unwrap();
+        match &t.labels {
+            Some(TaskLabels::File { label, path, col }) => {
+                assert_eq!(label, "y/train.csv");
+                assert!(path.ends_with("y/train.csv"));
+                assert_eq!(*col, 3);
+            }
+            other => panic!("unexpected labels {other:?}"),
+        }
+        // rejections: unknown task, both label sources, escapes, bad rows
+        assert!(parse_task(r#"{"task":"magic"}"#, root).is_err());
+        assert!(parse_task(
+            r#"{"labels":[1],"labels_file":"y.csv"}"#,
+            root
+        )
+        .is_err());
+        assert!(parse_task(r#"{"labels_file":"../y.csv"}"#, root).is_err());
+        assert!(parse_task(r#"{"labels":[1,"x"]}"#, root).is_err());
+        assert!(parse_task(r#"{"predict":[[1,null]]}"#, root).is_err());
+    }
+
+    #[test]
+    fn save_parses_f32_flag() {
+        let s = parse_save(r#"{"path":"m.oasis"}"#).unwrap();
+        assert!(!s.f32_payload);
+        let s = parse_save(r#"{"path":"m.oasis","f32":true}"#).unwrap();
+        assert!(s.f32_payload);
+        assert!(parse_save(r#"{"path":"m.oasis","f32":3}"#).is_err());
     }
 
     #[test]

@@ -88,6 +88,25 @@ pub struct SessionShared {
     /// Gates the mirror sync so full-dataset sessions do not pay the
     /// per-batch O(k·dim) copy they would never read.
     pub mirror_points: AtomicBool,
+    /// Most recent fitted downstream-task model, keyed by its full
+    /// config + the k it was fit at — repeated identical task requests
+    /// (the common serve pattern: fit once, predict many) skip the
+    /// O(nk²) refit. Replaced whenever the key changes.
+    pub task_cache: Mutex<Option<CachedTask>>,
+}
+
+/// One cached fitted task model (see
+/// [`SessionShared::task_cache`] and the artifact registry's
+/// equivalent).
+#[derive(Debug)]
+pub struct CachedTask {
+    /// Canonical rendering of the task config + labels checksum + k.
+    pub key: String,
+    /// The exact labels the model was fit with — compared on every hit,
+    /// because the key only carries a 64-bit hash of them and FNV is
+    /// not collision-resistant.
+    pub labels: Option<Vec<f64>>,
+    pub model: Arc<crate::tasks::FittedTask>,
 }
 
 /// What one step batch did.

@@ -1,0 +1,184 @@
+//! Spectral clustering on the Nyström embedding — the clustering
+//! workload of the paper's opening claim, served from the same rank-k
+//! factors as everything else.
+//!
+//! The pipeline is Ng–Jordan–Weiss-shaped, with the dense affinity
+//! eigendecomposition replaced by the O(nk²) Nyström one: embed every
+//! point into the top-d eigenvectors of G̃ ([`KpcaModel`]), row-normalize
+//! the embedding, and run seeded k-means
+//! ([`KMeans`](crate::sampling::kmeans::KMeans) — the same Lloyd +
+//! k-means++ machinery the K-means Nyström sampler uses). Out-of-sample
+//! points are assigned by projecting through the stored [`KpcaModel`],
+//! row-normalizing, and taking the nearest centroid — dataset-free, like
+//! every task here.
+
+use super::kpca::KpcaModel;
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::nystrom::NystromApprox;
+use crate::sampling::kmeans::KMeans;
+use crate::Result;
+use crate::bail;
+
+/// A fitted spectral-clustering model: the embedding projection plus the
+/// k-means centroids in the row-normalized embedding space.
+#[derive(Clone, Debug)]
+pub struct ClusterModel {
+    /// The spectral embedding out-of-sample points project through.
+    pub embedding: KpcaModel,
+    /// c×d centroids in the row-normalized embedding space.
+    pub centroids: Mat,
+    /// K-means seeding RNG (recorded so refits are reproducible).
+    pub seed: u64,
+}
+
+/// Row-normalize one embedding vector in place (unit ℓ2 norm, with the
+/// same 1e-12 floor the SEED spectral clustering uses).
+fn normalize_row(e: &mut [f64]) {
+    let nrm = e.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+    for x in e {
+        *x /= nrm;
+    }
+}
+
+impl ClusterModel {
+    /// Fit: embed into `components` eigenvectors, row-normalize, k-means
+    /// into `clusters` groups. Returns the model and the in-sample
+    /// labels (one per data point).
+    pub fn fit(
+        approx: &NystromApprox,
+        clusters: usize,
+        components: usize,
+        seed: u64,
+    ) -> Result<(ClusterModel, Vec<usize>)> {
+        if clusters < 2 {
+            bail!("cluster: clusters must be ≥ 2");
+        }
+        if clusters > approx.n() {
+            bail!("cluster: {} clusters for n = {} points", clusters, approx.n());
+        }
+        let (embedding, u) = KpcaModel::fit(approx, components)?;
+        let (n, d) = (u.rows, u.cols);
+        let mut emb = Dataset::zeros(n, d);
+        for i in 0..n {
+            let row = emb.point_mut(i);
+            row.copy_from_slice(u.row(i));
+            normalize_row(row);
+        }
+        let (centroid_ds, labels, _iters) = KMeans::new(clusters, seed).fit(&emb);
+        let c = centroid_ds.n();
+        let mut centroids = Mat::zeros(c, d);
+        for i in 0..c {
+            centroids.row_mut(i).copy_from_slice(centroid_ds.point(i));
+        }
+        Ok((ClusterModel { embedding, centroids, seed }, labels))
+    }
+
+    /// Number of clusters c.
+    pub fn clusters(&self) -> usize {
+        self.centroids.rows
+    }
+
+    /// Assign one point from its landmark row
+    /// ([`landmark_row`](super::landmark_row)): project, row-normalize,
+    /// nearest centroid. Returns `(label, normalized embedding)`.
+    pub fn assign_row(&self, b: &[f64]) -> (usize, Vec<f64>) {
+        let mut e = self.embedding.project_row(b);
+        normalize_row(&mut e);
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for c in 0..self.centroids.rows {
+            let d: f64 = self
+                .centroids
+                .row(c)
+                .iter()
+                .zip(&e)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum();
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        (best, e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::gaussian_clusters;
+    use crate::kernels::Gaussian;
+    use crate::sampling::{assemble_from_indices, ImplicitOracle};
+    use crate::seed::permutation_accuracy;
+    use crate::tasks::landmark_row;
+
+    fn clustered_setup() -> (NystromApprox, Dataset, Gaussian, Vec<usize>) {
+        // 3 tight, well-separated clusters; truth label = i % 3
+        let n = 120;
+        let ds = gaussian_clusters(n, 4, 3, 0.08, 6);
+        let truth: Vec<usize> = (0..n).map(|i| i % 3).collect();
+        let kern = Gaussian::new(1.2);
+        let approx = {
+            let oracle = ImplicitOracle::new(&ds, &kern);
+            let idx: Vec<usize> = (0..n).step_by(3).collect();
+            assemble_from_indices(&oracle, idx, 0.0)
+        };
+        (approx, ds, kern, truth)
+    }
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let (approx, _, _, truth) = clustered_setup();
+        let (model, labels) = ClusterModel::fit(&approx, 3, 3, 11).unwrap();
+        assert_eq!(model.clusters(), 3);
+        let acc = permutation_accuracy(&labels, &truth, 3);
+        assert!(acc > 0.9, "clustering accuracy {acc}");
+    }
+
+    /// Under a fixed seed the fit is fully deterministic: labels and
+    /// centroids are bit-identical across refits.
+    #[test]
+    fn labels_stable_under_fixed_seed() {
+        let (approx, _, _, _) = clustered_setup();
+        let (m1, l1) = ClusterModel::fit(&approx, 3, 3, 42).unwrap();
+        let (m2, l2) = ClusterModel::fit(&approx, 3, 3, 42).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(m1.centroids.data.len(), m2.centroids.data.len());
+        for (a, b) in m1.centroids.data.iter().zip(&m2.centroids.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// Out-of-sample assignment of an in-sample point reproduces its
+    /// in-sample label (the projection reproduces its embedding row).
+    #[test]
+    fn assignment_consistent_in_sample() {
+        let (approx, ds, kern, _) = clustered_setup();
+        let (model, labels) = ClusterModel::fit(&approx, 3, 3, 5).unwrap();
+        let selected = ds.select(&approx.indices);
+        let mut agree = 0usize;
+        let probes: Vec<usize> = (0..ds.n()).step_by(11).collect();
+        for &i in &probes {
+            let b = landmark_row(&kern, &selected, ds.point(i)).unwrap();
+            let (label, e) = model.assign_row(&b);
+            assert_eq!(e.len(), model.embedding.dims());
+            if label == labels[i] {
+                agree += 1;
+            }
+        }
+        assert!(
+            agree * 10 >= probes.len() * 9,
+            "only {agree}/{} in-sample assignments agreed",
+            probes.len()
+        );
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let (approx, _, _, _) = clustered_setup();
+        assert!(ClusterModel::fit(&approx, 1, 2, 0).is_err());
+        assert!(ClusterModel::fit(&approx, 1000, 2, 0).is_err());
+        assert!(ClusterModel::fit(&approx, 3, 0, 0).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! Kernel PCA / spectral embedding through the Nyström approximation.
+//!
+//! The top-d eigenpairs `(λⱼ, uⱼ)` of `G̃ = C W⁺ Cᵀ` come from
+//! [`nystrom_eig`](crate::nystrom::nystrom_eig) at O(nk² + k³); the
+//! in-sample embedding of point i is row i of the orthonormal
+//! eigenvector matrix `U` (n×d). Out-of-sample points project through
+//! the Nyström extension of the eigenfunctions:
+//!
+//! ```text
+//! φⱼ(z) = (1/λⱼ) ĝ(z, ·) uⱼ = b(z)ᵀ [W⁻¹ Cᵀ U diag(1/λ)]ⱼ
+//! ```
+//!
+//! so the model stores only the k×d projection matrix `P = W⁻¹ Cᵀ U
+//! diag(1/λ)` and embeds any point as `b(z)ᵀ P` — k kernel evaluations
+//! against the selected points, no dataset required. At an in-sample
+//! point the projection reproduces that point's embedding row (up to
+//! rounding), because `b(xᵢ)` is exactly `C(i,·)`.
+
+use crate::linalg::Mat;
+use crate::nystrom::{nystrom_eig, NystromApprox};
+use crate::Result;
+use crate::bail;
+
+/// A fitted kernel-PCA embedding: eigenvalues and the landmark-space
+/// projection (`embed(z) = b(z)ᵀ proj`).
+#[derive(Clone, Debug)]
+pub struct KpcaModel {
+    /// Retained eigenvalues of G̃, descending (d ≤ requested components,
+    /// capped by the approximation's numerical rank).
+    pub vals: Vec<f64>,
+    /// k×d out-of-sample projection `W⁻¹ Cᵀ U diag(1/λ)`.
+    pub proj: Mat,
+}
+
+impl KpcaModel {
+    /// Fit the top-`components` eigenpairs; returns the model and the
+    /// n×d in-sample embedding (orthonormal columns). The embedding is
+    /// returned rather than stored — it is O(n·d) and cheap to
+    /// recompute from the factors.
+    pub fn fit(
+        approx: &NystromApprox,
+        components: usize,
+    ) -> Result<(KpcaModel, Mat)> {
+        if components == 0 {
+            bail!("kpca: components must be ≥ 1");
+        }
+        let (vals, u) = nystrom_eig(approx, 1e-12);
+        if vals.is_empty() {
+            bail!("kpca: the approximation has no positive eigenvalues");
+        }
+        let d = components.min(vals.len());
+        let keep: Vec<usize> = (0..d).collect();
+        let u_d = u.select_cols(&keep); // n×d
+        let vals_d = vals[..d].to_vec();
+        // P = W⁻¹ (Cᵀ U) diag(1/λ)
+        let ctu = approx.c.t_matmul(&u_d); // k×d, no n×k transpose copy
+        let mut proj = approx.winv.matmul(&ctu); // k×d
+        for (j, &l) in vals_d.iter().enumerate() {
+            let inv = 1.0 / l;
+            for t in 0..proj.rows {
+                *proj.at_mut(t, j) *= inv;
+            }
+        }
+        Ok((KpcaModel { vals: vals_d, proj }, u_d))
+    }
+
+    /// Number of embedding dimensions d.
+    pub fn dims(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Embed one point from its landmark row
+    /// ([`landmark_row`](super::landmark_row)): `b(z)ᵀ proj`.
+    pub fn project_row(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.proj.rows, "kpca: landmark row length");
+        (0..self.proj.cols)
+            .map(|j| (0..self.proj.rows).map(|t| b[t] * self.proj.at(t, j)).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::Gaussian;
+    use crate::linalg::matrix::dot;
+    use crate::sampling::{assemble_from_indices, ImplicitOracle};
+    use crate::tasks::landmark_row;
+
+    #[test]
+    fn embedding_is_orthonormal_and_projection_consistent() {
+        let n = 90;
+        let ds = two_moons(n, 0.05, 7);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let idx: Vec<usize> = (0..n).step_by(2).collect();
+        let approx = assemble_from_indices(&oracle, idx, 0.0);
+        let (model, u) = KpcaModel::fit(&approx, 3).unwrap();
+        assert_eq!(model.dims(), 3);
+        assert_eq!(u.cols, 3);
+        // UᵀU = I
+        let utu = u.t_matmul(&u);
+        assert!(utu.fro_dist(&Mat::eye(3)) < 1e-8, "{}", utu.fro_dist(&Mat::eye(3)));
+        // the out-of-sample projection of an *in-sample* point reproduces
+        // its embedding row (b(xᵢ) = C(i,·) exactly)
+        let selected = ds.select(&approx.indices);
+        for i in [0usize, 31, 89] {
+            let b = landmark_row(&kern, &selected, ds.point(i)).unwrap();
+            let e = model.project_row(&b);
+            for (j, &got) in e.iter().enumerate() {
+                assert!(
+                    (got - u.at(i, j)).abs() < 1e-6,
+                    "point {i} dim {j}: {got} vs {}",
+                    u.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn components_capped_by_rank() {
+        // a rank-deficient approximation keeps fewer dims than requested
+        let ds = two_moons(30, 0.05, 2);
+        let kern = Gaussian::new(5.0); // wide kernel → fast spectral decay
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let approx = assemble_from_indices(&oracle, vec![0, 10, 20], 0.0);
+        let (model, u) = KpcaModel::fit(&approx, 10).unwrap();
+        assert!(model.dims() <= 3, "dims {}", model.dims());
+        assert_eq!(u.cols, model.dims());
+        assert!(KpcaModel::fit(&approx, 0).is_err());
+    }
+
+    /// The leading coordinate carries the dominant variance direction:
+    /// eigenvalues are sorted descending and positive.
+    #[test]
+    fn eigenvalues_descend() {
+        let ds = two_moons(60, 0.05, 4);
+        let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let idx: Vec<usize> = (0..60).step_by(2).collect();
+        let approx = assemble_from_indices(&oracle, idx, 0.0);
+        let (model, u) = KpcaModel::fit(&approx, 4).unwrap();
+        for w in model.vals.windows(2) {
+            assert!(w[0] >= w[1] && w[1] > 0.0);
+        }
+        // columns are unit vectors
+        for j in 0..u.cols {
+            let col: Vec<f64> = (0..u.rows).map(|i| u.at(i, j)).collect();
+            assert!((dot(&col, &col) - 1.0).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Nyström kernel ridge regression.
+//!
+//! Exact KRR solves `α = (G + λI)⁻¹ y` at O(n³) and predicts with the
+//! full kernel row of a query point. With the Nyström factors the same
+//! dual solve costs O(nk²): writing `G̃ = Φ Φᵀ` with `Φ = C (W⁺)^{1/2}`
+//! ([`nystrom_factor`]), the Woodbury identity gives
+//!
+//! ```text
+//! α = (G̃ + λI)⁻¹ y = (y − Φ (λI + ΦᵀΦ)⁻¹ Φᵀ y) / λ
+//! ```
+//!
+//! and the predictor collapses into the **landmark space**: for a query
+//! point z the Nyström extension of its kernel row is
+//! `ĝ(z, ·) = b(z)ᵀ W⁻¹ Cᵀ`, so
+//!
+//! ```text
+//! f(z) = ĝ(z, ·) α = b(z)ᵀ β   with   β = W⁻¹ Cᵀ α ∈ R^k
+//! ```
+//!
+//! — prediction touches only the k selected points (`b(z)_t =
+//! k(z, x_{Λ(t)})`), which is what makes a stored model dataset-free:
+//! an artifact's `Z_Λ` and kernel parameters are all it ever needs.
+
+use crate::linalg::{pinv_psd, Cholesky};
+use crate::nystrom::{nystrom_factor, NystromApprox};
+use crate::Result;
+use crate::bail;
+
+/// A fitted Nyström KRR model: the ridge and the landmark-space dual
+/// weights β (`f(z) = b(z)ᵀ β`).
+#[derive(Clone, Debug)]
+pub struct KrrModel {
+    /// Ridge λ the model was fit with.
+    pub lambda: f64,
+    /// Landmark-space dual weights (length k, selection order).
+    pub beta: Vec<f64>,
+    /// Root-mean-square error of the in-sample fit `C β` against y.
+    pub train_rmse: f64,
+}
+
+impl KrrModel {
+    /// Fit dual weights from the rank-k factors in O(nk²). `y` must hold
+    /// one label per data point; `lambda` must be > 0 (λ = 0 would ask
+    /// for the pseudo-inverse of a rank-deficient G̃).
+    pub fn fit(approx: &NystromApprox, y: &[f64], lambda: f64) -> Result<KrrModel> {
+        let (n, k) = (approx.n(), approx.k());
+        if y.len() != n {
+            bail!("krr: {} labels for n = {n} data points", y.len());
+        }
+        if !(lambda.is_finite() && lambda > 0.0) {
+            bail!("krr: ridge must be a finite number > 0 (got {lambda})");
+        }
+        if let Some(bad) = y.iter().find(|v| !v.is_finite()) {
+            bail!("krr: label {bad} is not finite");
+        }
+        let phi = nystrom_factor(approx); // n×k
+        // A = λI + ΦᵀΦ (k×k, SPD for λ > 0)
+        let mut a = phi.t_matmul(&phi);
+        for i in 0..k {
+            *a.at_mut(i, i) += lambda;
+        }
+        // Φᵀ y / Cᵀ α below use Mat::t_matvec: the n×k factors are the
+        // fit's dominant allocation, so nothing may materialize their
+        // transpose
+        let phity = phi.t_matvec(y);
+        let z = match Cholesky::new(&a) {
+            Some(ch) => ch.solve(&phity),
+            // λ > 0 makes A PD in exact arithmetic; fall back to the
+            // pseudo-inverse if rounding starved a pivot anyway
+            None => pinv_psd(&a, 1e-14).matvec(&phity),
+        };
+        // α = (y − Φ z) / λ
+        let phiz = phi.matvec(&z);
+        let inv_l = 1.0 / lambda;
+        let alpha: Vec<f64> =
+            y.iter().zip(&phiz).map(|(yi, pi)| (yi - pi) * inv_l).collect();
+        // β = W⁻¹ (Cᵀ α): the dual weights moved into landmark space
+        let cta = approx.c.t_matvec(&alpha);
+        let beta = approx.winv.matvec(&cta);
+        // in-sample fit f(xᵢ) = G̃(i,·) α = C(i,·) β
+        let fitted = approx.c.matvec(&beta);
+        let sse: f64 = fitted
+            .iter()
+            .zip(y)
+            .map(|(f, yi)| (f - yi) * (f - yi))
+            .sum();
+        Ok(KrrModel {
+            lambda,
+            beta,
+            train_rmse: (sse / n as f64).sqrt(),
+        })
+    }
+
+    /// `f(z) = b(z)ᵀ β` for a precomputed landmark row
+    /// ([`landmark_row`](super::landmark_row)).
+    #[inline]
+    pub fn predict_row(&self, b: &[f64]) -> f64 {
+        crate::linalg::matrix::dot(b, &self.beta)
+    }
+
+    /// In-sample predictions `C β` (one per training point) — cheap to
+    /// recompute, so they are not stored in the model.
+    pub fn predict_in_sample(&self, approx: &NystromApprox) -> Vec<f64> {
+        approx.c.matvec(&self.beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::data::Dataset;
+    use crate::kernels::Gaussian;
+    use crate::sampling::{assemble_from_indices, ImplicitOracle};
+    use crate::tasks::landmark_row;
+
+    fn full_rank_setup() -> (NystromApprox, Dataset, Gaussian, Vec<f64>) {
+        let ds = two_moons(40, 0.05, 3);
+        // a fairly local kernel keeps G well-conditioned, so the tiny-λ
+        // fit below really can interpolate
+        let kern = Gaussian::new(0.35);
+        let approx = {
+            let oracle = ImplicitOracle::new(&ds, &kern);
+            assemble_from_indices(&oracle, (0..40).collect(), 0.0)
+        };
+        // a smooth target: y = sin(2x) + cos(y)
+        let y: Vec<f64> = (0..40)
+            .map(|i| {
+                let p = ds.point(i);
+                (2.0 * p[0]).sin() + p[1].cos()
+            })
+            .collect();
+        (approx, ds, kern, y)
+    }
+
+    /// With all n columns sampled G̃ = G exactly, so a tiny ridge must
+    /// interpolate the training labels almost exactly.
+    #[test]
+    fn near_interpolation_at_full_rank() {
+        let (approx, _, _, y) = full_rank_setup();
+        let m = KrrModel::fit(&approx, &y, 1e-8).unwrap();
+        assert!(m.train_rmse < 1e-3, "train rmse {}", m.train_rmse);
+    }
+
+    /// The landmark-space predictor must agree with the dual-space
+    /// in-sample fit: predicting at training point xᵢ via b(xᵢ) equals
+    /// row i of C β, because b(xᵢ) is exactly C(i,·).
+    #[test]
+    fn landmark_prediction_consistent_with_in_sample() {
+        let ds = two_moons(60, 0.05, 9);
+        let kern = Gaussian::new(0.6);
+        let oracle = ImplicitOracle::new(&ds, &kern);
+        let idx: Vec<usize> = (0..60).step_by(2).collect();
+        let approx = assemble_from_indices(&oracle, idx, 0.0);
+        let y: Vec<f64> = (0..60).map(|i| (i % 2) as f64).collect();
+        let m = KrrModel::fit(&approx, &y, 1e-3).unwrap();
+        let fitted = m.predict_in_sample(&approx);
+        let selected = ds.select(&approx.indices);
+        for i in (0..60).step_by(7) {
+            let b = landmark_row(&kern, &selected, ds.point(i)).unwrap();
+            let by_row = m.predict_row(&b);
+            assert!(
+                (by_row - fitted[i]).abs() < 1e-8,
+                "point {i}: {by_row} vs {fitted:?}"
+            );
+        }
+        // predictions generalize: a held-out point near class-1 training
+        // points predicts closer to 1 than to 0
+        let z = ds.point(1).to_vec();
+        let b = landmark_row(&kern, &selected, &z).unwrap();
+        let f = m.predict_row(&b);
+        assert!(f.is_finite());
+    }
+
+    #[test]
+    fn ridge_regularizes() {
+        let (approx, _, _, y) = full_rank_setup();
+        let tight = KrrModel::fit(&approx, &y, 1e-8).unwrap();
+        let loose = KrrModel::fit(&approx, &y, 10.0).unwrap();
+        assert!(
+            tight.train_rmse < loose.train_rmse,
+            "{} !< {}",
+            tight.train_rmse,
+            loose.train_rmse
+        );
+        let norm = |b: &[f64]| b.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(norm(&loose.beta) < norm(&tight.beta));
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        let (approx, _, _, y) = full_rank_setup();
+        assert!(KrrModel::fit(&approx, &y[..10], 1e-3).is_err());
+        assert!(KrrModel::fit(&approx, &y, 0.0).is_err());
+        assert!(KrrModel::fit(&approx, &y, f64::NAN).is_err());
+        let mut bad = y.clone();
+        bad[3] = f64::INFINITY;
+        assert!(KrrModel::fit(&approx, &bad, 1e-3).is_err());
+    }
+
+    /// Fits are deterministic functions of the factor bits: refitting
+    /// gives bit-identical β.
+    #[test]
+    fn fit_is_deterministic() {
+        let (approx, _, _, y) = full_rank_setup();
+        let a = KrrModel::fit(&approx, &y, 1e-4).unwrap();
+        let b = KrrModel::fit(&approx, &y, 1e-4).unwrap();
+        assert_eq!(a.beta.len(), b.beta.len());
+        for (x, z) in a.beta.iter().zip(&b.beta) {
+            assert_eq!(x.to_bits(), z.to_bits());
+        }
+        assert_eq!(a.train_rmse.to_bits(), b.train_rmse.to_bits());
+    }
+}

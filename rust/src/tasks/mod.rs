@@ -1,0 +1,446 @@
+//! Downstream tasks on top of a Nyström approximation — the consumer
+//! layer the paper motivates in its opening line: kernel matrices are
+//! "essential for many state-of-the-art approaches to classification,
+//! clustering, and dimensionality reduction". This module runs exactly
+//! those three workloads on an approximation **without ever
+//! materializing the full kernel matrix**:
+//!
+//! * [`krr`] — Nyström kernel ridge regression: dual weights fit from
+//!   the rank-k factors in O(nk²), out-of-sample prediction through the
+//!   extension machinery (`f(z) = b(z)ᵀ β`, touching only the k selected
+//!   points).
+//! * [`kpca`] — kernel PCA / spectral embedding: top-d eigenpairs of G̃
+//!   via [`nystrom_eig`](crate::nystrom::nystrom_eig), projecting both
+//!   in-sample and out-of-sample points.
+//! * [`cluster`] — spectral k-means on the embedding, reusing the
+//!   k-means machinery from [`crate::sampling::kmeans`].
+//!
+//! Every fit consumes only `(C, W⁻¹, indices)` — a live session
+//! snapshot, a finished run, or a loaded [`StoredArtifact`] all work,
+//! and the artifact case is **dataset-free**: prediction evaluates the
+//! kernel against the k stored selected points only, exactly like the
+//! extension queries. Fits are deterministic functions of the factor
+//! bits, so the CLI (`oasis task`), a live server session
+//! (`POST /sessions/{name}/task`), and a loaded artifact
+//! (`POST /artifacts/{name}/task`) produce bit-identical models and
+//! predictions from the same approximation.
+//!
+//! Fitted models persist: the artifact store appends a versioned `task`
+//! section ([`crate::nystrom::store`]), so a `sample → save → fit →
+//! predict` pipeline can hand its model to a process that has neither
+//! the dataset nor the labels (`examples/krr_pipeline.rs`).
+//!
+//! [`StoredArtifact`]: crate::nystrom::StoredArtifact
+
+pub mod cluster;
+pub mod kpca;
+pub mod krr;
+
+pub use cluster::ClusterModel;
+pub use kpca::KpcaModel;
+pub use krr::KrrModel;
+
+use crate::data::Dataset;
+use crate::kernels::Kernel;
+use crate::nystrom::NystromApprox;
+use crate::util::json::Json;
+use crate::Result;
+use crate::{anyhow, bail};
+
+/// Which downstream task to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Kernel ridge regression (needs labels).
+    Krr,
+    /// Kernel PCA / spectral embedding.
+    Kpca,
+    /// Spectral k-means clustering on the embedding.
+    Cluster,
+}
+
+impl TaskKind {
+    pub fn parse(s: &str) -> Result<TaskKind> {
+        Ok(match s {
+            "krr" => TaskKind::Krr,
+            "kpca" => TaskKind::Kpca,
+            "cluster" => TaskKind::Cluster,
+            other => bail!("unknown task '{other}' (expected krr|kpca|cluster)"),
+        })
+    }
+
+    /// The canonical spelling [`parse`](TaskKind::parse) accepts.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TaskKind::Krr => "krr",
+            TaskKind::Kpca => "kpca",
+            TaskKind::Cluster => "cluster",
+        }
+    }
+
+    /// The shared CLI/server default embedding dimensionality: one
+    /// dimension per cluster for the cluster task, 2 otherwise. (In one
+    /// place so the front ends cannot drift.)
+    pub fn default_components(self, clusters: usize) -> usize {
+        match self {
+            TaskKind::Cluster => clusters,
+            TaskKind::Krr | TaskKind::Kpca => 2,
+        }
+    }
+}
+
+/// A fully resolved task configuration — labels already loaded, every
+/// parameter validated. The engine resolves a
+/// [`TaskSpec`](crate::engine::TaskSpec) (which still holds file paths)
+/// into this; tests and the library construct it directly.
+#[derive(Clone, Debug)]
+pub struct TaskConfig {
+    pub kind: TaskKind,
+    /// Ridge λ (KRR; must be > 0 — λ = 0 would invert a singular G̃).
+    pub ridge: f64,
+    /// Embedding dimensions d (KPCA, and the spectral-cluster embedding).
+    pub components: usize,
+    /// Cluster count (cluster task).
+    pub clusters: usize,
+    /// K-means seeding RNG (cluster task).
+    pub seed: u64,
+    /// Training labels, one per data point (KRR only).
+    pub labels: Option<Vec<f64>>,
+}
+
+impl TaskConfig {
+    /// A config with the CLI/server defaults for `kind`; set the fields
+    /// the task reads before fitting.
+    pub fn new(kind: TaskKind) -> TaskConfig {
+        TaskConfig {
+            kind,
+            ridge: 1e-3,
+            components: 2,
+            clusters: 2,
+            seed: 7,
+            labels: None,
+        }
+    }
+
+    /// Validate the parameters the task will read. (Label length is
+    /// checked against n at fit time.)
+    pub fn validate(&self) -> Result<()> {
+        match self.kind {
+            TaskKind::Krr => {
+                if !(self.ridge.is_finite() && self.ridge > 0.0) {
+                    bail!("krr ridge must be a finite number > 0");
+                }
+                if self.labels.is_none() {
+                    bail!("krr needs training labels (one per data point)");
+                }
+            }
+            TaskKind::Kpca => {
+                if self.components == 0 {
+                    bail!("kpca needs components ≥ 1");
+                }
+            }
+            TaskKind::Cluster => {
+                if self.clusters < 2 {
+                    bail!("cluster needs clusters ≥ 2");
+                }
+                if self.components == 0 {
+                    bail!("cluster needs components ≥ 1");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A fitted downstream model. Everything a model holds lives in the
+/// k-dimensional landmark space (plus d-dimensional embedding state), so
+/// prediction needs only the kernel and the k selected points — the same
+/// dataset-free contract as the artifact extension queries.
+#[derive(Clone, Debug)]
+pub enum FittedTask {
+    Krr(KrrModel),
+    Kpca(KpcaModel),
+    Cluster(ClusterModel),
+}
+
+/// A fit plus its in-sample by-products (reported once, not stored in
+/// the model: they are O(n)).
+#[derive(Clone, Debug)]
+pub struct TaskFit {
+    pub model: FittedTask,
+    /// In-sample cluster labels (cluster task only).
+    pub cluster_labels: Option<Vec<usize>>,
+}
+
+/// Per-point predictions, shaped by the task.
+#[derive(Clone, Debug)]
+pub enum TaskPrediction {
+    /// KRR: one regression value per query point.
+    Values(Vec<f64>),
+    /// KPCA: one d-vector of embedding coordinates per query point.
+    Embeddings(Vec<Vec<f64>>),
+    /// Cluster: one label per query point, plus its embedding.
+    Labels { labels: Vec<usize>, embeddings: Vec<Vec<f64>> },
+}
+
+impl TaskPrediction {
+    /// The `"predictions"` JSON value (shared by the CLI and the server,
+    /// so their rendered predictions are byte-identical).
+    pub fn to_json(&self) -> Json {
+        match self {
+            TaskPrediction::Values(v) => {
+                Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+            }
+            TaskPrediction::Embeddings(rows) => Json::Arr(
+                rows.iter()
+                    .map(|r| Json::Arr(r.iter().map(|&x| Json::Num(x)).collect()))
+                    .collect(),
+            ),
+            TaskPrediction::Labels { labels, .. } => {
+                Json::Arr(labels.iter().map(|&l| Json::Num(l as f64)).collect())
+            }
+        }
+    }
+}
+
+/// `b(z) = [k(z, x_{Λ(t)})]` over the selected points — the only kernel
+/// evaluations any task prediction performs. One shared helper so every
+/// front end (CLI, live session, loaded artifact) computes identical
+/// bits.
+pub fn landmark_row(
+    kernel: &dyn Kernel,
+    selected: &Dataset,
+    z: &[f64],
+) -> Result<Vec<f64>> {
+    if z.len() != selected.dim() {
+        bail!(
+            "query point has dimension {} but the model's landmarks have {}",
+            z.len(),
+            selected.dim()
+        );
+    }
+    Ok((0..selected.n()).map(|t| kernel.eval(z, selected.point(t))).collect())
+}
+
+impl FittedTask {
+    pub fn kind(&self) -> TaskKind {
+        match self {
+            FittedTask::Krr(_) => TaskKind::Krr,
+            FittedTask::Kpca(_) => TaskKind::Kpca,
+            FittedTask::Cluster(_) => TaskKind::Cluster,
+        }
+    }
+
+    /// Fit `cfg`'s task on an approximation. O(nk² + k³) for every task;
+    /// the full n×n G̃ is never formed.
+    pub fn fit(approx: &NystromApprox, cfg: &TaskConfig) -> Result<TaskFit> {
+        cfg.validate()?;
+        Ok(match cfg.kind {
+            TaskKind::Krr => {
+                let y = cfg.labels.as_deref().ok_or_else(|| {
+                    anyhow!("krr needs training labels (one per data point)")
+                })?;
+                TaskFit {
+                    model: FittedTask::Krr(KrrModel::fit(approx, y, cfg.ridge)?),
+                    cluster_labels: None,
+                }
+            }
+            TaskKind::Kpca => {
+                let (model, _embedding) = KpcaModel::fit(approx, cfg.components)?;
+                TaskFit { model: FittedTask::Kpca(model), cluster_labels: None }
+            }
+            TaskKind::Cluster => {
+                let (model, labels) = ClusterModel::fit(
+                    approx,
+                    cfg.clusters,
+                    cfg.components,
+                    cfg.seed,
+                )?;
+                TaskFit {
+                    model: FittedTask::Cluster(model),
+                    cluster_labels: Some(labels),
+                }
+            }
+        })
+    }
+
+    /// Predict for a batch of query points, dataset-free: only the k
+    /// selected points are evaluated against (`selected` row t must be
+    /// the point of factor column t — a session's dataset selection or
+    /// an artifact's stored `Z_Λ`).
+    pub fn predict(
+        &self,
+        kernel: &dyn Kernel,
+        selected: &Dataset,
+        points: &[Vec<f64>],
+    ) -> Result<TaskPrediction> {
+        self.check_landmarks(selected)?;
+        Ok(match self {
+            FittedTask::Krr(m) => {
+                let mut out = Vec::with_capacity(points.len());
+                for z in points {
+                    out.push(m.predict_row(&landmark_row(kernel, selected, z)?));
+                }
+                TaskPrediction::Values(out)
+            }
+            FittedTask::Kpca(m) => {
+                let mut out = Vec::with_capacity(points.len());
+                for z in points {
+                    out.push(m.project_row(&landmark_row(kernel, selected, z)?));
+                }
+                TaskPrediction::Embeddings(out)
+            }
+            FittedTask::Cluster(m) => {
+                let mut labels = Vec::with_capacity(points.len());
+                let mut embeddings = Vec::with_capacity(points.len());
+                for z in points {
+                    let (l, e) = m.assign_row(&landmark_row(kernel, selected, z)?);
+                    labels.push(l);
+                    embeddings.push(e);
+                }
+                TaskPrediction::Labels { labels, embeddings }
+            }
+        })
+    }
+
+    /// The landmark count k the model was fit with.
+    pub fn k(&self) -> usize {
+        match self {
+            FittedTask::Krr(m) => m.beta.len(),
+            FittedTask::Kpca(m) => m.proj.rows,
+            FittedTask::Cluster(m) => m.embedding.proj.rows,
+        }
+    }
+
+    fn check_landmarks(&self, selected: &Dataset) -> Result<()> {
+        if selected.n() != self.k() {
+            bail!(
+                "model was fit with k = {} landmarks but {} selected points \
+                 were supplied",
+                self.k(),
+                selected.n()
+            );
+        }
+        Ok(())
+    }
+
+    /// Fit-summary JSON (shared by the CLI report and the server
+    /// response).
+    pub fn summary_json(&self) -> Json {
+        match self {
+            FittedTask::Krr(m) => Json::obj(vec![
+                ("task", Json::Str("krr".into())),
+                ("k", Json::Num(m.beta.len() as f64)),
+                ("ridge", Json::Num(m.lambda)),
+                ("train_rmse", Json::Num(m.train_rmse)),
+            ]),
+            FittedTask::Kpca(m) => Json::obj(vec![
+                ("task", Json::Str("kpca".into())),
+                ("k", Json::Num(m.proj.rows as f64)),
+                ("components", Json::Num(m.vals.len() as f64)),
+                (
+                    "eigenvalues",
+                    Json::Arr(m.vals.iter().map(|&v| Json::Num(v)).collect()),
+                ),
+            ]),
+            FittedTask::Cluster(m) => Json::obj(vec![
+                ("task", Json::Str("cluster".into())),
+                ("k", Json::Num(m.embedding.proj.rows as f64)),
+                ("clusters", Json::Num(m.centroids.rows as f64)),
+                ("components", Json::Num(m.embedding.vals.len() as f64)),
+                ("seed", Json::Num(m.seed as f64)),
+            ]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::two_moons;
+    use crate::kernels::Gaussian;
+    use crate::sampling::{assemble_from_indices, ImplicitOracle};
+
+    fn approx_of(n: usize) -> (NystromApprox, Dataset, Gaussian) {
+        let ds = two_moons(n, 0.05, 5);
+        let kern = Gaussian::new(0.6);
+        let approx = {
+            let oracle = ImplicitOracle::new(&ds, &kern);
+            let idx: Vec<usize> = (0..n).step_by(3).collect();
+            assemble_from_indices(&oracle, idx, 0.0)
+        };
+        (approx, ds, kern)
+    }
+
+    #[test]
+    fn kind_spellings_round_trip() {
+        for k in [TaskKind::Krr, TaskKind::Kpca, TaskKind::Cluster] {
+            assert_eq!(TaskKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(TaskKind::parse("magic").is_err());
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut krr = TaskConfig::new(TaskKind::Krr);
+        assert!(krr.validate().is_err(), "labels required");
+        krr.labels = Some(vec![0.0; 4]);
+        assert!(krr.validate().is_ok());
+        krr.ridge = 0.0;
+        assert!(krr.validate().is_err(), "ridge must be > 0");
+
+        let mut kpca = TaskConfig::new(TaskKind::Kpca);
+        kpca.components = 0;
+        assert!(kpca.validate().is_err());
+
+        let mut cl = TaskConfig::new(TaskKind::Cluster);
+        cl.clusters = 1;
+        assert!(cl.validate().is_err());
+    }
+
+    #[test]
+    fn fit_dispatches_and_predicts_every_kind() {
+        let (approx, ds, kern) = approx_of(60);
+        let selected = ds.select(&approx.indices);
+        let labels: Vec<f64> = (0..60).map(|i| (i % 2) as f64).collect();
+        let points = vec![vec![0.4, 0.1], vec![-0.5, 0.3]];
+
+        let mut cfg = TaskConfig::new(TaskKind::Krr);
+        cfg.labels = Some(labels);
+        let fit = FittedTask::fit(&approx, &cfg).unwrap();
+        assert_eq!(fit.model.kind(), TaskKind::Krr);
+        match fit.model.predict(&kern, &selected, &points).unwrap() {
+            TaskPrediction::Values(v) => assert_eq!(v.len(), 2),
+            other => panic!("unexpected prediction {other:?}"),
+        }
+
+        let cfg = TaskConfig::new(TaskKind::Kpca);
+        let fit = FittedTask::fit(&approx, &cfg).unwrap();
+        match fit.model.predict(&kern, &selected, &points).unwrap() {
+            TaskPrediction::Embeddings(rows) => {
+                assert_eq!(rows.len(), 2);
+                assert_eq!(rows[0].len(), 2);
+            }
+            other => panic!("unexpected prediction {other:?}"),
+        }
+
+        let cfg = TaskConfig::new(TaskKind::Cluster);
+        let fit = FittedTask::fit(&approx, &cfg).unwrap();
+        let labels = fit.cluster_labels.expect("in-sample labels");
+        assert_eq!(labels.len(), 60);
+        match fit.model.predict(&kern, &selected, &points).unwrap() {
+            TaskPrediction::Labels { labels, embeddings } => {
+                assert_eq!(labels.len(), 2);
+                assert_eq!(embeddings.len(), 2);
+            }
+            other => panic!("unexpected prediction {other:?}"),
+        }
+
+        // landmark-count and dimension mismatches are clean errors
+        let wrong = ds.select(&approx.indices[..3]);
+        assert!(fit.model.predict(&kern, &wrong, &points).is_err());
+        assert!(fit
+            .model
+            .predict(&kern, &selected, &[vec![1.0]])
+            .is_err());
+    }
+}

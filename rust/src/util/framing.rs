@@ -48,6 +48,17 @@ pub fn push_f64_section(out: &mut Vec<u8>, xs: &[f64]) {
     }
 }
 
+/// Append one framed **f32** section: `[u64 LE count][count × f32 LE]`,
+/// narrowing each value with an `as f32` cast — the artifact store's
+/// compact payload encoding (`encoding: "f32"`; lossy, ~half the bytes).
+pub fn push_f32_section(out: &mut Vec<u8>, xs: &[f64]) {
+    out.reserve(8 + xs.len() * 4);
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&(x as f32).to_le_bytes());
+    }
+}
+
 /// Sequential reader over a framed payload.
 pub struct SectionReader<'a> {
     b: &'a [u8],
@@ -88,6 +99,22 @@ impl<'a> SectionReader<'a> {
         let mut out = Vec::with_capacity(expect);
         for chunk in raw.chunks_exact(8) {
             out.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    /// Read one framed **f32** section written by [`push_f32_section`],
+    /// widening each value back to f64 (exact — every f32 is an f64).
+    pub fn read_f32_section(&mut self, expect: usize, what: &str) -> Result<Vec<f64>> {
+        let len_bytes = self.take(8, what)?;
+        let len = u64::from_le_bytes(len_bytes.try_into().unwrap());
+        if len != expect as u64 {
+            bail!("{what}: frame holds {len} values but the header implies {expect}");
+        }
+        let raw = self.take(expect * 4, what)?;
+        let mut out = Vec::with_capacity(expect);
+        for chunk in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().unwrap()) as f64);
         }
         Ok(out)
     }
@@ -150,6 +177,27 @@ mod tests {
             assert_eq!(x.to_bits(), y.to_bits());
         }
         assert_eq!(rb, b);
+    }
+
+    #[test]
+    fn f32_sections_round_trip_at_f32_precision() {
+        let a = vec![0.1, -0.0, 1.0 / 3.0, 2.5];
+        let mut payload = Vec::new();
+        push_f32_section(&mut payload, &a);
+        assert_eq!(payload.len(), 8 + 4 * a.len());
+        let mut r = SectionReader::new(&payload);
+        let back = r.read_f32_section(a.len(), "a").unwrap();
+        assert_eq!(r.remaining(), 0);
+        for (x, y) in a.iter().zip(&back) {
+            // exact round trip of the f32 cast (f32 → f64 is lossless)
+            assert_eq!((*x as f32) as f64, *y);
+        }
+        // -0.0 keeps its sign through the narrow-widen pair
+        assert!(back[1] == 0.0 && back[1].is_sign_negative());
+        // truncation and frame/header disagreement still error
+        let cut = &payload[..payload.len() - 2];
+        assert!(SectionReader::new(cut).read_f32_section(4, "a").is_err());
+        assert!(SectionReader::new(&payload).read_f32_section(5, "a").is_err());
     }
 
     #[test]

@@ -226,6 +226,190 @@ fn approximate_data_save_then_query_load() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// End-to-end downstream tasks through the binary: approximate a CSV
+/// and save it, fit KRR from the artifact (dataset-free) with a labels
+/// file, predict deterministically, persist the fitted model back into
+/// the artifact, and reuse it without labels.
+#[test]
+fn task_krr_fit_save_and_labelfree_reuse() {
+    let dir = std::env::temp_dir()
+        .join("oasis-cli-task-test")
+        .join(format!("run-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("pts.csv");
+    let labels = dir.join("y.csv");
+    let pred = dir.join("pred.csv");
+    let model = dir.join("model.oasis");
+    let tasked = dir.join("tasked.oasis");
+
+    let mut text = String::new();
+    let mut ytext = String::new();
+    for i in 0..60 {
+        text.push_str(&format!(
+            "{},{}\n",
+            (i % 10) as f64 * 0.37,
+            (i / 10) as f64 * 0.81
+        ));
+        ytext.push_str(&format!("{}\n", i % 2));
+    }
+    std::fs::write(&csv, text).unwrap();
+    std::fs::write(&labels, ytext).unwrap();
+    std::fs::write(&pred, "0.5,0.5\n1.8,2.4\n").unwrap();
+
+    let (_, stderr, ok) = run(&[
+        "approximate",
+        "--data",
+        csv.to_str().unwrap(),
+        "--cols",
+        "14",
+        "--method",
+        "oasis",
+        "--save",
+        model.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+
+    // the dataset is not needed for the task — only the artifact
+    std::fs::remove_file(&csv).unwrap();
+
+    let fit = |extra: &[&str]| {
+        let mut argv = vec![
+            "task",
+            "--task",
+            "krr",
+            "--load",
+            model.to_str().unwrap(),
+            "--labels",
+            labels.to_str().unwrap(),
+            "--ridge",
+            "0.001",
+            "--predict",
+            pred.to_str().unwrap(),
+            "--json",
+        ];
+        argv.extend_from_slice(extra);
+        run(&argv)
+    };
+    let (out1, stderr, ok) = fit(&[]);
+    assert!(ok, "stderr: {stderr}");
+    let line = out1.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"task\":\"krr\""), "{line}");
+    assert!(line.contains("\"train_rmse\":"), "{line}");
+    assert!(line.contains("\"predictions\":["), "{line}");
+    // deterministic across invocations
+    let (out2, _, _) = fit(&[]);
+    assert_eq!(out1, out2, "task predictions must be deterministic");
+
+    // persist the fitted model into the artifact, then reuse it with no
+    // labels at all
+    let (_, stderr, ok) = fit(&["--save", tasked.to_str().unwrap()]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stderr.contains("saved artifact with task model"), "{stderr}");
+    std::fs::remove_file(&labels).unwrap();
+    let (out3, stderr, ok) = run(&[
+        "task",
+        "--task",
+        "krr",
+        "--load",
+        tasked.to_str().unwrap(),
+        "--predict",
+        pred.to_str().unwrap(),
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let stored_line =
+        out3.lines().find(|l| l.starts_with('{')).expect("json line");
+    let preds_of = |l: &str| {
+        l.split("\"predictions\":")
+            .nth(1)
+            .map(str::to_string)
+            .expect("predictions present")
+    };
+    assert_eq!(
+        preds_of(line),
+        preds_of(stored_line),
+        "stored-model predictions diverged from the fresh fit"
+    );
+
+    // krr without labels and without a stored model is a clear error
+    let (_, stderr, ok) = run(&[
+        "task",
+        "--task",
+        "krr",
+        "--load",
+        model.to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("--labels"), "{stderr}");
+
+    // kpca and cluster run label-free from the artifact
+    for (task, needle) in
+        [("kpca", "\"eigenvalues\":"), ("cluster", "\"clusters\":")]
+    {
+        let (out, stderr, ok) = run(&[
+            "task",
+            "--task",
+            task,
+            "--load",
+            model.to_str().unwrap(),
+            "--json",
+        ]);
+        assert!(ok, "{task} failed: {stderr}");
+        let l = out.lines().find(|l| l.starts_with('{')).expect("json line");
+        assert!(l.contains(needle), "{task}: {l}");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--save-f32` writes a smaller artifact that still answers queries.
+#[test]
+fn approximate_save_f32_roundtrip() {
+    let dir = std::env::temp_dir()
+        .join("oasis-cli-f32-test")
+        .join(format!("run-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let wide = dir.join("wide.oasis");
+    let slim = dir.join("slim.oasis");
+    for (flag, path) in [(false, &wide), (true, &slim)] {
+        let mut argv = vec![
+            "approximate",
+            "--dataset",
+            "two-moons",
+            "--n",
+            "200",
+            "--cols",
+            "30",
+            "--method",
+            "oasis",
+            "--save",
+            path.to_str().unwrap(),
+        ];
+        if flag {
+            argv.push("--save-f32");
+        }
+        let (_, stderr, ok) = run(&argv);
+        assert!(ok, "stderr: {stderr}");
+    }
+    let (wlen, slen) = (
+        std::fs::metadata(&wide).unwrap().len(),
+        std::fs::metadata(&slim).unwrap().len(),
+    );
+    assert!(slen < wlen, "f32 artifact not smaller: {slen} vs {wlen}");
+    let (stdout, stderr, ok) = run(&[
+        "query",
+        "--load",
+        slim.to_str().unwrap(),
+        "--points",
+        "0.5,0.2",
+        "--targets",
+        "0,100",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("g(0)="), "{stdout}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn query_without_load_errors() {
     let (_, stderr, ok) = run(&["query"]);

@@ -163,11 +163,17 @@ fn warm_start_resolution_errors_are_specific() {
             path: PathBuf::from(format!("/nonexistent/{label}")),
         })
     };
-    // non-oasis methods cannot warm start
+    // only the Schur-complement selectors (oasis, sis) can warm start
+    let mut s = spec(Method::Farahat, moons(40), gaussian_frac(), 10);
+    s.warm_start = warm("a.oasis");
+    let err = SessionBuilder::new().resolve(s).unwrap_err();
+    assert!(format!("{err}").contains("'oasis' and 'sis'"), "{err}");
+    // sis *is* warmable now: with a missing artifact it fails on the
+    // file, not on the method
     let mut s = spec(Method::Sis, moons(40), gaussian_frac(), 10);
     s.warm_start = warm("a.oasis");
     let err = SessionBuilder::new().resolve(s).unwrap_err();
-    assert!(format!("{err}").contains("'oasis'"), "{err}");
+    assert!(!format!("{err}").contains("methods only"), "{err}");
     // a missing artifact file names the problem
     let mut s = spec(Method::Oasis, moons(40), gaussian_frac(), 10);
     s.warm_start = warm("b.oasis");

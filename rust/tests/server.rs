@@ -667,6 +667,184 @@ fn warm_start_create_resumes_from_artifact() {
     std::fs::remove_dir_all(&root).ok();
 }
 
+/// ACCEPTANCE: the downstream-task layer answers identically through
+/// every front end — KRR predictions from the CLI's dataset-free
+/// library path (`oasis task --load`), from the live session's
+/// `POST /sessions/{name}/task`, and from the loaded artifact's
+/// `POST /artifacts/{name}/task` are bit-identical for the same
+/// approximation; repeated requests hit the fitted-model cache, and the
+/// kpca/cluster tasks serve label-free.
+#[test]
+fn krr_task_parity_cli_live_artifact_over_socket() {
+    let root = std::env::temp_dir()
+        .join("oasis-server-task-test")
+        .join(format!("run-{}", std::process::id()));
+    std::fs::create_dir_all(&root).unwrap();
+    let (addr, join) = start_server_rooted(root.clone());
+
+    let n = 120;
+    let ds = two_moons(n, 0.05, 27);
+    loader::save_csv(&root.join("train.csv"), &ds).unwrap();
+    let labels: Vec<Vec<f64>> = (0..n).map(|i| vec![(i % 2) as f64]).collect();
+    loader::save_csv(
+        &root.join("labels.csv"),
+        &oasis::data::Dataset::from_rows(labels),
+    )
+    .unwrap();
+
+    let create = r#"{"name":"t0",
+        "dataset":{"file":"train.csv"},
+        "kernel":{"type":"gaussian","sigma":0.7},
+        "method":"oasis","max_cols":24,"init_cols":4,"seed":3}"#;
+    let (status, j) = request(addr, "POST", "/sessions", create);
+    assert_eq!(status, 200, "{j}");
+    let (status, j) = request(addr, "POST", "/sessions/t0/step", r#"{"budget":24}"#);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(usize_field(&j, "k"), 24);
+
+    // live-session task fit + predictions
+    let task_body = r#"{"task":"krr","ridge":0.001,
+        "labels_file":"labels.csv",
+        "predict":[[0.3,0.1],[-0.5,0.4],[1.2,-0.3]]}"#;
+    let (status, live) = request(addr, "POST", "/sessions/t0/task", task_body);
+    assert_eq!(status, 200, "{live}");
+    assert_eq!(live.get("task").and_then(Json::as_str), Some("krr"));
+    assert_eq!(live.get("model").and_then(Json::as_str), Some("fitted"));
+    assert_eq!(usize_field(&live, "k"), 24);
+    assert!(live.get("train_rmse").and_then(Json::as_f64).is_some());
+    let preds_of = |j: &Json| -> Vec<f64> {
+        j.get("predictions")
+            .and_then(Json::as_arr)
+            .unwrap_or_else(|| panic!("missing predictions in {j}"))
+            .iter()
+            .map(|v| v.as_f64().expect("numeric prediction"))
+            .collect()
+    };
+    let live_preds = preds_of(&live);
+    assert_eq!(live_preds.len(), 3);
+
+    // identical repeat → fitted-model cache
+    let (status, again) = request(addr, "POST", "/sessions/t0/task", task_body);
+    assert_eq!(status, 200, "{again}");
+    assert_eq!(again.get("model").and_then(Json::as_str), Some("cached"));
+    for (a, b) in live_preds.iter().zip(&preds_of(&again)) {
+        assert_eq!(a.to_bits(), b.to_bits(), "cached predictions diverged");
+    }
+    // predict-only traffic: a krr request with no labels at all reuses
+    // the fitted model (fit once, predict many)
+    let (status, lf) = request(
+        addr,
+        "POST",
+        "/sessions/t0/task",
+        r#"{"task":"krr","predict":[[0.3,0.1]]}"#,
+    );
+    assert_eq!(status, 200, "{lf}");
+    assert_eq!(lf.get("model").and_then(Json::as_str), Some("cached"));
+    assert_eq!(
+        preds_of(&lf)[0].to_bits(),
+        live_preds[0].to_bits(),
+        "label-free predict diverged from the fitted model"
+    );
+
+    // persist, host as an artifact, and ask the artifact endpoint
+    let (status, j) =
+        request(addr, "POST", "/sessions/t0/save", r#"{"path":"t.oasis"}"#);
+    assert_eq!(status, 200, "{j}");
+    let (status, j) = request(
+        addr,
+        "POST",
+        "/artifacts/load",
+        r#"{"path":"t.oasis","name":"t-rep"}"#,
+    );
+    assert_eq!(status, 200, "{j}");
+    let (status, stored) = request(addr, "POST", "/artifacts/t-rep/task", task_body);
+    assert_eq!(status, 200, "{stored}");
+    assert_eq!(stored.get("model").and_then(Json::as_str), Some("fitted"));
+    let stored_preds = preds_of(&stored);
+    for (a, b) in live_preds.iter().zip(&stored_preds) {
+        assert_eq!(a.to_bits(), b.to_bits(), "artifact predictions diverged");
+    }
+    // the artifact's second identical request is cached too
+    let (_, j) = request(addr, "POST", "/artifacts/t-rep/task", task_body);
+    assert_eq!(j.get("model").and_then(Json::as_str), Some("cached"));
+
+    // the CLI's dataset-free library path: load the artifact file, fit
+    // through the engine with the same labels file, predict the same
+    // points — bit-identical to both endpoints
+    let artifact =
+        oasis::nystrom::StoredArtifact::load(&root.join("t.oasis")).unwrap();
+    let mut spec = oasis::engine::TaskSpec::new(oasis::tasks::TaskKind::Krr);
+    spec.ridge = 0.001;
+    spec.labels = Some(oasis::engine::LabelsSpec {
+        label: "labels.csv".into(),
+        path: root.join("labels.csv"),
+        col: 0,
+    });
+    let cfg = SessionBuilder::new().resolve_task(&spec).unwrap();
+    let fit = oasis::tasks::FittedTask::fit(&artifact.approx, &cfg).unwrap();
+    let kernel = artifact.kernel.build();
+    let cli_preds = match fit
+        .model
+        .predict(
+            &*kernel,
+            &artifact.selected_points,
+            &[vec![0.3, 0.1], vec![-0.5, 0.4], vec![1.2, -0.3]],
+        )
+        .unwrap()
+    {
+        oasis::tasks::TaskPrediction::Values(v) => v,
+        other => panic!("unexpected prediction {other:?}"),
+    };
+    for (a, b) in live_preds.iter().zip(&cli_preds) {
+        assert_eq!(a.to_bits(), b.to_bits(), "CLI-path predictions diverged");
+    }
+
+    // label-free tasks serve over both endpoints
+    let (status, jk) = request(
+        addr,
+        "POST",
+        "/artifacts/t-rep/task",
+        r#"{"task":"kpca","components":2,"predict":[[0.3,0.1]]}"#,
+    );
+    assert_eq!(status, 200, "{jk}");
+    assert!(jk.get("eigenvalues").and_then(Json::as_arr).is_some());
+    let (status, jc) = request(
+        addr,
+        "POST",
+        "/sessions/t0/task",
+        r#"{"task":"cluster","clusters":2,"predict":[[0.3,0.1]]}"#,
+    );
+    assert_eq!(status, 200, "{jc}");
+    assert_eq!(usize_field(&jc, "clusters"), 2);
+
+    // krr without labels on an artifact without a stored model → 400;
+    // dimension mismatches → 400
+    assert_eq!(
+        request(addr, "POST", "/artifacts/t-rep/task", r#"{"task":"krr"}"#).0,
+        400
+    );
+    assert_eq!(
+        request(
+            addr,
+            "POST",
+            "/sessions/t0/task",
+            r#"{"task":"kpca","predict":[[1]]}"#
+        )
+        .0,
+        400
+    );
+
+    // counters: fits, cache hits, and predictions all moved
+    let (_, m) = request(addr, "GET", "/metrics", "");
+    let server = m.get("server").expect("server counters");
+    assert!(usize_field(server, "tasks_fitted") >= 4, "{m}");
+    assert!(usize_field(server, "task_cache_hits") >= 2, "{m}");
+    assert!(usize_field(server, "task_predictions") >= 8, "{m}");
+
+    stop_server(addr, join);
+    std::fs::remove_dir_all(&root).ok();
+}
+
 /// The distributed oASIS-P method is hostable too, including its (new)
 /// non-terminal snapshot gather.
 #[test]

@@ -370,6 +370,58 @@ fn warm_start_from_artifact_equals_prefix_resume() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// WARM START for `sis` through the engine: same contract as the oasis
+/// test above — a saved 12-column sis prefix resumes bit-identically to
+/// the uninterrupted 24-column run (sis is the naive correctness
+/// oracle, so this also cross-checks the oasis replay arithmetic).
+#[test]
+fn sis_warm_start_through_engine_equals_prefix_resume() {
+    let dir = std::env::temp_dir()
+        .join("oasis-engine-sis-warm-test")
+        .join(format!("r{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sis_spec = |cols: usize, warm: Option<WarmStartSpec>| {
+        let mut s = oasis_spec(200, cols, warm);
+        s.method.method = Method::Sis;
+        s.stopping = engine::stopping_rule(cols, None, None);
+        s
+    };
+
+    let run = SessionBuilder::new().resolve(sis_spec(24, None)).unwrap();
+    let slot = run.oracle_slot();
+    let mut s = run.open_session(&slot).unwrap();
+    run_to_completion(s.as_mut(), &run.stopping).unwrap();
+    let reference = s.snapshot().unwrap();
+
+    let run2 = SessionBuilder::new().resolve(sis_spec(12, None)).unwrap();
+    let slot2 = run2.oracle_slot();
+    let mut s2 = run2.open_session(&slot2).unwrap();
+    run_to_completion(s2.as_mut(), &run2.stopping).unwrap();
+    let artifact = StoredArtifact::from_parts(
+        s2.snapshot().unwrap(),
+        run2.dataset().unwrap(),
+        &*run2.kernel,
+        Provenance { source: run2.source.clone(), method: "sis".into() },
+        None,
+    )
+    .unwrap();
+    let path = dir.join("sis-prefix.oasis");
+    artifact.save(&path).unwrap();
+
+    let warm = Some(WarmStartSpec { label: "sis-prefix.oasis".into(), path });
+    let run3 = SessionBuilder::new().resolve(sis_spec(24, warm)).unwrap();
+    let slot3 = run3.oracle_slot();
+    let mut s3 = run3.open_session(&slot3).unwrap();
+    assert_eq!(s3.k(), 12, "warm sis session resumes at the stored k");
+    run_to_completion(s3.as_mut(), &run3.stopping).unwrap();
+    let warmed = s3.snapshot().unwrap();
+    assert_eq!(warmed.indices, reference.indices, "selection diverged");
+    assert_eq!(warmed.c.data, reference.c.data, "C diverged");
+    assert_eq!(warmed.winv.data, reference.winv.data, "W⁻¹ diverged");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// `ScoreBelow` as an external criterion stops a run that the internal
 /// numerical floor would have let continue.
 #[test]

@@ -1,0 +1,363 @@
+//! Integration tests for the downstream-tasks layer (`oasis::tasks`):
+//! KRR / kernel-PCA / spectral clustering fit on real sampler output,
+//! and — the acceptance property — KRR predictions bit-identical across
+//! the three ways an approximation reaches a task: a live session
+//! snapshot, a finished run, and a loaded artifact (dataset-free).
+
+use oasis::data::generators::{gaussian_clusters, two_moons};
+use oasis::data::{loader, Dataset, LoadLimits};
+use oasis::engine::{
+    DatasetSpec, KernelSpec, LabelsSpec, Method, MethodSpec, RunSpec,
+    SessionBuilder, TaskSpec,
+};
+use oasis::kernels::Gaussian;
+use oasis::linalg::Mat;
+use oasis::nystrom::{NystromApprox, Provenance, StoredArtifact};
+use oasis::sampling::oasis::Oasis;
+use oasis::sampling::{
+    run_to_completion, ImplicitOracle, SamplerSession, StoppingRule,
+};
+use oasis::seed::permutation_accuracy;
+use oasis::tasks::{FittedTask, TaskConfig, TaskKind, TaskPrediction};
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("oasis-tasks-test")
+        .join(format!("{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn values(p: &TaskPrediction) -> &[f64] {
+    match p {
+        TaskPrediction::Values(v) => v,
+        other => panic!("expected krr values, got {other:?}"),
+    }
+}
+
+/// ACCEPTANCE: the same KRR task, fit from (a) a live session snapshot,
+/// (b) the finished run's approximation, and (c) an artifact saved to
+/// disk and loaded back — bit-identical dual weights and predictions.
+/// The artifact path runs dataset-free: it sees only the stored factors,
+/// selected points, and kernel parameters.
+#[test]
+fn krr_bit_identical_across_live_finished_and_artifact_paths() {
+    let n = 160;
+    let ds = two_moons(n, 0.05, 31);
+    let kern = Gaussian::new(0.7);
+    let labels: Vec<f64> = (0..n).map(|i| (i % 2) as f64).collect();
+    let queries = vec![vec![0.4, 0.1], vec![-0.8, 0.6], vec![1.5, -0.2]];
+
+    let oracle = ImplicitOracle::new(&ds, &kern);
+    let mut session = Oasis::new(40, 5, 1e-12, 9).session(&oracle).unwrap();
+    run_to_completion(&mut session, &StoppingRule::budget(40)).unwrap();
+
+    // (a) live snapshot — the session keeps running afterwards
+    let live_snap = session.snapshot().unwrap();
+    // (b) the finished approximation
+    let finished = Box::new(session).finish().unwrap();
+
+    let mut cfg = TaskConfig::new(TaskKind::Krr);
+    cfg.labels = Some(labels);
+    cfg.ridge = 1e-3;
+
+    let fit_and_predict = |approx: &NystromApprox,
+                           selected: &Dataset,
+                           kernel: &dyn oasis::kernels::Kernel|
+     -> (Vec<f64>, Vec<f64>) {
+        let fit = FittedTask::fit(approx, &cfg).unwrap();
+        let beta = match &fit.model {
+            FittedTask::Krr(m) => m.beta.clone(),
+            other => panic!("unexpected model {other:?}"),
+        };
+        let preds =
+            values(&fit.model.predict(kernel, selected, &queries).unwrap())
+                .to_vec();
+        (beta, preds)
+    };
+
+    let selected = ds.select(&live_snap.indices);
+    let (beta_live, preds_live) = fit_and_predict(&live_snap, &selected, &kern);
+    let (beta_fin, preds_fin) = fit_and_predict(&finished, &selected, &kern);
+
+    // (c) the artifact path: save, reload, fit dataset-free
+    let dir = tmp_dir("krr-parity");
+    let path = dir.join("model.oasis");
+    StoredArtifact::from_parts(
+        finished,
+        &ds,
+        &kern,
+        Provenance { source: "test:two-moons".into(), method: "oasis".into() },
+        None,
+    )
+    .unwrap()
+    .save(&path)
+    .unwrap();
+    let artifact = StoredArtifact::load(&path).unwrap();
+    let art_kernel = artifact.kernel.build();
+    let (beta_art, preds_art) = fit_and_predict(
+        &artifact.approx,
+        &artifact.selected_points,
+        &*art_kernel,
+    );
+
+    for (label, (betas, preds)) in [
+        ("finished", (&beta_fin, &preds_fin)),
+        ("artifact", (&beta_art, &preds_art)),
+    ] {
+        assert_eq!(beta_live.len(), betas.len(), "{label}");
+        for (a, b) in beta_live.iter().zip(betas.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{label} beta diverged");
+        }
+        for (a, b) in preds_live.iter().zip(preds.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{label} prediction diverged");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The kernel-PCA embedding of a real oASIS run has orthonormal
+/// columns, and the out-of-sample projection agrees with the in-sample
+/// embedding at the training points.
+#[test]
+fn kpca_embedding_orthogonal_on_sampler_output() {
+    let n = 140;
+    let ds = two_moons(n, 0.05, 13);
+    let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+    let oracle = ImplicitOracle::new(&ds, &kern);
+    let mut session = Oasis::new(36, 5, 1e-12, 3).session(&oracle).unwrap();
+    run_to_completion(&mut session, &StoppingRule::budget(36)).unwrap();
+    let approx = session.snapshot().unwrap();
+
+    let fit = FittedTask::fit(&approx, &TaskConfig::new(TaskKind::Kpca)).unwrap();
+    let model = match &fit.model {
+        FittedTask::Kpca(m) => m,
+        other => panic!("unexpected model {other:?}"),
+    };
+    assert_eq!(model.dims(), 2);
+    // refit to get the in-sample embedding and check orthonormality
+    let (_, u) = oasis::tasks::KpcaModel::fit(&approx, 2).unwrap();
+    let utu = u.t_matmul(&u);
+    assert!(
+        utu.fro_dist(&Mat::eye(2)) < 1e-8,
+        "UᵀU deviates from I by {}",
+        utu.fro_dist(&Mat::eye(2))
+    );
+    // out-of-sample projection reproduces in-sample rows
+    let selected = ds.select(&approx.indices);
+    let points: Vec<Vec<f64>> =
+        [2usize, 77, 139].iter().map(|&i| ds.point(i).to_vec()).collect();
+    let pred = fit.model.predict(&kern, &selected, &points).unwrap();
+    let rows = match &pred {
+        TaskPrediction::Embeddings(rows) => rows,
+        other => panic!("unexpected prediction {other:?}"),
+    };
+    for (r, &i) in rows.iter().zip(&[2usize, 77, 139]) {
+        for (j, &got) in r.iter().enumerate() {
+            assert!(
+                (got - u.at(i, j)).abs() < 1e-6,
+                "point {i} dim {j}: {got} vs {}",
+                u.at(i, j)
+            );
+        }
+    }
+}
+
+/// Cluster labels are stable under a fixed seed (bit-identical refits)
+/// and recover well-separated clusters through a sampler-built
+/// approximation.
+#[test]
+fn cluster_labels_stable_and_accurate_under_fixed_seed() {
+    let n = 150;
+    let ds = gaussian_clusters(n, 3, 3, 0.07, 8);
+    let truth: Vec<usize> = (0..n).map(|i| i % 3).collect();
+    let kern = Gaussian::new(1.5);
+    let oracle = ImplicitOracle::new(&ds, &kern);
+    let mut session = Oasis::new(30, 5, 1e-12, 17).session(&oracle).unwrap();
+    run_to_completion(&mut session, &StoppingRule::budget(30)).unwrap();
+    let approx = session.snapshot().unwrap();
+
+    let mut cfg = TaskConfig::new(TaskKind::Cluster);
+    cfg.clusters = 3;
+    cfg.components = 3;
+    cfg.seed = 42;
+    let a = FittedTask::fit(&approx, &cfg).unwrap();
+    let b = FittedTask::fit(&approx, &cfg).unwrap();
+    let (la, lb) = (a.cluster_labels.unwrap(), b.cluster_labels.unwrap());
+    assert_eq!(la, lb, "labels changed across refits with the same seed");
+    let acc = permutation_accuracy(&la, &truth, 3);
+    assert!(acc > 0.9, "clustering accuracy {acc}");
+}
+
+/// The engine resolves a task spec end to end: labels load from a CSV
+/// column, and a run spec plus task spec produce a fitted model — the
+/// CLI's `oasis task` path at the library level.
+#[test]
+fn engine_resolves_task_with_file_labels() {
+    let n = 80;
+    let dir = tmp_dir("engine-task");
+    let ds = two_moons(n, 0.05, 3);
+    // labels file with two columns; take column 1
+    let rows: Vec<Vec<f64>> =
+        (0..n).map(|i| vec![99.0, (i % 2) as f64]).collect();
+    let labels_path = dir.join("labels.csv");
+    loader::save_csv(&labels_path, &Dataset::from_rows(rows)).unwrap();
+
+    let run = SessionBuilder::new()
+        .resolve(RunSpec {
+            dataset: DatasetSpec::Points(
+                (0..n).map(|i| ds.point(i).to_vec()).collect(),
+            ),
+            kernel: KernelSpec::Gaussian { sigma: Some(0.7), sigma_fraction: 0.05 },
+            method: MethodSpec {
+                method: Method::Oasis,
+                max_cols: 24,
+                init_cols: 5,
+                tol: 1e-12,
+                seed: 7,
+                batch: 10,
+                workers: 1,
+            },
+            stopping: StoppingRule::budget(24),
+            shard_reads: false,
+            warm_start: None,
+        })
+        .unwrap();
+    let slot = run.oracle_slot();
+    let mut s = run.open_session(&slot).unwrap();
+    run_to_completion(s.as_mut(), &run.stopping).unwrap();
+    let approx = s.snapshot().unwrap();
+
+    let mut spec = TaskSpec::new(TaskKind::Krr);
+    spec.ridge = 1e-2;
+    spec.labels = Some(LabelsSpec {
+        label: "labels.csv".into(),
+        path: labels_path.clone(),
+        col: 1,
+    });
+    let cfg = SessionBuilder::new().resolve_task(&spec).unwrap();
+    assert_eq!(cfg.labels.as_ref().unwrap().len(), n);
+    assert_eq!(cfg.labels.as_ref().unwrap()[1], 1.0);
+    let fit = FittedTask::fit(&approx, &cfg).unwrap();
+    match &fit.model {
+        FittedTask::Krr(m) => assert!(m.train_rmse.is_finite()),
+        other => panic!("unexpected model {other:?}"),
+    }
+
+    // an out-of-range label column is a clean error
+    let mut bad = spec.clone();
+    bad.labels.as_mut().unwrap().col = 7;
+    let err = SessionBuilder::new().resolve_task(&bad).unwrap_err();
+    assert!(format!("{err}").contains("column"), "{err}");
+    // a missing labels file names the label
+    let mut missing = spec.clone();
+    missing.labels.as_mut().unwrap().path = dir.join("absent.csv");
+    assert!(SessionBuilder::new().resolve_task(&missing).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The full pipeline the example drives: sample → save with a fitted
+/// task attached → reload → predict without labels, bit-identically;
+/// the f32 save keeps working for tasks, at reduced precision.
+#[test]
+fn saved_task_model_predicts_without_labels() {
+    let n = 100;
+    let ds = two_moons(n, 0.05, 19);
+    let kern = Gaussian::new(0.8);
+    let labels: Vec<f64> = (0..n).map(|i| (i % 2) as f64).collect();
+    let queries = vec![vec![0.3, 0.2], vec![-0.4, 0.9]];
+
+    let oracle = ImplicitOracle::new(&ds, &kern);
+    let mut session = Oasis::new(30, 4, 1e-12, 5).session(&oracle).unwrap();
+    run_to_completion(&mut session, &StoppingRule::budget(30)).unwrap();
+    let approx = session.snapshot().unwrap();
+
+    let mut cfg = TaskConfig::new(TaskKind::Krr);
+    cfg.labels = Some(labels);
+    let fit = FittedTask::fit(&approx, &cfg).unwrap();
+    let selected = ds.select(&approx.indices);
+    let want = values(&fit.model.predict(&kern, &selected, &queries).unwrap())
+        .to_vec();
+
+    let dir = tmp_dir("saved-task");
+    let path = dir.join("with-task.oasis");
+    StoredArtifact::from_parts(
+        approx,
+        &ds,
+        &kern,
+        Provenance { source: "test".into(), method: "oasis".into() },
+        None,
+    )
+    .unwrap()
+    .with_task(fit.model)
+    .unwrap()
+    .save(&path)
+    .unwrap();
+
+    // reload: the stored model predicts with no labels in sight
+    let back = StoredArtifact::load(&path).unwrap();
+    let model = back.task.as_ref().expect("stored task model");
+    let kernel = back.kernel.build();
+    let got = values(
+        &model.predict(&*kernel, &back.selected_points, &queries).unwrap(),
+    )
+    .to_vec();
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.to_bits(), b.to_bits(), "stored-task prediction diverged");
+    }
+
+    // f32 compaction: same pipeline, predictions within f32 slack
+    let f32_path = dir.join("compact.oasis");
+    let compact = back.clone().with_f32(true);
+    compact.save(&f32_path).unwrap();
+    let cback = StoredArtifact::load(&f32_path).unwrap();
+    assert!(cback.f32_payload);
+    let cmodel = cback.task.as_ref().expect("task survived f32 save");
+    let ckernel = cback.kernel.build();
+    let cgot = values(
+        &cmodel.predict(&*ckernel, &cback.selected_points, &queries).unwrap(),
+    )
+    .to_vec();
+    for (a, b) in want.iter().zip(&cgot) {
+        // the stored β is f64 (task sections stay f64), so the stored
+        // model's predictions are bit-identical even in an f32 artifact
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // but a *refit* from the f32 factors only agrees approximately
+    let mut cfg2 = TaskConfig::new(TaskKind::Krr);
+    cfg2.labels = Some((0..n).map(|i| (i % 2) as f64).collect());
+    let refit = FittedTask::fit(&cback.approx, &cfg2).unwrap();
+    let rgot = values(
+        &refit.model.predict(&*ckernel, &cback.selected_points, &queries).unwrap(),
+    )
+    .to_vec();
+    for (a, b) in want.iter().zip(&rgot) {
+        assert!(
+            (a - b).abs() < 1e-2 * (1.0 + a.abs()),
+            "f32 refit too far off: {a} vs {b}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `LoadLimits` bound label files like any dataset.
+#[test]
+fn label_loading_respects_limits() {
+    let dir = tmp_dir("label-limits");
+    let labels_path = dir.join("y.csv");
+    loader::save_csv(
+        &labels_path,
+        &Dataset::from_rows((0..50).map(|i| vec![i as f64]).collect()),
+    )
+    .unwrap();
+    let mut spec = TaskSpec::new(TaskKind::Krr);
+    spec.labels = Some(LabelsSpec {
+        label: "y.csv".into(),
+        path: labels_path,
+        col: 0,
+    });
+    let tight = LoadLimits { max_n: 10, max_dim: 4, max_elems: u128::MAX };
+    assert!(SessionBuilder::with_limits(tight).resolve_task(&spec).is_err());
+    assert!(SessionBuilder::new().resolve_task(&spec).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
