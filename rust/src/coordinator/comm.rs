@@ -1,9 +1,19 @@
-//! Message types and metered channels — the crate's stand-in for MPI
-//! `Broadcast(data)` / `Gather(variable)` (paper Fig. 4).
+//! Message types and transport-agnostic endpoints — the crate's stand-in
+//! for MPI `Broadcast(data)` / `Gather(variable)` (paper Fig. 4), now
+//! spoken over either in-process channels or TCP sockets (see
+//! [`transport`](super::transport) and [`net`](super::net)).
+//!
+//! The leader talks to each worker through a [`WorkerHandle`] wrapping a
+//! boxed [`WorkerSink`]; workers talk back through a [`LeaderHandle`]
+//! wrapping a shared [`LeaderSink`]. Both transports funnel worker →
+//! leader traffic into one mpsc channel (the [`LeaderInbox`]) so the
+//! leader's receive loop is transport-agnostic; per-message gather
+//! accounting happens on dequeue at the leader, broadcast accounting in
+//! [`WorkerHandle::send`].
 
 use super::metrics::Metrics;
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Leader → worker messages.
 #[derive(Debug, Clone)]
@@ -18,57 +28,110 @@ pub enum ToWorker {
     /// Request the raw data point at a global index this worker owns.
     FetchPoint { global_idx: usize },
     /// The broadcast selected point (paper: `Broadcast(Z(:,i))`): every
-    /// worker updates its shard state and replies with its next local
-    /// argmax.
+    /// worker updates its shard state (Eq. 5/6).
     Selected {
         global_idx: usize,
         point: Vec<f64>,
-        delta: f64,
+        /// The winner's sweep Δ when this pick is the fresh argmax of a
+        /// gather round (always the case at `merge_batch == 1`). `None`
+        /// for a queued batch candidate: its gathered Δ is stale after
+        /// the earlier picks of the batch, so every worker recomputes
+        /// Δ' = k(z,z) − bᵀq from its replicas — deterministic across
+        /// workers and exact against the current W⁻¹, which keeps the
+        /// factor updates exact even though the selection *order* is the
+        /// SQUEAK-style approximation.
+        delta: Option<f64>,
+        /// Leader epoch (bumped on every re-shard); workers stamp their
+        /// argmax replies with it so the leader can discard replies that
+        /// raced a re-shard.
+        epoch: u64,
+        /// Reply with a local argmax after updating. True for the last
+        /// pick of a batch (and always at `merge_batch == 1`, preserving
+        /// the paper's one-gather-per-column message pattern);
+        /// intermediate batch picks skip the Δ sweep entirely — the
+        /// SQUEAK compute win.
+        want_argmax: bool,
     },
     /// Non-terminal column gather (mid-run snapshot): the worker replies
-    /// with its current `Columns` block — same payload as the terminal
-    /// gather — and keeps running, so the leader can assemble a
-    /// [`NystromApprox`](crate::nystrom::NystromApprox) without ending
-    /// the run. Serving-style callers use this to hand out the current
-    /// factors between selection rounds.
-    GatherColumns,
-    /// Finish: send back the local C block (and worker 0 its W⁻¹).
-    Finish,
+    /// with one `Columns` block per owned segment — same payload as the
+    /// terminal gather — and keeps running. `winv` directs exactly one
+    /// live worker (the lowest-numbered) to also ship its W⁻¹ replica.
+    GatherColumns { winv: bool },
+    /// Re-shard after a worker death: the receiver additionally owns
+    /// `ranges` (global `(start, len)` row ranges) from now on. It
+    /// shard-reads those rows from the dataset file, rebuilds their C
+    /// and R state from its Z_Λ and W⁻¹ replicas, and marks the rows in
+    /// `selected` (the selection order so far) as taken. Broadcast to
+    /// every survivor — possibly with empty `ranges` — so all workers
+    /// advance to the new `epoch` together.
+    Adopt {
+        epoch: u64,
+        ranges: Vec<(usize, usize)>,
+        selected: Vec<usize>,
+        /// send a fresh argmax after adopting (restarts the gather round
+        /// the death interrupted)
+        want_argmax: bool,
+    },
+    /// Finish: send back the local C block(s) (and, when `winv` is set,
+    /// the W⁻¹ replica), then exit.
+    Finish { winv: bool },
 }
 
 /// Worker → leader messages.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub enum FromWorker {
-    /// Local Δ argmax over this shard (paper: `Gather(Δ_(i))`, reduced).
+    /// Local Δ argmax over this worker's rows (paper: `Gather(Δ_(i))`,
+    /// reduced), extended SQUEAK-style to the top-B local candidates.
     Argmax {
         worker: usize,
-        /// global index of the best unselected local candidate; None if
-        /// the shard is exhausted.
-        best: Option<(usize, f64)>, // (global index, signed Δ)
-        /// max |diag| over this shard (for the leader's relative
+        /// epoch of the leader message that triggered this sweep; the
+        /// leader discards replies from before the latest re-shard
+        epoch: u64,
+        /// up to `merge_batch` best unselected local candidates, best
+        /// first: (global index, signed Δ). Empty if the worker's rows
+        /// are exhausted.
+        candidates: Vec<(usize, f64)>,
+        /// max |diag| over this worker's rows (for the leader's relative
         /// tolerance floor — see `sampling::effective_tol`).
         d_max: f64,
-        /// Σ|Δᵢ| over this shard's unselected candidates — lets the
+        /// Σ|Δᵢ| over this worker's unselected candidates — lets the
         /// leader maintain the residual-trace error estimate that drives
         /// `StoppingCriterion::ErrorBelow` without extra messages.
         sum_abs_delta: f64,
-        /// Σ|dᵢ| over this shard (the estimate's denominator share).
+        /// Σ|dᵢ| over this worker's rows (the estimate's denominator
+        /// share).
         d_sum: f64,
     },
     /// Reply to `FetchPoint`.
     Point { global_idx: usize, point: Vec<f64> },
-    /// Final local C block: rows are this shard's points (local_n × k,
-    /// row-major), plus the shard's global start.
+    /// One owned segment's C block: rows are the segment's points
+    /// (local_n × k, row-major) starting at global row `start`. A worker
+    /// owning several segments (post-adoption) sends one per segment.
     Columns {
         worker: usize,
         start: usize,
         local_n: usize,
         c_block: Vec<f64>,
-        /// worker 0 also returns the replicated W⁻¹ (k×k row-major)
+        /// the directed worker also returns the replicated W⁻¹ (k×k
+        /// row-major) with its first block
         winv: Option<Vec<f64>>,
     },
-    /// A worker failed (injected fault or internal error).
+    /// A worker hit a deterministic error (bad file, protocol breach,
+    /// vanished batch Δ). Always fatal to the run — node *deaths* are
+    /// signalled by `Gone` instead, so a clear diagnostic is never
+    /// silently "recovered" away.
     Failed { worker: usize, message: String },
+    /// Periodic liveness beacon from a TCP worker process (period:
+    /// [`OasisPConfig::heartbeat_interval`]). Swallowed by the leader's
+    /// receive loop — it only refreshes the worker's last-seen age.
+    ///
+    /// [`OasisPConfig::heartbeat_interval`]: super::config::OasisPConfig::heartbeat_interval
+    Heartbeat { worker: usize },
+    /// The worker is dead: synthesized locally on the leader (TCP reader
+    /// EOF / socket error / heartbeat staleness) or by the in-process
+    /// fault injector — never encoded on the wire. Triggers re-sharding
+    /// when the plan is recoverable.
+    Gone { worker: usize },
 }
 
 impl ToWorker {
@@ -82,9 +145,12 @@ impl ToWorker {
                     + winv0.len() * 8) as u64
             }
             ToWorker::FetchPoint { .. } => 8,
-            ToWorker::Selected { point, .. } => (point.len() * 8 + 16) as u64,
-            ToWorker::GatherColumns => 1,
-            ToWorker::Finish => 1,
+            ToWorker::Selected { point, .. } => (point.len() * 8 + 26) as u64,
+            ToWorker::GatherColumns { .. } => 2,
+            ToWorker::Adopt { ranges, selected, .. } => {
+                (ranges.len() * 16 + selected.len() * 8 + 10) as u64
+            }
+            ToWorker::Finish { .. } => 2,
         }
     }
 }
@@ -92,57 +158,143 @@ impl ToWorker {
 impl FromWorker {
     pub fn payload_bytes(&self) -> u64 {
         match self {
-            FromWorker::Argmax { .. } => 48,
+            FromWorker::Argmax { candidates, .. } => {
+                (candidates.len() * 16 + 48) as u64
+            }
             FromWorker::Point { point, .. } => (point.len() * 8 + 8) as u64,
             FromWorker::Columns { c_block, winv, .. } => {
                 (c_block.len() * 8 + winv.as_ref().map_or(0, |w| w.len() * 8) + 24)
                     as u64
             }
             FromWorker::Failed { message, .. } => message.len() as u64,
+            FromWorker::Heartbeat { .. } => 8,
+            FromWorker::Gone { .. } => 0,
+        }
+    }
+
+    /// The sending worker, when the variant carries one (`Point` does
+    /// not — the leader knows whom it asked).
+    pub fn worker_id(&self) -> Option<usize> {
+        match self {
+            FromWorker::Argmax { worker, .. }
+            | FromWorker::Columns { worker, .. }
+            | FromWorker::Failed { worker, .. }
+            | FromWorker::Heartbeat { worker }
+            | FromWorker::Gone { worker } => Some(*worker),
+            FromWorker::Point { .. } => None,
         }
     }
 }
 
-/// Leader-side handle to one worker's inbox, metering broadcast bytes.
+/// Leader-side outbound half of one worker link. Implemented by the
+/// in-process channel sender and by the TCP frame writer.
+pub trait WorkerSink: Send {
+    /// Deliver `msg`; false if the worker is unreachable.
+    fn send(&self, msg: &ToWorker) -> bool;
+}
+
+/// Worker-side outbound half of the leader link. `Sync` because a TCP
+/// worker's heartbeat thread shares the stream with the compute loop.
+pub trait LeaderSink: Send + Sync {
+    fn send(&self, msg: &FromWorker) -> bool;
+}
+
+/// [`WorkerSink`] over an in-process channel.
+pub struct ChannelWorkerSink(pub Sender<ToWorker>);
+
+impl WorkerSink for ChannelWorkerSink {
+    fn send(&self, msg: &ToWorker) -> bool {
+        self.0.send(msg.clone()).is_ok()
+    }
+}
+
+/// [`LeaderSink`] over an in-process channel (mutex-wrapped: `Sender` is
+/// not `Sync` on every std version we target).
+pub struct ChannelLeaderSink(pub Mutex<Sender<FromWorker>>);
+
+impl LeaderSink for ChannelLeaderSink {
+    fn send(&self, msg: &FromWorker) -> bool {
+        match self.0.lock() {
+            Ok(tx) => tx.send(msg.clone()).is_ok(),
+            Err(_) => false,
+        }
+    }
+}
+
+/// Leader-side handle to one worker, metering broadcast bytes (totals
+/// plus the per-worker wire ledger).
 pub struct WorkerHandle {
     pub worker: usize,
-    tx: Sender<ToWorker>,
+    sink: Box<dyn WorkerSink>,
     metrics: Arc<Metrics>,
 }
 
 impl WorkerHandle {
-    pub fn new(worker: usize, tx: Sender<ToWorker>, metrics: Arc<Metrics>) -> Self {
-        WorkerHandle { worker, tx, metrics }
+    pub fn new(
+        worker: usize,
+        sink: Box<dyn WorkerSink>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        WorkerHandle { worker, sink, metrics }
+    }
+
+    /// Convenience constructor over an in-process channel.
+    pub fn channel(
+        worker: usize,
+        tx: Sender<ToWorker>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self::new(worker, Box::new(ChannelWorkerSink(tx)), metrics)
     }
 
     /// Send (records payload bytes). Returns false if the worker is gone.
-    pub fn send(&self, msg: ToWorker) -> bool {
-        self.metrics.add_broadcast(msg.payload_bytes());
-        self.tx.send(msg).is_ok()
+    pub fn send(&self, msg: &ToWorker) -> bool {
+        let bytes = msg.payload_bytes();
+        self.metrics.add_broadcast(bytes);
+        self.metrics.add_worker_wire(self.worker, bytes);
+        self.sink.send(msg)
     }
 }
 
-/// Worker-side handle to the leader's shared inbox, metering gather bytes.
+/// Worker-side handle to the leader. Gather-volume accounting happens at
+/// the leader on dequeue (the only place both transports share), so this
+/// handle is a plain forwarding wrapper.
 #[derive(Clone)]
 pub struct LeaderHandle {
-    tx: Sender<FromWorker>,
-    metrics: Arc<Metrics>,
+    sink: Arc<dyn LeaderSink>,
 }
 
 impl LeaderHandle {
-    pub fn new(tx: Sender<FromWorker>, metrics: Arc<Metrics>) -> Self {
-        LeaderHandle { tx, metrics }
+    pub fn new(sink: Arc<dyn LeaderSink>) -> Self {
+        LeaderHandle { sink }
     }
 
-    pub fn send(&self, msg: FromWorker) -> bool {
-        self.metrics.add_gather(msg.payload_bytes());
-        self.tx.send(msg).is_ok()
+    /// Convenience constructor over an in-process channel.
+    pub fn channel(tx: Sender<FromWorker>) -> Self {
+        Self::new(Arc::new(ChannelLeaderSink(Mutex::new(tx))))
+    }
+
+    pub fn send(&self, msg: &FromWorker) -> bool {
+        self.sink.send(msg)
     }
 }
 
-/// The leader's receiving end.
+/// Worker-side inbound half of the leader link: the in-process channel
+/// receiver, or a frame-decoding socket reader for TCP workers.
+pub trait WorkerSource {
+    /// Next leader message; `None` when the link is closed.
+    fn recv(&mut self) -> Option<ToWorker>;
+}
+
+impl WorkerSource for Receiver<ToWorker> {
+    fn recv(&mut self) -> Option<ToWorker> {
+        Receiver::recv(self).ok()
+    }
+}
+
+/// The leader's receiving end — both transports bridge into this.
 pub type LeaderInbox = Receiver<FromWorker>;
-/// A worker's receiving end.
+/// A worker's receiving end (channel transport).
 pub type WorkerInbox = Receiver<ToWorker>;
 
 #[cfg(test)]
@@ -154,21 +306,49 @@ mod tests {
         let m = ToWorker::Selected {
             global_idx: 3,
             point: vec![0.0; 10],
-            delta: 0.5,
+            delta: Some(0.5),
+            epoch: 0,
+            want_argmax: true,
         };
-        assert_eq!(m.payload_bytes(), 96);
+        assert_eq!(m.payload_bytes(), 106);
         let g = FromWorker::Point { global_idx: 1, point: vec![0.0; 4] };
         assert_eq!(g.payload_bytes(), 40);
+        let a = FromWorker::Argmax {
+            worker: 1,
+            epoch: 0,
+            candidates: vec![(4, 0.2), (9, 0.1)],
+            d_max: 1.0,
+            sum_abs_delta: 0.5,
+            d_sum: 2.0,
+        };
+        assert_eq!(a.payload_bytes(), 80);
+        assert_eq!(a.worker_id(), Some(1));
+        assert_eq!(g.worker_id(), None);
     }
 
     #[test]
     fn handles_meter_traffic() {
         let metrics = Arc::new(Metrics::default());
+        metrics.register_workers(1);
         let (tx, rx) = std::sync::mpsc::channel();
-        let h = WorkerHandle::new(0, tx, metrics.clone());
-        assert!(h.send(ToWorker::FetchPoint { global_idx: 5 }));
+        let h = WorkerHandle::channel(0, tx, metrics.clone());
+        assert!(h.send(&ToWorker::FetchPoint { global_idx: 5 }));
         assert_eq!(metrics.broadcast_bytes(), 8);
+        assert_eq!(metrics.worker(0).unwrap().wire_bytes(), 8);
         drop(rx);
-        assert!(!h.send(ToWorker::Finish));
+        assert!(!h.send(&ToWorker::Finish { winv: false }));
+    }
+
+    #[test]
+    fn leader_handle_forwards() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = LeaderHandle::channel(tx);
+        assert!(h.send(&FromWorker::Heartbeat { worker: 2 }));
+        match rx.recv().unwrap() {
+            FromWorker::Heartbeat { worker } => assert_eq!(worker, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        drop(rx);
+        assert!(!h.send(&FromWorker::Gone { worker: 2 }));
     }
 }

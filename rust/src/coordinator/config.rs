@@ -21,10 +21,21 @@ pub struct OasisPConfig {
     pub tol: f64,
     /// RNG seed (must match the sequential sampler's for equivalence).
     pub seed: u64,
-    /// p — number of worker nodes (threads).
+    /// p — number of worker nodes (threads or TCP processes).
     pub workers: usize,
-    /// leader-side timeout waiting for worker messages.
+    /// leader-side timeout waiting for worker messages; also the
+    /// heartbeat-staleness threshold past which a silent TCP worker is
+    /// declared dead.
     pub timeout: Duration,
+    /// B — SQUEAK-style merge batch: each argmax round, every worker
+    /// submits its top-B local candidates and the leader arbitrates up
+    /// to B selections from the merged list, so argmax rounds drop from
+    /// one-per-column to one-per-batch. `1` (the default) reproduces the
+    /// paper's one-round-per-column protocol bit-identically to the
+    /// sequential sampler; `B > 1` trades exact greedy order for fewer
+    /// synchronization rounds (the factor updates stay exact — each
+    /// queued candidate's Δ is recomputed against the current W⁻¹).
+    pub merge_batch: usize,
     /// optional injected fault (tests).
     pub failure: Option<FailureSpec>,
 }
@@ -38,6 +49,7 @@ impl OasisPConfig {
             seed: 7,
             workers,
             timeout: Duration::from_secs(60),
+            merge_batch: 1,
             failure: None,
         }
     }
@@ -50,6 +62,17 @@ impl OasisPConfig {
     pub fn with_tol(mut self, tol: f64) -> Self {
         self.tol = tol;
         self
+    }
+
+    pub fn with_merge_batch(mut self, b: usize) -> Self {
+        self.merge_batch = b;
+        self
+    }
+
+    /// Worker heartbeat period: frequent enough that several beats fit
+    /// inside the staleness threshold (`timeout`), capped at 500 ms.
+    pub fn heartbeat_interval(&self) -> Duration {
+        (self.timeout / 4).min(Duration::from_millis(500))
     }
 
     pub fn validate(&self, n: usize) -> crate::Result<()> {
@@ -65,6 +88,9 @@ impl OasisPConfig {
         }
         if self.max_cols > n {
             bail!("max_cols {} > n {}", self.max_cols, n);
+        }
+        if self.merge_batch == 0 {
+            bail!("merge_batch must be ≥ 1");
         }
         Ok(())
     }
@@ -83,5 +109,21 @@ mod tests {
         let mut bad = OasisPConfig::new(10, 2, 4);
         bad.init_cols = 20;
         assert!(bad.validate(100).is_err());
+        let mut bad = OasisPConfig::new(10, 2, 4);
+        bad.merge_batch = 0;
+        assert!(bad.validate(100).is_err());
+        assert!(OasisPConfig::new(10, 2, 4)
+            .with_merge_batch(8)
+            .validate(100)
+            .is_ok());
+    }
+
+    #[test]
+    fn heartbeat_interval_tracks_timeout() {
+        let fast = OasisPConfig::new(10, 2, 4); // 60 s timeout → capped
+        assert_eq!(fast.heartbeat_interval(), Duration::from_millis(500));
+        let mut tight = OasisPConfig::new(10, 2, 4);
+        tight.timeout = Duration::from_millis(800);
+        assert_eq!(tight.heartbeat_interval(), Duration::from_millis(200));
     }
 }

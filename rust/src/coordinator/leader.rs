@@ -1,23 +1,47 @@
 //! The oASIS-P leader: seeds the run, reduces gathered shard argmaxes,
-//! broadcasts selected points, detects worker failure, and assembles the
-//! final Nyström approximation from the gathered column blocks.
+//! broadcasts selected points, detects worker failure (recovering when it
+//! can — see below), and assembles the final Nyström approximation from
+//! the gathered column blocks.
 //!
 //! The leader is itself a [`SamplerSession`]: [`OasisPSession::start`]
-//! spawns the worker threads and seeds them, each
-//! [`step`](SamplerSession::step) performs one gather → reduce → broadcast
-//! round (the paper's one-vector-per-iteration communication pattern), and
-//! [`finish_run`](OasisPSession::finish_run) gathers the column blocks and
-//! joins the workers. [`run_oasis_p`] is the one-shot adapter driving a
-//! session under a column-budget [`StoppingRule`]; callers can instead
+//! spawns the worker fleet over a [`Transport`] and seeds it, each
+//! [`step`](SamplerSession::step) applies one selection (the paper's
+//! one-vector-per-iteration communication pattern, batched SQUEAK-style
+//! when `merge_batch > 1`), and
+//! [`finish_run`](OasisPSession::finish_run) gathers the column blocks
+//! and joins the workers. [`run_oasis_p`] is the one-shot adapter driving
+//! a session under a column-budget [`StoppingRule`]; callers can instead
 //! drive a session with any stopping rule — the workers ship shard-local
 //! `Σ|Δ|` piggybacked on every argmax, so even the error-target criterion
 //! works distributed with zero extra messages.
+//!
+//! # Failure semantics
+//!
+//! Node *death* ([`FromWorker::Gone`]: TCP reader EOF, heartbeat
+//! staleness past `cfg.timeout`, or the in-process fault injector) during
+//! the selection loop is recoverable whenever the fleet shard-reads a
+//! dataset file ([`ShardPlan::File`] — both transports): the leader bumps
+//! its epoch, re-shards the dead worker's row ranges onto the survivors
+//! via [`ToWorker::Adopt`], discards in-flight argmax replies from the
+//! old epoch, and restarts the interrupted gather round. With an
+//! in-memory plan nobody else can serve the lost rows, so death is fatal.
+//! Deterministic worker errors ([`FromWorker::Failed`] — bad file,
+//! vanished batch Δ, protocol breach) are always fatal: the same input
+//! would kill the adopters too, and the diagnostic must reach the caller.
+//! Death during seeding or during a column gather is likewise fatal —
+//! recovery is scoped to the selection loop, where all state needed to
+//! rebuild a shard (Z_Λ and W⁻¹ replicas) is fully replicated.
+//!
+//! Re-sharded runs complete with *valid* factors (the adopters rebuild
+//! C and R = W⁻¹Cᵀ exactly), but are not bit-identical to an undisturbed
+//! run: recomputed R replaces incrementally-updated R, whose floating-
+//! point rounding differs.
 
-use super::comm::{FromWorker, LeaderHandle, ToWorker, WorkerHandle};
+use super::comm::{FromWorker, ToWorker, WorkerHandle};
 use super::config::OasisPConfig;
 use super::metrics::Metrics;
-use super::worker::Worker;
-use crate::data::{loader, shard, Dataset, LoadLimits, Shard};
+use super::transport::{ChannelTransport, Transport, TransportCtx};
+use crate::data::{shard, Dataset, LoadLimits, Shard};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::nystrom::NystromApprox;
@@ -32,6 +56,7 @@ use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Where the workers' shards come from.
 ///
@@ -40,9 +65,14 @@ use std::sync::Arc;
 /// worker thread receives its block. `File` is the paper's
 /// distributed-data setting (Alg. 2: "load separate n/p column blocks of
 /// Z into each node"): every worker opens the binary dataset file itself
-/// and reads only its own byte range via [`loader::load_shard`] — the
-/// leader never materializes the dataset, only the `n` its caller read
-/// from the file header ([`loader::peek_matrix_dims`]).
+/// and reads only its own byte range via
+/// [`loader::load_shard`](crate::data::loader::load_shard) — the leader
+/// never materializes the dataset, only the `n` its caller read from the
+/// file header
+/// ([`loader::peek_matrix_dims`](crate::data::loader::peek_matrix_dims)).
+/// Only `File`
+/// fleets can re-shard around a dead worker (survivors shard-read the
+/// adopted rows), and only `File` works over TCP.
 pub enum ShardPlan {
     Memory(Vec<Shard>),
     File { path: std::path::PathBuf, n: usize, limits: LoadLimits },
@@ -80,8 +110,17 @@ pub fn run_oasis_p(
     session.finish_run()
 }
 
-/// A live distributed oASIS-P run: worker threads spawned and seeded, one
-/// selection round per [`step`](SamplerSession::step).
+/// A selection the leader has arbitrated but not yet applied (queued
+/// batch pick). `fresh` marks the gather round's argmax winner, whose
+/// sweep Δ is still exact and ships with the broadcast.
+struct Pick {
+    g: usize,
+    delta: f64,
+    fresh: bool,
+}
+
+/// A live distributed oASIS-P run: worker fleet started and seeded, one
+/// selection per [`step`](SamplerSession::step).
 ///
 /// Unlike the sequential sessions this one holds no oracle borrow (the
 /// workers own their shards), so it is `'static`; its per-run capacity is
@@ -99,7 +138,16 @@ pub struct OasisPSession {
     /// hard capacity: min(cfg.max_cols, n).
     capacity: usize,
     p: usize,
-    owner_ranges: Vec<std::ops::Range<usize>>,
+    /// global row ranges (start, len) each worker currently serves;
+    /// drained for dead workers, grown for adopters
+    owned: Vec<Vec<(usize, usize)>>,
+    alive: Vec<bool>,
+    /// bumped on every re-shard; argmax replies from older epochs are
+    /// discarded
+    epoch: u64,
+    /// arbitrated-but-unapplied batch picks (empty at merge_batch == 1
+    /// between steps)
+    queue: VecDeque<Pick>,
     handles: Vec<WorkerHandle>,
     joins: Vec<std::thread::JoinHandle<()>>,
     inbox: mpsc::Receiver<FromWorker>,
@@ -107,6 +155,10 @@ pub struct OasisPSession {
     /// draining its `Columns` messages; consumed by the next `step`.
     /// (`RefCell` because `snapshot` is a `&self` trait method.)
     pending: RefCell<VecDeque<FromWorker>>,
+    /// whether a dead worker's rows can be re-sharded onto survivors
+    recoverable: bool,
+    /// whether heartbeat staleness applies (TCP fleets)
+    tcp: bool,
     metrics: Arc<Metrics>,
     trace: SelectionTrace,
     /// Leader-side mirror of the selected points Z_Λ (selection order).
@@ -130,26 +182,25 @@ impl OasisPSession {
     /// Spawn the workers over an in-memory dataset split (the
     /// single-process setting). See [`start_with_plan`] for the
     /// plan-driven entry the engine uses — including per-worker file
-    /// reads.
+    /// reads — and [`start_with_transport`] for TCP fleets.
     ///
     /// [`start_with_plan`]: OasisPSession::start_with_plan
+    /// [`start_with_transport`]: OasisPSession::start_with_transport
     pub fn start(
         ds: &Dataset,
         kernel: Arc<dyn Kernel + Send + Sync>,
         cfg: OasisPConfig,
     ) -> Result<OasisPSession> {
-        // start_with_plan validates against the plan's n
+        // start_with_transport validates against the plan's n
         let p = cfg.workers.min(ds.n()).max(1);
         Self::start_with_plan(ShardPlan::Memory(shard::split(ds, p)), kernel, cfg)
     }
 
-    /// Spawn the workers from a [`ShardPlan`], replicate the seed state
-    /// (identical RNG stream and rejection rule to the sequential
-    /// sampler), and broadcast Init. Workers reply with their first
-    /// shard argmaxes, which the first `step` will gather.
+    /// Start over the in-process channel transport from a [`ShardPlan`].
     ///
     /// With [`ShardPlan::File`], each worker thread reads only its own
-    /// byte range of the binary dataset file ([`loader::load_shard`])
+    /// byte range of the binary dataset file
+    /// ([`loader::load_shard`](crate::data::loader::load_shard))
     /// before entering its message loop; a failed read surfaces through
     /// the normal worker-failure path during seeding. Worker state
     /// construction (including the kernel-diagonal pass) happens on the
@@ -160,110 +211,51 @@ impl OasisPSession {
         kernel: Arc<dyn Kernel + Send + Sync>,
         cfg: OasisPConfig,
     ) -> Result<OasisPSession> {
+        Self::start_with_transport(Box::new(ChannelTransport), plan, kernel, cfg)
+    }
+
+    /// Start the fleet over any [`Transport`] (in-process channels or
+    /// TCP worker processes), replicate the seed state (identical RNG
+    /// stream and rejection rule to the sequential sampler), and
+    /// broadcast Init. Workers reply with their first shard argmaxes,
+    /// which the first `step` will gather.
+    pub fn start_with_transport(
+        transport: Box<dyn Transport>,
+        plan: ShardPlan,
+        kernel: Arc<dyn Kernel + Send + Sync>,
+        cfg: OasisPConfig,
+    ) -> Result<OasisPSession> {
         let sw = Stopwatch::start();
         let n = plan.n();
         cfg.validate(n)?;
         let metrics = Arc::new(Metrics::default());
-
-        // --- spawn workers ---
-        // one spawn path for both plans: the worker thread obtains its
-        // shard (already-split block, or its own byte-range read of the
-        // file), constructs its state — including the kernel-diagonal
-        // pass, so per-shard init runs in parallel — and enters its
-        // message loop; an Err from the source surfaces at the leader's
-        // next recv as a worker failure
-        let (to_leader_tx, inbox) = mpsc::channel::<FromWorker>();
-        let mut handles = Vec::new();
-        let mut joins = Vec::new();
-        let p;
-        {
-            let mut spawn =
-                |w: usize, source: Box<dyn FnOnce() -> Result<Shard> + Send>| {
-                    let (tx, rx) = mpsc::channel::<ToWorker>();
-                    handles.push(WorkerHandle::new(w, tx, metrics.clone()));
-                    let worker_kernel = kernel.clone();
-                    let leader =
-                        LeaderHandle::new(to_leader_tx.clone(), metrics.clone());
-                    let worker_metrics = metrics.clone();
-                    let (max_cols, failure) = (cfg.max_cols, cfg.failure);
-                    joins.push(std::thread::spawn(move || match source() {
-                        Ok(s) => Worker::new(
-                            w,
-                            s,
-                            worker_kernel,
-                            leader,
-                            worker_metrics,
-                            max_cols,
-                            failure,
-                        )
-                        .run(rx),
-                        Err(e) => {
-                            leader.send(FromWorker::Failed {
-                                worker: w,
-                                message: format!("{e}"),
-                            });
-                        }
-                    }));
-                };
-            match plan {
-                ShardPlan::Memory(shards) => {
-                    p = shards.len();
-                    for s in shards {
-                        let w = s.worker;
-                        spawn(w, Box::new(move || Ok(s)));
-                    }
-                }
-                ShardPlan::File { path, n: _, limits } => {
-                    p = cfg.workers.min(n).max(1);
-                    // the leader's ownership ranges come from the plan's
-                    // n; each worker re-derives its range from the
-                    // file's *actual* header, so cross-check the two —
-                    // a stale plan (file replaced since it was peeked)
-                    // or a caller-supplied wrong n must fail loudly at
-                    // seeding, not misroute FetchPoints or silently
-                    // select over mismatched blocks. If total rows
-                    // differ, at least one worker's range differs.
-                    let expected = shard::shard_ranges(n, p);
-                    for w in 0..p {
-                        let path = path.clone();
-                        let want = expected[w].clone();
-                        spawn(
-                            w,
-                            Box::new(move || {
-                                let s = loader::load_shard(&path, w, p, &limits)?;
-                                if s.start != want.start || s.len() != want.len() {
-                                    return Err(anyhow!(
-                                        "shard {w} of {} covers rows {}..{} \
-                                         but this run expects {}..{} — the \
-                                         file changed since the run was \
-                                         planned",
-                                        path.display(),
-                                        s.start,
-                                        s.start + s.len(),
-                                        want.start,
-                                        want.end
-                                    ));
-                                }
-                                Ok(s)
-                            }),
-                        );
-                    }
-                }
-            }
-        }
-        drop(to_leader_tx);
-
+        let fleet = transport.start(TransportCtx {
+            plan,
+            kernel: kernel.clone(),
+            cfg: cfg.clone(),
+            metrics: metrics.clone(),
+        })?;
+        let p = fleet.p;
+        metrics.register_workers(p);
         let capacity = cfg.max_cols.min(n);
         let mut session = OasisPSession {
             cfg,
             n,
             capacity,
             p,
-            owner_ranges: shard::shard_ranges(n, p),
-            handles,
-            joins,
-            inbox,
+            owned: shard::shard_ranges(n, p)
+                .into_iter()
+                .map(|r| vec![(r.start, r.end - r.start)])
+                .collect(),
+            alive: vec![true; p],
+            epoch: 0,
+            queue: VecDeque::new(),
+            handles: fleet.handles,
+            joins: fleet.joins,
+            inbox: fleet.inbox,
             pending: RefCell::new(VecDeque::new()),
+            recoverable: fleet.recoverable,
+            tcp: fleet.tcp,
             metrics,
             trace: SelectionTrace::default(),
             z_sel: Vec::new(),
@@ -302,16 +294,21 @@ impl OasisPSession {
             let mut pts: Vec<Option<Vec<f64>>> = vec![None; k0];
             for (slot, &g) in cand.iter().enumerate() {
                 let w = self.owner_of(g);
-                if !self.handles[w].send(ToWorker::FetchPoint { global_idx: g }) {
+                if !self.handles[w].send(&ToWorker::FetchPoint { global_idx: g })
+                {
                     bail!("worker {w} unavailable during seeding");
                 }
-                match self.recv()? {
+                match self.recv_live()? {
                     FromWorker::Point { global_idx, point } => {
                         debug_assert_eq!(global_idx, g);
+                        self.metrics.add_worker_columns(w);
                         pts[slot] = Some(point);
                     }
                     FromWorker::Failed { worker, message } => {
                         bail!("worker {worker} failed during seeding: {message}")
+                    }
+                    FromWorker::Gone { worker } => {
+                        bail!("worker {worker} died during seeding")
                     }
                     other => bail!("unexpected message during seeding: {other:?}"),
                 }
@@ -344,7 +341,7 @@ impl OasisPSession {
             winv0: winv0.data.clone(),
         };
         for h in &self.handles {
-            if !h.send(init.clone()) {
+            if !h.send(&init) {
                 bail!("worker {} unavailable at init", h.worker);
             }
         }
@@ -357,16 +354,63 @@ impl OasisPSession {
     }
 
     fn owner_of(&self, g: usize) -> usize {
-        self.owner_ranges
+        self.owned
             .iter()
-            .position(|r| r.contains(&g))
+            .position(|rs| rs.iter().any(|&(s, l)| g >= s && g < s + l))
             .expect("index in range")
     }
 
-    fn recv(&self) -> Result<FromWorker> {
-        self.inbox
-            .recv_timeout(self.cfg.timeout)
-            .map_err(|e| anyhow!("leader recv: {e} (worker died or deadlock)"))
+    /// Read the live inbox: swallows heartbeats (refreshing last-seen
+    /// ages), meters gather traffic, and — on TCP fleets — synthesizes
+    /// [`FromWorker::Gone`] for any live worker whose heartbeats went
+    /// stale past `cfg.timeout`. Errors if nothing at all arrives within
+    /// the timeout.
+    fn recv_live(&self) -> Result<FromWorker> {
+        let deadline = Instant::now() + self.cfg.timeout;
+        let tick = Duration::from_millis(200).min(self.cfg.timeout);
+        loop {
+            match self.inbox.recv_timeout(tick) {
+                Ok(FromWorker::Heartbeat { worker }) => {
+                    self.metrics.note_alive(worker);
+                }
+                Ok(msg) => {
+                    let bytes = msg.payload_bytes();
+                    self.metrics.add_gather(bytes);
+                    if let Some(w) = msg.worker_id() {
+                        self.metrics.note_alive(w);
+                        self.metrics.add_worker_wire(w, bytes);
+                    }
+                    return Ok(msg);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if self.tcp {
+                        for w in 0..self.p {
+                            if !self.alive[w] {
+                                continue;
+                            }
+                            if let Some(age) = self.metrics.last_seen_age(w) {
+                                if age > self.cfg.timeout {
+                                    return Ok(FromWorker::Gone { worker: w });
+                                }
+                            }
+                        }
+                    }
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "leader recv: timed out after {:?} (worker died \
+                             or deadlock)",
+                            self.cfg.timeout
+                        );
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    bail!(
+                        "leader recv: channel disconnected (worker died or \
+                         deadlock)"
+                    )
+                }
+            }
+        }
     }
 
     /// Next message for the selection loop: messages stashed by a mid-run
@@ -375,24 +419,313 @@ impl OasisPSession {
         if let Some(m) = self.pending.borrow_mut().pop_front() {
             return Ok(m);
         }
-        self.recv()
+        self.recv_live()
     }
 
-    /// Drain the p `Columns` replies of a gather (terminal or not) and
-    /// assemble (C, W⁻¹) at the current k. `stash_argmax` is the mid-run
-    /// mode: in-flight `Argmax` replies are buffered for the next `step`
-    /// (and the live inbox is read directly — `pending` can only hold
-    /// `Argmax`); the terminal mode consumes stashed-and-live `Argmax`
-    /// replies alike and discards them as stale.
-    fn gather_columns(&self, k: usize, stash_argmax: bool) -> Result<(Mat, Mat)> {
+    /// Re-shard a dead worker's rows onto the survivors (no-op if the
+    /// worker was already recovered). Splits each lost range near-evenly
+    /// across the survivors, bumps the epoch, and broadcasts
+    /// [`ToWorker::Adopt`] — with `want_argmax` — to every survivor so
+    /// the whole fleet advances together and restarts the interrupted
+    /// gather round. Returns true if a recovery actually happened.
+    fn recover(&mut self, dead: usize) -> Result<bool> {
+        if !self.alive[dead] {
+            return Ok(false);
+        }
+        self.alive[dead] = false;
+        self.metrics.mark_dead(dead);
+        let ranges = std::mem::take(&mut self.owned[dead]);
+        let survivors: Vec<usize> =
+            (0..self.p).filter(|&w| self.alive[w]).collect();
+        if survivors.is_empty() {
+            bail!("worker {dead} died and no workers survive");
+        }
+        self.metrics.add_reshard();
+        // split each lost range into near-equal chunks, dealt round-robin
+        let mut parts: Vec<(usize, usize)> = Vec::new();
+        for (start, len) in ranges {
+            let m = survivors.len().min(len.max(1));
+            let (base, extra) = (len / m, len % m);
+            let mut s = start;
+            for i in 0..m {
+                let l = base + usize::from(i < extra);
+                if l > 0 {
+                    parts.push((s, l));
+                    s += l;
+                }
+            }
+        }
+        let mut gained: Vec<Vec<(usize, usize)>> = vec![Vec::new(); self.p];
+        for (i, part) in parts.into_iter().enumerate() {
+            let w = survivors[i % survivors.len()];
+            gained[w].push(part);
+            self.owned[w].push(part);
+        }
+        self.epoch += 1;
+        for &w in &survivors {
+            let msg = ToWorker::Adopt {
+                epoch: self.epoch,
+                ranges: std::mem::take(&mut gained[w]),
+                selected: self.trace.order.clone(),
+                want_argmax: true,
+            };
+            if !self.handles[w].send(&msg) {
+                bail!("worker {w} became unavailable during re-shard");
+            }
+        }
+        Ok(true)
+    }
+
+    /// Death signal in the selection loop: recover if possible, else bail
+    /// with the in-memory-plan diagnostic. Returns true if the fleet was
+    /// actually re-sharded (→ the caller restarts its round).
+    fn on_death(&mut self, worker: usize) -> Result<bool> {
+        if !self.recoverable {
+            bail!(
+                "worker {worker} died mid-run (in-memory shards cannot be \
+                 re-assigned — only file-backed runs recover)"
+            );
+        }
+        self.recover(worker)
+    }
+
+    /// One gather round: collect an epoch-current argmax from every live
+    /// worker (restarting after any mid-round death/recovery), merge the
+    /// candidate lists, and queue up to `merge_batch` picks. Returns the
+    /// stop reason when the merged best falls below tolerance or every
+    /// shard is exhausted.
+    fn argmax_round(&mut self) -> Result<Option<StopReason>> {
+        'round: loop {
+            let mut got = vec![false; self.p];
+            let mut need = self.alive.iter().filter(|&&a| a).count();
+            let mut cands: Vec<(usize, f64)> = Vec::new();
+            let mut round_resid = 0.0f64;
+            let mut round_d_sum = 0.0f64;
+            while need > 0 {
+                match self.next_msg()? {
+                    FromWorker::Argmax {
+                        worker,
+                        epoch,
+                        candidates,
+                        d_max,
+                        sum_abs_delta,
+                        d_sum,
+                    } => {
+                        if epoch != self.epoch
+                            || !self.alive[worker]
+                            || got[worker]
+                        {
+                            continue; // pre-re-shard stragglers
+                        }
+                        got[worker] = true;
+                        need -= 1;
+                        self.d_scale = self.d_scale.max(d_max);
+                        round_resid += sum_abs_delta;
+                        round_d_sum += d_sum;
+                        cands.extend(candidates);
+                        self.metrics.add_worker_argmax(worker);
+                    }
+                    FromWorker::Failed { worker, message } => {
+                        bail!("worker {worker} failed: {message}")
+                    }
+                    FromWorker::Gone { worker } => {
+                        if self.on_death(worker)? {
+                            continue 'round; // fresh argmaxes are coming
+                        }
+                    }
+                    FromWorker::Point { .. } => {
+                        // stale fetch reply from a round a re-shard cut
+                        // short — drop it
+                    }
+                    other => {
+                        bail!("unexpected message in argmax round: {other:?}")
+                    }
+                }
+            }
+            self.metrics.add_iteration();
+            self.resid_sum = Some(round_resid);
+            self.d_sum = round_d_sum;
+            // merge: |Δ| descending, global index ascending on ties —
+            // the same total order the sequential sampler induces
+            cands.sort_by(|a, b| {
+                b.1.abs()
+                    .partial_cmp(&a.1.abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| a.0.cmp(&b.0))
+            });
+            let tol =
+                crate::sampling::effective_tol(self.cfg.tol, &[self.d_scale]);
+            if cands.is_empty() {
+                return Ok(Some(StopReason::Exhausted));
+            }
+            if cands[0].1.abs() < tol {
+                return Ok(Some(StopReason::ScoreBelowTol));
+            }
+            let room = self.capacity - self.trace.order.len();
+            let take = self.cfg.merge_batch.min(room);
+            for (i, &(g, dv)) in cands.iter().take(take).enumerate() {
+                if dv.abs() < tol {
+                    break;
+                }
+                self.queue.push_back(Pick { g, delta: dv, fresh: i == 0 });
+            }
+            return Ok(None);
+        }
+    }
+
+    /// Apply one queued pick: fetch the winning point from its owner and
+    /// broadcast it. Returns false when a death forced a re-shard that
+    /// invalidated the (cleared) queue before the pick could be applied —
+    /// the caller re-gathers. A death detected *after* the survivors
+    /// already incorporated the pick keeps the pick (and still clears the
+    /// rest of the queue).
+    fn apply_pick(&mut self, pick: &Pick, want_argmax: bool) -> Result<bool> {
+        let w = self.owner_of(pick.g);
+        if !self.handles[w].send(&ToWorker::FetchPoint { global_idx: pick.g }) {
+            if !self.recoverable {
+                bail!("worker {w} unavailable (fetch)");
+            }
+            self.on_death(w)?;
+            self.queue.clear();
+            return Ok(false);
+        }
+        let mut point: Option<Vec<f64>> = None;
+        loop {
+            match self.next_msg()? {
+                FromWorker::Point { global_idx, point: pt } => {
+                    debug_assert_eq!(global_idx, pick.g);
+                    self.metrics.add_worker_columns(w);
+                    point = Some(pt);
+                    break;
+                }
+                FromWorker::Failed { worker, message } => {
+                    bail!("worker {worker} failed: {message}")
+                }
+                FromWorker::Gone { worker } => {
+                    let owner_died = worker == w;
+                    if !self.on_death(worker)? {
+                        continue;
+                    }
+                    if !owner_died {
+                        // the owner is alive: its Point reply may still
+                        // be in flight ahead of its post-Adopt argmax —
+                        // drain up to it, stashing current-epoch argmaxes
+                        // for the re-gather
+                        loop {
+                            match self.recv_live()? {
+                                FromWorker::Point { .. } => break,
+                                msg @ FromWorker::Argmax { .. } => {
+                                    let current = matches!(
+                                        &msg,
+                                        FromWorker::Argmax { epoch, .. }
+                                            if *epoch == self.epoch
+                                    );
+                                    if current {
+                                        self.pending
+                                            .borrow_mut()
+                                            .push_back(msg);
+                                    }
+                                }
+                                FromWorker::Failed { worker, message } => bail!(
+                                    "worker {worker} failed: {message}"
+                                ),
+                                FromWorker::Gone { worker: w2 } => {
+                                    self.on_death(w2)?;
+                                    if w2 == w {
+                                        break; // owner gone, no Point coming
+                                    }
+                                }
+                                other => bail!(
+                                    "unexpected message draining a stale \
+                                     fetch: {other:?}"
+                                ),
+                            }
+                        }
+                    }
+                    self.queue.clear();
+                    return Ok(false);
+                }
+                other => bail!("unexpected message awaiting point: {other:?}"),
+            }
+        }
+        let point = point.expect("loop breaks only with a point");
+        // broadcast the selected point — the paper's one-vector-per-step
+        // communication pattern; the batch's last pick also requests the
+        // next argmax sweep
+        self.z_sel.push(point.clone());
+        let msg = ToWorker::Selected {
+            global_idx: pick.g,
+            point,
+            delta: pick.fresh.then_some(pick.delta),
+            epoch: self.epoch,
+            want_argmax,
+        };
+        let mut dead: Vec<usize> = Vec::new();
+        for h in &self.handles {
+            if !self.alive[h.worker] {
+                continue;
+            }
+            if !h.send(&msg) {
+                dead.push(h.worker);
+            }
+        }
+        if !dead.is_empty() {
+            if !self.recoverable {
+                bail!("worker {} unavailable (broadcast)", dead[0]);
+            }
+            // every survivor already incorporated the pick (sends to them
+            // succeeded), so the pick stands; the rest of the queue is
+            // re-arbitrated after the re-shard
+            for d in dead {
+                self.on_death(d)?;
+            }
+            self.queue.clear();
+        }
+        Ok(true)
+    }
+
+    /// Gather the k-column blocks (and the directed worker's W⁻¹) from
+    /// every live worker. `terminal` sends Finish and consumes stashed
+    /// argmax replies as stale; the mid-run mode sends GatherColumns,
+    /// reads the live inbox only, and stashes in-flight argmaxes for the
+    /// next `step`. Completion is row-coverage-based (`Σ local_n == n`),
+    /// so post-re-shard fleets — where a worker answers with several
+    /// segment blocks — gather exactly like pristine ones.
+    fn gather_columns(&self, k: usize, terminal: bool) -> Result<(Mat, Mat)> {
+        let winv_from = (0..self.p)
+            .find(|&w| self.alive[w])
+            .ok_or_else(|| anyhow!("no live workers to gather from"))?;
+        for h in &self.handles {
+            if !self.alive[h.worker] {
+                continue;
+            }
+            let msg = if terminal {
+                ToWorker::Finish { winv: h.worker == winv_from }
+            } else {
+                ToWorker::GatherColumns { winv: h.worker == winv_from }
+            };
+            if !h.send(&msg) {
+                bail!(
+                    "worker {} unavailable ({})",
+                    h.worker,
+                    if terminal { "finish" } else { "snapshot gather" }
+                );
+            }
+        }
         let n = self.n;
         let mut c = Mat::zeros(n, k);
         let mut winv: Option<Mat> = None;
-        let mut got = 0;
-        while got < self.p {
-            let msg = if stash_argmax { self.recv()? } else { self.next_msg()? };
+        let mut rows = 0usize;
+        while rows < n || winv.is_none() {
+            let msg = if terminal { self.next_msg()? } else { self.recv_live()? };
             match msg {
-                FromWorker::Columns { start, local_n, c_block, winv: w, .. } => {
+                FromWorker::Columns {
+                    worker,
+                    start,
+                    local_n,
+                    c_block,
+                    winv: w,
+                } => {
                     for i in 0..local_n {
                         c.data[(start + i) * k..(start + i + 1) * k]
                             .copy_from_slice(&c_block[i * k..(i + 1) * k]);
@@ -400,33 +733,40 @@ impl OasisPSession {
                     if let Some(wd) = w {
                         winv = Some(Mat::from_vec(k, k, wd));
                     }
-                    got += 1;
+                    rows += local_n;
+                    self.metrics.add_worker_columns(worker);
                 }
                 msg @ FromWorker::Argmax { .. } => {
-                    if stash_argmax {
+                    if !terminal {
                         self.pending.borrow_mut().push_back(msg);
                     }
+                }
+                FromWorker::Point { .. } => {
+                    // stale fetch reply from a round a re-shard cut short
                 }
                 FromWorker::Failed { worker, message } => {
                     bail!("worker {worker} failed during column gather: {message}")
                 }
-                other => {
-                    bail!("unexpected message during column gather: {other:?}")
+                FromWorker::Gone { worker } => {
+                    bail!("worker {worker} died during column gather")
                 }
+                FromWorker::Heartbeat { .. } => {}
             }
         }
-        let winv = winv.ok_or_else(|| anyhow!("no W⁻¹ returned by worker 0"))?;
+        let winv = winv.ok_or_else(|| anyhow!("no W⁻¹ returned"))?;
         Ok((c, winv))
     }
 
-    /// Send Finish to every worker and join the threads (idempotent).
+    /// Send Finish to every live worker and join the threads (idempotent).
     fn teardown(&mut self) {
         if self.torn_down {
             return;
         }
         self.torn_down = true;
         for h in &self.handles {
-            h.send(ToWorker::Finish);
+            if self.alive[h.worker] {
+                h.send(&ToWorker::Finish { winv: false });
+            }
         }
         for j in self.joins.drain(..) {
             let _ = j.join();
@@ -437,15 +777,10 @@ impl OasisPSession {
     /// workers, and return the approximation plus the run report.
     pub fn finish_run(mut self) -> Result<(NystromApprox, OasisPReport)> {
         let sw = Stopwatch::start();
-        for h in &self.handles {
-            if !h.send(ToWorker::Finish) {
-                bail!("worker {} unavailable (finish)", h.worker);
-            }
-        }
         let k = self.trace.order.len();
         // terminal gather: stale Argmax replies (stashed or live) are
         // drained and discarded
-        let (c, winv) = self.gather_columns(k, false)?;
+        let (c, winv) = self.gather_columns(k, true)?;
         self.torn_down = true;
         for j in self.joins.drain(..) {
             let _ = j.join();
@@ -513,9 +848,20 @@ impl SamplerSession for OasisPSession {
         Some(self.z_sel[from.min(self.z_sel.len())..].to_vec())
     }
 
-    /// One distributed selection round: gather the shard argmaxes, reduce,
-    /// fetch the winning point from its owner, broadcast it (paper: one
-    /// gathered scalar + one broadcast vector per iteration).
+    /// Per-worker coordinator counters for the serving stack's
+    /// `/metrics` endpoint.
+    fn worker_stats(&self) -> Option<crate::util::json::Json> {
+        Some(self.metrics.worker_stats_json())
+    }
+
+    /// One distributed selection: pop the next arbitrated pick (running a
+    /// gather → merge round first if the queue is empty), fetch the
+    /// winning point from its owner, broadcast it. At `merge_batch == 1`
+    /// this is exactly the paper's one-gathered-scalar + one-broadcast-
+    /// vector round per iteration; larger batches apply several picks per
+    /// gather round (`trace.deltas` records the gathered Δ, which for
+    /// queued picks is the pre-batch value — the workers recompute the
+    /// exact Δ' locally).
     fn step(&mut self) -> Result<StepOutcome> {
         if let Some(reason) = self.exhausted {
             return Ok(StepOutcome::Exhausted(reason));
@@ -527,116 +873,47 @@ impl SamplerSession for OasisPSession {
             self.busy_secs += sw.secs();
             return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
         }
-        // gather shard argmaxes
-        let mut best: Option<(usize, f64)> = None; // (global idx, signed Δ)
-        let mut round_resid = 0.0f64;
-        let mut round_d_sum = 0.0f64;
-        for _ in 0..self.p {
-            match self.next_msg()? {
-                FromWorker::Argmax {
-                    best: wb,
-                    d_max,
-                    sum_abs_delta,
-                    d_sum,
-                    ..
-                } => {
-                    self.d_scale = self.d_scale.max(d_max);
-                    round_resid += sum_abs_delta;
-                    round_d_sum += d_sum;
-                    if let Some((gi, dv)) = wb {
-                        let replace = match best {
-                            None => true,
-                            Some((bg, bd)) => {
-                                let (a, b) = (dv.abs(), bd.abs());
-                                a > b || (a == b && gi < bg)
-                            }
-                        };
-                        if replace {
-                            best = Some((gi, dv));
-                        }
-                    }
+        loop {
+            if self.queue.is_empty() {
+                if let Some(reason) = self.argmax_round()? {
+                    self.exhausted = Some(reason);
+                    self.busy_secs += sw.secs();
+                    return Ok(StepOutcome::Exhausted(reason));
                 }
-                FromWorker::Failed { worker, message } => {
-                    bail!("worker {worker} failed: {message}")
-                }
-                other => bail!("unexpected message in main loop: {other:?}"),
             }
-        }
-        self.metrics.add_iteration();
-        self.resid_sum = Some(round_resid);
-        self.d_sum = round_d_sum;
-        let tol = crate::sampling::effective_tol(self.cfg.tol, &[self.d_scale]);
-        let (gidx, dval) = match best {
-            Some(b) if b.1.abs() >= tol => b,
-            Some(_) => {
-                self.exhausted = Some(StopReason::ScoreBelowTol);
+            let want_argmax = self.queue.len() == 1;
+            let pick = self.queue.pop_front().expect("round queued picks");
+            if self.apply_pick(&pick, want_argmax)? {
+                self.trace.order.push(pick.g);
+                self.trace.cum_secs.push(self.busy_secs + sw.secs());
+                self.trace.deltas.push(pick.delta.abs());
                 self.busy_secs += sw.secs();
-                return Ok(StepOutcome::Exhausted(StopReason::ScoreBelowTol));
+                return Ok(StepOutcome::Selected {
+                    index: pick.g,
+                    score: pick.delta.abs(),
+                });
             }
-            None => {
-                self.exhausted = Some(StopReason::Exhausted);
-                self.busy_secs += sw.secs();
-                return Ok(StepOutcome::Exhausted(StopReason::Exhausted));
-            }
-        };
-        // fetch the winning point from its owner
-        let w = self.owner_of(gidx);
-        if !self.handles[w].send(ToWorker::FetchPoint { global_idx: gidx }) {
-            bail!("worker {w} unavailable (fetch)");
+            // a re-shard invalidated the queue before the pick applied —
+            // re-gather under the new epoch
         }
-        let point = loop {
-            match self.recv()? {
-                FromWorker::Point { global_idx, point } => {
-                    debug_assert_eq!(global_idx, gidx);
-                    break point;
-                }
-                FromWorker::Failed { worker, message } => {
-                    bail!("worker {worker} failed: {message}")
-                }
-                other => bail!("unexpected message awaiting point: {other:?}"),
-            }
-        };
-        // broadcast the selected point — the paper's one-vector-per-step
-        // communication pattern; every worker replies with its next argmax
-        self.z_sel.push(point.clone());
-        let msg = ToWorker::Selected {
-            global_idx: gidx,
-            point,
-            delta: dval,
-        };
-        for h in &self.handles {
-            if !h.send(msg.clone()) {
-                bail!("worker {} unavailable (broadcast)", h.worker);
-            }
-        }
-        self.trace.order.push(gidx);
-        self.trace.cum_secs.push(self.busy_secs + sw.secs());
-        self.trace.deltas.push(dval.abs());
-        self.busy_secs += sw.secs();
-        Ok(StepOutcome::Selected { index: gidx, score: dval.abs() })
     }
 
     /// Mid-run snapshot via a non-terminal column gather
-    /// ([`ToWorker::GatherColumns`]): every worker replies with its
-    /// current C block (worker 0 also its W⁻¹ replica) and keeps running,
-    /// so the session can continue stepping afterwards. Argmax replies
-    /// already in flight from the last broadcast are stashed and replayed
-    /// to the next `step` — per-worker channels are FIFO, so each worker
-    /// has incorporated every selection before it serves the gather and
-    /// the snapshot is always a consistent k-column prefix. Snapshot time
-    /// is deliberately not charged to `selection_secs` (it is serving
-    /// work, not selection).
+    /// ([`ToWorker::GatherColumns`]): every live worker replies with its
+    /// current C block(s) (the directed worker also its W⁻¹ replica) and
+    /// keeps running, so the session can continue stepping afterwards.
+    /// Argmax replies already in flight from the last broadcast are
+    /// stashed and replayed to the next `step` — per-worker links are
+    /// FIFO, so each worker has incorporated every selection before it
+    /// serves the gather and the snapshot is always a consistent
+    /// k-column prefix. Snapshot time is deliberately not charged to
+    /// `selection_secs` (it is serving work, not selection).
     fn snapshot(&self) -> Result<NystromApprox> {
         if self.torn_down {
             bail!("oASIS-P session already torn down");
         }
-        for h in &self.handles {
-            if !h.send(ToWorker::GatherColumns) {
-                bail!("worker {} unavailable (snapshot gather)", h.worker);
-            }
-        }
         let k = self.trace.order.len();
-        let (c, winv) = self.gather_columns(k, true)?;
+        let (c, winv) = self.gather_columns(k, false)?;
         Ok(NystromApprox {
             indices: self.trace.order.clone(),
             c,
@@ -675,16 +952,16 @@ mod tests {
 
     #[test]
     fn communication_is_one_point_per_step() {
-        // Broadcast volume per iteration ≈ p × (dim×8 + 16) bytes: the
-        // paper's "size of the communicated vector is the dimensionality
-        // of the data point".
+        // Broadcast volume per iteration ≈ p × (dim×8 + header) bytes:
+        // the paper's "size of the communicated vector is the
+        // dimensionality of the data point".
         let ds = two_moons(100, 0.05, 2);
         let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
         let p = 4;
         let cfg = OasisPConfig::new(20, 4, p).with_seed(3);
         let (_, report) = run_oasis_p(&ds, kernel, &cfg).unwrap();
         let adaptive_steps = 16; // 20 − 4 seeds
-        let per_step = (2 * 8 + 16) * p; // dim=2 point + header, per worker
+        let per_step = (2 * 8 + 26) * p; // dim=2 point + header, per worker
         let bound = (per_step * adaptive_steps * 4) as u64; // generous ×4
         assert!(
             report.metrics.broadcast_bytes() < bound,
@@ -765,5 +1042,50 @@ mod tests {
         assert!(e1 < e0, "estimate did not decrease: {e0} → {e1}");
         let (approx, _) = session.finish_run().unwrap();
         assert_eq!(approx.k(), 30);
+    }
+
+    /// SQUEAK-style merge batching: a B>1 run reaches the same budget
+    /// with fewer argmax rounds (one per batch instead of one per
+    /// column), and its factors are a valid Nyström state.
+    #[test]
+    fn merge_batch_cuts_argmax_rounds() {
+        let ds = two_moons(120, 0.05, 5);
+        let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+        let cfg = OasisPConfig::new(24, 4, 3).with_seed(11).with_merge_batch(4);
+        let (approx, report) = run_oasis_p(&ds, kernel, &cfg).unwrap();
+        assert_eq!(approx.k(), 24);
+        // 20 adaptive picks in batches of ≤4 → ≥5 and well under 20 rounds
+        assert!(
+            report.metrics.iterations() < 20,
+            "expected batched rounds, got {}",
+            report.metrics.iterations()
+        );
+        let w = approx.c.select_rows(&approx.indices);
+        let prod = w.matmul(&approx.winv);
+        assert!(
+            prod.fro_dist(&Mat::eye(approx.k())) < 1e-6,
+            "‖W·W⁻¹−I‖ = {}",
+            prod.fro_dist(&Mat::eye(approx.k()))
+        );
+        // selected indices are distinct
+        let mut sorted = approx.indices.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 24);
+    }
+
+    /// merge_batch == 1 (the default) must stay bit-identical to the
+    /// protocol without batching — guarded against the reference run.
+    #[test]
+    fn merge_batch_one_matches_reference() {
+        let ds = two_moons(90, 0.05, 7);
+        let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+        let base = OasisPConfig::new(18, 3, 3).with_seed(4);
+        let (a, _) = run_oasis_p(&ds, kernel.clone(), &base).unwrap();
+        let (b, _) =
+            run_oasis_p(&ds, kernel, &base.with_merge_batch(1)).unwrap();
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.c.data, b.c.data);
+        assert_eq!(a.winv.data, b.winv.data);
     }
 }

@@ -1,11 +1,61 @@
 //! Runtime metrics for the oASIS-P coordinator: communication volume,
-//! iteration counts, and phase timings. Lock-free (atomics) so workers can
+//! iteration counts, phase timings, and per-worker health counters.
+//! Lock-free (atomics) so workers and transport reader threads can
 //! record without contention on the hot path.
 
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Sentinel for "no message seen yet" in [`WorkerCounters::last_seen_ms`].
+const NEVER: u64 = u64::MAX;
+
+/// Per-worker counters surfaced through the server's `/metrics` endpoint
+/// and used by the leader's heartbeat-staleness check. `last_seen_ms` is
+/// milliseconds since [`Metrics`] creation of the most recent message
+/// (including heartbeats) from that worker.
+#[derive(Debug)]
+pub struct WorkerCounters {
+    columns_served: AtomicU64,
+    argmax_rounds: AtomicU64,
+    wire_bytes: AtomicU64,
+    last_seen_ms: AtomicU64,
+    dead: AtomicU64,
+}
+
+impl Default for WorkerCounters {
+    fn default() -> Self {
+        WorkerCounters {
+            columns_served: AtomicU64::new(0),
+            argmax_rounds: AtomicU64::new(0),
+            wire_bytes: AtomicU64::new(0),
+            last_seen_ms: AtomicU64::new(NEVER),
+            dead: AtomicU64::new(0),
+        }
+    }
+}
+
+impl WorkerCounters {
+    pub fn columns_served(&self) -> u64 {
+        self.columns_served.load(Ordering::Relaxed)
+    }
+
+    pub fn argmax_rounds(&self) -> u64 {
+        self.argmax_rounds.load(Ordering::Relaxed)
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed) != 0
+    }
+}
 
 /// Shared coordinator metrics.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     broadcast_bytes: AtomicU64,
     gather_bytes: AtomicU64,
@@ -14,6 +64,28 @@ pub struct Metrics {
     iterations: AtomicU64,
     /// nanoseconds workers spent in local compute
     worker_compute_ns: AtomicU64,
+    /// re-shard events: a dead worker's rows adopted by survivors
+    reshards: AtomicU64,
+    /// clock origin for `last_seen_ms`
+    created: Instant,
+    /// one slot per worker, registered at fleet start
+    workers: Mutex<Vec<std::sync::Arc<WorkerCounters>>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            broadcast_bytes: AtomicU64::new(0),
+            gather_bytes: AtomicU64::new(0),
+            broadcast_msgs: AtomicU64::new(0),
+            gather_msgs: AtomicU64::new(0),
+            iterations: AtomicU64::new(0),
+            worker_compute_ns: AtomicU64::new(0),
+            reshards: AtomicU64::new(0),
+            created: Instant::now(),
+            workers: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl Metrics {
@@ -36,6 +108,79 @@ impl Metrics {
             .fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
     }
 
+    pub fn add_reshard(&self) {
+        self.reshards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Ensure per-worker counter slots `0..p` exist (idempotent; called
+    /// once by the transport when the fleet starts).
+    pub fn register_workers(&self, p: usize) {
+        let mut ws = lock(&self.workers);
+        while ws.len() < p {
+            ws.push(std::sync::Arc::new(WorkerCounters::default()));
+        }
+    }
+
+    /// Counter slot for worker `w`, if registered.
+    pub fn worker(&self, w: usize) -> Option<std::sync::Arc<WorkerCounters>> {
+        lock(&self.workers).get(w).cloned()
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.created.elapsed().as_millis() as u64
+    }
+
+    /// Record a sign of life from worker `w` (any message, including a
+    /// heartbeat that is otherwise swallowed by the transport).
+    pub fn note_alive(&self, w: usize) {
+        if let Some(c) = self.worker(w) {
+            c.last_seen_ms.store(self.now_ms(), Ordering::Relaxed);
+        }
+    }
+
+    /// Record `bytes` of wire traffic attributed to worker `w` (either
+    /// direction — the per-worker ledger tracks link volume, while the
+    /// broadcast/gather totals keep the paper's directional accounting).
+    pub fn add_worker_wire(&self, w: usize, bytes: u64) {
+        if let Some(c) = self.worker(w) {
+            c.wire_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Worker `w` answered a column request (a `Point` fetch or one
+    /// `Columns` gather block).
+    pub fn add_worker_columns(&self, w: usize) {
+        if let Some(c) = self.worker(w) {
+            c.columns_served.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Worker `w` completed one Δ-argmax sweep.
+    pub fn add_worker_argmax(&self, w: usize) {
+        if let Some(c) = self.worker(w) {
+            c.argmax_rounds.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Mark worker `w` dead (it stays in the stats with its final
+    /// counters; the re-shard gave its rows away).
+    pub fn mark_dead(&self, w: usize) {
+        if let Some(c) = self.worker(w) {
+            c.dead.store(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Age of the most recent message from worker `w`; `None` if the
+    /// worker never spoke or is unregistered.
+    pub fn last_seen_age(&self, w: usize) -> Option<Duration> {
+        let c = self.worker(w)?;
+        let seen = c.last_seen_ms.load(Ordering::Relaxed);
+        if seen == NEVER {
+            return None;
+        }
+        Some(Duration::from_millis(self.now_ms().saturating_sub(seen)))
+    }
+
     pub fn broadcast_bytes(&self) -> u64 {
         self.broadcast_bytes.load(Ordering::Relaxed)
     }
@@ -56,13 +201,45 @@ impl Metrics {
         self.iterations.load(Ordering::Relaxed)
     }
 
+    pub fn reshards(&self) -> u64 {
+        self.reshards.load(Ordering::Relaxed)
+    }
+
     pub fn worker_compute_secs(&self) -> f64 {
         self.worker_compute_ns.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
+    /// Per-worker counters as JSON, for the server's `/metrics` endpoint
+    /// (one object per worker, in worker-id order).
+    pub fn worker_stats_json(&self) -> Json {
+        let now = self.now_ms();
+        let ws = lock(&self.workers);
+        Json::Arr(
+            ws.iter()
+                .enumerate()
+                .map(|(w, c)| {
+                    let seen = c.last_seen_ms.load(Ordering::Relaxed);
+                    let age = if seen == NEVER {
+                        Json::Null
+                    } else {
+                        Json::Num(now.saturating_sub(seen) as f64)
+                    };
+                    Json::obj(vec![
+                        ("worker", Json::Num(w as f64)),
+                        ("columns_served", Json::Num(c.columns_served() as f64)),
+                        ("argmax_rounds", Json::Num(c.argmax_rounds() as f64)),
+                        ("wire_bytes", Json::Num(c.wire_bytes() as f64)),
+                        ("last_heartbeat_age_ms", age),
+                        ("dead", Json::Bool(c.is_dead())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "iters={} bcast={} ({} msgs) gather={} ({} msgs) worker_compute={:.2}s",
             self.iterations(),
             crate::util::timing::fmt_bytes(self.broadcast_bytes()),
@@ -70,8 +247,18 @@ impl Metrics {
             crate::util::timing::fmt_bytes(self.gather_bytes()),
             self.gather_msgs(),
             self.worker_compute_secs(),
-        )
+        );
+        let r = self.reshards();
+        if r > 0 {
+            s.push_str(&format!(" reshards={r}"));
+        }
+        s
     }
+}
+
+/// Non-poisoning lock (a panicked recorder must not take metrics down).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 #[cfg(test)]
@@ -90,6 +277,10 @@ mod tests {
         assert_eq!(m.gather_bytes(), 8);
         assert_eq!(m.iterations(), 1);
         assert!(m.summary().contains("iters=1"));
+        // no reshards → the summary omits the field
+        assert!(!m.summary().contains("reshards"));
+        m.add_reshard();
+        assert!(m.summary().contains("reshards=1"));
     }
 
     #[test]
@@ -107,5 +298,33 @@ mod tests {
         });
         assert_eq!(m.gather_bytes(), 24_000);
         assert_eq!(m.gather_msgs(), 8_000);
+    }
+
+    #[test]
+    fn per_worker_counters() {
+        let m = Metrics::default();
+        // unregistered workers are silently ignored (defensive: a late
+        // message after teardown must not panic)
+        m.note_alive(3);
+        assert!(m.last_seen_age(3).is_none());
+        m.register_workers(2);
+        m.add_worker_wire(0, 48);
+        m.add_worker_wire(0, 16);
+        m.add_worker_columns(0);
+        m.add_worker_argmax(1);
+        assert_eq!(m.worker(0).unwrap().wire_bytes(), 64);
+        assert_eq!(m.worker(0).unwrap().columns_served(), 1);
+        assert_eq!(m.worker(1).unwrap().argmax_rounds(), 1);
+        // never-seen workers report no age; seen ones report a small one
+        assert!(m.last_seen_age(0).is_none());
+        m.note_alive(0);
+        assert!(m.last_seen_age(0).unwrap() < Duration::from_secs(5));
+        let js = m.worker_stats_json().to_string();
+        assert!(js.contains("\"columns_served\":1"), "{js}");
+        assert!(js.contains("\"wire_bytes\":64"), "{js}");
+        assert!(js.contains("\"last_heartbeat_age_ms\":null"), "{js}");
+        m.mark_dead(1);
+        assert!(m.worker(1).unwrap().is_dead());
+        assert!(m.worker_stats_json().to_string().contains("\"dead\":true"));
     }
 }

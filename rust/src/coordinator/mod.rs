@@ -6,19 +6,64 @@
 //! and one broadcast data point — the low-communication property that makes
 //! the method practical at millions of points.
 //!
-//! Here each "node" is an OS thread with private state; MPI's
-//! `Broadcast`/`Gather` become explicit message channels ([`comm`]) whose
-//! payload bytes are metered ([`metrics`]), so Table III's
-//! communication-bound behaviour is preserved and measurable. The selection
-//! sequence is bit-identical to the sequential sampler for every worker
-//! count (tested in rust/tests/coordinator_dist.rs).
+//! Two deployments share one coordinator, through the [`transport`] seam:
+//!
+//! * **In-process** ([`transport::ChannelTransport`]): each "node" is an
+//!   OS thread with private state; MPI's `Broadcast`/`Gather` become
+//!   explicit message channels ([`comm`]) whose payload bytes are metered
+//!   ([`metrics`]).
+//! * **Multi-process** ([`net::TcpTransport`]): each node is a separate
+//!   `oasis worker --join HOST:PORT` process that shard-reads its own
+//!   byte range of the dataset file and speaks the TCP wire protocol
+//!   below.
+//!
+//! Either way the selection sequence is bit-identical to the sequential
+//! sampler for every worker count (tested in
+//! rust/tests/coordinator_dist.rs), and Table III's communication-bound
+//! behaviour is preserved and measurable.
+//!
+//! # Wire protocol (TCP transport)
+//!
+//! Every message is one length-framed, FNV-1a-64-checksummed frame
+//! ([`crate::util::framing::write_frame`]):
+//!
+//! ```text
+//! [u64 LE payload length][u64 LE fnv1a64(payload)][payload]
+//! ```
+//!
+//! The payload is a tag byte plus little-endian fields; f64s travel as
+//! raw bits (`to_bits`), which is what keeps TCP runs bit-identical to
+//! in-process runs. Handshake: the worker connects, the leader sends
+//! `Assign` (shard index, worker count, n, dataset path, load limits,
+//! column budget, merge batch, kernel parameters as JSON, heartbeat
+//! period), the worker shard-reads its rows and answers `Joined` (the
+//! row range it actually covers, verified against the plan), and the
+//! selection loop begins with `Init`. See [`net`] for the full frame
+//! catalogue and [`comm`] for message semantics.
+//!
+//! # Fault tolerance
+//!
+//! TCP workers send heartbeats from a timer thread; the leader tracks
+//! per-worker last-seen ages ([`metrics`]) and treats reader-thread EOF,
+//! socket/frame errors, or heartbeat staleness past the configured
+//! timeout as a node death. A death during the selection loop on a
+//! file-backed run triggers *re-sharding*: the leader bumps its epoch,
+//! splits the dead worker's row ranges across the survivors
+//! ([`comm::ToWorker::Adopt`]), discards stale in-flight replies by
+//! epoch, and the run completes on the remaining workers. Deterministic
+//! worker errors ([`comm::FromWorker::Failed`]) are always fatal — see
+//! [`leader`] for the full semantics.
 
 pub mod comm;
 pub mod config;
 pub mod leader;
 pub mod metrics;
+pub mod net;
+pub mod transport;
 pub mod worker;
 
 pub use config::{FailureSpec, OasisPConfig};
 pub use leader::{run_oasis_p, OasisPReport, OasisPSession, ShardPlan};
 pub use metrics::Metrics;
+pub use net::{run_worker, TcpTransport};
+pub use transport::{ChannelTransport, Fleet, Transport, TransportCtx};

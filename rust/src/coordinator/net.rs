@@ -1,0 +1,1082 @@
+//! TCP transport for oASIS-P: the leader and its workers as separate
+//! *processes* on opposite ends of real sockets.
+//!
+//! # Wire protocol
+//!
+//! Every message is one checksummed stream frame
+//! ([`framing::write_frame`]/[`framing::read_frame`]):
+//!
+//! ```text
+//! [u64 LE payload length][u64 LE FNV-1a 64 of payload][payload]
+//! ```
+//!
+//! The payload is a tag byte followed by little-endian fields (codec
+//! below; f64s travel as `to_bits` so distributed runs stay bit-identical
+//! to in-process ones). Frames are bounded by [`MAX_FRAME_BYTES`]; a
+//! corrupt or truncated frame is a clean error that tears the link down
+//! (the leader sees the dead link as a worker death and re-shards).
+//!
+//! # Handshake
+//!
+//! ```text
+//! worker                                  leader
+//!   ── connect ──────────────────────────▶
+//!   ◀── Assign{worker, workers, n, path,──
+//!        limits, max_cols, merge_batch,
+//!        kernel JSON, heartbeat_ms}
+//!   (shard-reads rows worker·n/p ..)
+//!   ── Joined{worker, start, len} ───────▶  (verified against the plan)
+//!   ◀── Init{seeds…} ─────────────────────  (selection loop begins)
+//! ```
+//!
+//! After the handshake the worker speaks [`FromWorker`] frames (plus
+//! periodic `Heartbeat`s from a timer thread) and the leader speaks
+//! [`ToWorker`] frames. The leader-side reader thread forwards decoded
+//! messages into the shared [`LeaderInbox`](super::comm::LeaderInbox) —
+//! swallowing heartbeats, which only refresh the worker's last-seen age —
+//! and turns EOF or any socket/frame error into a local
+//! [`FromWorker::Gone`], the death signal that triggers re-sharding.
+//!
+//! Workers never see each other; all traffic is leader ⇄ worker, matching
+//! the paper's star topology (Fig. 4).
+
+use super::comm::{
+    FromWorker, LeaderHandle, LeaderSink, ToWorker, WorkerHandle, WorkerSink,
+    WorkerSource,
+};
+use super::leader::ShardPlan;
+use super::transport::{plan_workers, Fleet, Transport, TransportCtx};
+use super::worker::{Worker, WorkerOpts};
+use crate::data::{loader, shard, LoadLimits};
+use crate::kernels::{Kernel, KernelParams};
+use crate::nystrom::store::{kernel_from_json, kernel_to_json};
+use crate::util::{framing, json::Json};
+use crate::{anyhow, bail, Result};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on a single wire frame. The largest legitimate frame is a
+/// terminal `Columns` block (shard rows × k f64s); 8 GiB leaves room for
+/// any realistic run while refusing hostile length prefixes outright.
+pub const MAX_FRAME_BYTES: u64 = 1 << 33;
+
+// ---- payload codec -------------------------------------------------------
+//
+// tag bytes: ToWorker 1..=6, FromWorker 32..=36, handshake 64..=65.
+// `Gone` is local-only and has no encoding on purpose.
+
+const TAG_INIT: u8 = 1;
+const TAG_FETCH_POINT: u8 = 2;
+const TAG_SELECTED: u8 = 3;
+const TAG_GATHER_COLUMNS: u8 = 4;
+const TAG_ADOPT: u8 = 5;
+const TAG_FINISH: u8 = 6;
+const TAG_ARGMAX: u8 = 32;
+const TAG_POINT: u8 = 33;
+const TAG_COLUMNS: u8 = 34;
+const TAG_FAILED: u8 = 35;
+const TAG_HEARTBEAT: u8 = 36;
+const TAG_ASSIGN: u8 = 64;
+const TAG_JOINED: u8 = 65;
+
+struct Enc {
+    b: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Enc {
+        Enc { b: vec![tag] }
+    }
+
+    fn u64v(&mut self, v: u64) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn uz(&mut self, v: usize) {
+        self.u64v(v as u64);
+    }
+
+    /// f64 as raw bits — the wire must be bit-exact, not shortest-decimal.
+    fn f64v(&mut self, v: f64) {
+        self.u64v(v.to_bits());
+    }
+
+    fn boolean(&mut self, v: bool) {
+        self.b.push(u8::from(v));
+    }
+
+    fn str(&mut self, s: &str) {
+        self.uz(s.len());
+        self.b.extend_from_slice(s.as_bytes());
+    }
+
+    fn f64s(&mut self, xs: &[f64]) {
+        self.uz(xs.len());
+        for &x in xs {
+            self.f64v(x);
+        }
+    }
+
+    fn uzs(&mut self, xs: &[usize]) {
+        self.uz(xs.len());
+        for &x in xs {
+            self.uz(x);
+        }
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated message: {what} needs {n} bytes, {} left",
+                self.remaining()
+            );
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8v(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u64v(&mut self, what: &str) -> Result<u64> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn uz(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64v(what)?;
+        usize::try_from(v).map_err(|_| anyhow!("{what}: {v} overflows usize"))
+    }
+
+    fn f64v(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64v(what)?))
+    }
+
+    fn boolean(&mut self, what: &str) -> Result<bool> {
+        match self.u8v(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => bail!("{what}: {v} is not a bool"),
+        }
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.uz(what)?;
+        let s = self.take(n, what)?;
+        String::from_utf8(s.to_vec()).map_err(|_| anyhow!("{what}: not UTF-8"))
+    }
+
+    /// Length-checked element count: `count × width` must fit in the
+    /// bytes actually present, so a crafted count can't trigger a huge
+    /// allocation.
+    fn count(&mut self, width: usize, what: &str) -> Result<usize> {
+        let n = self.uz(what)?;
+        let bytes = n
+            .checked_mul(width)
+            .ok_or_else(|| anyhow!("{what}: count {n} overflows"))?;
+        if bytes > self.remaining() {
+            bail!(
+                "truncated message: {what} claims {n} elements ({bytes} \
+                 bytes) but {} remain",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
+    fn f64s(&mut self, what: &str) -> Result<Vec<f64>> {
+        let n = self.count(8, what)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64v(what)?);
+        }
+        Ok(out)
+    }
+
+    fn uzs(&mut self, what: &str) -> Result<Vec<usize>> {
+        let n = self.count(8, what)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.uz(what)?);
+        }
+        Ok(out)
+    }
+
+    fn done(self, what: &str) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("{what}: {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+/// Encode a leader → worker message.
+pub fn encode_to_worker(m: &ToWorker) -> Vec<u8> {
+    match m {
+        ToWorker::Init { seed_indices, seed_points, winv0 } => {
+            let mut e = Enc::new(TAG_INIT);
+            e.uzs(seed_indices);
+            e.uz(seed_points.len());
+            for p in seed_points {
+                e.f64s(p);
+            }
+            e.f64s(winv0);
+            e.b
+        }
+        ToWorker::FetchPoint { global_idx } => {
+            let mut e = Enc::new(TAG_FETCH_POINT);
+            e.uz(*global_idx);
+            e.b
+        }
+        ToWorker::Selected { global_idx, point, delta, epoch, want_argmax } => {
+            let mut e = Enc::new(TAG_SELECTED);
+            e.uz(*global_idx);
+            e.f64s(point);
+            match delta {
+                Some(d) => {
+                    e.boolean(true);
+                    e.f64v(*d);
+                }
+                None => e.boolean(false),
+            }
+            e.u64v(*epoch);
+            e.boolean(*want_argmax);
+            e.b
+        }
+        ToWorker::GatherColumns { winv } => {
+            let mut e = Enc::new(TAG_GATHER_COLUMNS);
+            e.boolean(*winv);
+            e.b
+        }
+        ToWorker::Adopt { epoch, ranges, selected, want_argmax } => {
+            let mut e = Enc::new(TAG_ADOPT);
+            e.u64v(*epoch);
+            e.uz(ranges.len());
+            for &(s, l) in ranges {
+                e.uz(s);
+                e.uz(l);
+            }
+            e.uzs(selected);
+            e.boolean(*want_argmax);
+            e.b
+        }
+        ToWorker::Finish { winv } => {
+            let mut e = Enc::new(TAG_FINISH);
+            e.boolean(*winv);
+            e.b
+        }
+    }
+}
+
+/// Decode a leader → worker message.
+pub fn decode_to_worker(b: &[u8]) -> Result<ToWorker> {
+    let mut d = Dec::new(b);
+    let tag = d.u8v("tag")?;
+    let m = match tag {
+        TAG_INIT => {
+            let seed_indices = d.uzs("Init.seed_indices")?;
+            let np = d.count(8, "Init.seed_points")?;
+            let mut seed_points = Vec::with_capacity(np);
+            for _ in 0..np {
+                seed_points.push(d.f64s("Init.seed_point")?);
+            }
+            let winv0 = d.f64s("Init.winv0")?;
+            ToWorker::Init { seed_indices, seed_points, winv0 }
+        }
+        TAG_FETCH_POINT => {
+            ToWorker::FetchPoint { global_idx: d.uz("FetchPoint.global_idx")? }
+        }
+        TAG_SELECTED => {
+            let global_idx = d.uz("Selected.global_idx")?;
+            let point = d.f64s("Selected.point")?;
+            let delta = if d.boolean("Selected.has_delta")? {
+                Some(d.f64v("Selected.delta")?)
+            } else {
+                None
+            };
+            let epoch = d.u64v("Selected.epoch")?;
+            let want_argmax = d.boolean("Selected.want_argmax")?;
+            ToWorker::Selected { global_idx, point, delta, epoch, want_argmax }
+        }
+        TAG_GATHER_COLUMNS => {
+            ToWorker::GatherColumns { winv: d.boolean("GatherColumns.winv")? }
+        }
+        TAG_ADOPT => {
+            let epoch = d.u64v("Adopt.epoch")?;
+            let nr = d.count(16, "Adopt.ranges")?;
+            let mut ranges = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                ranges.push((d.uz("Adopt.range.start")?, d.uz("Adopt.range.len")?));
+            }
+            let selected = d.uzs("Adopt.selected")?;
+            let want_argmax = d.boolean("Adopt.want_argmax")?;
+            ToWorker::Adopt { epoch, ranges, selected, want_argmax }
+        }
+        TAG_FINISH => ToWorker::Finish { winv: d.boolean("Finish.winv")? },
+        t => bail!("unknown leader→worker message tag {t}"),
+    };
+    d.done("leader→worker message")?;
+    Ok(m)
+}
+
+/// Encode a worker → leader message. `Gone` is a local-only signal and
+/// has no wire form — encoding it is an error.
+pub fn encode_from_worker(m: &FromWorker) -> Result<Vec<u8>> {
+    Ok(match m {
+        FromWorker::Argmax {
+            worker,
+            epoch,
+            candidates,
+            d_max,
+            sum_abs_delta,
+            d_sum,
+        } => {
+            let mut e = Enc::new(TAG_ARGMAX);
+            e.uz(*worker);
+            e.u64v(*epoch);
+            e.uz(candidates.len());
+            for &(g, dv) in candidates {
+                e.uz(g);
+                e.f64v(dv);
+            }
+            e.f64v(*d_max);
+            e.f64v(*sum_abs_delta);
+            e.f64v(*d_sum);
+            e.b
+        }
+        FromWorker::Point { global_idx, point } => {
+            let mut e = Enc::new(TAG_POINT);
+            e.uz(*global_idx);
+            e.f64s(point);
+            e.b
+        }
+        FromWorker::Columns { worker, start, local_n, c_block, winv } => {
+            let mut e = Enc::new(TAG_COLUMNS);
+            e.uz(*worker);
+            e.uz(*start);
+            e.uz(*local_n);
+            e.f64s(c_block);
+            match winv {
+                Some(w) => {
+                    e.boolean(true);
+                    e.f64s(w);
+                }
+                None => e.boolean(false),
+            }
+            e.b
+        }
+        FromWorker::Failed { worker, message } => {
+            let mut e = Enc::new(TAG_FAILED);
+            e.uz(*worker);
+            e.str(message);
+            e.b
+        }
+        FromWorker::Heartbeat { worker } => {
+            let mut e = Enc::new(TAG_HEARTBEAT);
+            e.uz(*worker);
+            e.b
+        }
+        FromWorker::Gone { .. } => {
+            bail!("Gone is a leader-local signal, never sent on the wire")
+        }
+    })
+}
+
+/// Decode a worker → leader message.
+pub fn decode_from_worker(b: &[u8]) -> Result<FromWorker> {
+    let mut d = Dec::new(b);
+    let tag = d.u8v("tag")?;
+    let m = match tag {
+        TAG_ARGMAX => {
+            let worker = d.uz("Argmax.worker")?;
+            let epoch = d.u64v("Argmax.epoch")?;
+            let nc = d.count(16, "Argmax.candidates")?;
+            let mut candidates = Vec::with_capacity(nc);
+            for _ in 0..nc {
+                candidates
+                    .push((d.uz("Argmax.cand.idx")?, d.f64v("Argmax.cand.delta")?));
+            }
+            let d_max = d.f64v("Argmax.d_max")?;
+            let sum_abs_delta = d.f64v("Argmax.sum_abs_delta")?;
+            let d_sum = d.f64v("Argmax.d_sum")?;
+            FromWorker::Argmax {
+                worker,
+                epoch,
+                candidates,
+                d_max,
+                sum_abs_delta,
+                d_sum,
+            }
+        }
+        TAG_POINT => FromWorker::Point {
+            global_idx: d.uz("Point.global_idx")?,
+            point: d.f64s("Point.point")?,
+        },
+        TAG_COLUMNS => {
+            let worker = d.uz("Columns.worker")?;
+            let start = d.uz("Columns.start")?;
+            let local_n = d.uz("Columns.local_n")?;
+            let c_block = d.f64s("Columns.c_block")?;
+            let winv = if d.boolean("Columns.has_winv")? {
+                Some(d.f64s("Columns.winv")?)
+            } else {
+                None
+            };
+            FromWorker::Columns { worker, start, local_n, c_block, winv }
+        }
+        TAG_FAILED => FromWorker::Failed {
+            worker: d.uz("Failed.worker")?,
+            message: d.str("Failed.message")?,
+        },
+        TAG_HEARTBEAT => {
+            FromWorker::Heartbeat { worker: d.uz("Heartbeat.worker")? }
+        }
+        t => bail!("unknown worker→leader message tag {t}"),
+    };
+    d.done("worker→leader message")?;
+    Ok(m)
+}
+
+/// The leader's half of the handshake: everything a joining worker needs
+/// to become shard `worker` of `workers`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assign {
+    pub worker: usize,
+    pub workers: usize,
+    pub n: usize,
+    /// dataset path as the *leader* sees it; `oasis worker --data`
+    /// overrides it for workers with a different mount point
+    pub path: String,
+    pub limits: LoadLimits,
+    pub max_cols: usize,
+    pub merge_batch: usize,
+    /// kernel as its canonical JSON spec (see
+    /// [`kernel_to_json`]/[`kernel_from_json`]); [`KernelParams::build`]
+    /// reproduces the kernel bit-exactly on the worker
+    pub kernel: KernelParams,
+    pub heartbeat_ms: u64,
+}
+
+/// Encode the `Assign` handshake frame.
+pub fn encode_assign(a: &Assign) -> Vec<u8> {
+    let mut e = Enc::new(TAG_ASSIGN);
+    e.uz(a.worker);
+    e.uz(a.workers);
+    e.uz(a.n);
+    e.str(&a.path);
+    e.uz(a.limits.max_n);
+    e.uz(a.limits.max_dim);
+    // u128 cap travels saturated to u64 — nobody limits above 2^64 elems
+    e.u64v(u64::try_from(a.limits.max_elems).unwrap_or(u64::MAX));
+    e.uz(a.max_cols);
+    e.uz(a.merge_batch);
+    e.str(&kernel_to_json(&a.kernel).to_string());
+    e.u64v(a.heartbeat_ms);
+    e.b
+}
+
+/// Decode the `Assign` handshake frame.
+pub fn decode_assign(b: &[u8]) -> Result<Assign> {
+    let mut d = Dec::new(b);
+    if d.u8v("tag")? != TAG_ASSIGN {
+        bail!("expected an Assign handshake frame");
+    }
+    let worker = d.uz("Assign.worker")?;
+    let workers = d.uz("Assign.workers")?;
+    let n = d.uz("Assign.n")?;
+    let path = d.str("Assign.path")?;
+    let limits = LoadLimits {
+        max_n: d.uz("Assign.limits.max_n")?,
+        max_dim: d.uz("Assign.limits.max_dim")?,
+        max_elems: d.u64v("Assign.limits.max_elems")? as u128,
+    };
+    let max_cols = d.uz("Assign.max_cols")?;
+    let merge_batch = d.uz("Assign.merge_batch")?;
+    let kjson = d.str("Assign.kernel")?;
+    let kernel = kernel_from_json(
+        &Json::parse(&kjson).map_err(|e| anyhow!("Assign.kernel: {e}"))?,
+    )?;
+    let heartbeat_ms = d.u64v("Assign.heartbeat_ms")?;
+    d.done("Assign")?;
+    Ok(Assign {
+        worker,
+        workers,
+        n,
+        path,
+        limits,
+        max_cols,
+        merge_batch,
+        kernel,
+        heartbeat_ms,
+    })
+}
+
+/// The worker's half of the handshake: which rows its shard read
+/// actually covers (the leader verifies this against the plan).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Joined {
+    pub worker: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Encode the `Joined` handshake frame.
+pub fn encode_joined(j: &Joined) -> Vec<u8> {
+    let mut e = Enc::new(TAG_JOINED);
+    e.uz(j.worker);
+    e.uz(j.start);
+    e.uz(j.len);
+    e.b
+}
+
+/// Decode the `Joined` handshake frame.
+pub fn decode_joined(b: &[u8]) -> Result<Joined> {
+    let mut d = Dec::new(b);
+    if d.u8v("tag")? != TAG_JOINED {
+        bail!("expected a Joined handshake frame");
+    }
+    let j = Joined {
+        worker: d.uz("Joined.worker")?,
+        start: d.uz("Joined.start")?,
+        len: d.uz("Joined.len")?,
+    };
+    d.done("Joined")?;
+    Ok(j)
+}
+
+// ---- socket endpoints ----------------------------------------------------
+
+/// Mutex-serialized frame writer over one socket. Shared between a TCP
+/// worker's compute loop and its heartbeat thread (and usable from the
+/// leader's single send path); each frame is written atomically under the
+/// lock so frames never interleave.
+struct FrameWriter {
+    stream: Mutex<TcpStream>,
+}
+
+impl FrameWriter {
+    fn new(stream: TcpStream) -> FrameWriter {
+        FrameWriter { stream: Mutex::new(stream) }
+    }
+
+    fn send_payload(&self, payload: &[u8]) -> bool {
+        let mut s = match self.stream.lock() {
+            Ok(s) => s,
+            Err(_) => return false,
+        };
+        framing::write_frame(&mut *s, payload).is_ok() && s.flush().is_ok()
+    }
+}
+
+/// Leader-side outbound link to one TCP worker.
+struct TcpWorkerSink(Arc<FrameWriter>);
+
+impl WorkerSink for TcpWorkerSink {
+    fn send(&self, msg: &ToWorker) -> bool {
+        self.0.send_payload(&encode_to_worker(msg))
+    }
+}
+
+/// Worker-side outbound link to the leader.
+struct TcpLeaderSink(Arc<FrameWriter>);
+
+impl LeaderSink for TcpLeaderSink {
+    fn send(&self, msg: &FromWorker) -> bool {
+        match encode_from_worker(msg) {
+            Ok(p) => self.0.send_payload(&p),
+            Err(_) => false, // Gone is never wire-encoded
+        }
+    }
+}
+
+/// Worker-side inbound link: blocking frame reads off the socket. EOF,
+/// socket errors, and undecodable frames all end the message loop (the
+/// worker exits; the leader's reader sees the close as a death).
+struct TcpWorkerSource {
+    stream: TcpStream,
+}
+
+impl WorkerSource for TcpWorkerSource {
+    fn recv(&mut self) -> Option<ToWorker> {
+        match framing::read_frame(&mut self.stream, MAX_FRAME_BYTES) {
+            Ok(Some(payload)) => decode_to_worker(&payload).ok(),
+            _ => None,
+        }
+    }
+}
+
+// ---- leader side: the transport ------------------------------------------
+
+/// TCP transport: workers are separate `oasis worker --join HOST:PORT`
+/// processes. Requires [`ShardPlan::File`] (each process shard-reads its
+/// own byte range of the dataset file) and a parameterized kernel (it
+/// ships in the `Assign` handshake). Produced fleets are recoverable: a
+/// worker process dying mid-selection triggers re-sharding onto the
+/// survivors.
+pub struct TcpTransport {
+    listener: TcpListener,
+}
+
+impl TcpTransport {
+    /// Bind the listening socket (e.g. `"127.0.0.1:0"` for an ephemeral
+    /// port). Binding is separate from [`Transport::start`] so a caller
+    /// can print the bound address for workers to join before blocking
+    /// in the accept loop.
+    pub fn bind(addr: &str) -> Result<TcpTransport> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("binding leader socket {addr}: {e}"))?;
+        Ok(TcpTransport { listener })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        self.listener
+            .local_addr()
+            .map_err(|e| anyhow!("leader socket address: {e}"))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn start(self: Box<Self>, ctx: TransportCtx) -> Result<Fleet> {
+        let TransportCtx { plan, kernel, cfg, metrics } = ctx;
+        let (path, n, limits) = match &plan {
+            ShardPlan::File { path, n, limits } => (path.clone(), *n, *limits),
+            ShardPlan::Memory(_) => bail!(
+                "TCP workers shard-read the dataset themselves — run with a \
+                 file-backed dataset (ShardPlan::File)"
+            ),
+        };
+        let params = kernel.params().ok_or_else(|| {
+            anyhow!(
+                "TCP workers rebuild the kernel from its parameters — this \
+                 kernel has none (custom closure kernels are in-process only)"
+            )
+        })?;
+        let path_str = path.to_str().ok_or_else(|| {
+            anyhow!("dataset path {} is not UTF-8", path.display())
+        })?;
+        let p = plan_workers(&plan, &cfg);
+        let expected = shard::shard_ranges(n, p);
+        let (tx, inbox) = mpsc::channel::<FromWorker>();
+        let mut handles: Vec<WorkerHandle> = Vec::with_capacity(p);
+        let mut joins = Vec::with_capacity(p);
+        // accept under a deadline: a fleet that never fills is a clean
+        // startup error, not a hang
+        self.listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow!("leader socket: {e}"))?;
+        let deadline = Instant::now() + cfg.timeout;
+        metrics.register_workers(p);
+        for w in 0..p {
+            let stream = loop {
+                match self.listener.accept() {
+                    Ok((s, _)) => break s,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if Instant::now() >= deadline {
+                            bail!(
+                                "only {w} of {p} workers joined within \
+                                 {:?} — start the missing `oasis worker \
+                                 --join` processes",
+                                cfg.timeout
+                            );
+                        }
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(e) => bail!("accepting worker connection: {e}"),
+                }
+            };
+            stream
+                .set_nonblocking(false)
+                .and_then(|()| stream.set_nodelay(true))
+                .map_err(|e| anyhow!("worker {w} socket: {e}"))?;
+            // bound the handshake (the worker shard-reads before Joined)
+            stream
+                .set_read_timeout(Some(cfg.timeout))
+                .map_err(|e| anyhow!("worker {w} socket: {e}"))?;
+            let writer = Arc::new(FrameWriter::new(
+                stream.try_clone().map_err(|e| anyhow!("worker {w}: {e}"))?,
+            ));
+            let assign = Assign {
+                worker: w,
+                workers: p,
+                n,
+                path: path_str.to_string(),
+                limits,
+                max_cols: cfg.max_cols,
+                merge_batch: cfg.merge_batch,
+                kernel: params.clone(),
+                heartbeat_ms: cfg.heartbeat_interval().as_millis() as u64,
+            };
+            if !writer.send_payload(&encode_assign(&assign)) {
+                bail!("worker {w} hung up during the Assign handshake");
+            }
+            let mut rd = stream;
+            let joined = match framing::read_frame(&mut rd, MAX_FRAME_BYTES)? {
+                Some(payload) => decode_joined(&payload)?,
+                None => bail!("worker {w} hung up before Joined"),
+            };
+            let want = &expected[w];
+            if joined.worker != w
+                || joined.start != want.start
+                || joined.len != want.end - want.start
+            {
+                bail!(
+                    "worker {w} joined covering rows {}..{} but this run \
+                     expects {}..{} — its copy of the dataset differs from \
+                     the leader's",
+                    joined.start,
+                    joined.start + joined.len,
+                    want.start,
+                    want.end
+                );
+            }
+            metrics.note_alive(w);
+            // steady state: reads block, liveness is the heartbeat's job
+            // (a stuck-open socket is caught by the leader's staleness
+            // check; twice the timeout bounds the reader thread itself)
+            rd.set_read_timeout(Some(cfg.timeout * 2))
+                .map_err(|e| anyhow!("worker {w} socket: {e}"))?;
+            handles.push(WorkerHandle::new(
+                w,
+                Box::new(TcpWorkerSink(writer)),
+                metrics.clone(),
+            ));
+            // reader thread: decode and forward into the shared inbox.
+            // No metering here — gather accounting happens when the
+            // leader dequeues, identically for both transports.
+            let reader_tx = tx.clone();
+            let reader_metrics = metrics.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rd = rd;
+                loop {
+                    match framing::read_frame(&mut rd, MAX_FRAME_BYTES) {
+                        Ok(Some(payload)) => {
+                            match decode_from_worker(&payload) {
+                                Ok(FromWorker::Heartbeat { worker }) => {
+                                    reader_metrics.note_alive(worker);
+                                }
+                                Ok(msg) => {
+                                    if reader_tx.send(msg).is_err() {
+                                        return; // leader gone
+                                    }
+                                }
+                                Err(_) => {
+                                    // undecodable payload: the link is
+                                    // unusable — report the death
+                                    let _ = reader_tx
+                                        .send(FromWorker::Gone { worker: w });
+                                    return;
+                                }
+                            }
+                        }
+                        Ok(None) | Err(_) => {
+                            let _ =
+                                reader_tx.send(FromWorker::Gone { worker: w });
+                            return;
+                        }
+                    }
+                }
+            }));
+        }
+        drop(tx);
+        Ok(Fleet { p, handles, inbox, joins, recoverable: true, tcp: true })
+    }
+}
+
+// ---- worker side: the process entry --------------------------------------
+
+/// Run one worker process: connect to the leader, receive the `Assign`
+/// handshake, shard-read the assigned rows, reply `Joined`, then serve
+/// the selection loop until `Finish` (or the link drops). A timer thread
+/// sends heartbeats at the leader-assigned period for the whole life of
+/// the loop. This is the body of `oasis worker --join HOST:PORT`.
+///
+/// `data_override` replaces the leader's dataset path (workers mounted
+/// differently); `throttle` artificially delays each update (the CI
+/// kill-recovery smoke job uses it to die mid-run deterministically).
+pub fn run_worker(
+    join_addr: &str,
+    data_override: Option<PathBuf>,
+    throttle: Option<Duration>,
+) -> Result<()> {
+    let stream = TcpStream::connect(join_addr)
+        .map_err(|e| anyhow!("connecting to leader {join_addr}: {e}"))?;
+    stream
+        .set_nodelay(true)
+        .map_err(|e| anyhow!("worker socket: {e}"))?;
+    let mut rd = stream.try_clone().map_err(|e| anyhow!("worker socket: {e}"))?;
+    let assign = match framing::read_frame(&mut rd, MAX_FRAME_BYTES)? {
+        Some(payload) => decode_assign(&payload)?,
+        None => bail!("leader {join_addr} hung up before Assign"),
+    };
+    let path = data_override.unwrap_or_else(|| PathBuf::from(&assign.path));
+    let my_shard =
+        loader::load_shard(&path, assign.worker, assign.workers, &assign.limits)?;
+    let writer = Arc::new(FrameWriter::new(stream));
+    let joined = Joined {
+        worker: assign.worker,
+        start: my_shard.start,
+        len: my_shard.len(),
+    };
+    if !writer.send_payload(&encode_joined(&joined)) {
+        bail!("leader hung up during the Joined handshake");
+    }
+
+    // heartbeat timer: the worker's liveness beacon, independent of the
+    // compute loop so long updates don't read as death
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb_stop = stop.clone();
+    let hb_writer = writer.clone();
+    let hb_worker = assign.worker;
+    let period = Duration::from_millis(assign.heartbeat_ms.max(50));
+    let hb = std::thread::spawn(move || {
+        let beat = encode_from_worker(&FromWorker::Heartbeat { worker: hb_worker })
+            .expect("heartbeat encodes");
+        while !hb_stop.load(Ordering::Relaxed) {
+            std::thread::sleep(period);
+            if hb_stop.load(Ordering::Relaxed) {
+                return;
+            }
+            if !hb_writer.send_payload(&beat) {
+                return; // link down — the compute loop is ending too
+            }
+        }
+    });
+
+    let kernel: Arc<dyn Kernel + Send + Sync> = Arc::from(assign.kernel.build());
+    let leader = LeaderHandle::new(Arc::new(TcpLeaderSink(writer)));
+    let metrics = Arc::new(super::metrics::Metrics::default());
+    let opts = WorkerOpts {
+        max_cols: assign.max_cols,
+        merge_batch: assign.merge_batch,
+        failure: None,
+        file_source: Some((path, assign.limits)),
+        throttle,
+    };
+    Worker::new(assign.worker, my_shard, kernel, leader, metrics, opts)
+        .run(TcpWorkerSource { stream: rd });
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_to_worker(m: ToWorker) {
+        let enc = encode_to_worker(&m);
+        let back = decode_to_worker(&enc).unwrap();
+        assert_eq!(format!("{m:?}"), format!("{back:?}"));
+    }
+
+    fn roundtrip_from_worker(m: FromWorker) {
+        let enc = encode_from_worker(&m).unwrap();
+        let back = decode_from_worker(&enc).unwrap();
+        assert_eq!(format!("{m:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn to_worker_messages_round_trip() {
+        roundtrip_to_worker(ToWorker::Init {
+            seed_indices: vec![3, 9, 1],
+            seed_points: vec![vec![0.1, -0.2], vec![1.0 / 3.0, 5e-324]],
+            winv0: vec![1.0, 0.0, 0.0, 1.0],
+        });
+        roundtrip_to_worker(ToWorker::FetchPoint { global_idx: 42 });
+        roundtrip_to_worker(ToWorker::Selected {
+            global_idx: 7,
+            point: vec![f64::MAX, -0.0, 2.5],
+            delta: Some(0.123456789),
+            epoch: 3,
+            want_argmax: true,
+        });
+        roundtrip_to_worker(ToWorker::Selected {
+            global_idx: 8,
+            point: vec![],
+            delta: None,
+            epoch: 0,
+            want_argmax: false,
+        });
+        roundtrip_to_worker(ToWorker::GatherColumns { winv: true });
+        roundtrip_to_worker(ToWorker::Adopt {
+            epoch: 9,
+            ranges: vec![(10, 5), (40, 2)],
+            selected: vec![1, 2, 3],
+            want_argmax: true,
+        });
+        roundtrip_to_worker(ToWorker::Finish { winv: false });
+    }
+
+    #[test]
+    fn from_worker_messages_round_trip() {
+        roundtrip_from_worker(FromWorker::Argmax {
+            worker: 2,
+            epoch: 5,
+            candidates: vec![(11, -0.25), (3, 0.125)],
+            d_max: 1.5,
+            sum_abs_delta: 0.75,
+            d_sum: 12.0,
+        });
+        roundtrip_from_worker(FromWorker::Point {
+            global_idx: 6,
+            point: vec![0.1, 0.2],
+        });
+        roundtrip_from_worker(FromWorker::Columns {
+            worker: 0,
+            start: 25,
+            local_n: 2,
+            c_block: vec![1.0, 2.0, 3.0, 4.0],
+            winv: Some(vec![1.0, 0.0, 0.0, 1.0]),
+        });
+        roundtrip_from_worker(FromWorker::Failed {
+            worker: 1,
+            message: "shard went bad: Δ vanished".to_string(),
+        });
+        roundtrip_from_worker(FromWorker::Heartbeat { worker: 3 });
+    }
+
+    #[test]
+    fn f64_wire_encoding_is_bit_exact() {
+        // bit parity over the wire is the whole point: NaN payloads,
+        // signed zeros, and subnormals must survive unchanged
+        let tricky =
+            vec![f64::NAN, -0.0, 5e-324, f64::INFINITY, -f64::MIN_POSITIVE];
+        let enc = encode_from_worker(&FromWorker::Point {
+            global_idx: 0,
+            point: tricky.clone(),
+        })
+        .unwrap();
+        match decode_from_worker(&enc).unwrap() {
+            FromWorker::Point { point, .. } => {
+                for (a, b) in tricky.iter().zip(&point) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gone_never_encodes() {
+        assert!(encode_from_worker(&FromWorker::Gone { worker: 0 }).is_err());
+    }
+
+    #[test]
+    fn handshake_frames_round_trip() {
+        let a = Assign {
+            worker: 1,
+            workers: 3,
+            n: 500,
+            path: "/tmp/data.mat".to_string(),
+            limits: LoadLimits {
+                max_n: 10_000,
+                max_dim: 64,
+                max_elems: 1 << 40,
+            },
+            max_cols: 50,
+            merge_batch: 4,
+            kernel: KernelParams::Gaussian { inv_sigma_sq: 0.73 },
+            heartbeat_ms: 250,
+        };
+        let back = decode_assign(&encode_assign(&a)).unwrap();
+        assert_eq!(a, back);
+        let j = Joined { worker: 1, start: 167, len: 167 };
+        assert_eq!(decode_joined(&encode_joined(&j)).unwrap(), j);
+    }
+
+    #[test]
+    fn corrupt_payloads_error_not_panic() {
+        // unknown tag
+        assert!(decode_to_worker(&[200]).is_err());
+        assert!(decode_from_worker(&[200]).is_err());
+        // empty payload
+        assert!(decode_to_worker(&[]).is_err());
+        // truncated mid-message
+        let enc = encode_to_worker(&ToWorker::Selected {
+            global_idx: 7,
+            point: vec![1.0, 2.0],
+            delta: Some(0.5),
+            epoch: 1,
+            want_argmax: true,
+        });
+        for cut in 1..enc.len() {
+            assert!(decode_to_worker(&enc[..cut]).is_err(), "cut={cut}");
+        }
+        // trailing bytes
+        let mut padded = enc;
+        padded.push(0);
+        assert!(decode_to_worker(&padded).is_err());
+        // hostile element count: claims 2^60 f64s in a tiny buffer —
+        // must refuse before allocating
+        let mut evil = vec![TAG_POINT];
+        evil.extend_from_slice(&0u64.to_le_bytes());
+        evil.extend_from_slice(&(1u64 << 60).to_le_bytes());
+        assert!(decode_from_worker(&evil).is_err());
+    }
+
+    /// A miniature in-process "network": leader and worker endpoints over
+    /// a real localhost socket pair, exercising FrameWriter / the sinks /
+    /// the source without a full fleet.
+    #[test]
+    fn sink_and_source_speak_frames_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut src = TcpWorkerSource { stream: s.try_clone().unwrap() };
+            let got = src.recv().unwrap();
+            let writer = Arc::new(FrameWriter::new(s));
+            let sink = TcpLeaderSink(writer);
+            match got {
+                ToWorker::FetchPoint { global_idx } => {
+                    assert!(sink.send(&FromWorker::Point {
+                        global_idx,
+                        point: vec![1.5, -2.5],
+                    }));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            // link closes when the writer drops → leader side sees EOF
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let writer = Arc::new(FrameWriter::new(stream.try_clone().unwrap()));
+        let sink = TcpWorkerSink(writer);
+        assert!(sink.send(&ToWorker::FetchPoint { global_idx: 12 }));
+        let mut rd = stream;
+        let reply = framing::read_frame(&mut rd, MAX_FRAME_BYTES)
+            .unwrap()
+            .expect("a reply frame");
+        match decode_from_worker(&reply).unwrap() {
+            FromWorker::Point { global_idx, point } => {
+                assert_eq!(global_idx, 12);
+                assert_eq!(point, vec![1.5, -2.5]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        t.join().unwrap();
+        // EOF at a frame boundary reads as a clean end of stream
+        assert!(framing::read_frame(&mut rd, MAX_FRAME_BYTES).unwrap().is_none());
+    }
+}

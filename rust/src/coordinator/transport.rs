@@ -1,0 +1,162 @@
+//! The transport seam between the oASIS-P leader and its workers.
+//!
+//! A [`Transport`] turns a [`ShardPlan`] into a running worker fleet and
+//! hands the leader a uniform view of it: per-worker outbound handles
+//! plus one merged inbound channel. Two implementations exist:
+//!
+//! * [`ChannelTransport`] — the classic in-process setting: one thread
+//!   per worker, mpsc channels both ways. Supports both shard plans.
+//! * [`net::TcpTransport`](super::net::TcpTransport) — real worker
+//!   *processes* (`oasis worker --join HOST:PORT`) on the far end of
+//!   length-framed, FNV-checksummed TCP connections. Requires
+//!   [`ShardPlan::File`] (each process shard-reads its own byte range)
+//!   and a parameterized kernel (shipped in the `Assign` handshake).
+//!
+//! Because both transports produce the same [`Fleet`] shape, the leader's
+//! entire selection/recovery logic — and every coordinator test — runs
+//! unchanged against either.
+
+use super::comm::{FromWorker, LeaderHandle, LeaderInbox, WorkerHandle};
+use super::config::OasisPConfig;
+use super::leader::ShardPlan;
+use super::metrics::Metrics;
+use super::worker::{Worker, WorkerOpts};
+use crate::data::{loader, shard, Shard};
+use crate::kernels::Kernel;
+use crate::{anyhow, Result};
+use std::sync::{mpsc, Arc};
+
+/// Everything a transport needs to start the fleet.
+pub struct TransportCtx {
+    pub plan: ShardPlan,
+    pub kernel: Arc<dyn Kernel + Send + Sync>,
+    pub cfg: OasisPConfig,
+    pub metrics: Arc<Metrics>,
+}
+
+/// A started worker fleet, as the leader sees it.
+pub struct Fleet {
+    /// worker count actually started (≤ cfg.workers for tiny datasets)
+    pub p: usize,
+    /// outbound handles, indexed by worker id
+    pub handles: Vec<WorkerHandle>,
+    /// merged inbound channel (both transports bridge into mpsc)
+    pub inbox: LeaderInbox,
+    /// threads to join at teardown (worker threads, or TCP reader
+    /// threads whose sockets close when the workers exit)
+    pub joins: Vec<std::thread::JoinHandle<()>>,
+    /// whether a dead worker's rows can be re-sharded onto survivors
+    /// (true exactly when workers can shard-read a dataset file)
+    pub recoverable: bool,
+    /// whether heartbeat staleness applies (TCP fleets only — thread
+    /// workers share the process and send no heartbeats)
+    pub tcp: bool,
+}
+
+/// One-shot fleet starter; see the module docs.
+pub trait Transport {
+    fn start(self: Box<Self>, ctx: TransportCtx) -> Result<Fleet>;
+}
+
+/// Worker count a plan yields under `cfg` (never more workers than rows,
+/// never zero).
+pub fn plan_workers(plan: &ShardPlan, cfg: &OasisPConfig) -> usize {
+    match plan {
+        ShardPlan::Memory(shards) => shards.len(),
+        ShardPlan::File { n, .. } => cfg.workers.min(*n).max(1),
+    }
+}
+
+/// In-process transport: one thread per worker, channels both ways.
+pub struct ChannelTransport;
+
+impl Transport for ChannelTransport {
+    fn start(self: Box<Self>, ctx: TransportCtx) -> Result<Fleet> {
+        let TransportCtx { plan, kernel, cfg, metrics } = ctx;
+        let n = plan.n();
+        let p = plan_workers(&plan, &cfg);
+        let recoverable = matches!(plan, ShardPlan::File { .. });
+        let (to_leader_tx, inbox) = mpsc::channel::<FromWorker>();
+        let mut handles = Vec::new();
+        let mut joins = Vec::new();
+        // one spawn path for both plans: the worker thread obtains its
+        // shard (already-split block, or its own byte-range read of the
+        // file), constructs its state — including the kernel-diagonal
+        // pass, so per-shard init runs in parallel — and enters its
+        // message loop; an Err from the source surfaces at the leader's
+        // next recv as a worker failure
+        let mut spawn = |w: usize,
+                         source: Box<dyn FnOnce() -> Result<Shard> + Send>,
+                         opts: WorkerOpts| {
+            let (tx, rx) = mpsc::channel();
+            handles.push(WorkerHandle::channel(w, tx, metrics.clone()));
+            let worker_kernel = kernel.clone();
+            let leader = LeaderHandle::channel(to_leader_tx.clone());
+            let worker_metrics = metrics.clone();
+            joins.push(std::thread::spawn(move || match source() {
+                Ok(s) => {
+                    Worker::new(w, s, worker_kernel, leader, worker_metrics, opts)
+                        .run(rx)
+                }
+                Err(e) => {
+                    leader.send(&FromWorker::Failed {
+                        worker: w,
+                        message: format!("{e}"),
+                    });
+                }
+            }));
+        };
+        let mk_opts = |file_source| WorkerOpts {
+            max_cols: cfg.max_cols,
+            merge_batch: cfg.merge_batch,
+            failure: cfg.failure,
+            file_source,
+            throttle: None,
+        };
+        match plan {
+            ShardPlan::Memory(shards) => {
+                for s in shards {
+                    let w = s.worker;
+                    spawn(w, Box::new(move || Ok(s)), mk_opts(None));
+                }
+            }
+            ShardPlan::File { path, n: _, limits } => {
+                // the leader's ownership ranges come from the plan's n;
+                // each worker re-derives its range from the file's
+                // *actual* header, so cross-check the two — a stale plan
+                // (file replaced since it was peeked) or a
+                // caller-supplied wrong n must fail loudly at seeding,
+                // not misroute FetchPoints or silently select over
+                // mismatched blocks. If total rows differ, at least one
+                // worker's range differs.
+                let expected = shard::shard_ranges(n, p);
+                for w in 0..p {
+                    let wpath = path.clone();
+                    let want = expected[w].clone();
+                    spawn(
+                        w,
+                        Box::new(move || {
+                            let s = loader::load_shard(&wpath, w, p, &limits)?;
+                            if s.start != want.start || s.len() != want.len() {
+                                return Err(anyhow!(
+                                    "shard {w} of {} covers rows {}..{} but \
+                                     this run expects {}..{} — the file \
+                                     changed since the run was planned",
+                                    wpath.display(),
+                                    s.start,
+                                    s.start + s.len(),
+                                    want.start,
+                                    want.end
+                                ));
+                            }
+                            Ok(s)
+                        }),
+                        mk_opts(Some((path.clone(), limits))),
+                    );
+                }
+            }
+        }
+        drop(to_leader_tx);
+        Ok(Fleet { p, handles, inbox, joins, recoverable, tcp: false })
+    }
+}

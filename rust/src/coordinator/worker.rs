@@ -1,51 +1,135 @@
 //! The oASIS-P worker node (paper Alg. 2, "On each node (i)" blocks).
 //!
-//! Each worker owns a contiguous shard Z_(i) of the dataset and maintains:
+//! Each worker owns one or more contiguous row [`Segment`]s of the
+//! dataset — exactly one until a re-shard makes it adopt a dead peer's
+//! rows — and maintains per segment:
 //! * `d_(i)`  — local kernel diagonal,
 //! * `C_(i)`  — local rows of the sampled columns (stored column-major),
 //! * `R_(i)`  — local columns of R = W⁻¹Cᵀ,
-//! * a replica of `W⁻¹` and of the selected points Z_Λ.
+//!
+//! plus worker-global replicas of `W⁻¹` and of the selected points Z_Λ.
 //!
 //! Per `Selected` broadcast the worker performs the paper's node-local
-//! updates: kernel column over its shard, Eq. 5 on the W⁻¹ replica, Eq. 6
-//! on R_(i), then computes its local Δ block and replies with the shard
-//! argmax — exactly one small message each way per iteration.
+//! updates: kernel column over its rows, Eq. 5 on the W⁻¹ replica, Eq. 6
+//! on each R_(i), then — when the leader asked (`want_argmax`) — computes
+//! its local Δ block and replies with its top-B unselected candidates
+//! (B = `merge_batch`; the SQUEAK-style merge input). At B = 1 this is
+//! exactly one small message each way per iteration, bit-identical to the
+//! sequential sampler.
+//!
+//! On `Adopt` (re-shard after a peer died) the worker shard-reads the
+//! adopted global row ranges from the dataset file, rebuilds their C from
+//! its Z_Λ replica and their R from its W⁻¹ replica, and marks
+//! already-selected rows — so the run completes with the survivors
+//! serving the whole dataset.
 
-use super::comm::{FromWorker, LeaderHandle, ToWorker, WorkerInbox};
+use super::comm::{FromWorker, LeaderHandle, ToWorker, WorkerSource};
 use super::config::FailureSpec;
 use super::metrics::Metrics;
-use crate::data::Shard;
+use crate::data::{loader, Dataset, LoadLimits, Shard};
 use crate::kernels::Kernel;
+use crate::Result;
+use std::path::PathBuf;
 use std::sync::Arc;
 
-/// Long-lived state of one worker thread.
-pub struct Worker {
-    pub id: usize,
-    shard: Shard,
-    kernel: Arc<dyn Kernel + Send + Sync>,
-    leader: LeaderHandle,
-    metrics: Arc<Metrics>,
-    max_cols: usize,
-    failure: Option<FailureSpec>,
+/// Per-worker knobs beyond the shard itself, shared by both transports
+/// (the channel transport fills it from `OasisPConfig`, the TCP worker
+/// process from the leader's `Assign` handshake).
+pub struct WorkerOpts {
+    /// ℓ — the W⁻¹ replica stride / column capacity.
+    pub max_cols: usize,
+    /// B — candidates per argmax reply (SQUEAK merge width).
+    pub merge_batch: usize,
+    /// optional injected fault (tests): the worker "crashes" (signals
+    /// `Gone` and stops) right before its `at_iteration`-th update.
+    pub failure: Option<FailureSpec>,
+    /// Where to shard-read adopted rows from after a re-shard. `None`
+    /// for in-memory plans — such workers cannot adopt.
+    pub file_source: Option<(PathBuf, LoadLimits)>,
+    /// Artificial per-update delay (CLI `--throttle-ms`; lets the CI
+    /// smoke job kill a worker mid-run deterministically).
+    pub throttle: Option<std::time::Duration>,
+}
 
-    // --- algorithm state ---
+impl WorkerOpts {
+    pub fn new(max_cols: usize) -> WorkerOpts {
+        WorkerOpts {
+            max_cols,
+            merge_batch: 1,
+            failure: None,
+            file_source: None,
+            throttle: None,
+        }
+    }
+}
+
+/// One contiguous run of globally-indexed rows this worker serves, with
+/// its slice of the algorithm state.
+struct Segment {
+    /// global index of the first row
+    start: usize,
+    points: Dataset,
+    /// local kernel diagonal
     d: Vec<f64>,
     /// local C, column-major: column t at c[t*ln .. (t+1)*ln]
     c: Vec<f64>,
     /// local R, row-major rows of length ln
     r: Vec<f64>,
+    /// which local rows are already selected
+    selected: Vec<bool>,
+    /// scratch
+    diff: Vec<f64>,
+    delta: Vec<f64>,
+}
+
+impl Segment {
+    fn new(start: usize, points: Dataset, kernel: &dyn Kernel) -> Segment {
+        let ln = points.n();
+        let d = (0..ln).map(|i| kernel.diag_value(points.point(i))).collect();
+        Segment {
+            start,
+            points,
+            d,
+            c: Vec::new(),
+            r: Vec::new(),
+            selected: vec![false; ln],
+            diff: vec![0.0; ln],
+            delta: vec![0.0; ln],
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.points.n()
+    }
+
+    fn owns(&self, g: usize) -> bool {
+        g >= self.start && g < self.start + self.len()
+    }
+}
+
+/// Long-lived state of one worker node (thread or process).
+pub struct Worker {
+    pub id: usize,
+    /// owned row segments, kept sorted by `start` so the candidate scan
+    /// walks global indices in ascending order (the tie-break the
+    /// sequential sampler uses)
+    segments: Vec<Segment>,
+    kernel: Arc<dyn Kernel + Send + Sync>,
+    leader: LeaderHandle,
+    metrics: Arc<Metrics>,
+    opts: WorkerOpts,
+
+    // --- worker-global algorithm state ---
     /// W⁻¹ replica, strided by max_cols
     winv: Vec<f64>,
     /// replica of the selected points (in selection order)
     z_sel: Vec<Vec<f64>>,
     k: usize,
-    /// which local indices are already selected
-    selected_local: Vec<bool>,
+    /// leader epoch of the last Init/Selected/Adopt processed; stamped
+    /// on outgoing argmaxes
+    epoch: u64,
     /// iteration counter for fault injection
     iteration: usize,
-    /// scratch
-    diff: Vec<f64>,
-    delta: Vec<f64>,
 }
 
 impl Worker {
@@ -55,74 +139,121 @@ impl Worker {
         kernel: Arc<dyn Kernel + Send + Sync>,
         leader: LeaderHandle,
         metrics: Arc<Metrics>,
-        max_cols: usize,
-        failure: Option<FailureSpec>,
+        opts: WorkerOpts,
     ) -> Worker {
-        let ln = shard.len();
-        let d = (0..ln)
-            .map(|i| kernel.diag_value(shard.points.point(i)))
-            .collect();
+        let seg = Segment::new(shard.start, shard.points, &*kernel);
+        let max_cols = opts.max_cols;
         Worker {
             id,
-            shard,
+            segments: vec![seg],
             kernel,
             leader,
             metrics,
-            max_cols,
-            failure,
-            d,
-            c: Vec::new(),
-            r: Vec::new(),
+            opts,
             winv: vec![0.0; max_cols * max_cols],
             z_sel: Vec::new(),
             k: 0,
-            selected_local: vec![false; ln],
+            epoch: 0,
             iteration: 0,
-            diff: vec![0.0; ln],
-            delta: vec![0.0; ln],
         }
     }
 
-    /// The worker thread body: process leader messages until Finish.
-    pub fn run(mut self, inbox: WorkerInbox) {
-        while let Ok(msg) = inbox.recv() {
+    /// The worker body: process leader messages until Finish (or link
+    /// loss). Generic over the inbound side so thread workers run off an
+    /// mpsc receiver and TCP worker processes off a frame-decoding
+    /// socket reader.
+    pub fn run(mut self, mut inbox: impl WorkerSource) {
+        while let Some(msg) = inbox.recv() {
             let t0 = std::time::Instant::now();
             match msg {
                 ToWorker::FetchPoint { global_idx } => {
-                    let local = self.shard.local(global_idx);
-                    let point = self.shard.points.point(local).to_vec();
-                    self.leader.send(FromWorker::Point { global_idx, point });
+                    match self.point_of(global_idx) {
+                        Some(point) => {
+                            self.leader
+                                .send(&FromWorker::Point { global_idx, point });
+                        }
+                        None => {
+                            self.leader.send(&FromWorker::Failed {
+                                worker: self.id,
+                                message: format!(
+                                    "asked for point {global_idx} outside the \
+                                     rows this worker owns"
+                                ),
+                            });
+                            return;
+                        }
+                    }
                 }
                 ToWorker::Init { seed_indices, seed_points, winv0 } => {
                     self.handle_init(&seed_indices, &seed_points, &winv0);
                     self.send_argmax();
                 }
-                ToWorker::Selected { global_idx, point, delta } => {
+                ToWorker::Selected {
+                    global_idx,
+                    point,
+                    delta,
+                    epoch,
+                    want_argmax,
+                } => {
                     self.iteration += 1;
-                    if let Some(f) = self.failure {
-                        if f.worker == self.id && self.iteration >= f.at_iteration {
-                            self.leader.send(FromWorker::Failed {
-                                worker: self.id,
-                                message: "injected fault".into(),
-                            });
-                            return; // simulate a crashed node
+                    self.epoch = epoch;
+                    if let Some(f) = self.opts.failure {
+                        if f.worker == self.id && self.iteration >= f.at_iteration
+                        {
+                            // simulate a crashed node: signal death the
+                            // way a TCP reader would (EOF → Gone) and stop
+                            self.leader
+                                .send(&FromWorker::Gone { worker: self.id });
+                            return;
                         }
                     }
-                    self.handle_selected(global_idx, &point, delta);
-                    self.send_argmax();
+                    if let Some(t) = self.opts.throttle {
+                        std::thread::sleep(t);
+                    }
+                    if let Err(m) = self.handle_selected(global_idx, &point, delta)
+                    {
+                        self.leader.send(&FromWorker::Failed {
+                            worker: self.id,
+                            message: m,
+                        });
+                        return;
+                    }
+                    if want_argmax {
+                        self.send_argmax();
+                    }
                 }
-                ToWorker::GatherColumns => {
+                ToWorker::Adopt { epoch, ranges, selected, want_argmax } => {
+                    self.epoch = epoch;
+                    if let Err(e) = self.handle_adopt(&ranges, &selected) {
+                        self.leader.send(&FromWorker::Failed {
+                            worker: self.id,
+                            message: format!("adopting re-sharded rows: {e}"),
+                        });
+                        return;
+                    }
+                    if want_argmax {
+                        self.send_argmax();
+                    }
+                }
+                ToWorker::GatherColumns { winv } => {
                     // mid-run snapshot: same gather as Finish, but the
                     // worker stays alive for further selection rounds
-                    self.send_columns();
+                    self.send_columns(winv);
                 }
-                ToWorker::Finish => {
-                    self.send_columns();
+                ToWorker::Finish { winv } => {
+                    self.send_columns(winv);
                     return;
                 }
             }
             self.metrics.add_worker_compute(t0.elapsed());
         }
+    }
+
+    fn point_of(&self, g: usize) -> Option<Vec<f64>> {
+        self.segments
+            .iter()
+            .find(|s| s.owns(g))
+            .map(|s| s.points.point(g - s.start).to_vec())
     }
 
     /// Paper Alg. 2 init block: local C, R from the seed state.
@@ -132,55 +263,63 @@ impl Worker {
         seed_points: &[Vec<f64>],
         winv0: &[f64],
     ) {
-        let ln = self.shard.len();
         let k0 = seed_indices.len();
         self.k = k0;
         self.z_sel = seed_points.to_vec();
-        // C_(i): one batched cross-kernel pull of every seed column's
-        // local slice (threads = 1: this worker is one thread of p)
-        self.c.resize(k0 * ln, 0.0);
-        crate::kernels::kernel_cross_columns_into(
-            &self.shard.points,
-            &*self.kernel,
-            seed_points,
-            1,
-            &mut self.c,
-        );
         // W⁻¹ replica
-        let l = self.max_cols;
+        let l = self.opts.max_cols;
         for i in 0..k0 {
             for j in 0..k0 {
                 self.winv[i * l + j] = winv0[i * k0 + j];
             }
         }
-        // R_(i) = W⁻¹ C_(i)ᵀ
-        self.r.resize(k0 * ln, 0.0);
-        for t in 0..k0 {
-            for i in 0..ln {
-                let mut acc = 0.0;
-                for u in 0..k0 {
-                    acc += self.winv[t * l + u] * self.c[u * ln + i];
+        for seg in &mut self.segments {
+            let ln = seg.len();
+            // C_(i): one batched cross-kernel pull of every seed column's
+            // local slice (threads = 1: this worker is one node of p)
+            seg.c.resize(k0 * ln, 0.0);
+            crate::kernels::kernel_cross_columns_into(
+                &seg.points,
+                &*self.kernel,
+                seed_points,
+                1,
+                &mut seg.c,
+            );
+            // R_(i) = W⁻¹ C_(i)ᵀ
+            seg.r.resize(k0 * ln, 0.0);
+            for t in 0..k0 {
+                for i in 0..ln {
+                    let mut acc = 0.0;
+                    for u in 0..k0 {
+                        acc += self.winv[t * l + u] * seg.c[u * ln + i];
+                    }
+                    seg.r[t * ln + i] = acc;
                 }
-                self.r[t * ln + i] = acc;
             }
-        }
-        // mark locally-owned seed columns
-        for &g in seed_indices {
-            if self.shard.owns(g) {
-                let li = self.shard.local(g);
-                self.selected_local[li] = true;
+            // mark locally-owned seed columns
+            for &g in seed_indices {
+                if seg.owns(g) {
+                    seg.selected[g - seg.start] = true;
+                }
             }
         }
     }
 
     /// Paper Alg. 2 per-iteration block: incorporate the broadcast point.
-    fn handle_selected(&mut self, global_idx: usize, point: &[f64], delta: f64) {
-        let ln = self.shard.len();
+    /// `delta` is `None` for a queued batch candidate — then Δ' is
+    /// recomputed from the replicas (see [`ToWorker::Selected`]); the
+    /// error return is the vanished-Δ diagnostic.
+    fn handle_selected(
+        &mut self,
+        global_idx: usize,
+        point: &[f64],
+        delta: Option<f64>,
+    ) -> std::result::Result<(), String> {
         let k = self.k;
-        let l = self.max_cols;
-        let s = 1.0 / delta;
+        let l = self.opts.max_cols;
         // b = g(Z_Λ, z_new) — computable from the replica, no comms
-        let b: Vec<f64> = self.z_sel.iter().map(|zp| self.kernel.eval(zp, point)).collect();
+        let b: Vec<f64> =
+            self.z_sel.iter().map(|zp| self.kernel.eval(zp, point)).collect();
         // q = W⁻¹ b — uses the same unrolled dot kernel as the sequential
         // sampler so rounding (and thus near-threshold selections) agree
         // bit-for-bit
@@ -189,28 +328,65 @@ impl Worker {
             let row = &self.winv[t * l..t * l + k];
             q[t] = crate::linalg::matrix::dot(row, &b);
         }
-        // local new column c_new = g(Z_(i), z_new) — the per-step column
-        // pull, through the same batched fill as the seed phase
-        let mut c_new = vec![0.0; ln];
-        crate::kernels::kernel_cross_columns_into(
-            &self.shard.points,
-            &*self.kernel,
-            std::slice::from_ref(&point),
-            1,
-            &mut c_new,
-        );
-        // diff = C_(i) q − c_new  (local slice of Cq − c_new; t-outer
-        // streaming, see EXPERIMENTS.md §Perf)
-        for (o, &cv) in self.diff.iter_mut().zip(&c_new) {
-            *o = -cv;
-        }
-        for (t, &qt) in q.iter().enumerate() {
-            if qt == 0.0 {
-                continue;
+        let delta = match delta {
+            // the fresh argmax winner ships its sweep Δ (always at B=1)
+            Some(d) => d,
+            // queued batch candidate: Δ' = k(z,z) − bᵀq against the
+            // *current* replicas — identical on every worker, and exact,
+            // so Eq. 5/6 below stay exact Schur-complement updates
+            None => {
+                self.kernel.diag_value(point)
+                    - crate::linalg::matrix::dot(&b, &q)
             }
-            let ct = &self.c[t * ln..(t + 1) * ln];
-            for (o, &cv) in self.diff.iter_mut().zip(ct) {
-                *o += qt * cv;
+        };
+        let s = 1.0 / delta;
+        if !s.is_finite() {
+            return Err(format!(
+                "batch candidate Δ vanished (Δ' = {delta:e}) — rerun with \
+                 --merge-batch 1"
+            ));
+        }
+        for seg in &mut self.segments {
+            let ln = seg.len();
+            // local new column c_new = g(Z_(i), z_new) — the per-step
+            // column pull, through the same batched fill as the seed phase
+            let mut c_new = vec![0.0; ln];
+            crate::kernels::kernel_cross_columns_into(
+                &seg.points,
+                &*self.kernel,
+                std::slice::from_ref(&point),
+                1,
+                &mut c_new,
+            );
+            // diff = C_(i) q − c_new  (local slice of Cq − c_new; t-outer
+            // streaming, see EXPERIMENTS.md §Perf)
+            for (o, &cv) in seg.diff.iter_mut().zip(&c_new) {
+                *o = -cv;
+            }
+            for (t, &qt) in q.iter().enumerate() {
+                if qt == 0.0 {
+                    continue;
+                }
+                let ct = &seg.c[t * ln..(t + 1) * ln];
+                for (o, &cv) in seg.diff.iter_mut().zip(ct) {
+                    *o += qt * cv;
+                }
+            }
+            // Eq. 6 on R_(i)
+            for t in 0..k {
+                let f = s * q[t];
+                let row = &mut seg.r[t * ln..(t + 1) * ln];
+                for (o, &dv) in row.iter_mut().zip(&seg.diff) {
+                    *o += f * dv;
+                }
+            }
+            seg.r.resize((k + 1) * ln, 0.0);
+            for i in 0..ln {
+                seg.r[k * ln + i] = -s * seg.diff[i];
+            }
+            seg.c.extend_from_slice(&c_new);
+            if seg.owns(global_idx) {
+                seg.selected[global_idx - seg.start] = true;
             }
         }
         // Eq. 5 on the W⁻¹ replica
@@ -222,81 +398,136 @@ impl Worker {
             self.winv[k * l + i] = -s * q[i];
         }
         self.winv[k * l + k] = s;
-        // Eq. 6 on R_(i)
-        for t in 0..k {
-            let f = s * q[t];
-            let row = &mut self.r[t * ln..(t + 1) * ln];
-            for (o, &dv) in row.iter_mut().zip(&self.diff) {
-                *o += f * dv;
-            }
-        }
-        self.r.resize((k + 1) * ln, 0.0);
-        for i in 0..ln {
-            self.r[k * ln + i] = -s * self.diff[i];
-        }
-        // append column, replica bookkeeping
-        self.c.extend_from_slice(&c_new);
         self.z_sel.push(point.to_vec());
         self.k = k + 1;
-        if self.shard.owns(global_idx) {
-            self.selected_local[self.shard.local(global_idx)] = true;
-        }
+        Ok(())
     }
 
-    /// Local Δ = d − colsum(C∘R) and shard argmax → leader.
-    fn send_argmax(&mut self) {
-        let ln = self.shard.len();
-        let k = self.k;
-        // t-outer streaming sweep (EXPERIMENTS.md §Perf)
-        self.delta.copy_from_slice(&self.d);
-        for t in 0..k {
-            let ct = &self.c[t * ln..(t + 1) * ln];
-            let rt = &self.r[t * ln..(t + 1) * ln];
-            for ((o, &cv), &rv) in self.delta.iter_mut().zip(ct).zip(rt) {
-                *o -= cv * rv;
-            }
+    /// Re-shard: shard-read the adopted global ranges from the dataset
+    /// file and rebuild their slice of the algorithm state — C from the
+    /// Z_Λ replica, R = W⁻¹Cᵀ from the W⁻¹ replica (mathematically equal
+    /// to the incremental state; recomputation is the price of taking
+    /// over mid-run).
+    fn handle_adopt(
+        &mut self,
+        ranges: &[(usize, usize)],
+        selected: &[usize],
+    ) -> Result<()> {
+        if ranges.is_empty() {
+            return Ok(()); // epoch-only broadcast
         }
-        let mut best: Option<(usize, f64)> = None;
-        let mut sum_abs_delta = 0.0f64;
-        for i in 0..ln {
-            if self.selected_local[i] {
+        let (path, limits) = self
+            .opts
+            .file_source
+            .as_ref()
+            .ok_or_else(|| {
+                crate::anyhow!(
+                    "this worker has no dataset file to shard-read adopted \
+                     rows from (in-memory plan)"
+                )
+            })?
+            .clone();
+        let l = self.opts.max_cols;
+        let k = self.k;
+        for &(start, len) in ranges {
+            if len == 0 {
                 continue;
             }
-            let a = self.delta[i].abs();
-            sum_abs_delta += a;
-            match best {
-                Some((_, bd)) if self.delta_abs(bd) >= a => {}
-                _ => best = Some((self.shard.start + i, self.delta[i])),
+            let points = loader::load_rows(&path, start, len, &limits)?;
+            let mut seg = Segment::new(start, points, &*self.kernel);
+            seg.c.resize(k * len, 0.0);
+            crate::kernels::kernel_cross_columns_into(
+                &seg.points,
+                &*self.kernel,
+                &self.z_sel,
+                1,
+                &mut seg.c,
+            );
+            seg.r.resize(k * len, 0.0);
+            for t in 0..k {
+                for i in 0..len {
+                    let mut acc = 0.0;
+                    for u in 0..k {
+                        acc += self.winv[t * l + u] * seg.c[u * len + i];
+                    }
+                    seg.r[t * len + i] = acc;
+                }
             }
+            for &g in selected {
+                if seg.owns(g) {
+                    seg.selected[g - seg.start] = true;
+                }
+            }
+            let pos = self
+                .segments
+                .iter()
+                .position(|s| s.start > start)
+                .unwrap_or(self.segments.len());
+            self.segments.insert(pos, seg);
         }
-        let d_max = self.d.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
-        let d_sum = self.d.iter().map(|x| x.abs()).sum();
-        self.leader.send(FromWorker::Argmax {
+        Ok(())
+    }
+
+    /// Local Δ = d − colsum(C∘R) over every owned segment, then the
+    /// top-B unselected candidates (global-ascending scan; ties keep the
+    /// lower index, matching the sequential sampler) → leader.
+    fn send_argmax(&mut self) {
+        let k = self.k;
+        let bcap = self.opts.merge_batch.max(1);
+        let mut cands: Vec<(usize, f64)> = Vec::with_capacity(bcap);
+        let mut sum_abs_delta = 0.0f64;
+        let mut d_max = 0.0f64;
+        let mut d_sum = 0.0f64;
+        for seg in &mut self.segments {
+            let ln = seg.len();
+            // t-outer streaming sweep (EXPERIMENTS.md §Perf)
+            seg.delta.copy_from_slice(&seg.d);
+            for t in 0..k {
+                let ct = &seg.c[t * ln..(t + 1) * ln];
+                let rt = &seg.r[t * ln..(t + 1) * ln];
+                for ((o, &cv), &rv) in seg.delta.iter_mut().zip(ct).zip(rt) {
+                    *o -= cv * rv;
+                }
+            }
+            for i in 0..ln {
+                if seg.selected[i] {
+                    continue;
+                }
+                let a = seg.delta[i].abs();
+                sum_abs_delta += a;
+                // keep `cands` sorted (|Δ| desc, global idx asc): replace
+                // only on strictly greater |Δ| — at B=1 this reduces to
+                // the sequential sampler's comparison exactly
+                if cands.len() == bcap && cands[bcap - 1].1.abs() >= a {
+                    continue;
+                }
+                let pos = cands
+                    .iter()
+                    .position(|c| c.1.abs() < a)
+                    .unwrap_or(cands.len());
+                cands.insert(pos, (seg.start + i, seg.delta[i]));
+                cands.truncate(bcap);
+            }
+            d_max = seg.d.iter().fold(d_max, |m, &x| m.max(x.abs()));
+            d_sum += seg.d.iter().map(|x| x.abs()).sum::<f64>();
+        }
+        self.leader.send(&FromWorker::Argmax {
             worker: self.id,
-            best,
+            epoch: self.epoch,
+            candidates: cands,
             d_max,
             sum_abs_delta,
             d_sum,
         });
     }
 
-    #[inline]
-    fn delta_abs(&self, d: f64) -> f64 {
-        d.abs()
-    }
-
-    /// Final gather: the local C block (row-major local_n × k).
-    fn send_columns(&mut self) {
-        let ln = self.shard.len();
+    /// Column gather: one C block per owned segment (row-major
+    /// local_n × k); the directed worker attaches its compacted W⁻¹
+    /// replica to the first block.
+    fn send_columns(&mut self, with_winv: bool) {
         let k = self.k;
-        let mut block = vec![0.0; ln * k];
-        for i in 0..ln {
-            for t in 0..k {
-                block[i * k + t] = self.c[t * ln + i];
-            }
-        }
-        let winv = if self.id == 0 {
-            let l = self.max_cols;
+        let l = self.opts.max_cols;
+        let mut winv = if with_winv {
             let mut w = vec![0.0; k * k];
             for i in 0..k {
                 for j in 0..k {
@@ -307,12 +538,21 @@ impl Worker {
         } else {
             None
         };
-        self.leader.send(FromWorker::Columns {
-            worker: self.id,
-            start: self.shard.start,
-            local_n: ln,
-            c_block: block,
-            winv,
-        });
+        for seg in &self.segments {
+            let ln = seg.len();
+            let mut block = vec![0.0; ln * k];
+            for i in 0..ln {
+                for t in 0..k {
+                    block[i * k + t] = seg.c[t * ln + i];
+                }
+            }
+            self.leader.send(&FromWorker::Columns {
+                worker: self.id,
+                start: seg.start,
+                local_n: ln,
+                c_block: block,
+                winv: winv.take(),
+            });
+        }
     }
 }

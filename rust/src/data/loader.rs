@@ -59,7 +59,7 @@ pub const MATRIX_MAGIC: &[u8] = b"oasis-matrix\n";
 
 /// Size caps applied while a file loads (mirrors the serving layer's
 /// `MAX_DATASET_*` limits; see `server::protocol`).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LoadLimits {
     pub max_n: usize,
     pub max_dim: usize,
@@ -151,6 +151,37 @@ pub fn load_shard(
     };
     res.map_err(|e| {
         e.wrap(format!("loading shard {worker}/{p} of {}", path.display()))
+    })
+}
+
+/// Load an arbitrary row range `[start, start + len)` from `path` —
+/// the building block the distributed coordinator uses when a surviving
+/// worker adopts a dead peer's rows: the adopted block is re-read
+/// straight from the dataset file, not shipped over the wire. Binary
+/// files are read by byte range (O(len) memory); CSV files are parsed
+/// whole and sliced, like [`load_shard`].
+pub fn load_rows(
+    path: &Path,
+    start: usize,
+    len: usize,
+    limits: &LoadLimits,
+) -> Result<Dataset> {
+    let mut f = open(path)?;
+    let res = if sniff_binary(&mut f, path)? {
+        load_matrix_rows(&mut f, start, len, limits)
+    } else {
+        let ds = load_csv_reader(BufReader::new(f), limits)?;
+        if start + len > ds.n() {
+            bail!("rows {start}..{} out of range for n = {}", start + len, ds.n());
+        }
+        Ok(ds.slice(start, start + len))
+    };
+    res.map_err(|e| {
+        e.wrap(format!(
+            "loading rows {start}..{} of {}",
+            start + len,
+            path.display()
+        ))
     })
 }
 
@@ -440,20 +471,46 @@ fn load_matrix_shard(
     p: usize,
     limits: &LoadLimits,
 ) -> Result<Shard> {
+    let (n, _, _, _, _) = read_matrix_header_checked(f, limits)?;
+    f.seek(SeekFrom::Start(0)).map_err(|e| anyhow!("seek: {e}"))?;
+    let range = shard_range(n, worker, p);
+    let points =
+        load_matrix_rows(f, range.start, range.end - range.start, limits)?;
+    Ok(Shard { worker, start: range.start, points })
+}
+
+/// Header read + the size/consistency checks shared by every byte-range
+/// reader, returning `(n, dim, elems, payload_bytes, offset)`.
+fn read_matrix_header_checked(
+    f: &mut std::fs::File,
+    limits: &LoadLimits,
+) -> Result<(usize, usize, usize, usize, u64)> {
     let (n, dim, payload_bytes, _checksum, offset) = read_matrix_header(f)?;
     limits.check_dim(dim)?;
     limits.check_n(n, dim)?;
     let elems = checked_matrix_elems(n, dim)?;
     if payload_bytes != 8 + elems * 8 {
         bail!(
-            "matrix payload_bytes {} inconsistent with n×dim = {}×{}",
-            payload_bytes,
-            n,
-            dim
+            "matrix payload_bytes {payload_bytes} inconsistent with \
+             n×dim = {n}×{dim}"
         );
     }
-    let range = shard_range(n, worker, p);
-    let count = (range.end - range.start) * dim;
+    Ok((n, dim, elems, payload_bytes, offset))
+}
+
+/// Read rows `[start, start + len)` of a binary matrix by byte range.
+fn load_matrix_rows(
+    f: &mut std::fs::File,
+    start: usize,
+    len: usize,
+    limits: &LoadLimits,
+) -> Result<Dataset> {
+    let (n, dim, elems, _payload_bytes, offset) =
+        read_matrix_header_checked(f, limits)?;
+    if start + len > n {
+        bail!("rows {start}..{} out of range for n = {n}", start + len);
+    }
+    let count = len * dim;
     // offset → [u64 frame count][values…]; verify the frame count first
     f.seek(SeekFrom::Start(offset)).map_err(|e| anyhow!("seek: {e}"))?;
     let mut lenbuf = [0u8; 8];
@@ -463,7 +520,7 @@ fn load_matrix_shard(
     if framed != elems as u64 {
         bail!("matrix frame holds {framed} values but the header implies {elems}");
     }
-    f.seek(SeekFrom::Current((range.start * dim * 8) as i64))
+    f.seek(SeekFrom::Current((start * dim * 8) as i64))
         .map_err(|e| anyhow!("seek: {e}"))?;
     let mut raw = vec![0u8; count * 8];
     f.read_exact(&mut raw)
@@ -476,11 +533,7 @@ fn load_matrix_shard(
         }
         data.push(v);
     }
-    Ok(Shard {
-        worker,
-        start: range.start,
-        points: Dataset::from_flat(dim, data),
-    })
+    Ok(Dataset::from_flat(dim, data))
 }
 
 /// This worker's row range. [`shard_ranges`] yields `min(p, n)` ranges
@@ -643,6 +696,31 @@ mod tests {
             }
         }
         assert!(load_shard(&bin, p, p, &lim).is_err(), "worker out of range");
+        std::fs::remove_file(&bin).ok();
+        std::fs::remove_file(&csv).ok();
+    }
+
+    /// `load_rows` reads arbitrary ranges bit-identically to in-memory
+    /// slicing, for both formats, and refuses out-of-range requests.
+    #[test]
+    fn arbitrary_row_ranges_match_in_memory_slices() {
+        let ds = two_moons(41, 0.05, 8);
+        let lim = LoadLimits::unlimited();
+        let bin = tmp("rows.mat");
+        let csv = tmp("rows.csv");
+        save_matrix(&bin, &ds).unwrap();
+        save_csv(&csv, &ds).unwrap();
+        for path in [&bin, &csv] {
+            for (start, len) in [(0usize, 41usize), (7, 12), (40, 1), (13, 0)] {
+                let rows = load_rows(path, start, len, &lim).unwrap();
+                assert_eq!(rows.n(), len);
+                let want = ds.slice(start, start + len);
+                for (a, b) in rows.flat().iter().zip(want.flat()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            assert!(load_rows(path, 30, 12, &lim).is_err(), "past the end");
+        }
         std::fs::remove_file(&bin).ok();
         std::fs::remove_file(&csv).ok();
     }

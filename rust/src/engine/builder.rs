@@ -14,7 +14,9 @@ use super::spec::{
     DatasetSpec, KernelSpec, LabelsSpec, Method, MethodSpec, RunSpec, TaskSpec,
     WarmStartSpec,
 };
-use crate::coordinator::{OasisPConfig, OasisPSession, ShardPlan};
+use crate::coordinator::{
+    OasisPConfig, OasisPSession, ShardPlan, TcpTransport, Transport,
+};
 use crate::data::{loader, Dataset, LoadLimits};
 use crate::kernels::Kernel;
 use crate::nystrom::{NystromApprox, StoredArtifact};
@@ -403,21 +405,66 @@ impl ResolvedRun {
     /// with the boxed trait object from
     /// [`open_session`](ResolvedRun::open_session)).
     pub fn open_oasis_p(&self) -> Result<OasisPSession> {
+        if let Some(addr) = &self.method.listen {
+            let transport = TcpTransport::bind(addr)?;
+            return self.open_oasis_p_with(Box::new(transport));
+        }
+        let (cfg, plan) = self.oasis_p_run()?;
+        match (&self.data, plan) {
+            (RunData::Full(ds), _) => {
+                OasisPSession::start(ds, self.kernel.clone(), cfg)
+            }
+            (_, Some(plan)) => {
+                OasisPSession::start_with_plan(plan, self.kernel.clone(), cfg)
+            }
+            _ => unreachable!("shard runs always have a file plan"),
+        }
+    }
+
+    /// Open the distributed session over an explicit [`Transport`] —
+    /// the CLI binds a [`TcpTransport`] itself so it can print the
+    /// join address *before* blocking in the worker accept loop.
+    /// TCP fleets need shard reads (a file plan): the worker processes
+    /// read the dataset themselves.
+    pub fn open_oasis_p_with(
+        &self,
+        transport: Box<dyn Transport>,
+    ) -> Result<OasisPSession> {
+        let (cfg, plan) = self.oasis_p_run()?;
+        let plan = plan.ok_or_else(|| {
+            crate::anyhow!(
+                "a TCP worker fleet needs --shard-reads with a binary file \
+                 dataset (worker processes read their own shards)"
+            )
+        })?;
+        OasisPSession::start_with_transport(
+            transport,
+            plan,
+            self.kernel.clone(),
+            cfg,
+        )
+    }
+
+    /// Shared oASIS-P config/plan derivation. The plan is `None` for
+    /// in-memory (non-shard-read) runs.
+    fn oasis_p_run(&self) -> Result<(OasisPConfig, Option<ShardPlan>)> {
         let m = &self.method;
         if m.method != Method::OasisP {
             bail!("open_oasis_p called on method '{}'", m.method.as_str());
         }
         let cfg = OasisPConfig::new(m.max_cols, m.init_cols, m.workers)
             .with_seed(m.seed)
-            .with_tol(m.tol);
-        match &self.data {
-            RunData::Full(ds) => OasisPSession::start(ds, self.kernel.clone(), cfg),
-            RunData::ShardFile { path, n, .. } => OasisPSession::start_with_plan(
-                ShardPlan::File { path: path.clone(), n: *n, limits: self.limits },
-                self.kernel.clone(),
-                cfg,
-            ),
-        }
+            .with_tol(m.tol)
+            .with_merge_batch(m.merge_batch);
+        let plan = match &self.data {
+            RunData::Full(_) => None,
+            RunData::ShardFile { path, n, .. } => Some(ShardPlan::File {
+                path: path.clone(),
+                n: *n,
+                limits: self.limits,
+            }),
+        };
+        Ok((cfg, plan))
     }
 
     /// Run one of the one-shot methods (`random`/`leverage`/`kmeans`) to
@@ -489,6 +536,8 @@ mod tests {
                 seed: 7,
                 batch: 10,
                 workers: 2,
+                merge_batch: 1,
+                listen: None,
             },
             stopping: super::super::spec::stopping_rule(max_cols, None, None),
             shard_reads: false,

@@ -56,6 +56,7 @@
 //!     method: MethodSpec {
 //!         method: Method::Oasis, max_cols: 450, init_cols: 10,
 //!         tol: 1e-12, seed: 7, batch: 10, workers: 4,
+//!         merge_batch: 1, listen: None,
 //!     },
 //!     stopping: stopping_rule(450, Some(1e-3), None),
 //!     shard_reads: false,

@@ -190,8 +190,8 @@ impl Method {
 }
 
 /// Sampler parameters. Fields a method does not use are ignored by it
-/// (`batch` is adaptive-random's deflation batch, `workers` is oASIS-P's
-/// node count).
+/// (`batch` is adaptive-random's deflation batch; `workers`,
+/// `merge_batch`, and `listen` are oASIS-P's).
 #[derive(Clone, Debug)]
 pub struct MethodSpec {
     pub method: Method,
@@ -201,6 +201,16 @@ pub struct MethodSpec {
     pub seed: u64,
     pub batch: usize,
     pub workers: usize,
+    /// oASIS-P: SQUEAK-style merge width — picks applied per argmax
+    /// gather round. 1 (the default) is the paper's exact protocol,
+    /// bit-identical to the sequential sampler; larger batches trade
+    /// selection-order exactness for fewer gather rounds.
+    pub merge_batch: usize,
+    /// oASIS-P: serve the worker fleet over TCP on this address
+    /// (`HOST:PORT`) instead of spawning in-process threads. Workers are
+    /// separate `oasis worker --join` processes; requires `shard_reads`
+    /// (a binary file dataset) and a dataset-free kernel.
+    pub listen: Option<String>,
 }
 
 /// A stored artifact whose selected indices Λ seed the run (selection

@@ -6,7 +6,9 @@
 //!
 //! * **L3 (this crate)** — the coordination layer: the sequential oASIS
 //!   selector, the distributed oASIS-P leader/worker runtime
-//!   ([`coordinator`]), every baseline sampler the paper compares against
+//!   ([`coordinator`] — in-process channels or a fault-tolerant framed-TCP
+//!   transport for true multi-process fleets),
+//!   every baseline sampler the paper compares against
 //!   ([`sampling`]), Nyström assembly and error estimation ([`nystrom`]),
 //!   dataset generators ([`data`]), dense linear algebra ([`linalg`]),
 //!   the spec-driven run pipeline ([`engine`]) that the CLI, the
@@ -162,6 +164,31 @@
 //! create option `"warm_start"`), and oASIS-P workers can each read only
 //! their own shard byte range of a binary dataset file
 //! (`parallel --shard-reads`, server create option `"shard_reads"`).
+//!
+//! ## Quickstart: multi-node oASIS-P
+//!
+//! The coordinator speaks through a [`Transport`](coordinator::Transport):
+//! the same leader drives in-process channel workers (the default) or
+//! separate worker *processes* over a length-framed, checksummed TCP
+//! protocol ([`coordinator::net`]) — same messages, bit-identical
+//! selections at the default merge width. Workers join a listening
+//! leader, shard-read their own byte range of the dataset file, answer
+//! argmax/column requests, and send heartbeats; if one dies mid-run the
+//! leader re-shards its rows onto the survivors and finishes the run.
+//! A SQUEAK-style merge (`--merge-batch B`) admits up to B candidates
+//! per gather round when fewer synchronization rounds matter more than
+//! exact selection order.
+//!
+//! ```bash
+//! oasis parallel --data train.bin --shard-reads --sigma 0.5 \
+//!     --workers 2 --cols 200 --listen 127.0.0.1:0   # prints join addr
+//! oasis worker --join 127.0.0.1:PORT                # run once per node
+//! oasis worker --join 127.0.0.1:PORT
+//! ```
+//!
+//! Per-worker counters (columns served, argmax rounds, bytes on the
+//! wire, heartbeat age) surface in the run report and, for hosted
+//! sessions, under `"workers"` in the server's stats/metrics endpoints.
 
 pub mod bench_support;
 pub mod coordinator;

@@ -8,7 +8,11 @@
 //!   task         fit and run a downstream task (KRR, kernel PCA,
 //!                spectral clustering) on an approximation — from a
 //!                fresh run or a stored artifact (dataset-free)
-//!   parallel     run the distributed oASIS-P coordinator
+//!   parallel     run the distributed oASIS-P coordinator (in-process
+//!                workers, or a TCP leader with --listen)
+//!   worker       join a TCP leader as one oASIS-P worker process
+//!   export       write a dataset as an oasis-matrix binary file (the
+//!                format --shard-reads workers seek into)
 //!   serve        host concurrent resumable sessions over HTTP/JSON
 //!   info         show the artifact manifest and PJRT platform
 //!
@@ -46,6 +50,8 @@ fn main() {
         "query" => cmd_query(&args),
         "task" => cmd_task(&args),
         "parallel" => cmd_parallel(&args),
+        "worker" => cmd_worker(&args),
+        "export" => cmd_export(&args),
         "seed" => cmd_seed(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(),
@@ -61,7 +67,7 @@ fn print_help() {
     println!(
         "oasis — adaptive column sampling for kernel matrix approximation\n\
          \n\
-         USAGE: oasis <approximate|query|parallel|serve|info> [options]\n\
+         USAGE: oasis <approximate|query|parallel|worker|serve|info> [options]\n\
          \n\
          approximate options:\n\
            --dataset   two-moons|abalone|borg|mnist|salinas|lightfield (default two-moons)\n\
@@ -133,6 +139,37 @@ fn print_help() {
                        the binary --data file (the leader never loads\n\
                        the dataset; needs --sigma or a data-free kernel;\n\
                        reports the distributed error estimate)\n\
+           --merge-batch  SQUEAK merge width B (default 1): per argmax\n\
+                       round the leader admits up to B of the workers'\n\
+                       top candidates. 1 reproduces the sequential\n\
+                       selection bit for bit; >1 trades selection order\n\
+                       for ~B× fewer gather rounds\n\
+           --listen    HOST:PORT — become a TCP leader instead of\n\
+                       spawning in-process workers: bind, print the\n\
+                       join address, and wait for --workers `oasis\n\
+                       worker` processes (requires --shard-reads and a\n\
+                       binary --data file; port 0 picks one)\n\
+           --save      write the finished approximation as a stored\n\
+                       artifact, as in approximate\n\
+         \n\
+         worker options (one oASIS-P worker process; framed-TCP wire\n\
+         protocol documented in the oasis::coordinator module docs):\n\
+           --join      HOST:PORT the leader printed (required). The\n\
+                       worker receives its shard assignment, reads its\n\
+                       own byte range of the dataset file, and serves\n\
+                       argmax/column requests until the run finishes\n\
+           --data      read this file instead of the leader's dataset\n\
+                       path (for workers whose filesystem mounts the\n\
+                       data elsewhere)\n\
+           --throttle-ms  sleep this long before each argmax sweep\n\
+                       (testing aid: makes mid-run failures easy to\n\
+                       inject)\n\
+         \n\
+         export options (write an oasis-matrix binary file — the only\n\
+         format --shard-reads workers can seek byte ranges of):\n\
+           --dataset/--n/--seed  generator source, as in approximate\n\
+           --data      convert an existing CSV file instead\n\
+           --out       destination file (required)\n\
          \n\
          seed options (SEED decomposition, §II-E):\n\
            --dataset/--n/--seed as above\n\
@@ -228,6 +265,8 @@ fn run_spec(args: &Args, method: Method, default_cols: usize) -> Result<RunSpec,
             seed: args.u64_or("seed", 7),
             batch: 10,
             workers: args.usize_or("workers", 8),
+            merge_batch: args.usize_or("merge-batch", 1),
+            listen: args.get("listen").map(String::from),
         },
         // budget always applies; target/deadline listed first so their
         // reasons win the report when several criteria hold at once
@@ -845,16 +884,32 @@ fn cmd_parallel(args: &Args) -> i32 {
     let run = resolve_or_exit("parallel", spec);
     let seed = run.method.seed;
     let result = (|| -> oasis::Result<_> {
-        let mut session = run.open_oasis_p()?;
+        let mut session = match &run.method.listen {
+            Some(addr) => {
+                let transport = oasis::coordinator::TcpTransport::bind(addr)?;
+                let bound = transport.local_addr()?;
+                // stderr so `--json`-style stdout parsing stays clean;
+                // printed *before* start blocks in the accept loop
+                eprintln!(
+                    "oASIS-P leader: waiting for {} worker(s) — start each \
+                     with `oasis worker --join {bound}`",
+                    run.method.workers,
+                );
+                run.open_oasis_p_with(Box::new(transport))?
+            }
+            None => run.open_oasis_p()?,
+        };
         run_to_completion(&mut session, &run.stopping)?;
         // captured before finish_run consumes the session — the
-        // shard-read report has no oracle to measure the error with
+        // shard-read report has no oracle to measure the error with,
+        // and --save needs Λ's points without reloading the dataset
         let estimate = session.error_estimate();
+        let selected = session.selected_points(0);
         let (approx, report) = session.finish_run()?;
-        Ok((approx, report, estimate))
+        Ok((approx, report, estimate, selected))
     })();
     match result {
-        Ok((approx, report, estimate)) => {
+        Ok((approx, report, estimate, selected)) => {
             let slot = run.oracle_slot();
             match slot.get() {
                 Some(oracle) => {
@@ -888,10 +943,90 @@ fn cmd_parallel(args: &Args) -> i32 {
                     );
                 }
             }
+            if let Some(out) = args.get("save") {
+                let rows = selected.unwrap_or_default();
+                let save = StoredArtifact::from_selected(
+                    approx,
+                    Dataset::from_rows(rows),
+                    &*run.kernel,
+                    Provenance {
+                        source: dataset_label(args),
+                        method: "oasis-p".to_string(),
+                    },
+                    estimate,
+                )
+                .map(|artifact| artifact.with_f32(args.flag("save-f32")))
+                .and_then(|artifact| artifact.save(Path::new(out)));
+                match save {
+                    Ok(bytes) => {
+                        eprintln!("saved artifact to {out} ({bytes} bytes)")
+                    }
+                    Err(e) => {
+                        eprintln!("--save {out} failed: {e}");
+                        return 1;
+                    }
+                }
+            }
             0
         }
         Err(e) => {
             eprintln!("oASIS-P failed: {e}");
+            1
+        }
+    }
+}
+
+/// Join a TCP oASIS-P leader as one worker process: connect, receive the
+/// shard assignment, read our own byte range of the dataset file, and
+/// serve argmax/column requests until the leader sends Finish. Wire
+/// protocol reference lives in the [`oasis::coordinator`] module docs.
+fn cmd_worker(args: &Args) -> i32 {
+    let Some(join) = args.get("join") else {
+        eprintln!(
+            "worker: --join HOST:PORT is required (the address the leader's \
+             `oasis parallel --listen` printed)"
+        );
+        return 2;
+    };
+    let data = args.get("data").map(PathBuf::from);
+    let throttle_ms = args.u64_or("throttle-ms", 0);
+    let throttle =
+        (throttle_ms > 0).then(|| std::time::Duration::from_millis(throttle_ms));
+    match oasis::coordinator::run_worker(join, data, throttle) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("worker: {e}");
+            1
+        }
+    }
+}
+
+/// Write a dataset (generator, or an existing CSV converted) as an
+/// oasis-matrix binary file — the header+checksum format whose byte
+/// ranges `parallel --shard-reads` workers seek into.
+fn cmd_export(args: &Args) -> i32 {
+    let Some(out) = args.get("out") else {
+        eprintln!("export: --out FILE is required");
+        return 2;
+    };
+    let ds = match dataset_spec(args).build(&LoadLimits::unlimited()) {
+        Ok(ds) => ds,
+        Err(e) => {
+            eprintln!("export: {e}");
+            return 2;
+        }
+    };
+    match oasis::data::save_matrix(Path::new(out), &ds) {
+        Ok(bytes) => {
+            println!(
+                "wrote {} points (dim {}) to {out} ({bytes} bytes)",
+                ds.n(),
+                ds.dim()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("export: {e}");
             1
         }
     }

@@ -154,6 +154,15 @@ pub trait SamplerSession {
         None
     }
 
+    /// Per-worker coordinator counters (columns served, argmax rounds,
+    /// wire bytes, heartbeat age, liveness) as a JSON array, for the
+    /// serving layer's `/metrics` endpoint. `None` (the default) for
+    /// non-distributed sessions — only the oASIS-P coordinator has
+    /// workers to report on.
+    fn worker_stats(&self) -> Option<crate::util::json::Json> {
+        None
+    }
+
     /// Perform one selection step. Idempotent once exhausted.
     fn step(&mut self) -> Result<StepOutcome>;
 

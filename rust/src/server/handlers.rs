@@ -97,6 +97,9 @@ fn stats_json(name: &str, st: &SessionStats) -> Json {
     if let Some(f) = &st.failed {
         fields.push(("failed", Json::Str(f.clone())));
     }
+    if let Some(w) = &st.workers {
+        fields.push(("workers", w.clone()));
+    }
     Json::obj(fields)
 }
 

@@ -52,6 +52,15 @@
 //!   "tol": 1e-12, "seed": 7,
 //!   "batch": 10,                        // adaptive-random only
 //!   "workers": 4,                       // oasis-p only
+//!   "merge_batch": 1,                   // oasis-p only (1..=64): SQUEAK
+//!                                       //   merge width — candidates
+//!                                       //   admitted per argmax round.
+//!                                       //   1 (default) is the exact
+//!                                       //   sequential protocol; >1
+//!                                       //   trades selection order for
+//!                                       //   fewer gather rounds. Session
+//!                                       //   stats gain a "workers" array
+//!                                       //   of per-worker counters.
 //!   "warm_start": "models/seed.oasis",  // optional (oasis|sis methods):
 //!                                       //   resume selection from a
 //!                                       //   stored artifact's Λ — the

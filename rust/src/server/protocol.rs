@@ -430,6 +430,13 @@ pub fn parse_create(body: &str, fs_root: &Path) -> Result<CreateRequest> {
     if workers == 0 || workers > MAX_WORKERS {
         bail!("'workers' must be in 1..={MAX_WORKERS}");
     }
+    // oASIS-P SQUEAK-style merge width; 1 = the paper's exact protocol.
+    // Capped well below max_cols-scale values — a huge batch only wastes
+    // worker sweeps.
+    let merge_batch = get_usize(&j, "merge_batch", 1)?;
+    if merge_batch == 0 || merge_batch > 64 {
+        bail!("'merge_batch' must be in 1..=64");
+    }
     let warm_start = match field(&j, "warm_start") {
         None => None,
         Some(v) => {
@@ -454,6 +461,8 @@ pub fn parse_create(body: &str, fs_root: &Path) -> Result<CreateRequest> {
                 seed: get_u64(&j, "seed", 7)?,
                 batch,
                 workers,
+                merge_batch,
+                listen: None,
             },
             // the server's stopping rules arrive per step request
             stopping: StoppingRule::new(),

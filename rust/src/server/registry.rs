@@ -27,6 +27,7 @@ use crate::engine::{ResolvedRun, RunData, SessionBuilder};
 use crate::kernels::Kernel;
 use crate::nystrom::NystromApprox;
 use crate::sampling::{SamplerSession, StepOutcome, StopReason, StoppingRule};
+use crate::util::json::Json;
 use crate::Result;
 use crate::{anyhow, bail};
 use std::collections::HashMap;
@@ -66,6 +67,9 @@ pub struct SessionStats {
     pub step_latency: LatencyStats,
     /// Message of the first step error, if one occurred.
     pub failed: Option<String>,
+    /// Per-worker coordinator counters (distributed sessions only; see
+    /// [`SamplerSession::worker_stats`]).
+    pub workers: Option<Json>,
 }
 
 /// Stats plus the cached snapshot, shared between the actor thread and
@@ -672,6 +676,7 @@ fn sync_stats(
         st.k = session.k();
         st.error_estimate = session.error_estimate();
         st.selection_secs = session.selection_secs();
+        st.workers = session.worker_stats();
         if stop.is_some() {
             st.stop = stop;
         }
@@ -724,6 +729,8 @@ mod tests {
                     seed,
                     batch: 10,
                     workers: 2,
+                    merge_batch: 1,
+                    listen: None,
                 },
                 stopping: StoppingRule::new(),
                 shard_reads: false,

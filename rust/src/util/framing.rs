@@ -1,17 +1,29 @@
 //! Little-endian binary framing and checksumming for the crate's
 //! on-disk formats (the approximation artifact store in
 //! [`crate::nystrom::store`] and the binary matrix files read by
-//! [`crate::data::loader`]).
+//! [`crate::data::loader`]) and for the coordinator's TCP wire protocol
+//! ([`crate::coordinator::net`]).
 //!
-//! Both formats share one layout: an ASCII magic line, one line of JSON
-//! header, then a binary payload of framed f64 sections. Each section is
-//! `[u64 LE element count][count × f64 LE]`, and the header carries the
-//! total payload byte count plus an FNV-1a 64 checksum of the payload so
-//! truncation and corruption are detected before any numbers are trusted.
+//! The on-disk formats share one layout: an ASCII magic line, one line
+//! of JSON header, then a binary payload of framed f64 sections. Each
+//! section is `[u64 LE element count][count × f64 LE]`, and the header
+//! carries the total payload byte count plus an FNV-1a 64 checksum of
+//! the payload so truncation and corruption are detected before any
+//! numbers are trusted.
+//!
+//! The wire protocol uses checksummed stream frames
+//! ([`write_frame`]/[`read_frame`]): `[u64 LE payload length][u64 LE
+//! FNV-1a 64 of payload][payload]`. A reader bounds every frame with a
+//! caller-supplied size cap, so a corrupt or hostile length prefix is a
+//! clean error instead of an unbounded allocation, and every failure
+//! mode — truncation inside the header, truncation inside the payload,
+//! checksum mismatch, oversize — surfaces as `Err`, never a panic. EOF
+//! *between* frames is the one non-error end: `Ok(None)`.
 //! Everything here is dependency-free (tier-1 builds offline).
 
 use crate::Result;
 use crate::{anyhow, bail};
+use std::io::{Read, Write};
 
 /// FNV-1a 64-bit hash — the store's integrity checksum. Not
 /// cryptographic; it exists to catch truncation, bit rot, and partial
@@ -59,6 +71,65 @@ pub fn push_f32_section(out: &mut Vec<u8>, xs: &[f64]) {
     }
 }
 
+/// Write one checksummed stream frame:
+/// `[u64 LE payload length][u64 LE fnv1a64(payload)][payload]`.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    let mut head = [0u8; 16];
+    head[..8].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    head[8..].copy_from_slice(&fnv1a64(payload).to_le_bytes());
+    w.write_all(&head)
+        .map_err(|e| anyhow!("writing frame header: {e}"))?;
+    w.write_all(payload)
+        .map_err(|e| anyhow!("writing frame payload: {e}"))?;
+    Ok(())
+}
+
+/// Read one frame written by [`write_frame`], verifying the checksum.
+///
+/// Returns `Ok(None)` on EOF at a frame boundary (the peer closed the
+/// stream cleanly). Every mid-frame failure is an error with a specific
+/// message: EOF inside the 16-byte header or inside the payload
+/// ("truncated frame"), a length prefix above `max_bytes` ("oversized
+/// frame" — refused *before* allocating), or a payload that does not
+/// hash to the header's checksum ("corrupt frame").
+pub fn read_frame<R: Read>(r: &mut R, max_bytes: u64) -> Result<Option<Vec<u8>>> {
+    let mut head = [0u8; 16];
+    let mut got = 0usize;
+    while got < head.len() {
+        match r.read(&mut head[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                bail!(
+                    "truncated frame: EOF after {got} of the 16 header bytes"
+                );
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(anyhow!("reading frame header: {e}")),
+        }
+    }
+    let len = u64::from_le_bytes(head[..8].try_into().unwrap());
+    let sum = u64::from_le_bytes(head[8..].try_into().unwrap());
+    if len > max_bytes {
+        bail!("oversized frame: {len} bytes exceeds the cap of {max_bytes}");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(|e| {
+        anyhow!("truncated frame: expected {len} payload bytes: {e}")
+    })?;
+    let computed = fnv1a64(&payload);
+    if computed != sum {
+        bail!(
+            "corrupt frame: payload hashes to {} but the header says {}",
+            checksum_hex(computed),
+            checksum_hex(sum)
+        );
+    }
+    Ok(Some(payload))
+}
+
 /// Sequential reader over a framed payload.
 pub struct SectionReader<'a> {
     b: &'a [u8],
@@ -87,6 +158,21 @@ impl<'a> SectionReader<'a> {
         Ok(s)
     }
 
+    /// `expect × width` with overflow checking — a crafted element count
+    /// near `usize::MAX` must be a clean error, not a wrapped-to-small
+    /// byte count that silently mis-frames the rest of the payload.
+    fn take_elems(
+        &mut self,
+        expect: usize,
+        width: usize,
+        what: &str,
+    ) -> Result<&'a [u8]> {
+        let bytes = expect.checked_mul(width).ok_or_else(|| {
+            anyhow!("{what}: element count {expect} overflows the payload size")
+        })?;
+        self.take(bytes, what)
+    }
+
     /// Read one framed f64 section, checking the frame's element count
     /// against `expect` (what the header's dimensions imply).
     pub fn read_f64_section(&mut self, expect: usize, what: &str) -> Result<Vec<f64>> {
@@ -95,7 +181,7 @@ impl<'a> SectionReader<'a> {
         if len != expect as u64 {
             bail!("{what}: frame holds {len} values but the header implies {expect}");
         }
-        let raw = self.take(expect * 8, what)?;
+        let raw = self.take_elems(expect, 8, what)?;
         let mut out = Vec::with_capacity(expect);
         for chunk in raw.chunks_exact(8) {
             out.push(f64::from_le_bytes(chunk.try_into().unwrap()));
@@ -111,7 +197,7 @@ impl<'a> SectionReader<'a> {
         if len != expect as u64 {
             bail!("{what}: frame holds {len} values but the header implies {expect}");
         }
-        let raw = self.take(expect * 4, what)?;
+        let raw = self.take_elems(expect, 4, what)?;
         let mut out = Vec::with_capacity(expect);
         for chunk in raw.chunks_exact(4) {
             out.push(f32::from_le_bytes(chunk.try_into().unwrap()) as f64);
@@ -211,6 +297,107 @@ mod tests {
         assert!(SectionReader::new(&payload).read_f64_section(4, "x").is_err());
         // empty payload
         assert!(SectionReader::new(&[]).read_f64_section(1, "x").is_err());
+    }
+
+    #[test]
+    fn stream_frames_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[0xFFu8; 300]).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r, 1024).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r, 1024).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r, 1024).unwrap().unwrap(), vec![0xFFu8; 300]);
+        // clean EOF at a frame boundary is the non-error end of stream
+        assert!(read_frame(&mut r, 1024).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_header_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abcdef").unwrap();
+        for cut in 1..16 {
+            let mut r = &buf[..cut];
+            let err = read_frame(&mut r, 1024).unwrap_err();
+            assert!(format!("{err}").contains("truncated frame"), "{err}");
+        }
+    }
+
+    #[test]
+    fn truncated_frame_payload_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abcdef").unwrap();
+        let mut r = &buf[..buf.len() - 2];
+        let err = read_frame(&mut r, 1024).unwrap_err();
+        assert!(format!("{err}").contains("truncated frame"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_frame_payload_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abcdef").unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x10;
+        let mut r = &buf[..];
+        let err = read_frame(&mut r, 1024).unwrap_err();
+        assert!(format!("{err}").contains("corrupt frame"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_frame_checksum_field_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abcdef").unwrap();
+        buf[8] ^= 0x01; // first checksum byte
+        let mut r = &buf[..];
+        let err = read_frame(&mut r, 1024).unwrap_err();
+        assert!(format!("{err}").contains("corrupt frame"), "{err}");
+    }
+
+    #[test]
+    fn oversized_frame_refused_before_allocation() {
+        // hand-build a header promising u64::MAX bytes; the cap must
+        // reject it without touching the (absent) payload
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        let mut r = &buf[..];
+        let err = read_frame(&mut r, 1 << 20).unwrap_err();
+        assert!(format!("{err}").contains("oversized frame"), "{err}");
+        // a frame exactly at the cap is fine
+        let mut ok = Vec::new();
+        write_frame(&mut ok, &[7u8; 32]).unwrap();
+        let mut r = &ok[..];
+        assert_eq!(read_frame(&mut r, 32).unwrap().unwrap(), vec![7u8; 32]);
+        // and one byte over the cap is not
+        let mut r = &ok[..];
+        assert!(read_frame(&mut r, 31).is_err());
+    }
+
+    #[test]
+    fn garbage_mid_stream_is_an_error_not_a_panic() {
+        // random bytes where a header should be: either an oversize
+        // refusal or a checksum/truncation error, never a panic
+        let garbage: Vec<u8> = (0..64u8).map(|i| i.wrapping_mul(37)).collect();
+        let mut r = &garbage[..];
+        assert!(read_frame(&mut r, 1024).is_err());
+    }
+
+    #[test]
+    fn overflowing_section_count_errors_cleanly() {
+        // a section header whose element count × 8 overflows usize must
+        // error, not wrap into a small in-bounds read
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&u64::MAX.to_le_bytes());
+        payload.extend_from_slice(&[0u8; 64]);
+        let err = SectionReader::new(&payload)
+            .read_f64_section(usize::MAX, "x")
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(
+            msg.contains("overflow") || msg.contains("truncated"),
+            "{msg}"
+        );
     }
 
     #[test]

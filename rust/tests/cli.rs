@@ -448,6 +448,79 @@ fn parallel_runs_and_reports_comm() {
     assert!(stdout.contains("bcast"), "{stdout}");
 }
 
+/// `export` writes a binary matrix file that `parallel --shard-reads`
+/// accepts, `--save` persists the distributed result, and `query` serves
+/// it dataset-free — the single-machine slice of the multi-node story.
+#[test]
+fn export_then_shard_read_parallel_and_save() {
+    let dir = std::env::temp_dir()
+        .join("oasis-cli-export-test")
+        .join(format!("run-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mat = dir.join("points.mat");
+    let model = dir.join("dist.oasis");
+
+    let (stdout, stderr, ok) = run(&[
+        "export",
+        "--dataset",
+        "two-moons",
+        "--n",
+        "160",
+        "--out",
+        mat.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("wrote 160 points"), "{stdout}");
+    assert!(mat.is_file());
+
+    let (stdout, stderr, ok) = run(&[
+        "parallel",
+        "--data",
+        mat.to_str().unwrap(),
+        "--shard-reads",
+        "--sigma",
+        "0.6",
+        "--workers",
+        "2",
+        "--cols",
+        "16",
+        "--save",
+        model.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("error_est="), "{stdout}");
+    assert!(stderr.contains("saved artifact"), "{stderr}");
+
+    let (stdout, stderr, ok) = run(&["query", "--load", model.to_str().unwrap()]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("k=16"), "{stdout}");
+    assert!(stdout.contains("method=oasis-p"), "{stdout}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn export_without_out_errors() {
+    let (_, stderr, ok) = run(&["export", "--dataset", "two-moons", "--n", "50"]);
+    assert!(!ok);
+    assert!(stderr.contains("--out"), "{stderr}");
+}
+
+#[test]
+fn worker_without_join_errors() {
+    let (_, stderr, ok) = run(&["worker"]);
+    assert!(!ok);
+    assert!(stderr.contains("--join"), "{stderr}");
+}
+
+#[test]
+fn help_mentions_new_subcommands() {
+    let (stdout, _, ok) = run(&[]);
+    assert!(ok);
+    for needle in ["worker", "export", "--listen", "--merge-batch", "--join"] {
+        assert!(stdout.contains(needle), "help lost {needle}");
+    }
+}
+
 #[test]
 fn seed_subcommand_runs() {
     let (stdout, stderr, ok) = run(&[

@@ -195,6 +195,236 @@ fn shard_file_reads_match_whole_file_run() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Scratch dir + binary dataset file for the TCP fleet tests (workers
+/// shard-read the file themselves, so it must exist on disk).
+fn shard_fixture(
+    tag: &str,
+    n: usize,
+    seed: u64,
+) -> (std::path::PathBuf, std::path::PathBuf, oasis::data::Dataset) {
+    let dir = std::env::temp_dir()
+        .join(format!("oasis-dist-{tag}"))
+        .join(format!("r{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = two_moons(n, 0.05, seed);
+    let path = dir.join("points.mat");
+    loader::save_matrix(&path, &ds).unwrap();
+    (dir, path, ds)
+}
+
+fn file_plan(path: &std::path::Path, n: usize) -> ShardPlan {
+    ShardPlan::File {
+        path: path.to_path_buf(),
+        n,
+        limits: LoadLimits::unlimited(),
+    }
+}
+
+/// TCP TRANSPORT ≡ IN-PROCESS CHANNELS: the same run driven over real
+/// localhost sockets — `run_worker` in threads standing in for worker
+/// processes — selects bit-identical indices and factors. This is the
+/// tentpole invariant: the wire protocol (f64s as raw bits, one merge
+/// candidate per round at the default width) adds no drift.
+#[test]
+fn tcp_workers_match_in_process_run() {
+    let (dir, path, _ds) = shard_fixture("tcp-parity", 200, 21);
+    let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+    let cfg = || {
+        let mut c = OasisPConfig::new(22, 4, 3).with_seed(19);
+        c.timeout = std::time::Duration::from_secs(20);
+        c
+    };
+
+    let mut reference =
+        OasisPSession::start_with_plan(file_plan(&path, 200), kernel.clone(), cfg())
+            .unwrap();
+    run_to_completion(&mut reference, &StoppingRule::budget(22)).unwrap();
+    let (reference, _) = reference.finish_run().unwrap();
+
+    let transport = oasis::coordinator::TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                oasis::coordinator::run_worker(&addr, None, None).unwrap()
+            })
+        })
+        .collect();
+    let mut session = OasisPSession::start_with_transport(
+        Box::new(transport),
+        file_plan(&path, 200),
+        kernel,
+        cfg(),
+    )
+    .unwrap();
+    run_to_completion(&mut session, &StoppingRule::budget(22)).unwrap();
+    // per-worker wire counters surface through the session trait
+    let stats = session.worker_stats().expect("distributed session has stats");
+    let rendered = format!("{stats}");
+    assert!(rendered.contains("wire_bytes"), "stats: {rendered}");
+    let (tcp, report) = session.finish_run().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    assert_eq!(report.workers, 3);
+    assert_eq!(tcp.indices, reference.indices);
+    assert_eq!(tcp.c.data, reference.c.data);
+    assert_eq!(tcp.winv.data, reference.winv.data);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Same invariant with real `oasis worker` PROCESSES over localhost —
+/// the full deployment story: separate address spaces, each process
+/// shard-reading its own byte range of the dataset file.
+#[test]
+fn tcp_worker_processes_match_in_process_run() {
+    let (dir, path, _ds) = shard_fixture("tcp-proc", 180, 33);
+    let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+    let cfg = || {
+        let mut c = OasisPConfig::new(18, 3, 2).with_seed(5);
+        c.timeout = std::time::Duration::from_secs(30);
+        c
+    };
+
+    let mut reference =
+        OasisPSession::start_with_plan(file_plan(&path, 180), kernel.clone(), cfg())
+            .unwrap();
+    run_to_completion(&mut reference, &StoppingRule::budget(18)).unwrap();
+    let (reference, _) = reference.finish_run().unwrap();
+
+    let transport = oasis::coordinator::TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.local_addr().unwrap().to_string();
+    let mut children: Vec<_> = (0..2)
+        .map(|_| {
+            std::process::Command::new(env!("CARGO_BIN_EXE_oasis"))
+                .args(["worker", "--join", &addr])
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .expect("worker process spawns")
+        })
+        .collect();
+    let mut session = OasisPSession::start_with_transport(
+        Box::new(transport),
+        file_plan(&path, 180),
+        kernel,
+        cfg(),
+    )
+    .unwrap();
+    run_to_completion(&mut session, &StoppingRule::budget(18)).unwrap();
+    let (tcp, _) = session.finish_run().unwrap();
+    // Finish was broadcast — workers exit on their own
+    for c in &mut children {
+        assert!(wait_with_deadline(c, std::time::Duration::from_secs(20)));
+    }
+
+    assert_eq!(tcp.indices, reference.indices);
+    assert_eq!(tcp.c.data, reference.c.data);
+    assert_eq!(tcp.winv.data, reference.winv.data);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A worker process killed mid-run does not sink the fleet: the leader
+/// detects the dead connection, re-shards its rows onto the survivors,
+/// and finishes with a full-budget, numerically valid approximation.
+/// (Selection after the death is not bit-identical to the undisturbed
+/// run — the invariant is completion and correctness, not the order.)
+#[test]
+fn tcp_worker_death_reshards_onto_survivors() {
+    let (dir, path, _ds) = shard_fixture("tcp-kill", 210, 44);
+    let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+    let mut cfg = OasisPConfig::new(24, 4, 3).with_seed(11);
+    cfg.timeout = std::time::Duration::from_secs(30);
+
+    let transport = oasis::coordinator::TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.local_addr().unwrap().to_string();
+    let mut children: Vec<_> = (0..3)
+        .map(|_| {
+            std::process::Command::new(env!("CARGO_BIN_EXE_oasis"))
+                .args(["worker", "--join", &addr, "--throttle-ms", "5"])
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .expect("worker process spawns")
+        })
+        .collect();
+    let mut session = OasisPSession::start_with_transport(
+        Box::new(transport),
+        file_plan(&path, 210),
+        kernel,
+        cfg,
+    )
+    .unwrap();
+    for _ in 0..6 {
+        session.step().unwrap();
+    }
+    // murder one worker between rounds; the reader thread's EOF turns
+    // into a Gone signal and the next argmax round re-shards
+    children[1].kill().unwrap();
+    children[1].wait().unwrap();
+    run_to_completion(&mut session, &StoppingRule::budget(24)).unwrap();
+    let (approx, report) = session.finish_run().unwrap();
+    for c in &mut children {
+        c.kill().ok();
+        c.wait().ok();
+    }
+
+    assert_eq!(approx.k(), 24, "run must reach the full budget");
+    assert!(
+        report.metrics.reshards() >= 1,
+        "death must be recovered via a reshard: {}",
+        report.metrics.summary()
+    );
+    let w = approx.c.select_rows(&approx.indices);
+    let dist = w.matmul(&approx.winv).fro_dist(&oasis::linalg::Mat::eye(24));
+    assert!(dist < 1e-6, "post-reshard factors invalid: ‖WW⁻¹−I‖ = {dist}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `try_wait` poll loop (std has no wait_timeout); kills on expiry so a
+/// hung worker cannot wedge the suite.
+fn wait_with_deadline(
+    child: &mut std::process::Child,
+    limit: std::time::Duration,
+) -> bool {
+    let start = std::time::Instant::now();
+    while start.elapsed() < limit {
+        if child.try_wait().unwrap().is_some() {
+            return true;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    child.kill().ok();
+    child.wait().ok();
+    false
+}
+
+/// The same recovery path exercised hermetically: FailureSpec injects a
+/// mid-run death into an in-process fleet. On a file plan (survivors can
+/// re-read the dead worker's rows) the run completes; the Memory-plan
+/// equivalent is `worker_failure_is_detected` above, which must bail.
+#[test]
+fn file_plan_failure_injection_recovers() {
+    let (dir, path, _ds) = shard_fixture("inject", 160, 9);
+    let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+    let mut cfg = OasisPConfig::new(20, 4, 3).with_seed(9);
+    cfg.failure = Some(FailureSpec { worker: 1, at_iteration: 3 });
+    cfg.timeout = std::time::Duration::from_secs(10);
+    let mut session =
+        OasisPSession::start_with_plan(file_plan(&path, 160), kernel, cfg)
+            .unwrap();
+    run_to_completion(&mut session, &StoppingRule::budget(20)).unwrap();
+    let (approx, report) = session.finish_run().unwrap();
+    assert_eq!(approx.k(), 20);
+    assert!(report.metrics.reshards() >= 1, "{}", report.metrics.summary());
+    let w = approx.c.select_rows(&approx.indices);
+    let dist = w.matmul(&approx.winv).fro_dist(&oasis::linalg::Mat::eye(20));
+    assert!(dist < 1e-6, "‖WW⁻¹−I‖ = {dist}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Report metrics are self-consistent.
 #[test]
 fn metrics_consistency() {

@@ -34,6 +34,8 @@ fn spec(method: Method, dataset: DatasetSpec, kernel: KernelSpec, cols: usize) -
             seed: 17,
             batch: 10,
             workers: 3,
+            merge_batch: 1,
+            listen: None,
         },
         stopping: engine::stopping_rule(cols, None, None),
         shard_reads: false,

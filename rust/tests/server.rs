@@ -542,6 +542,8 @@ fn engine_runspec_parity_cli_vs_server() {
             seed: 11,
             batch: 10,
             workers: 1,
+            merge_batch: 1,
+            listen: None,
         },
         stopping: engine::stopping_rule(50, None, None),
         shard_reads: false,

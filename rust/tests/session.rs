@@ -266,6 +266,8 @@ fn oasis_spec(n: usize, cols: usize, warm: Option<WarmStartSpec>) -> RunSpec {
             seed: 7,
             batch: 10,
             workers: 1,
+            merge_batch: 1,
+            listen: None,
         },
         stopping: engine::stopping_rule(cols, None, None),
         shard_reads: false,

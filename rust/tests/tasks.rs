@@ -217,6 +217,8 @@ fn engine_resolves_task_with_file_labels() {
                 seed: 7,
                 batch: 10,
                 workers: 1,
+                merge_batch: 1,
+                listen: None,
             },
             stopping: StoppingRule::budget(24),
             shard_reads: false,
