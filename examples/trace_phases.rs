@@ -1,0 +1,78 @@
+//! Trace where an oASIS run spends its time: enable the process-global
+//! recorder, run a stepwise session, then print the per-phase cost
+//! breakdown (score scan vs column fetch vs factor update) and write a
+//! Chrome `trace_event` file you can open at chrome://tracing or
+//! <https://ui.perfetto.dev>.
+//!
+//!     cargo run --release --example trace_phases
+//!
+//! The same recorder drives `oasis approximate --trace out.json`; this
+//! example is the library-level version of that flag.
+
+use oasis::data::generators::two_moons;
+use oasis::kernels::Gaussian;
+use oasis::nystrom::relative_frobenius_error;
+use oasis::sampling::{
+    oasis::Oasis, run_to_completion, ImplicitOracle, SamplerSession,
+    StoppingRule,
+};
+use oasis::util::timing::fmt_secs;
+use oasis::{obs, util::fsio};
+
+fn main() -> oasis::Result<()> {
+    let ds = two_moons(2_000, 0.05, 42);
+    let kernel = Gaussian::with_sigma_fraction(&ds, 0.05);
+    let oracle = ImplicitOracle::new(&ds, &kernel);
+
+    // 1. switch the recorder on — every span/event below lands in a
+    //    bounded ring buffer (drop-oldest, so a long run can't OOM)
+    obs::trace::enable();
+
+    // 2. an ordinary session run: the sampler's hot path is already
+    //    instrumented (score_scan, column_fetch, factor_update), so
+    //    nothing here mentions tracing
+    let mut session = Oasis::new(400, 10, 1e-12, 7).session(&oracle)?;
+    run_to_completion(&mut session, &StoppingRule::budget(400))?;
+    let approx = session.snapshot()?;
+    println!(
+        "selected {} columns  error {:.3e}  in {}\n",
+        approx.k(),
+        relative_frobenius_error(&oracle, &approx),
+        fmt_secs(approx.selection_secs),
+    );
+
+    // 3. drain the buffer (this also detaches it from the hot paths)
+    obs::trace::disable();
+    let trace = obs::trace::drain();
+
+    // 4. per-phase rollup: each span name becomes a latency histogram
+    //    with count / total / p50 / p99 / max, sorted by total time
+    println!(
+        "{:<16} {:>7} {:>10} {:>10} {:>10} {:>10}",
+        "phase", "count", "total", "p50", "p99", "max"
+    );
+    for p in trace.phase_summary() {
+        println!(
+            "{:<16} {:>7} {:>10} {:>10} {:>10} {:>10}",
+            p.name,
+            p.hist.count(),
+            fmt_secs(p.hist.sum()),
+            fmt_secs(p.hist.quantile(0.50)),
+            fmt_secs(p.hist.quantile(0.99)),
+            fmt_secs(p.hist.max()),
+        );
+    }
+
+    // 5. Chrome trace_event export — open it in a trace viewer to see
+    //    the spans on a timeline
+    let path = std::path::Path::new("trace_phases.json");
+    let json = trace.to_chrome_json().to_string();
+    fsio::write_atomic(path, json.as_bytes())?;
+    println!(
+        "\n{} events ({} dropped) written to {}",
+        trace.events.len(),
+        trace.dropped,
+        path.display()
+    );
+    Ok(())
+}

@@ -28,13 +28,19 @@ pub struct BenchResult {
 
 impl BenchResult {
     pub fn report(&self) -> String {
+        let skipped = if self.summary.skipped > 0 {
+            format!(", {} non-finite skipped", self.summary.skipped)
+        } else {
+            String::new()
+        };
         format!(
-            "{:40} median {:>10}  min {:>10}  max {:>10}  (n={})",
+            "{:40} median {:>10}  min {:>10}  max {:>10}  (n={}{})",
             self.name,
             fmt_secs(self.summary.median),
             fmt_secs(self.summary.min),
             fmt_secs(self.summary.max),
             self.summary.n,
+            skipped,
         )
     }
 }

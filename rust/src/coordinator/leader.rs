@@ -440,6 +440,7 @@ impl OasisPSession {
         if survivors.is_empty() {
             bail!("worker {dead} died and no workers survive");
         }
+        let _span = crate::obs::span("reshard", "coordinator");
         self.metrics.add_reshard();
         // split each lost range into near-equal chunks, dealt round-robin
         let mut parts: Vec<(usize, usize)> = Vec::new();
@@ -460,6 +461,7 @@ impl OasisPSession {
             let w = survivors[i % survivors.len()];
             gained[w].push(part);
             self.owned[w].push(part);
+            self.metrics.add_worker_reshard(w);
         }
         self.epoch += 1;
         for &w in &survivors {
@@ -496,6 +498,7 @@ impl OasisPSession {
     /// shard is exhausted.
     fn argmax_round(&mut self) -> Result<Option<StopReason>> {
         'round: loop {
+            let gather_span = crate::obs::span("gather", "coordinator");
             let mut got = vec![false; self.p];
             let mut need = self.alive.iter().filter(|&&a| a).count();
             let mut cands: Vec<(usize, f64)> = Vec::new();
@@ -542,6 +545,8 @@ impl OasisPSession {
                     }
                 }
             }
+            drop(gather_span);
+            let _arbitrate = crate::obs::span("arbitrate", "coordinator");
             self.metrics.add_iteration();
             self.resid_sum = Some(round_resid);
             self.d_sum = round_d_sum;
@@ -692,6 +697,7 @@ impl OasisPSession {
     /// so post-re-shard fleets — where a worker answers with several
     /// segment blocks — gather exactly like pristine ones.
     fn gather_columns(&self, k: usize, terminal: bool) -> Result<(Mat, Mat)> {
+        let _span = crate::obs::span("column_gather", "coordinator");
         let winv_from = (0..self.p)
             .find(|&w| self.alive[w])
             .ok_or_else(|| anyhow!("no live workers to gather from"))?;

@@ -20,6 +20,8 @@ pub struct WorkerCounters {
     columns_served: AtomicU64,
     argmax_rounds: AtomicU64,
     wire_bytes: AtomicU64,
+    /// Row ranges this worker adopted from dead peers.
+    reshards_absorbed: AtomicU64,
     last_seen_ms: AtomicU64,
     dead: AtomicU64,
 }
@@ -30,6 +32,7 @@ impl Default for WorkerCounters {
             columns_served: AtomicU64::new(0),
             argmax_rounds: AtomicU64::new(0),
             wire_bytes: AtomicU64::new(0),
+            reshards_absorbed: AtomicU64::new(0),
             last_seen_ms: AtomicU64::new(NEVER),
             dead: AtomicU64::new(0),
         }
@@ -47,6 +50,10 @@ impl WorkerCounters {
 
     pub fn wire_bytes(&self) -> u64 {
         self.wire_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn reshards_absorbed(&self) -> u64 {
+        self.reshards_absorbed.load(Ordering::Relaxed)
     }
 
     pub fn is_dead(&self) -> bool {
@@ -110,6 +117,13 @@ impl Metrics {
 
     pub fn add_reshard(&self) {
         self.reshards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Survivor worker `w` adopted a row range during a re-shard.
+    pub fn add_worker_reshard(&self, w: usize) {
+        if let Some(c) = self.worker(w) {
+            c.reshards_absorbed.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Ensure per-worker counter slots `0..p` exist (idempotent; called
@@ -229,6 +243,10 @@ impl Metrics {
                         ("columns_served", Json::Num(c.columns_served() as f64)),
                         ("argmax_rounds", Json::Num(c.argmax_rounds() as f64)),
                         ("wire_bytes", Json::Num(c.wire_bytes() as f64)),
+                        (
+                            "reshards_absorbed",
+                            Json::Num(c.reshards_absorbed() as f64),
+                        ),
                         ("last_heartbeat_age_ms", age),
                         ("dead", Json::Bool(c.is_dead())),
                     ])

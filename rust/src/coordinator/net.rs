@@ -581,6 +581,7 @@ impl FrameWriter {
     }
 
     fn send_payload(&self, payload: &[u8]) -> bool {
+        crate::obs::trace::event("wire_send", "net", payload.len() as f64);
         let mut s = match self.stream.lock() {
             Ok(s) => s,
             Err(_) => return false,
@@ -620,7 +621,14 @@ struct TcpWorkerSource {
 impl WorkerSource for TcpWorkerSource {
     fn recv(&mut self) -> Option<ToWorker> {
         match framing::read_frame(&mut self.stream, MAX_FRAME_BYTES) {
-            Ok(Some(payload)) => decode_to_worker(&payload).ok(),
+            Ok(Some(payload)) => {
+                crate::obs::trace::event(
+                    "wire_recv",
+                    "net",
+                    payload.len() as f64,
+                );
+                decode_to_worker(&payload).ok()
+            }
             _ => None,
         }
     }
@@ -772,6 +780,11 @@ impl Transport for TcpTransport {
                 loop {
                     match framing::read_frame(&mut rd, MAX_FRAME_BYTES) {
                         Ok(Some(payload)) => {
+                            crate::obs::trace::event(
+                                "wire_recv",
+                                "net",
+                                payload.len() as f64,
+                            );
                             match decode_from_worker(&payload) {
                                 Ok(FromWorker::Heartbeat { worker }) => {
                                     reader_metrics.note_alive(worker);

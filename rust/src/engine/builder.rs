@@ -61,6 +61,7 @@ impl SessionBuilder {
     /// kernel, clamp the method parameters to n, clamp stopping budgets
     /// to n, and load + validate any warm-start artifact.
     pub fn resolve(&self, spec: RunSpec) -> Result<ResolvedRun> {
+        let _span = crate::obs::span("engine_resolve", "engine");
         let RunSpec { dataset, kernel, mut method, stopping, shard_reads, warm_start } =
             spec;
         let source = dataset.describe();

@@ -189,6 +189,35 @@
 //! Per-worker counters (columns served, argmax rounds, bytes on the
 //! wire, heartbeat age) surface in the run report and, for hosted
 //! sessions, under `"workers"` in the server's stats/metrics endpoints.
+//!
+//! ## Quickstart: observability
+//!
+//! The [`obs`] layer answers *where does the time go*. Every hot path —
+//! sampling step phases (score scan, column fetch, factor update),
+//! engine resolve, task fit/predict, coordinator gather/arbitrate/
+//! reshard rounds, per-frame wire bytes — carries trace guards that are
+//! free until enabled (one atomic load). `--trace FILE` on
+//! `approximate`, `parallel`, and `task` records a run and writes a
+//! Chrome `trace_event` file; load it at `chrome://tracing` or
+//! <https://ui.perfetto.dev> to see the nested per-phase spans, and
+//! read the per-phase timing table (count, total, p50/p99) the CLI
+//! prints alongside:
+//!
+//! ```bash
+//! oasis approximate --dataset two-moons --n 2000 --cols 200 --trace out.json
+//! # phase                 count      total        p50        p99
+//! # score_scan              190     1.52s      7.81ms     9.21ms
+//! # column_fetch            190   310.20ms     1.58ms     2.11ms
+//! # factor_update           190   120.93ms   602.11µs   811.90µs
+//! ```
+//!
+//! Library users call [`obs::trace::enable`], run anything, then
+//! [`obs::trace::drain`] for the same exports
+//! (`examples/trace_phases.rs` walks a trace by hand). The server
+//! additionally serves Prometheus text exposition — every JSON counter,
+//! per-endpoint request-duration histograms with p50/p90/p99, and live
+//! per-worker oASIS-P gauges — from `GET /metrics?format=prometheus`
+//! ([`obs::prom`], protocol details in the [`server`] docs).
 
 pub mod bench_support;
 pub mod coordinator;
@@ -198,6 +227,7 @@ pub mod error;
 pub mod kernels;
 pub mod linalg;
 pub mod nystrom;
+pub mod obs;
 pub mod runtime;
 pub mod sampling;
 pub mod seed;

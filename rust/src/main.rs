@@ -54,6 +54,7 @@ fn main() {
         "export" => cmd_export(&args),
         "seed" => cmd_seed(&args),
         "serve" => cmd_serve(&args),
+        "promcheck" => cmd_promcheck(&args),
         "info" => cmd_info(),
         _ => {
             print_help();
@@ -67,7 +68,8 @@ fn print_help() {
     println!(
         "oasis — adaptive column sampling for kernel matrix approximation\n\
          \n\
-         USAGE: oasis <approximate|query|parallel|worker|serve|info> [options]\n\
+         USAGE: oasis <approximate|query|task|parallel|worker|export|\n\
+                       serve|promcheck|info> [options]\n\
          \n\
          approximate options:\n\
            --dataset   two-moons|abalone|borg|mnist|salinas|lightfield (default two-moons)\n\
@@ -102,6 +104,11 @@ fn print_help() {
                          (oasis/farahat)\n\
            --json      structured one-line JSON output (method, k,\n\
                        error, secs, stop)\n\
+           --trace     FILE — record the run's internal phases (score\n\
+                       scan, column fetch, factor update, …) and write\n\
+                       them as Chrome trace_event JSON (load at\n\
+                       chrome://tracing or ui.perfetto.dev); also prints\n\
+                       a per-phase timing table\n\
          \n\
          query options (serve a stored artifact, no oracle needed):\n\
            --load      artifact file written by approximate --save or the\n\
@@ -129,6 +136,8 @@ fn print_help() {
                        model attached (versioned task section; a later\n\
                        `oasis task --load` can predict without labels)\n\
            --json      structured one-line JSON output\n\
+           --trace     FILE — Chrome trace of the fit/predict phases,\n\
+                       as in approximate\n\
          \n\
          parallel options:\n\
            --dataset/--n/--cols/--sigma/--sigma-frac/--seed as above\n\
@@ -151,6 +160,9 @@ fn print_help() {
                        binary --data file; port 0 picks one)\n\
            --save      write the finished approximation as a stored\n\
                        artifact, as in approximate\n\
+           --trace     FILE — Chrome trace, as in approximate (adds the\n\
+                       coordinator's gather/arbitrate/reshard spans and\n\
+                       per-frame wire-byte counters)\n\
          \n\
          worker options (one oASIS-P worker process; framed-TCP wire\n\
          protocol documented in the oasis::coordinator module docs):\n\
@@ -176,6 +188,14 @@ fn print_help() {
            --dict      dictionary size L (default 50)\n\
            --sparsity  per-point OMP budget (default 5)\n\
            --clusters  if set, spectral-cluster the codes into this many groups\n\
+         \n\
+         promcheck options (scrape a running server's Prometheus page\n\
+         and validate the exposition format — exits non-zero on any\n\
+         malformed family/sample, for CI smoke jobs):\n\
+           --host      server address (default 127.0.0.1)\n\
+           --port      server port (default 7437)\n\
+           --require   fail unless the page contains this substring\n\
+                       (e.g. a metric family a run must have produced)\n\
          \n\
          serve options (HTTP/JSON session server; protocol reference in\n\
          the oasis::server module docs):\n\
@@ -291,6 +311,116 @@ fn resolve_or_exit(cmd: &str, spec: RunSpec) -> ResolvedRun {
     }
 }
 
+/// `--trace FILE`: turn the span recorder on before any engine work so
+/// the resolve/sampling/coordinator guards record. Returns the output
+/// path for [`trace_export`] at command exit.
+fn trace_begin(args: &Args) -> Option<PathBuf> {
+    let path = args.get("trace")?;
+    oasis::obs::trace::enable();
+    Some(PathBuf::from(path))
+}
+
+/// Drain the recorder, write the Chrome `trace_event` JSON (atomic —
+/// a crash mid-write never leaves a truncated file), and print the
+/// per-phase timing table. The table goes to stderr under `--json` so
+/// stdout stays one parseable line. Returns the command's exit code
+/// contribution (0, or 1 if the trace file could not be written).
+fn trace_export(args: &Args, out: Option<PathBuf>) -> i32 {
+    let Some(path) = out else { return 0 };
+    oasis::obs::trace::disable();
+    let trace = oasis::obs::trace::drain();
+    let json = trace.to_chrome_json().to_string();
+    if let Err(e) = oasis::util::fsio::write_atomic(&path, json.as_bytes()) {
+        eprintln!("--trace {}: {e}", path.display());
+        return 1;
+    }
+    let mut table = format!(
+        "trace: {} events ({} dropped) written to {}\n",
+        trace.events.len(),
+        trace.dropped,
+        path.display()
+    );
+    let phases = trace.phase_summary();
+    if !phases.is_empty() {
+        table.push_str(&format!(
+            "{:<16} {:>7} {:>10} {:>10} {:>10} {:>10}\n",
+            "phase", "count", "total", "p50", "p99", "max"
+        ));
+        for p in &phases {
+            table.push_str(&format!(
+                "{:<16} {:>7} {:>10} {:>10} {:>10} {:>10}\n",
+                p.name,
+                p.hist.count(),
+                fmt_secs(p.hist.sum()),
+                fmt_secs(p.hist.quantile(0.5)),
+                fmt_secs(p.hist.quantile(0.99)),
+                fmt_secs(p.hist.max()),
+            ));
+        }
+    }
+    if args.flag("json") {
+        eprint!("{table}");
+    } else {
+        print!("{table}");
+    }
+    0
+}
+
+/// Scrape a running server's `GET /metrics?format=prometheus` and
+/// validate the exposition with [`oasis::obs::prom::validate`] — the
+/// in-repo checker CI's smoke jobs run instead of shipping a real
+/// Prometheus binary. `--require` additionally asserts a substring
+/// (e.g. a metric family a traffic-generating step must have produced).
+fn cmd_promcheck(args: &Args) -> i32 {
+    use std::net::ToSocketAddrs;
+    let host = args.get_or("host", "127.0.0.1");
+    let port = args.usize_or("port", 7437);
+    let addr = match format!("{host}:{port}")
+        .to_socket_addrs()
+        .ok()
+        .and_then(|mut a| a.next())
+    {
+        Some(a) => a,
+        None => {
+            eprintln!("promcheck: cannot resolve {host}:{port}");
+            return 2;
+        }
+    };
+    let (status, body) = match oasis::server::http::client_request(
+        addr,
+        "GET",
+        "/metrics?format=prometheus",
+        "",
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("promcheck: request to {addr} failed: {e}");
+            return 1;
+        }
+    };
+    if status != 200 {
+        eprintln!("promcheck: HTTP {status} from {addr}");
+        return 1;
+    }
+    if let Err(e) = oasis::obs::prom::validate(&body) {
+        eprintln!("promcheck: invalid exposition: {e}");
+        return 1;
+    }
+    if let Some(needle) = args.get("require") {
+        if !body.contains(needle) {
+            eprintln!("promcheck: page lacks required substring '{needle}'");
+            return 1;
+        }
+    }
+    let families = body.lines().filter(|l| l.starts_with("# TYPE")).count();
+    let samples = body
+        .lines()
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .count();
+    println!("promcheck ok: {samples} samples across {families} families");
+    0
+}
+
 
 fn report_approximate(
     args: &Args,
@@ -334,6 +464,7 @@ fn report_approximate(
 }
 
 fn cmd_approximate(args: &Args) -> i32 {
+    let trace_out = trace_begin(args);
     let method = match Method::parse(&args.get_or("method", "oasis")) {
         Ok(m) => m,
         Err(e) => {
@@ -454,7 +585,7 @@ fn cmd_approximate(args: &Args) -> i32 {
             }
         }
     }
-    0
+    trace_export(args, trace_out)
 }
 
 /// Serve extension queries from a stored artifact — no dataset, no
@@ -674,6 +805,7 @@ fn report_task(
 /// Fit and run a downstream task — from a stored artifact (`--load`,
 /// dataset-free) or a fresh approximation run (approximate's flags).
 fn cmd_task(args: &Args) -> i32 {
+    let trace_out = trace_begin(args);
     let spec = match task_spec(args) {
         Ok(s) => s,
         Err(e) => {
@@ -704,7 +836,7 @@ fn cmd_task(args: &Args) -> i32 {
         task_from_run(args, &spec, predict.as_deref())
     };
     match result {
-        Ok(()) => 0,
+        Ok(()) => trace_export(args, trace_out),
         Err(e) => {
             eprintln!("task: {e}");
             1
@@ -874,6 +1006,7 @@ fn parse_indices(s: &str) -> Result<Vec<usize>, String> {
 }
 
 fn cmd_parallel(args: &Args) -> i32 {
+    let trace_out = trace_begin(args);
     let spec = match run_spec(args, Method::OasisP, 500) {
         Ok(s) => s,
         Err(e) => {
@@ -967,7 +1100,7 @@ fn cmd_parallel(args: &Args) -> i32 {
                     }
                 }
             }
-            0
+            trace_export(args, trace_out)
         }
         Err(e) => {
             eprintln!("oASIS-P failed: {e}");

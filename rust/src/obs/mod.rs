@@ -1,0 +1,35 @@
+//! Observability: histograms, structured tracing, and Prometheus text
+//! exposition — dependency-free, shared by every layer of the stack.
+//!
+//! The paper's claim is about *where time goes* (oASIS matches adaptive
+//! accuracy "at a fraction of the computational cost"), so the stack has
+//! to be able to show a per-phase cost breakdown of its own hot paths:
+//!
+//! * [`hist`] — log₂-bucketed histograms with p50/p90/p99 quantile
+//!   estimation. They back the per-session step-latency stats, the
+//!   server's per-endpoint request-duration histograms, and the CLI's
+//!   per-phase timing table.
+//! * [`trace`] — a process-global span/event recorder (thread-local span
+//!   stack, bounded ring buffer, monotonic timestamps) that the hot
+//!   paths write into when tracing is enabled: sampling step phases
+//!   (score scan, column fetch, factor update), engine resolve, task
+//!   fit/predict, coordinator rounds (gather, arbitrate, reshard), and
+//!   per-frame wire bytes. Exports as Chrome `trace_event` JSON
+//!   (load it at `chrome://tracing` or <https://ui.perfetto.dev>) or
+//!   JSONL; `oasis approximate --trace out.json` drives it end to end.
+//! * [`prom`] — Prometheus text exposition (version 0.0.4): counters,
+//!   gauges, cumulative `_bucket`/`_sum`/`_count` histogram series, and
+//!   a self-contained exposition validator the CI smoke jobs run via
+//!   `oasis promcheck`. The server serves it from
+//!   `GET /metrics?format=prometheus` (or `Accept: text/plain`).
+//!
+//! Tracing is off by default and costs one relaxed atomic load per
+//! guard when disabled, so instrumentation stays in the hot paths
+//! unconditionally.
+
+pub mod hist;
+pub mod prom;
+pub mod trace;
+
+pub use hist::Hist;
+pub use trace::{span, SpanGuard};

@@ -1,0 +1,450 @@
+//! Prometheus text exposition (format version 0.0.4) and a
+//! self-contained exposition validator.
+//!
+//! [`PromText`] builds an exposition page: `# HELP`/`# TYPE` headers,
+//! counter/gauge samples, and [`Hist`]s rendered as the cumulative
+//! `_bucket{le=…}` / `_sum` / `_count` series Prometheus histograms
+//! require. [`validate`] checks a page for the properties scrapers
+//! depend on — metric/label name syntax, parseable values, `TYPE`
+//! declared before first use, strictly increasing `le` bounds,
+//! non-decreasing cumulative bucket counts, and a `+Inf` bucket that
+//! equals `_count` — and backs both the golden-format tests and the
+//! `oasis promcheck` CI smoke checker.
+//!
+//! The server serves the page from `GET /metrics?format=prometheus`
+//! (or `Accept: text/plain`); see the [`server`](crate::server) docs
+//! for the metric families.
+
+use super::hist::Hist;
+use std::collections::BTreeMap;
+
+/// The content type Prometheus scrapers expect.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// An exposition page under construction.
+#[derive(Default)]
+pub struct PromText {
+    buf: String,
+}
+
+/// Escape a label value: backslash, double quote, newline.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a sample value (`{}` keeps integers exact; non-finite spell
+/// the Prometheus way).
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// Declare a metric family: `# HELP` and `# TYPE` lines. Call once
+    /// per family, before its samples.
+    pub fn family(&mut self, name: &str, help: &str, ty: &str) {
+        self.buf.push_str("# HELP ");
+        self.buf.push_str(name);
+        self.buf.push(' ');
+        self.buf.push_str(help);
+        self.buf.push_str("\n# TYPE ");
+        self.buf.push_str(name);
+        self.buf.push(' ');
+        self.buf.push_str(ty);
+        self.buf.push('\n');
+    }
+
+    /// One sample line: `name{labels} value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.buf.push_str(name);
+        if !labels.is_empty() {
+            self.buf.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.buf.push(',');
+                }
+                self.buf.push_str(k);
+                self.buf.push_str("=\"");
+                self.buf.push_str(&escape_label(v));
+                self.buf.push('"');
+            }
+            self.buf.push('}');
+        }
+        self.buf.push(' ');
+        self.buf.push_str(&fmt_value(value));
+        self.buf.push('\n');
+    }
+
+    /// Declare and emit an unlabeled counter in one call.
+    pub fn counter(&mut self, name: &str, help: &str, value: f64) {
+        self.family(name, help, "counter");
+        self.sample(name, &[], value);
+    }
+
+    /// Declare and emit an unlabeled gauge in one call.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.family(name, help, "gauge");
+        self.sample(name, &[], value);
+    }
+
+    /// Emit one histogram instance's samples (`_bucket` series ending
+    /// in `+Inf`, then `_sum` and `_count`). Declare the family once
+    /// with [`PromText::family`]`(name, help, "histogram")` before the
+    /// first instance; `labels` distinguish instances (endpoint,
+    /// session, …).
+    pub fn histogram(&mut self, name: &str, labels: &[(&str, &str)], h: &Hist) {
+        let bucket = format!("{name}_bucket");
+        for (le, cum) in h.cumulative_buckets() {
+            let le_s = fmt_value(le);
+            let mut with_le = labels.to_vec();
+            with_le.push(("le", &le_s));
+            self.sample(&bucket, &with_le, cum as f64);
+        }
+        let mut with_le = labels.to_vec();
+        with_le.push(("le", "+Inf"));
+        self.sample(&bucket, &with_le, h.count() as f64);
+        self.sample(&format!("{name}_sum"), labels, h.sum());
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.buf
+    }
+}
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_value(s: &str) -> Result<f64, String> {
+    match s {
+        "+Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        other => other
+            .parse::<f64>()
+            .map_err(|_| format!("unparseable sample value '{other}'")),
+    }
+}
+
+/// One parsed sample line.
+struct Sample {
+    name: String,
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+/// Parse `name{k="v",…} value`. Exposition from well-behaved writers
+/// only — escapes inside label values are honored, exotic whitespace is
+/// not.
+fn parse_sample(line: &str, lineno: usize) -> Result<Sample, String> {
+    let err = |m: String| format!("line {lineno}: {m}");
+    let (name_part, rest) = match line.find('{') {
+        Some(brace) => {
+            let close = line
+                .rfind('}')
+                .ok_or_else(|| err("'{' without '}'".into()))?;
+            (&line[..brace], line[brace..=close].to_string())
+        }
+        None => match line.find(' ') {
+            Some(sp) => (&line[..sp], String::new()),
+            None => return Err(err("no value on sample line".into())),
+        },
+    };
+    if !valid_name(name_part) {
+        return Err(err(format!("invalid metric name '{name_part}'")));
+    }
+    let mut labels = Vec::new();
+    let value_str;
+    if rest.is_empty() {
+        value_str = line[name_part.len()..].trim().to_string();
+    } else {
+        // parse the {...} label block with escape-aware scanning
+        let inner = &rest[1..rest.len() - 1];
+        let mut chars = inner.chars().peekable();
+        while chars.peek().is_some() {
+            let mut key = String::new();
+            for c in chars.by_ref() {
+                if c == '=' {
+                    break;
+                }
+                key.push(c);
+            }
+            if !valid_label_name(key.trim()) {
+                return Err(err(format!("invalid label name '{key}'")));
+            }
+            if chars.next() != Some('"') {
+                return Err(err(format!("label '{key}' value not quoted")));
+            }
+            let mut val = String::new();
+            let mut escaped = false;
+            loop {
+                match chars.next() {
+                    None => return Err(err("unterminated label value".into())),
+                    Some('\\') if !escaped => escaped = true,
+                    Some('"') if !escaped => break,
+                    Some(c) => {
+                        val.push(if escaped && c == 'n' { '\n' } else { c });
+                        escaped = false;
+                    }
+                }
+            }
+            labels.push((key.trim().to_string(), val));
+            if chars.peek() == Some(&',') {
+                chars.next();
+            }
+        }
+        value_str = line[name_part.len() + rest.len()..].trim().to_string();
+    }
+    let value = parse_value(&value_str).map_err(err)?;
+    Ok(Sample { name: name_part.to_string(), labels, value })
+}
+
+/// The family a sample belongs to (strips histogram series suffixes).
+fn family_of(name: &str) -> &str {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(stripped) = name.strip_suffix(suffix) {
+            return stripped;
+        }
+    }
+    name
+}
+
+/// Validate an exposition page. Checks, in order of discovery:
+/// comment syntax, metric and label name syntax, value parseability,
+/// `# TYPE` declared before a family's first sample, and for every
+/// histogram series (grouped by family + non-`le` labels): strictly
+/// increasing `le` bounds, non-decreasing cumulative counts, a `+Inf`
+/// bucket, and `+Inf == _count`.
+pub fn validate(text: &str) -> Result<(), String> {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    // (family, non-le labels) -> ordered (le, cumulative) pairs
+    let mut series: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<String, f64> = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            let comment = comment.trim_start();
+            if let Some(rest) = comment.strip_prefix("TYPE ") {
+                let mut parts = rest.split_whitespace();
+                let (name, ty) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+                if !valid_name(name) {
+                    return Err(format!("line {lineno}: TYPE for invalid name '{name}'"));
+                }
+                if !["counter", "gauge", "histogram", "summary", "untyped"]
+                    .contains(&ty)
+                {
+                    return Err(format!("line {lineno}: unknown TYPE '{ty}'"));
+                }
+                if types.insert(name.to_string(), ty.to_string()).is_some() {
+                    return Err(format!("line {lineno}: duplicate TYPE for '{name}'"));
+                }
+            } else if !comment.starts_with("HELP ") {
+                return Err(format!("line {lineno}: unknown comment '{line}'"));
+            }
+            continue;
+        }
+        let s = parse_sample(line, lineno)?;
+        let family = family_of(&s.name);
+        let declared = types.contains_key(family) || types.contains_key(&s.name);
+        if !declared {
+            return Err(format!(
+                "line {lineno}: sample '{}' before its # TYPE declaration",
+                s.name
+            ));
+        }
+        let histogram = types.get(family).map(String::as_str) == Some("histogram");
+        if histogram && s.name.ends_with("_bucket") {
+            let le = s
+                .labels
+                .iter()
+                .find(|(k, _)| k == "le")
+                .ok_or_else(|| format!("line {lineno}: bucket without le label"))?;
+            let bound = parse_value(&le.1)
+                .map_err(|m| format!("line {lineno}: {m}"))?;
+            let key = series_key(family, &s.labels);
+            series.entry(key).or_default().push((bound, s.value));
+        } else if histogram && s.name.ends_with("_count") {
+            counts.insert(series_key(family, &s.labels), s.value);
+        }
+    }
+    for (key, buckets) in &series {
+        for w in buckets.windows(2) {
+            if w[1].0 <= w[0].0 {
+                return Err(format!(
+                    "histogram {key}: le bounds not increasing ({} after {})",
+                    w[1].0, w[0].0
+                ));
+            }
+            if w[1].1 < w[0].1 {
+                return Err(format!(
+                    "histogram {key}: cumulative count decreases at le={}",
+                    w[1].0
+                ));
+            }
+        }
+        let last = buckets.last().expect("series entries are non-empty");
+        if last.0 != f64::INFINITY {
+            return Err(format!("histogram {key}: missing +Inf bucket"));
+        }
+        if let Some(&count) = counts.get(key) {
+            if count != last.1 {
+                return Err(format!(
+                    "histogram {key}: +Inf bucket {} != _count {count}",
+                    last.1
+                ));
+            }
+        } else {
+            return Err(format!("histogram {key}: missing _count"));
+        }
+    }
+    Ok(())
+}
+
+/// Group key for one histogram instance: family + its non-`le` labels.
+fn series_key(family: &str, labels: &[(String, String)]) -> String {
+    let mut key = family.to_string();
+    for (k, v) in labels {
+        if k != "le" {
+            key.push_str(&format!("|{k}={v}"));
+        }
+    }
+    key
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden-format test: the writer's output is byte-exact and passes
+    /// its own validator.
+    #[test]
+    fn writer_produces_golden_exposition() {
+        let mut h = Hist::latency();
+        for v in [0.5e-6, 3e-6, 5e-6] {
+            h.record(v);
+        }
+        let mut page = PromText::new();
+        page.counter("oasis_requests_total", "Requests served.", 42.0);
+        page.gauge("oasis_uptime_seconds", "Seconds since boot.", 1.5);
+        page.family(
+            "oasis_step_seconds",
+            "Selection step latency.",
+            "histogram",
+        );
+        page.histogram(
+            "oasis_step_seconds",
+            &[("session", "a\"b")],
+            &h,
+        );
+        let text = page.finish();
+        let expected = "\
+# HELP oasis_requests_total Requests served.
+# TYPE oasis_requests_total counter
+oasis_requests_total 42
+# HELP oasis_uptime_seconds Seconds since boot.
+# TYPE oasis_uptime_seconds gauge
+oasis_uptime_seconds 1.5
+# HELP oasis_step_seconds Selection step latency.
+# TYPE oasis_step_seconds histogram
+oasis_step_seconds_bucket{session=\"a\\\"b\",le=\"0.000001\"} 1
+oasis_step_seconds_bucket{session=\"a\\\"b\",le=\"0.000002\"} 1
+oasis_step_seconds_bucket{session=\"a\\\"b\",le=\"0.000004\"} 2
+oasis_step_seconds_bucket{session=\"a\\\"b\",le=\"0.000008\"} 3
+oasis_step_seconds_bucket{session=\"a\\\"b\",le=\"+Inf\"} 3
+oasis_step_seconds_sum{session=\"a\\\"b\"} 0.0000085
+oasis_step_seconds_count{session=\"a\\\"b\"} 3
+";
+        assert_eq!(text, expected);
+        validate(&text).expect("own output must validate");
+    }
+
+    #[test]
+    fn validator_rejects_malformed_pages() {
+        // sample before TYPE
+        assert!(validate("oasis_x_total 1\n").is_err());
+        // bad metric name
+        assert!(validate("# TYPE 9bad counter\n").is_err());
+        // unparseable value
+        assert!(
+            validate("# TYPE a counter\n# HELP a h\na one\n").is_err()
+        );
+        // decreasing cumulative bucket counts
+        let page = "\
+# TYPE h histogram
+h_bucket{le=\"1\"} 5
+h_bucket{le=\"2\"} 3
+h_bucket{le=\"+Inf\"} 5
+h_sum 1
+h_count 5
+";
+        let err = validate(page).unwrap_err();
+        assert!(err.contains("decreases"), "{err}");
+        // non-increasing le bounds
+        let page = "\
+# TYPE h histogram
+h_bucket{le=\"2\"} 1
+h_bucket{le=\"1\"} 2
+h_bucket{le=\"+Inf\"} 2
+h_count 2
+";
+        assert!(validate(page).unwrap_err().contains("not increasing"));
+        // +Inf must match _count
+        let page = "\
+# TYPE h histogram
+h_bucket{le=\"1\"} 1
+h_bucket{le=\"+Inf\"} 1
+h_count 2
+";
+        assert!(validate(page).unwrap_err().contains("_count"));
+        // missing +Inf
+        let page = "\
+# TYPE h histogram
+h_bucket{le=\"1\"} 1
+h_count 1
+";
+        assert!(validate(page).unwrap_err().contains("+Inf"));
+    }
+
+    #[test]
+    fn label_escapes_round_trip_through_the_parser() {
+        let mut page = PromText::new();
+        page.family("g", "h", "gauge");
+        page.sample("g", &[("path", "a\\b\"c\nd")], 1.0);
+        let text = page.finish();
+        validate(&text).expect("escaped labels must parse");
+        let s = parse_sample(text.lines().last().unwrap(), 3).unwrap();
+        assert_eq!(s.labels[0].1, "a\\b\"c\nd");
+    }
+}

@@ -349,11 +349,13 @@ impl SamplerSession for OasisSession<'_> {
             return Ok(StepOutcome::Exhausted(reason));
         }
         let sw = Stopwatch::start();
+        let scan_span = crate::obs::span("score_scan", "sampling");
         if self.variant == Variant::PaperR {
             self.state.colsum_delta(&self.d, &mut self.delta);
         }
         // argmax |Δ| over unselected
         let (best, best_abs) = argmax_abs(&self.delta, &self.selected);
+        drop(scan_span);
         if best == usize::MAX {
             self.exhausted = Some(StopReason::Exhausted);
             self.busy_secs += sw.secs();
@@ -393,7 +395,10 @@ impl OasisSession<'_> {
         let k = self.state.k;
         let s = 1.0 / self.delta[best];
         // new column from the oracle
+        let fetch_span = crate::obs::span("column_fetch", "sampling");
         let col = self.state.fetch_column(self.oracle, best);
+        drop(fetch_span);
+        let _update_span = crate::obs::span("factor_update", "sampling");
         // q = W⁻¹ b where b = C(Λ, best) = row `best` of C
         let q = self.state.q_for(best, k);
         // diff = C q − c_new

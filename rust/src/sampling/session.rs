@@ -302,6 +302,7 @@ pub fn run_to_completion(
         if let Some(reason) = rule.evaluate(session, started.elapsed()) {
             return Ok(reason);
         }
+        let _step_span = crate::obs::span("sampler_step", "sampling");
         match session.step()? {
             StepOutcome::Selected { .. } => {}
             StepOutcome::Exhausted(reason) => return Ok(reason),

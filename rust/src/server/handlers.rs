@@ -24,10 +24,25 @@ pub fn route(state: &Arc<ServerState>, req: &Request) -> Response {
     ServerMetrics::inc(&state.metrics.requests);
     let segs = req.segments();
     let resp = match (req.method.as_str(), segs.as_slice()) {
-        ("GET", ["healthz"]) => {
-            Response::json(200, Json::obj(vec![("ok", Json::Bool(true))]))
+        ("GET", ["healthz"]) => Response::json(
+            200,
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "uptime_secs",
+                    Json::Num(state.started.elapsed().as_secs_f64()),
+                ),
+                ("start_time_unix_secs", Json::Num(state.start_unix_secs)),
+                ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+            ]),
+        ),
+        ("GET", ["metrics"]) => {
+            if wants_prometheus(req) {
+                metrics_prometheus(state)
+            } else {
+                metrics_report(state)
+            }
         }
-        ("GET", ["metrics"]) => metrics_report(state),
         ("GET", ["sessions"]) => list_sessions(state),
         ("POST", ["sessions"]) => create_session(state, req),
         ("GET", ["sessions", name]) => session_status(state, name),
@@ -59,6 +74,51 @@ pub fn route(state: &Arc<ServerState>, req: &Request) -> Response {
         ServerMetrics::inc(&state.metrics.errors);
     }
     resp
+}
+
+/// Normalized endpoint label for the request-duration histograms:
+/// session/artifact names collapse to `{name}` placeholders and unknown
+/// paths collapse to `other`, so the label set (and with it the
+/// Prometheus series count) stays bounded no matter what clients send.
+pub fn endpoint_label(req: &Request) -> String {
+    const SESSION_VERBS: [&str; 6] =
+        ["step", "snapshot", "query", "task", "save", "finish"];
+    const ARTIFACT_VERBS: [&str; 2] = ["query", "task"];
+    let segs = req.segments();
+    let path: String = match segs.as_slice() {
+        ["healthz"] => "/healthz".into(),
+        ["metrics"] => "/metrics".into(),
+        ["sessions"] => "/sessions".into(),
+        ["sessions", _] => "/sessions/{name}".into(),
+        ["sessions", _, v] if SESSION_VERBS.contains(v) => {
+            format!("/sessions/{{name}}/{v}")
+        }
+        ["artifacts", "load"] => "/artifacts/load".into(),
+        ["artifacts"] => "/artifacts".into(),
+        ["artifacts", _] => "/artifacts/{name}".into(),
+        ["artifacts", _, v] if ARTIFACT_VERBS.contains(v) => {
+            format!("/artifacts/{{name}}/{v}")
+        }
+        ["shutdown"] => "/shutdown".into(),
+        _ => "other".into(),
+    };
+    format!("{} {path}", req.method)
+}
+
+/// `GET /metrics` content negotiation: the `?format=prometheus` query
+/// parameter wins; otherwise an `Accept` header asking for `text/plain`
+/// (what Prometheus sends) or `openmetrics`. JSON stays the default.
+fn wants_prometheus(req: &Request) -> bool {
+    if let Some(f) = req.query.get("format") {
+        return f == "prometheus";
+    }
+    req.headers
+        .get("accept")
+        .map(|a| {
+            let a = a.to_ascii_lowercase();
+            a.contains("text/plain") || a.contains("openmetrics")
+        })
+        .unwrap_or(false)
 }
 
 fn factor_elems(c: &crate::linalg::Mat, winv: &crate::linalg::Mat) -> usize {
@@ -855,9 +915,240 @@ fn metrics_report(state: &Arc<ServerState>) -> Response {
                 "uptime_secs",
                 Json::Num(state.started.elapsed().as_secs_f64()),
             ),
+            ("start_time_unix_secs", Json::Num(state.start_unix_secs)),
+            ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
             ("server", state.metrics.to_json()),
             ("sessions", Json::Arr(sessions)),
             ("artifacts", Json::Arr(artifacts)),
         ]),
     )
+}
+
+/// One distributed session's per-worker counters, flattened out of the
+/// `"workers"` JSON array the coordinator mirrors into the session
+/// stats — the Prometheus gauges are rendered from the same numbers the
+/// JSON endpoint serves, so the two can never disagree mid-run.
+struct WorkerRow {
+    session: String,
+    worker: String,
+    columns_served: f64,
+    argmax_rounds: f64,
+    wire_bytes: f64,
+    reshards: f64,
+    heartbeat_age_secs: Option<f64>,
+    dead: bool,
+}
+
+fn worker_rows(session: &str, workers: &Json) -> Vec<WorkerRow> {
+    let num = |j: &Json, key: &str| {
+        j.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    workers
+        .as_arr()
+        .map(|arr| {
+            arr.iter()
+                .map(|w| WorkerRow {
+                    session: session.to_string(),
+                    worker: format!("{}", num(w, "worker") as u64),
+                    columns_served: num(w, "columns_served"),
+                    argmax_rounds: num(w, "argmax_rounds"),
+                    wire_bytes: num(w, "wire_bytes"),
+                    reshards: num(w, "reshards_absorbed"),
+                    heartbeat_age_secs: w
+                        .get("last_heartbeat_age_ms")
+                        .and_then(Json::as_f64)
+                        .map(|ms| ms * 1e-3),
+                    dead: w
+                        .get("dead")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false),
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// The Prometheus text rendering of `/metrics`: build info and uptime,
+/// every server counter, per-endpoint request-duration histograms,
+/// per-session step histograms and progress gauges, and — for live
+/// oasis-p sessions — per-worker gauges. Validated end to end by
+/// `oasis promcheck` in the CI smoke jobs.
+fn metrics_prometheus(state: &Arc<ServerState>) -> Response {
+    use crate::obs::prom::{self, PromText};
+    let mut page = PromText::new();
+    page.family("oasis_build_info", "Build information.", "gauge");
+    page.sample(
+        "oasis_build_info",
+        &[("version", env!("CARGO_PKG_VERSION"))],
+        1.0,
+    );
+    page.gauge(
+        "oasis_start_time_seconds",
+        "Unix time the server started.",
+        state.start_unix_secs,
+    );
+    page.gauge(
+        "oasis_uptime_seconds",
+        "Seconds since the server started.",
+        state.started.elapsed().as_secs_f64(),
+    );
+    for (name, help, value) in state.metrics.counter_triples() {
+        page.counter(name, help, value as f64);
+    }
+    let hists = state.metrics.endpoint_hists();
+    if !hists.is_empty() {
+        page.family(
+            "oasis_http_request_duration_seconds",
+            "Request latency by normalized endpoint.",
+            "histogram",
+        );
+        for (endpoint, h) in &hists {
+            page.histogram(
+                "oasis_http_request_duration_seconds",
+                &[("endpoint", endpoint)],
+                h,
+            );
+        }
+    }
+    let stats: Vec<(String, SessionStats)> = state
+        .registry
+        .list()
+        .into_iter()
+        .map(|(name, shared)| {
+            let st = lock(&shared.stats).clone();
+            (name, st)
+        })
+        .collect();
+    page.gauge(
+        "oasis_sessions_live",
+        "Sessions currently hosted.",
+        stats.len() as f64,
+    );
+    page.gauge(
+        "oasis_artifacts_hosted",
+        "Artifacts currently hosted.",
+        state.artifacts.list().len() as f64,
+    );
+    if !stats.is_empty() {
+        page.family(
+            "oasis_session_columns",
+            "Columns selected so far (k), including seed columns.",
+            "gauge",
+        );
+        for (name, st) in &stats {
+            page.sample(
+                "oasis_session_columns",
+                &[("session", name)],
+                st.k as f64,
+            );
+        }
+        page.family(
+            "oasis_session_steps_total",
+            "Adaptive selections performed over the session's lifetime.",
+            "counter",
+        );
+        for (name, st) in &stats {
+            page.sample(
+                "oasis_session_steps_total",
+                &[("session", name)],
+                st.steps_done as f64,
+            );
+        }
+        page.family(
+            "oasis_session_error_estimate",
+            "Most recent error estimate (max Δ), when available.",
+            "gauge",
+        );
+        for (name, st) in &stats {
+            if let Some(e) = st.error_estimate {
+                page.sample(
+                    "oasis_session_error_estimate",
+                    &[("session", name)],
+                    e,
+                );
+            }
+        }
+        if stats.iter().any(|(_, st)| st.step_latency.count() > 0) {
+            page.family(
+                "oasis_session_step_duration_seconds",
+                "Per-step selection latency.",
+                "histogram",
+            );
+            for (name, st) in &stats {
+                if st.step_latency.count() > 0 {
+                    page.histogram(
+                        "oasis_session_step_duration_seconds",
+                        &[("session", name)],
+                        &st.step_latency,
+                    );
+                }
+            }
+        }
+    }
+    let rows: Vec<WorkerRow> = stats
+        .iter()
+        .filter_map(|(name, st)| st.workers.as_ref().map(|w| worker_rows(name, w)))
+        .flatten()
+        .collect();
+    if !rows.is_empty() {
+        let worker_counters: [(&str, &str, fn(&WorkerRow) -> f64); 4] = [
+            (
+                "oasis_worker_columns_served_total",
+                "Kernel columns served by this worker.",
+                |r| r.columns_served,
+            ),
+            (
+                "oasis_worker_argmax_rounds_total",
+                "Argmax gather rounds this worker answered.",
+                |r| r.argmax_rounds,
+            ),
+            (
+                "oasis_worker_wire_bytes_total",
+                "Bytes this worker put on the wire (TCP fleets).",
+                |r| r.wire_bytes,
+            ),
+            (
+                "oasis_worker_reshards_total",
+                "Row ranges this worker absorbed from dead peers.",
+                |r| r.reshards,
+            ),
+        ];
+        for (name, help, get) in worker_counters {
+            page.family(name, help, "counter");
+            for r in &rows {
+                page.sample(
+                    name,
+                    &[("session", &r.session), ("worker", &r.worker)],
+                    get(r),
+                );
+            }
+        }
+        page.family(
+            "oasis_worker_heartbeat_age_seconds",
+            "Seconds since this worker's last message (TCP fleets).",
+            "gauge",
+        );
+        for r in &rows {
+            if let Some(age) = r.heartbeat_age_secs {
+                page.sample(
+                    "oasis_worker_heartbeat_age_seconds",
+                    &[("session", &r.session), ("worker", &r.worker)],
+                    age,
+                );
+            }
+        }
+        page.family(
+            "oasis_worker_dead",
+            "1 when the leader declared this worker dead.",
+            "gauge",
+        );
+        for r in &rows {
+            page.sample(
+                "oasis_worker_dead",
+                &[("session", &r.session), ("worker", &r.worker)],
+                if r.dead { 1.0 } else { 0.0 },
+            );
+        }
+    }
+    Response::text(200, prom::CONTENT_TYPE, page.finish())
 }

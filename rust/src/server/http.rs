@@ -201,16 +201,30 @@ pub fn client_request(
     Ok((status, raw[at..].to_string()))
 }
 
-/// An HTTP response carrying a JSON body.
+/// An HTTP response carrying a JSON (or, for the Prometheus exposition,
+/// plain-text) body.
 #[derive(Debug)]
 pub struct Response {
     pub status: u16,
     pub body: String,
+    /// `Content-Type` header value (JSON unless built via
+    /// [`Response::text`]).
+    pub content_type: &'static str,
 }
 
 impl Response {
     pub fn json(status: u16, body: crate::util::json::Json) -> Response {
-        Response { status, body: body.to_string() }
+        Response {
+            status,
+            body: body.to_string(),
+            content_type: "application/json",
+        }
+    }
+
+    /// A non-JSON body with an explicit content type (the Prometheus
+    /// text exposition).
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
+        Response { status, body, content_type }
     }
 
     pub fn reason(&self) -> &'static str {
@@ -230,10 +244,11 @@ impl Response {
     pub fn write_to<W: Write>(&self, w: &mut W, close: bool) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n\
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\n\
              Content-Length: {}\r\nConnection: {}\r\n\r\n{}",
             self.status,
             self.reason(),
+            self.content_type,
             self.body.len(),
             if close { "close" } else { "keep-alive" },
             self.body,
@@ -347,5 +362,19 @@ mod tests {
         assert!(text.contains("Content-Length: 11"), "{text}");
         assert!(text.contains("Connection: close"), "{text}");
         assert!(text.ends_with("{\"ok\":true}"), "{text}");
+    }
+
+    #[test]
+    fn text_responses_carry_their_content_type() {
+        let mut out = Vec::new();
+        Response::text(200, "text/plain; version=0.0.4; charset=utf-8", "x 1\n".into())
+            .write_to(&mut out, true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(
+            text.contains("Content-Type: text/plain; version=0.0.4; charset=utf-8"),
+            "{text}"
+        );
+        assert!(text.ends_with("x 1\n"), "{text}");
     }
 }

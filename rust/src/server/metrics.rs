@@ -1,10 +1,21 @@
-//! Server-wide counters and per-session latency accounting for the
-//! `/metrics` endpoint.
+//! Server-wide counters and per-endpoint request-latency histograms for
+//! the `/metrics` endpoint (JSON and Prometheus renderings).
+//!
+//! Per-session step latencies live in
+//! [`SessionStats`](super::registry::SessionStats) as an
+//! [`obs::Hist`](crate::obs::Hist) — the same histogram shape used here
+//! for request durations, so every latency the server reports carries
+//! p50/p90/p99 estimates, not just mean/max.
 
+use crate::obs::Hist;
 use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
-/// Lock-free counters shared by every connection thread.
+/// Lock-free counters shared by every connection thread, plus the
+/// per-endpoint request-duration histograms (mutex-guarded — recorded
+/// once per request, far off any hot loop).
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
     pub connections: AtomicU64,
@@ -27,6 +38,10 @@ pub struct ServerMetrics {
     pub task_cache_hits: AtomicU64,
     /// Points predicted by the task endpoints.
     pub task_predictions: AtomicU64,
+    /// Request-duration histograms keyed by normalized endpoint label
+    /// (e.g. `"POST /sessions/{name}/step"` — names collapse to
+    /// placeholders so the label set stays bounded).
+    pub request_hists: Mutex<BTreeMap<String, Hist>>,
 }
 
 impl ServerMetrics {
@@ -36,6 +51,19 @@ impl ServerMetrics {
 
     pub fn get(c: &AtomicU64) -> u64 {
         c.load(Ordering::Relaxed)
+    }
+
+    /// Record one handled request under its normalized endpoint label.
+    pub fn observe_request(&self, endpoint: &str, secs: f64) {
+        let mut map = self.request_hists.lock().unwrap_or_else(|p| p.into_inner());
+        map.entry(endpoint.to_string()).or_default().record(secs);
+    }
+
+    /// Snapshot of every endpoint histogram (label-sorted — BTreeMap
+    /// order), for the Prometheus exposition and tests.
+    pub fn endpoint_hists(&self) -> Vec<(String, Hist)> {
+        let map = self.request_hists.lock().unwrap_or_else(|p| p.into_inner());
+        map.iter().map(|(k, h)| (k.clone(), h.clone())).collect()
     }
 
     pub fn to_json(&self) -> Json {
@@ -85,62 +113,85 @@ impl ServerMetrics {
             ),
         ])
     }
-}
 
-/// Streaming latency summary for one session's `step` calls (updated by
-/// the session's actor thread, read by `/metrics`).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct LatencyStats {
-    pub count: u64,
-    pub total_secs: f64,
-    pub max_secs: f64,
-    pub last_secs: f64,
-}
-
-impl LatencyStats {
-    pub fn record(&mut self, secs: f64) {
-        self.count += 1;
-        self.total_secs += secs;
-        self.max_secs = self.max_secs.max(secs);
-        self.last_secs = secs;
-    }
-
-    pub fn mean_secs(&self) -> f64 {
-        if self.count == 0 {
-            0.0
-        } else {
-            self.total_secs / self.count as f64
-        }
-    }
-
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("count", Json::Num(self.count as f64)),
-            ("mean_ms", Json::Num(self.mean_secs() * 1e3)),
-            ("last_ms", Json::Num(self.last_secs * 1e3)),
-            ("max_ms", Json::Num(self.max_secs * 1e3)),
-        ])
+    /// The 13 counters as `(prometheus_name, help, value)` triples, in
+    /// the same order as [`to_json`](ServerMetrics::to_json) — the
+    /// Prometheus page is generated from this list so the two renderings
+    /// can never drift apart.
+    pub fn counter_triples(&self) -> Vec<(&'static str, &'static str, u64)> {
+        vec![
+            (
+                "oasis_connections_total",
+                "Client connections accepted.",
+                Self::get(&self.connections),
+            ),
+            (
+                "oasis_requests_total",
+                "HTTP requests handled.",
+                Self::get(&self.requests),
+            ),
+            (
+                "oasis_errors_total",
+                "Requests answered with a 4xx/5xx status.",
+                Self::get(&self.errors),
+            ),
+            (
+                "oasis_sessions_created_total",
+                "Sampler sessions created.",
+                Self::get(&self.sessions_created),
+            ),
+            (
+                "oasis_sessions_finished_total",
+                "Sampler sessions finished.",
+                Self::get(&self.sessions_finished),
+            ),
+            (
+                "oasis_snapshots_total",
+                "Snapshots assembled.",
+                Self::get(&self.snapshots_total),
+            ),
+            (
+                "oasis_queries_total",
+                "Out-of-sample queries answered from live sessions.",
+                Self::get(&self.queries_total),
+            ),
+            (
+                "oasis_artifacts_saved_total",
+                "Session factorizations persisted to artifacts.",
+                Self::get(&self.artifacts_saved),
+            ),
+            (
+                "oasis_artifacts_loaded_total",
+                "Stored artifacts hosted.",
+                Self::get(&self.artifacts_loaded),
+            ),
+            (
+                "oasis_artifact_queries_total",
+                "Queries answered from loaded artifacts.",
+                Self::get(&self.artifact_queries),
+            ),
+            (
+                "oasis_tasks_fitted_total",
+                "Downstream-task models fit.",
+                Self::get(&self.tasks_fitted),
+            ),
+            (
+                "oasis_task_cache_hits_total",
+                "Task requests answered from a cached fitted model.",
+                Self::get(&self.task_cache_hits),
+            ),
+            (
+                "oasis_task_predictions_total",
+                "Points predicted by the task endpoints.",
+                Self::get(&self.task_predictions),
+            ),
+        ]
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn latency_summary() {
-        let mut l = LatencyStats::default();
-        assert_eq!(l.mean_secs(), 0.0);
-        l.record(0.010);
-        l.record(0.030);
-        l.record(0.020);
-        assert_eq!(l.count, 3);
-        assert!((l.mean_secs() - 0.020).abs() < 1e-12);
-        assert_eq!(l.max_secs, 0.030);
-        assert_eq!(l.last_secs, 0.020);
-        let j = l.to_json();
-        assert_eq!(j.get("count").unwrap().as_usize(), Some(3));
-    }
 
     #[test]
     fn counters_render() {
@@ -150,5 +201,40 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("errors").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn counter_triples_cover_every_json_counter() {
+        let m = ServerMetrics::default();
+        let triples = m.counter_triples();
+        let json_keys: Vec<String> = match m.to_json() {
+            Json::Obj(o) => o.keys().cloned().collect(),
+            _ => panic!("counters must render as an object"),
+        };
+        assert_eq!(triples.len(), json_keys.len());
+        for key in &json_keys {
+            // some JSON keys already carry the suffix (snapshots_total)
+            let base = key.strip_suffix("_total").unwrap_or(key);
+            assert!(
+                triples
+                    .iter()
+                    .any(|(name, _, _)| *name == format!("oasis_{base}_total")),
+                "JSON counter '{key}' missing from the Prometheus triples"
+            );
+        }
+    }
+
+    #[test]
+    fn request_histograms_accumulate_per_endpoint() {
+        let m = ServerMetrics::default();
+        m.observe_request("GET /healthz", 0.001);
+        m.observe_request("GET /healthz", 0.002);
+        m.observe_request("POST /sessions/{name}/step", 0.1);
+        let hists = m.endpoint_hists();
+        assert_eq!(hists.len(), 2);
+        let (ref label, ref h) = hists[0];
+        assert_eq!(label, "GET /healthz");
+        assert_eq!(h.count(), 2);
+        assert_eq!(hists[1].1.count(), 1);
     }
 }

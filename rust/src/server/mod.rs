@@ -241,9 +241,46 @@
 //! | `GET /artifacts` | `{"artifacts": [status…]}` (name-sorted) |
 //! | `GET /artifacts/{name}` | one artifact's status (incl. `queries` served) |
 //! | `DELETE /artifacts/{name}` | unload a hosted artifact |
-//! | `GET /metrics` | `{"uptime_secs", "server": counters, "sessions": […], "artifacts": […]}` |
-//! | `GET /healthz` | `{"ok": true}` |
+//! | `GET /metrics` | `{"uptime_secs", "start_time_unix_secs", "version", "server": counters, "sessions": […], "artifacts": […]}` |
+//! | `GET /healthz` | `{"ok": true, "uptime_secs", "start_time_unix_secs", "version"}` |
 //! | `POST /shutdown` | stop accepting, tear down all sessions |
+//!
+//! ## Observability
+//!
+//! Every latency the server reports is a log₂-bucketed histogram
+//! ([`crate::obs::hist`]) carrying `count`/`mean_ms`/`last_ms`/`max_ms`
+//! **plus** `p50_ms`/`p90_ms`/`p99_ms` quantile estimates: the
+//! per-session `step_latency` in the status/metrics JSON, and
+//! per-endpoint request durations recorded around every dispatched
+//! request (labels are normalized — `POST /sessions/train-7/step`
+//! records under `POST /sessions/{name}/step`, so the label set stays
+//! bounded).
+//!
+//! `GET /metrics` additionally serves **Prometheus text exposition**
+//! (version 0.0.4) when asked — via the query parameter
+//! `?format=prometheus`, or an `Accept` header mentioning `text/plain`
+//! or `openmetrics`:
+//!
+//! ```bash
+//! curl localhost:7437/metrics?format=prometheus
+//! curl -H 'Accept: text/plain' localhost:7437/metrics
+//! ```
+//!
+//! The page carries `oasis_build_info{version=…}`,
+//! `oasis_start_time_seconds`, `oasis_uptime_seconds`, every JSON
+//! counter as an `oasis_*_total` counter, request durations as
+//! cumulative `oasis_http_request_duration_seconds_bucket{endpoint=…}`
+//! histogram series (`_sum`/`_count` included), per-session step
+//! histograms (`oasis_session_steps_total`,
+//! `oasis_session_step_duration_seconds`, `oasis_session_columns`,
+//! `oasis_session_error_estimate`), and — for live distributed
+//! (oasis-p) sessions — per-worker gauges scraped mid-run
+//! (`oasis_worker_heartbeat_age_seconds`, `oasis_worker_reshards_total`,
+//! `oasis_worker_wire_bytes_total`, …) labeled
+//! `{session="…", worker="…"}`. `oasis promcheck --port P` scrapes and
+//! validates a page end to end ([`crate::obs::prom::validate`] — the CI
+//! smoke jobs run exactly that). JSON remains the default rendering and
+//! is unchanged apart from the added fields above.
 //!
 //! ## Consistency guarantees
 //!
@@ -297,17 +334,26 @@ pub struct ServerState {
     pub config: ServerConfig,
     pub metrics: ServerMetrics,
     pub started: Instant,
+    /// Wall-clock start time (Unix seconds), for
+    /// `oasis_start_time_seconds` and `/healthz` — the monotonic
+    /// [`started`](ServerState::started) clock drives `uptime_secs`.
+    pub start_unix_secs: f64,
     stop: AtomicBool,
 }
 
 impl ServerState {
     fn new(config: ServerConfig) -> ServerState {
+        let start_unix_secs = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
         ServerState {
             registry: Registry::new(),
             artifacts: ArtifactRegistry::new(),
             config,
             metrics: ServerMetrics::default(),
             started: Instant::now(),
+            start_unix_secs,
             stop: AtomicBool::new(false),
         }
     }
@@ -419,7 +465,12 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
     loop {
         match http::read_request(&mut reader, &mut writer) {
             Ok(Some(req)) => {
+                let t0 = Instant::now();
                 let resp = handlers::route(&state, &req);
+                state.metrics.observe_request(
+                    &handlers::endpoint_label(&req),
+                    t0.elapsed().as_secs_f64(),
+                );
                 // check the stop flag *after* routing so /shutdown closes
                 // its own connection
                 let close = req.wants_close() || state.stopping();

@@ -20,12 +20,12 @@
 //! cached snapshot) that `/metrics`, `GET /sessions/{name}` and queries
 //! read lock-only.
 
-use super::metrics::LatencyStats;
 use super::protocol::{CreateRequest, Method};
 use crate::data::Dataset;
 use crate::engine::{ResolvedRun, RunData, SessionBuilder};
 use crate::kernels::Kernel;
 use crate::nystrom::NystromApprox;
+use crate::obs::Hist;
 use crate::sampling::{SamplerSession, StepOutcome, StopReason, StoppingRule};
 use crate::util::json::Json;
 use crate::Result;
@@ -64,7 +64,9 @@ pub struct SessionStats {
     /// The session's own selection-work clock (see
     /// [`SamplerSession::selection_secs`]).
     pub selection_secs: f64,
-    pub step_latency: LatencyStats,
+    /// Per-step selection latencies (log₂ buckets; `/metrics` renders
+    /// the p50/p90/p99 estimates alongside mean/last/max).
+    pub step_latency: Hist,
     /// Message of the first step error, if one occurred.
     pub failed: Option<String>,
     /// Per-worker coordinator counters (distributed sessions only; see

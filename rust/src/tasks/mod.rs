@@ -233,6 +233,7 @@ impl FittedTask {
     /// Fit `cfg`'s task on an approximation. O(nk² + k³) for every task;
     /// the full n×n G̃ is never formed.
     pub fn fit(approx: &NystromApprox, cfg: &TaskConfig) -> Result<TaskFit> {
+        let _span = crate::obs::span("task_fit", "tasks");
         cfg.validate()?;
         Ok(match cfg.kind {
             TaskKind::Krr => {
@@ -273,6 +274,7 @@ impl FittedTask {
         selected: &Dataset,
         points: &[Vec<f64>],
     ) -> Result<TaskPrediction> {
+        let _span = crate::obs::span("task_predict", "tasks");
         self.check_landmarks(selected)?;
         Ok(match self {
             FittedTask::Krr(m) => {

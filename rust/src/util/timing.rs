@@ -36,10 +36,15 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, sw.secs())
 }
 
-/// Summary statistics over a sample of measurements.
+/// Summary statistics over a sample of measurements. Non-finite samples
+/// (NaN, ±∞ — e.g. a bench rep that divided by a zero elapsed count)
+/// are excluded from every statistic and reported in `skipped`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// finite samples the statistics cover.
     pub n: usize,
+    /// non-finite samples excluded from the statistics.
+    pub skipped: usize,
     pub mean: f64,
     pub std: f64,
     pub min: f64,
@@ -50,15 +55,31 @@ pub struct Summary {
 impl Summary {
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of(empty)");
-        let n = xs.len();
-        let mean = xs.iter().sum::<f64>() / n as f64;
+        let mut sorted: Vec<f64> =
+            xs.iter().copied().filter(|x| x.is_finite()).collect();
+        let skipped = xs.len() - sorted.len();
+        if sorted.is_empty() {
+            // every sample was NaN/∞: keep the contract total-order safe
+            // instead of panicking mid-bench
+            return Summary {
+                n: 0,
+                skipped,
+                mean: f64::NAN,
+                std: f64::NAN,
+                min: f64::NAN,
+                median: f64::NAN,
+                max: f64::NAN,
+            };
+        }
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
-            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+            sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+                / (n - 1) as f64
         } else {
             0.0
         };
-        let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let median = if n % 2 == 1 {
             sorted[n / 2]
         } else {
@@ -66,6 +87,7 @@ impl Summary {
         };
         Summary {
             n,
+            skipped,
             mean,
             std: var.sqrt(),
             min: sorted[0],
@@ -122,6 +144,24 @@ mod tests {
         let s = Summary::of(&[3.0]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.median, 3.0);
+        assert_eq!(s.skipped, 0);
+    }
+
+    #[test]
+    fn summary_skips_non_finite_instead_of_panicking() {
+        // regression: sort_by(partial_cmp().unwrap()) panicked on NaN
+        let s = Summary::of(&[2.0, f64::NAN, 1.0, f64::INFINITY, 3.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.skipped, 2);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        // an all-bad sample reports NaN stats rather than panicking
+        let bad = Summary::of(&[f64::NAN, f64::NEG_INFINITY]);
+        assert_eq!(bad.n, 0);
+        assert_eq!(bad.skipped, 2);
+        assert!(bad.median.is_nan());
     }
 
     #[test]

@@ -878,3 +878,113 @@ fn oasis_p_session_over_socket() {
 
     stop_server(addr, join);
 }
+
+/// Observability surface over the socket: `/healthz` reports uptime and
+/// build info, and the Prometheus rendering of `/metrics` passes the
+/// exposition checker while carrying the per-endpoint request histograms
+/// and per-session step histograms produced by real traffic.
+#[test]
+fn prometheus_exposition_and_healthz_over_socket() {
+    let (addr, join) = start_server();
+
+    let (status, h) = request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "{h}");
+    assert!(h.get("uptime_secs").and_then(Json::as_f64).unwrap() >= 0.0);
+    assert!(h.get("start_time_unix_secs").and_then(Json::as_f64).is_some());
+    assert_eq!(
+        h.get("version").and_then(Json::as_str),
+        Some(env!("CARGO_PKG_VERSION"))
+    );
+
+    // traffic across several endpoints so the histograms have samples
+    let create = r#"{"name":"pm",
+        "dataset":{"generator":"two-moons","n":200,"seed":2},
+        "method":"oasis","max_cols":20,"init_cols":4,"seed":5}"#;
+    let (status, j) = request(addr, "POST", "/sessions", create);
+    assert_eq!(status, 200, "{j}");
+    let (status, j) = request(addr, "POST", "/sessions/pm/step", r#"{"steps":6}"#);
+    assert_eq!(status, 200, "{j}");
+
+    // the default rendering stays JSON
+    let (status, m) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200, "{m}");
+    assert!(m.get("server").is_some(), "{m}");
+
+    // ?format=prometheus: valid exposition text, not JSON
+    let (status, page) =
+        client_request(addr, "GET", "/metrics?format=prometheus", "")
+            .expect("prometheus scrape");
+    assert_eq!(status, 200, "{page}");
+    oasis::obs::prom::validate(&page)
+        .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{page}"));
+
+    for family in [
+        "# TYPE oasis_build_info gauge",
+        "# TYPE oasis_uptime_seconds gauge",
+        "# TYPE oasis_requests_total counter",
+        "# TYPE oasis_http_request_duration_seconds histogram",
+        "# TYPE oasis_session_step_duration_seconds histogram",
+        "# TYPE oasis_session_steps_total counter",
+    ] {
+        assert!(page.contains(family), "missing {family:?} in:\n{page}");
+    }
+    // per-endpoint request series, with templated session names
+    for series in [
+        r#"oasis_http_request_duration_seconds_bucket{endpoint="POST /sessions""#,
+        r#"oasis_http_request_duration_seconds_count{endpoint="POST /sessions/{name}/step"}"#,
+        r#"oasis_http_request_duration_seconds_sum{endpoint="GET /healthz"}"#,
+    ] {
+        assert!(page.contains(series), "missing {series} in:\n{page}");
+    }
+    // per-session series reflect the traffic above
+    assert!(
+        page.contains(r#"oasis_session_steps_total{session="pm"} 6"#),
+        "{page}"
+    );
+    assert!(
+        page.contains(r#"oasis_session_step_duration_seconds_count{session="pm"} 6"#),
+        "{page}"
+    );
+
+    // Accept-header negotiation selects the same rendering
+    let (status, via_accept) = client_request_accept(
+        addr,
+        "/metrics",
+        "text/plain; version=0.0.4",
+    );
+    assert_eq!(status, 200);
+    assert!(
+        via_accept.contains("# TYPE oasis_requests_total counter"),
+        "Accept negotiation returned:\n{via_accept}"
+    );
+
+    stop_server(addr, join);
+}
+
+/// GET with an explicit Accept header over a raw TcpStream (the shared
+/// `client_request` helper doesn't set one).
+fn client_request_accept(
+    addr: SocketAddr,
+    path: &str,
+    accept: &str,
+) -> (u16, String) {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    write!(
+        stream,
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: {accept}\r\nConnection: close\r\n\r\n"
+    )
+    .expect("send request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
