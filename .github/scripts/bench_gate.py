@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate for the blocked linalg kernels.
+
+Usage: bench_gate.py BENCH_main.json BENCH_ci.json
+
+Compares the gated ``micro`` entries of the current bench run (the
+bench-smoke job's BENCH_ci.json artifact) against the committed baseline
+(BENCH_main.json). The gated entries are the paired kernel benches
+emitted by ``cargo bench --bench perf`` — every micro entry carrying a
+``speedup`` field, which is ``naive_median / kernel_median`` at the same
+shape on the same machine. Ratios are dimensionless, so a slow or fast
+CI runner cancels out of the comparison; absolute medians are printed
+for information but never gated on.
+
+Gate rule: for each required kernel (matmul, syrk, fused_step,
+columns_into) the current speedup must be at least ``baseline / 1.25``
+— i.e. a >25% relative regression fails the job. The 25% tolerance
+absorbs runner-to-runner variance in cache sizes and core counts
+(observed quick-size jitter is well under that); shrink it only after
+collecting enough artifacts to justify a tighter band.
+
+A required kernel missing from the current run fails the gate (a
+renamed or deleted bench must update this script, BENCH_main.json, and
+perf.rs together). Extra micro entries are listed informationally.
+
+Updating the baseline after an intentional kernel change: download the
+PR's ``bench-ci`` artifact and commit its BENCH_ci.json as
+BENCH_main.json in the same PR (see rust/benches/perf.rs header docs).
+"""
+
+import json
+import sys
+
+TOLERANCE = 1.25  # fail below baseline_speedup / TOLERANCE
+REQUIRED = ("matmul", "syrk", "fused_step", "columns_into")
+
+
+def load_gated(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {
+        e["name"]: e for e in doc.get("micro", []) if "speedup" in e
+    }
+
+
+def fmt_ms(entry, key):
+    v = entry.get(key)
+    return f"{v:8.3f}" if isinstance(v, (int, float)) else "       —"
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} BENCH_main.json BENCH_ci.json")
+    base = load_gated(sys.argv[1])
+    curr = load_gated(sys.argv[2])
+
+    print(f"bench gate: speedup ratios, tolerance ×{TOLERANCE}")
+    print(
+        f"{'kernel':<14} {'base':>7} {'floor':>7} {'current':>8} "
+        f"{'naive_ms':>9} {'kernel_ms':>10}  verdict"
+    )
+    failures = []
+    for name in REQUIRED:
+        b = base.get(name)
+        c = curr.get(name)
+        if c is None:
+            failures.append(f"{name}: missing from current run")
+            print(f"{name:<14} {'—':>7} {'—':>7} {'—':>8} {'—':>9} {'—':>10}  MISSING")
+            continue
+        cur_speedup = c["speedup"]
+        if b is None:
+            # a brand-new pair gates only on being present; it enters the
+            # baseline at the next BENCH_main.json refresh
+            print(
+                f"{name:<14} {'—':>7} {'—':>7} {cur_speedup:8.2f} "
+                f"{fmt_ms(c, 'naive_median_ms'):>9} {fmt_ms(c, 'median_ms'):>10}  new (no baseline)"
+            )
+            continue
+        floor = b["speedup"] / TOLERANCE
+        ok = cur_speedup >= floor
+        if not ok:
+            failures.append(
+                f"{name}: speedup {cur_speedup:.2f} < floor {floor:.2f} "
+                f"(baseline {b['speedup']:.2f})"
+            )
+        print(
+            f"{name:<14} {b['speedup']:7.2f} {floor:7.2f} {cur_speedup:8.2f} "
+            f"{fmt_ms(c, 'naive_median_ms'):>9} {fmt_ms(c, 'median_ms'):>10}  "
+            f"{'ok' if ok else 'REGRESSED'}"
+        )
+
+    extras = sorted(set(curr) - set(REQUIRED))
+    if extras:
+        print("\nungated pairs (informational):")
+        for name in extras:
+            c = curr[name]
+            print(f"  {name:<20} speedup {c['speedup']:6.2f}")
+
+    if failures:
+        print("\nbench gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        print(
+            "If this regression is intentional, refresh BENCH_main.json "
+            "from this run's bench-ci artifact (see rust/benches/perf.rs)."
+        )
+        sys.exit(1)
+    print("\nbench gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,10 @@
 //!   L3 native : Δ colsum (PaperR) vs incremental Δ update; rank-1 R
 //!               update; kernel column generation; end-to-end per-column
 //!               selection throughput for both variants.
+//!   Gate pairs: the blocked linalg kernels (matmul / syrk / fused
+//!               oASIS step / oracle columns_into) timed against naive
+//!               in-bench references — the entries CI's bench-gate job
+//!               compares against the committed `BENCH_main.json`.
 //!   Methods   : per-method wall-ms / k / est. error on one workload
 //!               (the CI bench-smoke trajectory, written to --json).
 //!   Tasks     : per-method downstream quality — KRR held-out error and
@@ -18,24 +22,171 @@
 //! `--json PATH` additionally writes every result as one JSON document
 //! (`{"micro": […], "methods": […], "tasks": […]}`) for the workflow
 //! artifact.
+//!
+//! # The bench-gate pairs and their baseline
+//!
+//! Each gate pair runs the naive reference and the shipped kernel at
+//! the same shape with the same data, **asserts bit-identity between
+//! the two results** (the repo's accumulation-order invariant — see
+//! `rust/src/linalg/matrix.rs`; a panic here fails bench-smoke), and
+//! records `speedup = naive_median / kernel_median` in the `micro`
+//! JSON under the stable names `matmul`, `syrk`, `fused_step`, and
+//! `columns_into`. The `bench-gate` CI job compares those *ratios*
+//! (dimensionless, so slow vs fast runners cancel) against the
+//! committed `BENCH_main.json` and fails on a >25% regression.
+//!
+//! Updating the baseline after an intentional kernel change:
+//!   1. let CI's bench-smoke job run on the PR branch,
+//!   2. download its `bench-ci` artifact (`BENCH_ci.json`),
+//!   3. commit it as `BENCH_main.json` in the same PR.
+//!
+//! Future kernel edits must keep the per-element increasing-k
+//! accumulation order (and therefore bit-identical outputs); the
+//! in-bench assertions plus `rust/tests/properties.rs` pin it.
 
 use oasis::bench_support::{bench, BenchConfig, BenchResult};
 use oasis::data::generators::two_moons;
-use oasis::kernels::{kernel_column_into, Gaussian};
+use oasis::data::Dataset;
+use oasis::kernels::{kernel_column_into, Gaussian, Kernel};
+use oasis::linalg::Mat;
 use oasis::nystrom::relative_frobenius_error;
 use oasis::runtime::Accel;
 use oasis::sampling::{
     adaptive_random::AdaptiveRandom,
     farahat::Farahat,
     icd::IncompleteCholesky,
-    oasis::{Oasis, Variant},
+    oasis::{fused_step_update, Oasis, Variant},
     sis::Sis,
-    ColumnSampler, ImplicitOracle,
+    ColumnOracle, ColumnSampler, ImplicitOracle,
 };
 use oasis::seed::permutation_accuracy;
 use oasis::tasks::{FittedTask, TaskConfig, TaskKind, TaskPrediction};
 use oasis::util::args::Args;
 use oasis::util::json::Json;
+use oasis::util::parallel;
+use oasis::util::rng::Pcg64;
+
+/// A gated bench pair: the shipped kernel vs its naive in-bench
+/// reference at the same shape. `speedup()` is the machine-portable
+/// ratio the CI bench-gate compares against the committed baseline.
+struct Paired {
+    name: &'static str,
+    naive: BenchResult,
+    fast: BenchResult,
+}
+
+impl Paired {
+    fn speedup(&self) -> f64 {
+        self.naive.summary.median / self.fast.summary.median
+    }
+}
+
+/// Naive ijk triple loop — the reference the blocked `Mat::matmul` must
+/// match bit for bit.
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0;
+            for kk in 0..a.cols {
+                s += a.at(i, kk) * b.at(kk, j);
+            }
+            out.data[i * b.cols + j] = s;
+        }
+    }
+    out
+}
+
+/// Naive ΦᵀΦ triple loop (Φ stored k×m like `Mat::syrk` expects).
+fn naive_syrk(a: &Mat) -> Mat {
+    let (k, m) = (a.rows, a.cols);
+    let mut out = Mat::zeros(m, m);
+    for i in 0..m {
+        for j in 0..m {
+            let mut s = 0.0;
+            for kk in 0..k {
+                s += a.at(kk, i) * a.at(kk, j);
+            }
+            out.data[i * m + j] = s;
+        }
+    }
+    out
+}
+
+/// The pre-fusion oASIS step arithmetic: the threaded diff sweep
+/// followed by a *separate* threaded Δ pass (what `fused_step_update`
+/// replaced — kept here as the gate reference).
+#[allow(clippy::too_many_arguments)]
+fn two_pass_step_update(
+    c: &[f64],
+    n: usize,
+    q: &[f64],
+    col: &[f64],
+    s: f64,
+    diff: &mut [f64],
+    delta: &mut [f64],
+    threads: usize,
+) {
+    parallel::for_each_chunk_mut(diff, 1, threads, |range, chunk| {
+        let (lo, hi) = (range.start, range.end);
+        for (o, &cv) in chunk.iter_mut().zip(&col[lo..hi]) {
+            *o = -cv;
+        }
+        for (t, &qt) in q.iter().enumerate() {
+            if qt == 0.0 {
+                continue;
+            }
+            let ct = &c[t * n + lo..t * n + hi];
+            for (o, &cv) in chunk.iter_mut().zip(ct) {
+                *o += qt * cv;
+            }
+        }
+    });
+    let diff_ro: &[f64] = diff;
+    parallel::for_each_chunk_mut(delta, 1, threads, |range, chunk| {
+        for (local, i) in range.clone().enumerate() {
+            let dv = diff_ro[i];
+            chunk[local] -= s * dv * dv;
+        }
+    });
+}
+
+/// The pre-PR `ImplicitOracle::columns_into`: per-entry virtual `eval`
+/// calls through strided point access (the gate reference).
+fn per_entry_columns_into(
+    ds: &Dataset,
+    kernel: &dyn Kernel,
+    js: &[usize],
+    out: &mut Mat,
+) {
+    let n = ds.n();
+    let k = js.len();
+    assert_eq!((out.rows, out.cols), (n, k));
+    let pts: Vec<&[f64]> = js.iter().map(|&j| ds.point(j)).collect();
+    let threads = if n * k >= 16_384 { parallel::default_threads() } else { 1 };
+    parallel::for_each_chunk_mut(&mut out.data, k, threads, |range, chunk| {
+        for (local, i) in range.clone().enumerate() {
+            let zi = ds.point(i);
+            let dst = &mut chunk[local * k..(local + 1) * k];
+            for (o, &zj) in dst.iter_mut().zip(&pts) {
+                *o = kernel.eval(zi, zj);
+            }
+        }
+    });
+}
+
+/// The gate pairs' bit-identity assertion: a divergence here means a
+/// kernel broke the accumulation-order invariant — fail the bench run.
+fn assert_bits_equal(what: &str, a: &[f64], b: &[f64]) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: bit divergence at index {i}: {x:e} vs {y:e}"
+        );
+    }
+}
 
 fn main() {
     let args = Args::from_env();
@@ -138,6 +289,142 @@ fn main() {
                 .k()
         });
         record(&mut micro, res);
+    }
+
+    // the bench-gate pairs: blocked kernels vs naive references. Stable
+    // names (matmul / syrk / fused_step / columns_into) are what
+    // .github/scripts/bench_gate.py keys on — keep them when renaming.
+    println!("\n== bench-gate pairs (blocked kernels vs naive) ==");
+    let gate_cfg = BenchConfig { warmup: 1, reps: if quick { 5 } else { 9 } };
+    let mut pairs: Vec<Paired> = Vec::new();
+    let mut grng = Pcg64::new(42);
+
+    // matmul: blocked MR×NB row-quad kernel vs the strided ijk loop
+    let (mm_m, mm_k, mm_n) =
+        if quick { (160, 160, 160) } else { (384, 384, 384) };
+    let mut ga = Mat::zeros(mm_m, mm_k);
+    grng.fill_normal(&mut ga.data);
+    let mut gb = Mat::zeros(mm_k, mm_n);
+    grng.fill_normal(&mut gb.data);
+    assert_bits_equal("matmul", &naive_matmul(&ga, &gb).data, &ga.matmul(&gb).data);
+    let naive = bench(
+        &format!("matmul naive ijk ({mm_m}×{mm_k}×{mm_n})"),
+        &gate_cfg,
+        || naive_matmul(&ga, &gb).data[0],
+    );
+    let fast = bench(
+        &format!("matmul blocked ({mm_m}×{mm_k}×{mm_n})"),
+        &gate_cfg,
+        || ga.matmul(&gb).data[0],
+    );
+    pairs.push(Paired { name: "matmul", naive, fast });
+
+    // syrk: the dedicated ΦᵀΦ Gram kernel vs the full ijk product
+    let (sy_k, sy_m) = if quick { (1_200, 96) } else { (4_000, 192) };
+    let mut phi = Mat::zeros(sy_k, sy_m);
+    grng.fill_normal(&mut phi.data);
+    assert_bits_equal("syrk", &naive_syrk(&phi).data, &phi.syrk().data);
+    let naive = bench(
+        &format!("syrk naive ijk ({sy_m}×{sy_m} from k={sy_k})"),
+        &gate_cfg,
+        || naive_syrk(&phi).data[0],
+    );
+    let fast = bench(
+        &format!("syrk blocked ({sy_m}×{sy_m} from k={sy_k})"),
+        &gate_cfg,
+        || phi.syrk().data[0],
+    );
+    pairs.push(Paired { name: "syrk", naive, fast });
+
+    // fused oASIS step: one pass over the new column updating diff and Δ
+    // vs the pre-fusion two-sweep arithmetic
+    let (fs_n, fs_k) = if quick { (60_000, 8) } else { (200_000, 8) };
+    let fs_s = 0.35;
+    let fs_threads = parallel::default_threads();
+    let mut fs_c = vec![0.0f64; fs_k * fs_n];
+    grng.fill_normal(&mut fs_c);
+    let mut fs_q = vec![0.0f64; fs_k];
+    grng.fill_normal(&mut fs_q);
+    let mut fs_col = vec![0.0f64; fs_n];
+    grng.fill_normal(&mut fs_col);
+    let mut fs_delta0 = vec![0.0f64; fs_n];
+    grng.fill_normal(&mut fs_delta0);
+    let mut fs_diff = vec![0.0f64; fs_n];
+    let mut fs_delta = fs_delta0.clone();
+    {
+        let (mut diff_b, mut delta_b) = (vec![0.0f64; fs_n], fs_delta0.clone());
+        two_pass_step_update(
+            &fs_c, fs_n, &fs_q, &fs_col, fs_s, &mut fs_diff, &mut fs_delta,
+            fs_threads,
+        );
+        fused_step_update(
+            &fs_c, fs_n, &fs_q, &fs_col, fs_s, &mut diff_b, &mut delta_b,
+            fs_threads,
+        );
+        assert_bits_equal("fused_step diff", &fs_diff, &diff_b);
+        assert_bits_equal("fused_step delta", &fs_delta, &delta_b);
+    }
+    let naive = bench(
+        &format!("step_update two-pass (n={fs_n}, k={fs_k})"),
+        &gate_cfg,
+        || {
+            fs_delta.copy_from_slice(&fs_delta0);
+            two_pass_step_update(
+                &fs_c, fs_n, &fs_q, &fs_col, fs_s, &mut fs_diff, &mut fs_delta,
+                fs_threads,
+            );
+            fs_delta[0]
+        },
+    );
+    let fast = bench(
+        &format!("step_update fused (n={fs_n}, k={fs_k})"),
+        &gate_cfg,
+        || {
+            fs_delta.copy_from_slice(&fs_delta0);
+            fused_step_update(
+                &fs_c, fs_n, &fs_q, &fs_col, fs_s, &mut fs_diff, &mut fs_delta,
+                fs_threads,
+            );
+            fs_delta[0]
+        },
+    );
+    pairs.push(Paired { name: "fused_step", naive, fast });
+
+    // oracle columns_into: shard-local contiguous row blocks through
+    // Kernel::eval_rows vs the per-entry virtual-dispatch loop
+    let ci_oracle = ImplicitOracle::new(&ds, &kern);
+    let ci_js: Vec<usize> = (0..k).map(|t| (t * 97) % n).collect();
+    {
+        let mut want = Mat::zeros(n, k);
+        per_entry_columns_into(&ds, &kern, &ci_js, &mut want);
+        let mut got = Mat::zeros(n, k);
+        ci_oracle.columns_into(&ci_js, &mut got);
+        assert_bits_equal("columns_into", &want.data, &got.data);
+    }
+    let naive = bench(
+        &format!("columns_into per-entry (n={n}, ℓ={k})"),
+        &gate_cfg,
+        || {
+            let mut out = Mat::zeros(n, k);
+            per_entry_columns_into(&ds, &kern, &ci_js, &mut out);
+            out.data[0]
+        },
+    );
+    let fast = bench(
+        &format!("columns_into blocked (n={n}, ℓ={k})"),
+        &gate_cfg,
+        || {
+            let mut out = Mat::zeros(n, k);
+            ci_oracle.columns_into(&ci_js, &mut out);
+            out.data[0]
+        },
+    );
+    pairs.push(Paired { name: "columns_into", naive, fast });
+
+    for p in &pairs {
+        println!("{}", p.naive.report());
+        println!("{}", p.fast.report());
+        println!("{:14} speedup ×{:.2}", p.name, p.speedup());
     }
 
     // PJRT delta artifact vs native sweep at the artifact shape
@@ -303,26 +590,33 @@ fn main() {
 
     // one JSON document for the CI workflow artifact
     if let Some(path) = args.get("json") {
+        let mut micro_json: Vec<Json> = micro
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("median_ms", Json::Num(r.summary.median * 1e3)),
+                    ("min_ms", Json::Num(r.summary.min * 1e3)),
+                    ("max_ms", Json::Num(r.summary.max * 1e3)),
+                    ("reps", Json::Num(r.summary.n as f64)),
+                ])
+            })
+            .collect();
+        // gate pairs carry the dimensionless speedup the bench-gate
+        // job diffs against BENCH_main.json
+        for p in &pairs {
+            micro_json.push(Json::obj(vec![
+                ("name", Json::Str(p.name.to_string())),
+                ("median_ms", Json::Num(p.fast.summary.median * 1e3)),
+                ("naive_median_ms", Json::Num(p.naive.summary.median * 1e3)),
+                ("speedup", Json::Num(p.speedup())),
+                ("reps", Json::Num(p.fast.summary.n as f64)),
+            ]));
+        }
         let doc = Json::obj(vec![
             ("version", Json::Num(1.0)),
             ("quick", Json::Bool(quick)),
-            (
-                "micro",
-                Json::Arr(
-                    micro
-                        .iter()
-                        .map(|r| {
-                            Json::obj(vec![
-                                ("name", Json::Str(r.name.clone())),
-                                ("median_ms", Json::Num(r.summary.median * 1e3)),
-                                ("min_ms", Json::Num(r.summary.min * 1e3)),
-                                ("max_ms", Json::Num(r.summary.max * 1e3)),
-                                ("reps", Json::Num(r.summary.n as f64)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
+            ("micro", Json::Arr(micro_json)),
             ("methods", Json::Arr(methods)),
             ("tasks", Json::Arr(tasks_quality)),
         ]);

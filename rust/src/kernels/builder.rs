@@ -31,15 +31,18 @@ pub fn kernel_matrix(ds: &Dataset, k: &dyn Kernel) -> Mat {
 }
 
 /// Column j of the kernel matrix, written into `out` (length n).
+/// Each chunk is one [`Kernel::eval_rows`] call over the contiguous
+/// point-major storage — one virtual dispatch per chunk, statically
+/// inlined kernel math inside — instead of a per-entry `eval` loop.
 pub fn kernel_column_into(ds: &Dataset, k: &dyn Kernel, j: usize, out: &mut [f64]) {
     let n = ds.n();
     assert_eq!(out.len(), n);
     let zj = ds.point(j);
+    let dim = ds.dim();
+    let flat = ds.flat();
     let threads = if n >= 4096 { parallel::default_threads() } else { 1 };
     parallel::for_each_chunk_mut(out, 1, threads, |range, chunk| {
-        for (local, i) in range.clone().enumerate() {
-            chunk[local] = k.eval(ds.point(i), zj);
-        }
+        k.eval_rows(&flat[range.start * dim..range.end * dim], dim, zj, chunk);
     });
 }
 
@@ -65,13 +68,14 @@ pub fn kernel_cross_columns_into<P: AsRef<[f64]> + Sync>(
     let n = ds.n();
     let m = points.len();
     assert_eq!(out.len(), m * n, "cross-column buffer must be |points|·n");
+    let dim = ds.dim();
+    let flat = ds.flat();
     parallel::for_each_chunk_mut(out, n, threads, |range, chunk| {
         for (local, t) in range.clone().enumerate() {
             let zt = points[t].as_ref();
-            let col = &mut chunk[local * n..(local + 1) * n];
-            for (i, o) in col.iter_mut().enumerate() {
-                *o = k.eval(ds.point(i), zt);
-            }
+            // one eval_rows sweep per column: a single virtual dispatch
+            // with the shard's rows read contiguously
+            k.eval_rows(flat, dim, zt, &mut chunk[local * n..(local + 1) * n]);
         }
     });
 }

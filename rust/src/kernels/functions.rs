@@ -13,6 +13,30 @@ pub trait Kernel: Sync {
         self.eval(a, a)
     }
 
+    /// Batched evaluation `out[i] = k(rows_i, z)` over the contiguous
+    /// point-major slice `rows` (length `out.len() * dim`) — the form
+    /// the hot column fills use. The caller pays one virtual dispatch
+    /// per row block instead of one per entry, and because default trait
+    /// bodies are compiled per implementing type, `eval` inlines
+    /// statically into the loop. Overrides must evaluate exactly
+    /// `eval(rows_i, z)` in index order: batched and per-entry column
+    /// paths are required (and tested) to agree bit for bit.
+    fn eval_rows(&self, rows: &[f64], dim: usize, z: &[f64], out: &mut [f64]) {
+        if out.is_empty() {
+            return;
+        }
+        if dim == 0 {
+            for o in out.iter_mut() {
+                *o = self.eval(&[], z);
+            }
+            return;
+        }
+        debug_assert_eq!(rows.len(), out.len() * dim);
+        for (o, p) in out.iter_mut().zip(rows.chunks_exact(dim)) {
+            *o = self.eval(p, z);
+        }
+    }
+
     /// Human-readable name for logs/tables.
     fn name(&self) -> &'static str;
 
@@ -279,6 +303,37 @@ mod tests {
             );
             assert_eq!(rebuilt.params(), Some(p));
         }
+    }
+
+    /// The batched `eval_rows` default must agree bit for bit with the
+    /// per-entry `eval` loop for every concrete kernel — the column
+    /// fills rely on this to devirtualize without changing results.
+    #[test]
+    fn eval_rows_bit_equals_per_entry_eval() {
+        let dim = 3;
+        let rows: Vec<f64> =
+            (0..7 * dim).map(|i| (i as f64 * 0.37 - 2.0).sin()).collect();
+        let z = [0.4, -1.2, 0.9];
+        let kernels: Vec<Box<dyn Kernel + Send + Sync>> = vec![
+            Box::new(Gaussian::new(0.8)),
+            Box::new(Linear),
+            Box::new(Laplacian::new(1.3)),
+            Box::new(Polynomial { degree: 2, offset: 0.25 }),
+        ];
+        for k in kernels {
+            let mut out = vec![0.0; 7];
+            k.eval_rows(&rows, dim, &z, &mut out);
+            for (i, &got) in out.iter().enumerate() {
+                let want = k.eval(&rows[i * dim..(i + 1) * dim], &z);
+                assert_eq!(got.to_bits(), want.to_bits(), "{} row {i}", k.name());
+            }
+        }
+        // degenerate shapes stay well-defined
+        let mut empty: [f64; 0] = [];
+        Linear.eval_rows(&[], 3, &z, &mut empty);
+        let mut two = [0.0; 2];
+        Gaussian::new(1.0).eval_rows(&[], 0, &[], &mut two);
+        assert_eq!(two, [1.0, 1.0]);
     }
 
     #[test]

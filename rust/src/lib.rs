@@ -218,6 +218,31 @@
 //! per-endpoint request-duration histograms with p50/p90/p99, and live
 //! per-worker oASIS-P gauges — from `GET /metrics?format=prometheus`
 //! ([`obs::prom`], protocol details in the [`server`] docs).
+//!
+//! # Performance
+//!
+//! The dense linalg core ([`linalg::matrix`]) is cache-blocked: `matmul`
+//! tiles its outer i/j loops (4-row quads × 256-column blocks),
+//! `t_matmul` streams `AᵀB` in 32-row tiles without materializing the
+//! transpose, and the dedicated Gram kernel [`linalg::Mat::syrk`]
+//! computes `AᵀA` at half the flops and mirrors the triangle — the path
+//! under [`nystrom::nystrom_factor`] eigensolves and the KRR normal
+//! equations. The oASIS step recurrence runs as one fused sweep
+//! ([`sampling::oasis::fused_step_update`]), and the implicit oracle
+//! batches kernel columns through [`kernels::Kernel::eval_rows`] — one
+//! virtual dispatch per contiguous row block instead of one per entry.
+//! Outer blocks thread through [`util::parallel`].
+//!
+//! One constraint governs all of it: **blocking may reorder which
+//! output element is computed next, never the k-term accumulation order
+//! within an element** (single accumulator, ascending k). That keeps
+//! every kernel bit-identical to its naive reference, so selection
+//! sequences and stored-artifact factors are byte-stable across kernel
+//! rewrites — asserted by property tests, a naive in-test
+//! reimplementation of the whole selection loop, and the paired
+//! benches in `benches/perf.rs`, whose speedup ratios CI's bench-gate
+//! job diffs against the committed `BENCH_main.json` (≥25% regressions
+//! fail; baseline-refresh workflow in the perf.rs header).
 
 pub mod bench_support;
 pub mod coordinator;

@@ -1,6 +1,40 @@
 //! Row-major dense matrix with the product kernels the library needs.
+//!
+//! # Bit-identity invariant (read before touching the kernels)
+//!
+//! Every sampler selection sequence, stored artifact, and parity test in
+//! this repo depends on the products below being *bit-reproducible*: the
+//! blocked kernels must return the exact bits the naive triple loops
+//! return. The rule that makes blocking safe is:
+//!
+//! * for each output element, the k-sum is accumulated into a **single
+//!   accumulator in increasing-k order** — tiling may reorder *which
+//!   element* is updated next, never the order of terms within one
+//!   element (no split accumulators, no k-reordering, no FMA contraction
+//!   assumptions);
+//! * the `aik == 0.0` skip is preserved as-is — for finite inputs it is
+//!   bit-neutral (a `+0.0`-initialized accumulator never becomes `-0.0`,
+//!   and adding `±0.0` to such a value changes no bits), and it keeps
+//!   sparse-oracle columns cheap;
+//! * [`Mat::syrk`] computes the upper triangle with that same order and
+//!   mirrors it, which is bit-identical to computing both halves because
+//!   f64 multiplication is bitwise commutative.
+//!
+//! `rust/tests/properties.rs` pins blocked-vs-naive bit equality across
+//! edge shapes, and `benches/perf.rs` re-asserts it on the bench shapes
+//! every CI run.
 
 use crate::util::parallel;
+
+/// Row micro-tile for [`Mat::matmul`]: process MR output rows per pass
+/// over a B block so each loaded B segment is reused MR times from L1.
+const MR: usize = 4;
+/// Column block: B/out segments of NB f64 (2 KiB) keep the working set
+/// (MR out segments + one B segment) far under L1 size.
+const NB: usize = 256;
+/// Row tile for [`Mat::t_matmul`] / [`Mat::syrk`]: bounds the out tile a
+/// thread revisits per column block to TB × NB f64 (64 KiB, L2-hot).
+const TB: usize = 32;
 
 /// Row-major dense f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -95,49 +129,87 @@ impl Mat {
         out
     }
 
-    /// Matrix product `self * other` (blocked over rows, threaded when big).
+    /// Matrix product `self * other` — cache-blocked (MR row micro-tiles
+    /// × NB column blocks), threaded over row chunks when big. Results
+    /// are bit-identical to the naive ikj/ijk loops (module docs).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul dims");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
+        if m == 0 || k == 0 || n == 0 {
+            return out;
+        }
         let threads = if m * k * n > 1 << 18 { parallel::default_threads() } else { 1 };
         let a = &self.data;
         let b = &other.data;
         parallel::for_each_chunk_mut(&mut out.data, n, threads, |range, chunk| {
-            for (local, i) in range.clone().enumerate() {
-                let orow = &mut chunk[local * n..(local + 1) * n];
-                let arow = &a[i * k..(i + 1) * k];
-                // ikj loop order: stream through b rows
-                for (kk, &aik) in arow.iter().enumerate() {
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                        *o += aik * bv;
-                    }
-                }
-            }
+            matmul_rows(a, b, k, n, range.start, range.end, chunk);
         });
         out
     }
 
-    /// `selfᵀ * other` without materializing the transpose.
+    /// `selfᵀ * other` without materializing the transpose — blocked
+    /// like [`matmul`](Mat::matmul) (TB row tiles × NB column blocks) and
+    /// threaded over output-row chunks when big; previously a serial
+    /// unblocked sweep. Bit-identical to it (module docs).
     pub fn t_matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows, "t_matmul dims");
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        for kk in 0..k {
-            let arow = &self.data[kk * m..(kk + 1) * m];
-            let brow = &other.data[kk * n..(kk + 1) * n];
-            for (i, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
+        if m == 0 || k == 0 || n == 0 {
+            return out;
+        }
+        let threads = if m * k * n > 1 << 18 { parallel::default_threads() } else { 1 };
+        let a = &self.data;
+        let b = &other.data;
+        parallel::for_each_chunk_mut(&mut out.data, n, threads, |range, chunk| {
+            t_matmul_rows(a, b, m, n, k, range.start, range.end, chunk);
+        });
+        out
+    }
+
+    /// Symmetric Gram product `selfᵀ * self` (treating `self` as k×m, the
+    /// k-rows-of-samples layout [`t_matmul`](Mat::t_matmul) uses): the
+    /// dedicated syrk primitive for `ΦᵀΦ` / `BᵀB` shapes. Computes only
+    /// the upper triangle — with the exact per-element accumulation order
+    /// of `self.t_matmul(self)` — and mirrors it, so for finite inputs
+    /// the result is bit-identical to the general product at roughly half
+    /// the flops (module docs give the `−0.0` argument).
+    pub fn syrk(&self) -> Mat {
+        let (k, m) = (self.rows, self.cols);
+        let mut out = Mat::zeros(m, m);
+        if m == 0 || k == 0 {
+            return out;
+        }
+        let threads = if m * m * k > 1 << 18 { parallel::default_threads() } else { 1 };
+        let a = &self.data;
+        parallel::for_each_chunk_mut(&mut out.data, m, threads, |range, chunk| {
+            let mut ib = range.start;
+            while ib < range.end {
+                let ih = (ib + TB).min(range.end);
+                for kk in 0..k {
+                    let arow = &a[kk * m..(kk + 1) * m];
+                    for i in ib..ih {
+                        let aik = arow[i];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let base = (i - range.start) * m;
+                        // upper-triangle row segment j = i..m
+                        let orow = &mut chunk[base + i..base + m];
+                        for (o, &av) in orow.iter_mut().zip(&arow[i..]) {
+                            *o += aik * av;
+                        }
+                    }
                 }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * bv;
-                }
+                ib = ih;
+            }
+        });
+        // mirror the strict lower triangle (threads own disjoint row
+        // chunks above, so the mirror must run after the join)
+        for i in 1..m {
+            for j in 0..i {
+                out.data[i * m + j] = out.data[j * m + i];
             }
         }
         out
@@ -206,6 +278,89 @@ impl Mat {
                 self.data[j * n + i] = avg;
             }
         }
+    }
+}
+
+/// Blocked row-panel kernel behind [`Mat::matmul`]: computes output rows
+/// `lo..hi` (`chunk`) of A·B. Loop order is (row quad, column block, k,
+/// row): for every output element the k-terms still land in a single
+/// accumulator in increasing-k order with the `aik == 0.0` skip of the
+/// original ikj loop, so the result is bit-identical — blocking only buys
+/// L1 reuse of each B segment across MR output rows.
+fn matmul_rows(
+    a: &[f64],
+    b: &[f64],
+    k: usize,
+    n: usize,
+    lo: usize,
+    hi: usize,
+    chunk: &mut [f64],
+) {
+    let mut i = lo;
+    while i < hi {
+        let mr = MR.min(hi - i);
+        let mut jb = 0;
+        while jb < n {
+            let nb = NB.min(n - jb);
+            for kk in 0..k {
+                let bseg = &b[kk * n + jb..kk * n + jb + nb];
+                for r in 0..mr {
+                    let aik = a[(i + r) * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let base = (i + r - lo) * n + jb;
+                    let oseg = &mut chunk[base..base + nb];
+                    for (o, &bv) in oseg.iter_mut().zip(bseg) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+            jb += nb;
+        }
+        i += mr;
+    }
+}
+
+/// Blocked kernel behind [`Mat::t_matmul`]: output rows `lo..hi` of AᵀB
+/// with A stored k×m. Streams the k dimension outermost per (TB × NB)
+/// output tile — A and B rows are read contiguously — while each output
+/// element keeps the single-accumulator increasing-k order and the
+/// `a == 0.0` skip of the original serial sweep (bit-identical).
+fn t_matmul_rows(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    n: usize,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    chunk: &mut [f64],
+) {
+    let mut ib = lo;
+    while ib < hi {
+        let ih = (ib + TB).min(hi);
+        let mut jb = 0;
+        while jb < n {
+            let nb = NB.min(n - jb);
+            for kk in 0..k {
+                let arow = &a[kk * m..(kk + 1) * m];
+                let bseg = &b[kk * n + jb..kk * n + jb + nb];
+                for i in ib..ih {
+                    let aik = arow[i];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let base = (i - lo) * n + jb;
+                    let oseg = &mut chunk[base..base + nb];
+                    for (o, &bv) in oseg.iter_mut().zip(bseg) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+            jb += nb;
+        }
+        ib = ih;
     }
 }
 
@@ -313,6 +468,111 @@ mod tests {
             let b: Vec<f64> = (0..n).map(|i| (i * i) as f64 * 0.01).collect();
             let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - naive).abs() < 1e-9);
+        }
+    }
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for kk in 0..a.cols {
+                    s += a.at(i, kk) * b.at(kk, j);
+                }
+                out.data[i * b.cols + j] = s;
+            }
+        }
+        out
+    }
+
+    fn fill_pseudo(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data);
+        // sprinkle exact zeros so the skip path is exercised
+        for (i, v) in m.data.iter_mut().enumerate() {
+            if i % 17 == 0 {
+                *v = 0.0;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn blocked_matmul_bit_equals_naive_across_tile_edges() {
+        for (m, k, n) in
+            [(1, 1, 1), (3, 5, 255), (4, 2, 256), (5, 7, 257), (9, 3, 300)]
+        {
+            let a = fill_pseudo(m, k, 1);
+            let b = fill_pseudo(k, n, 2);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert_eq!(g.to_bits(), w.to_bits(), "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_products_are_well_defined() {
+        for (m, k, n) in [(0usize, 3usize, 4usize), (3, 0, 4), (3, 4, 0)] {
+            let a = Mat::zeros(m, k);
+            let b = Mat::zeros(k, n);
+            assert_eq!(a.matmul(&b), Mat::zeros(m, n));
+            let at = Mat::zeros(k, m);
+            assert_eq!(at.t_matmul(&b), Mat::zeros(m, n));
+        }
+        assert_eq!(Mat::zeros(0, 5).syrk(), Mat::zeros(5, 5));
+        assert_eq!(Mat::zeros(5, 0).syrk(), Mat::zeros(0, 0));
+    }
+
+    #[test]
+    fn blocked_t_matmul_bit_equals_transpose_matmul() {
+        // (k, m, n) shapes crossing the TB and NB tile edges
+        for (k, m, n) in [(1, 1, 1), (5, 33, 257), (7, 40, 300), (3, 64, 256)] {
+            let a = fill_pseudo(k, m, 3);
+            let b = fill_pseudo(k, n, 4);
+            let got = a.t_matmul(&b);
+            let want = naive_matmul(&a.transpose(), &b);
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert_eq!(g.to_bits(), w.to_bits(), "({k},{m},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_bit_equals_t_matmul_self() {
+        for (k, m) in [(1usize, 1usize), (40, 33), (9, 70), (200, 48)] {
+            let a = fill_pseudo(k, m, 5);
+            let got = a.syrk();
+            let want = a.t_matmul(&a);
+            assert_eq!(got.rows, m);
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert_eq!(g.to_bits(), w.to_bits(), "({k},{m})");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_kernels_bit_equal_naive() {
+        // past the 2^18 flops threading cutoff for all three kernels
+        let a = fill_pseudo(70, 70, 6);
+        let b = fill_pseudo(70, 270, 7);
+        let got = a.matmul(&b);
+        let want = naive_matmul(&a, &b);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        let got = a.t_matmul(&b);
+        let want = naive_matmul(&a.transpose(), &b);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        let tall = fill_pseudo(300, 70, 8);
+        let got = tall.syrk();
+        let want = naive_matmul(&tall.transpose(), &tall);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert_eq!(g.to_bits(), w.to_bits());
         }
     }
 

@@ -24,7 +24,7 @@ pub fn nystrom_factor(approx: &NystromApprox) -> Mat {
 /// rank). Eigenvalues below `rtol * λmax` are dropped.
 pub fn nystrom_eig(approx: &NystromApprox, rtol: f64) -> (Vec<f64>, Mat) {
     let b = nystrom_factor(approx); // n×k
-    let btb = b.t_matmul(&b); // k×k
+    let btb = b.syrk(); // k×k Gram, half the flops of the general product
     let eig = sym_eig(&btb);
     let lmax = eig.vals.first().copied().unwrap_or(0.0).max(0.0);
     let keep: usize = eig.vals.iter().filter(|&&l| l > rtol * lmax && l > 0.0).count();
@@ -86,7 +86,7 @@ mod tests {
     fn eigenvectors_orthonormal() {
         let (_g, approx) = rank2_g();
         let (_vals, u) = nystrom_eig(&approx, 1e-10);
-        let utu = u.t_matmul(&u);
+        let utu = u.syrk();
         assert!(utu.fro_dist(&Mat::eye(2)) < 1e-9);
     }
 

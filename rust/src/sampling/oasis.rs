@@ -401,10 +401,15 @@ impl OasisSession<'_> {
         let _update_span = crate::obs::span("factor_update", "sampling");
         // q = W⁻¹ b where b = C(Λ, best) = row `best` of C
         let q = self.state.q_for(best, k);
-        // diff = C q − c_new
-        self.state.compute_diff(&q, &col, k);
-        if self.variant == Variant::Incremental {
-            self.state.update_delta_inc(&mut self.delta, s);
+        match self.variant {
+            // fused: diff = C q − c_new and Δᵢ ← Δᵢ − s·diffᵢ² in one
+            // sweep (the Δ chunk is consumed while the diff chunk is
+            // still cache-hot; bit-identical to the two-pass form)
+            Variant::Incremental => {
+                self.state.compute_diff_update_delta(&q, &col, s, &mut self.delta)
+            }
+            // PaperR only needs diff (Δ comes from the colsum rescore)
+            Variant::PaperR => self.state.compute_diff(&q, &col, k),
         }
         self.state.apply_update(&q, &col, s, k, self.variant);
         self.selected[best] = true;
@@ -663,15 +668,25 @@ impl State {
         });
     }
 
-    /// Incremental score update: Δᵢ ← Δᵢ − s·diffᵢ².
-    fn update_delta_inc(&self, delta: &mut [f64], s: f64) {
-        let diff = &self.diff;
-        parallel::for_each_chunk_mut(delta, 1, self.threads, |range, chunk| {
-            for (local, i) in range.clone().enumerate() {
-                let dv = diff[i];
-                chunk[local] -= s * dv * dv;
-            }
-        });
+    /// Fused Incremental-variant step sweep: [`fused_step_update`] over
+    /// this state's diff scratch (see that function for the contract).
+    fn compute_diff_update_delta(
+        &mut self,
+        q: &[f64],
+        col: &[f64],
+        s: f64,
+        delta: &mut [f64],
+    ) {
+        fused_step_update(
+            &self.c,
+            self.n,
+            q,
+            col,
+            s,
+            &mut self.diff,
+            delta,
+            self.threads,
+        );
     }
 
     /// Apply Eq. 5 (W⁻¹) and, for PaperR, Eq. 6 (R); append the column.
@@ -719,6 +734,55 @@ impl State {
         self.c.extend_from_slice(col);
         self.k = k + 1;
     }
+}
+
+/// The Incremental-variant step recurrence as one fused sweep: compute
+/// `diff = C q − c_new` and immediately apply `Δᵢ ← Δᵢ − s·diffᵢ²` while
+/// each freshly written diff chunk is still cache-hot — one pass over Δ
+/// folded into the diff sweep instead of the separate O(n) re-read the
+/// two-pass form pays. `c` holds the k = `q.len()` sampled columns
+/// column-major (column t at `c[t*n..(t+1)*n]`); `diff` and `delta` have
+/// length n.
+///
+/// Bit-identity contract: within a chunk the diff computation finishes
+/// (init `−col`, then t-ascending `+= q_t·c_t` skipping `q_t == 0.0` —
+/// exactly `State::compute_diff`'s order) before any Δ element is
+/// touched, and chunk boundaries are shared, so every element sees the
+/// same arithmetic in the same order as the unfused pair. Pinned by a
+/// property test and by the in-test naive reference in
+/// `rust/tests/session.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_step_update(
+    c: &[f64],
+    n: usize,
+    q: &[f64],
+    col: &[f64],
+    s: f64,
+    diff: &mut [f64],
+    delta: &mut [f64],
+    threads: usize,
+) {
+    debug_assert_eq!(diff.len(), n);
+    debug_assert_eq!(delta.len(), n);
+    debug_assert!(c.len() >= q.len() * n);
+    parallel::for_each_chunk_mut2(diff, delta, threads, |range, dchunk, delta_chunk| {
+        let (lo, hi) = (range.start, range.end);
+        for (o, &cv) in dchunk.iter_mut().zip(&col[lo..hi]) {
+            *o = -cv;
+        }
+        for (t, &qt) in q.iter().enumerate() {
+            if qt == 0.0 {
+                continue;
+            }
+            let ct = &c[t * n + lo..t * n + hi];
+            for (o, &cv) in dchunk.iter_mut().zip(ct) {
+                *o += qt * cv;
+            }
+        }
+        for (dl, &dv) in delta_chunk.iter_mut().zip(dchunk.iter()) {
+            *dl -= s * dv * dv;
+        }
+    });
 }
 
 /// argmax of |Δ| over unselected indices; returns (index, |Δ|).

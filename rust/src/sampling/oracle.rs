@@ -165,6 +165,11 @@ impl ColumnOracle for ImplicitOracle<'_> {
 
     /// Batched evaluation: one parallel sweep computes all |js| kernel
     /// columns (the per-column path would launch |js| separate sweeps).
+    /// Rows are processed in contiguous blocks of the point-major data —
+    /// one [`Kernel::eval_rows`] call per (selected point, row block),
+    /// i.e. one virtual dispatch amortized over the whole block with the
+    /// kernel math statically inlined — and each block's column segment
+    /// is then scattered into the row-major output tile while hot.
     fn columns_into(&self, js: &[usize], out: &mut Mat) {
         let n = self.ds.n();
         let k = js.len();
@@ -173,19 +178,30 @@ impl ColumnOracle for ImplicitOracle<'_> {
             return;
         }
         let pts: Vec<&[f64]> = js.iter().map(|&j| self.ds.point(j)).collect();
-        let ds = self.ds;
+        let dim = self.ds.dim();
+        let flat = self.ds.flat();
         let kernel = self.kernel;
+        // block × k output tile + scratch column sized to stay L1-hot
+        let block = (4096 / k).clamp(8, 512);
         parallel::for_each_chunk_mut(
             &mut out.data,
             k,
             batch_threads(n, k),
             |range, chunk| {
-                for (local, i) in range.clone().enumerate() {
-                    let zi = ds.point(i);
-                    let dst = &mut chunk[local * k..(local + 1) * k];
-                    for (o, &zj) in dst.iter_mut().zip(&pts) {
-                        *o = kernel.eval(zi, zj);
+                let mut col = vec![0.0; block.min(range.len())];
+                let mut lo = range.start;
+                while lo < range.end {
+                    let hi = (lo + block).min(range.end);
+                    let rows = &flat[lo * dim..hi * dim];
+                    for (t, &zj) in pts.iter().enumerate() {
+                        let seg = &mut col[..hi - lo];
+                        kernel.eval_rows(rows, dim, zj, seg);
+                        let base = (lo - range.start) * k + t;
+                        for (local, &v) in seg.iter().enumerate() {
+                            chunk[base + local * k] = v;
+                        }
                     }
+                    lo = hi;
                 }
             },
         );

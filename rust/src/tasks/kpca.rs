@@ -100,7 +100,7 @@ mod tests {
         assert_eq!(model.dims(), 3);
         assert_eq!(u.cols, 3);
         // UᵀU = I
-        let utu = u.t_matmul(&u);
+        let utu = u.syrk();
         assert!(utu.fro_dist(&Mat::eye(3)) < 1e-8, "{}", utu.fro_dist(&Mat::eye(3)));
         // the out-of-sample projection of an *in-sample* point reproduces
         // its embedding row (b(xᵢ) = C(i,·) exactly)

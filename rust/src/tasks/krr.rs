@@ -54,8 +54,8 @@ impl KrrModel {
             bail!("krr: label {bad} is not finite");
         }
         let phi = nystrom_factor(approx); // n×k
-        // A = λI + ΦᵀΦ (k×k, SPD for λ > 0)
-        let mut a = phi.t_matmul(&phi);
+        // A = λI + ΦᵀΦ (k×k, SPD for λ > 0; dedicated Gram kernel)
+        let mut a = phi.syrk();
         for i in 0..k {
             *a.at_mut(i, i) += lambda;
         }

@@ -62,6 +62,41 @@ pub fn for_each_chunk_mut<T: Send, F>(
     });
 }
 
+/// Run `f(range, chunk_a, chunk_b)` over two same-length slices split at
+/// identical item boundaries (stride 1), so each invocation sees the
+/// matching windows `a[range]` and `b[range]`. This is the fused-sweep
+/// shape: produce into `a` and immediately consume against `b` while the
+/// chunk is cache-hot, without the second full pass a separate
+/// [`for_each_chunk_mut`] call would make.
+pub fn for_each_chunk_mut2<A: Send, B: Send, F>(
+    a: &mut [A],
+    b: &mut [B],
+    threads: usize,
+    f: F,
+) where
+    F: Fn(std::ops::Range<usize>, &mut [A], &mut [B]) + Sync,
+{
+    assert_eq!(a.len(), b.len(), "for_each_chunk_mut2: slice lengths differ");
+    let n = a.len();
+    let ranges = chunk_ranges(n, threads);
+    if ranges.len() <= 1 {
+        f(0..n, a, b);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest_a = a;
+        let mut rest_b = b;
+        for r in ranges {
+            let (chunk_a, tail_a) = rest_a.split_at_mut(r.end - r.start);
+            let (chunk_b, tail_b) = rest_b.split_at_mut(r.end - r.start);
+            rest_a = tail_a;
+            rest_b = tail_b;
+            let f = &f;
+            scope.spawn(move || f(r, chunk_a, chunk_b));
+        }
+    });
+}
+
 /// Map each range of `0..n` on its own thread and collect results in order.
 pub fn map_ranges<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
 where
@@ -117,6 +152,24 @@ mod tests {
         for item in 0..10 {
             for j in 0..3 {
                 assert_eq!(data[item * 3 + j], item * 10 + j);
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_mut2_pairs_windows() {
+        for (n, t) in [(0usize, 1usize), (1, 4), (17, 3), (64, 8)] {
+            let mut a = vec![0usize; n];
+            let mut b = vec![0usize; n];
+            for_each_chunk_mut2(&mut a, &mut b, t, |range, ca, cb| {
+                for (local, i) in range.clone().enumerate() {
+                    ca[local] = i * 2;
+                    cb[local] = ca[local] + 1;
+                }
+            });
+            for i in 0..n {
+                assert_eq!(a[i], i * 2);
+                assert_eq!(b[i], i * 2 + 1);
             }
         }
     }

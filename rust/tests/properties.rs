@@ -264,6 +264,156 @@ fn prop_json_roundtrip() {
     );
 }
 
+fn bits_equal(what: &str, a: &[f64], b: &[f64]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{what}: bit divergence at {i}: {x:e} vs {y:e}"));
+        }
+    }
+    Ok(())
+}
+
+/// Random matrix with the occasional exact zero, exercising the blocked
+/// kernels' `aik == 0.0` skip (bit-neutral for finite inputs).
+fn holey_mat(g: &mut Gen<'_>, rows: usize, cols: usize) -> Mat {
+    let mut data = g.normal_vec(rows * cols);
+    for v in data.iter_mut().skip(3).step_by(7) {
+        *v = 0.0;
+    }
+    Mat::from_vec(rows, cols, data)
+}
+
+/// The blocked `Mat::matmul` is bit-identical to the naive single-
+/// accumulator ijk loop across edge shapes: empty, 1×n, n×1, and sizes
+/// straddling the MR=4 row quad and NB=256 column block.
+#[test]
+fn prop_blocked_matmul_bit_equals_naive() {
+    check(
+        Config { cases: 48, max_size: 32, ..Default::default() },
+        |g| {
+            let m = g.usize_in(0, 9);
+            let k = g.usize_in(0, 9);
+            let n = g.usize_in(0, 300);
+            let a = holey_mat(g, m, k);
+            let b = holey_mat(g, k, n);
+            let mut want = Mat::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for t in 0..k {
+                        s += a.at(i, t) * b.at(t, j);
+                    }
+                    want.data[i * n + j] = s;
+                }
+            }
+            bits_equal(&format!("matmul {m}×{k}×{n}"), &want.data, &a.matmul(&b).data)
+        },
+    );
+}
+
+/// The blocked `Mat::t_matmul` (AᵀB without materializing Aᵀ) is
+/// bit-identical to the naive loop across TB=32 row-tile edges.
+#[test]
+fn prop_blocked_t_matmul_bit_equals_naive() {
+    check(
+        Config { cases: 48, max_size: 32, ..Default::default() },
+        |g| {
+            let k = g.usize_in(0, 9);
+            let m = g.usize_in(0, 40);
+            let n = g.usize_in(0, 300);
+            let a = holey_mat(g, k, m);
+            let b = holey_mat(g, k, n);
+            let mut want = Mat::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for t in 0..k {
+                        s += a.at(t, i) * b.at(t, j);
+                    }
+                    want.data[i * n + j] = s;
+                }
+            }
+            bits_equal(
+                &format!("t_matmul {k}×{m}ᵀ·{k}×{n}"),
+                &want.data,
+                &a.t_matmul(&b).data,
+            )
+        },
+    );
+}
+
+/// The dedicated Gram kernel `Mat::syrk` (AᵀA with mirrored triangle) is
+/// bit-identical to the naive full product — f64 multiplication is
+/// bitwise commutative, so the mirror introduces no divergence.
+#[test]
+fn prop_syrk_bit_equals_naive() {
+    check(
+        Config { cases: 48, max_size: 32, ..Default::default() },
+        |g| {
+            let k = g.usize_in(0, 9);
+            let m = g.usize_in(0, 70);
+            let a = holey_mat(g, k, m);
+            let mut want = Mat::zeros(m, m);
+            for i in 0..m {
+                for j in 0..m {
+                    let mut s = 0.0;
+                    for t in 0..k {
+                        s += a.at(t, i) * a.at(t, j);
+                    }
+                    want.data[i * m + j] = s;
+                }
+            }
+            bits_equal(&format!("syrk {k}×{m}"), &want.data, &a.syrk().data)
+        },
+    );
+}
+
+/// The fused oASIS step (`fused_step_update`: diff build and Δ update in
+/// one cache-hot pass) is bit-identical to the unfused per-element
+/// reference for any chunking — including a forced q entry of exactly
+/// 0.0, exercising the skip.
+#[test]
+fn prop_fused_step_update_bit_equals_two_pass() {
+    use oasis::sampling::oasis::fused_step_update;
+    check(
+        Config { cases: 48, max_size: 32, ..Default::default() },
+        |g| {
+            let n = g.usize_in(1, 200);
+            let k = g.usize_in(0, 6);
+            let c = g.normal_vec(k * n);
+            let col = g.normal_vec(n);
+            let mut q = g.normal_vec(k);
+            if k > 0 {
+                q[0] = 0.0;
+            }
+            let s = g.f64_in(-2.0, 2.0);
+            let delta0 = g.normal_vec(n);
+            let threads = g.usize_in(1, 4);
+            let mut want_diff = vec![0.0; n];
+            let mut want_delta = delta0.clone();
+            for i in 0..n {
+                let mut d = -col[i];
+                for (t, &qt) in q.iter().enumerate() {
+                    if qt == 0.0 {
+                        continue;
+                    }
+                    d += qt * c[t * n + i];
+                }
+                want_diff[i] = d;
+                want_delta[i] -= s * d * d;
+            }
+            let mut diff = vec![0.0; n];
+            let mut delta = delta0;
+            fused_step_update(&c, n, &q, &col, s, &mut diff, &mut delta, threads);
+            bits_equal(&format!("diff n={n} k={k} t={threads}"), &want_diff, &diff)?;
+            bits_equal(&format!("delta n={n} k={k} t={threads}"), &want_delta, &delta)
+        },
+    );
+}
+
 /// Selected Δ values are non-increasing for oASIS on PSD inputs (greedy
 /// Schur complements shrink as the span grows).
 #[test]

@@ -444,3 +444,166 @@ fn score_below_criterion_stops_externally() {
     assert!(deltas.last().unwrap() < &1e-2);
     assert!(deltas[deltas.len() - 2] >= 1e-2);
 }
+
+/// The blocked-kernel pass must not move a single bit: a fully naive
+/// in-test reimplementation of the pre-blocking Incremental arithmetic —
+/// per-entry kernel evaluation (no `eval_rows` batching), serial i-outer
+/// sweeps, the unfused two-pass Δ update — reproduces the shipped
+/// sampler's selection order, C, and W⁻¹ exactly. If a future kernel
+/// edit reorders any accumulation, this test names the first divergent
+/// element.
+#[test]
+fn oasis_selection_bit_identical_to_naive_reference() {
+    use oasis::kernels::Kernel;
+    use oasis::linalg::{inverse, matrix::dot, Mat};
+    use oasis::util::rng::Pcg64;
+
+    let n = 400;
+    let l = 60;
+    let k0 = 6;
+    let seed = 5u64;
+    let user_tol = 1e-12;
+    let ds = two_moons(n, 0.05, 21);
+    let kern = Gaussian::with_sigma_fraction(&ds, 0.1);
+
+    // --- shipped path (blocked kernels, fused step, batched columns) ---
+    let oracle = ImplicitOracle::new(&ds, &kern);
+    let (approx, trace) =
+        Oasis::new(l, k0, user_tol, seed).sample_traced(&oracle).unwrap();
+
+    // --- naive reference ---
+    let col_of = |j: usize| -> Vec<f64> {
+        (0..n).map(|i| kern.eval(ds.point(i), ds.point(j))).collect()
+    };
+    let d: Vec<f64> = (0..n).map(|i| kern.diag_value(ds.point(i))).collect();
+    let dmax = d.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+    let tol = user_tol.max(1e-12 * dmax.max(1e-300));
+
+    // seed draw, with the same singular-W₀ redraw loop as the sampler
+    let mut rng = Pcg64::new(seed);
+    let mut c: Vec<f64> = Vec::new(); // column-major: column t at [t*n..]
+    let cap = l; // W⁻¹ stride (never affects the arithmetic)
+    let mut winv = vec![0.0; cap * cap];
+    let mut order: Vec<usize>;
+    loop {
+        let cand = rng.sample_without_replacement(n, k0);
+        c.clear();
+        for &j in &cand {
+            c.extend_from_slice(&col_of(j));
+        }
+        let mut w = Mat::zeros(k0, k0);
+        for (ti, &i) in cand.iter().enumerate() {
+            for tj in 0..k0 {
+                *w.at_mut(ti, tj) = c[tj * n + i];
+            }
+        }
+        if let Some(inv) = inverse(&w) {
+            let cond_proxy = inv.max_abs() * w.max_abs();
+            if cond_proxy.is_finite() && cond_proxy <= 1e12 {
+                for i in 0..k0 {
+                    for j in 0..k0 {
+                        winv[i * cap + j] = inv.at(i, j);
+                    }
+                }
+                order = cand;
+                break;
+            }
+        }
+    }
+    let mut selected = vec![false; n];
+    for &j in &order {
+        selected[j] = true;
+    }
+
+    // seed Δ: Δᵢ = dᵢ − bᵢᵀ W⁻¹ bᵢ (same `dot` as the shipped sweep)
+    let mut k = k0;
+    let mut delta = vec![0.0; n];
+    let mut b = vec![0.0; k0];
+    for i in 0..n {
+        for (t, bt) in b.iter_mut().enumerate() {
+            *bt = c[t * n + i];
+        }
+        let mut quad = 0.0;
+        for t in 0..k {
+            quad += b[t] * dot(&winv[t * cap..t * cap + k], &b);
+        }
+        delta[i] = d[i] - quad;
+    }
+
+    // greedy steps: serial argmax, per-entry column, unfused Δ update
+    while k < l {
+        let mut best = usize::MAX;
+        let mut best_abs = -1.0;
+        for (i, &dv) in delta.iter().enumerate() {
+            if selected[i] {
+                continue;
+            }
+            if dv.abs() > best_abs {
+                best_abs = dv.abs();
+                best = i;
+            }
+        }
+        if best == usize::MAX || best_abs < tol {
+            break;
+        }
+        let s = 1.0 / delta[best];
+        let col = col_of(best);
+        let mut bq = vec![0.0; k];
+        for (t, bt) in bq.iter_mut().enumerate() {
+            *bt = c[t * n + best];
+        }
+        let q: Vec<f64> =
+            (0..k).map(|t| dot(&winv[t * cap..t * cap + k], &bq)).collect();
+        // unfused pair: diff sweep (t-ascending per element), then Δ pass
+        let mut diff = vec![0.0; n];
+        for (i, df) in diff.iter_mut().enumerate() {
+            let mut acc = -col[i];
+            for (t, &qt) in q.iter().enumerate() {
+                if qt == 0.0 {
+                    continue;
+                }
+                acc += qt * c[t * n + i];
+            }
+            *df = acc;
+        }
+        for (dl, &dv) in delta.iter_mut().zip(&diff) {
+            *dl -= s * dv * dv;
+        }
+        // Eq. 5 block-inverse update
+        for i in 0..k {
+            let qi = q[i];
+            for j in 0..k {
+                winv[i * cap + j] += s * qi * q[j];
+            }
+            winv[i * cap + k] = -s * qi;
+            winv[k * cap + i] = -s * qi;
+        }
+        winv[k * cap + k] = s;
+        c.extend_from_slice(&col);
+        selected[best] = true;
+        order.push(best);
+        k += 1;
+    }
+
+    // --- identical to the last bit ---
+    assert_eq!(trace.order, order, "selection order diverged from naive");
+    assert_eq!(approx.k(), k);
+    for t in 0..k {
+        for i in 0..n {
+            assert_eq!(
+                approx.c.data[i * k + t].to_bits(),
+                c[t * n + i].to_bits(),
+                "C({i},{t}) diverged"
+            );
+        }
+    }
+    for i in 0..k {
+        for j in 0..k {
+            assert_eq!(
+                approx.winv.data[i * k + j].to_bits(),
+                winv[i * cap + j].to_bits(),
+                "W⁻¹({i},{j}) diverged"
+            );
+        }
+    }
+}
