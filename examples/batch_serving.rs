@@ -1,0 +1,123 @@
+//! Production-style prediction serving, end to end: starts the server
+//! in-process on an ephemeral port, fits a multi-output KRR model once
+//! over the wire, then answers batched predictions on a single
+//! kept-alive connection — the fit-once-predict-many pattern the task
+//! endpoints are built for.
+//!
+//!     cargo run --release --example batch_serving
+//!
+//! What it demonstrates, in order:
+//! - `ClientConn`: a persistent HTTP/1.1 keep-alive client, so the
+//!   sweep below pays one TCP handshake total, not one per request.
+//! - Multi-output KRR: `labels` as per-point rows fits m outputs
+//!   against ONE shared factorization.
+//! - Batched predict: a `predict` array of B points is served as one
+//!   B×k kernel block + one blocked product (bit-identical to B
+//!   single-point calls in f64).
+//! - f32 serving mode: `"f32": true` per request, for throughput-first
+//!   deployments that tolerate ~1e-6 relative error.
+//! - `/metrics`: per-model predict-latency histograms and the
+//!   batch-size distribution under the `"predict"` key.
+
+use oasis::server::http::ClientConn;
+use oasis::server::Server;
+use oasis::util::json::Json;
+
+fn exchange(conn: &mut ClientConn, method: &str, path: &str, body: &str) -> Json {
+    let (status, raw) = conn.request(method, path, body).expect("http exchange");
+    let json = Json::parse(&raw).expect("json body");
+    assert!(status < 400, "{method} {path} → {status}: {json}");
+    json
+}
+
+fn main() {
+    let server = Server::bind("127.0.0.1:0").expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let handle = std::thread::spawn(move || server.run().expect("serve"));
+    println!("server listening on http://{addr}");
+
+    // ONE connection for the whole lifecycle — every exchange below
+    // reuses it (HTTP/1.1 keep-alive is the server default)
+    let mut conn = ClientConn::connect(addr).expect("connect");
+
+    let n = 400;
+    exchange(
+        &mut conn,
+        "POST",
+        "/sessions",
+        &format!(
+            r#"{{"name":"demo",
+                 "dataset":{{"generator":"two-moons","n":{n},"seed":42}},
+                 "max_cols":60,"init_cols":8,"seed":7}}"#
+        ),
+    );
+    exchange(&mut conn, "POST", "/sessions/demo/step", r#"{"steps":40}"#);
+
+    // fit a 2-output KRR model: labels as per-point [class, magnitude]
+    // rows — one factorization is shared across both outputs
+    let rows: Vec<String> = (0..n)
+        .map(|i| format!("[{},{}]", (i % 2) as f64, i as f64 / n as f64))
+        .collect();
+    let fit = exchange(
+        &mut conn,
+        "POST",
+        "/sessions/demo/task",
+        &format!(r#"{{"task":"krr","ridge":1e-3,"labels":[{}]}}"#, rows.join(",")),
+    );
+    println!(
+        "fitted krr: k = {} landmarks, {} outputs",
+        fit.get("k").and_then(Json::as_usize).unwrap(),
+        fit.get("outputs").and_then(Json::as_usize).unwrap_or(1),
+    );
+
+    // batched predict: B points in ONE request → one B×k kernel block,
+    // one blocked product, one response (label-free → cached model)
+    let batch = r#"{"predict":[[0.5,0.25],[-0.5,0.4],[1.2,-0.3],[0.0,0.9]]}"#;
+    let rep = exchange(&mut conn, "POST", "/sessions/demo/task", batch);
+    let preds = rep.get("predictions").and_then(Json::as_arr).unwrap();
+    for (i, p) in preds.iter().enumerate() {
+        println!("point {i}: f(z) = {p}");
+    }
+
+    // same batch in f32 serving mode: kernel row + dot products run in
+    // f32 — compare against the f64 answers above
+    let batch_f32 = r#"{"predict":[[0.5,0.25],[-0.5,0.4],[1.2,-0.3],[0.0,0.9]],"f32":true}"#;
+    let rep32 = exchange(&mut conn, "POST", "/sessions/demo/task", batch_f32);
+    let preds32 = rep32.get("predictions").and_then(Json::as_arr).unwrap();
+    let drift = preds
+        .iter()
+        .zip(preds32)
+        .flat_map(|(a, b)| {
+            let a: Vec<f64> =
+                a.as_arr().map(|v| v.iter().filter_map(Json::as_f64).collect()).unwrap_or_default();
+            let b: Vec<f64> =
+                b.as_arr().map(|v| v.iter().filter_map(Json::as_f64).collect()).unwrap_or_default();
+            a.into_iter().zip(b).map(|(x, y)| (x - y).abs())
+        })
+        .fold(0.0f64, f64::max);
+    println!("max |f64 − f32| across the batch: {drift:.2e}");
+
+    // the predict section of /metrics: per-model latency histograms and
+    // the batch-size distribution
+    let metrics = exchange(&mut conn, "GET", "/metrics", "");
+    if let Some(predict) = metrics.get("predict") {
+        println!(
+            "predict metrics: batch sizes seen = {}, mean batch = {}",
+            predict
+                .get("batch_size")
+                .and_then(|b| b.get("count"))
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            predict
+                .get("batch_size")
+                .and_then(|b| b.get("mean"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        );
+    }
+
+    exchange(&mut conn, "DELETE", "/sessions/demo", "");
+    exchange(&mut conn, "POST", "/shutdown", "");
+    handle.join().expect("server thread");
+    println!("server stopped");
+}

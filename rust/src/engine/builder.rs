@@ -140,19 +140,29 @@ impl SessionBuilder {
         Ok(cfg)
     }
 
-    /// Load one column of a CSV/binary dataset file as labels.
-    fn load_labels(&self, ls: &LabelsSpec) -> Result<Vec<f64>> {
+    /// Load the requested columns of a CSV/binary dataset file as label
+    /// columns (output-major: one `Vec` per requested column, in
+    /// request order). The file is read once regardless of how many
+    /// columns a multi-output fit pulls from it.
+    fn load_labels(&self, ls: &LabelsSpec) -> Result<Vec<Vec<f64>>> {
         let ds = loader::load_dataset(&ls.path, &self.limits)
             .map_err(|e| e.wrap(format!("loading labels '{}'", ls.label)))?;
-        if ls.col >= ds.dim() {
+        if ls.cols.is_empty() {
+            bail!("labels '{}': no columns requested", ls.label);
+        }
+        if let Some(&bad) = ls.cols.iter().find(|&&c| c >= ds.dim()) {
             bail!(
                 "labels '{}': column {} requested but the file has {} columns",
                 ls.label,
-                ls.col,
+                bad,
                 ds.dim()
             );
         }
-        Ok((0..ds.n()).map(|i| ds.point(i)[ls.col]).collect())
+        Ok(ls
+            .cols
+            .iter()
+            .map(|&c| (0..ds.n()).map(|i| ds.point(i)[c]).collect())
+            .collect())
     }
 }
 

@@ -243,17 +243,58 @@ pub struct RunSpec {
     pub warm_start: Option<WarmStartSpec>,
 }
 
-/// Where a task's training labels come from: a column of a CSV or
-/// binary dataset file (one label per data point, same row order as the
-/// training data). `label` is the caller's spelling (for errors and
-/// provenance); `path` is where the bytes live — the serving layer
-/// resolves it under `--fs-root` like every other client path.
+/// Where a task's training labels come from: one or more columns of a
+/// CSV or binary dataset file (one label per data point per column,
+/// same row order as the training data). `label` is the caller's
+/// spelling (for errors and provenance); `path` is where the bytes live
+/// — the serving layer resolves it under `--fs-root` like every other
+/// client path.
 #[derive(Clone, Debug)]
 pub struct LabelsSpec {
     pub label: String,
     pub path: PathBuf,
-    /// Column of the file to read labels from.
-    pub col: usize,
+    /// Columns of the file to read labels from, in output order. One
+    /// column is single-output KRR; several fit a multi-output model
+    /// sharing one factorization.
+    pub cols: Vec<usize>,
+}
+
+impl LabelsSpec {
+    /// Parse the CLI/server column-list spelling: comma-separated
+    /// indices and inclusive ranges (`"0"`, `"0,3"`, `"1-4,7"`). One
+    /// shared parser so `--label-col` and the server's `label_cols`
+    /// cannot drift.
+    pub fn parse_cols(s: &str) -> Result<Vec<usize>> {
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("label columns: empty entry in '{s}'");
+            }
+            let parse_one = |t: &str| -> Result<usize> {
+                t.parse().map_err(|_| {
+                    anyhow!("label columns: '{t}' is not a column index")
+                })
+            };
+            match part.split_once('-') {
+                Some((a, b)) => {
+                    let (lo, hi) = (parse_one(a.trim())?, parse_one(b.trim())?);
+                    if hi < lo {
+                        bail!("label columns: range '{part}' is reversed");
+                    }
+                    if hi - lo >= 1024 {
+                        bail!("label columns: range '{part}' is implausibly wide");
+                    }
+                    out.extend(lo..=hi);
+                }
+                None => out.push(parse_one(part)?),
+            }
+        }
+        if out.is_empty() {
+            bail!("label columns: no columns in '{s}'");
+        }
+        Ok(out)
+    }
 }
 
 /// A downstream task *as data* — which task, its parameters, and where
@@ -317,6 +358,21 @@ pub fn stopping_rule(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn label_cols_parse_lists_and_ranges() {
+        assert_eq!(LabelsSpec::parse_cols("0").unwrap(), vec![0]);
+        assert_eq!(LabelsSpec::parse_cols("2, 0").unwrap(), vec![2, 0]);
+        assert_eq!(
+            LabelsSpec::parse_cols("1-4,7").unwrap(),
+            vec![1, 2, 3, 4, 7]
+        );
+        assert!(LabelsSpec::parse_cols("").is_err());
+        assert!(LabelsSpec::parse_cols("a").is_err());
+        assert!(LabelsSpec::parse_cols("4-1").is_err());
+        assert!(LabelsSpec::parse_cols("1,,2").is_err());
+        assert!(LabelsSpec::parse_cols("0-99999").is_err());
+    }
 
     #[test]
     fn method_spellings_round_trip() {

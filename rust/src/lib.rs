@@ -87,8 +87,25 @@
 //! curl -X POST localhost:7437/sessions/m/finish
 //! ```
 //!
+//! The server is built for production prediction traffic: a fixed-size
+//! connection thread pool with a bounded accept queue (`--threads`,
+//! `--queue`; overflow is shed with a one-shot 503), HTTP/1.1
+//! keep-alive so clients pay one TCP handshake per connection rather
+//! than per request, optional global/per-IP request rate caps
+//! (`--max-rps`, `--max-rps-per-ip` → 429), and a graceful drain that
+//! lets in-flight requests finish on shutdown (`--drain-ms`). Task
+//! endpoints accept a batch of predict points per request — served as
+//! one B×k kernel block plus one blocked product, bit-identical in f64
+//! to single-point calls — plus multi-output labels and an opt-in f32
+//! serving mode; per-model predict-latency and batch-size histograms
+//! surface under `"predict"` in `/metrics`. `oasis bench-serve` load-
+//! generates that traffic against a live (or self-hosted) server and
+//! reports the single-point vs. batched RPS trajectory.
+//!
 //! The full endpoint/payload reference is in the [`server`] module docs;
-//! `examples/serve_client.rs` drives the same lifecycle from Rust.
+//! `examples/serve_client.rs` drives the same lifecycle from Rust, and
+//! `examples/batch_serving.rs` the keep-alive + batched multi-output
+//! predict path.
 //!
 //! ## Quickstart: persistence
 //!
@@ -134,11 +151,15 @@
 //! run_to_completion(&mut session, &StoppingRule::budget(200)).unwrap();
 //! let approx = session.snapshot().unwrap();
 //!
+//! // labels are output-major columns: one Vec per output. Pass several
+//! // columns and the m outputs share one factorization (multi-output KRR).
 //! let mut cfg = TaskConfig::new(TaskKind::Krr);
-//! cfg.labels = Some((0..2_000).map(|i| (i % 2) as f64).collect());
+//! cfg.labels = Some(vec![(0..2_000).map(|i| (i % 2) as f64).collect()]);
 //! let fit = FittedTask::fit(&approx, &cfg).unwrap();
 //! let selected = ds.select(&approx.indices);
-//! let pred = fit.model.predict(&kernel, &selected, &[vec![0.5, 0.2]]).unwrap();
+//! // one call, many points: the batch is evaluated as a single B×k
+//! // kernel block + one blocked product, bit-identical to per-point calls
+//! let pred = fit.model.predict(&kernel, &selected, &[vec![0.5, 0.2], vec![-0.5, 0.4]]).unwrap();
 //! println!("{pred:?}");
 //! ```
 //!

@@ -388,9 +388,46 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// `dot` in f32 — same 4-way unrolled accumulation shape, single
+/// precision end to end. The f32 serving path accumulates in f32 on
+/// purpose (that *is* the reduced-precision mode; see the store's
+/// precision caveat), so this is not `dot` with casts at the edges.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dot_f32_matches_f64_within_single_precision() {
+        let a: Vec<f64> = (0..13).map(|i| (i as f64 * 0.61).sin()).collect();
+        let b: Vec<f64> = (0..13).map(|i| (i as f64 * 0.23).cos()).collect();
+        let af: Vec<f32> = a.iter().map(|&x| x as f32).collect();
+        let bf: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+        let want = dot(&a, &b);
+        let got = dot_f32(&af, &bf) as f64;
+        assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+    }
 
     #[test]
     fn matmul_small() {

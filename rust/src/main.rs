@@ -54,6 +54,7 @@ fn main() {
         "export" => cmd_export(&args),
         "seed" => cmd_seed(&args),
         "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "promcheck" => cmd_promcheck(&args),
         "info" => cmd_info(),
         _ => {
@@ -69,7 +70,7 @@ fn print_help() {
         "oasis — adaptive column sampling for kernel matrix approximation\n\
          \n\
          USAGE: oasis <approximate|query|task|parallel|worker|export|\n\
-                       serve|promcheck|info> [options]\n\
+                       serve|bench-serve|promcheck|info> [options]\n\
          \n\
          approximate options:\n\
            --dataset   two-moons|abalone|borg|mnist|salinas|lightfield (default two-moons)\n\
@@ -124,8 +125,17 @@ fn print_help() {
                        reused as-is. Omit --load to run a fresh\n\
                        approximation first (same flags as approximate)\n\
            --labels    CSV/binary file with one training label per data\n\
-                       point (krr; --label-col picks the column, default 0)\n\
+                       point (krr; --label-col picks the column(s))\n\
+           --label-col column index, list, or range — \"0\", \"0,2\",\n\
+                       \"1-3\", \"0,2-4\" (default 0). Several columns fit\n\
+                       one multi-output krr model: all outputs share a\n\
+                       single factorization, predictions carry one value\n\
+                       per output\n\
            --ridge     krr regularization λ > 0 (default 1e-3)\n\
+           --f32       serve --predict through the f32 kernel-block path\n\
+                       (krr only; single-precision results, ~1e-6\n\
+                       relative error — measurably faster on large\n\
+                       batches, never bit-identical to the f64 path)\n\
            --components  embedding dimensions (kpca/cluster; default\n\
                        2, cluster defaults to --clusters)\n\
            --clusters  cluster count (cluster; default 2)\n\
@@ -204,7 +214,32 @@ fn print_help() {
                        the \"listening\" line (default 7437)\n\
            --fs-root   directory under which client-supplied paths\n\
                        (dataset files, artifact save/load) resolve\n\
-                       (default \".\")\n"
+                       (default \".\")\n\
+           --threads   connection worker threads (default: available\n\
+                       parallelism); connections queue when all are busy\n\
+           --queue     accept-queue depth (default 128); overflow gets\n\
+                       a one-shot 503\n\
+           --max-rps   global request cap per second (default 0 = off);\n\
+                       over-cap requests get 429 (/healthz and /shutdown\n\
+                       exempt)\n\
+           --max-rps-per-ip  per-client-IP cap per second (default 0)\n\
+           --drain-ms  graceful-shutdown drain deadline for in-flight\n\
+                       requests (default 5000)\n\
+         \n\
+         bench-serve options (load-generate against a serve instance and\n\
+         report p50/p99 latency + requests/sec for single vs. batched\n\
+         predict):\n\
+           --host/--port  target server; omit --port to self-host an\n\
+                       in-process server on an ephemeral port\n\
+           --threads   self-hosted server's worker threads\n\
+           --conns     concurrent keep-alive connections (default 8)\n\
+           --requests  requests per batch-size sweep point (default 2000)\n\
+           --batches   predict batch sizes to sweep, \"1,16,64\"\n\
+           --f32       drive the f32 predict path\n\
+           --quick     small preset for CI smoke (fewer conns/requests)\n\
+           --out       merge a \"serve\" section into this JSON file\n\
+                       (e.g. BENCH_ci.json)\n\
+           --json      structured one-line JSON output\n"
     );
 }
 
@@ -715,10 +750,14 @@ fn task_spec(args: &Args) -> Result<TaskSpec, String> {
         args.usize_or("components", kind.default_components(spec.clusters));
     spec.seed = args.u64_or("seed", 7);
     if let Some(p) = args.get("labels") {
+        // "--label-col 0,2-4" fits one multi-output model over the
+        // listed columns (same spelling the server's "label_cols" takes)
+        let cols = LabelsSpec::parse_cols(&args.get_or("label-col", "0"))
+            .map_err(|e| format!("--label-col: {e}"))?;
         spec.labels = Some(LabelsSpec {
             label: p.to_string(),
             path: PathBuf::from(p),
-            col: args.usize_or("label-col", 0),
+            cols,
         });
     }
     Ok(spec)
@@ -751,12 +790,20 @@ fn report_task(
         return;
     }
     match model {
-        FittedTask::Krr(m) => println!(
-            "task=krr k={} ridge={:e} train_rmse={:.6e}",
-            m.beta.len(),
-            m.lambda,
-            m.train_rmse
-        ),
+        FittedTask::Krr(m) => {
+            let outputs = if m.outputs > 1 {
+                format!(" outputs={}", m.outputs)
+            } else {
+                String::new()
+            };
+            println!(
+                "task=krr k={}{} ridge={:e} train_rmse={:.6e}",
+                m.k(),
+                outputs,
+                m.lambda,
+                m.train_rmse
+            )
+        }
         FittedTask::Kpca(m) => {
             let vals: Vec<String> =
                 m.vals.iter().map(|v| format!("{v:.4e}")).collect();
@@ -785,6 +832,13 @@ fn report_task(
         Some(oasis::tasks::TaskPrediction::Values(vs)) => {
             for (i, v) in vs.iter().enumerate() {
                 println!("point {i}: f(z)={v:.6e}");
+            }
+        }
+        Some(oasis::tasks::TaskPrediction::Matrix(rows)) => {
+            for (i, r) in rows.iter().enumerate() {
+                let vals: Vec<String> =
+                    r.iter().map(|v| format!("{v:.6e}")).collect();
+                println!("point {i}: f(z)=[{}]", vals.join(", "));
             }
         }
         Some(oasis::tasks::TaskPrediction::Embeddings(rows)) => {
@@ -878,6 +932,11 @@ fn task_from_artifact(
     let kernel = artifact.kernel.build();
     let predictions = match predict {
         None => None,
+        Some(points) if args.flag("f32") => Some(model.predict_f32(
+            &*kernel,
+            &artifact.selected_points,
+            points,
+        )?),
         Some(points) => {
             Some(model.predict(&*kernel, &artifact.selected_points, points)?)
         }
@@ -933,6 +992,9 @@ fn task_from_run(
     let selected = ds.select(&approx.indices);
     let predictions = match predict {
         None => None,
+        Some(points) if args.flag("f32") => {
+            Some(fit.model.predict_f32(&*run.kernel, &selected, points)?)
+        }
         Some(points) => Some(fit.model.predict(&*run.kernel, &selected, points)?),
     };
     report_task(args, &fit.model, sizes, predictions.as_ref());
@@ -1224,7 +1286,14 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("serve: --fs-root {} is not a directory", fs_root.display());
         return 2;
     }
-    let config = oasis::server::ServerConfig { fs_root };
+    let config = oasis::server::ServerConfig {
+        fs_root,
+        threads: args.usize_or("threads", 0),
+        queue: args.usize_or("queue", 128),
+        max_rps: args.u64_or("max-rps", 0),
+        max_rps_per_ip: args.u64_or("max-rps-per-ip", 0),
+        drain: std::time::Duration::from_millis(args.u64_or("drain-ms", 5000)),
+    };
     let server =
         match oasis::server::Server::bind_with(&format!("{host}:{port}"), config) {
             Ok(s) => s,
@@ -1250,6 +1319,327 @@ fn cmd_serve(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// One batch-size sweep point of the serving benchmark.
+struct BenchPoint {
+    batch: usize,
+    requests: usize,
+    errors: usize,
+    wall_secs: f64,
+    hist: oasis::obs::Hist,
+}
+
+impl BenchPoint {
+    fn rps(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            (self.requests - self.errors) as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    fn predictions_per_sec(&self) -> f64 {
+        self.rps() * self.batch as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let ms = 1e3;
+        Json::obj(vec![
+            ("batch", Json::Num(self.batch as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("rps", Json::Num(self.rps())),
+            ("predictions_per_sec", Json::Num(self.predictions_per_sec())),
+            ("mean_ms", Json::Num(self.hist.mean() * ms)),
+            ("p50_ms", Json::Num(self.hist.quantile(0.5) * ms)),
+            ("p99_ms", Json::Num(self.hist.quantile(0.99) * ms)),
+        ])
+    }
+}
+
+/// Load-generate KRR predict traffic against a serve instance and
+/// report p50/p99 latency and requests/sec across predict batch sizes —
+/// the "is batching worth it" trajectory (one request carrying B points
+/// is served as one B×k kernel block + one blocked product, where B
+/// single-point requests pay B full HTTP+dispatch+kernel round trips).
+///
+/// With `--port` it drives an already-running server; without, it binds
+/// an in-process server on an ephemeral port (honoring `--threads`) so
+/// CI needs no process choreography. Setup is self-contained: create a
+/// session, grow it, fit a krr model once with inline labels, then
+/// sweep label-free predict-only requests (the fit-once-predict-many
+/// serve pattern) over `--conns` keep-alive connections.
+fn cmd_bench_serve(args: &Args) -> i32 {
+    use oasis::server::http::ClientConn;
+    let quick = args.flag("quick");
+    let conns = args.usize_or("conns", if quick { 4 } else { 8 }).max(1);
+    let requests = args
+        .usize_or("requests", if quick { 240 } else { 2000 })
+        .max(conns);
+    let batches = match parse_indices(&args.get_or("batches", "1,16,64")) {
+        Ok(b) if !b.is_empty() && b.iter().all(|&x| x >= 1) => b,
+        _ => {
+            eprintln!("bench-serve: --batches expects sizes ≥ 1, e.g. \"1,16,64\"");
+            return 2;
+        }
+    };
+    let f32_mode = args.flag("f32");
+    let n = 512usize;
+    let session = "bench-serve";
+
+    // target server: external (--port) or self-hosted on an ephemeral port
+    let mut local: Option<(
+        std::sync::Arc<oasis::server::ServerState>,
+        std::thread::JoinHandle<oasis::Result<()>>,
+    )> = None;
+    let addr = if args.get("port").is_some() {
+        use std::net::ToSocketAddrs;
+        let host = args.get_or("host", "127.0.0.1");
+        let port = args.usize_or("port", 7437);
+        match format!("{host}:{port}").to_socket_addrs().ok().and_then(|mut a| a.next())
+        {
+            Some(a) => a,
+            None => {
+                eprintln!("bench-serve: cannot resolve {host}:{port}");
+                return 2;
+            }
+        }
+    } else {
+        let config = oasis::server::ServerConfig {
+            threads: args.usize_or("threads", 0),
+            ..Default::default()
+        };
+        let server =
+            match oasis::server::Server::bind_with("127.0.0.1:0", config) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("bench-serve: could not bind a local server: {e}");
+                    return 1;
+                }
+            };
+        let addr = match server.local_addr() {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("bench-serve: no local address: {e}");
+                return 1;
+            }
+        };
+        let state = server.state();
+        local = Some((state, std::thread::spawn(move || server.run())));
+        addr
+    };
+
+    let finish = |local: Option<(
+        std::sync::Arc<oasis::server::ServerState>,
+        std::thread::JoinHandle<oasis::Result<()>>,
+    )>| {
+        if let Some((state, join)) = local {
+            state.request_stop();
+            let _ = join.join();
+        }
+    };
+
+    let result = (|| -> oasis::Result<Vec<BenchPoint>> {
+        let mut c = ClientConn::connect(addr)?;
+        // a leftover session from an aborted run would 409 the create
+        let _ = c.request("DELETE", &format!("/sessions/{session}"), "");
+        let create = format!(
+            "{{\"name\":\"{session}\",\"dataset\":{{\"generator\":\"two-moons\",\
+             \"n\":{n},\"seed\":7}},\"max_cols\":48,\"init_cols\":8}}"
+        );
+        let (status, body) = c.request("POST", "/sessions", &create)?;
+        if status != 200 {
+            oasis::bail!("create failed: HTTP {status}: {body}");
+        }
+        let (status, body) = c.request(
+            "POST",
+            &format!("/sessions/{session}/step"),
+            "{\"steps\":40}",
+        )?;
+        if status != 200 {
+            oasis::bail!("step failed: HTTP {status}: {body}");
+        }
+        // fit once with inline labels; the sweep's label-free requests
+        // then reuse the cached fitted model (the serve pattern)
+        let labels: Vec<String> =
+            (0..n).map(|i| format!("{}", (i % 2) as f64)).collect();
+        let fit = format!(
+            "{{\"task\":\"krr\",\"ridge\":1e-3,\"labels\":[{}]}}",
+            labels.join(",")
+        );
+        let (status, body) =
+            c.request("POST", &format!("/sessions/{session}/task"), &fit)?;
+        if status != 200 {
+            oasis::bail!("krr fit failed: HTTP {status}: {body}");
+        }
+
+        // deterministic query points over the two-moons bounding box
+        let mut rng = oasis::util::rng::Pcg64::new(42);
+        let pool: Vec<(f64, f64)> = (0..256)
+            .map(|_| (rng.f64() * 4.0 - 1.5, rng.f64() * 2.5 - 1.0))
+            .collect();
+        let path = format!("/sessions/{session}/task");
+        let mut points_out = Vec::new();
+        for &batch in &batches {
+            // a few distinct bodies per batch size, cycled per request,
+            // so response caching cannot trivialize the measurement
+            let bodies: Vec<String> = (0..16)
+                .map(|v| {
+                    let pts: Vec<String> = (0..batch)
+                        .map(|j| {
+                            let (x, y) = pool[(v * 37 + j) % pool.len()];
+                            format!("[{x},{y}]")
+                        })
+                        .collect();
+                    let f32_field = if f32_mode { ",\"f32\":true" } else { "" };
+                    format!("{{\"predict\":[{}]{f32_field}}}", pts.join(","))
+                })
+                .collect();
+            let per_thread = requests.div_ceil(conns);
+            let total = per_thread * conns;
+            let t0 = std::time::Instant::now();
+            let thread_results: Vec<(Vec<f64>, usize)> =
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..conns)
+                        .map(|t| {
+                            let bodies = &bodies;
+                            let path = &path;
+                            s.spawn(move || {
+                                let mut lats =
+                                    Vec::with_capacity(per_thread);
+                                let mut errors = 0usize;
+                                let mut conn = match ClientConn::connect(addr)
+                                {
+                                    Ok(c) => c,
+                                    Err(_) => return (lats, per_thread),
+                                };
+                                for i in 0..per_thread {
+                                    let body =
+                                        &bodies[(t + i) % bodies.len()];
+                                    let r0 = std::time::Instant::now();
+                                    match conn.request("POST", path, body) {
+                                        Ok((200, _)) => lats.push(
+                                            r0.elapsed().as_secs_f64(),
+                                        ),
+                                        _ => errors += 1,
+                                    }
+                                }
+                                (lats, errors)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().unwrap_or((Vec::new(), per_thread)))
+                        .collect()
+                });
+            let wall_secs = t0.elapsed().as_secs_f64();
+            let mut hist = oasis::obs::Hist::latency();
+            let mut errors = 0usize;
+            for (lats, errs) in thread_results {
+                errors += errs;
+                for l in lats {
+                    hist.record(l);
+                }
+            }
+            points_out.push(BenchPoint {
+                batch,
+                requests: total,
+                errors,
+                wall_secs,
+                hist,
+            });
+        }
+        let _ = c.request("DELETE", &format!("/sessions/{session}"), "");
+        Ok(points_out)
+    })();
+
+    let points = match result {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("bench-serve: {e}");
+            finish(local);
+            return 1;
+        }
+    };
+    finish(local);
+
+    let single_pps = points
+        .iter()
+        .find(|p| p.batch == 1)
+        .map(BenchPoint::predictions_per_sec);
+    let best_batched = points
+        .iter()
+        .filter(|p| p.batch >= 16)
+        .map(|p| p.predictions_per_sec())
+        .fold(f64::NAN, f64::max);
+    let speedup = match single_pps {
+        Some(s) if s > 0.0 && best_batched.is_finite() => {
+            Some(best_batched / s)
+        }
+        _ => None,
+    };
+
+    let results_json: Vec<Json> = points.iter().map(BenchPoint::to_json).collect();
+    let mut serve_fields = vec![
+        ("conns", Json::Num(conns as f64)),
+        ("requests_per_batch", Json::Num(requests as f64)),
+        ("f32", Json::Bool(f32_mode)),
+        ("results", Json::Arr(results_json)),
+    ];
+    if let Some(s) = speedup {
+        serve_fields.push(("batched_speedup_points_per_sec", Json::Num(s)));
+    }
+    let serve_json = Json::obj(serve_fields);
+
+    if args.flag("json") {
+        println!("{serve_json}");
+    } else {
+        for p in &points {
+            println!(
+                "batch={:<4} requests={:<6} errors={:<3} rps={:<10.1} \
+                 predictions/s={:<12.1} p50={:.3}ms p99={:.3}ms",
+                p.batch,
+                p.requests,
+                p.errors,
+                p.rps(),
+                p.predictions_per_sec(),
+                p.hist.quantile(0.5) * 1e3,
+                p.hist.quantile(0.99) * 1e3,
+            );
+        }
+        if let Some(s) = speedup {
+            println!(
+                "batched predict serves {s:.1}× the single-point \
+                 predictions/sec"
+            );
+        }
+    }
+    if points.iter().any(|p| p.errors > 0) {
+        eprintln!("bench-serve: some requests failed (see errors column)");
+        return 1;
+    }
+
+    if let Some(out) = args.get("out") {
+        let existing = std::fs::read_to_string(out)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok());
+        let mut obj = match existing {
+            Some(Json::Obj(m)) => m,
+            _ => Default::default(),
+        };
+        obj.insert("serve".into(), serve_json);
+        let rendered = Json::Obj(obj).to_string();
+        if let Err(e) =
+            oasis::util::fsio::write_atomic(Path::new(out), rendered.as_bytes())
+        {
+            eprintln!("bench-serve: --out {out}: {e}");
+            return 1;
+        }
+        eprintln!("merged \"serve\" section into {out}");
+    }
+    0
 }
 
 fn cmd_info() -> i32 {

@@ -750,11 +750,20 @@ fn implied_payload_bytes(h: &Json, n: usize, k: usize, dim: usize) -> Result<usi
 /// into the payload sections, only scalars and dims live here).
 fn task_header_json(task: &FittedTask) -> Json {
     match task {
-        FittedTask::Krr(m) => Json::obj(vec![
-            ("type", Json::Str("krr".into())),
-            ("lambda", Json::Num(m.lambda)),
-            ("train_rmse", Json::Num(m.train_rmse)),
-        ]),
+        FittedTask::Krr(m) => {
+            let mut fields = vec![
+                ("type", Json::Str("krr".into())),
+                ("lambda", Json::Num(m.lambda)),
+                ("train_rmse", Json::Num(m.train_rmse)),
+            ];
+            // multi-output models record their column count; the field
+            // is omitted at m = 1 so single-output artifacts keep the
+            // exact header (and version) older readers understand
+            if m.outputs > 1 {
+                fields.push(("outputs", Json::Num(m.outputs as f64)));
+            }
+            Json::obj(fields)
+        }
         FittedTask::Kpca(m) => Json::obj(vec![
             ("type", Json::Str("kpca".into())),
             ("components", Json::Num(m.vals.len() as f64)),
@@ -793,7 +802,7 @@ fn task_section_elems(th: &Json, k: usize) -> Result<Vec<usize>> {
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow!("artifact task header missing type"))?;
     Ok(match t {
-        "krr" => vec![k],
+        "krr" => vec![checked_elems(k, task_outputs(th)?, "task beta")?],
         "kpca" => {
             let d = task_dim(th, "components")?;
             vec![d, checked_elems(k, d, "task projection")?]
@@ -809,6 +818,15 @@ fn task_section_elems(th: &Json, k: usize) -> Result<Vec<usize>> {
         }
         other => bail!("unknown stored task type '{other}'"),
     })
+}
+
+/// The krr header's output count: absent means 1 (the pre-multi-output
+/// header shape, and what m = 1 models still write).
+fn task_outputs(th: &Json) -> Result<usize> {
+    match th.get("outputs") {
+        None | Some(Json::Null) => Ok(1),
+        Some(_) => task_dim(th, "outputs"),
+    }
 }
 
 fn task_dim(th: &Json, key: &str) -> Result<usize> {
@@ -838,10 +856,15 @@ fn read_task_sections(
     };
     Ok(match t {
         "krr" => {
-            let beta = r.read_f64_section(k, "task beta")?;
+            let outputs = task_outputs(th)?;
+            let beta = r.read_f64_section(
+                checked_elems(k, outputs, "task beta")?,
+                "task beta",
+            )?;
             FittedTask::Krr(KrrModel {
                 lambda: num("lambda")?,
                 beta,
+                outputs,
                 train_rmse: num("train_rmse")?,
             })
         }
@@ -1147,7 +1170,7 @@ mod tests {
             {
                 let mut c = TaskConfig::new(TaskKind::Krr);
                 c.labels =
-                    Some((0..art.n()).map(|i| (i % 2) as f64).collect());
+                    Some(vec![(0..art.n()).map(|i| (i % 2) as f64).collect()]);
                 c
             },
             TaskConfig::new(TaskKind::Kpca),
@@ -1202,6 +1225,55 @@ mod tests {
                 .model
         };
         assert!(sample_artifact().0.with_task(other).is_err());
+    }
+
+    /// Multi-output krr models persist their output count: the header
+    /// grows an `outputs` field (only when m > 1 — single-output headers
+    /// keep the legacy shape), the beta section carries k·m elements,
+    /// and the model reloads bit-identically.
+    #[test]
+    fn multi_output_task_section_round_trips() {
+        use crate::tasks::{FittedTask, TaskConfig, TaskKind};
+        let (art, _, _) = sample_artifact();
+        let mut cfg = TaskConfig::new(TaskKind::Krr);
+        cfg.labels = Some(vec![
+            (0..art.n()).map(|i| (i % 2) as f64).collect(),
+            (0..art.n()).map(|i| (i as f64 * 0.17).cos()).collect(),
+            (0..art.n()).map(|i| i as f64).collect(),
+        ]);
+        let fit = FittedTask::fit(&art.approx, &cfg).unwrap();
+        assert_eq!(fit.model.outputs(), 3);
+        let stored = art.clone().with_task(fit.model.clone()).unwrap();
+        let bytes = stored.to_bytes();
+        let header_end = bytes.iter().position(|&b| b == b'\n').unwrap();
+        assert!(
+            String::from_utf8_lossy(&bytes[..header_end])
+                .contains("\"outputs\":3"),
+            "multi-output header records the column count"
+        );
+        let back = StoredArtifact::from_bytes(&bytes).unwrap();
+        match (&fit.model, back.task.as_ref().expect("task survived")) {
+            (FittedTask::Krr(a), FittedTask::Krr(b)) => {
+                assert_eq!(b.outputs, 3);
+                assert_eq!(b.beta.len(), 3 * art.k());
+                for (x, y) in a.beta.iter().zip(&b.beta) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+                assert_eq!(a.train_rmse.to_bits(), b.train_rmse.to_bits());
+            }
+            other => panic!("task variant changed in flight: {other:?}"),
+        }
+        assert_eq!(back.to_bytes(), bytes);
+        // single-output headers keep the legacy shape (no outputs field)
+        let mut c1 = TaskConfig::new(TaskKind::Krr);
+        c1.labels = Some(vec![(0..art.n()).map(|i| (i % 2) as f64).collect()]);
+        let f1 = FittedTask::fit(&art.approx, &c1).unwrap();
+        let b1 = art.clone().with_task(f1.model).unwrap().to_bytes();
+        let h1_end = b1.iter().position(|&b| b == b'\n').unwrap();
+        assert!(
+            !String::from_utf8_lossy(&b1[..h1_end]).contains("outputs"),
+            "m = 1 headers stay backward compatible"
+        );
     }
 
     /// Version-2 f32 compaction: the payload shrinks, factors reload at

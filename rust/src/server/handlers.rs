@@ -415,7 +415,7 @@ fn resolve_task_config(
     let labels = match &t.labels {
         None => None,
         Some(protocol::TaskLabels::Inline(v)) => Some(v.clone()),
-        Some(protocol::TaskLabels::File { label, path, col }) => {
+        Some(protocol::TaskLabels::File { label, path, cols }) => {
             let spec = TaskSpec {
                 kind: t.kind,
                 ridge: t.ridge,
@@ -425,7 +425,7 @@ fn resolve_task_config(
                 labels: Some(LabelsSpec {
                     label: label.clone(),
                     path: path.clone(),
-                    col: *col,
+                    cols: cols.clone(),
                 }),
             };
             return SessionBuilder::with_limits(protocol::serving_load_limits())
@@ -451,10 +451,15 @@ fn task_cache_key(cfg: &crate::tasks::TaskConfig, k: usize) -> String {
     let labels_fnv = cfg
         .labels
         .as_ref()
-        .map(|l| {
-            let mut bytes = Vec::with_capacity(l.len() * 8);
-            for v in l {
-                bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        .map(|cols| {
+            let elems: usize = cols.iter().map(Vec::len).sum();
+            let mut bytes = Vec::with_capacity(elems * 8 + cols.len() * 8);
+            for col in cols {
+                // column lengths delimit, so [[a,b],[c]] ≠ [[a],[b,c]]
+                bytes.extend_from_slice(&(col.len() as u64).to_le_bytes());
+                for v in col {
+                    bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
             }
             crate::util::framing::fnv1a64(&bytes)
         })
@@ -495,6 +500,36 @@ fn fit_with_cache(
         model: model.clone(),
     });
     Ok((model, false))
+}
+
+/// Run (and time) a task request's predictions — one landmark-block
+/// kernel evaluation plus one blocked B×k product, through the f64 path
+/// or the request's opt-in f32 path — and record the predict metrics
+/// (batch size + per-model latency) under `model_label`.
+fn run_predict(
+    state: &Arc<ServerState>,
+    model_label: &str,
+    model: &crate::tasks::FittedTask,
+    kernel: &dyn crate::kernels::Kernel,
+    selected: &crate::data::Dataset,
+    treq: &protocol::TaskRequest,
+) -> crate::Result<crate::tasks::TaskPrediction> {
+    let t0 = std::time::Instant::now();
+    let p = if treq.f32_predict {
+        model.predict_f32(kernel, selected, &treq.predict)?
+    } else {
+        model.predict(kernel, selected, &treq.predict)?
+    };
+    state.metrics.task_predictions.fetch_add(
+        treq.predict.len() as u64,
+        std::sync::atomic::Ordering::Relaxed,
+    );
+    state.metrics.observe_predict(
+        model_label,
+        treq.predict.len(),
+        t0.elapsed().as_secs_f64(),
+    );
+    Ok(p)
 }
 
 /// Render a task response: the model's fit summary plus serving fields
@@ -605,14 +640,10 @@ fn task_session(state: &Arc<ServerState>, name: &str, req: &Request) -> Response
                 Ok(d) => d,
                 Err(e) => return error(500, e),
             };
-        match model.predict(&*h.kernel, &selected, &treq.predict) {
-            Ok(p) => {
-                state.metrics.task_predictions.fetch_add(
-                    treq.predict.len() as u64,
-                    std::sync::atomic::Ordering::Relaxed,
-                );
-                Some(p)
-            }
+        let label = format!("session:{}", h.name);
+        match run_predict(state, &label, &model, &*h.kernel, &selected, &treq)
+        {
+            Ok(p) => Some(p),
             Err(e) => return error(400, e),
         }
     };
@@ -686,15 +717,16 @@ fn task_artifact(state: &Arc<ServerState>, name: &str, req: &Request) -> Respons
         None
     } else {
         let kernel = h.artifact.kernel.build();
-        match model.predict(&*kernel, &h.artifact.selected_points, &treq.predict)
-        {
-            Ok(p) => {
-                state.metrics.task_predictions.fetch_add(
-                    treq.predict.len() as u64,
-                    std::sync::atomic::Ordering::Relaxed,
-                );
-                Some(p)
-            }
+        let label = format!("artifact:{}", h.name);
+        match run_predict(
+            state,
+            &label,
+            &model,
+            &*kernel,
+            &h.artifact.selected_points,
+            &treq,
+        ) {
+            Ok(p) => Some(p),
             Err(e) => return error(400, e),
         }
     };
@@ -895,6 +927,41 @@ fn unload_artifact(state: &Arc<ServerState>, name: &str) -> Response {
     }
 }
 
+/// The batch-size histogram in its own units (points per call, not ms).
+fn batch_hist_json(h: &crate::obs::Hist) -> Json {
+    let q = |p: f64| if h.count() == 0 { 0.0 } else { h.quantile(p) };
+    Json::obj(vec![
+        ("count", Json::Num(h.count() as f64)),
+        ("mean", Json::Num(h.mean())),
+        ("last", Json::Num(h.last())),
+        ("max", Json::Num(h.max())),
+        ("p50", Json::Num(q(0.50))),
+        ("p99", Json::Num(q(0.99))),
+    ])
+}
+
+/// The `"predict"` section of the JSON `/metrics` report: the batch-size
+/// histogram plus one latency histogram per served model.
+fn predict_json(state: &Arc<ServerState>) -> Json {
+    let per_model: Vec<(String, Json)> = state
+        .metrics
+        .predict_hists()
+        .into_iter()
+        .map(|(name, h)| (name, h.to_json()))
+        .collect();
+    Json::Obj(
+        vec![
+            (
+                "batch_size".to_string(),
+                batch_hist_json(&state.metrics.predict_batches()),
+            ),
+            ("models".to_string(), Json::Obj(per_model.into_iter().collect())),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
 fn metrics_report(state: &Arc<ServerState>) -> Response {
     let sessions: Vec<Json> = state
         .registry
@@ -918,6 +985,7 @@ fn metrics_report(state: &Arc<ServerState>) -> Response {
             ("start_time_unix_secs", Json::Num(state.start_unix_secs)),
             ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
             ("server", state.metrics.to_json()),
+            ("predict", predict_json(state)),
             ("sessions", Json::Arr(sessions)),
             ("artifacts", Json::Arr(artifacts)),
         ]),
@@ -1009,6 +1077,31 @@ fn metrics_prometheus(state: &Arc<ServerState>) -> Response {
                 h,
             );
         }
+    }
+    let predict = state.metrics.predict_hists();
+    if !predict.is_empty() {
+        page.family(
+            "oasis_predict_duration_seconds",
+            "Task-endpoint prediction latency by served model.",
+            "histogram",
+        );
+        for (model, h) in &predict {
+            page.histogram(
+                "oasis_predict_duration_seconds",
+                &[("model", model)],
+                h,
+            );
+        }
+        page.family(
+            "oasis_predict_batch_size",
+            "Points per task-endpoint predict call.",
+            "histogram",
+        );
+        page.histogram(
+            "oasis_predict_batch_size",
+            &[],
+            &state.metrics.predict_batches(),
+        );
     }
     let stats: Vec<(String, SessionStats)> = state
         .registry

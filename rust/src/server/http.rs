@@ -201,6 +201,83 @@ pub fn client_request(
     Ok((status, raw[at..].to_string()))
 }
 
+/// A persistent keep-alive client connection: many request/response
+/// exchanges on one socket, amortizing the TCP (and thread-pool
+/// dispatch) setup across requests. This is what `oasis bench-serve`'s
+/// load generator and the integration tests drive; [`client_request`]
+/// remains the one-shot `Connection: close` variant.
+#[derive(Debug)]
+pub struct ClientConn {
+    stream: std::net::TcpStream,
+    reader: std::io::BufReader<std::net::TcpStream>,
+}
+
+impl ClientConn {
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<ClientConn> {
+        let stream = std::net::TcpStream::connect(addr)?;
+        // request/response exchanges are latency-bound: never Nagle-delay
+        // a small request body
+        let _ = stream.set_nodelay(true);
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        Ok(ClientConn { stream, reader })
+    }
+
+    /// One exchange on the kept-alive connection → `(status, body)`.
+    /// Errors when the server closed the connection (e.g. after a
+    /// `Connection: close` response or an idle timeout) — reconnect and
+    /// retry at the caller's discretion.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> std::io::Result<(u16, String)> {
+        write!(
+            self.stream,
+            "{method} {path} HTTP/1.1\r\nHost: client\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        )?;
+        self.stream.flush()?;
+        read_response(&mut self.reader)
+    }
+}
+
+/// Read one framed `(status, body)` response off a kept-alive
+/// connection. Only `Content-Length` framing is understood — which is
+/// all the server emits.
+fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<(u16, String)> {
+    let line = read_line_capped(reader)?
+        .ok_or_else(|| bad("peer closed before the status line"))?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("no status in response line"))?;
+    let mut len = 0usize;
+    loop {
+        let h = read_line_capped(reader)?
+            .ok_or_else(|| bad("eof inside response headers"))?;
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| bad("bad response content-length"))?;
+            }
+        }
+    }
+    if len > MAX_BODY_BYTES {
+        return Err(bad("response body too large"));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
 /// An HTTP response carrying a JSON (or, for the Prometheus exposition,
 /// plain-text) body.
 #[derive(Debug)]
@@ -236,7 +313,9 @@ impl Response {
             405 => "Method Not Allowed",
             409 => "Conflict",
             410 => "Gone",
+            429 => "Too Many Requests",
             500 => "Internal Server Error",
+            503 => "Service Unavailable",
             _ => "Unknown",
         }
     }
@@ -362,6 +441,32 @@ mod tests {
         assert!(text.contains("Content-Length: 11"), "{text}");
         assert!(text.contains("Connection: close"), "{text}");
         assert!(text.ends_with("{\"ok\":true}"), "{text}");
+    }
+
+    #[test]
+    fn client_reads_sequential_keep_alive_responses() {
+        let raw = "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+                   Content-Length: 11\r\nConnection: keep-alive\r\n\r\n\
+                   {\"ok\":true}\
+                   HTTP/1.1 429 Too Many Requests\r\nContent-Length: 0\r\n\r\n";
+        let mut reader = BufReader::new(raw.as_bytes());
+        let (status, body) = read_response(&mut reader).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"ok\":true}");
+        let (status, body) = read_response(&mut reader).unwrap();
+        assert_eq!(status, 429);
+        assert!(body.is_empty());
+        assert!(read_response(&mut reader).is_err()); // EOF between frames
+    }
+
+    #[test]
+    fn overload_statuses_have_reasons() {
+        for (status, reason) in
+            [(429, "Too Many Requests"), (503, "Service Unavailable")]
+        {
+            let r = Response::json(status, crate::util::json::Json::Null);
+            assert_eq!(r.reason(), reason);
+        }
     }
 
     #[test]

@@ -22,6 +22,12 @@ pub struct ServerMetrics {
     pub requests: AtomicU64,
     /// 4xx/5xx responses.
     pub errors: AtomicU64,
+    /// Requests answered 429 under the `--max-rps`/`--max-rps-per-ip`
+    /// caps.
+    pub rate_limited: AtomicU64,
+    /// Connections shed with a one-shot 503 because the accept queue was
+    /// full.
+    pub rejected_overload: AtomicU64,
     pub sessions_created: AtomicU64,
     pub sessions_finished: AtomicU64,
     pub snapshots_total: AtomicU64,
@@ -42,6 +48,17 @@ pub struct ServerMetrics {
     /// (e.g. `"POST /sessions/{name}/step"` — names collapse to
     /// placeholders so the label set stays bounded).
     pub request_hists: Mutex<BTreeMap<String, Hist>>,
+    /// Task-endpoint prediction latency keyed by model
+    /// (`session:{name}` / `artifact:{name}` — bounded by what the
+    /// registry hosts). Kept out of [`to_json`](ServerMetrics::to_json):
+    /// that rendering is counters-only and parity-checked against
+    /// [`counter_triples`](ServerMetrics::counter_triples); these render
+    /// under `"predict"` in the `/metrics` report instead.
+    pub predict_hists: Mutex<BTreeMap<String, Hist>>,
+    /// Points-per-predict-call histogram (lazy so the derived `Default`
+    /// can stand while the histogram still gets [`Hist::bytes`]'s
+    /// count-friendly base of 1, not the latency base).
+    pub predict_batches: Mutex<Option<Hist>>,
 }
 
 impl ServerMetrics {
@@ -66,11 +83,48 @@ impl ServerMetrics {
         map.iter().map(|(k, h)| (k.clone(), h.clone())).collect()
     }
 
+    /// Record one task-endpoint predict call: `model` names what served
+    /// it (`session:{name}` / `artifact:{name}`), `batch` how many
+    /// points the call carried, `secs` the prediction latency.
+    pub fn observe_predict(&self, model: &str, batch: usize, secs: f64) {
+        let mut map = self.predict_hists.lock().unwrap_or_else(|p| p.into_inner());
+        map.entry(model.to_string()).or_default().record(secs);
+        drop(map);
+        let mut b =
+            self.predict_batches.lock().unwrap_or_else(|p| p.into_inner());
+        b.get_or_insert_with(Hist::bytes).record(batch as f64);
+    }
+
+    /// Snapshot of the per-model predict-latency histograms
+    /// (label-sorted).
+    pub fn predict_hists(&self) -> Vec<(String, Hist)> {
+        let map = self.predict_hists.lock().unwrap_or_else(|p| p.into_inner());
+        map.iter().map(|(k, h)| (k.clone(), h.clone())).collect()
+    }
+
+    /// Snapshot of the batch-size histogram (empty until the first
+    /// predict call).
+    pub fn predict_batches(&self) -> Hist {
+        self.predict_batches
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone()
+            .unwrap_or_else(Hist::bytes)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("connections", Json::Num(Self::get(&self.connections) as f64)),
             ("requests", Json::Num(Self::get(&self.requests) as f64)),
             ("errors", Json::Num(Self::get(&self.errors) as f64)),
+            (
+                "rate_limited",
+                Json::Num(Self::get(&self.rate_limited) as f64),
+            ),
+            (
+                "rejected_overload",
+                Json::Num(Self::get(&self.rejected_overload) as f64),
+            ),
             (
                 "sessions_created",
                 Json::Num(Self::get(&self.sessions_created) as f64),
@@ -114,7 +168,7 @@ impl ServerMetrics {
         ])
     }
 
-    /// The 13 counters as `(prometheus_name, help, value)` triples, in
+    /// Every counter as `(prometheus_name, help, value)` triples, in
     /// the same order as [`to_json`](ServerMetrics::to_json) — the
     /// Prometheus page is generated from this list so the two renderings
     /// can never drift apart.
@@ -134,6 +188,16 @@ impl ServerMetrics {
                 "oasis_errors_total",
                 "Requests answered with a 4xx/5xx status.",
                 Self::get(&self.errors),
+            ),
+            (
+                "oasis_rate_limited_total",
+                "Requests answered 429 under the rate caps.",
+                Self::get(&self.rate_limited),
+            ),
+            (
+                "oasis_rejected_overload_total",
+                "Connections shed 503 on a full accept queue.",
+                Self::get(&self.rejected_overload),
             ),
             (
                 "oasis_sessions_created_total",
@@ -222,6 +286,24 @@ mod tests {
                 "JSON counter '{key}' missing from the Prometheus triples"
             );
         }
+    }
+
+    #[test]
+    fn predict_histograms_accumulate_and_stay_out_of_counters() {
+        let m = ServerMetrics::default();
+        m.observe_predict("artifact:m1", 16, 0.002);
+        m.observe_predict("artifact:m1", 1, 0.001);
+        m.observe_predict("session:s1", 64, 0.004);
+        let hists = m.predict_hists();
+        assert_eq!(hists.len(), 2);
+        assert_eq!(hists[0].0, "artifact:m1");
+        assert_eq!(hists[0].1.count(), 2);
+        let batches = m.predict_batches();
+        assert_eq!(batches.count(), 3);
+        assert_eq!(batches.max(), 64.0);
+        // the counter JSON stays counters-only (see
+        // counter_triples_cover_every_json_counter)
+        assert!(m.to_json().get("predict").is_none());
     }
 
     #[test]

@@ -157,10 +157,24 @@
 //!   "components": 2,            // kpca/cluster embedding dims
 //!   "clusters": 2,              // cluster count (cluster task)
 //!   "seed": 7,                  // cluster k-means seeding
-//!   "labels": [0, 1, 0, …],     // krr training labels, inline…
-//!   "labels_file": "y.csv",     // …or a dataset file column (resolves
+//!   "labels": [0, 1, 0, …],     // krr training labels, inline — a flat
+//!                               //    array, or per-point rows
+//!                               //    [[y0a,y0b], …] for multi-output
+//!                               //    krr (m outputs share one
+//!                               //    factorization)
+//!   "labels_file": "y.csv",     // …or dataset file column(s) (resolves
 //!   "label_col": 0,             //    under --fs-root; default col 0)
+//!   "label_cols": [0, 2],       //    …or several columns — an index
+//!                               //    array or a range string "0,2-4"
+//!                               //    (mutually exclusive with
+//!                               //    label_col) → multi-output krr
 //!   "predict": [[x,…], …],      // points to predict for (optional)
+//!   "f32": false,               // true → serve predictions through the
+//!                               //    f32 kernel-block path (krr only):
+//!                               //    ~half the block memory traffic,
+//!                               //    single-precision results (~1e-6
+//!                               //    relative — see
+//!                               //    tasks::FittedTask::predict_f32)
 //!   "refresh": false            // fresh snapshot before fitting
 //! }
 //! ```
@@ -168,7 +182,15 @@
 //! Fits the task on the session's current snapshot — KRR dual weights,
 //! kernel-PCA eigenpairs, or spectral k-means — in O(nk²), never
 //! materializing the n×n matrix, and predicts for the given points by
-//! evaluating the kernel against the k selected points only. Identical
+//! evaluating the kernel against the k selected points only. A B-point
+//! `predict` array is served as **one** B×k kernel block evaluation
+//! plus one blocked matrix product against the dual weights
+//! ([`tasks::landmark_block`](crate::tasks::landmark_block)) — batching
+//! B points into one request costs far less than B single-point
+//! requests, and the results are bit-identical to the single-point path
+//! (f64). Multi-output krr responds with one row of m values per
+//! predict point and reports `"outputs": m` in the fit summary.
+//! Identical
 //! consecutive requests reuse the cached fitted model (`"model":
 //! "cached"`; see the `tasks_fitted`/`task_cache_hits`/
 //! `task_predictions` counters in `/metrics`), and a krr request
@@ -241,9 +263,33 @@
 //! | `GET /artifacts` | `{"artifacts": [status…]}` (name-sorted) |
 //! | `GET /artifacts/{name}` | one artifact's status (incl. `queries` served) |
 //! | `DELETE /artifacts/{name}` | unload a hosted artifact |
-//! | `GET /metrics` | `{"uptime_secs", "start_time_unix_secs", "version", "server": counters, "sessions": […], "artifacts": […]}` |
+//! | `GET /metrics` | `{"uptime_secs", "start_time_unix_secs", "version", "server": counters, "predict": histograms, "sessions": […], "artifacts": […]}` |
 //! | `GET /healthz` | `{"ok": true, "uptime_secs", "start_time_unix_secs", "version"}` |
-//! | `POST /shutdown` | stop accepting, tear down all sessions |
+//! | `POST /shutdown` | stop accepting, drain in-flight requests, tear down all sessions |
+//!
+//! ## Serving operations
+//!
+//! Connections are handled by a **fixed worker pool** fed from a
+//! bounded accept queue (`oasis serve --threads N --queue Q`; threads
+//! default to the machine's available parallelism). Connections beyond
+//! `threads + queue` receive a one-shot `503` — backpressure is
+//! explicit, not an unbounded thread spawn. Connections are HTTP/1.1
+//! **keep-alive** by default: send requests back to back on one socket
+//! (`Connection: close` or a ~30 s idle timeout ends one).
+//!
+//! Optional **rate limits** (`--max-rps`, `--max-rps-per-ip`; fixed
+//! 1-second windows) answer over-cap requests with `429`; `/healthz`
+//! and `/shutdown` are exempt. Shed work shows up in the
+//! `rate_limited` / `rejected_overload` counters.
+//!
+//! **Shutdown is graceful**: `POST /shutdown` stops the accept loop,
+//! waits up to `--drain-ms` (default 5000) for in-flight requests to
+//! finish writing their responses, then tears down the session actors.
+//!
+//! `oasis bench-serve` drives a live server with N concurrent
+//! keep-alive connections and reports p50/p99 latency and requests/sec
+//! for single-point vs. batched predict (the `serve` section of
+//! `BENCH_ci.json` in CI).
 //!
 //! ## Observability
 //!
@@ -304,11 +350,12 @@ pub use metrics::ServerMetrics;
 pub use registry::{Registry, SessionHandle};
 
 use crate::Result;
+use std::collections::HashMap;
 use std::io::BufReader;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Operator-side server configuration (CLI flags, not request payloads).
@@ -318,12 +365,63 @@ pub struct ServerConfig {
     /// `{"file": …}`, artifact save/load) resolves; clients cannot reach
     /// outside it (see [`protocol::resolve_fs_path`]).
     pub fs_root: PathBuf,
+    /// Connection worker threads (`--threads`; 0 = available
+    /// parallelism). The pool is fixed-size: a malicious burst of
+    /// connections occupies the bounded accept queue, not one OS thread
+    /// each.
+    pub threads: usize,
+    /// Accepted-connection queue depth (`--queue`). When every worker is
+    /// busy and the queue is full, new connections get a one-shot 503
+    /// instead of stalling the accept loop.
+    pub queue: usize,
+    /// Global request-rate cap per second (`--max-rps`; 0 = unlimited).
+    /// Over-cap requests are answered 429; `/healthz` and `/shutdown`
+    /// are exempt so probes and operators are never locked out.
+    pub max_rps: u64,
+    /// Per-client-IP request-rate cap per second (`--max-rps-per-ip`;
+    /// 0 = unlimited), same 429 semantics.
+    pub max_rps_per_ip: u64,
+    /// How long shutdown waits for in-flight requests to finish before
+    /// tearing sessions down (`--drain-ms`).
+    pub drain: Duration,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { fs_root: PathBuf::from(".") }
+        ServerConfig {
+            fs_root: PathBuf::from("."),
+            threads: 0,
+            queue: 128,
+            max_rps: 0,
+            max_rps_per_ip: 0,
+            drain: Duration::from_secs(5),
+        }
     }
+}
+
+impl ServerConfig {
+    /// The worker count actually spawned: `threads`, or the machine's
+    /// available parallelism when 0 (min 2 so one slow request can never
+    /// starve `/healthz`).
+    pub fn resolved_threads(&self) -> usize {
+        let n = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            self.threads
+        };
+        n.max(2)
+    }
+}
+
+/// One fixed one-second rate window: request counts since
+/// `started`, globally and per peer IP. Fixed (not sliding) windows
+/// admit at most 2× the cap across a window boundary — acceptable for
+/// overload shedding, and O(1) per request with no timestamp ring.
+#[derive(Debug)]
+struct RateWindow {
+    started: Instant,
+    global: u64,
+    per_ip: HashMap<IpAddr, u64>,
 }
 
 /// Shared server state: the session registry, hosted artifacts,
@@ -339,6 +437,12 @@ pub struct ServerState {
     /// [`started`](ServerState::started) clock drives `uptime_secs`.
     pub start_unix_secs: f64,
     stop: AtomicBool,
+    /// Requests currently inside [`handlers::route`] — the graceful
+    /// shutdown drain waits for this to reach zero (or the
+    /// [`drain`](ServerConfig::drain) deadline) before tearing sessions
+    /// down.
+    in_flight: AtomicU64,
+    rate: Mutex<RateWindow>,
 }
 
 impl ServerState {
@@ -355,6 +459,12 @@ impl ServerState {
             started: Instant::now(),
             start_unix_secs,
             stop: AtomicBool::new(false),
+            in_flight: AtomicU64::new(0),
+            rate: Mutex::new(RateWindow {
+                started: Instant::now(),
+                global: 0,
+                per_ip: HashMap::new(),
+            }),
         }
     }
 
@@ -365,6 +475,33 @@ impl ServerState {
     /// Ask the accept loop to exit (what `POST /shutdown` does).
     pub fn request_stop(&self) {
         self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Requests currently being routed (see the shutdown drain).
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Admit one request from `ip` under the configured rate caps; a
+    /// `false` turns into a 429. Counting happens even for requests that
+    /// end up rejected — a client hammering past the cap stays rejected
+    /// rather than sneaking through once the admitted count stalls.
+    fn admit(&self, ip: IpAddr) -> bool {
+        if self.config.max_rps == 0 && self.config.max_rps_per_ip == 0 {
+            return true;
+        }
+        let mut w = self.rate.lock().unwrap_or_else(|p| p.into_inner());
+        if w.started.elapsed() >= Duration::from_secs(1) {
+            w.started = Instant::now();
+            w.global = 0;
+            w.per_ip.clear();
+        }
+        w.global += 1;
+        let per = w.per_ip.entry(ip).or_insert(0);
+        *per += 1;
+        (self.config.max_rps == 0 || w.global <= self.config.max_rps)
+            && (self.config.max_rps_per_ip == 0
+                || *per <= self.config.max_rps_per_ip)
     }
 }
 
@@ -401,10 +538,41 @@ impl Server {
     }
 
     /// Serve until [`ServerState::request_stop`] (usually `POST
-    /// /shutdown`), then tear down every session. One thread per
-    /// connection; connections are kept alive until the peer closes or
-    /// sends `Connection: close`.
+    /// /shutdown`), then drain in-flight requests (up to
+    /// [`ServerConfig::drain`]) and tear down every session.
+    ///
+    /// Connections are handled by a fixed pool of
+    /// [`resolved_threads`](ServerConfig::resolved_threads) workers fed
+    /// from a bounded accept queue — a connection burst beyond
+    /// `threads + queue` is shed with one-shot 503s instead of spawning
+    /// unbounded OS threads. Each connection is kept alive until the
+    /// peer closes, sends `Connection: close`, or idles past the read
+    /// timeout.
     pub fn run(self) -> Result<()> {
+        let threads = self.state.config.resolved_threads();
+        let queue = self.state.config.queue.max(1);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(queue);
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..threads {
+            let rx = rx.clone();
+            let state = self.state.clone();
+            std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || loop {
+                    // holding the lock across recv() is the standard
+                    // shared-receiver pool shape: one idle worker waits,
+                    // the rest contend only at dequeue time
+                    let next = {
+                        let guard =
+                            rx.lock().unwrap_or_else(|p| p.into_inner());
+                        guard.recv()
+                    };
+                    match next {
+                        Ok(stream) => handle_conn(stream, state.clone()),
+                        Err(_) => return, // accept loop dropped the sender
+                    }
+                })?;
+        }
         let mut consecutive_errors = 0u32;
         loop {
             // checked every iteration — a stream of incoming connections
@@ -419,8 +587,15 @@ impl Server {
                     // accepted sockets must block; the listener's
                     // non-blocking flag is not inherited on all platforms
                     let _ = stream.set_nonblocking(false);
-                    let state = self.state.clone();
-                    std::thread::spawn(move || handle_conn(stream, state));
+                    match tx.try_send(stream) {
+                        Ok(()) => {}
+                        Err(std::sync::mpsc::TrySendError::Full(stream)) => {
+                            overloaded(&self.state, stream);
+                        }
+                        Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
+                            break;
+                        }
+                    }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     consecutive_errors = 0;
@@ -440,22 +615,58 @@ impl Server {
                     }
                     consecutive_errors += 1;
                     if consecutive_errors >= 100 {
-                        self.state.registry.shutdown();
+                        self.drain_and_shutdown(tx);
                         return Err(e.into());
                     }
                     std::thread::sleep(Duration::from_millis(50));
                 }
             }
         }
-        self.state.registry.shutdown();
+        self.drain_and_shutdown(tx);
         Ok(())
     }
+
+    /// Graceful shutdown: stop feeding workers, wait for in-flight
+    /// requests to finish (bounded by the drain deadline — a wedged
+    /// handler must not hold shutdown hostage), then tear down the
+    /// session actors. Idle keep-alive connections are not waited on;
+    /// their workers notice the stop flag at the next request or read
+    /// timeout.
+    fn drain_and_shutdown(&self, tx: std::sync::mpsc::SyncSender<TcpStream>) {
+        drop(tx);
+        let deadline = Instant::now() + self.state.config.drain;
+        while self.state.in_flight() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.state.registry.shutdown();
+    }
+}
+
+/// Shed one connection the accept queue cannot hold: a one-shot 503 and
+/// close, so the peer sees an explicit overload signal instead of a
+/// connection that hangs until some worker frees up.
+fn overloaded(state: &Arc<ServerState>, mut stream: TcpStream) {
+    ServerMetrics::inc(&state.metrics.rejected_overload);
+    let resp = Response::json(
+        503,
+        crate::util::json::Json::obj(vec![(
+            "error",
+            crate::util::json::Json::Str(
+                "server overloaded: accept queue full — retry".into(),
+            ),
+        )]),
+    );
+    let _ = resp.write_to(&mut stream, true);
 }
 
 /// One connection: read requests until EOF/close, dispatch each.
 fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
     // bound idle keep-alive connections
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let peer_ip = stream
+        .peer_addr()
+        .map(|a| a.ip())
+        .unwrap_or(IpAddr::V4(std::net::Ipv4Addr::UNSPECIFIED));
     let reader_stream = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -465,16 +676,43 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
     loop {
         match http::read_request(&mut reader, &mut writer) {
             Ok(Some(req)) => {
-                let t0 = Instant::now();
-                let resp = handlers::route(&state, &req);
-                state.metrics.observe_request(
-                    &handlers::endpoint_label(&req),
-                    t0.elapsed().as_secs_f64(),
-                );
+                // rate caps shed real work, never health probes or the
+                // operator's shutdown path
+                let exempt =
+                    matches!(req.path.as_str(), "/healthz" | "/shutdown");
+                let rate_limited = !exempt && !state.admit(peer_ip);
+                let resp = if rate_limited {
+                    ServerMetrics::inc(&state.metrics.rate_limited);
+                    Response::json(
+                        429,
+                        crate::util::json::Json::obj(vec![(
+                            "error",
+                            crate::util::json::Json::Str(
+                                "rate limit exceeded — retry later".into(),
+                            ),
+                        )]),
+                    )
+                } else {
+                    let t0 = Instant::now();
+                    state.in_flight.fetch_add(1, Ordering::SeqCst);
+                    let resp = handlers::route(&state, &req);
+                    state.metrics.observe_request(
+                        &handlers::endpoint_label(&req),
+                        t0.elapsed().as_secs_f64(),
+                    );
+                    resp
+                };
                 // check the stop flag *after* routing so /shutdown closes
                 // its own connection
                 let close = req.wants_close() || state.stopping();
-                if resp.write_to(&mut writer, close).is_err() || close {
+                let write_res = resp.write_to(&mut writer, close);
+                if !rate_limited {
+                    // decremented only after the response is on the wire:
+                    // the shutdown drain then guarantees an in-flight
+                    // request's bytes were written, not just computed
+                    state.in_flight.fetch_sub(1, Ordering::SeqCst);
+                }
+                if write_res.is_err() || close {
                     return;
                 }
             }

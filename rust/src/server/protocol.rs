@@ -570,11 +570,14 @@ pub fn parse_save(body: &str) -> Result<SaveRequest> {
 /// Where a task request's training labels come from.
 #[derive(Clone, Debug)]
 pub enum TaskLabels {
-    /// `"labels": […]` — inline values (bounded by the body size cap).
-    Inline(Vec<f64>),
-    /// `"labels_file": "y.csv"` — a dataset file column, resolved under
+    /// `"labels": […]` — inline values (bounded by the body size cap),
+    /// output-major: one column per output. The wire shape is either a
+    /// flat numeric array (single output) or one row per data point
+    /// (`[[y0a, y0b], …]`, transposed here).
+    Inline(Vec<Vec<f64>>),
+    /// `"labels_file": "y.csv"` — dataset file columns, resolved under
     /// `--fs-root` and loaded under the serving caps by the handler.
-    File { label: String, path: PathBuf, col: usize },
+    File { label: String, path: PathBuf, cols: Vec<usize> },
 }
 
 /// Parsed `POST /sessions/{name}/task` / `POST /artifacts/{name}/task`
@@ -589,6 +592,10 @@ pub struct TaskRequest {
     pub labels: Option<TaskLabels>,
     /// Query points to predict for (may be empty: fit only).
     pub predict: Vec<Vec<f64>>,
+    /// Serve predictions through the f32 path (krr only — see
+    /// [`FittedTask::predict_f32`](crate::tasks::FittedTask::predict_f32)'s
+    /// precision caveat).
+    pub f32_predict: bool,
     /// Sessions only: take a fresh snapshot before fitting.
     pub refresh: bool,
 }
@@ -608,30 +615,21 @@ pub fn parse_task(body: &str, fs_root: &Path) -> Result<TaskRequest> {
         (Some(_), Some(_)) => {
             bail!("give 'labels' (inline) or 'labels_file', not both")
         }
-        (Some(v), None) => {
-            let arr = v
-                .as_arr()
-                .ok_or_else(|| anyhow!("'labels' must be an array of numbers"))?;
-            let mut out = Vec::with_capacity(arr.len());
-            for (i, l) in arr.iter().enumerate() {
-                match l.as_f64() {
-                    Some(x) if x.is_finite() => out.push(x),
-                    _ => bail!("label {i} is not a finite number"),
-                }
-            }
-            Some(TaskLabels::Inline(out))
-        }
+        (Some(v), None) => Some(TaskLabels::Inline(parse_label_columns(v)?)),
         (None, Some(v)) => {
             let raw = v
                 .as_str()
                 .ok_or_else(|| anyhow!("'labels_file' must be a string path"))?;
             let path = resolve_fs_path(fs_root, raw)
                 .map_err(|e| e.wrap("'labels_file'"))?;
-            Some(TaskLabels::File {
-                label: raw.to_string(),
-                path,
-                col: get_usize(&j, "label_col", 0)?,
-            })
+            let cols = match (field(&j, "label_col"), field(&j, "label_cols")) {
+                (Some(_), Some(_)) => {
+                    bail!("give 'label_col' or 'label_cols', not both")
+                }
+                (None, Some(c)) => parse_label_cols_field(c)?,
+                (_, None) => vec![get_usize(&j, "label_col", 0)?],
+            };
+            Some(TaskLabels::File { label: raw.to_string(), path, cols })
         }
         (None, None) => None,
     };
@@ -647,8 +645,70 @@ pub fn parse_task(body: &str, fs_root: &Path) -> Result<TaskRequest> {
         seed,
         labels,
         predict,
+        f32_predict: get_bool(&j, "f32", false)?,
         refresh: get_bool(&j, "refresh", false)?,
     })
+}
+
+/// Inline `"labels"`: a flat numeric array (one output) or one numeric
+/// row per data point (m outputs, every row the same width). Returned
+/// output-major to match
+/// [`TaskConfig::labels`](crate::tasks::TaskConfig).
+fn parse_label_columns(v: &Json) -> Result<Vec<Vec<f64>>> {
+    let arr = v.as_arr().ok_or_else(|| {
+        anyhow!("'labels' must be an array of numbers or of per-point rows")
+    })?;
+    if arr.is_empty() {
+        bail!("'labels' must not be empty");
+    }
+    if arr[0].as_arr().is_some() {
+        let rows = parse_point_rows(v, "labels")?;
+        let m = rows[0].len();
+        if m == 0 {
+            bail!("labels row 0 must have at least one output");
+        }
+        if let Some(i) = rows.iter().position(|r| r.len() != m) {
+            bail!("labels row {i} has {} outputs but row 0 has {m}", rows[i].len());
+        }
+        // transpose: wire rows are per point, fits want per output
+        Ok((0..m)
+            .map(|j| rows.iter().map(|r| r[j]).collect())
+            .collect())
+    } else {
+        let mut out = Vec::with_capacity(arr.len());
+        for (i, l) in arr.iter().enumerate() {
+            match l.as_f64() {
+                Some(x) if x.is_finite() => out.push(x),
+                _ => bail!("label {i} is not a finite number"),
+            }
+        }
+        Ok(vec![out])
+    }
+}
+
+/// `"label_cols"`: an array of column indices or the CLI's string
+/// spelling (`"0,2-4"` — [`LabelsSpec::parse_cols`]).
+fn parse_label_cols_field(v: &Json) -> Result<Vec<usize>> {
+    use crate::engine::LabelsSpec;
+    if let Some(s) = v.as_str() {
+        return LabelsSpec::parse_cols(s);
+    }
+    let arr = v.as_arr().ok_or_else(|| {
+        anyhow!("'label_cols' must be an array of column indices or a string")
+    })?;
+    if arr.is_empty() {
+        bail!("'label_cols' must not be empty");
+    }
+    let mut out = Vec::with_capacity(arr.len());
+    for c in arr {
+        match c.as_f64() {
+            Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 => {
+                out.push(x as usize)
+            }
+            _ => bail!("'label_cols' entries must be non-negative integers"),
+        }
+    }
+    Ok(out)
 }
 
 /// Parse an array of numeric points (shared by the query and task
@@ -1016,11 +1076,29 @@ mod tests {
         .unwrap();
         assert_eq!(t.ridge, 0.01);
         match &t.labels {
-            Some(TaskLabels::Inline(v)) => assert_eq!(v, &vec![0.0, 1.0, 0.5]),
+            Some(TaskLabels::Inline(v)) => {
+                assert_eq!(v, &vec![vec![0.0, 1.0, 0.5]])
+            }
             other => panic!("unexpected labels {other:?}"),
         }
         assert_eq!(t.predict.len(), 2);
         assert!(t.refresh);
+        assert!(!t.f32_predict);
+        // multi-output inline labels arrive per point and transpose to
+        // output-major columns
+        let t = parse_task(
+            r#"{"task":"krr","labels":[[0,10],[1,20],[0.5,30]],"f32":true}"#,
+            root,
+        )
+        .unwrap();
+        match &t.labels {
+            Some(TaskLabels::Inline(v)) => assert_eq!(
+                v,
+                &vec![vec![0.0, 1.0, 0.5], vec![10.0, 20.0, 30.0]]
+            ),
+            other => panic!("unexpected labels {other:?}"),
+        }
+        assert!(t.f32_predict);
         // labels_file resolves under fs-root, with a column selector
         let t = parse_task(
             r#"{"labels_file":"y/train.csv","label_col":3}"#,
@@ -1028,10 +1106,33 @@ mod tests {
         )
         .unwrap();
         match &t.labels {
-            Some(TaskLabels::File { label, path, col }) => {
+            Some(TaskLabels::File { label, path, cols }) => {
                 assert_eq!(label, "y/train.csv");
                 assert!(path.ends_with("y/train.csv"));
-                assert_eq!(*col, 3);
+                assert_eq!(cols, &vec![3]);
+            }
+            other => panic!("unexpected labels {other:?}"),
+        }
+        // label_cols: an index array or the CLI's range spelling
+        let t = parse_task(
+            r#"{"labels_file":"y.csv","label_cols":[0,2]}"#,
+            root,
+        )
+        .unwrap();
+        match &t.labels {
+            Some(TaskLabels::File { cols, .. }) => {
+                assert_eq!(cols, &vec![0, 2])
+            }
+            other => panic!("unexpected labels {other:?}"),
+        }
+        let t = parse_task(
+            r#"{"labels_file":"y.csv","label_cols":"1-3"}"#,
+            root,
+        )
+        .unwrap();
+        match &t.labels {
+            Some(TaskLabels::File { cols, .. }) => {
+                assert_eq!(cols, &vec![1, 2, 3])
             }
             other => panic!("unexpected labels {other:?}"),
         }
@@ -1044,7 +1145,20 @@ mod tests {
         .is_err());
         assert!(parse_task(r#"{"labels_file":"../y.csv"}"#, root).is_err());
         assert!(parse_task(r#"{"labels":[1,"x"]}"#, root).is_err());
+        assert!(parse_task(r#"{"labels":[]}"#, root).is_err());
+        assert!(parse_task(r#"{"labels":[[1,2],[3]]}"#, root).is_err());
         assert!(parse_task(r#"{"predict":[[1,null]]}"#, root).is_err());
+        assert!(parse_task(
+            r#"{"labels_file":"y.csv","label_col":0,"label_cols":[1]}"#,
+            root
+        )
+        .is_err());
+        assert!(parse_task(
+            r#"{"labels_file":"y.csv","label_cols":[]}"#,
+            root
+        )
+        .is_err());
+        assert!(parse_task(r#"{"f32":"yes"}"#, root).is_err());
     }
 
     #[test]

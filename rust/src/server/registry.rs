@@ -108,10 +108,10 @@ pub struct SessionShared {
 pub struct CachedTask {
     /// Canonical rendering of the task config + labels checksum + k.
     pub key: String,
-    /// The exact labels the model was fit with — compared on every hit,
-    /// because the key only carries a 64-bit hash of them and FNV is
-    /// not collision-resistant.
-    pub labels: Option<Vec<f64>>,
+    /// The exact label columns (output-major) the model was fit with —
+    /// compared on every hit, because the key only carries a 64-bit
+    /// hash of them and FNV is not collision-resistant.
+    pub labels: Option<Vec<Vec<f64>>>,
     pub model: Arc<crate::tasks::FittedTask>,
 }
 

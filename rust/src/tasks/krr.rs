@@ -21,20 +21,30 @@
 //! k(z, x_{Λ(t)})`), which is what makes a stored model dataset-free:
 //! an artifact's `Z_Λ` and kernel parameters are all it ever needs.
 
-use crate::linalg::{pinv_psd, Cholesky};
+use crate::linalg::{pinv_psd, Cholesky, Mat};
 use crate::nystrom::{nystrom_factor, NystromApprox};
 use crate::Result;
 use crate::bail;
 
 /// A fitted Nyström KRR model: the ridge and the landmark-space dual
 /// weights β (`f(z) = b(z)ᵀ β`).
+///
+/// Multi-output fits ([`fit_multi`](KrrModel::fit_multi)) share one
+/// factorization across m label columns; `beta` then holds m weight
+/// vectors back to back (output-major: output j is
+/// `beta[j·k .. (j+1)·k]`). Single-output models have `outputs == 1` and
+/// are bit-identical to what [`fit`](KrrModel::fit) has always produced.
 #[derive(Clone, Debug)]
 pub struct KrrModel {
     /// Ridge λ the model was fit with.
     pub lambda: f64,
-    /// Landmark-space dual weights (length k, selection order).
+    /// Landmark-space dual weights (`outputs` blocks of length k,
+    /// selection order within each block).
     pub beta: Vec<f64>,
-    /// Root-mean-square error of the in-sample fit `C β` against y.
+    /// Number of outputs m the model predicts per query point (≥ 1).
+    pub outputs: usize,
+    /// Root-mean-square error of the in-sample fit `C β` against y,
+    /// pooled over all outputs.
     pub train_rmse: f64,
 }
 
@@ -43,15 +53,39 @@ impl KrrModel {
     /// one label per data point; `lambda` must be > 0 (λ = 0 would ask
     /// for the pseudo-inverse of a rank-deficient G̃).
     pub fn fit(approx: &NystromApprox, y: &[f64], lambda: f64) -> Result<KrrModel> {
+        Self::fit_multi(approx, std::slice::from_ref(&y.to_vec()), lambda)
+    }
+
+    /// Fit m outputs against one shared factorization: the O(nk²)
+    /// Gram assembly `A = λI + ΦᵀΦ` and its Cholesky are computed once,
+    /// and only the O(nk)-per-column Woodbury back-substitutions repeat —
+    /// fitting m label columns costs barely more than fitting one.
+    /// `ys` is output-major: `ys[j]` holds output j's label per data
+    /// point. With m = 1 every operation matches
+    /// [`fit`](KrrModel::fit)'s historical sequence, so single-output
+    /// fits stay bit-identical.
+    pub fn fit_multi(
+        approx: &NystromApprox,
+        ys: &[Vec<f64>],
+        lambda: f64,
+    ) -> Result<KrrModel> {
         let (n, k) = (approx.n(), approx.k());
-        if y.len() != n {
-            bail!("krr: {} labels for n = {n} data points", y.len());
+        if ys.is_empty() {
+            bail!("krr: at least one label column is required");
+        }
+        for (j, y) in ys.iter().enumerate() {
+            if y.len() != n {
+                bail!(
+                    "krr: output {j} has {} labels for n = {n} data points",
+                    y.len()
+                );
+            }
+            if let Some(bad) = y.iter().find(|v| !v.is_finite()) {
+                bail!("krr: output {j} label {bad} is not finite");
+            }
         }
         if !(lambda.is_finite() && lambda > 0.0) {
             bail!("krr: ridge must be a finite number > 0 (got {lambda})");
-        }
-        if let Some(bad) = y.iter().find(|v| !v.is_finite()) {
-            bail!("krr: label {bad} is not finite");
         }
         let phi = nystrom_factor(approx); // n×k
         // A = λI + ΦᵀΦ (k×k, SPD for λ > 0; dedicated Gram kernel)
@@ -59,49 +93,133 @@ impl KrrModel {
         for i in 0..k {
             *a.at_mut(i, i) += lambda;
         }
-        // Φᵀ y / Cᵀ α below use Mat::t_matvec: the n×k factors are the
-        // fit's dominant allocation, so nothing may materialize their
-        // transpose
-        let phity = phi.t_matvec(y);
-        let z = match Cholesky::new(&a) {
-            Some(ch) => ch.solve(&phity),
-            // λ > 0 makes A PD in exact arithmetic; fall back to the
-            // pseudo-inverse if rounding starved a pivot anyway
-            None => pinv_psd(&a, 1e-14).matvec(&phity),
-        };
-        // α = (y − Φ z) / λ
-        let phiz = phi.matvec(&z);
-        let inv_l = 1.0 / lambda;
-        let alpha: Vec<f64> =
-            y.iter().zip(&phiz).map(|(yi, pi)| (yi - pi) * inv_l).collect();
-        // β = W⁻¹ (Cᵀ α): the dual weights moved into landmark space
-        let cta = approx.c.t_matvec(&alpha);
-        let beta = approx.winv.matvec(&cta);
-        // in-sample fit f(xᵢ) = G̃(i,·) α = C(i,·) β
-        let fitted = approx.c.matvec(&beta);
-        let sse: f64 = fitted
-            .iter()
-            .zip(y)
-            .map(|(f, yi)| (f - yi) * (f - yi))
-            .sum();
+        // λ > 0 makes A PD in exact arithmetic; fall back to the
+        // pseudo-inverse if rounding starved a pivot anyway. Either
+        // factorization is computed once and reused for every output.
+        let chol = Cholesky::new(&a);
+        let pinv = if chol.is_none() { Some(pinv_psd(&a, 1e-14)) } else { None };
+        let mut beta = Vec::with_capacity(k * ys.len());
+        let mut sse = 0.0;
+        for y in ys {
+            // Φᵀ y / Cᵀ α below use Mat::t_matvec: the n×k factors are
+            // the fit's dominant allocation, so nothing may materialize
+            // their transpose
+            let phity = phi.t_matvec(y);
+            let z = match &chol {
+                Some(ch) => ch.solve(&phity),
+                None => pinv.as_ref().unwrap().matvec(&phity),
+            };
+            // α = (y − Φ z) / λ
+            let phiz = phi.matvec(&z);
+            let inv_l = 1.0 / lambda;
+            let alpha: Vec<f64> =
+                y.iter().zip(&phiz).map(|(yi, pi)| (yi - pi) * inv_l).collect();
+            // β = W⁻¹ (Cᵀ α): the dual weights moved into landmark space
+            let cta = approx.c.t_matvec(&alpha);
+            let bj = approx.winv.matvec(&cta);
+            // in-sample fit f(xᵢ) = G̃(i,·) α = C(i,·) β
+            let fitted = approx.c.matvec(&bj);
+            sse += fitted
+                .iter()
+                .zip(y)
+                .map(|(f, yi)| (f - yi) * (f - yi))
+                .sum::<f64>();
+            beta.extend_from_slice(&bj);
+        }
         Ok(KrrModel {
             lambda,
             beta,
-            train_rmse: (sse / n as f64).sqrt(),
+            outputs: ys.len(),
+            train_rmse: (sse / (n * ys.len()) as f64).sqrt(),
         })
     }
 
+    /// The landmark count k the model was fit with.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.beta.len() / self.outputs
+    }
+
+    /// Output j's weight vector (length k).
+    #[inline]
+    pub fn output_beta(&self, j: usize) -> &[f64] {
+        let k = self.k();
+        &self.beta[j * k..(j + 1) * k]
+    }
+
     /// `f(z) = b(z)ᵀ β` for a precomputed landmark row
-    /// ([`landmark_row`](super::landmark_row)).
+    /// ([`landmark_row`](super::landmark_row)). Single-output models
+    /// only; multi-output callers use
+    /// [`predict_block`](KrrModel::predict_block).
     #[inline]
     pub fn predict_row(&self, b: &[f64]) -> f64 {
+        debug_assert_eq!(self.outputs, 1);
         crate::linalg::matrix::dot(b, &self.beta)
     }
 
-    /// In-sample predictions `C β` (one per training point) — cheap to
-    /// recompute, so they are not stored in the model.
+    /// Batched prediction: one B×m value matrix from a B×k landmark
+    /// block ([`landmark_block`](super::landmark_block)). Single-output
+    /// models go through `Mat::matvec` — per row the same 4-way unrolled
+    /// `dot` as [`predict_row`](KrrModel::predict_row), so a batch of B
+    /// points is bit-identical to B single-point calls. Multi-output
+    /// models run one blocked B×k × k×m matmul.
+    pub fn predict_block(&self, b: &Mat) -> Mat {
+        assert_eq!(b.cols, self.k(), "landmark block must be B×k");
+        if self.outputs == 1 {
+            Mat::from_vec(b.rows, 1, b.matvec(&self.beta))
+        } else {
+            // beta is output-major (m×k); the matmul wants k×m
+            let mut bm = Mat::zeros(self.k(), self.outputs);
+            for j in 0..self.outputs {
+                let col = self.output_beta(j);
+                for (t, &v) in col.iter().enumerate() {
+                    *bm.at_mut(t, j) = v;
+                }
+            }
+            b.matmul(&bm)
+        }
+    }
+
+    /// β cast to f32 for the f32 serving path (cast once per request,
+    /// not per point).
+    pub fn beta_f32(&self) -> Vec<f32> {
+        self.beta.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Batched prediction in single precision end to end: `block` is a
+    /// row-major B×k landmark block already cast to f32
+    /// ([`landmark_block_f32`](super::landmark_block_f32)), `beta` the
+    /// cached [`beta_f32`](KrrModel::beta_f32). Accumulation happens in
+    /// f32 (that is the point of the mode — see the store's precision
+    /// caveat), so values differ from the f64 path at single-precision
+    /// scale. Returns B×m values, row-major.
+    pub fn predict_block_f32(&self, block: &[f32], beta: &[f32]) -> Vec<f32> {
+        let k = self.k();
+        assert_eq!(beta.len(), self.beta.len(), "beta_f32 length");
+        let rows = if k == 0 { 0 } else { block.len() / k };
+        let mut out = Vec::with_capacity(rows * self.outputs);
+        for i in 0..rows {
+            let b = &block[i * k..(i + 1) * k];
+            for j in 0..self.outputs {
+                out.push(crate::linalg::matrix::dot_f32(b, &beta[j * k..(j + 1) * k]));
+            }
+        }
+        out
+    }
+
+    /// In-sample predictions `C β` (one per training point) for output
+    /// j — cheap to recompute, so they are not stored in the model.
+    pub fn predict_in_sample_output(
+        &self,
+        approx: &NystromApprox,
+        j: usize,
+    ) -> Vec<f64> {
+        approx.c.matvec(self.output_beta(j))
+    }
+
+    /// In-sample predictions `C β` for single-output models.
     pub fn predict_in_sample(&self, approx: &NystromApprox) -> Vec<f64> {
-        approx.c.matvec(&self.beta)
+        self.predict_in_sample_output(approx, 0)
     }
 }
 
@@ -196,6 +314,28 @@ mod tests {
         let mut bad = y.clone();
         bad[3] = f64::INFINITY;
         assert!(KrrModel::fit(&approx, &bad, 1e-3).is_err());
+    }
+
+    /// `fit` is the one-column case of `fit_multi`, bit for bit — the
+    /// multi-output refactor must not move single-output numerics.
+    #[test]
+    fn fit_is_single_column_fit_multi() {
+        let (approx, _, _, y) = full_rank_setup();
+        let a = KrrModel::fit(&approx, &y, 1e-4).unwrap();
+        let b = KrrModel::fit_multi(&approx, &[y.clone()], 1e-4).unwrap();
+        assert_eq!(a.outputs, 1);
+        assert_eq!(a.k(), approx.k());
+        for (x, z) in a.beta.iter().zip(&b.beta) {
+            assert_eq!(x.to_bits(), z.to_bits());
+        }
+        assert_eq!(a.train_rmse.to_bits(), b.train_rmse.to_bits());
+        // empty label sets are rejected
+        assert!(KrrModel::fit_multi(&approx, &[], 1e-4).is_err());
+        // ragged columns are rejected
+        assert!(
+            KrrModel::fit_multi(&approx, &[y.clone(), y[..10].to_vec()], 1e-4)
+                .is_err()
+        );
     }
 
     /// Fits are deterministic functions of the factor bits: refitting

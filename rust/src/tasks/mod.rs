@@ -42,6 +42,7 @@ pub use krr::KrrModel;
 
 use crate::data::Dataset;
 use crate::kernels::Kernel;
+use crate::linalg::Mat;
 use crate::nystrom::NystromApprox;
 use crate::util::json::Json;
 use crate::Result;
@@ -103,8 +104,10 @@ pub struct TaskConfig {
     pub clusters: usize,
     /// K-means seeding RNG (cluster task).
     pub seed: u64,
-    /// Training labels, one per data point (KRR only).
-    pub labels: Option<Vec<f64>>,
+    /// Training labels (KRR only), output-major: one column per output,
+    /// each holding one label per data point. Single-output KRR is the
+    /// one-column case.
+    pub labels: Option<Vec<Vec<f64>>>,
 }
 
 impl TaskConfig {
@@ -129,8 +132,25 @@ impl TaskConfig {
                 if !(self.ridge.is_finite() && self.ridge > 0.0) {
                     bail!("krr ridge must be a finite number > 0");
                 }
-                if self.labels.is_none() {
-                    bail!("krr needs training labels (one per data point)");
+                match &self.labels {
+                    None => {
+                        bail!("krr needs training labels (one per data point)")
+                    }
+                    Some(cols) => {
+                        if cols.is_empty() {
+                            bail!("krr needs at least one label column");
+                        }
+                        let n = cols[0].len();
+                        if let Some(j) =
+                            cols.iter().position(|c| c.len() != n)
+                        {
+                            bail!(
+                                "krr label column {j} has {} labels but \
+                                 column 0 has {n}",
+                                cols[j].len()
+                            );
+                        }
+                    }
                 }
             }
             TaskKind::Kpca => {
@@ -174,8 +194,11 @@ pub struct TaskFit {
 /// Per-point predictions, shaped by the task.
 #[derive(Clone, Debug)]
 pub enum TaskPrediction {
-    /// KRR: one regression value per query point.
+    /// Single-output KRR: one regression value per query point.
     Values(Vec<f64>),
+    /// Multi-output KRR: one m-vector of regression values per query
+    /// point.
+    Matrix(Vec<Vec<f64>>),
     /// KPCA: one d-vector of embedding coordinates per query point.
     Embeddings(Vec<Vec<f64>>),
     /// Cluster: one label per query point, plus its embedding.
@@ -190,15 +213,33 @@ impl TaskPrediction {
             TaskPrediction::Values(v) => {
                 Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
             }
-            TaskPrediction::Embeddings(rows) => Json::Arr(
-                rows.iter()
-                    .map(|r| Json::Arr(r.iter().map(|&x| Json::Num(x)).collect()))
-                    .collect(),
-            ),
+            TaskPrediction::Matrix(rows) | TaskPrediction::Embeddings(rows) => {
+                Json::Arr(
+                    rows.iter()
+                        .map(|r| {
+                            Json::Arr(r.iter().map(|&x| Json::Num(x)).collect())
+                        })
+                        .collect(),
+                )
+            }
             TaskPrediction::Labels { labels, .. } => {
                 Json::Arr(labels.iter().map(|&l| Json::Num(l as f64)).collect())
             }
         }
+    }
+
+    /// Number of query points predicted for.
+    pub fn len(&self) -> usize {
+        match self {
+            TaskPrediction::Values(v) => v.len(),
+            TaskPrediction::Matrix(rows) => rows.len(),
+            TaskPrediction::Embeddings(rows) => rows.len(),
+            TaskPrediction::Labels { labels, .. } => labels.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -221,6 +262,60 @@ pub fn landmark_row(
     Ok((0..selected.n()).map(|t| kernel.eval(z, selected.point(t))).collect())
 }
 
+/// [`landmark_row`] blocked: the B×k landmark matrix for a batch of
+/// query points, one [`Kernel::eval_rows`] sweep over the contiguous
+/// selected-point storage per query point instead of B·k virtual `eval`
+/// calls. `eval_rows` is contractually bit-identical to the per-entry
+/// loop (tested per kernel), so row i of the result carries exactly
+/// `landmark_row(kernel, selected, &points[i])`'s bits — the serving
+/// batch path and the historical single-point path cannot drift.
+pub fn landmark_block(
+    kernel: &dyn Kernel,
+    selected: &Dataset,
+    points: &[Vec<f64>],
+) -> Result<Mat> {
+    let (k, dim) = (selected.n(), selected.dim());
+    let rows = selected.flat();
+    let mut out = Mat::zeros(points.len(), k);
+    for (i, z) in points.iter().enumerate() {
+        if z.len() != dim {
+            bail!(
+                "query point {i} has dimension {} but the model's landmarks \
+                 have {dim}",
+                z.len()
+            );
+        }
+        kernel.eval_rows(rows, dim, z, out.row_mut(i));
+    }
+    Ok(out)
+}
+
+/// [`landmark_block`] for the f32 serving mode: kernel entries are cast
+/// to f32 as they are produced, yielding the row-major B×k block the
+/// f32 predictor consumes. Returns `(block, k)`.
+pub fn landmark_block_f32(
+    kernel: &dyn Kernel,
+    selected: &Dataset,
+    points: &[Vec<f64>],
+) -> Result<(Vec<f32>, usize)> {
+    let (k, dim) = (selected.n(), selected.dim());
+    let rows = selected.flat();
+    let mut scratch = vec![0.0f64; k];
+    let mut out = Vec::with_capacity(points.len() * k);
+    for (i, z) in points.iter().enumerate() {
+        if z.len() != dim {
+            bail!(
+                "query point {i} has dimension {} but the model's landmarks \
+                 have {dim}",
+                z.len()
+            );
+        }
+        kernel.eval_rows(rows, dim, z, &mut scratch);
+        out.extend(scratch.iter().map(|&v| v as f32));
+    }
+    Ok((out, k))
+}
+
 impl FittedTask {
     pub fn kind(&self) -> TaskKind {
         match self {
@@ -237,11 +332,13 @@ impl FittedTask {
         cfg.validate()?;
         Ok(match cfg.kind {
             TaskKind::Krr => {
-                let y = cfg.labels.as_deref().ok_or_else(|| {
+                let ys = cfg.labels.as_deref().ok_or_else(|| {
                     anyhow!("krr needs training labels (one per data point)")
                 })?;
                 TaskFit {
-                    model: FittedTask::Krr(KrrModel::fit(approx, y, cfg.ridge)?),
+                    model: FittedTask::Krr(KrrModel::fit_multi(
+                        approx, ys, cfg.ridge,
+                    )?),
                     cluster_labels: None,
                 }
             }
@@ -268,6 +365,14 @@ impl FittedTask {
     /// selected points are evaluated against (`selected` row t must be
     /// the point of factor column t — a session's dataset selection or
     /// an artifact's stored `Z_Λ`).
+    ///
+    /// This is the serving hot path, and it is *blocked*: the B×k
+    /// landmark matrix is built with one [`landmark_block`] kernel sweep
+    /// per point, and KRR values come from a single B×k matvec/matmul
+    /// against β instead of a per-point `landmark_row` loop. Because
+    /// both blocks are bit-identical to their per-point equivalents (see
+    /// [`landmark_block`] and [`KrrModel::predict_block`]), a B = 1
+    /// request returns exactly the bits this method always has.
     pub fn predict(
         &self,
         kernel: &dyn Kernel,
@@ -276,26 +381,28 @@ impl FittedTask {
     ) -> Result<TaskPrediction> {
         let _span = crate::obs::span("task_predict", "tasks");
         self.check_landmarks(selected)?;
+        let block = landmark_block(kernel, selected, points)?;
         Ok(match self {
             FittedTask::Krr(m) => {
-                let mut out = Vec::with_capacity(points.len());
-                for z in points {
-                    out.push(m.predict_row(&landmark_row(kernel, selected, z)?));
+                let values = m.predict_block(&block);
+                if m.outputs == 1 {
+                    TaskPrediction::Values(values.data)
+                } else {
+                    TaskPrediction::Matrix(
+                        (0..values.rows)
+                            .map(|i| values.row(i).to_vec())
+                            .collect(),
+                    )
                 }
-                TaskPrediction::Values(out)
             }
-            FittedTask::Kpca(m) => {
-                let mut out = Vec::with_capacity(points.len());
-                for z in points {
-                    out.push(m.project_row(&landmark_row(kernel, selected, z)?));
-                }
-                TaskPrediction::Embeddings(out)
-            }
+            FittedTask::Kpca(m) => TaskPrediction::Embeddings(
+                (0..block.rows).map(|i| m.project_row(block.row(i))).collect(),
+            ),
             FittedTask::Cluster(m) => {
                 let mut labels = Vec::with_capacity(points.len());
                 let mut embeddings = Vec::with_capacity(points.len());
-                for z in points {
-                    let (l, e) = m.assign_row(&landmark_row(kernel, selected, z)?);
+                for i in 0..block.rows {
+                    let (l, e) = m.assign_row(block.row(i));
                     labels.push(l);
                     embeddings.push(e);
                 }
@@ -304,12 +411,57 @@ impl FittedTask {
         })
     }
 
+    /// The f32 serving mode: landmark block and matvec both run in
+    /// single precision ([`landmark_block_f32`],
+    /// [`KrrModel::predict_block_f32`]), values are widened back to f64
+    /// only for the response. KRR only — the eigen-space tasks have no
+    /// f32 path — and opt-in per request: expect values to differ from
+    /// the f64 path at single-precision scale (~1e-6 relative; worse for
+    /// ill-conditioned β).
+    pub fn predict_f32(
+        &self,
+        kernel: &dyn Kernel,
+        selected: &Dataset,
+        points: &[Vec<f64>],
+    ) -> Result<TaskPrediction> {
+        let _span = crate::obs::span("task_predict_f32", "tasks");
+        self.check_landmarks(selected)?;
+        let m = match self {
+            FittedTask::Krr(m) => m,
+            other => bail!(
+                "f32 prediction is only available for krr models (got {})",
+                other.kind().as_str()
+            ),
+        };
+        let (block, _k) = landmark_block_f32(kernel, selected, points)?;
+        let beta = m.beta_f32();
+        let flat = m.predict_block_f32(&block, &beta);
+        Ok(if m.outputs == 1 {
+            TaskPrediction::Values(flat.iter().map(|&v| v as f64).collect())
+        } else {
+            TaskPrediction::Matrix(
+                flat.chunks_exact(m.outputs)
+                    .map(|r| r.iter().map(|&v| v as f64).collect())
+                    .collect(),
+            )
+        })
+    }
+
     /// The landmark count k the model was fit with.
     pub fn k(&self) -> usize {
         match self {
-            FittedTask::Krr(m) => m.beta.len(),
+            FittedTask::Krr(m) => m.k(),
             FittedTask::Kpca(m) => m.proj.rows,
             FittedTask::Cluster(m) => m.embedding.proj.rows,
+        }
+    }
+
+    /// Outputs per query point (KRR label columns; 1 for every other
+    /// task).
+    pub fn outputs(&self) -> usize {
+        match self {
+            FittedTask::Krr(m) => m.outputs,
+            _ => 1,
         }
     }
 
@@ -331,7 +483,8 @@ impl FittedTask {
         match self {
             FittedTask::Krr(m) => Json::obj(vec![
                 ("task", Json::Str("krr".into())),
-                ("k", Json::Num(m.beta.len() as f64)),
+                ("k", Json::Num(m.k() as f64)),
+                ("outputs", Json::Num(m.outputs as f64)),
                 ("ridge", Json::Num(m.lambda)),
                 ("train_rmse", Json::Num(m.train_rmse)),
             ]),
@@ -385,8 +538,13 @@ mod tests {
     fn config_validation() {
         let mut krr = TaskConfig::new(TaskKind::Krr);
         assert!(krr.validate().is_err(), "labels required");
-        krr.labels = Some(vec![0.0; 4]);
+        krr.labels = Some(vec![vec![0.0; 4]]);
         assert!(krr.validate().is_ok());
+        krr.labels = Some(vec![]);
+        assert!(krr.validate().is_err(), "at least one label column");
+        krr.labels = Some(vec![vec![0.0; 4], vec![0.0; 3]]);
+        assert!(krr.validate().is_err(), "ragged label columns");
+        krr.labels = Some(vec![vec![0.0; 4]]);
         krr.ridge = 0.0;
         assert!(krr.validate().is_err(), "ridge must be > 0");
 
@@ -407,7 +565,7 @@ mod tests {
         let points = vec![vec![0.4, 0.1], vec![-0.5, 0.3]];
 
         let mut cfg = TaskConfig::new(TaskKind::Krr);
-        cfg.labels = Some(labels);
+        cfg.labels = Some(vec![labels]);
         let fit = FittedTask::fit(&approx, &cfg).unwrap();
         assert_eq!(fit.model.kind(), TaskKind::Krr);
         match fit.model.predict(&kern, &selected, &points).unwrap() {
@@ -444,5 +602,146 @@ mod tests {
             .model
             .predict(&kern, &selected, &[vec![1.0]])
             .is_err());
+    }
+
+    /// The blocked landmark matrix must carry exactly `landmark_row`'s
+    /// bits per row — the serving batch path and the single-point path
+    /// are the same numbers, not merely close ones.
+    #[test]
+    fn landmark_block_bit_equals_landmark_row() {
+        let (approx, ds, kern) = approx_of(45);
+        let selected = ds.select(&approx.indices);
+        let points: Vec<Vec<f64>> =
+            (0..9).map(|i| ds.point(i * 5).to_vec()).collect();
+        let block = landmark_block(&kern, &selected, &points).unwrap();
+        assert_eq!((block.rows, block.cols), (9, selected.n()));
+        for (i, z) in points.iter().enumerate() {
+            let row = landmark_row(&kern, &selected, z).unwrap();
+            for (a, b) in block.row(i).iter().zip(&row) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+            }
+        }
+        // dimension mismatch anywhere in the batch is a clean error
+        assert!(landmark_block(&kern, &selected, &[vec![1.0]]).is_err());
+    }
+
+    /// A KRR batch of B points must be bit-identical to B single-point
+    /// predictions — the acceptance bar for the blocked serving path.
+    #[test]
+    fn krr_batched_predict_bit_equals_looped() {
+        let (approx, ds, kern) = approx_of(60);
+        let selected = ds.select(&approx.indices);
+        let labels: Vec<f64> = (0..60).map(|i| ((i * 7) % 5) as f64).collect();
+        let mut cfg = TaskConfig::new(TaskKind::Krr);
+        cfg.labels = Some(vec![labels]);
+        let fit = FittedTask::fit(&approx, &cfg).unwrap();
+        let points: Vec<Vec<f64>> =
+            (0..24).map(|i| ds.point((i * 2) % 60).to_vec()).collect();
+        let batched = match fit.model.predict(&kern, &selected, &points).unwrap()
+        {
+            TaskPrediction::Values(v) => v,
+            other => panic!("unexpected prediction {other:?}"),
+        };
+        let m = match &fit.model {
+            FittedTask::Krr(m) => m,
+            _ => unreachable!(),
+        };
+        for (i, z) in points.iter().enumerate() {
+            let one =
+                m.predict_row(&landmark_row(&kern, &selected, z).unwrap());
+            assert_eq!(batched[i].to_bits(), one.to_bits(), "point {i}");
+        }
+    }
+
+    /// Multi-output fits share one factorization; each output's column
+    /// of the batched prediction matrix must match a dedicated
+    /// single-output fit on that label column (same factors, same λ ⇒
+    /// same β, up to the blocked-matmul accumulation order).
+    #[test]
+    fn multi_output_krr_matches_per_output_fits() {
+        let (approx, ds, kern) = approx_of(60);
+        let selected = ds.select(&approx.indices);
+        let y0: Vec<f64> = (0..60).map(|i| (i % 2) as f64).collect();
+        let y1: Vec<f64> =
+            (0..60).map(|i| (i as f64 * 0.31).sin()).collect();
+        let mut cfg = TaskConfig::new(TaskKind::Krr);
+        cfg.labels = Some(vec![y0.clone(), y1.clone()]);
+        let fit = FittedTask::fit(&approx, &cfg).unwrap();
+        assert_eq!(fit.model.outputs(), 2);
+        assert_eq!(fit.model.k(), selected.n());
+        let multi = match &fit.model {
+            FittedTask::Krr(m) => m.clone(),
+            _ => unreachable!(),
+        };
+        let solo0 = KrrModel::fit(&approx, &y0, cfg.ridge).unwrap();
+        let solo1 = KrrModel::fit(&approx, &y1, cfg.ridge).unwrap();
+        // the shared factorization reproduces each dedicated fit's β bits
+        for (a, b) in multi.output_beta(0).iter().zip(&solo0.beta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in multi.output_beta(1).iter().zip(&solo1.beta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let points = vec![ds.point(3).to_vec(), ds.point(40).to_vec()];
+        let rows = match fit.model.predict(&kern, &selected, &points).unwrap()
+        {
+            TaskPrediction::Matrix(rows) => rows,
+            other => panic!("unexpected prediction {other:?}"),
+        };
+        assert_eq!((rows.len(), rows[0].len()), (2, 2));
+        for (i, z) in points.iter().enumerate() {
+            let b = landmark_row(&kern, &selected, z).unwrap();
+            let want0 = solo0.predict_row(&b);
+            let want1 = solo1.predict_row(&b);
+            // blocked matmul may re-associate; agreement is to rounding
+            assert!((rows[i][0] - want0).abs() < 1e-10, "point {i} out 0");
+            assert!((rows[i][1] - want1).abs() < 1e-10, "point {i} out 1");
+        }
+    }
+
+    /// The f32 serving path tracks the f64 path to single-precision
+    /// tolerance, and refuses non-KRR models cleanly.
+    #[test]
+    fn f32_predict_parity_and_guards() {
+        let (approx, ds, kern) = approx_of(60);
+        let selected = ds.select(&approx.indices);
+        let labels: Vec<f64> = (0..60).map(|i| (i % 3) as f64).collect();
+        let mut cfg = TaskConfig::new(TaskKind::Krr);
+        cfg.labels = Some(vec![labels]);
+        let fit = FittedTask::fit(&approx, &cfg).unwrap();
+        let points: Vec<Vec<f64>> =
+            (0..17).map(|i| ds.point(i * 3).to_vec()).collect();
+        let f64v = match fit.model.predict(&kern, &selected, &points).unwrap()
+        {
+            TaskPrediction::Values(v) => v,
+            other => panic!("unexpected prediction {other:?}"),
+        };
+        let f32v = match fit
+            .model
+            .predict_f32(&kern, &selected, &points)
+            .unwrap()
+        {
+            TaskPrediction::Values(v) => v,
+            other => panic!("unexpected prediction {other:?}"),
+        };
+        let scale = fit
+            .model
+            .k() as f64
+            * match &fit.model {
+                FittedTask::Krr(m) => {
+                    m.beta.iter().fold(0.0f64, |a, &b| a.max(b.abs()))
+                }
+                _ => unreachable!(),
+            };
+        for (a, b) in f64v.iter().zip(&f32v) {
+            assert!(
+                (a - b).abs() <= 1e-5 * scale.max(1.0),
+                "{a} vs {b} (scale {scale})"
+            );
+        }
+        // non-KRR models have no f32 path
+        let kp = FittedTask::fit(&approx, &TaskConfig::new(TaskKind::Kpca))
+            .unwrap();
+        assert!(kp.model.predict_f32(&kern, &selected, &points).is_err());
     }
 }

@@ -18,7 +18,7 @@ use oasis::sampling::{
     oasis::Oasis, run_to_completion, ImplicitOracle, SamplerSession,
     StoppingRule,
 };
-use oasis::server::http::client_request;
+use oasis::server::http::{client_request, ClientConn};
 use oasis::server::{Server, ServerConfig};
 use oasis::util::json::Json;
 use std::net::SocketAddr;
@@ -36,8 +36,11 @@ fn start_server() -> (SocketAddr, std::thread::JoinHandle<()>) {
 fn start_server_rooted(
     root: PathBuf,
 ) -> (SocketAddr, std::thread::JoinHandle<()>) {
-    let server = Server::bind_with("127.0.0.1:0", ServerConfig { fs_root: root })
-        .expect("bind ephemeral port");
+    let server = Server::bind_with(
+        "127.0.0.1:0",
+        ServerConfig { fs_root: root, ..Default::default() },
+    )
+    .expect("bind ephemeral port");
     let addr = server.local_addr().unwrap();
     let join = std::thread::spawn(move || server.run().expect("server run"));
     (addr, join)
@@ -780,7 +783,7 @@ fn krr_task_parity_cli_live_artifact_over_socket() {
     spec.labels = Some(oasis::engine::LabelsSpec {
         label: "labels.csv".into(),
         path: root.join("labels.csv"),
-        col: 0,
+        cols: vec![0],
     });
     let cfg = SessionBuilder::new().resolve_task(&spec).unwrap();
     let fit = oasis::tasks::FittedTask::fit(&artifact.approx, &cfg).unwrap();
@@ -959,6 +962,243 @@ fn prometheus_exposition_and_healthz_over_socket() {
     );
 
     stop_server(addr, join);
+}
+
+/// Server with a custom config on an ephemeral port.
+fn start_server_with(
+    config: ServerConfig,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let server =
+        Server::bind_with("127.0.0.1:0", config).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let join = std::thread::spawn(move || server.run().expect("server run"));
+    (addr, join)
+}
+
+/// ACCEPTANCE (production serving): a multi-output KRR model fit once
+/// over the wire, then a B-point batched predict on a single kept-alive
+/// connection — bit-identical to the same points sent one per request —
+/// plus the f32 serving mode and the predict histograms in `/metrics`.
+#[test]
+fn batched_multi_output_predict_over_one_keep_alive_connection() {
+    let (addr, join) = start_server();
+
+    // every exchange in this test reuses ONE connection: if the server
+    // dropped it between requests, the next request() would error
+    let mut conn = ClientConn::connect(addr).expect("connect");
+    let mut exchange = |method: &str, path: &str, body: &str| -> (u16, Json) {
+        let (status, raw) =
+            conn.request(method, path, body).expect("keep-alive exchange");
+        let json = Json::parse(&raw)
+            .unwrap_or_else(|e| panic!("bad JSON body {e}: {raw}"));
+        (status, json)
+    };
+
+    let n = 140;
+    let create = format!(
+        r#"{{"name":"bp",
+            "dataset":{{"generator":"two-moons","n":{n},"seed":17}},
+            "kernel":{{"type":"gaussian","sigma":0.7}},
+            "method":"oasis","max_cols":24,"init_cols":4,"seed":5}}"#
+    );
+    let (status, j) = exchange("POST", "/sessions", &create);
+    assert_eq!(status, 200, "{j}");
+    let (status, j) = exchange("POST", "/sessions/bp/step", r#"{"budget":24}"#);
+    assert_eq!(status, 200, "{j}");
+
+    // multi-output fit: per-point [class, drift] label rows
+    let rows: Vec<String> = (0..n)
+        .map(|i| format!("[{},{}]", (i % 2) as f64, i as f64 * 0.01))
+        .collect();
+    let queries = [[0.3, 0.1], [-0.5, 0.4], [1.2, -0.3], [0.0, 0.8]];
+    let pts: Vec<String> =
+        queries.iter().map(|q| format!("[{},{}]", q[0], q[1])).collect();
+    let fit_and_predict = format!(
+        r#"{{"task":"krr","ridge":0.001,"labels":[{}],"predict":[{}]}}"#,
+        rows.join(","),
+        pts.join(",")
+    );
+    let (status, batched) = exchange("POST", "/sessions/bp/task", &fit_and_predict);
+    assert_eq!(status, 200, "{batched}");
+    assert_eq!(usize_field(&batched, "outputs"), 2, "{batched}");
+    let rows_of = |j: &Json| -> Vec<Vec<f64>> {
+        j.get("predictions")
+            .and_then(Json::as_arr)
+            .unwrap_or_else(|| panic!("missing predictions in {j}"))
+            .iter()
+            .map(|r| {
+                r.as_arr()
+                    .expect("per-point output row")
+                    .iter()
+                    .map(|v| v.as_f64().unwrap())
+                    .collect()
+            })
+            .collect()
+    };
+    let batch_rows = rows_of(&batched);
+    assert_eq!(batch_rows.len(), queries.len());
+
+    // the same points one per request (label-free → cached model) are
+    // bit-identical: the B×k block changes how many rows are evaluated
+    // at once, never the accumulation order within an element
+    for (i, q) in queries.iter().enumerate() {
+        let one = format!(r#"{{"task":"krr","predict":[[{},{}]]}}"#, q[0], q[1]);
+        let (status, single) = exchange("POST", "/sessions/bp/task", &one);
+        assert_eq!(status, 200, "{single}");
+        assert_eq!(
+            single.get("model").and_then(Json::as_str),
+            Some("cached"),
+            "{single}"
+        );
+        let srow = &rows_of(&single)[0];
+        assert_eq!(srow.len(), 2);
+        for (o, (a, b)) in batch_rows[i].iter().zip(srow).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "batched point {i} output {o} diverged from single-point"
+            );
+        }
+    }
+
+    // the f32 serving mode answers close to f64 on the same connection
+    let f32_body = format!(
+        r#"{{"task":"krr","predict":[{}],"f32":true}}"#,
+        pts.join(",")
+    );
+    let (status, jf) = exchange("POST", "/sessions/bp/task", &f32_body);
+    assert_eq!(status, 200, "{jf}");
+    for (r64, r32) in batch_rows.iter().zip(&rows_of(&jf)) {
+        for (a, b) in r64.iter().zip(r32) {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                "f32 serving drifted: {a} vs {b}"
+            );
+        }
+    }
+
+    // predict telemetry: batch sizes and per-model latencies surface in
+    // the JSON report and as Prometheus histogram families
+    let (status, m) = exchange("GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let predict = m.get("predict").expect("predict metrics section");
+    let batch_hist = predict.get("batch_size").expect("batch-size histogram");
+    // 1 batched call of 4 + 4 singles + 1 f32 batch of 4 = 6 calls
+    assert_eq!(usize_field(batch_hist, "count"), 6, "{m}");
+    assert_eq!(batch_hist.get("max").and_then(Json::as_f64), Some(4.0));
+    assert!(
+        predict
+            .get("models")
+            .and_then(|ms| ms.get("session:bp"))
+            .and_then(|h| h.get("count"))
+            .and_then(Json::as_usize)
+            .unwrap_or(0)
+            >= 6,
+        "{m}"
+    );
+    let (status, page) =
+        client_request(addr, "GET", "/metrics?format=prometheus", "")
+            .expect("prometheus scrape");
+    assert_eq!(status, 200);
+    oasis::obs::prom::validate(&page)
+        .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{page}"));
+    assert!(
+        page.contains("# TYPE oasis_predict_duration_seconds histogram"),
+        "{page}"
+    );
+    assert!(
+        page.contains(r#"oasis_predict_duration_seconds_count{model="session:bp"}"#),
+        "{page}"
+    );
+    assert!(
+        page.contains("# TYPE oasis_predict_batch_size histogram"),
+        "{page}"
+    );
+
+    stop_server(addr, join);
+}
+
+/// Request rate caps answer 429 without closing the connection, count
+/// into the `rate_limited` counter, and exempt `/healthz` and
+/// `/shutdown` so probes and operators are never locked out.
+#[test]
+fn rate_limits_return_429_and_exempt_health_and_shutdown() {
+    let (addr, join) = start_server_with(ServerConfig {
+        max_rps: 2,
+        ..Default::default()
+    });
+
+    let mut conn = ClientConn::connect(addr).expect("connect");
+    let mut saw_429 = 0;
+    let mut saw_200 = 0;
+    // 30 instant requests against a 2/s cap: the first window admits 2
+    for _ in 0..30 {
+        let (status, raw) =
+            conn.request("GET", "/sessions", "").expect("keep-alive exchange");
+        match status {
+            200 => saw_200 += 1,
+            429 => {
+                saw_429 += 1;
+                let j = Json::parse(&raw).expect("429 body is JSON");
+                assert!(
+                    j.get("error").and_then(Json::as_str).unwrap().contains("rate"),
+                    "{j}"
+                );
+            }
+            other => panic!("unexpected status {other}: {raw}"),
+        }
+    }
+    assert!(saw_200 >= 1, "the first request of a window must be admitted");
+    assert!(saw_429 >= 20, "a 2/s cap must reject most of a 30-shot burst");
+
+    // exempt endpoints keep answering inside the same exhausted window,
+    // on the same (still-open) connection
+    for _ in 0..5 {
+        let (status, _) =
+            conn.request("GET", "/healthz", "").expect("health exchange");
+        assert_eq!(status, 200, "/healthz must never be rate limited");
+    }
+
+    // /metrics is not exempt, so it may itself be 429 inside the
+    // exhausted window; only assert on the counter when it got through
+    let (status, m) = conn.request("GET", "/metrics", "").expect("metrics");
+    if status == 200 {
+        let j = Json::parse(&m).expect("metrics JSON");
+        let server = j.get("server").expect("server counters");
+        assert!(usize_field(server, "rate_limited") >= 20, "{j}");
+    }
+
+    // /shutdown is exempt too: stop_server succeeds immediately
+    stop_server(addr, join);
+}
+
+/// Graceful drain: a request in flight when `/shutdown` lands still
+/// completes with a full response before the server exits.
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let (addr, join) = start_server_with(ServerConfig {
+        drain: Duration::from_secs(10),
+        ..Default::default()
+    });
+    let create = r#"{"name":"d",
+        "dataset":{"generator":"two-moons","n":600,"seed":3},
+        "method":"oasis","max_cols":120,"init_cols":5,"seed":1}"#;
+    let (status, j) = request(addr, "POST", "/sessions", create);
+    assert_eq!(status, 200, "{j}");
+
+    // a deliberately long synchronous step batch…
+    let slow = std::thread::spawn(move || {
+        request(addr, "POST", "/sessions/d/step", r#"{"steps":110}"#)
+    });
+    // …interrupted by a shutdown while it is (very likely) in flight
+    std::thread::sleep(Duration::from_millis(30));
+    let (status, _) = request(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+
+    let (status, j) = slow.join().expect("in-flight request thread");
+    assert_eq!(status, 200, "drained request must complete: {j}");
+    assert_eq!(usize_field(&j, "stepped"), 110, "{j}");
+    join.join().expect("server thread exits after the drain");
 }
 
 /// GET with an explicit Accept header over a raw TcpStream (the shared

@@ -58,7 +58,7 @@ fn krr_bit_identical_across_live_finished_and_artifact_paths() {
     let finished = Box::new(session).finish().unwrap();
 
     let mut cfg = TaskConfig::new(TaskKind::Krr);
-    cfg.labels = Some(labels);
+    cfg.labels = Some(vec![labels]);
     cfg.ridge = 1e-3;
 
     let fit_and_predict = |approx: &NystromApprox,
@@ -235,11 +235,13 @@ fn engine_resolves_task_with_file_labels() {
     spec.labels = Some(LabelsSpec {
         label: "labels.csv".into(),
         path: labels_path.clone(),
-        col: 1,
+        cols: vec![1],
     });
     let cfg = SessionBuilder::new().resolve_task(&spec).unwrap();
-    assert_eq!(cfg.labels.as_ref().unwrap().len(), n);
-    assert_eq!(cfg.labels.as_ref().unwrap()[1], 1.0);
+    let cols = cfg.labels.as_ref().unwrap();
+    assert_eq!(cols.len(), 1, "one requested column → one label column");
+    assert_eq!(cols[0].len(), n);
+    assert_eq!(cols[0][1], 1.0);
     let fit = FittedTask::fit(&approx, &cfg).unwrap();
     match &fit.model {
         FittedTask::Krr(m) => assert!(m.train_rmse.is_finite()),
@@ -248,7 +250,7 @@ fn engine_resolves_task_with_file_labels() {
 
     // an out-of-range label column is a clean error
     let mut bad = spec.clone();
-    bad.labels.as_mut().unwrap().col = 7;
+    bad.labels.as_mut().unwrap().cols = vec![7];
     let err = SessionBuilder::new().resolve_task(&bad).unwrap_err();
     assert!(format!("{err}").contains("column"), "{err}");
     // a missing labels file names the label
@@ -275,7 +277,7 @@ fn saved_task_model_predicts_without_labels() {
     let approx = session.snapshot().unwrap();
 
     let mut cfg = TaskConfig::new(TaskKind::Krr);
-    cfg.labels = Some(labels);
+    cfg.labels = Some(vec![labels]);
     let fit = FittedTask::fit(&approx, &cfg).unwrap();
     let selected = ds.select(&approx.indices);
     let want = values(&fit.model.predict(&kern, &selected, &queries).unwrap())
@@ -327,7 +329,7 @@ fn saved_task_model_predicts_without_labels() {
     }
     // but a *refit* from the f32 factors only agrees approximately
     let mut cfg2 = TaskConfig::new(TaskKind::Krr);
-    cfg2.labels = Some((0..n).map(|i| (i % 2) as f64).collect());
+    cfg2.labels = Some(vec![(0..n).map(|i| (i % 2) as f64).collect()]);
     let refit = FittedTask::fit(&cback.approx, &cfg2).unwrap();
     let rgot = values(
         &refit.model.predict(&*ckernel, &cback.selected_points, &queries).unwrap(),
@@ -340,6 +342,145 @@ fn saved_task_model_predicts_without_labels() {
         );
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ACCEPTANCE (batched serving): a B-point predict call — served as one
+/// B×k kernel block plus one blocked product — is bit-identical to B
+/// single-point calls, for single-output KRR and every other task; the
+/// multi-output path agrees with m independent single-output fits.
+#[test]
+fn batched_predict_bit_identical_to_single_point_loop() {
+    let n = 150;
+    let ds = two_moons(n, 0.05, 23);
+    let kern = Gaussian::new(0.7);
+    let oracle = ImplicitOracle::new(&ds, &kern);
+    let mut session = Oasis::new(36, 5, 1e-12, 11).session(&oracle).unwrap();
+    run_to_completion(&mut session, &StoppingRule::budget(36)).unwrap();
+    let approx = session.snapshot().unwrap();
+    let selected = ds.select(&approx.indices);
+
+    let queries: Vec<Vec<f64>> = (0..32)
+        .map(|i| vec![(i as f64) * 0.11 - 1.5, ((i * 7) % 13) as f64 * 0.2 - 1.0])
+        .collect();
+
+    let y0: Vec<f64> = (0..n).map(|i| (i % 2) as f64).collect();
+    let y1: Vec<f64> = (0..n).map(|i| (i as f64 / n as f64).sin()).collect();
+
+    // single-output KRR: batch == loop, bit for bit
+    let mut cfg = TaskConfig::new(TaskKind::Krr);
+    cfg.ridge = 1e-3;
+    cfg.labels = Some(vec![y0.clone()]);
+    let fit = FittedTask::fit(&approx, &cfg).unwrap();
+    let batched =
+        values(&fit.model.predict(&kern, &selected, &queries).unwrap()).to_vec();
+    for (i, q) in queries.iter().enumerate() {
+        let one = values(
+            &fit.model.predict(&kern, &selected, &[q.clone()]).unwrap(),
+        )[0];
+        assert_eq!(
+            batched[i].to_bits(),
+            one.to_bits(),
+            "batched prediction {i} diverged from the single-point call"
+        );
+    }
+
+    // multi-output: one shared factorization per-column identical to m
+    // separate fits, and the batched Matrix rows line up per output
+    let mut multi = cfg.clone();
+    multi.labels = Some(vec![y0.clone(), y1.clone()]);
+    let mfit = FittedTask::fit(&approx, &multi).unwrap();
+    let rows = match mfit.model.predict(&kern, &selected, &queries).unwrap() {
+        TaskPrediction::Matrix(rows) => rows,
+        other => panic!("expected a B×m prediction matrix, got {other:?}"),
+    };
+    assert_eq!(rows.len(), queries.len());
+    assert!(rows.iter().all(|r| r.len() == 2));
+    let mut cfg1 = cfg.clone();
+    cfg1.labels = Some(vec![y1.clone()]);
+    let fit1 = FittedTask::fit(&approx, &cfg1).unwrap();
+    let solo1 =
+        values(&fit1.model.predict(&kern, &selected, &queries).unwrap()).to_vec();
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row[0].to_bits(), batched[i].to_bits(), "output 0 diverged");
+        assert_eq!(row[1].to_bits(), solo1[i].to_bits(), "output 1 diverged");
+    }
+
+    // kpca and cluster predictions batch identically too
+    let kfit = FittedTask::fit(&approx, &TaskConfig::new(TaskKind::Kpca)).unwrap();
+    let kb = match kfit.model.predict(&kern, &selected, &queries).unwrap() {
+        TaskPrediction::Embeddings(rows) => rows,
+        other => panic!("unexpected {other:?}"),
+    };
+    for (i, q) in queries.iter().enumerate() {
+        let one = match kfit
+            .model
+            .predict(&kern, &selected, &[q.clone()])
+            .unwrap()
+        {
+            TaskPrediction::Embeddings(rows) => rows,
+            other => panic!("unexpected {other:?}"),
+        };
+        for (a, b) in kb[i].iter().zip(&one[0]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "kpca row {i} diverged");
+        }
+    }
+}
+
+/// The f32 serving path stays within f32 slack of the f64 answers on
+/// every output, batched and single-point alike — and the two f32 call
+/// shapes agree with each other exactly.
+#[test]
+fn f32_predict_tracks_f64_within_tolerance() {
+    let n = 120;
+    let ds = two_moons(n, 0.05, 29);
+    let kern = Gaussian::new(0.8);
+    let oracle = ImplicitOracle::new(&ds, &kern);
+    let mut session = Oasis::new(30, 4, 1e-12, 3).session(&oracle).unwrap();
+    run_to_completion(&mut session, &StoppingRule::budget(30)).unwrap();
+    let approx = session.snapshot().unwrap();
+    let selected = ds.select(&approx.indices);
+
+    let mut cfg = TaskConfig::new(TaskKind::Krr);
+    cfg.ridge = 1e-3;
+    cfg.labels = Some(vec![
+        (0..n).map(|i| (i % 2) as f64).collect(),
+        (0..n).map(|i| (i as f64 * 0.01).cos()).collect(),
+    ]);
+    let fit = FittedTask::fit(&approx, &cfg).unwrap();
+
+    let queries: Vec<Vec<f64>> =
+        (0..24).map(|i| vec![i as f64 * 0.13 - 1.4, (i % 5) as f64 * 0.3 - 0.6]).collect();
+    let rows64 = match fit.model.predict(&kern, &selected, &queries).unwrap() {
+        TaskPrediction::Matrix(rows) => rows,
+        other => panic!("unexpected {other:?}"),
+    };
+    let rows32 = match fit.model.predict_f32(&kern, &selected, &queries).unwrap() {
+        TaskPrediction::Matrix(rows) => rows,
+        other => panic!("unexpected {other:?}"),
+    };
+    assert_eq!(rows32.len(), rows64.len());
+    for (i, (r64, r32)) in rows64.iter().zip(&rows32).enumerate() {
+        for (j, (a, b)) in r64.iter().zip(r32).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                "f32 drifted at point {i} output {j}: {a} vs {b}"
+            );
+        }
+    }
+    // batched f32 == looped f32 (same accumulation order per element)
+    for (i, q) in queries.iter().enumerate() {
+        let one = match fit
+            .model
+            .predict_f32(&kern, &selected, &[q.clone()])
+            .unwrap()
+        {
+            TaskPrediction::Matrix(rows) => rows,
+            other => panic!("unexpected {other:?}"),
+        };
+        for (a, b) in rows32[i].iter().zip(&one[0]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 batch/loop split at {i}");
+        }
+    }
 }
 
 /// `LoadLimits` bound label files like any dataset.
@@ -356,7 +497,7 @@ fn label_loading_respects_limits() {
     spec.labels = Some(LabelsSpec {
         label: "y.csv".into(),
         path: labels_path,
-        col: 0,
+        cols: vec![0],
     });
     let tight = LoadLimits { max_n: 10, max_dim: 4, max_elems: u128::MAX };
     assert!(SessionBuilder::with_limits(tight).resolve_task(&spec).is_err());
