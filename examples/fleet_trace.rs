@@ -1,0 +1,106 @@
+//! Trace a whole oASIS-P fleet on one timeline: run a real TCP leader
+//! with worker threads standing in for worker processes, collect the
+//! spans every worker recorded locally (shipped leader-ward at run
+//! end), merge them with the leader's own trace, and write one Chrome
+//! `trace_event` file with a separate process track per worker — open
+//! it at chrome://tracing or <https://ui.perfetto.dev>.
+//!
+//!     cargo run --release --example fleet_trace
+//!
+//! The same machinery drives `oasis parallel --listen … --trace out.json`
+//! (with `oasis worker --join …` processes on other nodes); this example
+//! is the library-level version of that flag.
+
+use oasis::coordinator::{
+    run_worker, OasisPConfig, OasisPSession, ShardPlan, TcpTransport,
+    WorkerRunOpts,
+};
+use oasis::data::generators::two_moons;
+use oasis::data::{loader, LoadLimits};
+use oasis::kernels::{Gaussian, Kernel};
+use oasis::obs::trace;
+use oasis::sampling::{run_to_completion, StoppingRule};
+use oasis::util::fsio;
+use std::sync::Arc;
+
+fn main() -> oasis::Result<()> {
+    // TCP workers shard-read the dataset themselves, so it must live in
+    // a file: write a small generated dataset to a temp directory
+    let dir = std::env::temp_dir()
+        .join("oasis-fleet-trace")
+        .join(format!("r{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let n = 400;
+    let ds = two_moons(n, 0.05, 42);
+    let path = dir.join("points.mat");
+    loader::save_matrix(&path, &ds)?;
+
+    // 1. switch the process-global recorder on BEFORE the fleet starts:
+    //    the leader's Assign handshake tells each worker whether to
+    //    record, so a disabled leader means untraced workers
+    trace::enable();
+
+    // 2. a real localhost fleet: the leader listens, three `run_worker`
+    //    threads join exactly like `oasis worker --join ADDR` processes
+    //    would, each recording its own spans locally
+    let transport = TcpTransport::bind("127.0.0.1:0")?;
+    let addr = transport.local_addr()?.to_string();
+    let workers: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                run_worker(&addr, WorkerRunOpts::default()).unwrap()
+            })
+        })
+        .collect();
+
+    let kernel: Arc<dyn Kernel + Send + Sync> = Arc::new(Gaussian::new(0.6));
+    let mut cfg = OasisPConfig::new(40, 5, 3).with_seed(7);
+    cfg.timeout = std::time::Duration::from_secs(30);
+    let plan = ShardPlan::File {
+        path: path.clone(),
+        n,
+        limits: LoadLimits::unlimited(),
+    };
+    let mut session =
+        OasisPSession::start_with_transport(Box::new(transport), plan, kernel, cfg)?;
+    run_to_completion(&mut session, &StoppingRule::budget(40))?;
+
+    // 3. finish_run drains every worker's trace ring over the wire and
+    //    hands the per-worker tracks back in the report
+    let (approx, report) = session.finish_run()?;
+    for w in workers {
+        w.join().expect("worker thread");
+    }
+    println!(
+        "fleet of {} workers selected {} columns",
+        report.workers,
+        approx.k()
+    );
+
+    // 4. the leader's own spans (gather/arbitrate/broadcast rounds) come
+    //    from the local recorder; pid 1 is the leader track by convention
+    trace::disable();
+    let leader = trace::drain();
+    let n_leader = leader.events.len();
+    let mut tracks = vec![leader.into_track(1, "leader")];
+    tracks.extend(report.worker_traces);
+
+    // 5. one merged Chrome trace: every track renders as its own process
+    //    row, so the timeline shows leader rounds above per-worker work
+    let out = std::path::Path::new("fleet_trace.json");
+    let json = trace::merged_chrome_json(&tracks).to_string();
+    fsio::write_atomic(out, json.as_bytes())?;
+    println!(
+        "{} leader events + {} worker track(s) written to {}",
+        n_leader,
+        tracks.len() - 1,
+        out.display()
+    );
+    for t in &tracks[1..] {
+        println!("  pid {:>2}  {:<10} {:>5} events", t.pid, t.label, t.events.len());
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -127,6 +127,15 @@ pub enum FromWorker {
     ///
     /// [`OasisPConfig::heartbeat_interval`]: super::config::OasisPConfig::heartbeat_interval
     Heartbeat { worker: usize },
+    /// A batch of this worker process's local trace events, shipped
+    /// leader-ward when the `Assign` handshake requested tracing.
+    /// Piggybacked on gather rounds and flushed before the terminal
+    /// `Columns` block; the leader absorbs chunks into per-worker
+    /// stores and merges them into the fleet trace
+    /// ([`OasisPReport::worker_traces`]).
+    ///
+    /// [`OasisPReport::worker_traces`]: super::leader::OasisPReport::worker_traces
+    TraceChunk { worker: usize, events: Vec<crate::obs::trace::OwnedEvent> },
     /// The worker is dead: synthesized locally on the leader (TCP reader
     /// EOF / socket error / heartbeat staleness) or by the in-process
     /// fault injector — never encoded on the wire. Triggers re-sharding
@@ -168,6 +177,13 @@ impl FromWorker {
             }
             FromWorker::Failed { message, .. } => message.len() as u64,
             FromWorker::Heartbeat { .. } => 8,
+            FromWorker::TraceChunk { events, .. } => {
+                events
+                    .iter()
+                    .map(|e| e.name.len() + e.cat.len() + 45)
+                    .sum::<usize>() as u64
+                    + 16
+            }
             FromWorker::Gone { .. } => 0,
         }
     }
@@ -180,6 +196,7 @@ impl FromWorker {
             | FromWorker::Columns { worker, .. }
             | FromWorker::Failed { worker, .. }
             | FromWorker::Heartbeat { worker }
+            | FromWorker::TraceChunk { worker, .. }
             | FromWorker::Gone { worker } => Some(*worker),
             FromWorker::Point { .. } => None,
         }

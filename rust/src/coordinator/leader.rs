@@ -45,6 +45,7 @@ use crate::data::{shard, Dataset, LoadLimits, Shard};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::nystrom::NystromApprox;
+use crate::obs::trace::{OwnedEvent, TraceTrack};
 use crate::sampling::{
     run_to_completion, SamplerSession, SelectionTrace, StepOutcome, StopReason,
     StoppingRule,
@@ -95,6 +96,12 @@ pub struct OasisPReport {
     pub metrics: Arc<Metrics>,
     pub workers: usize,
     pub wall_secs: f64,
+    /// Per-worker span tracks shipped leader-ward as
+    /// [`FromWorker::TraceChunk`]s (TCP fleets with tracing enabled;
+    /// empty otherwise). Merge with the leader's own drained trace via
+    /// [`crate::obs::trace::merged_chrome_json`] for one fleet-wide
+    /// Chrome timeline.
+    pub worker_traces: Vec<TraceTrack>,
 }
 
 /// Run oASIS-P over `cfg.workers` threads. The selection sequence is
@@ -109,6 +116,10 @@ pub fn run_oasis_p(
     run_to_completion(&mut session, &StoppingRule::budget(cfg.max_cols))?;
     session.finish_run()
 }
+
+/// Cap on absorbed trace events per worker — matches the worker-side
+/// ring default, so a leader can't be ballooned by a chatty worker.
+const MAX_WORKER_TRACE_EVENTS: usize = 1 << 16;
 
 /// A selection the leader has arbitrated but not yet applied (queued
 /// batch pick). `fresh` marks the gather round's argmax winner, whose
@@ -155,6 +166,11 @@ pub struct OasisPSession {
     /// draining its `Columns` messages; consumed by the next `step`.
     /// (`RefCell` because `snapshot` is a `&self` trait method.)
     pending: RefCell<VecDeque<FromWorker>>,
+    /// Per-worker trace events absorbed from [`FromWorker::TraceChunk`]s
+    /// (events, ring-drops), bounded by [`MAX_WORKER_TRACE_EVENTS`].
+    /// (`RefCell` for the same reason as `pending`: chunks arrive
+    /// through `recv_live`, a `&self` path.)
+    worker_traces: RefCell<Vec<(Vec<OwnedEvent>, u64)>>,
     /// whether a dead worker's rows can be re-sharded onto survivors
     recoverable: bool,
     /// whether heartbeat staleness applies (TCP fleets)
@@ -254,6 +270,7 @@ impl OasisPSession {
             joins: fleet.joins,
             inbox: fleet.inbox,
             pending: RefCell::new(VecDeque::new()),
+            worker_traces: RefCell::new(vec![(Vec::new(), 0); p]),
             recoverable: fleet.recoverable,
             tcp: fleet.tcp,
             metrics,
@@ -373,6 +390,19 @@ impl OasisPSession {
                 Ok(FromWorker::Heartbeat { worker }) => {
                     self.metrics.note_alive(worker);
                 }
+                Ok(msg @ FromWorker::TraceChunk { .. }) => {
+                    // absorbed here, never surfaced to the selection
+                    // loop — every caller keeps seeing only the message
+                    // kinds it expects
+                    let bytes = msg.payload_bytes();
+                    self.metrics.add_gather(bytes);
+                    if let FromWorker::TraceChunk { worker, events } = msg {
+                        self.metrics.note_alive(worker);
+                        self.metrics.add_worker_wire(worker, bytes);
+                        self.metrics.add_worker_trace_chunk(worker);
+                        self.absorb_trace_chunk(worker, events);
+                    }
+                }
                 Ok(msg) => {
                     let bytes = msg.payload_bytes();
                     self.metrics.add_gather(bytes);
@@ -411,6 +441,20 @@ impl OasisPSession {
                 }
             }
         }
+    }
+
+    /// Store one worker's shipped trace events, bounded per worker by
+    /// [`MAX_WORKER_TRACE_EVENTS`] (overflow counts as drops).
+    fn absorb_trace_chunk(&self, worker: usize, events: Vec<OwnedEvent>) {
+        let mut traces = self.worker_traces.borrow_mut();
+        let Some((stored, dropped)) = traces.get_mut(worker) else {
+            return; // unknown worker id on the wire — ignore
+        };
+        let room = MAX_WORKER_TRACE_EVENTS.saturating_sub(stored.len());
+        if events.len() > room {
+            *dropped += (events.len() - room) as u64;
+        }
+        stored.extend(events.into_iter().take(room));
     }
 
     /// Next message for the selection loop: messages stashed by a mid-run
@@ -757,6 +801,9 @@ impl OasisPSession {
                     bail!("worker {worker} died during column gather")
                 }
                 FromWorker::Heartbeat { .. } => {}
+                // unreachable: recv_live absorbs chunks before they
+                // surface — kept for match exhaustiveness
+                FromWorker::TraceChunk { .. } => {}
             }
         }
         let winv = winv.ok_or_else(|| anyhow!("no W⁻¹ returned"))?;
@@ -791,12 +838,36 @@ impl OasisPSession {
         for j in self.joins.drain(..) {
             let _ = j.join();
         }
+        // joined reader threads have forwarded everything the workers
+        // sent before exiting — absorb the final trace chunks (workers
+        // flush once more right after their terminal Columns)
+        while let Ok(msg) = self.inbox.try_recv() {
+            if let FromWorker::TraceChunk { worker, events } = msg {
+                self.metrics.add_worker_trace_chunk(worker);
+                self.absorb_trace_chunk(worker, events);
+            }
+        }
+        let worker_traces: Vec<TraceTrack> = self
+            .worker_traces
+            .borrow_mut()
+            .drain(..)
+            .enumerate()
+            .map(|(w, (events, dropped))| TraceTrack {
+                // pid 1 is the leader's own track by convention
+                pid: w as u64 + 2,
+                label: format!("worker-{w}"),
+                events,
+                dropped,
+            })
+            .filter(|t| !t.events.is_empty() || t.dropped > 0)
+            .collect();
         self.busy_secs += sw.secs();
         let report = OasisPReport {
             trace: self.trace.clone(),
             metrics: self.metrics.clone(),
             workers: self.p,
             wall_secs: self.busy_secs,
+            worker_traces,
         };
         Ok((
             NystromApprox {

@@ -22,6 +22,9 @@ pub struct WorkerCounters {
     wire_bytes: AtomicU64,
     /// Row ranges this worker adopted from dead peers.
     reshards_absorbed: AtomicU64,
+    /// Trace chunks this worker shipped leader-ward (TCP fleets with
+    /// tracing enabled; 0 otherwise).
+    trace_chunks: AtomicU64,
     last_seen_ms: AtomicU64,
     dead: AtomicU64,
 }
@@ -33,6 +36,7 @@ impl Default for WorkerCounters {
             argmax_rounds: AtomicU64::new(0),
             wire_bytes: AtomicU64::new(0),
             reshards_absorbed: AtomicU64::new(0),
+            trace_chunks: AtomicU64::new(0),
             last_seen_ms: AtomicU64::new(NEVER),
             dead: AtomicU64::new(0),
         }
@@ -54,6 +58,10 @@ impl WorkerCounters {
 
     pub fn reshards_absorbed(&self) -> u64 {
         self.reshards_absorbed.load(Ordering::Relaxed)
+    }
+
+    pub fn trace_chunks(&self) -> u64 {
+        self.trace_chunks.load(Ordering::Relaxed)
     }
 
     pub fn is_dead(&self) -> bool {
@@ -176,6 +184,13 @@ impl Metrics {
         }
     }
 
+    /// Worker `w` shipped one leader-ward trace chunk.
+    pub fn add_worker_trace_chunk(&self, w: usize) {
+        if let Some(c) = self.worker(w) {
+            c.trace_chunks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Mark worker `w` dead (it stays in the stats with its final
     /// counters; the re-shard gave its rows away).
     pub fn mark_dead(&self, w: usize) {
@@ -247,6 +262,7 @@ impl Metrics {
                             "reshards_absorbed",
                             Json::Num(c.reshards_absorbed() as f64),
                         ),
+                        ("trace_chunks", Json::Num(c.trace_chunks() as f64)),
                         ("last_heartbeat_age_ms", age),
                         ("dead", Json::Bool(c.is_dead())),
                     ])
@@ -330,6 +346,8 @@ mod tests {
         m.add_worker_wire(0, 16);
         m.add_worker_columns(0);
         m.add_worker_argmax(1);
+        m.add_worker_trace_chunk(1);
+        assert_eq!(m.worker(1).unwrap().trace_chunks(), 1);
         assert_eq!(m.worker(0).unwrap().wire_bytes(), 64);
         assert_eq!(m.worker(0).unwrap().columns_served(), 1);
         assert_eq!(m.worker(1).unwrap().argmax_rounds(), 1);

@@ -36,7 +36,8 @@
 //! in-process runs. Handshake: the worker connects, the leader sends
 //! `Assign` (shard index, worker count, n, dataset path, load limits,
 //! column budget, merge batch, kernel parameters as JSON, heartbeat
-//! period), the worker shard-reads its rows and answers `Joined` (the
+//! period, trace flag, and fleet run id), the worker shard-reads its
+//! rows and answers `Joined` (the
 //! row range it actually covers, verified against the plan), and the
 //! selection loop begins with `Init`. See [`net`] for the full frame
 //! catalogue and [`comm`] for message semantics.
@@ -65,5 +66,5 @@ pub mod worker;
 pub use config::{FailureSpec, OasisPConfig};
 pub use leader::{run_oasis_p, OasisPReport, OasisPSession, ShardPlan};
 pub use metrics::Metrics;
-pub use net::{run_worker, TcpTransport};
+pub use net::{run_worker, TcpTransport, WorkerRunOpts};
 pub use transport::{ChannelTransport, Fleet, Transport, TransportCtx};

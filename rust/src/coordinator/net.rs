@@ -66,8 +66,11 @@ pub const MAX_FRAME_BYTES: u64 = 1 << 33;
 
 // ---- payload codec -------------------------------------------------------
 //
-// tag bytes: ToWorker 1..=6, FromWorker 32..=36, handshake 64..=65.
-// `Gone` is local-only and has no encoding on purpose.
+// tag bytes: ToWorker 1..=6, FromWorker 32..=37, handshake 64..=65.
+// `Gone` is local-only and has no encoding on purpose. A leader that
+// sees a worker→leader tag above the range it understands logs and
+// skips the frame instead of killing the link (newer workers may speak
+// newer message kinds; see the reader thread below).
 
 const TAG_INIT: u8 = 1;
 const TAG_FETCH_POINT: u8 = 2;
@@ -80,8 +83,14 @@ const TAG_POINT: u8 = 33;
 const TAG_COLUMNS: u8 = 34;
 const TAG_FAILED: u8 = 35;
 const TAG_HEARTBEAT: u8 = 36;
+const TAG_TRACE_CHUNK: u8 = 37;
 const TAG_ASSIGN: u8 = 64;
 const TAG_JOINED: u8 = 65;
+
+/// First worker→leader tag byte this protocol revision understands.
+const FROM_WORKER_TAG_MIN: u8 = TAG_ARGMAX;
+/// Last worker→leader tag byte this protocol revision understands.
+const FROM_WORKER_TAG_MAX: u8 = TAG_TRACE_CHUNK;
 
 struct Enc {
     b: Vec<u8>,
@@ -397,10 +406,48 @@ pub fn encode_from_worker(m: &FromWorker) -> Result<Vec<u8>> {
             e.uz(*worker);
             e.b
         }
+        FromWorker::TraceChunk { worker, events } => {
+            let mut e = Enc::new(TAG_TRACE_CHUNK);
+            e.uz(*worker);
+            e.uz(events.len());
+            for ev in events {
+                e.str(&ev.name);
+                e.str(&ev.cat);
+                e.u64v(ev.ts_us);
+                e.u64v(ev.dur_us);
+                e.u64v(ev.tid);
+                e.u64v(u64::from(ev.depth));
+                match ev.value {
+                    Some(v) => {
+                        e.boolean(true);
+                        e.f64v(v);
+                    }
+                    None => e.boolean(false),
+                }
+            }
+            e.b
+        }
         FromWorker::Gone { .. } => {
             bail!("Gone is a leader-local signal, never sent on the wire")
         }
     })
+}
+
+/// Classify an undecodable worker→leader payload. `Some(tag)` means the
+/// frame itself arrived intact (length + checksum passed) but carries a
+/// tag byte outside the [`FromWorker`] range this build understands —
+/// i.e. a message kind from a newer protocol revision. The link is
+/// still healthy, so the leader's reader logs and skips it rather than
+/// declaring the worker dead. `None` means the payload is empty or a
+/// *known* tag with a malformed body: the stream is corrupt and the
+/// link must come down.
+pub(crate) fn unknown_from_worker_tag(payload: &[u8]) -> Option<u8> {
+    match payload.first() {
+        Some(&t) if !(FROM_WORKER_TAG_MIN..=FROM_WORKER_TAG_MAX).contains(&t) => {
+            Some(t)
+        }
+        _ => None,
+    }
 }
 
 /// Decode a worker → leader message.
@@ -452,6 +499,39 @@ pub fn decode_from_worker(b: &[u8]) -> Result<FromWorker> {
         TAG_HEARTBEAT => {
             FromWorker::Heartbeat { worker: d.uz("Heartbeat.worker")? }
         }
+        TAG_TRACE_CHUNK => {
+            let worker = d.uz("TraceChunk.worker")?;
+            // minimum bytes per event: two empty strings (8+8) + four
+            // u64 fields (32) + the value flag (1) = 49
+            let ne = d.count(49, "TraceChunk.events")?;
+            let mut events = Vec::with_capacity(ne);
+            for _ in 0..ne {
+                let name = d.str("TraceChunk.event.name")?;
+                let cat = d.str("TraceChunk.event.cat")?;
+                let ts_us = d.u64v("TraceChunk.event.ts_us")?;
+                let dur_us = d.u64v("TraceChunk.event.dur_us")?;
+                let tid = d.u64v("TraceChunk.event.tid")?;
+                let depth = d.u64v("TraceChunk.event.depth")?;
+                let depth = u32::try_from(depth).map_err(|_| {
+                    anyhow!("TraceChunk.event.depth: {depth} overflows u32")
+                })?;
+                let value = if d.boolean("TraceChunk.event.has_value")? {
+                    Some(d.f64v("TraceChunk.event.value")?)
+                } else {
+                    None
+                };
+                events.push(crate::obs::trace::OwnedEvent {
+                    name,
+                    cat,
+                    ts_us,
+                    dur_us,
+                    tid,
+                    depth,
+                    value,
+                });
+            }
+            FromWorker::TraceChunk { worker, events }
+        }
         t => bail!("unknown worker→leader message tag {t}"),
     };
     d.done("worker→leader message")?;
@@ -476,6 +556,12 @@ pub struct Assign {
     /// reproduces the kernel bit-exactly on the worker
     pub kernel: KernelParams,
     pub heartbeat_ms: u64,
+    /// The leader is tracing: record local spans and ship them
+    /// leader-ward as [`FromWorker::TraceChunk`]s.
+    pub trace: bool,
+    /// Fleet-wide run identifier, stamped on every worker's structured
+    /// log lines so one run's lines correlate across processes.
+    pub run_id: u64,
 }
 
 /// Encode the `Assign` handshake frame.
@@ -493,6 +579,10 @@ pub fn encode_assign(a: &Assign) -> Vec<u8> {
     e.uz(a.merge_batch);
     e.str(&kernel_to_json(&a.kernel).to_string());
     e.u64v(a.heartbeat_ms);
+    // appended after the original fields so older peers (which stop
+    // reading here) and newer peers interop; see decode_assign
+    e.boolean(a.trace);
+    e.u64v(a.run_id);
     e.b
 }
 
@@ -518,6 +608,13 @@ pub fn decode_assign(b: &[u8]) -> Result<Assign> {
         &Json::parse(&kjson).map_err(|e| anyhow!("Assign.kernel: {e}"))?,
     )?;
     let heartbeat_ms = d.u64v("Assign.heartbeat_ms")?;
+    // version tolerance: an older leader's Assign ends here — default
+    // the trailing observability fields instead of rejecting the frame
+    let (trace, run_id) = if d.remaining() > 0 {
+        (d.boolean("Assign.trace")?, d.u64v("Assign.run_id")?)
+    } else {
+        (false, 0)
+    };
     d.done("Assign")?;
     Ok(Assign {
         worker,
@@ -529,6 +626,8 @@ pub fn decode_assign(b: &[u8]) -> Result<Assign> {
         merge_batch,
         kernel,
         heartbeat_ms,
+        trace,
+        run_id,
     })
 }
 
@@ -686,6 +785,23 @@ impl Transport for TcpTransport {
         })?;
         let p = plan_workers(&plan, &cfg);
         let expected = shard::shard_ranges(n, p);
+        let trace = crate::obs::trace::enabled();
+        // wall-clock µs ⊕ shifted pid: unique enough to correlate one
+        // run's log lines across leader and worker processes
+        let run_id = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0)
+            ^ (u64::from(std::process::id()) << 48);
+        crate::obs::log::info(
+            "coordinator",
+            "fleet starting",
+            &[
+                ("run_id", format!("{run_id:016x}")),
+                ("workers", p.to_string()),
+                ("trace", trace.to_string()),
+            ],
+        );
         let (tx, inbox) = mpsc::channel::<FromWorker>();
         let mut handles: Vec<WorkerHandle> = Vec::with_capacity(p);
         let mut joins = Vec::with_capacity(p);
@@ -735,6 +851,8 @@ impl Transport for TcpTransport {
                 merge_batch: cfg.merge_batch,
                 kernel: params.clone(),
                 heartbeat_ms: cfg.heartbeat_interval().as_millis() as u64,
+                trace,
+                run_id,
             };
             if !writer.send_payload(&encode_assign(&assign)) {
                 bail!("worker {w} hung up during the Assign handshake");
@@ -795,8 +913,24 @@ impl Transport for TcpTransport {
                                     }
                                 }
                                 Err(_) => {
-                                    // undecodable payload: the link is
-                                    // unusable — report the death
+                                    // a checksummed frame carrying a tag
+                                    // from a newer protocol revision is
+                                    // skippable; a malformed known
+                                    // message means the stream is
+                                    // corrupt — report the death
+                                    if let Some(t) =
+                                        unknown_from_worker_tag(&payload)
+                                    {
+                                        crate::obs::log::warn(
+                                            "net",
+                                            "skipping unknown frame tag",
+                                            &[
+                                                ("worker", w.to_string()),
+                                                ("tag", t.to_string()),
+                                            ],
+                                        );
+                                        continue;
+                                    }
                                     let _ = reader_tx
                                         .send(FromWorker::Gone { worker: w });
                                     return;
@@ -819,20 +953,32 @@ impl Transport for TcpTransport {
 
 // ---- worker side: the process entry --------------------------------------
 
+/// Options for [`run_worker`], beyond the leader address.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerRunOpts {
+    /// Replace the leader's dataset path (workers mounted differently).
+    pub data_override: Option<PathBuf>,
+    /// Artificially delay each update (the CI kill-recovery smoke job
+    /// uses it to die mid-run deterministically).
+    pub throttle: Option<Duration>,
+    /// Write this process's own local trace here (Chrome JSON) when the
+    /// loop ends — `oasis worker --trace FILE`. Forces local tracing on
+    /// even when the leader didn't request leader-ward shipping.
+    pub trace_file: Option<PathBuf>,
+}
+
 /// Run one worker process: connect to the leader, receive the `Assign`
 /// handshake, shard-read the assigned rows, reply `Joined`, then serve
 /// the selection loop until `Finish` (or the link drops). A timer thread
 /// sends heartbeats at the leader-assigned period for the whole life of
 /// the loop. This is the body of `oasis worker --join HOST:PORT`.
 ///
-/// `data_override` replaces the leader's dataset path (workers mounted
-/// differently); `throttle` artificially delays each update (the CI
-/// kill-recovery smoke job uses it to die mid-run deterministically).
-pub fn run_worker(
-    join_addr: &str,
-    data_override: Option<PathBuf>,
-    throttle: Option<Duration>,
-) -> Result<()> {
+/// When the `Assign` requested tracing, the worker records local spans
+/// (shard load, diag pass, score scans, column serves, heartbeats) and
+/// ships them leader-ward as [`FromWorker::TraceChunk`]s on gather
+/// boundaries; `opts.trace_file` additionally (or independently) keeps
+/// a local copy and writes it on exit.
+pub fn run_worker(join_addr: &str, opts: WorkerRunOpts) -> Result<()> {
     let stream = TcpStream::connect(join_addr)
         .map_err(|e| anyhow!("connecting to leader {join_addr}: {e}"))?;
     stream
@@ -843,9 +989,33 @@ pub fn run_worker(
         Some(payload) => decode_assign(&payload)?,
         None => bail!("leader {join_addr} hung up before Assign"),
     };
-    let path = data_override.unwrap_or_else(|| PathBuf::from(&assign.path));
-    let my_shard =
-        loader::load_shard(&path, assign.worker, assign.workers, &assign.limits)?;
+    let tracing = assign.trace || opts.trace_file.is_some();
+    if tracing && !crate::obs::trace::enabled() {
+        crate::obs::trace::enable_with_capacity(
+            crate::obs::trace::DEFAULT_CAPACITY,
+        );
+    }
+    crate::obs::log::info(
+        "worker",
+        "assigned",
+        &[
+            ("worker", assign.worker.to_string()),
+            ("workers", assign.workers.to_string()),
+            ("run_id", format!("{:016x}", assign.run_id)),
+            ("trace", tracing.to_string()),
+        ],
+    );
+    let path =
+        opts.data_override.unwrap_or_else(|| PathBuf::from(&assign.path));
+    let my_shard = {
+        let _g = crate::obs::span("shard_load", "worker");
+        loader::load_shard(
+            &path,
+            assign.worker,
+            assign.workers,
+            &assign.limits,
+        )?
+    };
     let writer = Arc::new(FrameWriter::new(stream));
     let joined = Joined {
         worker: assign.worker,
@@ -871,6 +1041,7 @@ pub fn run_worker(
             if hb_stop.load(Ordering::Relaxed) {
                 return;
             }
+            crate::obs::trace::event("heartbeat", "worker", 1.0);
             if !hb_writer.send_payload(&beat) {
                 return; // link down — the compute loop is ending too
             }
@@ -880,17 +1051,40 @@ pub fn run_worker(
     let kernel: Arc<dyn Kernel + Send + Sync> = Arc::from(assign.kernel.build());
     let leader = LeaderHandle::new(Arc::new(TcpLeaderSink(writer)));
     let metrics = Arc::new(super::metrics::Metrics::default());
-    let opts = WorkerOpts {
+    let wopts = WorkerOpts {
         max_cols: assign.max_cols,
         merge_batch: assign.merge_batch,
         failure: None,
         file_source: Some((path, assign.limits)),
-        throttle,
+        throttle: opts.throttle,
+        ship_trace: assign.trace,
+        keep_trace: opts.trace_file.is_some(),
     };
-    Worker::new(assign.worker, my_shard, kernel, leader, metrics, opts)
-        .run(TcpWorkerSource { stream: rd });
+    let (kept, kept_dropped) =
+        Worker::new(assign.worker, my_shard, kernel, leader, metrics, wopts)
+            .run(TcpWorkerSource { stream: rd });
     stop.store(true, Ordering::Relaxed);
     let _ = hb.join();
+    if let Some(file) = &opts.trace_file {
+        let n_events = kept.len();
+        let track = crate::obs::trace::TraceTrack {
+            pid: assign.worker as u64 + 2,
+            label: format!("worker-{}", assign.worker),
+            events: kept,
+            dropped: kept_dropped,
+        };
+        let json = crate::obs::trace::merged_chrome_json(&[track]).to_string();
+        crate::util::fsio::write_atomic(file, json.as_bytes())?;
+        crate::obs::log::info(
+            "worker",
+            "local trace written",
+            &[
+                ("worker", assign.worker.to_string()),
+                ("path", file.display().to_string()),
+                ("events", n_events.to_string()),
+            ],
+        );
+    }
     Ok(())
 }
 
@@ -968,6 +1162,33 @@ mod tests {
             message: "shard went bad: Δ vanished".to_string(),
         });
         roundtrip_from_worker(FromWorker::Heartbeat { worker: 3 });
+        roundtrip_from_worker(FromWorker::TraceChunk {
+            worker: 2,
+            events: vec![
+                crate::obs::trace::OwnedEvent {
+                    name: "score_scan".to_string(),
+                    cat: "worker".to_string(),
+                    ts_us: 1_000,
+                    dur_us: 250,
+                    tid: 1,
+                    depth: 0,
+                    value: None,
+                },
+                crate::obs::trace::OwnedEvent {
+                    name: "heartbeat".to_string(),
+                    cat: "worker".to_string(),
+                    ts_us: 2_000,
+                    dur_us: 0,
+                    tid: 2,
+                    depth: 1,
+                    value: Some(1.0),
+                },
+            ],
+        });
+        roundtrip_from_worker(FromWorker::TraceChunk {
+            worker: 0,
+            events: vec![],
+        });
     }
 
     #[test]
@@ -1012,11 +1233,40 @@ mod tests {
             merge_batch: 4,
             kernel: KernelParams::Gaussian { inv_sigma_sq: 0.73 },
             heartbeat_ms: 250,
+            trace: true,
+            run_id: 0xDEAD_BEEF_0042,
         };
         let back = decode_assign(&encode_assign(&a)).unwrap();
         assert_eq!(a, back);
         let j = Joined { worker: 1, start: 167, len: 167 };
         assert_eq!(decode_joined(&encode_joined(&j)).unwrap(), j);
+    }
+
+    #[test]
+    fn assign_decode_tolerates_older_leaders() {
+        // an older leader's Assign stops after heartbeat_ms; slicing the
+        // appended trace (1 byte) + run_id (8 bytes) off a new encoding
+        // reproduces that wire format exactly
+        let a = Assign {
+            worker: 0,
+            workers: 2,
+            n: 100,
+            path: "/tmp/data.mat".to_string(),
+            limits: LoadLimits { max_n: 1_000, max_dim: 8, max_elems: 1 << 30 },
+            max_cols: 10,
+            merge_batch: 1,
+            kernel: KernelParams::Gaussian { inv_sigma_sq: 1.0 },
+            heartbeat_ms: 100,
+            trace: true,
+            run_id: 7,
+        };
+        let enc = encode_assign(&a);
+        let old = &enc[..enc.len() - 9];
+        let back = decode_assign(old).unwrap();
+        assert!(!back.trace, "older frames default to tracing off");
+        assert_eq!(back.run_id, 0);
+        assert_eq!(back.heartbeat_ms, a.heartbeat_ms);
+        assert_eq!(back.path, a.path);
     }
 
     #[test]
@@ -1047,6 +1297,28 @@ mod tests {
         evil.extend_from_slice(&0u64.to_le_bytes());
         evil.extend_from_slice(&(1u64 << 60).to_le_bytes());
         assert!(decode_from_worker(&evil).is_err());
+        // hostile TraceChunk: claims 2^50 events in a tiny buffer
+        let mut evil = vec![TAG_TRACE_CHUNK];
+        evil.extend_from_slice(&0u64.to_le_bytes());
+        evil.extend_from_slice(&(1u64 << 50).to_le_bytes());
+        assert!(decode_from_worker(&evil).is_err());
+    }
+
+    #[test]
+    fn unknown_tags_are_skippable_but_corrupt_known_frames_are_not() {
+        // a future protocol revision's message kind: intact frame, tag
+        // above this build's range — classified skippable, not fatal
+        assert!(decode_from_worker(&[38, 1, 2, 3]).is_err());
+        assert_eq!(unknown_from_worker_tag(&[38, 1, 2, 3]), Some(38));
+        assert_eq!(unknown_from_worker_tag(&[200]), Some(200));
+        // handshake tags arriving mid-stream are also not FromWorker
+        assert_eq!(unknown_from_worker_tag(&[TAG_ASSIGN]), Some(TAG_ASSIGN));
+        // a *known* tag with a mangled body is stream corruption: the
+        // reader must tear the link down, not skip
+        assert_eq!(unknown_from_worker_tag(&[TAG_HEARTBEAT, 0xFF]), None);
+        assert_eq!(unknown_from_worker_tag(&[TAG_TRACE_CHUNK]), None);
+        // an empty payload is corruption too
+        assert_eq!(unknown_from_worker_tag(&[]), None);
     }
 
     /// A miniature in-process "network": leader and worker endpoints over

@@ -95,8 +95,18 @@ impl Transport for ChannelTransport {
             let worker_metrics = metrics.clone();
             joins.push(std::thread::spawn(move || match source() {
                 Ok(s) => {
-                    Worker::new(w, s, worker_kernel, leader, worker_metrics, opts)
-                        .run(rx)
+                    // in-process workers share the leader's trace ring;
+                    // the returned kept-trace is always empty (both
+                    // trace opts are off — see mk_opts below)
+                    let _ = Worker::new(
+                        w,
+                        s,
+                        worker_kernel,
+                        leader,
+                        worker_metrics,
+                        opts,
+                    )
+                    .run(rx);
                 }
                 Err(e) => {
                     leader.send(&FromWorker::Failed {
@@ -112,6 +122,11 @@ impl Transport for ChannelTransport {
             failure: cfg.failure,
             file_source,
             throttle: None,
+            // thread workers record straight into the shared
+            // process-global ring — they must neither drain it nor ship
+            // chunks to themselves
+            ship_trace: false,
+            keep_trace: false,
         };
         match plan {
             ShardPlan::Memory(shards) => {

@@ -28,6 +28,7 @@ use super::config::FailureSpec;
 use super::metrics::Metrics;
 use crate::data::{loader, Dataset, LoadLimits, Shard};
 use crate::kernels::Kernel;
+use crate::obs::trace::OwnedEvent;
 use crate::Result;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -49,6 +50,14 @@ pub struct WorkerOpts {
     /// Artificial per-update delay (CLI `--throttle-ms`; lets the CI
     /// smoke job kill a worker mid-run deterministically).
     pub throttle: Option<std::time::Duration>,
+    /// Ship drained trace events leader-ward as
+    /// [`FromWorker::TraceChunk`]s on gather boundaries. Only TCP worker
+    /// processes set this (from `Assign.trace`); in-process workers
+    /// share the leader's ring and must never drain it.
+    pub ship_trace: bool,
+    /// Keep a local copy of drained events; [`Worker::run`] returns them
+    /// so `oasis worker --trace FILE` can write its own trace.
+    pub keep_trace: bool,
 }
 
 impl WorkerOpts {
@@ -59,6 +68,8 @@ impl WorkerOpts {
             failure: None,
             file_source: None,
             throttle: None,
+            ship_trace: false,
+            keep_trace: false,
         }
     }
 }
@@ -84,6 +95,7 @@ struct Segment {
 
 impl Segment {
     fn new(start: usize, points: Dataset, kernel: &dyn Kernel) -> Segment {
+        let _g = crate::obs::span("diag_pass", "worker");
         let ln = points.n();
         let d = (0..ln).map(|i| kernel.diag_value(points.point(i))).collect();
         Segment {
@@ -130,6 +142,10 @@ pub struct Worker {
     epoch: u64,
     /// iteration counter for fault injection
     iteration: usize,
+    /// local copy of drained trace events (only when `opts.keep_trace`)
+    kept_trace: Vec<OwnedEvent>,
+    /// ring overflow count accumulated across drains
+    kept_dropped: u64,
 }
 
 impl Worker {
@@ -155,14 +171,51 @@ impl Worker {
             k: 0,
             epoch: 0,
             iteration: 0,
+            kept_trace: Vec::new(),
+            kept_dropped: 0,
         }
+    }
+
+    /// Drain the process-global trace ring and fan the events out to the
+    /// configured sinks: leader-ward as a [`FromWorker::TraceChunk`]
+    /// (`ship_trace`) and/or the local accumulator (`keep_trace`). A
+    /// worker with neither sink never touches the ring — in-process
+    /// workers share it with the leader, whose CLI drains it itself.
+    fn flush_trace(&mut self) {
+        if !self.opts.ship_trace && !self.opts.keep_trace {
+            return;
+        }
+        let t = crate::obs::trace::drain();
+        self.kept_dropped += t.dropped;
+        if t.events.is_empty() {
+            return;
+        }
+        let events: Vec<OwnedEvent> =
+            t.events.iter().map(|e| e.to_owned_event()).collect();
+        if self.opts.keep_trace {
+            self.kept_trace.extend(events.iter().cloned());
+        }
+        if self.opts.ship_trace {
+            self.leader.send(&FromWorker::TraceChunk {
+                worker: self.id,
+                events,
+            });
+        }
+    }
+
+    /// Terminal trace flush: whatever is still in the ring, then the
+    /// kept local copy (plus drop count) for the caller to persist.
+    fn into_trace(mut self) -> (Vec<OwnedEvent>, u64) {
+        self.flush_trace();
+        (std::mem::take(&mut self.kept_trace), self.kept_dropped)
     }
 
     /// The worker body: process leader messages until Finish (or link
     /// loss). Generic over the inbound side so thread workers run off an
     /// mpsc receiver and TCP worker processes off a frame-decoding
-    /// socket reader.
-    pub fn run(mut self, mut inbox: impl WorkerSource) {
+    /// socket reader. Returns the locally kept trace events (empty
+    /// unless `opts.keep_trace`) and the ring-overflow count.
+    pub fn run(mut self, mut inbox: impl WorkerSource) -> (Vec<OwnedEvent>, u64) {
         while let Some(msg) = inbox.recv() {
             let t0 = std::time::Instant::now();
             match msg {
@@ -180,7 +233,7 @@ impl Worker {
                                      rows this worker owns"
                                 ),
                             });
-                            return;
+                            return self.into_trace();
                         }
                     }
                 }
@@ -204,7 +257,7 @@ impl Worker {
                             // way a TCP reader would (EOF → Gone) and stop
                             self.leader
                                 .send(&FromWorker::Gone { worker: self.id });
-                            return;
+                            return self.into_trace();
                         }
                     }
                     if let Some(t) = self.opts.throttle {
@@ -216,7 +269,7 @@ impl Worker {
                             worker: self.id,
                             message: m,
                         });
-                        return;
+                        return self.into_trace();
                     }
                     if want_argmax {
                         self.send_argmax();
@@ -229,7 +282,7 @@ impl Worker {
                             worker: self.id,
                             message: format!("adopting re-sharded rows: {e}"),
                         });
-                        return;
+                        return self.into_trace();
                     }
                     if want_argmax {
                         self.send_argmax();
@@ -237,16 +290,21 @@ impl Worker {
                 }
                 ToWorker::GatherColumns { winv } => {
                     // mid-run snapshot: same gather as Finish, but the
-                    // worker stays alive for further selection rounds
+                    // worker stays alive for further selection rounds.
+                    // Flush first: the FIFO link guarantees the chunk
+                    // lands before the Columns the leader is waiting on.
+                    self.flush_trace();
                     self.send_columns(winv);
                 }
                 ToWorker::Finish { winv } => {
+                    self.flush_trace();
                     self.send_columns(winv);
-                    return;
+                    return self.into_trace();
                 }
             }
             self.metrics.add_worker_compute(t0.elapsed());
         }
+        self.into_trace()
     }
 
     fn point_of(&self, g: usize) -> Option<Vec<f64>> {
@@ -315,6 +373,7 @@ impl Worker {
         point: &[f64],
         delta: Option<f64>,
     ) -> std::result::Result<(), String> {
+        let _g = crate::obs::span("shard_update", "worker");
         let k = self.k;
         let l = self.opts.max_cols;
         // b = g(Z_Λ, z_new) — computable from the replica, no comms
@@ -416,6 +475,7 @@ impl Worker {
         if ranges.is_empty() {
             return Ok(()); // epoch-only broadcast
         }
+        let _g = crate::obs::span("adopt", "worker");
         let (path, limits) = self
             .opts
             .file_source
@@ -472,6 +532,7 @@ impl Worker {
     /// top-B unselected candidates (global-ascending scan; ties keep the
     /// lower index, matching the sequential sampler) → leader.
     fn send_argmax(&mut self) {
+        let _g = crate::obs::span("score_scan", "worker");
         let k = self.k;
         let bcap = self.opts.merge_batch.max(1);
         let mut cands: Vec<(usize, f64)> = Vec::with_capacity(bcap);
@@ -525,6 +586,7 @@ impl Worker {
     /// local_n × k); the directed worker attaches its compacted W⁻¹
     /// replica to the first block.
     fn send_columns(&mut self, with_winv: bool) {
+        let _g = crate::obs::span("column_serve", "worker");
         let k = self.k;
         let l = self.opts.max_cols;
         let mut winv = if with_winv {

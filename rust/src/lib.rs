@@ -234,11 +234,37 @@
 //!
 //! Library users call [`obs::trace::enable`], run anything, then
 //! [`obs::trace::drain`] for the same exports
-//! (`examples/trace_phases.rs` walks a trace by hand). The server
-//! additionally serves Prometheus text exposition — every JSON counter,
-//! per-endpoint request-duration histograms with p50/p90/p99, and live
-//! per-worker oASIS-P gauges — from `GET /metrics?format=prometheus`
-//! ([`obs::prom`], protocol details in the [`server`] docs).
+//! (`examples/trace_phases.rs` walks a trace by hand).
+//!
+//! Three pillars cover the whole fleet:
+//!
+//! 1. **Structured logging** ([`obs::log`]) — leveled JSON-lines (or
+//!    plain-text) records on stderr, switched by `--log-level` /
+//!    `--log-json` on `serve`, `parallel`, and `worker`. Every HTTP
+//!    request carries an `X-Request-Id` (client-supplied ids are
+//!    honored, otherwise one is generated), echoed on the response and
+//!    attached to the request log line, so a client-reported failure
+//!    greps straight to its server-side record.
+//! 2. **Metrics** — the server's `/metrics` JSON report and its
+//!    Prometheus text exposition ([`obs::prom`]): every JSON counter,
+//!    per-endpoint request-duration histograms with p50/p90/p99, live
+//!    per-worker oASIS-P gauges, and per-session convergence gauges
+//!    (`oasis_session_error_estimate`, `oasis_session_best_score`) from
+//!    `GET /metrics?format=prometheus`. Per-step *convergence
+//!    telemetry* rides alongside: each hosted session keeps a bounded
+//!    trajectory ring (step, k, error estimate, score, step µs) served
+//!    by `GET /sessions/{name}/trajectory` and summarized under
+//!    `"trajectory"` in `/metrics`; the CLI writes the same series with
+//!    `approximate --trajectory FILE` (CSV).
+//! 3. **Distributed tracing** — `parallel --trace FILE` merges the
+//!    leader's spans with every TCP worker's locally-recorded spans
+//!    (shipped leader-ward at run end) into one Chrome trace with a
+//!    per-process track per worker; `worker --trace FILE` writes a
+//!    worker's own local trace, and a live server records between
+//!    `POST /debug/trace` (enable/disable, ring capacity) and
+//!    `GET /debug/trace` (drain as Chrome JSON or `?format=jsonl`).
+//!    `examples/fleet_trace.rs` builds and merges a fleet trace by
+//!    hand. Protocol details live in the [`server`] docs.
 //!
 //! # Performance
 //!

@@ -35,7 +35,9 @@ use oasis::nystrom::{
     Provenance, StoredArtifact,
 };
 use oasis::runtime::{Accel, Manifest};
-use oasis::sampling::{run_to_completion, SamplerSession, StopReason};
+use oasis::sampling::{
+    run_to_completion, run_to_completion_observed, SamplerSession, StopReason,
+};
 use oasis::tasks::{FittedTask, TaskKind};
 use oasis::util::args::Args;
 use oasis::util::json::Json;
@@ -110,6 +112,10 @@ fn print_help() {
                        them as Chrome trace_event JSON (load at\n\
                        chrome://tracing or ui.perfetto.dev); also prints\n\
                        a per-phase timing table\n\
+           --trajectory  FILE — write the convergence trajectory as CSV:\n\
+                       one step,k,index,score,error_estimate,step_us row\n\
+                       per selection (session methods only; the offline\n\
+                       twin of GET /sessions/{{name}}/trajectory)\n\
          \n\
          query options (serve a stored artifact, no oracle needed):\n\
            --load      artifact file written by approximate --save or the\n\
@@ -170,9 +176,16 @@ fn print_help() {
                        binary --data file; port 0 picks one)\n\
            --save      write the finished approximation as a stored\n\
                        artifact, as in approximate\n\
-           --trace     FILE — Chrome trace, as in approximate (adds the\n\
-                       coordinator's gather/arbitrate/reshard spans and\n\
-                       per-frame wire-byte counters)\n\
+           --trace     FILE — merged fleet trace: the leader's\n\
+                       gather/arbitrate/reshard spans on the pid-1\n\
+                       track, plus — for TCP fleets — every worker's\n\
+                       shard-load/diag/score-scan/column-serve spans on\n\
+                       their own per-worker pid tracks (shipped\n\
+                       leaderward during the run), one Chrome-loadable\n\
+                       timeline for the whole fleet\n\
+           --log-level error|warn|info|debug — structured-log threshold\n\
+                       (default info)\n\
+           --log-json  emit log lines as JSON objects instead of text\n\
          \n\
          worker options (one oASIS-P worker process; framed-TCP wire\n\
          protocol documented in the oasis::coordinator module docs):\n\
@@ -186,6 +199,10 @@ fn print_help() {
            --throttle-ms  sleep this long before each argmax sweep\n\
                        (testing aid: makes mid-run failures easy to\n\
                        inject)\n\
+           --trace     FILE — on exit, write this worker's own local\n\
+                       spans as Chrome trace_event JSON (independent of\n\
+                       the leader's merged --trace)\n\
+           --log-level / --log-json  as in parallel\n\
          \n\
          export options (write an oasis-matrix binary file — the only\n\
          format --shard-reads workers can seek byte ranges of):\n\
@@ -225,6 +242,10 @@ fn print_help() {
            --max-rps-per-ip  per-client-IP cap per second (default 0)\n\
            --drain-ms  graceful-shutdown drain deadline for in-flight\n\
                        requests (default 5000)\n\
+           --log-level error|warn|info|debug — structured-log threshold\n\
+                       (default info); every request logs one line\n\
+                       carrying its X-Request-Id\n\
+           --log-json  emit log lines as JSON objects instead of text\n\
          \n\
          bench-serve options (load-generate against a serve instance and\n\
          report p50/p99 latency + requests/sec for single vs. batched\n\
@@ -346,6 +367,22 @@ fn resolve_or_exit(cmd: &str, spec: RunSpec) -> ResolvedRun {
     }
 }
 
+/// `--log-level LEVEL` / `--log-json`: configure the structured logger
+/// (oasis::obs::log) before any subsystem emits. Returns `false` — a
+/// usage error — on an unknown level name.
+fn log_begin(cmd: &str, args: &Args) -> bool {
+    match oasis::obs::log::configure_from_args(
+        args.get("log-level"),
+        args.flag("log-json"),
+    ) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("{cmd}: {e}");
+            false
+        }
+    }
+}
+
 /// `--trace FILE`: turn the span recorder on before any engine work so
 /// the resolve/sampling/coordinator guards record. Returns the output
 /// path for [`trace_export`] at command exit.
@@ -353,6 +390,30 @@ fn trace_begin(args: &Args) -> Option<PathBuf> {
     let path = args.get("trace")?;
     oasis::obs::trace::enable();
     Some(PathBuf::from(path))
+}
+
+/// The per-phase timing table printed alongside any trace export.
+fn phase_table(phases: &[oasis::obs::trace::PhaseStat]) -> String {
+    let mut table = String::new();
+    if phases.is_empty() {
+        return table;
+    }
+    table.push_str(&format!(
+        "{:<16} {:>7} {:>10} {:>10} {:>10} {:>10}\n",
+        "phase", "count", "total", "p50", "p99", "max"
+    ));
+    for p in phases {
+        table.push_str(&format!(
+            "{:<16} {:>7} {:>10} {:>10} {:>10} {:>10}\n",
+            p.name,
+            p.hist.count(),
+            fmt_secs(p.hist.sum()),
+            fmt_secs(p.hist.quantile(0.5)),
+            fmt_secs(p.hist.quantile(0.99)),
+            fmt_secs(p.hist.max()),
+        ));
+    }
+    table
 }
 
 /// Drain the recorder, write the Chrome `trace_event` JSON (atomic —
@@ -375,24 +436,47 @@ fn trace_export(args: &Args, out: Option<PathBuf>) -> i32 {
         trace.dropped,
         path.display()
     );
-    let phases = trace.phase_summary();
-    if !phases.is_empty() {
-        table.push_str(&format!(
-            "{:<16} {:>7} {:>10} {:>10} {:>10} {:>10}\n",
-            "phase", "count", "total", "p50", "p99", "max"
-        ));
-        for p in &phases {
-            table.push_str(&format!(
-                "{:<16} {:>7} {:>10} {:>10} {:>10} {:>10}\n",
-                p.name,
-                p.hist.count(),
-                fmt_secs(p.hist.sum()),
-                fmt_secs(p.hist.quantile(0.5)),
-                fmt_secs(p.hist.quantile(0.99)),
-                fmt_secs(p.hist.max()),
-            ));
-        }
+    table.push_str(&phase_table(&trace.phase_summary()));
+    if args.flag("json") {
+        eprint!("{table}");
+    } else {
+        print!("{table}");
     }
+    0
+}
+
+/// `parallel --trace`: the fleet-wide merged export. The leader's own
+/// drained events become the pid-1 `leader` track; each TCP worker's
+/// spans (shipped leaderward as TraceChunk frames during the run) land
+/// on their own pid track, so Chrome/Perfetto shows the whole fleet on
+/// one timeline. In-process fleets record straight into the leader's
+/// ring, so `worker_tracks` is empty there and the export degrades to
+/// the single-track shape.
+fn trace_export_fleet(
+    args: &Args,
+    out: Option<PathBuf>,
+    worker_tracks: Vec<oasis::obs::trace::TraceTrack>,
+) -> i32 {
+    let Some(path) = out else { return 0 };
+    oasis::obs::trace::disable();
+    let trace = oasis::obs::trace::drain();
+    let phases = trace.phase_summary();
+    let leader_events = trace.events.len();
+    let leader_dropped = trace.dropped;
+    let mut tracks = vec![trace.into_track(1, "leader")];
+    tracks.extend(worker_tracks);
+    let json = oasis::obs::trace::merged_chrome_json(&tracks).to_string();
+    if let Err(e) = oasis::util::fsio::write_atomic(&path, json.as_bytes()) {
+        eprintln!("--trace {}: {e}", path.display());
+        return 1;
+    }
+    let mut table = format!(
+        "trace: {leader_events} leader events ({leader_dropped} dropped) + \
+         {} worker track(s) written to {}\n",
+        tracks.len() - 1,
+        path.display()
+    );
+    table.push_str(&phase_table(&phases));
     if args.flag("json") {
         eprint!("{table}");
     } else {
@@ -456,6 +540,36 @@ fn cmd_promcheck(args: &Args) -> i32 {
     0
 }
 
+
+/// `approximate --trajectory FILE`: one CSV row per selection step —
+/// the offline twin of the server's `GET /sessions/{name}/trajectory`.
+/// Unavailable values render as empty fields (error estimates for
+/// methods without an estimator, scores for unscored randomized draws).
+fn write_trajectory_csv(
+    path: &Path,
+    records: &[oasis::sampling::StepRecord],
+) -> oasis::Result<()> {
+    let mut csv =
+        String::from("step,k,index,score,error_estimate,step_us\n");
+    for r in records {
+        let score = if r.score.is_finite() {
+            format!("{:e}", r.score)
+        } else {
+            String::new()
+        };
+        let err = r
+            .error_estimate
+            .filter(|e| e.is_finite())
+            .map(|e| format!("{e:e}"))
+            .unwrap_or_default();
+        csv.push_str(&format!(
+            "{},{},{},{score},{err},{}\n",
+            r.step, r.k, r.index, r.step_us
+        ));
+    }
+    oasis::util::fsio::write_atomic(path, csv.as_bytes())?;
+    Ok(())
+}
 
 fn report_approximate(
     args: &Args,
@@ -527,6 +641,10 @@ fn cmd_approximate(args: &Args) -> i32 {
     let slot = run.oracle_slot();
     let seed = run.method.seed;
     let mut stop: Option<StopReason> = None;
+    // --trajectory FILE: collect one StepRecord per selection across
+    // whichever session path runs (accel, native, or the fallback)
+    let mut trajectory: Vec<oasis::sampling::StepRecord> = Vec::new();
+    let record_trajectory = args.get("trajectory").is_some();
 
     let approx = if args.flag("accel") && method == Method::Oasis {
         let accel_run = Accel::try_default()
@@ -535,7 +653,11 @@ fn cmd_approximate(args: &Args) -> i32 {
             })
             .and_then(|mut accel| {
                 let mut s = run.open_accel_session(&mut accel, &slot)?;
-                let reason = run_to_completion(s.as_mut(), &run.stopping)?;
+                let reason = run_to_completion_observed(
+                    s.as_mut(),
+                    &run.stopping,
+                    |r| trajectory.push(r),
+                )?;
                 Ok((s.snapshot()?, reason))
             });
         match accel_run {
@@ -545,9 +667,14 @@ fn cmd_approximate(args: &Args) -> i32 {
             }
             Err(e) => {
                 eprintln!("accel path failed ({e}); falling back to native");
+                trajectory.clear(); // records from the failed attempt
                 let native = (|| -> oasis::Result<NystromApprox> {
                     let mut s = run.open_session(&slot)?;
-                    stop = Some(run_to_completion(s.as_mut(), &run.stopping)?);
+                    stop = Some(run_to_completion_observed(
+                        s.as_mut(),
+                        &run.stopping,
+                        |r| trajectory.push(r),
+                    )?);
                     s.snapshot()
                 })();
                 match native {
@@ -565,7 +692,11 @@ fn cmd_approximate(args: &Args) -> i32 {
         // --resume-from warm-starts them from a stored artifact's Λ
         let result = (|| -> oasis::Result<NystromApprox> {
             let mut s = run.open_session(&slot)?;
-            stop = Some(run_to_completion(s.as_mut(), &run.stopping)?);
+            stop = Some(run_to_completion_observed(
+                s.as_mut(),
+                &run.stopping,
+                |r| trajectory.push(r),
+            )?);
             s.snapshot()
         })();
         match result {
@@ -577,6 +708,13 @@ fn cmd_approximate(args: &Args) -> i32 {
         }
     } else {
         // random | leverage | kmeans
+        if record_trajectory {
+            eprintln!(
+                "--trajectory: method '{}' selects in one shot — no per-step \
+                 trajectory to record",
+                method.as_str()
+            );
+        }
         match run.one_shot(&slot) {
             Ok(a) => a,
             Err(e) => {
@@ -585,6 +723,19 @@ fn cmd_approximate(args: &Args) -> i32 {
             }
         }
     };
+
+    if let Some(out) = args.get("trajectory") {
+        if !trajectory.is_empty() {
+            if let Err(e) = write_trajectory_csv(Path::new(out), &trajectory) {
+                eprintln!("--trajectory {out}: {e}");
+                return 1;
+            }
+            eprintln!(
+                "wrote {} trajectory row(s) to {out}",
+                trajectory.len()
+            );
+        }
+    }
 
     let oracle = slot.get().expect("full dataset implies an oracle");
     let mode = args.get_or("error", if ds.n() <= 8000 { "full" } else { "sampled" });
@@ -1068,6 +1219,9 @@ fn parse_indices(s: &str) -> Result<Vec<usize>, String> {
 }
 
 fn cmd_parallel(args: &Args) -> i32 {
+    if !log_begin("parallel", args) {
+        return 2;
+    }
     let trace_out = trace_begin(args);
     let spec = match run_spec(args, Method::OasisP, 500) {
         Ok(s) => s,
@@ -1162,7 +1316,7 @@ fn cmd_parallel(args: &Args) -> i32 {
                     }
                 }
             }
-            trace_export(args, trace_out)
+            trace_export_fleet(args, trace_out, report.worker_traces)
         }
         Err(e) => {
             eprintln!("oASIS-P failed: {e}");
@@ -1176,6 +1330,9 @@ fn cmd_parallel(args: &Args) -> i32 {
 /// serve argmax/column requests until the leader sends Finish. Wire
 /// protocol reference lives in the [`oasis::coordinator`] module docs.
 fn cmd_worker(args: &Args) -> i32 {
+    if !log_begin("worker", args) {
+        return 2;
+    }
     let Some(join) = args.get("join") else {
         eprintln!(
             "worker: --join HOST:PORT is required (the address the leader's \
@@ -1183,11 +1340,15 @@ fn cmd_worker(args: &Args) -> i32 {
         );
         return 2;
     };
-    let data = args.get("data").map(PathBuf::from);
-    let throttle_ms = args.u64_or("throttle-ms", 0);
-    let throttle =
-        (throttle_ms > 0).then(|| std::time::Duration::from_millis(throttle_ms));
-    match oasis::coordinator::run_worker(join, data, throttle) {
+    let opts = oasis::coordinator::WorkerRunOpts {
+        data_override: args.get("data").map(PathBuf::from),
+        throttle: {
+            let ms = args.u64_or("throttle-ms", 0);
+            (ms > 0).then(|| std::time::Duration::from_millis(ms))
+        },
+        trace_file: args.get("trace").map(PathBuf::from),
+    };
+    match oasis::coordinator::run_worker(join, opts) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("worker: {e}");
@@ -1275,6 +1436,9 @@ fn cmd_seed(args: &Args) -> i32 {
 /// resolved port — useful with `--port 0`) and serves until
 /// `POST /shutdown`.
 fn cmd_serve(args: &Args) -> i32 {
+    if !log_begin("serve", args) {
+        return 2;
+    }
     let host = args.get_or("host", "127.0.0.1");
     let port = args.usize_or("port", 7437);
     if port > u16::MAX as usize {

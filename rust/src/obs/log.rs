@@ -1,0 +1,258 @@
+//! Leveled, structured logging — the second observability pillar.
+//!
+//! A process-global logger with four levels (`error` > `warn` > `info`
+//! > `debug`), two renderings, and zero dependencies:
+//!
+//! * **text** (default): `TS LEVEL target: message key=value …` — what
+//!   a human wants on a terminal.
+//! * **JSON lines** ([`set_json`]): one object per line with `ts`,
+//!   `level`, `target`, `msg`, and every structured field — what a log
+//!   pipeline wants. `oasis serve --log-json` switches it on.
+//!
+//! Lines below the configured [`Level`] cost one relaxed atomic load.
+//! Everything goes to stderr (stdout stays reserved for command
+//! output), plus an optional in-process capture sink that tests use to
+//! assert on emitted lines without scraping a child's stderr.
+//!
+//! Structured fields are `(&str, String)` pairs; the helpers
+//! [`error`], [`warn`], [`info`], and [`debug`] cover the common case:
+//!
+//! ```
+//! oasis::obs::log::info(
+//!     "server",
+//!     "request",
+//!     &[("request_id", "r-42".to_string()), ("status", "200".to_string())],
+//! );
+//! ```
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity. Ordered so `Error < Warn < Info < Debug` — a line is
+/// emitted when its level is ≤ the configured threshold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+/// Parse a `--log-level` argument (case-insensitive).
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Some(Level::Error),
+        "warn" | "warning" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static JSON_MODE: AtomicBool = AtomicBool::new(false);
+static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
+/// Set the emission threshold (default [`Level::Info`]).
+pub fn set_level(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+/// The current emission threshold.
+pub fn level() -> Level {
+    Level::from_u8(THRESHOLD.load(Ordering::Relaxed))
+}
+
+/// Switch between JSON-lines (`true`) and text rendering.
+pub fn set_json(on: bool) {
+    JSON_MODE.store(on, Ordering::Relaxed);
+}
+
+/// Would a line at `l` be emitted right now? One relaxed load — the
+/// entire cost of a suppressed log site.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= THRESHOLD.load(Ordering::Relaxed)
+}
+
+/// Start capturing rendered lines in-process (test sink). Lines still
+/// go to stderr too.
+pub fn capture_start() {
+    let mut cap = CAPTURE.lock().unwrap_or_else(|e| e.into_inner());
+    *cap = Some(Vec::new());
+}
+
+/// Stop capturing and take everything captured since
+/// [`capture_start`].
+pub fn capture_take() -> Vec<String> {
+    let mut cap = CAPTURE.lock().unwrap_or_else(|e| e.into_inner());
+    cap.take().unwrap_or_default()
+}
+
+fn now_unix() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+fn render(
+    level: Level,
+    target: &str,
+    msg: &str,
+    fields: &[(&str, String)],
+) -> String {
+    if JSON_MODE.load(Ordering::Relaxed) {
+        let mut obj = vec![
+            ("ts", Json::Num((now_unix() * 1e3).round() / 1e3)),
+            ("level", Json::Str(level.as_str().to_string())),
+            ("target", Json::Str(target.to_string())),
+            ("msg", Json::Str(msg.to_string())),
+        ];
+        for (k, v) in fields {
+            obj.push((k, Json::Str(v.clone())));
+        }
+        Json::obj(obj).to_string()
+    } else {
+        let mut line = format!(
+            "[{:.3}] {:5} {}: {}",
+            now_unix(),
+            level.as_str().to_uppercase(),
+            target,
+            msg
+        );
+        for (k, v) in fields {
+            line.push_str(&format!(" {k}={v}"));
+        }
+        line
+    }
+}
+
+/// Emit one structured line at `level` (no-op below the threshold).
+pub fn log(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) {
+    if !enabled(level) {
+        return;
+    }
+    let line = render(level, target, msg, fields);
+    {
+        let mut cap = CAPTURE.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(buf) = cap.as_mut() {
+            buf.push(line.clone());
+        }
+    }
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "{line}");
+}
+
+/// [`log`] at [`Level::Error`].
+pub fn error(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Error, target, msg, fields);
+}
+
+/// [`log`] at [`Level::Warn`].
+pub fn warn(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Warn, target, msg, fields);
+}
+
+/// [`log`] at [`Level::Info`].
+pub fn info(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Info, target, msg, fields);
+}
+
+/// [`log`] at [`Level::Debug`].
+pub fn debug(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Debug, target, msg, fields);
+}
+
+/// Apply the shared `--log-level LEVEL` / `--log-json` CLI flags.
+/// Returns an error string for an unknown level name.
+pub fn configure_from_args(
+    level_arg: Option<&str>,
+    json: bool,
+) -> Result<(), String> {
+    if let Some(s) = level_arg {
+        match parse_level(s) {
+            Some(l) => set_level(l),
+            None => {
+                return Err(format!(
+                    "unknown log level {s:?} (want error|warn|info|debug)"
+                ))
+            }
+        }
+    }
+    set_json(json);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The logger is process-global; tests serialize on this lock.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn threshold_filters_and_fields_render_in_both_modes() {
+        let _l = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_level(Level::Info);
+        set_json(false);
+        capture_start();
+        debug("test", "hidden", &[]);
+        info("test", "shown", &[("session", "a".to_string())]);
+        let lines = capture_take();
+        assert_eq!(lines.len(), 1, "debug below info threshold: {lines:?}");
+        assert!(lines[0].contains("INFO"));
+        assert!(lines[0].contains("shown"));
+        assert!(lines[0].contains("session=a"));
+
+        set_json(true);
+        capture_start();
+        warn("net", "drop", &[("worker", "2".to_string())]);
+        let lines = capture_take();
+        assert_eq!(lines.len(), 1);
+        let j = Json::parse(&lines[0]).expect("JSON line");
+        assert_eq!(j.get("level").and_then(Json::as_str), Some("warn"));
+        assert_eq!(j.get("target").and_then(Json::as_str), Some("net"));
+        assert_eq!(j.get("msg").and_then(Json::as_str), Some("drop"));
+        assert_eq!(j.get("worker").and_then(Json::as_str), Some("2"));
+        assert!(j.get("ts").and_then(Json::as_f64).unwrap() > 0.0);
+        set_json(false);
+    }
+
+    #[test]
+    fn level_parsing_and_flag_configuration() {
+        let _l = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert_eq!(parse_level("DEBUG"), Some(Level::Debug));
+        assert_eq!(parse_level("warning"), Some(Level::Warn));
+        assert_eq!(parse_level("loud"), None);
+        assert!(configure_from_args(Some("loud"), false).is_err());
+        configure_from_args(Some("error"), false).unwrap();
+        assert_eq!(level(), Level::Error);
+        assert!(!enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        configure_from_args(Some("info"), false).unwrap();
+    }
+}

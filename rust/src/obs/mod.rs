@@ -22,12 +22,23 @@
 //!   a self-contained exposition validator the CI smoke jobs run via
 //!   `oasis promcheck`. The server serves it from
 //!   `GET /metrics?format=prometheus` (or `Accept: text/plain`).
+//! * [`log`] — a leveled, structured (JSON-lines capable) logger that
+//!   replaces ad-hoc stderr prints in the server, coordinator, and
+//!   worker paths; `--log-level`/`--log-json` on `serve`, `parallel`,
+//!   and `worker` configure it.
+//!
+//! In the oASIS-P fleet the tracing pillar is *distributed*: worker
+//! processes record into their own rings and ship
+//! [`trace::OwnedEvent`] chunks leader-ward over the coordinator wire
+//! protocol; the leader merges everything into per-process
+//! [`trace::TraceTrack`]s for one Chrome timeline.
 //!
 //! Tracing is off by default and costs one relaxed atomic load per
 //! guard when disabled, so instrumentation stays in the hot paths
 //! unconditionally.
 
 pub mod hist;
+pub mod log;
 pub mod prom;
 pub mod trace;
 

@@ -22,6 +22,12 @@
 //!
 //! [`Trace::phase_summary`] aggregates the spans per name into
 //! [`Hist`]s — the CLI's per-phase timing table.
+//!
+//! For the oASIS-P fleet, each `oasis worker` process records into its
+//! own ring and ships [`OwnedEvent`]s leader-ward over the wire; the
+//! leader merges its drain plus every worker's chunks into
+//! [`TraceTrack`]s and renders them with [`merged_chrome_json`] — one
+//! Chrome timeline with a distinct `pid` row per process.
 
 use super::hist::Hist;
 use crate::util::json::Json;
@@ -53,6 +59,122 @@ pub struct Event {
     pub depth: u32,
     /// Counter payload (wire bytes, batch sizes, …).
     pub value: Option<f64>,
+}
+
+/// An owned mirror of [`Event`] whose name/category are `String`s, so
+/// worker processes can ship recorded events over the wire (an
+/// [`Event`]'s `&'static str` fields cannot cross a process boundary).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OwnedEvent {
+    pub name: String,
+    pub cat: String,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+    pub depth: u32,
+    pub value: Option<f64>,
+}
+
+impl Event {
+    /// Owned copy for wire shipping.
+    pub fn to_owned_event(&self) -> OwnedEvent {
+        OwnedEvent {
+            name: self.name.to_string(),
+            cat: self.cat.to_string(),
+            ts_us: self.ts_us,
+            dur_us: self.dur_us,
+            tid: self.tid,
+            depth: self.depth,
+            value: self.value,
+        }
+    }
+}
+
+/// One process's worth of events in a merged fleet trace. `pid` becomes
+/// the Chrome process row; `label` its `process_name` metadata.
+#[derive(Clone, Debug, Default)]
+pub struct TraceTrack {
+    pub pid: u64,
+    pub label: String,
+    pub events: Vec<OwnedEvent>,
+    /// Events that process's bounded ring discarded before shipping.
+    pub dropped: u64,
+}
+
+fn owned_event_json(e: &OwnedEvent, pid: u64) -> Json {
+    let mut fields = vec![
+        ("name", Json::Str(e.name.clone())),
+        ("cat", Json::Str(e.cat.clone())),
+        (
+            "ph",
+            Json::Str(if e.value.is_some() { "C" } else { "X" }.to_string()),
+        ),
+        ("ts", Json::Num(e.ts_us as f64)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(e.tid as f64)),
+    ];
+    match e.value {
+        Some(v) => {
+            fields.push(("args", Json::obj(vec![("value", Json::Num(v))])))
+        }
+        None => fields.push(("dur", Json::Num(e.dur_us as f64))),
+    }
+    Json::obj(fields)
+}
+
+/// Merge per-process tracks into one Chrome `trace_event` JSON. Each
+/// track renders on its own `pid` row, named via a `process_name`
+/// metadata event, so the whole fleet reads as one timeline.
+pub fn merged_chrome_json(tracks: &[TraceTrack]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let mut dropped = 0u64;
+    for track in tracks {
+        events.push(Json::obj(vec![
+            ("name", Json::Str("process_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(track.pid as f64)),
+            ("tid", Json::Num(0.0)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::Str(track.label.clone()))]),
+            ),
+        ]));
+        for e in &track.events {
+            events.push(owned_event_json(e, track.pid));
+        }
+        dropped += track.dropped;
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("droppedEvents", Json::Num(dropped as f64)),
+    ])
+}
+
+/// Merged tracks as JSON lines (one event object per line, with the
+/// track `pid` and `label` attached) — grep/jq-friendly.
+pub fn merged_jsonl(tracks: &[TraceTrack]) -> String {
+    let mut out = String::new();
+    for track in tracks {
+        for e in &track.events {
+            let mut fields = vec![
+                ("name", Json::Str(e.name.clone())),
+                ("cat", Json::Str(e.cat.clone())),
+                ("pid", Json::Num(track.pid as f64)),
+                ("process", Json::Str(track.label.clone())),
+                ("ts_us", Json::Num(e.ts_us as f64)),
+                ("dur_us", Json::Num(e.dur_us as f64)),
+                ("tid", Json::Num(e.tid as f64)),
+                ("depth", Json::Num(e.depth as f64)),
+            ];
+            if let Some(v) = e.value {
+                fields.push(("value", Json::Num(v)));
+            }
+            out.push_str(&Json::obj(fields).to_string());
+            out.push('\n');
+        }
+    }
+    out
 }
 
 struct Ring {
@@ -287,6 +409,16 @@ impl Trace {
         phases.sort_by(|a, b| b.hist.sum().total_cmp(&a.hist.sum()));
         phases
     }
+
+    /// Package this drain as one process track of a merged fleet trace.
+    pub fn into_track(self, pid: u64, label: &str) -> TraceTrack {
+        TraceTrack {
+            pid,
+            label: label.to_string(),
+            events: self.events.iter().map(Event::to_owned_event).collect(),
+            dropped: self.dropped,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -358,5 +490,74 @@ mod tests {
         assert_eq!(phases.len(), 2);
         assert_eq!(phases[0].name, "outer");
         assert_eq!(phases[0].hist.count(), 1);
+    }
+
+    #[test]
+    fn merged_tracks_render_per_pid_rows_with_metadata() {
+        let mk = |name: &str, ts: u64| OwnedEvent {
+            name: name.to_string(),
+            cat: "test".to_string(),
+            ts_us: ts,
+            dur_us: 5,
+            tid: 1,
+            depth: 0,
+            value: None,
+        };
+        let tracks = vec![
+            TraceTrack {
+                pid: 1,
+                label: "leader".to_string(),
+                events: vec![mk("gather", 10)],
+                dropped: 2,
+            },
+            TraceTrack {
+                pid: 3,
+                label: "worker-1".to_string(),
+                events: vec![mk("score_scan", 12), mk("column_serve", 20)],
+                dropped: 1,
+            },
+        ];
+        let chrome = merged_chrome_json(&tracks);
+        let rendered = chrome.to_string();
+        assert!(rendered.contains("\"process_name\""));
+        assert!(rendered.contains("\"worker-1\""));
+        assert_eq!(
+            chrome.get("droppedEvents").and_then(Json::as_f64),
+            Some(3.0)
+        );
+        let events = chrome
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents");
+        // 2 metadata events + 3 spans
+        assert_eq!(events.len(), 5);
+        let pids: Vec<f64> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| e.get("pid").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert_eq!(pids, vec![1.0, 3.0, 3.0]);
+
+        let jsonl = merged_jsonl(&tracks);
+        assert_eq!(jsonl.lines().count(), 3);
+        assert!(jsonl.contains("\"process\":\"leader\""));
+
+        // Event → OwnedEvent keeps every field
+        let ev = Event {
+            name: "x",
+            cat: "c",
+            ts_us: 7,
+            dur_us: 9,
+            tid: 4,
+            depth: 2,
+            value: Some(1.5),
+        };
+        let owned = ev.to_owned_event();
+        assert_eq!(owned.name, "x");
+        assert_eq!(owned.ts_us, 7);
+        assert_eq!(owned.dur_us, 9);
+        assert_eq!(owned.tid, 4);
+        assert_eq!(owned.depth, 2);
+        assert_eq!(owned.value, Some(1.5));
     }
 }

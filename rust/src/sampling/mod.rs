@@ -60,8 +60,8 @@ pub mod uniform;
 
 pub use oracle::{ColumnOracle, ExplicitOracle, ImplicitOracle, SparseKnnOracle};
 pub use session::{
-    run_to_completion, SamplerSession, StepOutcome, StopReason,
-    StoppingCriterion, StoppingRule,
+    run_to_completion, run_to_completion_observed, SamplerSession,
+    StepOutcome, StepRecord, StopReason, StoppingCriterion, StoppingRule,
 };
 
 use crate::nystrom::NystromApprox;

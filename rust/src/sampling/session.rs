@@ -289,6 +289,26 @@ impl StoppingRule {
     }
 }
 
+/// One completed selection step, as reported to a
+/// [`run_to_completion_observed`] observer — the convergence-telemetry
+/// record the CLI's `approximate --trajectory` writes per row and the
+/// serving layer mirrors into each session's trajectory ring.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    /// 1-based step number within this driver call.
+    pub step: u64,
+    /// columns selected so far (including seed columns), after the step.
+    pub k: usize,
+    /// global index of the column this step selected.
+    pub index: usize,
+    /// the method's selection score (NaN for unscored randomized draws).
+    pub score: f64,
+    /// [`SamplerSession::error_estimate`] after the step, if available.
+    pub error_estimate: Option<f64>,
+    /// wall-clock duration of this step, in microseconds.
+    pub step_us: u64,
+}
+
 /// Drive a session until the rule fires or the session exhausts itself,
 /// returning why the run stopped. The rule is evaluated before every step
 /// (so a session already past a budget stops immediately and a resumed
@@ -297,14 +317,41 @@ pub fn run_to_completion(
     session: &mut dyn SamplerSession,
     rule: &StoppingRule,
 ) -> Result<StopReason> {
+    run_to_completion_observed(session, rule, |_| {})
+}
+
+/// [`run_to_completion`] with a per-step observer: `observe` is called
+/// once after every *successful* selection with that step's
+/// [`StepRecord`]. The observer sits outside the step's trace span, so
+/// recording telemetry never inflates the measured step latency.
+pub fn run_to_completion_observed(
+    session: &mut dyn SamplerSession,
+    rule: &StoppingRule,
+    mut observe: impl FnMut(StepRecord),
+) -> Result<StopReason> {
     let started = std::time::Instant::now();
+    let mut steps: u64 = 0;
     loop {
         if let Some(reason) = rule.evaluate(session, started.elapsed()) {
             return Ok(reason);
         }
-        let _step_span = crate::obs::span("sampler_step", "sampling");
-        match session.step()? {
-            StepOutcome::Selected { .. } => {}
+        let t0 = std::time::Instant::now();
+        let outcome = {
+            let _step_span = crate::obs::span("sampler_step", "sampling");
+            session.step()?
+        };
+        match outcome {
+            StepOutcome::Selected { index, score } => {
+                steps += 1;
+                observe(StepRecord {
+                    step: steps,
+                    k: session.k(),
+                    index,
+                    score,
+                    error_estimate: session.error_estimate(),
+                    step_us: t0.elapsed().as_micros() as u64,
+                });
+            }
             StepOutcome::Exhausted(reason) => return Ok(reason),
         }
     }
@@ -470,6 +517,26 @@ mod tests {
             StopReason::DeadlineExpired
         );
         assert_eq!(s.k(), 0);
+    }
+
+    #[test]
+    fn observed_run_reports_every_selection() {
+        let mut s = Fake::new(vec![1.0, 0.5, 0.25, 0.125], vec![]);
+        let mut seen = Vec::new();
+        let reason = run_to_completion_observed(
+            &mut s,
+            &StoppingRule::budget(3),
+            |r| seen.push(r),
+        )
+        .unwrap();
+        assert_eq!(reason, StopReason::BudgetReached);
+        assert_eq!(seen.len(), 3);
+        for (i, r) in seen.iter().enumerate() {
+            assert_eq!(r.step, i as u64 + 1);
+            assert_eq!(r.k, i + 1);
+            assert_eq!(r.index, i);
+            assert_eq!(r.score, [1.0, 0.5, 0.25][i]);
+        }
     }
 
     #[test]

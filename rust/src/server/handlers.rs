@@ -46,6 +46,9 @@ pub fn route(state: &Arc<ServerState>, req: &Request) -> Response {
         ("GET", ["sessions"]) => list_sessions(state),
         ("POST", ["sessions"]) => create_session(state, req),
         ("GET", ["sessions", name]) => session_status(state, name),
+        ("GET", ["sessions", name, "trajectory"]) => {
+            session_trajectory(state, name)
+        }
         ("POST", ["sessions", name, "step"]) => step_session(state, name, req),
         ("GET" | "POST", ["sessions", name, "snapshot"]) => {
             snapshot_session(state, name, req)
@@ -61,6 +64,8 @@ pub fn route(state: &Arc<ServerState>, req: &Request) -> Response {
         ("POST", ["artifacts", name, "query"]) => query_artifact(state, name, req),
         ("POST", ["artifacts", name, "task"]) => task_artifact(state, name, req),
         ("DELETE", ["artifacts", name]) => unload_artifact(state, name),
+        ("GET", ["debug", "trace"]) => debug_trace_get(req),
+        ("POST", ["debug", "trace"]) => debug_trace_post(req),
         ("POST", ["shutdown"]) => {
             state.request_stop();
             Response::json(200, Json::obj(vec![("stopping", Json::Bool(true))]))
@@ -81,8 +86,8 @@ pub fn route(state: &Arc<ServerState>, req: &Request) -> Response {
 /// paths collapse to `other`, so the label set (and with it the
 /// Prometheus series count) stays bounded no matter what clients send.
 pub fn endpoint_label(req: &Request) -> String {
-    const SESSION_VERBS: [&str; 6] =
-        ["step", "snapshot", "query", "task", "save", "finish"];
+    const SESSION_VERBS: [&str; 7] =
+        ["step", "snapshot", "query", "task", "save", "finish", "trajectory"];
     const ARTIFACT_VERBS: [&str; 2] = ["query", "task"];
     let segs = req.segments();
     let path: String = match segs.as_slice() {
@@ -99,6 +104,7 @@ pub fn endpoint_label(req: &Request) -> String {
         ["artifacts", _, v] if ARTIFACT_VERBS.contains(v) => {
             format!("/artifacts/{{name}}/{v}")
         }
+        ["debug", "trace"] => "/debug/trace".into(),
         ["shutdown"] => "/shutdown".into(),
         _ => "other".into(),
     };
@@ -148,6 +154,7 @@ fn stats_json(name: &str, st: &SessionStats) -> Json {
         ("busy", Json::Bool(st.busy)),
         ("steps_done", Json::Num(st.steps_done as f64)),
         ("error_estimate", protocol::opt_num(st.error_estimate)),
+        ("best_score", protocol::opt_num(st.best_score)),
         ("selection_secs", Json::Num(st.selection_secs)),
         ("step_latency", st.step_latency.to_json()),
     ];
@@ -161,6 +168,77 @@ fn stats_json(name: &str, st: &SessionStats) -> Json {
         fields.push(("workers", w.clone()));
     }
     Json::obj(fields)
+}
+
+/// Upper bound on the ring capacity `POST /debug/trace` will accept —
+/// one OwnedEvent is a few hundred bytes, so 2^20 events caps the live
+/// recorder's memory at a few hundred MB even against a hostile client.
+const MAX_TRACE_CAPACITY: usize = 1 << 20;
+
+/// `POST /debug/trace {"enable": bool, "capacity": n}` — toggle the
+/// process-wide trace recorder at runtime. Enabling (re)sizes and clears
+/// the ring; disabling stops recording but leaves buffered events
+/// drainable by a final GET.
+fn debug_trace_post(req: &Request) -> Response {
+    use crate::obs::trace;
+    let body = match protocol::parse_body(&req.body_str()) {
+        Ok(b) => b,
+        Err(e) => return error(400, e),
+    };
+    let enable = body.get("enable").and_then(Json::as_bool).unwrap_or(true);
+    let capacity = body
+        .get("capacity")
+        .and_then(Json::as_usize)
+        .unwrap_or(trace::DEFAULT_CAPACITY)
+        .clamp(1, MAX_TRACE_CAPACITY);
+    if enable {
+        trace::enable_with_capacity(capacity);
+    } else {
+        trace::disable();
+    }
+    Response::json(
+        200,
+        Json::obj(vec![
+            ("enabled", Json::Bool(trace::enabled())),
+            ("capacity", Json::Num(capacity as f64)),
+        ]),
+    )
+}
+
+/// `GET /debug/trace` — drain the recorder's buffered spans and serve
+/// them as a Chrome `trace_event` JSON document (or per-line JSON with
+/// `?format=jsonl`). Draining is destructive: each event is served
+/// exactly once, so a scraper can poll without re-downloading history.
+fn debug_trace_get(req: &Request) -> Response {
+    use crate::obs::trace;
+    let track = trace::drain().into_track(1, "server");
+    if req.query.get("format").map(String::as_str) == Some("jsonl") {
+        Response::text(200, "application/jsonl", trace::merged_jsonl(&[track]))
+    } else {
+        Response::json(200, trace::merged_chrome_json(&[track]))
+    }
+}
+
+/// `GET /sessions/{name}/trajectory` — the session's convergence
+/// trajectory: one point per adaptive selection (bounded ring of the
+/// most recent [`registry::TRAJECTORY_CAP`]), oldest first.
+fn session_trajectory(state: &Arc<ServerState>, name: &str) -> Response {
+    let h = match state.registry.get(name) {
+        None => return error(404, format!("no session '{name}'")),
+        Some(h) => h,
+    };
+    let t = lock(&h.shared.trajectory);
+    let points: Vec<Json> = t.points.iter().map(|p| p.to_json()).collect();
+    Response::json(
+        200,
+        Json::obj(vec![
+            ("name", Json::Str(h.name.clone())),
+            ("count", Json::Num(points.len() as f64)),
+            ("dropped", Json::Num(t.dropped as f64)),
+            ("capacity", Json::Num(registry::TRAJECTORY_CAP as f64)),
+            ("points", Json::Arr(points)),
+        ]),
+    )
 }
 
 fn create_session(state: &Arc<ServerState>, req: &Request) -> Response {
@@ -963,11 +1041,33 @@ fn predict_json(state: &Arc<ServerState>) -> Json {
 }
 
 fn metrics_report(state: &Arc<ServerState>) -> Response {
-    let sessions: Vec<Json> = state
-        .registry
-        .list()
-        .into_iter()
-        .map(|(name, shared)| stats_json(&name, &lock(&shared.stats).clone()))
+    let listed = state.registry.list();
+    let sessions: Vec<Json> = listed
+        .iter()
+        .map(|(name, shared)| stats_json(name, &lock(&shared.stats).clone()))
+        .collect();
+    // convergence telemetry in summary form: full point lists stay on
+    // the per-session /trajectory endpoint, the report carries only the
+    // ring occupancy and the most recent point per session
+    let trajectory: std::collections::BTreeMap<String, Json> = listed
+        .iter()
+        .map(|(name, shared)| {
+            let t = lock(&shared.trajectory);
+            (
+                name.clone(),
+                Json::obj(vec![
+                    ("count", Json::Num(t.points.len() as f64)),
+                    ("dropped", Json::Num(t.dropped as f64)),
+                    (
+                        "last",
+                        t.points
+                            .back()
+                            .map(|p| p.to_json())
+                            .unwrap_or(Json::Null),
+                    ),
+                ]),
+            )
+        })
         .collect();
     let artifacts: Vec<Json> = state
         .artifacts
@@ -987,6 +1087,7 @@ fn metrics_report(state: &Arc<ServerState>) -> Response {
             ("server", state.metrics.to_json()),
             ("predict", predict_json(state)),
             ("sessions", Json::Arr(sessions)),
+            ("trajectory", Json::Obj(trajectory)),
             ("artifacts", Json::Arr(artifacts)),
         ]),
     )
@@ -1158,6 +1259,20 @@ fn metrics_prometheus(state: &Arc<ServerState>) -> Response {
                     "oasis_session_error_estimate",
                     &[("session", name)],
                     e,
+                );
+            }
+        }
+        page.family(
+            "oasis_session_best_score",
+            "Δ-score of the most recent adaptive selection, when scored.",
+            "gauge",
+        );
+        for (name, st) in &stats {
+            if let Some(s) = st.best_score.filter(|s| s.is_finite()) {
+                page.sample(
+                    "oasis_session_best_score",
+                    &[("session", name)],
+                    s,
                 );
             }
         }

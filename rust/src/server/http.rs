@@ -232,14 +232,33 @@ impl ClientConn {
         path: &str,
         body: &str,
     ) -> std::io::Result<(u16, String)> {
+        let (status, _, body) =
+            self.request_with_headers(method, path, &[], body)?;
+        Ok((status, body))
+    }
+
+    /// One exchange with explicit extra request headers, returning the
+    /// response headers too (keys lowercased) — what the request-
+    /// correlation tests use to assert on `X-Request-Id`.
+    pub fn request_with_headers(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &str,
+    ) -> std::io::Result<(u16, BTreeMap<String, String>, String)> {
+        let mut extra = String::new();
+        for (k, v) in headers {
+            extra.push_str(&format!("{k}: {v}\r\n"));
+        }
         write!(
             self.stream,
-            "{method} {path} HTTP/1.1\r\nHost: client\r\n\
+            "{method} {path} HTTP/1.1\r\nHost: client\r\n{extra}\
              Content-Length: {}\r\n\r\n{body}",
             body.len()
         )?;
         self.stream.flush()?;
-        read_response(&mut self.reader)
+        read_response_full(&mut self.reader)
     }
 }
 
@@ -247,6 +266,15 @@ impl ClientConn {
 /// connection. Only `Content-Length` framing is understood — which is
 /// all the server emits.
 fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<(u16, String)> {
+    let (status, _, body) = read_response_full(reader)?;
+    Ok((status, body))
+}
+
+/// [`read_response`] that also returns the response headers (keys
+/// lowercased).
+fn read_response_full<R: BufRead>(
+    reader: &mut R,
+) -> std::io::Result<(u16, BTreeMap<String, String>, String)> {
     let line = read_line_capped(reader)?
         .ok_or_else(|| bad("peer closed before the status line"))?;
     let status: u16 = line
@@ -254,6 +282,7 @@ fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<(u16, String)> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| bad("no status in response line"))?;
+    let mut headers = BTreeMap::new();
     let mut len = 0usize;
     loop {
         let h = read_line_capped(reader)?
@@ -262,12 +291,14 @@ fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<(u16, String)> {
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                len = v
-                    .trim()
+            let key = k.trim().to_ascii_lowercase();
+            let val = v.trim().to_string();
+            if key == "content-length" {
+                len = val
                     .parse()
                     .map_err(|_| bad("bad response content-length"))?;
             }
+            headers.insert(key, val);
         }
     }
     if len > MAX_BODY_BYTES {
@@ -275,7 +306,7 @@ fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<(u16, String)> {
     }
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body)?;
-    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+    Ok((status, headers, String::from_utf8_lossy(&body).into_owned()))
 }
 
 /// An HTTP response carrying a JSON (or, for the Prometheus exposition,
@@ -287,6 +318,8 @@ pub struct Response {
     /// `Content-Type` header value (JSON unless built via
     /// [`Response::text`]).
     pub content_type: &'static str,
+    /// Additional response headers (`X-Request-Id` correlation).
+    pub extra_headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
@@ -295,13 +328,20 @@ impl Response {
             status,
             body: body.to_string(),
             content_type: "application/json",
+            extra_headers: Vec::new(),
         }
     }
 
     /// A non-JSON body with an explicit content type (the Prometheus
     /// text exposition).
     pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
-        Response { status, body, content_type }
+        Response { status, body, content_type, extra_headers: Vec::new() }
+    }
+
+    /// Attach one extra response header.
+    pub fn with_header(mut self, name: &'static str, value: String) -> Response {
+        self.extra_headers.push((name, value));
+        self
     }
 
     pub fn reason(&self) -> &'static str {
@@ -321,10 +361,14 @@ impl Response {
     }
 
     pub fn write_to<W: Write>(&self, w: &mut W, close: bool) -> std::io::Result<()> {
+        let mut extra = String::new();
+        for (k, v) in &self.extra_headers {
+            extra.push_str(&format!("{k}: {v}\r\n"));
+        }
         write!(
             w,
             "HTTP/1.1 {} {}\r\nContent-Type: {}\r\n\
-             Content-Length: {}\r\nConnection: {}\r\n\r\n{}",
+             Content-Length: {}\r\nConnection: {}\r\n{extra}\r\n{}",
             self.status,
             self.reason(),
             self.content_type,
@@ -457,6 +501,25 @@ mod tests {
         assert_eq!(status, 429);
         assert!(body.is_empty());
         assert!(read_response(&mut reader).is_err()); // EOF between frames
+    }
+
+    #[test]
+    fn extra_headers_are_emitted_before_the_body() {
+        let mut out = Vec::new();
+        Response::json(200, crate::util::json::Json::Bool(true))
+            .with_header("X-Request-Id", "r-7".to_string())
+            .write_to(&mut out, false)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("X-Request-Id: r-7\r\n"), "{text}");
+        let head = text.split("\r\n\r\n").next().unwrap();
+        assert!(head.contains("X-Request-Id"), "header in head: {text}");
+        // response headers round-trip through the client parser
+        let mut reader = BufReader::new(text.as_bytes());
+        let (status, headers, body) = read_response_full(&mut reader).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(headers.get("x-request-id").map(String::as_str), Some("r-7"));
+        assert_eq!(body, "true");
     }
 
     #[test]

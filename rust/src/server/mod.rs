@@ -258,12 +258,15 @@
 //! | endpoint | effect |
 //! |---|---|
 //! | `GET /sessions` | `{"sessions": [status…]}` (name-sorted) |
-//! | `GET /sessions/{name}` | status: `k`, `busy`, `steps_done`, `error_estimate`, `step_latency`, `stop`?, `failed`? |
+//! | `GET /sessions/{name}` | status: `k`, `busy`, `steps_done`, `error_estimate`, `best_score`, `step_latency`, `stop`?, `failed`? |
+//! | `GET /sessions/{name}/trajectory` | convergence telemetry: `{"name", "count", "dropped", "capacity", "points"}` — one `{step, k, error_estimate, best_score, step_us}` per adaptive selection, oldest first, bounded ring |
 //! | `POST /sessions/{name}/finish` (or `DELETE /sessions/{name}`) | final factors + eviction; options: `factors` |
 //! | `GET /artifacts` | `{"artifacts": [status…]}` (name-sorted) |
 //! | `GET /artifacts/{name}` | one artifact's status (incl. `queries` served) |
 //! | `DELETE /artifacts/{name}` | unload a hosted artifact |
-//! | `GET /metrics` | `{"uptime_secs", "start_time_unix_secs", "version", "server": counters, "predict": histograms, "sessions": […], "artifacts": […]}` |
+//! | `GET /metrics` | `{"uptime_secs", "start_time_unix_secs", "version", "server": counters, "predict": histograms, "sessions": […], "trajectory": {name: summary}, "artifacts": […]}` |
+//! | `POST /debug/trace` | `{"enable": bool, "capacity": n}` — toggle (and size) the live span recorder at runtime |
+//! | `GET /debug/trace` | drain buffered spans as Chrome `trace_event` JSON (`?format=jsonl` for line-delimited); destructive read |
 //! | `GET /healthz` | `{"ok": true, "uptime_secs", "start_time_unix_secs", "version"}` |
 //! | `POST /shutdown` | stop accepting, drain in-flight requests, tear down all sessions |
 //!
@@ -293,6 +296,34 @@
 //!
 //! ## Observability
 //!
+//! Three pillars, one per subsystem of [`crate::obs`]:
+//!
+//! 1. **Structured logging** ([`crate::obs::log`]). Every dispatched
+//!    request emits one leveled log line (text or JSON lines under
+//!    `oasis serve --log-json`; threshold via `--log-level`) carrying
+//!    `request_id`, `seq`, `method`, `path`, `status`, and `ms`. The
+//!    request id is the client's `X-Request-Id` header when it supplies
+//!    a plausible one (non-empty, ≤128 printable-ASCII chars), otherwise
+//!    generated, and is **echoed back** as an `X-Request-Id` response
+//!    header on every response (429s included) — so a client, the
+//!    server log, and the trace can be joined on one key.
+//! 2. **Latency histograms + Prometheus** (details below): request
+//!    durations, step latencies, and — new — per-session convergence
+//!    gauges (`oasis_session_error_estimate`,
+//!    `oasis_session_best_score`) plus a `"trajectory"` summary section
+//!    in the JSON report; the full per-step series lives at
+//!    `GET /sessions/{name}/trajectory`.
+//! 3. **Live tracing** ([`crate::obs::trace`]). `POST /debug/trace`
+//!    turns the process-wide span recorder on (or off) at runtime with a
+//!    bounded ring capacity; `GET /debug/trace` drains whatever buffered
+//!    since the last drain as a Chrome `trace_event` document —
+//!    `about:tracing` / Perfetto-loadable — or JSONL. Each routed
+//!    request contributes an `http_request` span and a `request_id`
+//!    counter event whose value is the log line's `seq`, which is how a
+//!    span is tied back to a specific request id. No filesystem paths
+//!    are involved, so the endpoint is usable on a locked-down
+//!    `--fs-root`.
+//!
 //! Every latency the server reports is a log₂-bucketed histogram
 //! ([`crate::obs::hist`]) carrying `count`/`mean_ms`/`last_ms`/`max_ms`
 //! **plus** `p50_ms`/`p90_ms`/`p99_ms` quantile estimates: the
@@ -319,7 +350,8 @@
 //! histogram series (`_sum`/`_count` included), per-session step
 //! histograms (`oasis_session_steps_total`,
 //! `oasis_session_step_duration_seconds`, `oasis_session_columns`,
-//! `oasis_session_error_estimate`), and — for live distributed
+//! `oasis_session_error_estimate`, `oasis_session_best_score`), and —
+//! for live distributed
 //! (oasis-p) sessions — per-worker gauges scraped mid-run
 //! (`oasis_worker_heartbeat_age_seconds`, `oasis_worker_reshards_total`,
 //! `oasis_worker_wire_bytes_total`, …) labeled
@@ -642,6 +674,43 @@ impl Server {
     }
 }
 
+/// Monotonic request sequence number — the numeric correlation key a
+/// request's structured log line shares with its `request_id` trace
+/// event (span names are static strings, so the string id itself cannot
+/// ride in the trace).
+static REQUEST_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Per-process time base mixed into generated `X-Request-Id` values so
+/// ids from successive server processes don't collide.
+static REQUEST_ID_BASE: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+
+fn request_id_base() -> u64 {
+    *REQUEST_ID_BASE.get_or_init(|| {
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0)
+    })
+}
+
+/// The id attached to (and echoed from) one request: the client's
+/// `X-Request-Id` when it supplies a plausible one — non-empty, at most
+/// 128 chars, printable ASCII (no header-splitting or log-forging
+/// bytes) — otherwise a generated `{base:x}-{seq:x}`, unique for the
+/// life of the process.
+fn request_id(req: &Request, seq: u64) -> String {
+    match req.headers.get("x-request-id") {
+        Some(v)
+            if !v.is_empty()
+                && v.len() <= 128
+                && v.bytes().all(|b| b.is_ascii_graphic()) =>
+        {
+            v.clone()
+        }
+        _ => format!("{:x}-{seq:x}", request_id_base()),
+    }
+}
+
 /// Shed one connection the accept queue cannot hold: a one-shot 503 and
 /// close, so the peer sees an explicit overload signal instead of a
 /// connection that hangs until some worker frees up.
@@ -681,8 +750,20 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
                 let exempt =
                     matches!(req.path.as_str(), "/healthz" | "/shutdown");
                 let rate_limited = !exempt && !state.admit(peer_ip);
+                let seq = REQUEST_SEQ.fetch_add(1, Ordering::Relaxed) + 1;
+                let rid = request_id(&req, seq);
                 let resp = if rate_limited {
                     ServerMetrics::inc(&state.metrics.rate_limited);
+                    crate::obs::log::warn(
+                        "server",
+                        "rate limited",
+                        &[
+                            ("request_id", rid.clone()),
+                            ("seq", seq.to_string()),
+                            ("method", req.method.clone()),
+                            ("path", req.path.clone()),
+                        ],
+                    );
                     Response::json(
                         429,
                         crate::util::json::Json::obj(vec![(
@@ -695,13 +776,39 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
                 } else {
                     let t0 = Instant::now();
                     state.in_flight.fetch_add(1, Ordering::SeqCst);
-                    let resp = handlers::route(&state, &req);
+                    let resp = {
+                        // the request-duration span plus a counter event
+                        // carrying this request's seq — the join key back
+                        // to the log line's request_id
+                        let _span =
+                            crate::obs::trace::span("http_request", "server");
+                        crate::obs::trace::event(
+                            "request_id",
+                            "server",
+                            seq as f64,
+                        );
+                        handlers::route(&state, &req)
+                    };
+                    let elapsed = t0.elapsed().as_secs_f64();
                     state.metrics.observe_request(
                         &handlers::endpoint_label(&req),
-                        t0.elapsed().as_secs_f64(),
+                        elapsed,
+                    );
+                    crate::obs::log::info(
+                        "server",
+                        "request",
+                        &[
+                            ("request_id", rid.clone()),
+                            ("seq", seq.to_string()),
+                            ("method", req.method.clone()),
+                            ("path", req.path.clone()),
+                            ("status", resp.status.to_string()),
+                            ("ms", format!("{:.3}", elapsed * 1e3)),
+                        ],
                     );
                     resp
                 };
+                let resp = resp.with_header("X-Request-Id", rid);
                 // check the stop flag *after* routing so /shutdown closes
                 // its own connection
                 let close = req.wants_close() || state.stopping();

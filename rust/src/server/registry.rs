@@ -42,6 +42,73 @@ pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
+/// Most recent trajectory points a session keeps (per selection step);
+/// older points are dropped oldest-first and counted in
+/// [`Trajectory::dropped`].
+pub const TRAJECTORY_CAP: usize = 2048;
+
+/// One sampled point of a session's convergence trajectory — recorded
+/// by the actor thread after every successful selection step, off the
+/// same snapshot path the stats mirror uses.
+#[derive(Clone, Debug)]
+pub struct TrajectoryPoint {
+    /// Lifetime step number (1-based; equals `steps_done` at record
+    /// time).
+    pub step: u64,
+    /// Columns selected after this step (including seed columns).
+    pub k: usize,
+    /// The session's error estimate after this step, if the method has
+    /// an estimator.
+    pub error_estimate: Option<f64>,
+    /// The selection score |Δ| of the column this step picked (NaN for
+    /// randomized draws without a score).
+    pub best_score: f64,
+    /// Wall-clock microseconds the step took on the actor.
+    pub step_us: u64,
+}
+
+impl TrajectoryPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::Num(self.step as f64)),
+            ("k", Json::Num(self.k as f64)),
+            (
+                "error_estimate",
+                super::protocol::opt_num(self.error_estimate),
+            ),
+            (
+                "best_score",
+                if self.best_score.is_finite() {
+                    Json::Num(self.best_score)
+                } else {
+                    Json::Null
+                },
+            ),
+            ("step_us", Json::Num(self.step_us as f64)),
+        ])
+    }
+}
+
+/// Bounded per-session trajectory ring (see
+/// [`SessionShared::trajectory`]).
+#[derive(Debug, Default)]
+pub struct Trajectory {
+    pub points: std::collections::VecDeque<TrajectoryPoint>,
+    /// Points the ring discarded oldest-first once past
+    /// [`TRAJECTORY_CAP`].
+    pub dropped: u64,
+}
+
+impl Trajectory {
+    pub fn push(&mut self, p: TrajectoryPoint) {
+        if self.points.len() == TRAJECTORY_CAP {
+            self.points.pop_front();
+            self.dropped += 1;
+        }
+        self.points.push_back(p);
+    }
+}
+
 /// Externally visible state of one hosted session, mirrored by its actor
 /// thread after every step batch (and per step for latencies).
 #[derive(Clone, Debug, Default)]
@@ -67,6 +134,10 @@ pub struct SessionStats {
     /// Per-step selection latencies (log₂ buckets; `/metrics` renders
     /// the p50/p90/p99 estimates alongside mean/last/max).
     pub step_latency: Hist,
+    /// Selection score |Δ| of the most recent step (the
+    /// `oasis_session_best_score` Prometheus gauge; `None` before the
+    /// first adaptive step or for unscored randomized draws).
+    pub best_score: Option<f64>,
     /// Message of the first step error, if one occurred.
     pub failed: Option<String>,
     /// Per-worker coordinator counters (distributed sessions only; see
@@ -99,6 +170,11 @@ pub struct SessionShared {
     /// (the common serve pattern: fit once, predict many) skip the
     /// O(nk²) refit. Replaced whenever the key changes.
     pub task_cache: Mutex<Option<CachedTask>>,
+    /// Convergence-telemetry ring: one [`TrajectoryPoint`] per
+    /// selection step, bounded at [`TRAJECTORY_CAP`] (oldest dropped).
+    /// Served by `GET /sessions/{name}/trajectory` and summarized in
+    /// the `"trajectory"` section of JSON `/metrics`.
+    pub trajectory: Mutex<Trajectory>,
 }
 
 /// One cached fitted task model (see
@@ -640,13 +716,28 @@ fn step_batch(
         }
         let t0 = Instant::now();
         match session.step()? {
-            StepOutcome::Selected { .. } => {
+            StepOutcome::Selected { score, .. } => {
                 stepped += 1;
                 let secs = t0.elapsed().as_secs_f64();
-                let mut st = lock(&shared.stats);
-                st.k = session.k();
-                st.steps_done += 1;
-                st.step_latency.record(secs);
+                let err = session.error_estimate();
+                let step_no;
+                {
+                    let mut st = lock(&shared.stats);
+                    st.k = session.k();
+                    st.steps_done += 1;
+                    st.step_latency.record(secs);
+                    if score.is_finite() {
+                        st.best_score = Some(score);
+                    }
+                    step_no = st.steps_done;
+                }
+                lock(&shared.trajectory).push(TrajectoryPoint {
+                    step: step_no,
+                    k: session.k(),
+                    error_estimate: err,
+                    best_score: score,
+                    step_us: (secs * 1e6) as u64,
+                });
             }
             StepOutcome::Exhausted(r) => {
                 stop = Some(r);

@@ -247,7 +247,11 @@ fn tcp_workers_match_in_process_run() {
         .map(|_| {
             let addr = addr.clone();
             std::thread::spawn(move || {
-                oasis::coordinator::run_worker(&addr, None, None).unwrap()
+                oasis::coordinator::run_worker(
+                    &addr,
+                    oasis::coordinator::WorkerRunOpts::default(),
+                )
+                .unwrap()
             })
         })
         .collect();

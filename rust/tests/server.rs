@@ -1201,6 +1201,178 @@ fn shutdown_drains_in_flight_requests() {
     join.join().expect("server thread exits after the drain");
 }
 
+/// Request correlation: a client-supplied `X-Request-Id` is echoed on
+/// the response and lands in the structured request log, and ids the
+/// server generates are unique across keep-alive requests on one
+/// connection.
+#[test]
+fn request_ids_echo_and_stay_unique_across_keep_alive() {
+    let (addr, join) = start_server();
+    let mut conn = ClientConn::connect(addr).expect("connect");
+
+    // client-supplied id: echoed verbatim, and correlated into the
+    // structured request log line
+    oasis::obs::log::capture_start();
+    let (status, headers, _body) = conn
+        .request_with_headers(
+            "GET",
+            "/healthz",
+            &[("X-Request-Id", "test-rid-42")],
+            "",
+        )
+        .expect("exchange");
+    let captured = oasis::obs::log::capture_take();
+    assert_eq!(status, 200);
+    assert_eq!(
+        headers.get("x-request-id").map(String::as_str),
+        Some("test-rid-42"),
+        "{headers:?}"
+    );
+    assert!(
+        captured
+            .iter()
+            .any(|l| l.contains("test-rid-42") && l.contains("/healthz")),
+        "request id missing from structured log: {captured:?}"
+    );
+
+    // no client id: the server generates one per request, unique across
+    // the whole keep-alive connection
+    let mut ids = std::collections::BTreeSet::new();
+    for _ in 0..3 {
+        let (status, headers, _body) = conn
+            .request_with_headers("GET", "/healthz", &[], "")
+            .expect("exchange");
+        assert_eq!(status, 200);
+        let rid = headers.get("x-request-id").expect("generated id").clone();
+        assert!(!rid.is_empty());
+        ids.insert(rid);
+    }
+    assert_eq!(ids.len(), 3, "generated ids must be unique: {ids:?}");
+
+    // an unprintable client id is replaced, not echoed
+    let (status, headers, _body) = conn
+        .request_with_headers(
+            "GET",
+            "/healthz",
+            &[("X-Request-Id", "bad id with spaces")],
+            "",
+        )
+        .expect("exchange");
+    assert_eq!(status, 200);
+    assert_ne!(
+        headers.get("x-request-id").map(String::as_str),
+        Some("bad id with spaces"),
+        "non-graphic client ids must not be echoed"
+    );
+
+    stop_server(addr, join);
+}
+
+/// Convergence telemetry and live tracing over the socket: the per-step
+/// trajectory ring, its `/metrics` summary and Prometheus gauges, and
+/// the `/debug/trace` enable → drain round trip.
+#[test]
+fn trajectory_and_debug_trace_over_socket() {
+    let (addr, join) = start_server();
+    let create = r#"{"name":"tj",
+        "dataset":{"generator":"two-moons","n":200,"seed":6},
+        "method":"oasis","max_cols":30,"init_cols":4,"seed":9}"#;
+    let (status, j) = request(addr, "POST", "/sessions", create);
+    assert_eq!(status, 200, "{j}");
+    let (status, j) = request(addr, "POST", "/sessions/tj/step", r#"{"steps":10}"#);
+    assert_eq!(status, 200, "{j}");
+    let batch_err = j.get("error_estimate").and_then(Json::as_f64);
+
+    // the trajectory replays the batch step by step: k grows by one per
+    // point and the error estimate decreases monotonically in k (the
+    // Schur residual-trace ratio shrinks as columns are adopted)
+    let (status, tj) = request(addr, "GET", "/sessions/tj/trajectory", "");
+    assert_eq!(status, 200, "{tj}");
+    assert_eq!(usize_field(&tj, "count"), 10, "{tj}");
+    let points = tj.get("points").and_then(Json::as_arr).expect("points");
+    assert_eq!(points.len(), 10);
+    let mut prev_k = 4;
+    let mut prev_err = f64::INFINITY;
+    for p in points {
+        let k = usize_field(p, "k");
+        assert_eq!(k, prev_k + 1, "k must grow by one per point: {tj}");
+        prev_k = k;
+        let err = p
+            .get("error_estimate")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("missing error_estimate in {p}"));
+        assert!(
+            err <= prev_err * (1.0 + 1e-9),
+            "error estimate rose in k: {err} after {prev_err} ({tj})"
+        );
+        prev_err = err;
+    }
+    // the final point agrees with the step batch's own summary
+    assert_eq!(
+        points.last().and_then(|p| p.get("error_estimate")).and_then(Json::as_f64),
+        batch_err,
+        "{tj}"
+    );
+
+    // session status carries the latest score; /metrics summarizes the ring
+    let (_, s) = request(addr, "GET", "/sessions/tj", "");
+    assert!(s.get("best_score").and_then(Json::as_f64).is_some(), "{s}");
+    let (_, m) = request(addr, "GET", "/metrics", "");
+    let tsec = m.get("trajectory").expect("trajectory section");
+    let ttj = tsec.get("tj").expect("session tj summary");
+    assert_eq!(usize_field(ttj, "count"), 10, "{m}");
+    assert!(ttj.get("last").and_then(|l| l.get("k")).is_some(), "{m}");
+
+    // the new session gauges render in the Prometheus exposition
+    let (status, page) =
+        client_request(addr, "GET", "/metrics?format=prometheus", "")
+            .expect("prometheus scrape");
+    assert_eq!(status, 200);
+    oasis::obs::prom::validate(&page)
+        .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{page}"));
+    assert!(
+        page.contains("# TYPE oasis_session_best_score gauge"),
+        "{page}"
+    );
+    assert!(page.contains(r#"oasis_session_best_score{session="tj"}"#), "{page}");
+    assert!(
+        page.contains(r#"oasis_session_error_estimate{session="tj"}"#),
+        "{page}"
+    );
+
+    // live tracing: enable over the wire, generate traffic, drain as
+    // Chrome trace JSON with the request spans on the server track
+    let (status, j) = request(
+        addr,
+        "POST",
+        "/debug/trace",
+        r#"{"enable":true,"capacity":4096}"#,
+    );
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(j.get("enabled").and_then(Json::as_bool), Some(true), "{j}");
+    let (status, j) = request(addr, "POST", "/sessions/tj/step", r#"{"steps":3}"#);
+    assert_eq!(status, 200, "{j}");
+    let (status, tr) = request(addr, "GET", "/debug/trace", "");
+    assert_eq!(status, 200, "{tr}");
+    let events = tr
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents");
+    assert!(
+        events.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("http_request")
+                && e.get("ph").and_then(Json::as_str) == Some("X")
+        }),
+        "no http_request span in drained trace: {tr}"
+    );
+    // …and the drain emptied the ring: disable and confirm
+    let (status, j) = request(addr, "POST", "/debug/trace", r#"{"enable":false}"#);
+    assert_eq!(status, 200, "{j}");
+    assert_eq!(j.get("enabled").and_then(Json::as_bool), Some(false), "{j}");
+
+    stop_server(addr, join);
+}
+
 /// GET with an explicit Accept header over a raw TcpStream (the shared
 /// `client_request` helper doesn't set one).
 fn client_request_accept(
